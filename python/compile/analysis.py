@@ -1,0 +1,135 @@
+"""L2 performance analysis: inspect the lowered HLO of every artifact.
+
+Build-time profiling for the optimization pass (DESIGN.md §7): reports
+per-artifact op histograms, dot/fusion counts, parameter + output bytes,
+analytic FLOPs, and the L1 kernel's TPU estimates (VMEM footprint / MXU
+utilization per GEMM).  Results land in ``artifacts/analysis.json`` and
+a human-readable table on stdout.
+
+Usage (from python/):  python -m compile.analysis [--out ../artifacts/analysis.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+from collections import Counter
+from typing import Dict, List
+
+from .configs import CONFIGS, ArtifactConfig
+from .aot import lower_config
+from .kernels.aggregate import mxu_utilization, pick_block, vmem_footprint_bytes
+
+#: ops that indicate unfused elementwise work (too many = missed fusion)
+ELEMENTWISE = {"add", "multiply", "subtract", "divide", "maximum", "exponential"}
+
+
+def op_histogram(hlo_text: str) -> Counter:
+    """Count HLO instructions by opcode (ENTRY + nested computations)."""
+    ops: Counter = Counter()
+    # `name = <type> opcode(...)` — the type may be a tuple (parens), so
+    # find the opcode as the identifier immediately before the first '('
+    # that follows the '=' and the type expression
+    pat = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*.*?([a-z][a-z\-]*)\(")
+    for line in hlo_text.splitlines():
+        m = pat.match(line)
+        if m:
+            ops[m.group(1)] += 1
+    return ops
+
+
+def analytic_flops(cfg: ArtifactConfig, kind: str) -> int:
+    """Dense FLOPs of one step (fwd; train ~3x for fwd+bwd)."""
+    s, b = cfg.s_pad, cfg.b_pad
+    fwd = 0
+    for d_in, d_out in zip(cfg.dims(), cfg.dims()[1:]):
+        fwd += 2 * ((s + b) * d_in * d_out + s * (s + b) * d_out)
+    return 3 * fwd if kind == "train" else fwd
+
+
+def gemm_estimates(cfg: ArtifactConfig) -> List[Dict]:
+    """Per-GEMM TPU structure estimates for the L1 kernel."""
+    out = []
+    sb = cfg.s_pad + cfg.b_pad
+    for name, (m, k, n) in {
+        "transform": (sb, cfg.d_in, cfg.d_h),
+        "aggregate": (cfg.s_pad, sb, cfg.d_h),
+        "classify": (cfg.s_pad, cfg.d_h, cfg.n_class),
+    }.items():
+        out.append(
+            {
+                "gemm": name,
+                "m": m,
+                "k": k,
+                "n": n,
+                "blocks": [pick_block(m), pick_block(n), pick_block(k)],
+                "vmem_bytes": vmem_footprint_bytes(m, n, k),
+                "mxu_utilization": round(mxu_utilization(m, n, k), 6),
+            }
+        )
+    return out
+
+
+def analyze(cfg: ArtifactConfig, kind: str) -> Dict:
+    text = lower_config(cfg, kind)
+    ops = op_histogram(text)
+    total_ops = sum(ops.values())
+    input_bytes = sum(
+        4 * _prod(s) for _, s, _ in cfg.input_specs(kind)
+    )
+    output_bytes = sum(4 * _prod(s) for _, s, _ in cfg.output_specs(kind))
+    return {
+        "name": cfg.name,
+        "kind": kind,
+        "hlo_bytes": len(text),
+        "total_ops": total_ops,
+        "dots": ops.get("dot", 0),
+        "fusions": ops.get("fusion", 0),
+        "while_loops": ops.get("while", 0),
+        "elementwise": sum(ops.get(o, 0) for o in ELEMENTWISE),
+        "top_ops": dict(ops.most_common(8)),
+        "input_bytes": input_bytes,
+        "output_bytes": output_bytes,
+        "analytic_flops": analytic_flops(cfg, kind),
+        "gemms": gemm_estimates(cfg),
+    }
+
+
+def _prod(shape) -> int:
+    r = 1
+    for d in shape:
+        r *= d
+    return max(r, 1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/analysis.json")
+    ap.add_argument("--only", default="", help="comma-separated config names")
+    args = ap.parse_args()
+    only = {n for n in args.only.split(",") if n}
+
+    results = []
+    print(f"{'artifact':>22} {'kind':5} {'ops':>6} {'dots':>5} {'while':>6} "
+          f"{'GFLOP':>7} {'min MXU':>8} {'max VMEM':>9}")
+    for cfg in CONFIGS:
+        if only and cfg.name not in only:
+            continue
+        for kind in ("train", "eval"):
+            r = analyze(cfg, kind)
+            results.append(r)
+            min_mxu = min(g["mxu_utilization"] for g in r["gemms"])
+            max_vmem = max(g["vmem_bytes"] for g in r["gemms"])
+            print(
+                f"{r['name']:>22} {kind:5} {r['total_ops']:>6} {r['dots']:>5} "
+                f"{r['while_loops']:>6} {r['analytic_flops'] / 1e9:>7.3f} "
+                f"{min_mxu:>8.2f} {max_vmem / 2**20:>8.2f}M"
+            )
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"\nwrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

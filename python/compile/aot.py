@@ -1,0 +1,97 @@
+"""AOT compilation driver: lower every artifact config to HLO **text**.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >=
+0.5 emits protos with 64-bit instruction ids which the Rust ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/gen_hlo.py and README of that reference).
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+Options:
+  --only NAME[,NAME...]   lower a subset of configs
+  --kinds train,eval      which step kinds to emit (default both)
+
+Emits ``<name>_{train,eval}.hlo.txt`` plus ``manifest.json`` describing
+every artifact's exact input/output ordering, shapes and dtypes — the
+ABI contract consumed by ``rust/src/runtime/manifest.rs``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .configs import CONFIGS, ArtifactConfig
+from .train_step import flat_args, make_eval_step, make_train_step
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_config(cfg: ArtifactConfig, kind: str) -> str:
+    step = make_train_step(cfg) if kind == "train" else make_eval_step(cfg)
+    lowered = jax.jit(step).lower(*flat_args(cfg, kind))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default="", help="comma-separated config names")
+    ap.add_argument("--kinds", default="train,eval")
+    ap.add_argument(
+        "--backend", default="", choices=["", "pallas", "xla"],
+        help="kernel backend for the emitted artifacts (default: pallas, "
+             "or DIGEST_KERNEL_BACKEND)",
+    )
+    # kept for Makefile compatibility; ignored in favour of --out-dir
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(args.out) or out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    if args.backend:
+        from .kernels.aggregate import set_backend
+
+        set_backend(args.backend)
+    only = {n for n in args.only.split(",") if n}
+    kinds = [k for k in args.kinds.split(",") if k]
+    configs = [c for c in CONFIGS if not only or c.name in only]
+
+    manifest = {"version": MANIFEST_VERSION, "artifacts": []}
+    for cfg in configs:
+        for kind in kinds:
+            t0 = time.time()
+            text = lower_config(cfg, kind)
+            fname = f"{cfg.name}_{kind}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(cfg.to_manifest(kind, fname))
+            print(
+                f"lowered {cfg.name:>16s} {kind:5s} -> {fname:32s} "
+                f"({len(text) / 1e6:.2f} MB, {time.time() - t0:.1f}s)"
+            )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""Artifact manifest: the named, shape-specialized AOT configurations.
+
+HLO executables have static shapes, so each artifact fixes
+
+    (model, L, S_pad, B_pad, d_in, d_h, n_class, act, normalize)
+
+and the Rust coordinator pads every subgraph batch to the artifact it
+selects (see ``rust/src/halo``).  Dataset-scale configs mirror the
+paper's four benchmarks at CI scale (DESIGN.md §2 documents the
+substitution); `karate` is the tiny sanity config used by unit tests
+and the quickstart example.
+
+The input/output *ordering* emitted into ``artifacts/manifest.json`` is
+the binding contract with ``rust/src/runtime`` — change it only in
+lockstep with the Rust side.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, asdict
+from typing import Dict, List, Tuple
+
+
+@dataclass(frozen=True)
+class ArtifactConfig:
+    name: str
+    model: str  # "gcn" | "gat"
+    layers: int
+    s_pad: int  # padded in-subgraph node count
+    b_pad: int  # padded halo (out-of-subgraph) node count
+    d_in: int
+    d_h: int
+    n_class: int
+    act: str = ""  # "" -> model default (relu for gcn, elu for gat)
+    normalize: bool = False  # row-L2 normalization (Alg. 1 line 11)
+
+    def activation(self) -> str:
+        return self.act or ("relu" if self.model == "gcn" else "elu")
+
+    def dims(self) -> List[int]:
+        return [self.d_in] + [self.d_h] * (self.layers - 1) + [self.n_class]
+
+    def param_keys(self) -> List[str]:
+        """Flattening order of per-layer params (contract with Rust)."""
+        return ["w", "b"] if self.model == "gcn" else ["w", "b", "a_src", "a_dst"]
+
+    def input_specs(self, kind: str = "train") -> List[Tuple[str, Tuple[int, ...], str]]:
+        """[(name, shape, dtype)] in positional order.
+
+        Eval steps omit y/mask: XLA dead-code-eliminates unused entry
+        parameters, so structurally-unused inputs must not be in the
+        signature at all (or the Rust side would over-supply buffers).
+        """
+        specs: List[Tuple[str, Tuple[int, ...], str]] = [
+            ("x", (self.s_pad + self.b_pad, self.d_in), "f32"),
+            ("p_in", (self.s_pad, self.s_pad), "f32"),
+            ("p_out", (self.s_pad, self.b_pad), "f32"),
+        ]
+        for l in range(self.layers - 1):
+            specs.append((f"h_stale_{l}", (self.b_pad, self.d_h), "f32"))
+        dims = self.dims()
+        for l in range(self.layers):
+            for key in self.param_keys():
+                if key == "w":
+                    shape: Tuple[int, ...] = (dims[l], dims[l + 1])
+                else:  # b, a_src, a_dst all have the layer output dim
+                    shape = (dims[l + 1],)
+                specs.append((f"l{l}_{key}", shape, "f32"))
+        if kind == "train":
+            specs.append(("y", (self.s_pad,), "i32"))
+            specs.append(("mask", (self.s_pad,), "f32"))
+        return specs
+
+    def output_specs(self, kind: str) -> List[Tuple[str, Tuple[int, ...], str]]:
+        """Train: loss, ncorrect, logits, fresh reps, grads. Eval: logits, reps."""
+        logits = ("logits", (self.s_pad, self.n_class), "f32")
+        reps = [
+            (f"rep_{l}", (self.s_pad, self.d_h), "f32")
+            for l in range(self.layers - 1)
+        ]
+        if kind == "eval":
+            return [logits] + reps
+        specs = [("loss", (), "f32"), ("ncorrect", (), "f32"), logits] + reps
+        dims = self.dims()
+        for l in range(self.layers):
+            for key in self.param_keys():
+                if key == "w":
+                    shape: Tuple[int, ...] = (dims[l], dims[l + 1])
+                else:
+                    shape = (dims[l + 1],)
+                specs.append((f"grad_l{l}_{key}", shape, "f32"))
+        return specs
+
+    def to_manifest(self, kind: str, filename: str) -> Dict:
+        d = asdict(self)
+        d["act"] = self.activation()
+        d["kind"] = kind
+        d["file"] = filename
+        d["inputs"] = [
+            {"name": n, "shape": list(s), "dtype": t}
+            for n, s, t in self.input_specs(kind)
+        ]
+        d["outputs"] = [
+            {"name": n, "shape": list(s), "dtype": t}
+            for n, s, t in self.output_specs(kind)
+        ]
+        return d
+
+
+def _pair(name: str, **kw) -> List[ArtifactConfig]:
+    """A gcn + gat config pair sharing shapes."""
+    return [
+        ArtifactConfig(name=f"{name}_gcn", model="gcn", **kw),
+        ArtifactConfig(name=f"{name}_gat", model="gat", **kw),
+    ]
+
+
+#: All configs lowered by `make artifacts`.  Dataset-scale shapes assume
+#: M=4 partitions of the CI-scale synthetic datasets (DESIGN.md §2);
+#: B_pad is sized from measured halo ratios (Fig. 9) with ~1.5x slack.
+CONFIGS: List[ArtifactConfig] = (
+    _pair("karate", layers=2, s_pad=32, b_pad=32, d_in=16, d_h=16, n_class=4)
+    + _pair("arxiv_s", layers=2, s_pad=512, b_pad=1024, d_in=128, d_h=64, n_class=40)
+    + _pair("flickr_s", layers=2, s_pad=256, b_pad=768, d_in=200, d_h=64, n_class=7)
+    + _pair("reddit_s", layers=2, s_pad=256, b_pad=768, d_in=300, d_h=64, n_class=41)
+    + _pair(
+        "products_s", layers=2, s_pad=1024, b_pad=1024, d_in=100, d_h=64, n_class=47
+    )
+    # depth ablation: 3-layer GCN (two stale tensors / two pushed reps)
+    + [
+        ArtifactConfig(
+            name="arxiv_s_l3_gcn",
+            model="gcn",
+            layers=3,
+            s_pad=512,
+            b_pad=1024,
+            d_in=128,
+            d_h=64,
+            n_class=40,
+        )
+    ]
+)
+
+CONFIG_BY_NAME: Dict[str, ArtifactConfig] = {c.name: c for c in CONFIGS}

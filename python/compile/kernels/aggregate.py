@@ -1,0 +1,301 @@
+"""Layer-1 Pallas kernel: blocked matmul with fused epilogue.
+
+This is the compute hot-spot of DIGEST's per-subgraph layer step
+(Eq. 4/5 of the paper):
+
+    Z = act( P_in @ (H_in @ W)  +  P_out @ (H_stale @ W)  + b )
+
+On the paper's GPU testbed this is a cuSPARSE SpMM + cuBLAS GEMM pair.
+For the TPU-style Pallas port we restructure it around the MXU/VMEM
+model instead of porting warp-level code (see DESIGN.md
+Hardware-Adaptation):
+
+  * the two propagations share the dense transform, so we factor the
+    layer as two blocked GEMMs over *concatenated* operands:
+
+        T = [H_in ; H_stale] @ W          # (S+B, d')  "transform"
+        Z = act([P_in | P_out] @ T + b)   # (S,   d')  "aggregate"
+
+  * each GEMM is a Pallas kernel with a 3-D grid (M-tiles, N-tiles,
+    K-tiles); the K dimension is innermost so the f32 output tile stays
+    resident in VMEM across the K loop (accumulate-in-place — the
+    canonical MXU pattern, no HBM round-trips for partial sums);
+
+  * the epilogue (bias + activation) is fused into the last K step of
+    the aggregate GEMM, so Z is written to HBM exactly once.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO (scan over grid with
+dynamic slices).  Real-TPU performance is *estimated* from the VMEM
+footprint and MXU-utilization model in ``vmem_footprint_bytes`` /
+``mxu_utilization`` below and reported in DESIGN.md / EXPERIMENTS.md
+per-config.
+
+Autodiff: ``pallas_call`` has no automatic transpose rule, so the public
+``pmatmul`` wraps the kernel in a ``jax.custom_vjp`` whose backward pass
+is itself two Pallas GEMMs (dX = G @ Y^T, dY = X^T @ G).  Elementwise
+epilogues used on the training path are left to XLA fusion (they are not
+MXU work); the fused-epilogue entry point ``matmul_bias_act`` is used on
+the forward-only (eval) path.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Kernel backend dispatch (§Perf). "pallas" (default) routes the GEMMs
+#: through the Pallas kernels — the TPU-targeted path, validated against
+#: the oracles; it runs under interpret=True on CPU at ~15x the cost of
+#: native XLA dots (measured in EXPERIMENTS.md §Perf).  "xla" emits the
+#: same math as plain jnp matmuls for fast CPU execution (what a real
+#: deployment would select per backend).  Set via DIGEST_KERNEL_BACKEND
+#: or `python -m compile.aot --backend xla`.
+BACKEND = os.environ.get("DIGEST_KERNEL_BACKEND", "pallas")
+
+
+def set_backend(name: str) -> None:
+    global BACKEND
+    if name not in ("pallas", "xla"):
+        raise ValueError(f"unknown kernel backend {name!r}")
+    BACKEND = name
+
+# ---------------------------------------------------------------------------
+# Block-size selection
+# ---------------------------------------------------------------------------
+
+#: Preferred tile edge.  128 matches the MXU systolic-array edge; on the
+#: interpret-mode CPU path it simply bounds the unrolled block.
+DEFAULT_BLOCK = 128
+
+
+def pick_block(dim: int, target: int = DEFAULT_BLOCK) -> int:
+    """Largest divisor of ``dim`` that is ``<= target``.
+
+    Artifact shapes are chosen to be multiples of friendly sizes, but
+    class counts (e.g. 40/41/47) are odd — a single block then covers
+    the whole dimension.
+    """
+    if dim <= target:
+        return dim
+    for cand in range(target, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim  # unreachable: 1 always divides
+
+
+ACTIVATIONS: dict[str, Callable[[jax.Array], jax.Array]] = {
+    "none": lambda z: z,
+    "relu": lambda z: jnp.maximum(z, 0.0),
+    "leaky_relu": lambda z: jnp.where(z > 0, z, 0.2 * z),
+    "elu": lambda z: jnp.where(z > 0, z, jnp.expm1(z)),
+}
+
+
+# ---------------------------------------------------------------------------
+# The kernel
+# ---------------------------------------------------------------------------
+
+
+# Each kernel computes one (bm, bn) output tile; grid = (M/bm, N/bn, K/bk)
+# with K innermost.  The output tile acts as the VMEM accumulator: zeroed
+# at k == 0, accumulated in-place, epilogue at k == nk - 1.
+
+
+def _kernel_nobias(x_ref, y_ref, o_ref, *, nk: int, act: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], y_ref[...], preferred_element_type=jnp.float32)
+
+    if act != "none":
+
+        @pl.when(k == nk - 1)
+        def _epilogue():
+            o_ref[...] = ACTIVATIONS[act](o_ref[...])
+
+
+def _kernel_bias(x_ref, y_ref, b_ref, o_ref, *, nk: int, act: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], y_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = ACTIVATIONS[act](o_ref[...] + b_ref[...])
+
+
+def _pallas_matmul(
+    x: jax.Array,
+    y: jax.Array,
+    bias: Optional[jax.Array] = None,
+    act: str = "none",
+    *,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    bk: Optional[int] = None,
+) -> jax.Array:
+    """``act(x @ y + bias)`` as a blocked Pallas GEMM.
+
+    x: (M, K) f32, y: (K, N) f32, bias: (N,) f32 or None.
+    """
+    if x.ndim != 2 or y.ndim != 2 or x.shape[1] != y.shape[0]:
+        raise ValueError(f"bad matmul shapes {x.shape} @ {y.shape}")
+    if act not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {act!r}")
+    m, k = x.shape
+    _, n = y.shape
+    bm = bm or pick_block(m)
+    bn = bn or pick_block(n)
+    bk = bk or pick_block(k)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"blocks ({bm},{bn},{bk}) must divide ({m},{n},{k})")
+    nm, nn, nk = m // bm, n // bn, k // bk
+    grid = (nm, nn, nk)
+
+    x_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+    y_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+
+    if bias is None:
+        kernel = functools.partial(_kernel_nobias, nk=nk, act=act)
+        in_specs = [x_spec, y_spec]
+        operands = (x, y)
+    else:
+        if bias.shape != (n,):
+            raise ValueError(f"bias shape {bias.shape} != ({n},)")
+        b2 = bias.reshape(1, n).astype(jnp.float32)
+        b_spec = pl.BlockSpec((1, bn), lambda i, j, kk: (0, j))
+        kernel = functools.partial(_kernel_bias, nk=nk, act=act)
+        in_specs = [x_spec, y_spec, b_spec]
+        operands = (x, y, b2)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(*operands)
+
+
+# ---------------------------------------------------------------------------
+# Autodiff-capable public matmul
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def _pmatmul_pallas(x: jax.Array, y: jax.Array) -> jax.Array:
+    """``x @ y`` with Pallas forward *and* backward GEMMs."""
+    return _pallas_matmul(x, y)
+
+
+def pmatmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Backend-dispatched GEMM: Pallas kernels or native XLA dot."""
+    if BACKEND == "xla":
+        return x @ y
+    return _pmatmul_pallas(x, y)
+
+
+def _pmatmul_fwd(x, y):
+    return _pallas_matmul(x, y), (x, y)
+
+
+def _pmatmul_bwd(res, g):
+    x, y = res
+    # dX = G @ Y^T  (M,K);  dY = X^T @ G  (K,N).  Both are Pallas GEMMs so
+    # the backward pass stays on the L1 kernel too.
+    return _pallas_matmul(g, y.T), _pallas_matmul(x.T, g)
+
+
+_pmatmul_pallas.defvjp(_pmatmul_fwd, _pmatmul_bwd)
+
+
+def matmul_bias_act(x, y, bias=None, act: str = "none"):
+    """Forward-only fused GEMM + bias + activation (eval path)."""
+    if BACKEND == "xla":
+        z = x @ y
+        if bias is not None:
+            z = z + bias[None, :]
+        return ACTIVATIONS[act](z)
+    return _pallas_matmul(x, y, bias=bias, act=act)
+
+
+# ---------------------------------------------------------------------------
+# The DIGEST aggregation layer (the paper's Eq. 4 in matrix form, Eq. 5)
+# ---------------------------------------------------------------------------
+
+
+def aggregate_layer(
+    p_in: jax.Array,
+    p_out: jax.Array,
+    h_in: jax.Array,
+    h_stale: jax.Array,
+    w: jax.Array,
+    bias: Optional[jax.Array] = None,
+    act: str = "relu",
+    *,
+    fused_epilogue: bool = False,
+) -> jax.Array:
+    """One DIGEST GCN layer: ``act(P_in·H_in·W + P_out·H̃_out·W + b)``.
+
+    ``fused_epilogue=True`` uses the in-kernel bias+act epilogue (eval /
+    forward-only path); ``False`` leaves elementwise work to XLA so the
+    layer is differentiable (training path).
+    """
+    hc = jnp.concatenate([h_in, h_stale], axis=0)  # (S+B, d)
+    pc = jnp.concatenate([p_in, p_out], axis=1)  # (S, S+B)
+    if fused_epilogue:
+        t = matmul_bias_act(hc, w)  # (S+B, d')
+        return matmul_bias_act(pc, t, bias=bias, act=act)
+    t = pmatmul(hc, w)
+    z = pmatmul(pc, t)
+    if bias is not None:
+        z = z + bias[None, :]
+    return ACTIVATIONS[act](z)
+
+
+# ---------------------------------------------------------------------------
+# TPU performance model (structure-level; interpret mode has no TPU clock)
+# ---------------------------------------------------------------------------
+
+
+def vmem_footprint_bytes(m: int, n: int, k: int, bm=None, bn=None, bk=None) -> int:
+    """Resident VMEM bytes for one grid step of the GEMM kernel."""
+    bm = bm or pick_block(m)
+    bn = bn or pick_block(n)
+    bk = bk or pick_block(k)
+    # x tile + y tile + output/accumulator tile (+ bias row, negligible)
+    return 4 * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization(m: int, n: int, k: int, bm=None, bn=None, bk=None) -> float:
+    """Fraction of MXU issue slots doing useful work for these shapes.
+
+    Models the 128x128 systolic array: a (bm, bn, bk) tile issues
+    ceil(bm/128)*ceil(bn/128)*ceil(bk/128) MXU passes of 128^3 MACs each;
+    utilization is useful MACs over issued MACs.
+    """
+    bm = bm or pick_block(m)
+    bn = bn or pick_block(n)
+    bk = bk or pick_block(k)
+
+    def up(v):
+        return -(-v // 128) * 128
+
+    useful = m * n * k
+    issued = (m // bm) * (n // bn) * (k // bk) * up(bm) * up(bn) * up(bk)
+    return useful / issued

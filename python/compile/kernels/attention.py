@@ -1,0 +1,91 @@
+"""Layer-1 Pallas kernel: masked GAT attention over [in ∥ stale] neighbors.
+
+The GAT layer under DIGEST's stale split attends over the concatenation
+of in-subgraph neighbors (fresh) and out-of-subgraph neighbors (stale,
+pulled from the KVS):
+
+    e_ij   = LeakyReLU(a_src · g_i + a_dst · g_j)       j ∈ N(i) ∪ {i}
+    alpha  = softmax_j(e_ij)   masked to [A_in | A_out]
+    h'_i   = Σ_j alpha_ij g_j
+
+Row-wise softmax needs a full attention row, so the kernel tiles over
+*destination rows only*: grid = (S / bm,), each step holding one
+(bm, S+B) logits tile plus the full transformed-feature matrix
+``g`` (S+B, d') resident in VMEM.  For this library's artifact shapes
+(S+B ≤ 3072, d' ≤ 128) that is ≤ 3 MiB — comfortably inside a TPU
+core's ~16 MiB VMEM; ``vmem_footprint_bytes`` checks the budget.
+
+Like the aggregate GEMM, this kernel is used on the forward-only path
+(eval artifacts, correctness tests); the training path computes the
+same math in jnp (XLA-fused elementwise + ``pmatmul`` GEMMs) because
+``pallas_call`` has no autodiff transpose rule.  Both are asserted
+equal to ``ref.gat_attention_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .aggregate import pick_block
+from .ref import LEAKY_SLOPE, MASK_NEG
+
+
+def _attention_kernel(s_src_ref, s_dst_ref, mask_ref, g_ref, o_ref):
+    """One (bm,)-row tile of masked-softmax attention aggregation."""
+    e = s_src_ref[...].reshape(-1, 1) + s_dst_ref[...].reshape(1, -1)  # (bm, S+B)
+    e = jnp.where(e > 0, e, LEAKY_SLOPE * e)
+    e = jnp.where(mask_ref[...] > 0, e, MASK_NEG)
+    e = e - jnp.max(e, axis=1, keepdims=True)
+    num = jnp.exp(e)
+    alpha = num / jnp.sum(num, axis=1, keepdims=True)
+    o_ref[...] = jnp.dot(alpha, g_ref[...], preferred_element_type=jnp.float32)
+
+
+def gat_attention(
+    g: jax.Array,  # (S+B, d')
+    s_src: jax.Array,  # (S,)
+    s_dst: jax.Array,  # (S+B,)
+    mask: jax.Array,  # (S, S+B)
+    *,
+    bm: int | None = None,
+) -> jax.Array:
+    """Pallas masked attention aggregation; returns (S, d')."""
+    s, sb = mask.shape
+    _, dp = g.shape
+    if g.shape[0] != sb or s_src.shape != (s,) or s_dst.shape != (sb,):
+        raise ValueError(
+            f"inconsistent shapes: g={g.shape} s_src={s_src.shape} "
+            f"s_dst={s_dst.shape} mask={mask.shape}"
+        )
+    from .aggregate import BACKEND
+    if BACKEND == "xla":
+        from .ref import gat_attention_ref
+        return gat_attention_ref(g, s_src, s_dst, mask)
+    bm = bm or pick_block(s)
+    if s % bm:
+        raise ValueError(f"row block {bm} must divide {s}")
+    grid = (s // bm,)
+    return pl.pallas_call(
+        _attention_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm,), lambda i: (i,)),  # s_src rows
+            pl.BlockSpec((sb,), lambda i: (0,)),  # s_dst, full
+            pl.BlockSpec((bm, sb), lambda i: (i, 0)),  # mask rows
+            pl.BlockSpec((sb, dp), lambda i: (0, 0)),  # g, full
+        ],
+        out_specs=pl.BlockSpec((bm, dp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, dp), jnp.float32),
+        interpret=True,
+    )(s_src, s_dst, mask, g)
+
+
+def vmem_footprint_bytes(s: int, sb: int, dp: int, bm: int | None = None) -> int:
+    """Resident VMEM bytes for one grid step of the attention kernel."""
+    bm = bm or pick_block(s)
+    # s_src tile + s_dst + mask tile + g + logits scratch + output tile
+    return 4 * (bm + sb + bm * sb + sb * dp + bm * sb + bm * dp)

@@ -1,0 +1,85 @@
+"""Pure-jnp correctness oracles for the Layer-1 Pallas kernels.
+
+Everything here is the *specification*: plain jax.numpy with no Pallas,
+no blocking, no fusion.  The pytest suite asserts the kernels in
+``aggregate.py`` / ``attention.py`` match these to float32 tolerance
+across a hypothesis-driven shape/seed sweep.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+LEAKY_SLOPE = 0.2
+MASK_NEG = -1e30
+
+
+def act_ref(z: jax.Array, kind: str) -> jax.Array:
+    if kind == "none":
+        return z
+    if kind == "relu":
+        return jnp.maximum(z, 0.0)
+    if kind == "leaky_relu":
+        return jnp.where(z > 0, z, LEAKY_SLOPE * z)
+    if kind == "elu":
+        return jnp.where(z > 0, z, jnp.expm1(z))
+    raise ValueError(kind)
+
+
+def matmul_ref(
+    x: jax.Array, y: jax.Array, bias: Optional[jax.Array] = None, act: str = "none"
+) -> jax.Array:
+    z = x @ y
+    if bias is not None:
+        z = z + bias[None, :]
+    return act_ref(z, act)
+
+
+def aggregate_layer_ref(
+    p_in: jax.Array,
+    p_out: jax.Array,
+    h_in: jax.Array,
+    h_stale: jax.Array,
+    w: jax.Array,
+    bias: Optional[jax.Array] = None,
+    act: str = "relu",
+) -> jax.Array:
+    """Eq. 5 of the paper: sigma(P_in·H_in·W + P_out·H̃_out·W + b)."""
+    z = p_in @ (h_in @ w) + p_out @ (h_stale @ w)
+    if bias is not None:
+        z = z + bias[None, :]
+    return act_ref(z, act)
+
+
+def masked_softmax_ref(e: jax.Array, mask: jax.Array) -> jax.Array:
+    """Row-wise softmax over entries where ``mask > 0``.
+
+    Fully-masked rows degrade to a uniform distribution (finite, never
+    NaN) — such rows only ever correspond to padding and are excluded
+    from the loss and from KVS pushes (see DESIGN.md §6).
+    """
+    e = jnp.where(mask > 0, e, MASK_NEG)
+    e = e - jnp.max(e, axis=1, keepdims=True)
+    num = jnp.exp(e)
+    return num / jnp.sum(num, axis=1, keepdims=True)
+
+
+def gat_attention_ref(
+    g: jax.Array,  # (S+B, d') transformed features [in ; stale]
+    s_src: jax.Array,  # (S,)    a_src · g_i for destination nodes
+    s_dst: jax.Array,  # (S+B,)  a_dst · g_j for source nodes
+    mask: jax.Array,  # (S, S+B) adjacency mask [A_in | A_out], self-loops on diag
+) -> jax.Array:
+    """GAT aggregation: softmax_j(LeakyReLU(s_src_i + s_dst_j)) @ g."""
+    e = s_src[:, None] + s_dst[None, :]
+    e = jnp.where(e > 0, e, LEAKY_SLOPE * e)
+    alpha = masked_softmax_ref(e, mask)
+    return alpha @ g
+
+
+def l2_normalize_ref(h: jax.Array, eps: float = 1e-12) -> jax.Array:
+    """Row L2 normalization (Alg. 1 line 11)."""
+    return h / jnp.maximum(jnp.linalg.norm(h, axis=1, keepdims=True), eps)

@@ -1,0 +1,14 @@
+"""Layer-2 JAX models: GCN / GAT with DIGEST's stale-representation split."""
+
+from .gcn import gcn_forward, init_gcn_params
+from .gat import gat_forward, init_gat_params
+from .loss import masked_cross_entropy, masked_correct
+
+__all__ = [
+    "gcn_forward",
+    "init_gcn_params",
+    "gat_forward",
+    "init_gat_params",
+    "masked_cross_entropy",
+    "masked_correct",
+]

@@ -1,0 +1,107 @@
+"""L-layer GAT with DIGEST's stale-representation split.
+
+Single-head graph attention (Velickovic et al. 2017), attending over the
+concatenation of fresh in-subgraph neighbors and stale out-of-subgraph
+neighbors:
+
+    g        = [H_in ; H̃_out] @ W                      (S+B, d')
+    e_ij     = LeakyReLU(a_src·g_i + a_dst·g_j)
+    alpha_i· = softmax over j with [A_in | A_out] mask  (self-loop on diag)
+    h'_i     = sigma(alpha_i· @ g + b)
+
+For GAT the ``p_in`` / ``p_out`` artifact inputs are *binary adjacency
+masks* (the Rust halo module emits masks instead of normalized
+propagation weights when the model is GAT); the diagonal of the in-mask
+is 1 for every row including padding so no softmax row is empty.
+
+Training path: GEMMs via the Pallas ``pmatmul`` (autodiff-capable),
+masked softmax in jnp (XLA-fused elementwise).  Forward-only path
+(``fused_epilogue=True``) uses the fused Pallas attention kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.aggregate import pmatmul, matmul_bias_act, ACTIVATIONS
+from ..kernels.attention import gat_attention
+from ..kernels.ref import LEAKY_SLOPE, MASK_NEG, l2_normalize_ref
+
+Params = List[Dict[str, jax.Array]]
+
+
+def init_gat_params(key: jax.Array, dims: Sequence[int]) -> Params:
+    """Per-layer {"w", "b", "a_src", "a_dst"}; Glorot W, small attention vecs."""
+    params: Params = []
+    for l in range(len(dims) - 1):
+        key, kw, ks, kd = jax.random.split(key, 4)
+        d_in, d_out = dims[l], dims[l + 1]
+        lim = jnp.sqrt(6.0 / (d_in + d_out))
+        params.append(
+            {
+                "w": jax.random.uniform(kw, (d_in, d_out), jnp.float32, -lim, lim),
+                "b": jnp.zeros((d_out,), jnp.float32),
+                "a_src": 0.1 * jax.random.normal(ks, (d_out,), jnp.float32),
+                "a_dst": 0.1 * jax.random.normal(kd, (d_out,), jnp.float32),
+            }
+        )
+    return params
+
+
+def _attend_jnp(g, s_src, s_dst, mask):
+    """Training-path attention: jnp softmax + Pallas GEMM aggregation."""
+    e = s_src[:, None] + s_dst[None, :]
+    e = jnp.where(e > 0, e, LEAKY_SLOPE * e)
+    e = jnp.where(mask > 0, e, MASK_NEG)
+    e = e - jax.lax.stop_gradient(jnp.max(e, axis=1, keepdims=True))
+    num = jnp.exp(e)
+    alpha = num / jnp.sum(num, axis=1, keepdims=True)
+    return pmatmul(alpha, g)
+
+
+def gat_forward(
+    params: Params,
+    x: jax.Array,  # (S+B, d_in)
+    adj_in: jax.Array,  # (S, S) binary mask, diag = 1
+    adj_out: jax.Array,  # (S, B) binary mask
+    h_stale: Sequence[jax.Array],  # L-1 tensors (B, d_h)
+    *,
+    act: str = "elu",
+    normalize: bool = False,
+    fused_epilogue: bool = False,
+) -> Tuple[jax.Array, List[jax.Array]]:
+    """Returns (logits (S, C), fresh hidden reps [(S, d_h)] * (L-1))."""
+    n_layers = len(params)
+    if len(h_stale) != n_layers - 1:
+        raise ValueError(f"need {n_layers - 1} stale tensors, got {len(h_stale)}")
+    s = adj_in.shape[0]
+    mask = jnp.concatenate([adj_in, adj_out], axis=1)  # (S, S+B)
+    h_in = x[:s]
+    h_out = x[s:]
+    reps: List[jax.Array] = []
+    for l, layer in enumerate(params):
+        last = l == n_layers - 1
+        hc = jnp.concatenate([h_in, h_out], axis=0)  # (S+B, d)
+        if fused_epilogue:
+            g = matmul_bias_act(hc, layer["w"])
+            s_src = g[:s] @ layer["a_src"]
+            s_dst = g @ layer["a_dst"]
+            h_new = gat_attention(g, s_src, s_dst, mask)
+        else:
+            g = pmatmul(hc, layer["w"])
+            s_src = g[:s] @ layer["a_src"]
+            s_dst = g @ layer["a_dst"]
+            h_new = _attend_jnp(g, s_src, s_dst, mask)
+        h_new = h_new + layer["b"][None, :]
+        if not last:
+            h_in = ACTIVATIONS[act](h_new)
+            if normalize:
+                h_in = l2_normalize_ref(h_in)
+            reps.append(h_in)
+            h_out = h_stale[l]
+        else:
+            h_in = h_new
+    return h_in, reps

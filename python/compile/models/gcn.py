@@ -1,0 +1,93 @@
+"""L-layer GCN with DIGEST's stale-representation split (paper Eq. 4/5).
+
+Layer l+1 on subgraph m:
+
+    H_in^(l+1) = sigma( P_in · H_in^(l) · W^(l+1) + P_out · H̃_out^(l) · W^(l+1) + b )
+
+* layer 0's out-of-subgraph input is the *exact* halo feature rows (node
+  features are static, never stale);
+* hidden layers l >= 1 read the stale halo representations
+  ``h_stale[l-1]`` pulled from the KVS by the Rust coordinator;
+* the per-layer fresh in-subgraph representations are returned so the
+  coordinator can push them back to the KVS (Alg. 1 lines 9-10).
+
+``P_in`` (S, S) and ``P_out`` (S, B) are the GCN-normalized propagation
+matrix D̃^{-1/2}(A+I)D̃^{-1/2} split by column ownership; the Rust
+``halo`` module builds them (padded, dense).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.aggregate import aggregate_layer, ACTIVATIONS
+from ..kernels.ref import l2_normalize_ref
+
+Params = List[Dict[str, jax.Array]]
+
+
+def init_gcn_params(
+    key: jax.Array, dims: Sequence[int], scale: str = "glorot"
+) -> Params:
+    """Per-layer {"w": (d_l, d_{l+1}), "b": (d_{l+1},)}; Glorot-uniform W."""
+    params: Params = []
+    for l in range(len(dims) - 1):
+        key, sub = jax.random.split(key)
+        d_in, d_out = dims[l], dims[l + 1]
+        if scale == "glorot":
+            lim = jnp.sqrt(6.0 / (d_in + d_out))
+        else:
+            lim = 1.0 / jnp.sqrt(d_in)
+        w = jax.random.uniform(sub, (d_in, d_out), jnp.float32, -lim, lim)
+        params.append({"w": w, "b": jnp.zeros((d_out,), jnp.float32)})
+    return params
+
+
+def gcn_forward(
+    params: Params,
+    x: jax.Array,  # (S+B, d_in): [in-subgraph rows ; halo rows]
+    p_in: jax.Array,  # (S, S)
+    p_out: jax.Array,  # (S, B)
+    h_stale: Sequence[jax.Array],  # L-1 tensors, each (B, d_h)
+    *,
+    act: str = "relu",
+    normalize: bool = False,
+    fused_epilogue: bool = False,
+) -> Tuple[jax.Array, List[jax.Array]]:
+    """Returns (logits (S, C), fresh hidden reps [(S, d_h)] * (L-1))."""
+    n_layers = len(params)
+    if len(h_stale) != n_layers - 1:
+        raise ValueError(f"need {n_layers - 1} stale tensors, got {len(h_stale)}")
+    if act not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {act!r}")
+
+    s = p_in.shape[0]
+    h_in = x[:s]
+    h_out = x[s:]  # exact halo features for layer 0
+    reps: List[jax.Array] = []
+    for l, layer in enumerate(params):
+        last = l == n_layers - 1
+        h_in = aggregate_layer(
+            p_in,
+            p_out,
+            h_in,
+            h_out,
+            layer["w"],
+            bias=layer["b"],
+            act="none" if last else act,
+            fused_epilogue=fused_epilogue,
+        )
+        if not last:
+            if normalize:
+                h_in = l2_normalize_ref(h_in)
+            reps.append(h_in)
+            h_out = h_stale[l]  # stale input for the next layer
+    return h_in, reps
+
+
+def gcn_forward_dims(d_in: int, d_h: int, n_class: int, layers: int) -> List[int]:
+    """[d_in, d_h, ..., d_h, n_class] — the dims list for init/params."""
+    return [d_in] + [d_h] * (layers - 1) + [n_class]

@@ -1,0 +1,30 @@
+"""Masked losses/metrics for padded per-subgraph batches.
+
+Every subgraph is padded to the artifact's static shape (S_pad rows);
+``mask`` is 1.0 for real train nodes and 0.0 for padding / non-train
+nodes, so padded rows contribute nothing to the loss or the metrics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_cross_entropy(logits: jax.Array, y: jax.Array, mask: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy over rows with ``mask > 0``.
+
+    logits: (S, C) f32; y: (S,) int32; mask: (S,) f32.
+    The denominator is clamped to 1 so an all-masked batch yields 0, not
+    NaN (can happen for a padding-only subgraph in degenerate splits).
+    """
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=1)[:, 0]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll * mask) / denom
+
+
+def masked_correct(logits: jax.Array, y: jax.Array, mask: jax.Array) -> jax.Array:
+    """Number of correctly-classified rows with ``mask > 0`` (f32 scalar)."""
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.sum((pred == y.astype(jnp.int32)).astype(jnp.float32) * mask)

@@ -1,0 +1,120 @@
+"""Per-subgraph train/eval step builders — the functions that get AOT-lowered.
+
+The train step is one local epoch-step of Alg. 1 on subgraph m:
+
+    fwd (Eq. 4, stale split) -> masked CE loss -> jax.grad
+    returns (loss, ncorrect, logits, fresh hidden reps, grads)
+
+Gradients are returned (not applied): the Rust parameter server owns the
+optimizer (SGD/momentum/Adam) and the aggregation policy, so one
+artifact serves every training mode (DESIGN.md §6.2).
+
+The *flat positional signature* (see ``flat_args``) and the flat output
+tuple are the ABI contract recorded in ``artifacts/manifest.json``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ArtifactConfig
+from .models.gcn import gcn_forward
+from .models.gat import gat_forward
+from .models.loss import masked_cross_entropy, masked_correct
+
+
+def _unflatten(cfg: ArtifactConfig, flat: Tuple[jax.Array, ...], kind: str = "train"):
+    """Split the flat positional args per the manifest input ordering."""
+    i = 0
+    x = flat[i]; i += 1
+    p_in = flat[i]; i += 1
+    p_out = flat[i]; i += 1
+    n_stale = cfg.layers - 1
+    h_stale = list(flat[i : i + n_stale]); i += n_stale
+    keys = cfg.param_keys()
+    params = []
+    for _ in range(cfg.layers):
+        layer = {}
+        for k in keys:
+            layer[k] = flat[i]; i += 1
+        params.append(layer)
+    if kind == "train":
+        y = flat[i]; i += 1
+        mask = flat[i]; i += 1
+    else:
+        y = mask = None
+    assert i == len(flat), f"consumed {i} of {len(flat)} args"
+    return x, p_in, p_out, h_stale, params, y, mask
+
+
+def _forward(cfg: ArtifactConfig, params, x, p_in, p_out, h_stale, *, fused: bool):
+    if cfg.model == "gcn":
+        return gcn_forward(
+            params, x, p_in, p_out, h_stale,
+            act=cfg.activation(), normalize=cfg.normalize, fused_epilogue=fused,
+        )
+    if cfg.model == "gat":
+        return gat_forward(
+            params, x, p_in, p_out, h_stale,
+            act=cfg.activation(), normalize=cfg.normalize, fused_epilogue=fused,
+        )
+    raise ValueError(f"unknown model {cfg.model!r}")
+
+
+def _flatten_grads(cfg: ArtifactConfig, grads) -> List[jax.Array]:
+    out: List[jax.Array] = []
+    for layer in grads:
+        for k in cfg.param_keys():
+            out.append(layer[k])
+    return out
+
+
+def make_train_step(cfg: ArtifactConfig) -> Callable:
+    """Flat-signature train step: ``step(*flat) -> (loss, ncorrect, logits,
+    *reps, *grads)``."""
+
+    def step(*flat):
+        x, p_in, p_out, h_stale, params, y, mask = _unflatten(cfg, flat)
+
+        def loss_fn(params):
+            logits, reps = _forward(
+                cfg, params, x, p_in, p_out, h_stale, fused=False
+            )
+            loss = masked_cross_entropy(logits, y, mask)
+            return loss, (logits, reps)
+
+        (loss, (logits, reps)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params
+        )
+        ncorrect = masked_correct(logits, y, mask)
+        return tuple([loss, ncorrect, logits] + reps + _flatten_grads(cfg, grads))
+
+    return step
+
+
+def make_eval_step(cfg: ArtifactConfig) -> Callable:
+    """Forward-only step (fused Pallas epilogue path):
+    ``step(*flat) -> (logits, *reps)``.
+
+    Eval takes the train signature *minus* y/mask (unused entry params
+    would be dead-code-eliminated by XLA, breaking the buffer count).
+    """
+
+    def step(*flat):
+        x, p_in, p_out, h_stale, params, _y, _mask = _unflatten(cfg, flat, "eval")
+        logits, reps = _forward(cfg, params, x, p_in, p_out, h_stale, fused=True)
+        return tuple([logits] + reps)
+
+    return step
+
+
+def flat_args(cfg: ArtifactConfig, kind: str = "train") -> List[jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs matching the manifest input order (for lowering)."""
+    dt = {"f32": jnp.float32, "i32": jnp.int32}
+    return [
+        jax.ShapeDtypeStruct(shape, dt[dtype])
+        for _, shape, dtype in cfg.input_specs(kind)
+    ]

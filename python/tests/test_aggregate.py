@@ -1,0 +1,227 @@
+"""L1 kernel tests: Pallas blocked GEMM vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (including non-power-of-two and prime-ish
+dims), activations, bias on/off, and verifies the custom-vjp backward
+pass against jax's autodiff of the reference.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.aggregate import (
+    ACTIVATIONS,
+    aggregate_layer,
+    matmul_bias_act,
+    mxu_utilization,
+    pick_block,
+    pmatmul,
+    vmem_footprint_bytes,
+)
+
+DIMS = st.sampled_from([1, 2, 3, 7, 16, 24, 40, 47, 64, 100, 129])
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# pick_block
+# ---------------------------------------------------------------------------
+
+
+@given(dim=st.integers(1, 4096), target=st.integers(1, 256))
+@settings(max_examples=200, deadline=None)
+def test_pick_block_divides_and_bounded(dim, target):
+    b = pick_block(dim, target)
+    assert dim % b == 0
+    assert b <= max(target, 1) or b == dim  # dim <= target returns dim itself
+    if dim <= target:
+        assert b == dim
+
+
+def test_pick_block_prefers_large_divisors():
+    assert pick_block(256, 128) == 128
+    assert pick_block(40, 128) == 40
+    assert pick_block(300, 128) == 100
+    assert pick_block(129, 128) == 43
+
+
+# ---------------------------------------------------------------------------
+# forward GEMM vs oracle
+# ---------------------------------------------------------------------------
+
+
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_pmatmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = _rand(rng, m, k), _rand(rng, k, n)
+    np.testing.assert_allclose(
+        pmatmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("act", sorted(ACTIVATIONS))
+@pytest.mark.parametrize("with_bias", [False, True])
+def test_fused_epilogue_matches_ref(act, with_bias):
+    rng = np.random.default_rng(7)
+    x, y = _rand(rng, 64, 48), _rand(rng, 48, 40)
+    b = _rand(rng, 40) if with_bias else None
+    got = matmul_bias_act(x, y, bias=b, act=act)
+    want = ref.matmul_ref(x, y, bias=b, act=act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_explicit_blocking_matches_default():
+    rng = np.random.default_rng(3)
+    x, y = _rand(rng, 128, 96), _rand(rng, 96, 64)
+    from compile.kernels.aggregate import _pallas_matmul
+
+    base = ref.matmul_ref(x, y)
+    for bm, bn, bk in [(32, 32, 32), (128, 64, 96), (64, 16, 48)]:
+        got = _pallas_matmul(x, y, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(got, base, rtol=1e-4, atol=1e-4)
+
+
+def test_bad_shapes_raise():
+    x = jnp.zeros((4, 5))
+    y = jnp.zeros((6, 3))
+    with pytest.raises(ValueError):
+        pmatmul(x, y)
+    with pytest.raises(ValueError):
+        matmul_bias_act(jnp.zeros((4, 6)), y, act="nope")
+
+
+# ---------------------------------------------------------------------------
+# backward pass (custom vjp)
+# ---------------------------------------------------------------------------
+
+
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_pmatmul_grads_match_autodiff(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = _rand(rng, m, k), _rand(rng, k, n)
+
+    def f_pallas(x, y):
+        return jnp.sum(jnp.tanh(pmatmul(x, y)))
+
+    def f_ref(x, y):
+        return jnp.sum(jnp.tanh(x @ y))
+
+    gp = jax.grad(f_pallas, argnums=(0, 1))(x, y)
+    gr = jax.grad(f_ref, argnums=(0, 1))(x, y)
+    np.testing.assert_allclose(gp[0], gr[0], rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(gp[1], gr[1], rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# the DIGEST aggregation layer (Eq. 5)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fused", [False, True])
+@pytest.mark.parametrize("act", ["none", "relu", "elu"])
+def test_aggregate_layer_matches_ref(fused, act):
+    rng = np.random.default_rng(11)
+    s, b, d, dp = 32, 48, 24, 16
+    p_in, p_out = _rand(rng, s, s), _rand(rng, s, b)
+    h_in, h_st = _rand(rng, s, d), _rand(rng, b, d)
+    w, bias = _rand(rng, d, dp), _rand(rng, dp)
+    got = aggregate_layer(
+        p_in, p_out, h_in, h_st, w, bias=bias, act=act, fused_epilogue=fused
+    )
+    want = ref.aggregate_layer_ref(p_in, p_out, h_in, h_st, w, bias=bias, act=act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_aggregate_layer_zero_stale_is_partition_based():
+    """With H̃=0 and P_out=0 the layer reduces to the edge-dropping
+    (partition-based) computation — the information-loss baseline."""
+    rng = np.random.default_rng(5)
+    s, b, d, dp = 16, 16, 8, 8
+    p_in = _rand(rng, s, s)
+    h_in = _rand(rng, s, d)
+    w = _rand(rng, d, dp)
+    zeros_po, zeros_h = jnp.zeros((s, b)), jnp.zeros((b, d))
+    got = aggregate_layer(p_in, zeros_po, h_in, zeros_h, w, act="none")
+    np.testing.assert_allclose(got, p_in @ h_in @ w, rtol=1e-4, atol=1e-4)
+
+
+def test_aggregate_layer_grad_flows_through_stale_term():
+    """Thm 1's premise: the gradient depends on H̃_out (Eq. 6)."""
+    rng = np.random.default_rng(9)
+    s, b, d, dp = 16, 16, 8, 8
+    p_in, p_out = _rand(rng, s, s), _rand(rng, s, b)
+    h_in, h_st = _rand(rng, s, d), _rand(rng, b, d)
+    w = _rand(rng, d, dp)
+
+    def loss(w, h_st):
+        return jnp.sum(aggregate_layer(p_in, p_out, h_in, h_st, w, act="relu") ** 2)
+
+    g_with = jax.grad(loss)(w, h_st)
+    g_zero = jax.grad(loss)(w, jnp.zeros_like(h_st))
+    assert not np.allclose(np.asarray(g_with), np.asarray(g_zero))
+
+
+# ---------------------------------------------------------------------------
+# TPU perf model sanity
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_footprint_within_budget_for_all_configs():
+    from compile.configs import CONFIGS
+
+    budget = 16 * 2**20  # 16 MiB per-core VMEM
+    for cfg in CONFIGS:
+        sb = cfg.s_pad + cfg.b_pad
+        # transform GEMM (S+B, d_in) @ (d_in, d_h); aggregate (S, S+B) @ (S+B, d_h)
+        assert vmem_footprint_bytes(sb, cfg.d_h, cfg.d_in) < budget, cfg.name
+        assert vmem_footprint_bytes(cfg.s_pad, cfg.d_h, sb) < budget, cfg.name
+
+
+def test_mxu_utilization_model():
+    # aligned shapes: full utilization
+    assert mxu_utilization(256, 256, 256) == pytest.approx(1.0)
+    # a 40-wide N dim wastes most of a 128-lane pass
+    assert mxu_utilization(256, 40, 256) == pytest.approx(40 / 128)
+    # utilization in (0, 1]
+    for m, n, k in [(100, 47, 300), (512, 64, 129)]:
+        u = mxu_utilization(m, n, k)
+        assert 0 < u <= 1
+
+
+# ---------------------------------------------------------------------------
+# backend dispatch (§Perf)
+# ---------------------------------------------------------------------------
+
+
+def test_xla_backend_matches_pallas():
+    """The fast-CPU "xla" backend must be numerically identical."""
+    from compile.kernels import aggregate as agg
+
+    rng = np.random.default_rng(21)
+    x, y, b = _rand(rng, 32, 24), _rand(rng, 24, 16), _rand(rng, 16)
+    base_mm = np.asarray(pmatmul(x, y))
+    base_fused = np.asarray(matmul_bias_act(x, y, b, "relu"))
+    old = agg.BACKEND
+    try:
+        agg.set_backend("xla")
+        np.testing.assert_allclose(agg.pmatmul(x, y), base_mm, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(
+            agg.matmul_bias_act(x, y, b, "relu"), base_fused, rtol=1e-5, atol=1e-5
+        )
+    finally:
+        agg.BACKEND = old
+
+
+def test_set_backend_validates():
+    from compile.kernels import aggregate as agg
+
+    with pytest.raises(ValueError):
+        agg.set_backend("cuda")

@@ -1,0 +1,50 @@
+"""Tests for the L2 HLO analysis tooling."""
+
+import pytest
+
+from compile.analysis import analytic_flops, analyze, gemm_estimates, op_histogram
+from compile.configs import ArtifactConfig
+
+TINY = ArtifactConfig(
+    name="tiny_an", model="gcn", layers=2, s_pad=8, b_pad=8, d_in=4, d_h=4, n_class=3
+)
+
+
+def test_op_histogram_parses_hlo():
+    text = """
+  %x = f32[4,4]{1,0} parameter(0)
+  %y = f32[4,4]{1,0} parameter(1)
+  %d = f32[4,4]{1,0} dot(%x, %y), lhs_contracting_dims={1}
+  ROOT %a = f32[4,4]{1,0} add(%d, %x)
+"""
+    ops = op_histogram(text)
+    assert ops["parameter"] == 2
+    assert ops["dot"] == 1
+    assert ops["add"] == 1
+
+
+def test_analytic_flops_train_is_3x_eval():
+    assert analytic_flops(TINY, "train") == 3 * analytic_flops(TINY, "eval")
+    assert analytic_flops(TINY, "eval") > 0
+
+
+def test_gemm_estimates_structure():
+    gs = gemm_estimates(TINY)
+    names = {g["gemm"] for g in gs}
+    assert names == {"transform", "aggregate", "classify"}
+    for g in gs:
+        assert 0 < g["mxu_utilization"] <= 1
+        assert g["vmem_bytes"] > 0
+        m, n, k = g["m"], g["n"], g["k"]
+        bm, bn, bk = g["blocks"]
+        assert m % bm == 0 and n % bn == 0 and k % bk == 0
+
+
+def test_analyze_real_lowering():
+    r = analyze(TINY, "train")
+    assert r["total_ops"] > 10
+    # the interpret-mode Pallas GEMMs appear as while loops over the grid
+    assert r["while_loops"] >= 1
+    assert r["dots"] >= 1
+    assert r["input_bytes"] > 0
+    assert r["analytic_flops"] == analytic_flops(TINY, "train")

@@ -1,0 +1,82 @@
+"""Config-system invariants across ALL artifact configs — the contract
+both sides of the ABI rely on."""
+
+import jax.numpy as jnp
+import pytest
+
+from compile.configs import CONFIGS, CONFIG_BY_NAME, ArtifactConfig
+from compile.kernels.aggregate import pick_block
+
+
+@pytest.mark.parametrize("cfg", CONFIGS, ids=lambda c: c.name)
+class TestEveryConfig:
+    def test_dims_chain(self, cfg):
+        dims = cfg.dims()
+        assert dims[0] == cfg.d_in
+        assert dims[-1] == cfg.n_class
+        assert len(dims) == cfg.layers + 1
+        for d in dims[1:-1]:
+            assert d == cfg.d_h
+
+    def test_train_inputs_order(self, cfg):
+        names = [n for n, _, _ in cfg.input_specs("train")]
+        assert names[:3] == ["x", "p_in", "p_out"]
+        for l in range(cfg.layers - 1):
+            assert names[3 + l] == f"h_stale_{l}"
+        assert names[-2:] == ["y", "mask"]
+        # eval omits y/mask, everything else identical
+        eval_names = [n for n, _, _ in cfg.input_specs("eval")]
+        assert eval_names == names[:-2]
+
+    def test_param_specs_per_model(self, cfg):
+        names = [n for n, _, _ in cfg.input_specs("train")]
+        ppl = 2 if cfg.model == "gcn" else 4
+        n_params = sum(1 for n in names if n.startswith("l"))
+        assert n_params == ppl * cfg.layers
+
+    def test_shapes_consistent(self, cfg):
+        specs = {n: (s, t) for n, s, t in cfg.input_specs("train")}
+        assert specs["x"][0] == (cfg.s_pad + cfg.b_pad, cfg.d_in)
+        assert specs["p_in"][0] == (cfg.s_pad, cfg.s_pad)
+        assert specs["p_out"][0] == (cfg.s_pad, cfg.b_pad)
+        assert specs["y"][1] == "i32"
+        assert specs["l0_w"][0] == (cfg.d_in, cfg.d_h if cfg.layers > 1 else cfg.n_class)
+
+    def test_train_outputs_order(self, cfg):
+        names = [n for n, _, _ in cfg.output_specs("train")]
+        assert names[:3] == ["loss", "ncorrect", "logits"]
+        n_reps = cfg.layers - 1
+        for l in range(n_reps):
+            assert names[3 + l] == f"rep_{l}"
+        grads = names[3 + n_reps:]
+        assert all(g.startswith("grad_") for g in grads)
+        # grads mirror the param input ordering exactly
+        params = [n for n, _, _ in cfg.input_specs("train") if n.startswith("l")]
+        assert grads == [f"grad_{p}" for p in params]
+
+    def test_blockable_shapes(self, cfg):
+        # every GEMM dim must admit a block (pick_block always succeeds,
+        # but catastrophically small blocks mean a bad config)
+        for dim in [cfg.s_pad, cfg.b_pad, cfg.s_pad + cfg.b_pad, cfg.d_in, cfg.d_h]:
+            assert pick_block(dim) >= min(dim, 32), f"{cfg.name}: dim {dim}"
+
+    def test_activation_default(self, cfg):
+        assert cfg.activation() == ("relu" if cfg.model == "gcn" else "elu")
+
+
+def test_registry_names_cover_rust_datasets():
+    # lockstep with rust/src/graph/registry.rs
+    for prefix in ["karate", "arxiv_s", "flickr_s", "reddit_s", "products_s"]:
+        for model in ["gcn", "gat"]:
+            assert f"{prefix}_{model}" in CONFIG_BY_NAME
+
+
+def test_input_bytes_fit_memory_budget():
+    # each step's input tensor set must stay well under 1 GiB (packing
+    # creates one host copy)
+    for cfg in CONFIGS:
+        total = sum(
+            4 * int(jnp.prod(jnp.array(s))) if s else 4
+            for _, s, _ in cfg.input_specs("train")
+        )
+        assert total < 2**30, f"{cfg.name}: {total} bytes"

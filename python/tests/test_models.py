@@ -1,0 +1,230 @@
+"""L2 model tests: GCN/GAT forward with the stale split.
+
+The key semantic properties of DIGEST's forward (paper §3.1):
+
+  * if the stale representations equal the *true* ones, the subgraph
+    forward equals the exact full-graph forward restricted to the
+    subgraph (zero staleness error);
+  * if P_out = 0 and stale = 0 the model degrades to the partition-based
+    (edge-dropping) computation;
+  * the fused (eval) and unfused (train) paths agree.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.models.gcn import gcn_forward, gcn_forward_dims, init_gcn_params
+from compile.models.gat import gat_forward, init_gat_params
+from compile.kernels.ref import act_ref, masked_softmax_ref, LEAKY_SLOPE
+
+
+def _norm_prop(adj):
+    """GCN normalization D̃^-1/2 (A+I) D̃^-1/2 (dense, numpy)."""
+    a = adj + np.eye(adj.shape[0], dtype=np.float32)
+    d = a.sum(1)
+    dinv = 1.0 / np.sqrt(np.maximum(d, 1e-12))
+    return (a * dinv[:, None]) * dinv[None, :]
+
+
+def _random_graph(rng, n, density=0.2):
+    adj = (rng.random((n, n)) < density).astype(np.float32)
+    adj = np.maximum(adj, adj.T)
+    np.fill_diagonal(adj, 0.0)
+    return adj
+
+
+def _full_graph_gcn(params, p, x, act="relu"):
+    """Exact full-graph GCN (the no-staleness oracle)."""
+    h = x
+    for l, layer in enumerate(params):
+        z = p @ h @ np.asarray(layer["w"]) + np.asarray(layer["b"])[None, :]
+        h = np.asarray(act_ref(jnp.asarray(z), act)) if l < len(params) - 1 else z
+    return h
+
+
+def _split(p, own):
+    """Split full propagation matrix rows `own` into (p_in, p_out, perm).
+
+    Column order: owned nodes first, then the rest (the halo)."""
+    others = [i for i in range(p.shape[0]) if i not in own]
+    perm = own + others
+    rows = p[own][:, perm]
+    return rows[:, : len(own)], rows[:, len(own):], perm
+
+
+@pytest.mark.parametrize("layers", [2, 3])
+def test_gcn_zero_staleness_matches_full_graph(layers):
+    rng = np.random.default_rng(0)
+    n, d, dh, c = 24, 8, 6, 4
+    adj = _random_graph(rng, n)
+    p = _norm_prop(adj)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    params = init_gcn_params(jax.random.key(0), gcn_forward_dims(d, dh, c, layers))
+
+    full = _full_graph_gcn(params, p, x)
+    full_hidden = []  # exact per-layer hidden reps
+    h = x
+    for l, layer in enumerate(params[:-1]):
+        z = p @ h @ np.asarray(layer["w"]) + np.asarray(layer["b"])[None, :]
+        h = np.maximum(z, 0.0)
+        full_hidden.append(h)
+
+    own = [1, 3, 5, 7, 9, 11]
+    p_in, p_out, perm = _split(p, own)
+    halo = perm[len(own):]
+    x_cat = jnp.asarray(np.concatenate([x[own], x[halo]], axis=0))
+    # stale = exact hidden reps of halo nodes
+    stale = [jnp.asarray(fh[halo]) for fh in full_hidden]
+
+    logits, reps = gcn_forward(
+        params, x_cat, jnp.asarray(p_in), jnp.asarray(p_out), stale
+    )
+    np.testing.assert_allclose(logits, full[own], rtol=1e-3, atol=1e-4)
+    for got, fh in zip(reps, full_hidden):
+        np.testing.assert_allclose(got, fh[own], rtol=1e-3, atol=1e-4)
+
+
+def test_gcn_zero_stale_is_partition_baseline():
+    rng = np.random.default_rng(1)
+    s, b, d, dh, c = 12, 8, 6, 5, 3
+    adj = _random_graph(rng, s)
+    p_in = jnp.asarray(_norm_prop(adj))
+    p_out = jnp.zeros((s, b))
+    x = jnp.asarray(rng.normal(size=(s + b, d)).astype(np.float32))
+    params = init_gcn_params(jax.random.key(1), [d, dh, c])
+    stale = [jnp.zeros((b, dh))]
+    logits, _ = gcn_forward(params, x, p_in, p_out, stale)
+    # partition-based oracle: drop all cross-subgraph terms
+    h = np.maximum(
+        np.asarray(p_in) @ np.asarray(x[:s]) @ np.asarray(params[0]["w"])
+        + np.asarray(params[0]["b"]),
+        0,
+    )
+    want = np.asarray(p_in) @ h @ np.asarray(params[1]["w"]) + np.asarray(
+        params[1]["b"]
+    )
+    np.testing.assert_allclose(logits, want, rtol=1e-3, atol=1e-4)
+
+
+def test_gcn_fused_matches_unfused():
+    rng = np.random.default_rng(2)
+    s, b, d, dh, c = 16, 16, 8, 8, 4
+    p_in = jnp.asarray(rng.random((s, s)).astype(np.float32))
+    p_out = jnp.asarray(rng.random((s, b)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(s + b, d)).astype(np.float32))
+    stale = [jnp.asarray(rng.normal(size=(b, dh)).astype(np.float32))]
+    params = init_gcn_params(jax.random.key(2), [d, dh, c])
+    l1, r1 = gcn_forward(params, x, p_in, p_out, stale, fused_epilogue=False)
+    l2, r2 = gcn_forward(params, x, p_in, p_out, stale, fused_epilogue=True)
+    np.testing.assert_allclose(l1, l2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(r1[0], r2[0], rtol=1e-4, atol=1e-4)
+
+
+def test_gcn_normalize_rows_unit_norm():
+    rng = np.random.default_rng(3)
+    s, b, d, dh, c = 8, 8, 4, 4, 2
+    p_in = jnp.asarray(np.eye(s, dtype=np.float32))
+    p_out = jnp.zeros((s, b))
+    x = jnp.asarray(rng.normal(size=(s + b, d)).astype(np.float32))
+    stale = [jnp.zeros((b, dh))]
+    params = init_gcn_params(jax.random.key(3), [d, dh, c])
+    _, reps = gcn_forward(params, x, p_in, p_out, stale, normalize=True)
+    norms = np.linalg.norm(np.asarray(reps[0]), axis=1)
+    nz = norms > 1e-6  # rows that weren't all-zero after relu
+    np.testing.assert_allclose(norms[nz], 1.0, rtol=1e-5)
+
+
+def test_gcn_stale_count_validation():
+    params = init_gcn_params(jax.random.key(0), [4, 4, 2])
+    with pytest.raises(ValueError):
+        gcn_forward(params, jnp.zeros((8, 4)), jnp.zeros((4, 4)), jnp.zeros((4, 4)), [])
+
+
+# ---------------------------------------------------------------------------
+# GAT
+# ---------------------------------------------------------------------------
+
+
+def _full_graph_gat(params, adj, x, act="elu"):
+    """Exact full-graph single-head GAT oracle (numpy/jnp, no staleness)."""
+    n = adj.shape[0]
+    mask = jnp.asarray(np.maximum(adj, np.eye(n, dtype=np.float32)))
+    h = jnp.asarray(x)
+    hidden = []
+    for l, layer in enumerate(params):
+        g = h @ layer["w"]
+        e = (g @ layer["a_src"])[:, None] + (g @ layer["a_dst"])[None, :]
+        e = jnp.where(e > 0, e, LEAKY_SLOPE * e)
+        alpha = masked_softmax_ref(e, mask)
+        z = alpha @ g + layer["b"][None, :]
+        if l < len(params) - 1:
+            h = act_ref(z, act)
+            hidden.append(h)
+        else:
+            h = z
+    return np.asarray(h), [np.asarray(v) for v in hidden]
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_gat_zero_staleness_matches_full_graph(fused):
+    rng = np.random.default_rng(4)
+    n, d, dh, c = 20, 6, 5, 3
+    adj = _random_graph(rng, n, density=0.3)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    params = init_gat_params(jax.random.key(4), [d, dh, c])
+    full, hidden = _full_graph_gat(params, adj, x)
+
+    own = [0, 2, 4, 6, 8]
+    others = [i for i in range(n) if i not in own]
+    mask_full = np.maximum(adj, np.eye(n, dtype=np.float32))
+    adj_in = mask_full[np.ix_(own, own)]
+    adj_out = mask_full[np.ix_(own, others)]
+    x_cat = jnp.asarray(np.concatenate([x[own], x[others]], axis=0))
+    stale = [jnp.asarray(hidden[0][others])]
+
+    logits, reps = gat_forward(
+        params, x_cat, jnp.asarray(adj_in), jnp.asarray(adj_out), stale,
+        fused_epilogue=fused,
+    )
+    np.testing.assert_allclose(logits, full[own], rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(reps[0], hidden[0][own], rtol=1e-3, atol=1e-4)
+
+
+def test_gat_fused_matches_unfused():
+    rng = np.random.default_rng(5)
+    s, b, d, dh, c = 12, 12, 6, 6, 3
+    adj_in = (rng.random((s, s)) < 0.4).astype(np.float32)
+    np.fill_diagonal(adj_in, 1.0)
+    adj_out = (rng.random((s, b)) < 0.3).astype(np.float32)
+    x = jnp.asarray(rng.normal(size=(s + b, d)).astype(np.float32))
+    stale = [jnp.asarray(rng.normal(size=(b, dh)).astype(np.float32))]
+    params = init_gat_params(jax.random.key(5), [d, dh, c])
+    l1, _ = gat_forward(params, x, jnp.asarray(adj_in), jnp.asarray(adj_out), stale)
+    l2, _ = gat_forward(
+        params, x, jnp.asarray(adj_in), jnp.asarray(adj_out), stale,
+        fused_epilogue=True,
+    )
+    np.testing.assert_allclose(l1, l2, rtol=1e-3, atol=1e-4)
+
+
+def test_gat_grads_flow_through_attention_params():
+    rng = np.random.default_rng(6)
+    s, b, d, dh, c = 8, 8, 4, 4, 2
+    adj_in = np.eye(s, dtype=np.float32)
+    adj_out = (rng.random((s, b)) < 0.5).astype(np.float32)
+    x = jnp.asarray(rng.normal(size=(s + b, d)).astype(np.float32))
+    stale = [jnp.asarray(rng.normal(size=(b, dh)).astype(np.float32))]
+    params = init_gat_params(jax.random.key(6), [d, dh, c])
+
+    def loss(params):
+        logits, _ = gat_forward(
+            params, x, jnp.asarray(adj_in), jnp.asarray(adj_out), stale
+        )
+        return jnp.sum(logits**2)
+
+    grads = jax.grad(loss)(params)
+    for l, layer in enumerate(grads):
+        for key in ("w", "a_src", "a_dst"):
+            assert float(jnp.sum(jnp.abs(layer[key]))) > 0, (l, key)

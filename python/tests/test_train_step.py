@@ -1,0 +1,193 @@
+"""Train/eval-step tests: the flat ABI the Rust runtime consumes.
+
+Checks the flat signature against the manifest specs, the loss/metric
+semantics, gradient correctness vs a pure-jnp model, and padding
+invariance (padded rows must not change loss or gradients — the
+property the Rust halo/padding module relies on).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.configs import ArtifactConfig, CONFIGS
+from compile.models.loss import masked_cross_entropy, masked_correct
+from compile.train_step import flat_args, make_eval_step, make_train_step
+
+TINY_GCN = ArtifactConfig(
+    name="t_gcn", model="gcn", layers=2, s_pad=16, b_pad=16, d_in=8, d_h=8, n_class=4
+)
+TINY_GAT = ArtifactConfig(
+    name="t_gat", model="gat", layers=2, s_pad=16, b_pad=16, d_in=8, d_h=8, n_class=4
+)
+TINY_L3 = ArtifactConfig(
+    name="t_l3", model="gcn", layers=3, s_pad=16, b_pad=16, d_in=8, d_h=8, n_class=4
+)
+
+
+def _random_inputs(cfg, rng, train_frac=0.5):
+    flat = []
+    for name, shape, dtype in cfg.input_specs():
+        if dtype == "i32":
+            flat.append(jnp.asarray(rng.integers(0, cfg.n_class, shape), jnp.int32))
+        elif name == "mask":
+            flat.append(
+                jnp.asarray((rng.random(shape) < train_frac).astype(np.float32))
+            )
+        elif name in ("p_in", "p_out"):
+            m = (rng.random(shape) < 0.3).astype(np.float32) * 0.2
+            if name == "p_in" and cfg.model == "gat":
+                m = np.maximum(m, np.eye(shape[0], dtype=np.float32))
+            elif name == "p_in":
+                m = m + np.eye(shape[0], dtype=np.float32) * 0.5
+            flat.append(jnp.asarray(m))
+        else:
+            flat.append(jnp.asarray(rng.normal(size=shape).astype(np.float32) * 0.3))
+    return flat
+
+
+@pytest.mark.parametrize("cfg", [TINY_GCN, TINY_GAT, TINY_L3], ids=lambda c: c.name)
+def test_train_step_output_shapes_match_manifest(cfg):
+    rng = np.random.default_rng(0)
+    flat = _random_inputs(cfg, rng)
+    out = make_train_step(cfg)(*flat)
+    specs = cfg.output_specs("train")
+    assert len(out) == len(specs)
+    for val, (name, shape, dtype) in zip(out, specs):
+        assert tuple(val.shape) == tuple(shape), name
+        assert np.all(np.isfinite(np.asarray(val))), name
+
+
+@pytest.mark.parametrize("cfg", [TINY_GCN, TINY_GAT], ids=lambda c: c.name)
+def test_eval_step_output_shapes_match_manifest(cfg):
+    rng = np.random.default_rng(1)
+    flat = _random_inputs(cfg, rng)[:-2]  # eval signature drops y/mask
+    out = make_eval_step(cfg)(*flat)
+    specs = cfg.output_specs("eval")
+    assert len(out) == len(specs)
+    for val, (name, shape, _) in zip(out, specs):
+        assert tuple(val.shape) == tuple(shape), name
+
+
+def test_flat_args_match_input_specs():
+    for cfg in CONFIGS:
+        structs = flat_args(cfg)
+        specs = cfg.input_specs()
+        assert len(structs) == len(specs)
+        for s, (_, shape, dtype) in zip(structs, specs):
+            assert tuple(s.shape) == tuple(shape)
+            assert s.dtype == (jnp.int32 if dtype == "i32" else jnp.float32)
+
+
+def test_loss_and_ncorrect_semantics():
+    logits = jnp.asarray(
+        [[5.0, 0.0, 0.0], [0.0, 5.0, 0.0], [0.0, 0.0, 5.0], [5.0, 0.0, 0.0]]
+    )
+    y = jnp.asarray([0, 1, 0, 0], jnp.int32)  # row 2 wrong
+    mask = jnp.asarray([1.0, 1.0, 1.0, 0.0])  # row 3 masked out
+    assert float(masked_correct(logits, y, mask)) == 2.0
+    loss_all = masked_cross_entropy(logits, y, mask)
+    # masked-out row 3 is a perfect prediction; adding it would lower the
+    # mean, so the masked loss must be higher
+    loss_with = masked_cross_entropy(logits, y, jnp.ones(4))
+    assert float(loss_all) > float(loss_with)
+    # all-masked batch -> exactly 0, no NaN
+    assert float(masked_cross_entropy(logits, y, jnp.zeros(4))) == 0.0
+
+
+def test_train_step_grads_match_pure_jnp():
+    """End-to-end gradient check of the lowered function vs plain jnp."""
+    cfg = TINY_GCN
+    rng = np.random.default_rng(2)
+    flat = _random_inputs(cfg, rng)
+    out = make_train_step(cfg)(*flat)
+    specs = [n for n, _, _ in cfg.input_specs()]
+    x, p_in, p_out = flat[0], flat[1], flat[2]
+    h_stale = flat[3]
+    w0, b0, w1, b1 = flat[4], flat[5], flat[6], flat[7]
+    y, mask = flat[8], flat[9]
+    s = cfg.s_pad
+
+    def jnp_loss(w0, b0, w1, b1):
+        h0_in, h0_out = x[:s], x[s:]
+        z1 = p_in @ h0_in @ w0 + p_out @ h0_out @ w0 + b0[None, :]
+        h1 = jnp.maximum(z1, 0.0)
+        logits = p_in @ h1 @ w1 + p_out @ h_stale @ w1 + b1[None, :]
+        return masked_cross_entropy(logits, y, mask)
+
+    ref_grads = jax.grad(jnp_loss, argnums=(0, 1, 2, 3))(w0, b0, w1, b1)
+    got = dict(zip([n for n, _, _ in cfg.output_specs("train")], out))
+    np.testing.assert_allclose(
+        float(got["loss"]), float(jnp_loss(w0, b0, w1, b1)), rtol=1e-4
+    )
+    for name, rg in zip(
+        ["grad_l0_w", "grad_l0_b", "grad_l1_w", "grad_l1_b"], ref_grads
+    ):
+        np.testing.assert_allclose(got[name], rg, rtol=1e-3, atol=1e-5)
+
+
+@pytest.mark.parametrize("cfg", [TINY_GCN, TINY_GAT], ids=lambda c: c.name)
+def test_padding_invariance(cfg):
+    """Zero-padded rows (x=0, P rows/cols=0, mask=0) must not change the
+    loss, the gradients, or the real rows of logits/reps."""
+    rng = np.random.default_rng(3)
+    flat = _random_inputs(cfg, rng)
+    s, b = cfg.s_pad, cfg.b_pad
+    s_real, b_real = 10, 9  # rows beyond these are padding
+
+    def padded(flat):
+        out = []
+        for val, (name, shape, dtype) in zip(flat, cfg.input_specs()):
+            v = np.asarray(val).copy()
+            if name == "x":
+                v[s_real:s] = 0
+                v[s + b_real:] = 0
+            elif name == "p_in":
+                v[s_real:, :] = 0
+                v[:, s_real:] = 0
+                if cfg.model == "gat":
+                    ii = np.arange(s_real, s)
+                    v[ii, ii] = 1.0  # keep self-loop on padded rows
+            elif name == "p_out":
+                v[s_real:, :] = 0
+                v[:, b_real:] = 0
+            elif name.startswith("h_stale"):
+                v[b_real:] = 0
+            elif name == "mask":
+                v[s_real:] = 0
+            out.append(jnp.asarray(v))
+        return out
+
+    base = padded(flat)
+    out1 = make_train_step(cfg)(*base)
+    # now perturb ONLY padded regions of x / stale; results must not move
+    pert = []
+    for val, (name, shape, dtype) in zip(base, cfg.input_specs()):
+        v = np.asarray(val).copy()
+        if name == "x":
+            v[s + b_real:] += 7.7  # padded halo rows
+        elif name.startswith("h_stale"):
+            v[b_real:] -= 3.3
+        pert.append(jnp.asarray(v))
+    out2 = make_train_step(cfg)(*pert)
+    names = [n for n, _, _ in cfg.output_specs("train")]
+    for name, a, b_ in zip(names, out1, out2):
+        a, b_ = np.asarray(a), np.asarray(b_)
+        if name == "logits" or name.startswith("rep_"):
+            np.testing.assert_allclose(
+                a[:s_real], b_[:s_real], rtol=1e-4, atol=1e-5, err_msg=name
+            )
+        else:
+            np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-5, err_msg=name)
+
+
+def test_manifest_serialization_round_trip():
+    cfg = TINY_GCN
+    m = cfg.to_manifest("train", "x.hlo.txt")
+    assert m["kind"] == "train"
+    assert m["act"] == "relu"
+    assert [i["name"] for i in m["inputs"]][:4] == ["x", "p_in", "p_out", "h_stale_0"]
+    assert m["inputs"][-1]["name"] == "mask"
+    assert m["outputs"][0]["name"] == "loss"
+    assert m["outputs"][-1]["name"] == "grad_l1_b"

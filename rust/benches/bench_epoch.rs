@@ -1,0 +1,33 @@
+//! End-to-end epoch benchmark: one full synchronous training epoch per
+//! method (the quantity behind Table 1's speedup column and Fig. 4),
+//! measured in *wall-clock* on this host.  Virtual-clock epoch times are
+//! reported alongside for the cost-model cross-check.
+
+#[path = "harness.rs"]
+mod harness;
+
+use digest::config::{Method, RunConfig};
+use digest::coordinator::{run_with_context, TrainContext};
+use harness::bench;
+
+fn main() {
+    for ds in ["karate", "flickr-s"] {
+        for method in Method::all() {
+            let mut cfg = RunConfig::default();
+            cfg.dataset = ds.into();
+            cfg.parts = if ds == "karate" { 2 } else { 4 };
+            cfg.epochs = 1;
+            cfg.eval_every = 1000; // exclude evaluation from the epoch cost
+            cfg.method = method;
+            let ctx = TrainContext::new(cfg).unwrap();
+            // warm executable cache
+            run_with_context(&ctx).unwrap();
+            let mut last_vtime = 0.0;
+            bench(&format!("epoch {ds} {}", method.as_str()), || {
+                let r = run_with_context(&ctx).unwrap();
+                last_vtime = r.avg_epoch_vtime();
+            });
+            println!("    -> virtual epoch time: {last_vtime:.6}s");
+        }
+    }
+}

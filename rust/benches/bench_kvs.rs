@@ -1,0 +1,50 @@
+//! KVS micro-benchmarks: pull/push throughput at the row sizes the
+//! datasets actually use, plus shard-count scaling under contention.
+//! (§3.3's "parallel I/O at node granularity" claim, measured.)
+
+#[path = "harness.rs"]
+mod harness;
+
+use digest::kvs::RepStore;
+use digest::tensor::Matrix;
+use harness::{bench, throughput};
+
+fn main() {
+    let d = 64; // hidden dim of every dataset config
+    for &n_nodes in &[256usize, 1024] {
+        let kvs = RepStore::new(16);
+        let nodes: Vec<u32> = (0..n_nodes as u32).collect();
+        let reps = Matrix::from_fn(n_nodes, d, |r, c| (r * d + c) as f32);
+
+        let r = bench(&format!("kvs push {n_nodes}x{d}"), || {
+            kvs.push(0, &nodes, &reps, 1);
+        });
+        println!("    -> {:.1} Mrows/s", throughput(&r, n_nodes as u64) / 1e6);
+
+        let r = bench(&format!("kvs pull {n_nodes}x{d}"), || {
+            kvs.pull(0, &nodes, d, n_nodes)
+        });
+        println!("    -> {:.1} Mrows/s", throughput(&r, n_nodes as u64) / 1e6);
+    }
+
+    // shard scaling under 4-thread contention
+    for &shards in &[1usize, 4, 16] {
+        let kvs = std::sync::Arc::new(RepStore::new(shards));
+        let r = bench(&format!("kvs contended pull+push, {shards} shards"), || {
+            let mut handles = Vec::new();
+            for t in 0..4u32 {
+                let kvs = kvs.clone();
+                handles.push(std::thread::spawn(move || {
+                    let nodes: Vec<u32> = (t * 512..t * 512 + 256).collect();
+                    let reps = Matrix::zeros(256, 64);
+                    kvs.push(0, &nodes, &reps, 1);
+                    kvs.pull(0, &nodes, 64, 256);
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        println!("    -> {:.0} rows/s aggregate", throughput(&r, 4 * 512));
+    }
+}

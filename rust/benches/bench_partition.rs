@@ -1,0 +1,39 @@
+//! Partitioner benchmarks: multilevel METIS-style vs BFS vs random on
+//! the real dataset graphs, reporting time and cut quality together
+//! (speed is meaningless without the cut it buys).
+
+#[path = "harness.rs"]
+mod harness;
+
+use digest::graph::registry::load;
+use digest::partition::{partition, quality, PartitionAlgo};
+use harness::bench;
+
+fn main() {
+    for ds_name in ["arxiv-s", "products-s"] {
+        let ds = load(ds_name, 42).unwrap();
+        for algo in [PartitionAlgo::Metis, PartitionAlgo::Bfs, PartitionAlgo::Random] {
+            let g = &ds.graph;
+            bench(&format!("partition {ds_name} k=4 {algo:?}"), || {
+                partition(g, 4, algo, 42)
+            });
+            let p = partition(g, 4, algo, 42);
+            let q = quality::evaluate(g, &p);
+            println!(
+                "    -> cut {} ({:.1}%), balance {:.3}, halo ratio {:.1}%",
+                q.edge_cut,
+                100.0 * q.cut_ratio,
+                q.balance,
+                100.0 * q.avg_halo_ratio
+            );
+        }
+    }
+    // scaling in k
+    let ds = load("products-s", 42).unwrap();
+    for k in [2usize, 8, 16] {
+        let g = &ds.graph;
+        bench(&format!("partition products-s metis k={k}"), || {
+            partition(g, k, PartitionAlgo::Metis, 42)
+        });
+    }
+}

@@ -1,0 +1,59 @@
+//! Runtime benchmarks: literal packing and AOT step execution latency —
+//! the two halves of the per-step hot path (everything else in an epoch
+//! is scheduling).  One row per dataset-scale artifact.
+
+#[path = "harness.rs"]
+mod harness;
+
+use digest::config::RunConfig;
+use digest::coordinator::context::TrainContext;
+use digest::coordinator::worker::{exec_train, WorkerState};
+use digest::runtime::{init_params, pack_params, pack_step_inputs};
+use harness::bench;
+
+fn main() {
+    for (ds, parts) in [("karate", 2usize), ("arxiv-s", 4), ("flickr-s", 4)] {
+        let mut cfg = RunConfig::default();
+        cfg.dataset = ds.into();
+        cfg.parts = parts;
+        let ctx = TrainContext::new(cfg).unwrap();
+        let w = WorkerState::new(&ctx, 0);
+        let params = init_params(&ctx.spec, 0);
+        let plan = &ctx.plans[0];
+
+        // BEFORE (§Perf): naive full repack of every input per step
+        bench(&format!("pack naive (all inputs) {ds}"), || {
+            pack_step_inputs(&ctx.spec, plan, &w.stale, &params, &plan.train_mask).unwrap()
+        });
+        // AFTER (§Perf): cached statics+stale, only params repacked
+        bench(&format!("pack cached (params only) {ds}"), || {
+            pack_params(&ctx.spec, &params).unwrap()
+        });
+        println!(
+            "    -> input bytes/step: {} (params only: {})",
+            digest::util::human_bytes(ctx.spec.input_bytes() as u64),
+            digest::util::human_bytes(ctx.param_bytes()),
+        );
+
+        // full train-step execution, naive path (pack + execute + unpack)
+        let inputs =
+            pack_step_inputs(&ctx.spec, plan, &w.stale, &params, &plan.train_mask).unwrap();
+        ctx.rt.execute(&ctx.artifact, "train", &inputs).unwrap(); // warm cache
+        bench(&format!("execute train step (naive) {ds}"), || {
+            ctx.rt.execute(&ctx.artifact, "train", &inputs).unwrap()
+        });
+        // full train-step, cached hot path (what the coordinator runs)
+        let param_lits = pack_params(&ctx.spec, &params).unwrap();
+        bench(&format!("execute train step (cached) {ds}"), || {
+            exec_train(&ctx, &w, &param_lits).unwrap()
+        });
+        let flops = ctx.train_flops(0);
+        let stats = ctx.rt.stats();
+        let per_exec = stats.execute_seconds / stats.executions as f64;
+        println!(
+            "    -> ~{:.2} GFLOP/step, {:.2} GFLOP/s sustained",
+            flops as f64 / 1e9,
+            flops as f64 / per_exec / 1e9
+        );
+    }
+}

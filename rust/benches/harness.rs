@@ -1,0 +1,52 @@
+//! Minimal criterion-style bench harness (criterion is not in the
+//! offline crate cache — see Cargo.toml).  Each `cargo bench` target is
+//! a plain binary using `bench(name, f)`: warmup, adaptive iteration
+//! count targeting ~1 s of measurement, and mean/p50/p95 reporting.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchReport {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+/// Run `f` repeatedly and report per-iteration timing.
+pub fn bench<R>(name: &str, mut f: impl FnMut() -> R) -> BenchReport {
+    // warmup + calibration
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let target = Duration::from_millis(800);
+    let iters = (target.as_nanos() / once.as_nanos()).clamp(5, 10_000) as u64;
+
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed());
+    }
+    samples.sort_unstable();
+    let mean = samples.iter().sum::<Duration>() / iters as u32;
+    let p50 = samples[samples.len() / 2];
+    let p95 = samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)];
+    let report = BenchReport {
+        name: name.to_string(),
+        iters,
+        mean,
+        p50,
+        p95,
+    };
+    println!(
+        "{:<48} {:>8} iters   mean {:>12?}   p50 {:>12?}   p95 {:>12?}",
+        report.name, report.iters, report.mean, report.p50, report.p95
+    );
+    report
+}
+
+/// Throughput helper: items/sec from a report.
+pub fn throughput(report: &BenchReport, items_per_iter: u64) -> f64 {
+    items_per_iter as f64 / report.mean.as_secs_f64()
+}

@@ -1,0 +1,18 @@
+//! Baseline distributed-GNN training frameworks (paper §5.1).
+//!
+//! * [`llcg`] — LLCG-like **partition-based** training: cross-subgraph
+//!   edges are dropped during local training (zero communication), and a
+//!   central server periodically performs a *global correction* step on
+//!   a sampled mini-batch with full 1-hop neighbor information.
+//! * [`propagation`] — DGL-like **propagation-based** training: fresh
+//!   representations are exchanged every epoch (a refresh pass per
+//!   hidden layer), giving exact full-graph gradients at the price of
+//!   per-epoch, per-layer communication plus extra forward compute —
+//!   the neighbor-explosion cost DIGEST avoids.
+//!
+//! Both reuse the DIGEST worker/runtime machinery so the comparison
+//! isolates the *strategy* (what is communicated, when) rather than
+//! implementation details.
+
+pub mod llcg;
+pub mod propagation;

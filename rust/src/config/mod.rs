@@ -1,0 +1,300 @@
+//! Run configuration: every knob of a training run, with JSON loading
+//! and CLI-style `key=value` overrides.
+//!
+//! A downstream user drives the system either from a JSON config file
+//! (`digest train --config run.json`) or entirely from flags; the
+//! experiment harness builds these programmatically.
+
+use crate::gnn::ModelKind;
+use crate::partition::PartitionAlgo;
+use crate::ps::optimizer::OptimizerKind;
+use crate::util::json::Json;
+use crate::{eyre, Result};
+
+/// Training mode (paper §3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Synchronous DIGEST (Alg. 1).
+    Sync,
+    /// Asynchronous DIGEST-A (non-blocking).
+    Async,
+}
+
+impl std::str::FromStr for Mode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "sync" => Ok(Mode::Sync),
+            "async" => Ok(Mode::Async),
+            _ => Err(eyre!("unknown mode {s:?} (sync|async)")),
+        }
+    }
+}
+
+/// Which training framework to run (DIGEST vs the baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Digest,
+    DigestAsync,
+    /// LLCG-like partition-based baseline (edge dropping + global
+    /// server correction).
+    Llcg,
+    /// DGL-like propagation-based baseline (fresh per-epoch exchange).
+    Propagation,
+}
+
+impl Method {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Method::Digest => "digest",
+            Method::DigestAsync => "digest-a",
+            Method::Llcg => "llcg",
+            Method::Propagation => "dgl",
+        }
+    }
+
+    pub fn all() -> [Method; 4] {
+        [Method::Llcg, Method::Propagation, Method::Digest, Method::DigestAsync]
+    }
+}
+
+impl std::str::FromStr for Method {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "digest" => Ok(Method::Digest),
+            "digest-a" | "digest_async" => Ok(Method::DigestAsync),
+            "llcg" => Ok(Method::Llcg),
+            "dgl" | "propagation" => Ok(Method::Propagation),
+            _ => Err(eyre!("unknown method {s:?} (digest|digest-a|llcg|dgl)")),
+        }
+    }
+}
+
+/// Full configuration of a training run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub dataset: String,
+    pub model: ModelKind,
+    /// Number of partitions / workers (the paper's M).
+    pub parts: usize,
+    pub partitioner: PartitionAlgo,
+    pub method: Method,
+    pub epochs: usize,
+    /// Representation synchronization interval N (Alg. 1).
+    pub sync_interval: usize,
+    pub lr: f32,
+    pub optimizer: OptimizerKind,
+    pub weight_decay: f32,
+    /// Overlap pull/push with layer compute (Fig. 2).
+    pub overlap: bool,
+    /// Evaluate global val/test F1 every `eval_every` epochs.
+    pub eval_every: usize,
+    pub seed: u64,
+    /// Straggler injection: worker id + delay range in virtual seconds.
+    pub straggler: Option<(usize, f64, f64)>,
+    /// Artifact directory (default "artifacts").
+    pub artifact_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: "karate".into(),
+            model: ModelKind::Gcn,
+            parts: 2,
+            partitioner: PartitionAlgo::Metis,
+            method: Method::Digest,
+            epochs: 100,
+            sync_interval: 10,
+            lr: 0.01,
+            optimizer: OptimizerKind::Adam,
+            weight_decay: 0.0,
+            overlap: true,
+            eval_every: 5,
+            seed: 42,
+            straggler: None,
+            artifact_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse from a JSON object (all fields optional, defaults apply).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut c = RunConfig::default();
+        if let Some(v) = j.opt("dataset") {
+            c.dataset = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.opt("model") {
+            c.model = v.as_str()?.parse()?;
+        }
+        if let Some(v) = j.opt("parts") {
+            c.parts = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("partitioner") {
+            c.partitioner = v.as_str()?.parse()?;
+        }
+        if let Some(v) = j.opt("method") {
+            c.method = v.as_str()?.parse()?;
+        }
+        if let Some(v) = j.opt("epochs") {
+            c.epochs = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("sync_interval") {
+            c.sync_interval = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("lr") {
+            c.lr = v.as_f64()? as f32;
+        }
+        if let Some(v) = j.opt("optimizer") {
+            c.optimizer = v.as_str()?.parse()?;
+        }
+        if let Some(v) = j.opt("weight_decay") {
+            c.weight_decay = v.as_f64()? as f32;
+        }
+        if let Some(v) = j.opt("overlap") {
+            c.overlap = v.as_bool()?;
+        }
+        if let Some(v) = j.opt("eval_every") {
+            c.eval_every = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("seed") {
+            c.seed = v.as_f64()? as u64;
+        }
+        if let Some(v) = j.opt("artifact_dir") {
+            c.artifact_dir = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.opt("straggler") {
+            let arr = v.as_arr()?;
+            if arr.len() != 3 {
+                return Err(eyre!("straggler must be [worker, lo, hi]"));
+            }
+            c.straggler = Some((arr[0].as_usize()?, arr[1].as_f64()?, arr[2].as_f64()?));
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Apply one `key=value` override (CLI).
+    pub fn apply_override(&mut self, kv: &str) -> Result<()> {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| eyre!("override {kv:?} must be key=value"))?;
+        match k {
+            "dataset" => self.dataset = v.to_string(),
+            "model" => self.model = v.parse()?,
+            "parts" => self.parts = v.parse().map_err(|e| eyre!("parts: {e}"))?,
+            "partitioner" => self.partitioner = v.parse()?,
+            "method" => self.method = v.parse()?,
+            "epochs" => self.epochs = v.parse().map_err(|e| eyre!("epochs: {e}"))?,
+            "sync_interval" => {
+                self.sync_interval = v.parse().map_err(|e| eyre!("sync_interval: {e}"))?
+            }
+            "lr" => self.lr = v.parse().map_err(|e| eyre!("lr: {e}"))?,
+            "optimizer" => self.optimizer = v.parse()?,
+            "weight_decay" => {
+                self.weight_decay = v.parse().map_err(|e| eyre!("weight_decay: {e}"))?
+            }
+            "overlap" => self.overlap = v.parse().map_err(|e| eyre!("overlap: {e}"))?,
+            "eval_every" => {
+                self.eval_every = v.parse().map_err(|e| eyre!("eval_every: {e}"))?
+            }
+            "seed" => self.seed = v.parse().map_err(|e| eyre!("seed: {e}"))?,
+            "artifact_dir" => self.artifact_dir = v.to_string(),
+            _ => return Err(eyre!("unknown config key {k:?}")),
+        }
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.parts == 0 {
+            return Err(eyre!("parts must be >= 1"));
+        }
+        if self.sync_interval == 0 {
+            return Err(eyre!("sync_interval must be >= 1"));
+        }
+        if self.epochs == 0 {
+            return Err(eyre!("epochs must be >= 1"));
+        }
+        if !(self.lr > 0.0) {
+            return Err(eyre!("lr must be positive"));
+        }
+        Ok(())
+    }
+
+    /// The artifact name this run needs (e.g. "arxiv_s_gcn").
+    pub fn artifact_name(&self) -> Result<String> {
+        let spec = crate::graph::registry::spec(&self.dataset)?;
+        Ok(format!("{}_{}", spec.artifact, self.model.as_str()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn from_json_full() {
+        let j = Json::parse(
+            r#"{
+                "dataset": "arxiv-s", "model": "gat", "parts": 4,
+                "partitioner": "bfs", "method": "digest-a", "epochs": 50,
+                "sync_interval": 5, "lr": 0.005, "optimizer": "sgd",
+                "overlap": false, "eval_every": 10, "seed": 7,
+                "straggler": [1, 8.0, 10.0]
+            }"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.dataset, "arxiv-s");
+        assert_eq!(c.model, ModelKind::Gat);
+        assert_eq!(c.parts, 4);
+        assert_eq!(c.partitioner, PartitionAlgo::Bfs);
+        assert_eq!(c.method, Method::DigestAsync);
+        assert_eq!(c.sync_interval, 5);
+        assert_eq!(c.optimizer, OptimizerKind::Sgd);
+        assert!(!c.overlap);
+        assert_eq!(c.straggler, Some((1, 8.0, 10.0)));
+    }
+
+    #[test]
+    fn from_json_partial_uses_defaults() {
+        let j = Json::parse(r#"{"dataset": "karate"}"#).unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.epochs, RunConfig::default().epochs);
+    }
+
+    #[test]
+    fn overrides_apply_and_validate() {
+        let mut c = RunConfig::default();
+        c.apply_override("epochs=10").unwrap();
+        c.apply_override("method=llcg").unwrap();
+        assert_eq!(c.epochs, 10);
+        assert_eq!(c.method, Method::Llcg);
+        assert!(c.apply_override("epochs=0").is_err());
+        assert!(c.apply_override("bogus=1").is_err());
+        assert!(c.apply_override("noequals").is_err());
+    }
+
+    #[test]
+    fn artifact_name_resolution() {
+        let mut c = RunConfig::default();
+        c.dataset = "products-s".into();
+        c.model = ModelKind::Gat;
+        assert_eq!(c.artifact_name().unwrap(), "products_s_gat");
+    }
+
+    #[test]
+    fn bad_json_values_rejected() {
+        let j = Json::parse(r#"{"parts": 0}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"model": "rnn"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! Training context: everything a scheduler needs, wired up once.
+
+use crate::config::RunConfig;
+use crate::costmodel::CostModel;
+use crate::gnn::{self, ModelKind};
+use crate::graph::registry::{load, spec as dataset_spec};
+use crate::graph::{Dataset, Split};
+use crate::halo::{build_all_plans, PropKind, SubgraphPlan};
+use crate::kvs::RepStore;
+use crate::partition::{partition, Partition};
+use crate::runtime::{ArtifactSpec, Runtime};
+use crate::tensor::Matrix;
+use crate::Result;
+
+/// Immutable per-run context shared by all schedulers.
+pub struct TrainContext {
+    pub cfg: RunConfig,
+    pub ds: Dataset,
+    pub partition: Partition,
+    pub plans: Vec<SubgraphPlan>,
+    pub spec: ArtifactSpec,
+    pub rt: Runtime,
+    pub kvs: RepStore,
+    pub cost: CostModel,
+    /// Artifact name for runtime execution.
+    pub artifact: String,
+    /// Optional warm-start parameters (checkpoint resume); schedulers
+    /// use these instead of fresh Glorot init when present.
+    pub warm_start: Option<Vec<Matrix>>,
+}
+
+impl TrainContext {
+    pub fn new(cfg: RunConfig) -> Result<Self> {
+        cfg.validate()?;
+        let ds = load(&cfg.dataset, cfg.seed)?;
+        let mut part = partition(&ds.graph, cfg.parts, cfg.partitioner, cfg.seed);
+        let artifact = cfg.artifact_name()?;
+        let rt = Runtime::new(&cfg.artifact_dir)?;
+        let spec = rt.manifest.get(&artifact, "train")?.clone();
+        // partitions must fit the artifact's padded shape
+        crate::partition::enforce_cap(&ds.graph, &mut part, spec.s_pad);
+        let kind = match cfg.model {
+            ModelKind::Gcn => PropKind::GcnNormalized,
+            ModelKind::Gat => PropKind::GatMask,
+        };
+        let plans = build_all_plans(&ds, &part, spec.s_pad, spec.b_pad, kind)?;
+        let mut cost = CostModel::default();
+        cost.straggler = cfg.straggler;
+        let _ = dataset_spec(&cfg.dataset)?; // validated name
+        Ok(TrainContext {
+            cfg,
+            ds,
+            partition: part,
+            plans,
+            spec,
+            rt,
+            kvs: RepStore::new(16),
+            cost,
+            artifact,
+            warm_start: None,
+        })
+    }
+
+    /// Bytes of one full parameter set (PS fetch or gradient submit).
+    pub fn param_bytes(&self) -> u64 {
+        let off = self.spec.param_input_offset();
+        self.spec.inputs[off..off + self.spec.n_params()]
+            .iter()
+            .map(|t| (t.elements() * 4) as u64)
+            .sum()
+    }
+
+    /// FLOPs of one train step on plan m (forward + backward ~ 3x fwd).
+    pub fn train_flops(&self, m: usize) -> u64 {
+        3 * self.plans[m].forward_flops(&self.spec.dims())
+    }
+
+    /// FLOPs of one eval (forward-only) step on plan m.
+    pub fn eval_flops(&self, m: usize) -> u64 {
+        self.plans[m].forward_flops(&self.spec.dims())
+    }
+
+    /// Global evaluation with the pure-Rust oracle: (val_f1, test_f1).
+    pub fn global_eval(&self, params: &[Matrix]) -> Result<(f64, f64)> {
+        let (logits, _) = gnn::forward(
+            self.cfg.model,
+            &self.ds.graph,
+            &self.ds.features,
+            params,
+            self.spec.normalize,
+        )?;
+        let preds = logits.argmax_rows();
+        let val = self.ds.nodes_in_split(Split::Val);
+        let test = self.ds.nodes_in_split(Split::Test);
+        Ok((
+            gnn::metrics::micro_f1(&preds, &self.ds.labels, &val),
+            gnn::metrics::micro_f1(&preds, &self.ds.labels, &test),
+        ))
+    }
+
+    /// Number of hidden (stale-exchanged) layers = L - 1.
+    pub fn n_hidden(&self) -> usize {
+        self.spec.layers - 1
+    }
+
+    /// Initial parameters: warm start if set, else seeded Glorot init.
+    pub fn initial_params(&self) -> Vec<Matrix> {
+        match &self.warm_start {
+            Some(p) => p.clone(),
+            None => crate::runtime::init_params(&self.spec, self.cfg.seed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::init_params;
+
+    #[test]
+    fn context_wires_up_karate() {
+        let ctx = TrainContext::new(RunConfig::default()).unwrap();
+        assert_eq!(ctx.plans.len(), 2);
+        assert_eq!(ctx.spec.s_pad, 32);
+        assert!(ctx.param_bytes() > 0);
+        assert!(ctx.train_flops(0) > ctx.eval_flops(0));
+        let params = init_params(&ctx.spec, 0);
+        let (val, test) = ctx.global_eval(&params).unwrap();
+        assert!((0.0..=1.0).contains(&val));
+        assert!((0.0..=1.0).contains(&test));
+    }
+
+    #[test]
+    fn gat_context_uses_mask_plans() {
+        let mut cfg = RunConfig::default();
+        cfg.model = ModelKind::Gat;
+        let ctx = TrainContext::new(cfg).unwrap();
+        // GAT masks are binary with self-loops on all diag rows
+        for i in 0..ctx.spec.s_pad {
+            assert_eq!(ctx.plans[0].p_in.get(i, i), 1.0);
+        }
+    }
+}

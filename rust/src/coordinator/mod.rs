@@ -1,0 +1,59 @@
+//! The DIGEST coordinator — the paper's Layer-3 contribution.
+//!
+//! * [`context`] — wires dataset, partitioner, halo plans, PJRT runtime,
+//!   KVS and cost model into a [`context::TrainContext`];
+//! * [`worker`] — per-worker step execution (KVS pull/push + AOT step);
+//! * [`sync`] — synchronous DIGEST (Algorithm 1);
+//! * [`async_`] — asynchronous DIGEST-A (discrete-event, non-blocking);
+//! * [`telemetry`] — the timeline records every figure is drawn from.
+//!
+//! `run` dispatches on the configured method, including the two baseline
+//! frameworks in [`crate::baselines`].
+
+pub mod async_;
+pub mod context;
+pub mod sync;
+pub mod telemetry;
+pub mod worker;
+
+pub use context::TrainContext;
+pub use telemetry::{EpochBreakdown, LogPoint, RunResult};
+
+use crate::config::{Method, RunConfig};
+use crate::Result;
+
+/// Run a full training job per the config; returns the telemetry record.
+pub fn run(cfg: RunConfig) -> Result<RunResult> {
+    let ctx = TrainContext::new(cfg)?;
+    run_with_context(&ctx)
+}
+
+/// Run using an already-built context (the harness reuses contexts).
+pub fn run_with_context(ctx: &TrainContext) -> Result<RunResult> {
+    match ctx.cfg.method {
+        Method::Digest => sync::run_sync(ctx),
+        Method::DigestAsync => async_::run_async(ctx),
+        Method::Llcg => crate::baselines::llcg::run_llcg(ctx),
+        Method::Propagation => crate::baselines::propagation::run_propagation(ctx),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Method;
+
+    #[test]
+    fn dispatch_runs_all_methods_on_karate() {
+        for method in Method::all() {
+            let mut cfg = RunConfig::default();
+            cfg.epochs = 4;
+            cfg.eval_every = 2;
+            cfg.method = method;
+            let res = run(cfg).unwrap();
+            assert_eq!(res.method, method.as_str());
+            assert!(res.total_vtime > 0.0, "{method:?}");
+            assert!(res.points.iter().all(|p| p.train_loss.is_finite()));
+        }
+    }
+}

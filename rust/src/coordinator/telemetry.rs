@@ -1,0 +1,191 @@
+//! Run telemetry: the timeline every experiment figure is drawn from.
+//!
+//! Each training run produces a `RunResult` with per-epoch `LogPoint`s
+//! on the *virtual* clock (see `costmodel`) plus aggregate statistics.
+//! The experiment harness serializes these to CSV/JSON under `results/`.
+
+use crate::kvs::KvsSnapshot;
+use crate::ps::DelayStats;
+use crate::util::json::Json;
+
+/// One sampled point on the training timeline.
+#[derive(Debug, Clone)]
+pub struct LogPoint {
+    /// Global epoch (sync) or update/M (async).
+    pub epoch: usize,
+    /// Virtual seconds since training start.
+    pub vtime: f64,
+    /// Real wall-clock seconds since start (for EXPERIMENTS.md §Perf).
+    pub wall: f64,
+    /// Mean masked training loss across workers this epoch.
+    pub train_loss: f64,
+    /// Global validation micro-F1 (NaN when not evaluated this epoch).
+    pub val_f1: f64,
+    /// Global test micro-F1 (NaN when not evaluated).
+    pub test_f1: f64,
+    /// Cumulative KVS bytes moved so far.
+    pub kvs_bytes: u64,
+    /// Cumulative PS bytes moved so far.
+    pub ps_bytes: u64,
+}
+
+/// Per-epoch virtual time decomposition (Fig. 4's bars).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EpochBreakdown {
+    pub compute: f64,
+    pub kvs_io: f64,
+    pub ps_io: f64,
+    pub straggle: f64,
+    /// Critical-path epoch time (after overlap).
+    pub total: f64,
+}
+
+/// The full record of one training run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub method: String,
+    pub dataset: String,
+    pub model: String,
+    pub parts: usize,
+    pub sync_interval: usize,
+    pub seed: u64,
+    pub points: Vec<LogPoint>,
+    pub epochs: Vec<EpochBreakdown>,
+    pub final_val_f1: f64,
+    pub final_test_f1: f64,
+    pub best_val_f1: f64,
+    pub total_vtime: f64,
+    pub total_wall: f64,
+    pub kvs: KvsSnapshot,
+    pub delay: DelayStats,
+    /// Final aggregated parameters (for checkpointing / further eval).
+    pub final_params: Vec<crate::tensor::Matrix>,
+}
+
+impl RunResult {
+    /// Mean virtual epoch time (the paper's "training time/epoch").
+    pub fn avg_epoch_vtime(&self) -> f64 {
+        if self.epochs.is_empty() {
+            0.0
+        } else {
+            self.total_vtime / self.epochs.len() as f64
+        }
+    }
+
+    /// Virtual time to first reach `target` validation F1 (None if never).
+    pub fn time_to_f1(&self, target: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| p.val_f1.is_finite() && p.val_f1 >= target)
+            .map(|p| p.vtime)
+    }
+
+    /// CSV of the timeline (header + one row per point).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "epoch,vtime,wall,train_loss,val_f1,test_f1,kvs_bytes,ps_bytes\n",
+        );
+        for p in &self.points {
+            s.push_str(&format!(
+                "{},{:.6},{:.3},{:.6},{:.4},{:.4},{},{}\n",
+                p.epoch, p.vtime, p.wall, p.train_loss, p.val_f1, p.test_f1,
+                p.kvs_bytes, p.ps_bytes
+            ));
+        }
+        s
+    }
+
+    /// Summary JSON (one object per run, used by the harness).
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::str(self.method.clone())),
+            ("dataset", Json::str(self.dataset.clone())),
+            ("model", Json::str(self.model.clone())),
+            ("parts", Json::num(self.parts as f64)),
+            ("sync_interval", Json::num(self.sync_interval as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("final_val_f1", Json::num(self.final_val_f1)),
+            ("final_test_f1", Json::num(self.final_test_f1)),
+            ("best_val_f1", Json::num(self.best_val_f1)),
+            ("total_vtime", Json::num(self.total_vtime)),
+            ("total_wall", Json::num(self.total_wall)),
+            ("avg_epoch_vtime", Json::num(self.avg_epoch_vtime())),
+            ("kvs_bytes", Json::num(self.kvs.total_bytes() as f64)),
+            ("mean_delay", Json::num(self.delay.mean_delay())),
+            ("max_delay", Json::num(self.delay.max_delay as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result_with_points(points: Vec<LogPoint>) -> RunResult {
+        RunResult {
+            method: "digest".into(),
+            dataset: "karate".into(),
+            model: "gcn".into(),
+            parts: 2,
+            sync_interval: 10,
+            seed: 0,
+            points,
+            epochs: vec![EpochBreakdown::default(); 3],
+            final_val_f1: 0.8,
+            final_test_f1: 0.75,
+            best_val_f1: 0.82,
+            total_vtime: 3.0,
+            total_wall: 1.0,
+            kvs: KvsSnapshot::default(),
+            delay: crate::ps::DelayStats::default(),
+            final_params: Vec::new(),
+        }
+    }
+
+    fn pt(epoch: usize, vtime: f64, val: f64) -> LogPoint {
+        LogPoint {
+            epoch,
+            vtime,
+            wall: 0.0,
+            train_loss: 1.0,
+            val_f1: val,
+            test_f1: f64::NAN,
+            kvs_bytes: 0,
+            ps_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn avg_epoch_time() {
+        let r = result_with_points(vec![]);
+        assert!((r.avg_epoch_vtime() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_to_f1_finds_first_crossing() {
+        let r = result_with_points(vec![
+            pt(0, 0.5, 0.3),
+            pt(1, 1.0, f64::NAN),
+            pt(2, 1.5, 0.7),
+            pt(3, 2.0, 0.9),
+        ]);
+        assert_eq!(r.time_to_f1(0.6), Some(1.5));
+        assert_eq!(r.time_to_f1(0.95), None);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let r = result_with_points(vec![pt(0, 0.1, 0.5)]);
+        let csv = r.to_csv();
+        assert!(csv.starts_with("epoch,vtime"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn summary_json_parses_back() {
+        let r = result_with_points(vec![]);
+        let j = Json::parse(&r.summary_json().to_string()).unwrap();
+        assert_eq!(j.get("method").unwrap().as_str().unwrap(), "digest");
+        assert!((j.get("best_val_f1").unwrap().as_f64().unwrap() - 0.82).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,258 @@
+//! Per-worker step execution: KVS pull/push with virtual-time costing,
+//! and AOT train/eval step invocation.
+//!
+//! Workers are *logical* devices: numerics run through the real PJRT
+//! executable while time comes from the cost model (DESIGN.md §6.4), so
+//! one CPU reproduces the coordination behaviour of the paper's 8-GPU
+//! box.
+//!
+//! Hot-path note (§Perf): workers keep their static inputs (x, P_in,
+//! P_out, y, mask) and stale tensors as *pre-packed literals*; only
+//! parameters are re-packed per epoch (once, shared across workers) —
+//! see `runtime::pack_static_inputs` / `pack_stale` / `pack_params`.
+
+use crate::runtime::{
+    assemble_inputs, pack_stale, pack_static_inputs, parse_eval_output,
+    parse_train_output, EvalOutput, StaticInputs, TrainOutput,
+};
+use crate::tensor::Matrix;
+use crate::Result;
+
+use super::context::TrainContext;
+
+/// Mutable per-worker state across epochs.
+pub struct WorkerState {
+    pub id: usize,
+    /// Cached stale halo representations, one (b_pad, d_h) per hidden
+    /// layer; refreshed from the KVS every N epochs.
+    pub stale: Vec<Matrix>,
+    /// Pre-packed literals of `stale` (updated on every pull).
+    pub stale_lits: Vec<xla::Literal>,
+    /// Pre-packed static inputs (x, P_in, P_out, y, train mask).
+    pub statics: StaticInputs,
+    /// Local epoch counter (== global epoch in sync mode).
+    pub local_epoch: usize,
+    /// PS version of the params this worker last fetched (async delay).
+    pub fetched_version: u64,
+}
+
+impl WorkerState {
+    pub fn new(ctx: &TrainContext, id: usize) -> Self {
+        let plan = &ctx.plans[id];
+        let stale: Vec<Matrix> = (0..ctx.n_hidden())
+            .map(|_| Matrix::zeros(ctx.spec.b_pad, ctx.spec.d_h))
+            .collect();
+        let stale_lits = pack_stale(&ctx.spec, &stale).expect("stale packing");
+        let statics = pack_static_inputs(&ctx.spec, plan, &plan.train_mask)
+            .expect("static packing");
+        WorkerState {
+            id,
+            stale,
+            stale_lits,
+            statics,
+            local_epoch: 0,
+            fetched_version: 0,
+        }
+    }
+}
+
+/// Pull this worker's halo rows for every hidden layer; returns the
+/// virtual I/O seconds charged (per-layer latency + bytes/bw).
+pub fn pull_stale(ctx: &TrainContext, w: &mut WorkerState) -> f64 {
+    let plan = &ctx.plans[w.id];
+    let mut io = 0.0;
+    for l in 0..ctx.n_hidden() {
+        let (m, _info) = ctx
+            .kvs
+            .pull(l, &plan.halo, ctx.spec.d_h, ctx.spec.b_pad);
+        io += ctx
+            .cost
+            .comm_time((plan.halo.len() * ctx.spec.d_h * 4) as u64);
+        w.stale[l] = m;
+    }
+    w.stale_lits = pack_stale(&ctx.spec, &w.stale).expect("stale packing");
+    io
+}
+
+/// Push fresh in-subgraph reps to the KVS; returns virtual I/O seconds.
+pub fn push_reps(
+    ctx: &TrainContext,
+    w: &WorkerState,
+    reps: &[Matrix],
+    version: u64,
+) -> f64 {
+    let plan = &ctx.plans[w.id];
+    let mut io = 0.0;
+    for (l, r) in reps.iter().enumerate() {
+        ctx.kvs.push(l, &plan.own, r, version);
+        io += ctx
+            .cost
+            .comm_time((plan.own.len() * ctx.spec.d_h * 4) as u64);
+    }
+    io
+}
+
+/// Low-level cached-path train execution with explicit literal sets
+/// (used by the baselines and the Thm 1 instrumentation too).
+pub fn exec_train_with(
+    ctx: &TrainContext,
+    statics: &StaticInputs,
+    stale_lits: &[xla::Literal],
+    param_lits: &[xla::Literal],
+) -> Result<TrainOutput> {
+    let inputs = assemble_inputs(&ctx.spec, statics, stale_lits, param_lits);
+    let outs = ctx.rt.execute(&ctx.artifact, "train", &inputs)?;
+    parse_train_output(&ctx.spec, &outs)
+}
+
+/// Execute the AOT train step for worker w with pre-packed parameter
+/// literals; returns the parsed output plus the virtual compute seconds.
+pub fn exec_train(
+    ctx: &TrainContext,
+    w: &WorkerState,
+    param_lits: &[xla::Literal],
+) -> Result<(TrainOutput, f64)> {
+    let out = exec_train_with(ctx, &w.statics, &w.stale_lits, param_lits)?;
+    let vtime = ctx.cost.compute_time(w.id, ctx.train_flops(w.id));
+    Ok((out, vtime))
+}
+
+/// Execute the forward-only eval step (used by the propagation baseline
+/// for its per-epoch refresh pass and by distributed-inference demos).
+pub fn exec_eval(
+    ctx: &TrainContext,
+    w: &WorkerState,
+    param_lits: &[xla::Literal],
+) -> Result<(EvalOutput, f64)> {
+    let eval_spec = ctx.rt.manifest.get(&ctx.artifact, "eval")?.clone();
+    let inputs = assemble_inputs(&eval_spec, &w.statics, &w.stale_lits, param_lits);
+    let outs = ctx.rt.execute(&ctx.artifact, "eval", &inputs)?;
+    let out = parse_eval_output(&eval_spec, &outs)?;
+    let vtime = ctx.cost.compute_time(w.id, ctx.eval_flops(w.id));
+    Ok((out, vtime))
+}
+
+/// Per-layer decomposition of one worker epoch for the overlap model
+/// (Fig. 2): compute split evenly across L layers, I/O attributed to the
+/// layers it abuts.
+pub fn epoch_layer_times(
+    ctx: &TrainContext,
+    compute_total: f64,
+    pull_io: f64,
+    push_io: f64,
+) -> (Vec<f64>, Vec<f64>) {
+    let l = ctx.spec.layers;
+    let comp = vec![compute_total / l as f64; l];
+    let mut io = vec![0.0; l];
+    // pulls overlap the first layers' compute, pushes the last's
+    if l > 1 {
+        io[0] = pull_io;
+        io[l - 1] = push_io;
+    } else {
+        io[0] = pull_io + push_io;
+    }
+    (comp, io)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+    use crate::runtime::{init_params, pack_params, pack_step_inputs};
+
+    fn ctx() -> TrainContext {
+        TrainContext::new(RunConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn worker_round_trip_through_kvs() {
+        let ctx = ctx();
+        let mut w0 = WorkerState::new(&ctx, 0);
+        let w1 = WorkerState::new(&ctx, 1);
+        let params = init_params(&ctx.spec, 0);
+        let lits = pack_params(&ctx.spec, &params).unwrap();
+        // worker 1 trains and pushes; worker 0 pulls and must see rows
+        let (out, vt) = exec_train(&ctx, &w1, &lits).unwrap();
+        assert!(vt > 0.0);
+        assert!(out.loss.is_finite());
+        let io_push = push_reps(&ctx, &w1, &out.reps, 1);
+        assert!(io_push > 0.0);
+        let io_pull = pull_stale(&ctx, &mut w0);
+        assert!(io_pull > 0.0);
+        // w0's halo nodes owned by w1 must now be non-zero (if any overlap)
+        let plan0 = &ctx.plans[0];
+        let owned_by_1: Vec<usize> = plan0
+            .halo
+            .iter()
+            .enumerate()
+            .filter(|(_, h)| ctx.plans[1].own.contains(h))
+            .map(|(j, _)| j)
+            .collect();
+        assert!(!owned_by_1.is_empty());
+        let any_nonzero = owned_by_1
+            .iter()
+            .any(|&j| w0.stale[0].row(j).iter().any(|&v| v != 0.0));
+        assert!(any_nonzero, "pulled stale rows all zero");
+    }
+
+    #[test]
+    fn eval_step_runs() {
+        let ctx = ctx();
+        let w = WorkerState::new(&ctx, 0);
+        let params = init_params(&ctx.spec, 0);
+        let lits = pack_params(&ctx.spec, &params).unwrap();
+        let (out, vt) = exec_eval(&ctx, &w, &lits).unwrap();
+        assert_eq!(out.logits.rows, ctx.spec.s_pad);
+        assert!(vt > 0.0);
+    }
+
+    #[test]
+    fn cached_path_matches_naive_packing() {
+        // the §Perf hot path must be numerically identical to the naive
+        // re-pack-everything path
+        let ctx = ctx();
+        let w = WorkerState::new(&ctx, 0);
+        let params = init_params(&ctx.spec, 3);
+        let lits = pack_params(&ctx.spec, &params).unwrap();
+        let (cached, _) = exec_train(&ctx, &w, &lits).unwrap();
+
+        let plan = &ctx.plans[0];
+        let naive_inputs =
+            pack_step_inputs(&ctx.spec, plan, &w.stale, &params, &plan.train_mask)
+                .unwrap();
+        let outs = ctx.rt.execute(&ctx.artifact, "train", &naive_inputs).unwrap();
+        let naive = parse_train_output(&ctx.spec, &outs).unwrap();
+
+        assert_eq!(cached.loss, naive.loss);
+        assert_eq!(cached.logits.data, naive.logits.data);
+        for (a, b) in cached.grads.iter().zip(&naive.grads) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn pull_refreshes_stale_literals() {
+        let ctx = ctx();
+        let mut w0 = WorkerState::new(&ctx, 0);
+        let w1 = WorkerState::new(&ctx, 1);
+        let params = init_params(&ctx.spec, 0);
+        let lits = pack_params(&ctx.spec, &params).unwrap();
+        let (before, _) = exec_train(&ctx, &w0, &lits).unwrap();
+        // w1 pushes fresh reps; w0 pulls -> its literals must change the
+        // next execution's numbers
+        let (out1, _) = exec_train(&ctx, &w1, &lits).unwrap();
+        push_reps(&ctx, &w1, &out1.reps, 1);
+        pull_stale(&ctx, &mut w0);
+        let (after, _) = exec_train(&ctx, &w0, &lits).unwrap();
+        assert_ne!(before.loss, after.loss);
+    }
+
+    #[test]
+    fn layer_time_decomposition_sums() {
+        let ctx = ctx();
+        let (comp, io) = epoch_layer_times(&ctx, 1.0, 0.2, 0.3);
+        assert_eq!(comp.len(), ctx.spec.layers);
+        assert!((comp.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((io.iter().sum::<f64>() - 0.5).abs() < 1e-12);
+    }
+}

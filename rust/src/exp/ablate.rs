@@ -1,0 +1,130 @@
+//! Design-choice ablations called out in DESIGN.md §5:
+//!
+//! * `ablate-part` — partitioner quality (METIS-style vs BFS vs random)
+//!   and its downstream effect on F1 and communication;
+//! * `ablate-overlap` — the Fig. 2 pull/push-compute overlap on vs off.
+
+use crate::config::Method;
+use crate::gnn::ModelKind;
+use crate::graph::registry::load;
+use crate::partition::{partition, quality, PartitionAlgo};
+use crate::Result;
+
+use super::{csv_table, md_table, Campaign};
+
+pub fn run_partitioners(c: &mut Campaign) -> Result<()> {
+    let ds = load("arxiv-s", c.seed)?;
+    let mut rows = Vec::new();
+    for (algo, name) in [
+        (PartitionAlgo::Metis, "metis"),
+        (PartitionAlgo::Bfs, "bfs"),
+        (PartitionAlgo::Random, "random"),
+    ] {
+        let p = partition(&ds.graph, 4, algo, c.seed);
+        let q = quality::evaluate(&ds.graph, &p);
+
+        let mut cfg = c.cfg("arxiv-s", ModelKind::Gcn, Method::Digest);
+        cfg.partitioner = algo;
+        eprintln!("[exp] ablate-part: {name} ...");
+        let r = c.run_custom(cfg)?;
+        rows.push(vec![
+            name.to_string(),
+            q.edge_cut.to_string(),
+            format!("{:.4}", q.cut_ratio),
+            format!("{:.3}", q.balance),
+            format!("{:.2}", 100.0 * q.avg_halo_ratio),
+            format!("{:.4}", r.best_val_f1),
+            r.kvs.total_bytes().to_string(),
+        ]);
+    }
+    let headers = [
+        "partitioner", "edge_cut", "cut_ratio", "balance", "halo_ratio_pct",
+        "best_val_f1", "kvs_bytes",
+    ];
+    c.write("ablate_partitioner.csv", &csv_table(&headers, &rows))?;
+    c.write(
+        "ablate_partitioner.md",
+        &format!(
+            "# Ablation — partitioner choice (arxiv-s, DIGEST, M=4)\n\n{}",
+            md_table(&headers, &rows)
+        ),
+    )?;
+    eprintln!("[exp] ablate-part -> {}/ablate_partitioner.csv", c.out_dir.display());
+    Ok(())
+}
+
+pub fn run_overlap(c: &mut Campaign) -> Result<()> {
+    let mut rows = Vec::new();
+    for overlap in [true, false] {
+        let mut cfg = c.cfg("reddit-s", ModelKind::Gcn, Method::Digest);
+        cfg.overlap = overlap;
+        cfg.sync_interval = 1; // max I/O pressure: sync every epoch
+        eprintln!("[exp] ablate-overlap: overlap={overlap} ...");
+        let r = c.run_custom(cfg)?;
+        let n = r.epochs.len().max(1) as f64;
+        rows.push(vec![
+            overlap.to_string(),
+            format!("{:.6}", r.avg_epoch_vtime()),
+            format!("{:.6}", r.epochs.iter().map(|b| b.compute).sum::<f64>() / n),
+            format!("{:.6}", r.epochs.iter().map(|b| b.kvs_io).sum::<f64>() / n),
+            format!("{:.4}", r.best_val_f1),
+        ]);
+    }
+    let headers = ["overlap", "epoch_time", "compute", "kvs_io", "best_val_f1"];
+    c.write("ablate_overlap.csv", &csv_table(&headers, &rows))?;
+    c.write(
+        "ablate_overlap.md",
+        &format!(
+            "# Ablation — pull/push overlap with layer compute (Fig. 2 design; \
+             reddit-s, N=1)\n\n{}",
+            md_table(&headers, &rows)
+        ),
+    )?;
+    eprintln!("[exp] ablate-overlap -> {}/ablate_overlap.csv", c.out_dir.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::Budget;
+
+    #[test]
+    fn metis_beats_random_on_cut_and_traffic() {
+        let ds = load("arxiv-s", 3).unwrap();
+        let pm = partition(&ds.graph, 4, PartitionAlgo::Metis, 3);
+        let pr = partition(&ds.graph, 4, PartitionAlgo::Random, 3);
+        let qm = quality::evaluate(&ds.graph, &pm);
+        let qr = quality::evaluate(&ds.graph, &pr);
+        assert!(qm.edge_cut < qr.edge_cut);
+        assert!(qm.avg_halo_ratio < qr.avg_halo_ratio);
+    }
+
+    #[test]
+    fn overlap_reduces_epoch_time_when_io_bound() {
+        // direct cost-model check (training-level check runs in fig
+        // budget): heavy io, overlap must win
+        let cm = crate::costmodel::CostModel::default();
+        let comp = [0.5, 0.5];
+        let io = [0.4, 0.4];
+        let on = cm.worker_epoch_time(&comp, &io, true, 0.0);
+        let off = cm.worker_epoch_time(&comp, &io, false, 0.0);
+        assert!(on < off);
+    }
+
+    #[test]
+    fn overlap_ablation_runs_on_karate() {
+        let dir = std::env::temp_dir().join("digest_ablate_test");
+        let c = Campaign::new(&dir, Budget::quick(), 4).unwrap();
+        let mut times = Vec::new();
+        for overlap in [true, false] {
+            let mut cfg = c.cfg("karate", ModelKind::Gcn, Method::Digest);
+            cfg.epochs = 6;
+            cfg.sync_interval = 1;
+            cfg.overlap = overlap;
+            let r = c.run_custom(cfg).unwrap();
+            times.push(r.avg_epoch_vtime());
+        }
+        assert!(times[0] <= times[1], "overlap {} vs no-overlap {}", times[0], times[1]);
+    }
+}

@@ -1,0 +1,146 @@
+//! §3.3 complexity analysis, measured: communication and memory cost as
+//! the GNN depth L grows.
+//!
+//! The paper's claim: propagation-based methods need the *L-hop*
+//! neighborhood, whose size grows geometrically with L (neighborhood
+//! explosion), while DIGEST pulls only the 1-hop halo's stale
+//! representations per hidden layer — linear in L.
+//!
+//! This experiment computes, on the real arxiv-s partitions:
+//!   * the exact k-hop halo sizes for k = 1..L (BFS frontier growth);
+//!   * DIGEST's per-round bytes:  Σ_m |halo¹_m| · (L−1) · d · 4
+//!   * propagation's per-round bytes: Σ_m Σ_{k≤L−1} |halo^k_m| · d · 4
+//!     (each layer's exchange touches a deeper frontier);
+//! and writes the ratio — the §3.3 shape: linear vs super-linear in L.
+
+use std::collections::VecDeque;
+
+use crate::graph::registry::load;
+use crate::graph::Graph;
+use crate::partition::{partition, PartitionAlgo};
+use crate::Result;
+
+use super::{csv_table, md_table, Campaign};
+
+const D_H: usize = 64;
+
+/// Nodes within exactly <= k hops of the part, excluding the part.
+pub fn khop_halo(g: &Graph, members: &[u32], k: usize) -> usize {
+    let n = g.n();
+    let mut dist = vec![u32::MAX; n];
+    let mut q = VecDeque::new();
+    for &v in members {
+        dist[v as usize] = 0;
+        q.push_back(v);
+    }
+    let mut count = 0usize;
+    while let Some(v) = q.pop_front() {
+        let d = dist[v as usize];
+        if d as usize >= k {
+            continue;
+        }
+        for &u in g.neighbors(v as usize) {
+            if dist[u as usize] == u32::MAX {
+                dist[u as usize] = d + 1;
+                count += 1;
+                q.push_back(u);
+            }
+        }
+    }
+    count
+}
+
+pub fn run(c: &mut Campaign) -> Result<()> {
+    let ds = load("arxiv-s", c.seed)?;
+    let p = partition(&ds.graph, 4, PartitionAlgo::Metis, c.seed);
+    let members: Vec<Vec<u32>> = (0..4).map(|m| p.members(m)).collect();
+
+    let mut rows = Vec::new();
+    for layers in [2usize, 3, 4, 5] {
+        // DIGEST: (L-1) hidden layers, each pulls the 1-hop halo once
+        // per sync round
+        let halo1: usize = members.iter().map(|m| khop_halo(&ds.graph, m, 1)).sum();
+        let digest_bytes = halo1 * (layers - 1) * D_H * 4;
+        // propagation: layer k's fresh exchange needs the k-hop frontier
+        let mut prop_bytes = 0usize;
+        for k in 1..layers {
+            let halok: usize = members.iter().map(|m| khop_halo(&ds.graph, m, k)).sum();
+            prop_bytes += halok * D_H * 4;
+        }
+        rows.push(vec![
+            layers.to_string(),
+            halo1.to_string(),
+            members
+                .iter()
+                .map(|m| khop_halo(&ds.graph, m, layers - 1))
+                .sum::<usize>()
+                .to_string(),
+            digest_bytes.to_string(),
+            prop_bytes.to_string(),
+            format!("{:.2}", prop_bytes as f64 / digest_bytes as f64),
+        ]);
+    }
+    let headers = [
+        "layers", "halo_1hop", "halo_(L-1)hop", "digest_bytes_per_round",
+        "propagation_bytes_per_round", "ratio",
+    ];
+    c.write("complexity_depth.csv", &csv_table(&headers, &rows))?;
+    c.write(
+        "complexity_depth.md",
+        &format!(
+            "# §3.3 complexity — per-round representation traffic vs depth L \
+             (arxiv-s, M=4)\n\nDIGEST grows linearly in L; propagation-based \
+             exchange touches geometrically-growing frontiers.\n\n{}",
+            md_table(&headers, &rows)
+        ),
+    )?;
+    eprintln!("[exp] complexity -> {}/complexity_depth.csv", c.out_dir.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::Budget;
+
+    #[test]
+    fn khop_halo_on_path_graph() {
+        // path 0-1-2-3-4-5, part = {0}: 1-hop {1}, 2-hop {1,2}, ...
+        let g = Graph::from_edges(6, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)]);
+        assert_eq!(khop_halo(&g, &[0], 1), 1);
+        assert_eq!(khop_halo(&g, &[0], 3), 3);
+        assert_eq!(khop_halo(&g, &[0], 10), 5); // saturates at n - |part|
+    }
+
+    #[test]
+    fn khop_monotone_in_k() {
+        let ds = load("flickr-s", 1).unwrap();
+        let p = partition(&ds.graph, 4, PartitionAlgo::Metis, 1);
+        let m0 = p.members(0);
+        let mut prev = 0;
+        for k in 1..4 {
+            let h = khop_halo(&ds.graph, &m0, k);
+            assert!(h >= prev);
+            prev = h;
+        }
+    }
+
+    #[test]
+    fn propagation_traffic_grows_faster_than_digest() {
+        let dir = std::env::temp_dir().join("digest_complexity_test");
+        let mut c = Campaign::new(&dir, Budget::quick(), 13).unwrap();
+        run(&mut c).unwrap();
+        let csv = std::fs::read_to_string(dir.join("complexity_depth.csv")).unwrap();
+        let ratios: Vec<f64> = csv
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').last().unwrap().parse().unwrap())
+            .collect();
+        // ratio >= 1 everywhere and non-decreasing with depth
+        assert!(ratios.iter().all(|&r| r >= 1.0), "{ratios:?}");
+        assert!(
+            ratios.last().unwrap() > ratios.first().unwrap(),
+            "{ratios:?}"
+        );
+    }
+}

@@ -1,0 +1,155 @@
+//! Fig. 5 — scalability: speedup vs number of workers on products-s.
+//!
+//! The paper computes speedup as (DGL single-GPU epoch time) / (method
+//! epoch time at M GPUs).  Epoch time on this testbed comes from the
+//! cost model, which is a *deterministic function* of per-subgraph FLOPs
+//! and communication bytes — so the sweep is evaluated analytically for
+//! every M (including M=1/2 whose subgraphs exceed the AOT padding) from
+//! real partitions of the real graph.  The same formulas drive the
+//! virtual clock of the executed runs, which table1 cross-checks at M=4.
+
+use crate::config::Method;
+use crate::costmodel::CostModel;
+use crate::graph::registry::load;
+use crate::partition::{partition, quality, PartitionAlgo};
+use crate::Result;
+
+use super::{csv_table, md_table, Campaign};
+
+/// Model dims for products-s GCN (matches the artifact config).
+const DIMS: [usize; 3] = [100, 64, 47];
+const D_H: usize = 64;
+
+/// Analytic epoch time for one method at M workers.
+fn epoch_time(
+    cost: &CostModel,
+    method: Method,
+    sizes: &[usize],
+    halos: &[usize],
+    sync_interval: usize,
+    layers: usize,
+) -> f64 {
+    let param_bytes: u64 = (DIMS.windows(2).map(|w| w[0] * w[1] + w[1]).sum::<usize>() * 4) as u64;
+    let mut worst = 0.0f64;
+    for (m, (&s, &b)) in sizes.iter().zip(halos).enumerate() {
+        // dense padded step FLOPs (fwd), bwd ~ 2x fwd
+        let mut fwd = 0u64;
+        for w in DIMS.windows(2) {
+            fwd += 2 * ((s + b) * w[0] * w[1] + s * (s + b) * w[1]) as u64;
+        }
+        let train = 3 * fwd;
+        let pull_bytes = (b * D_H * 4) as u64;
+        let push_bytes = (s * D_H * 4) as u64;
+        let t = match method {
+            Method::Llcg => {
+                // no KVS traffic during local training (correction is
+                // charged once per epoch below)
+                cost.compute_time(m, train)
+            }
+            Method::Propagation => {
+                // (L-1) refresh forwards + per-epoch pull+push, no overlap
+                let refresh = (layers - 1) as u64 * fwd;
+                cost.compute_time(m, train + refresh)
+                    + (layers - 1) as f64
+                        * (cost.comm_time(pull_bytes) + cost.comm_time(push_bytes))
+            }
+            Method::Digest | Method::DigestAsync => {
+                // amortized periodic sync, overlapped with compute
+                let io = (cost.comm_time(pull_bytes) + cost.comm_time(push_bytes))
+                    / sync_interval as f64;
+                cost.compute_time(m, train).max(io)
+            }
+        };
+        let t = t + 2.0 * cost.param_time(param_bytes);
+        worst = worst.max(t);
+    }
+    // aggregation barrier (async pays it per-update, amortized the same)
+    let mut total = worst + cost.param_time(param_bytes);
+    if method == Method::Llcg {
+        // global server correction: L-hop compute on a s/4 mini-batch
+        // plus moving its features (mirrors baselines::llcg's charges)
+        let s0 = sizes[0].max(1);
+        let b0 = halos[0];
+        let mut fwd0 = 0u64;
+        for w in DIMS.windows(2) {
+            fwd0 += 2 * ((s0 + b0) * w[0] * w[1] + s0 * (s0 + b0) * w[1]) as u64;
+        }
+        total += cost.compute_time(0, layers as u64 * 3 * fwd0)
+            + cost.comm_time(((s0 / 4 + b0 / 2) * DIMS[0] * 4) as u64);
+    }
+    total
+}
+
+pub fn run(c: &mut Campaign) -> Result<()> {
+    let ds = load("products-s", c.seed)?;
+    let cost = CostModel::default();
+    let layers = 2;
+
+    // baseline: DGL at M=1 (full graph on one device, no comm)
+    let n = ds.n();
+    let base =
+        epoch_time(&cost, Method::Propagation, &[n], &[0], 1, layers);
+
+    let mut rows = Vec::new();
+    for m_parts in [1usize, 2, 4, 8] {
+        let p = partition(&ds.graph, m_parts, PartitionAlgo::Metis, c.seed);
+        let sizes = p.sizes();
+        let halos: Vec<usize> = (0..m_parts)
+            .map(|m| quality::halo_nodes(&ds.graph, &p, m).len())
+            .collect();
+        for method in Method::all() {
+            let t = epoch_time(&cost, method, &sizes, &halos, 10, layers);
+            rows.push(vec![
+                m_parts.to_string(),
+                method.as_str().to_string(),
+                format!("{:.6}", t),
+                format!("{:.3}", base / t),
+            ]);
+        }
+    }
+    let headers = ["workers", "method", "epoch_time", "speedup_vs_dgl_1gpu"];
+    c.write("fig5_scalability.csv", &csv_table(&headers, &rows))?;
+    c.write(
+        "fig5_scalability.md",
+        &format!(
+            "# Fig. 5 — scalability on products-s (speedup vs DGL @ 1 worker)\n\n{}",
+            md_table(&headers, &rows)
+        ),
+    )?;
+    eprintln!("[exp] fig5 -> {}/fig5_scalability.csv", c.out_dir.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::Budget;
+
+    #[test]
+    fn digest_speedup_rises_with_workers_and_beats_dgl() {
+        let dir = std::env::temp_dir().join("digest_fig5_test");
+        let mut c = Campaign::new(&dir, Budget::quick(), 7).unwrap();
+        run(&mut c).unwrap();
+        let csv = std::fs::read_to_string(dir.join("fig5_scalability.csv")).unwrap();
+        // parse rows: workers,method,epoch_time,speedup
+        let mut digest_speedups = Vec::new();
+        let mut dgl_speedups = Vec::new();
+        for line in csv.lines().skip(1) {
+            let f: Vec<&str> = line.split(',').collect();
+            let speed: f64 = f[3].parse().unwrap();
+            match f[1] {
+                "digest" => digest_speedups.push((f[0].parse::<usize>().unwrap(), speed)),
+                "dgl" => dgl_speedups.push((f[0].parse::<usize>().unwrap(), speed)),
+                _ => {}
+            }
+        }
+        // speedup grows with workers for DIGEST
+        for w in digest_speedups.windows(2) {
+            assert!(w[1].1 > w[0].1, "{digest_speedups:?}");
+        }
+        // and at 8 workers DIGEST is much faster than DGL at 8 workers
+        let d8 = digest_speedups.iter().find(|x| x.0 == 8).unwrap().1;
+        let g8 = dgl_speedups.iter().find(|x| x.0 == 8).unwrap().1;
+        assert!(d8 > 1.5 * g8, "digest@8 {d8} vs dgl@8 {g8}");
+    }
+}

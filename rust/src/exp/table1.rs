@@ -1,0 +1,168 @@
+//! Table 1 (F1 + speedup) and the curve/epoch-time figures that share
+//! its runs: Fig. 3 (GCN loss/F1 vs time), Fig. 4 (time per epoch),
+//! Fig. 8 (GAT curves).
+//!
+//! Speedup follows the paper's definition: per-epoch training time of
+//! each method normalized against DGL's (the propagation baseline), on
+//! the virtual clock.
+
+use crate::config::Method;
+use crate::gnn::ModelKind;
+use crate::Result;
+
+use super::{csv_table, md_table, Campaign, DATASETS, GAT_DATASETS};
+
+pub fn run_table1(c: &mut Campaign) -> Result<()> {
+    let mut rows = Vec::new();
+    let mut csv_rows = Vec::new();
+    for (model, datasets) in [
+        (ModelKind::Gcn, &DATASETS[..]),
+        (ModelKind::Gat, &GAT_DATASETS[..]),
+    ] {
+        for &ds in datasets {
+            // DGL is the speedup baseline
+            let dgl = c.run(ds, model, Method::Propagation)?;
+            let dgl_epoch = dgl.avg_epoch_vtime();
+            for method in Method::all() {
+                let r = c.run(ds, model, method)?;
+                let speedup = dgl_epoch / r.avg_epoch_vtime();
+                rows.push(vec![
+                    model.as_str().to_uppercase(),
+                    ds.to_string(),
+                    method.as_str().to_string(),
+                    format!("{:.2}", 100.0 * r.best_val_f1),
+                    format!("{:.2}", 100.0 * r.final_test_f1),
+                    format!("{:.2}x", speedup),
+                    format!("{:.4}", r.avg_epoch_vtime()),
+                ]);
+                csv_rows.push(vec![
+                    model.as_str().to_string(),
+                    ds.to_string(),
+                    method.as_str().to_string(),
+                    format!("{:.4}", r.best_val_f1),
+                    format!("{:.4}", r.final_test_f1),
+                    format!("{:.4}", speedup),
+                    format!("{:.6}", r.avg_epoch_vtime()),
+                ]);
+            }
+        }
+    }
+    let headers = [
+        "model", "dataset", "method", "best val F1 (%)", "test F1 (%)",
+        "speedup vs DGL", "epoch time (vs)",
+    ];
+    c.write(
+        "table1.md",
+        &format!(
+            "# Table 1 — F1 and speedup of distributed GNN frameworks\n\n{}",
+            md_table(&headers, &rows)
+        ),
+    )?;
+    c.write("table1.csv", &csv_table(&headers, &csv_rows))?;
+    eprintln!("[exp] table1 -> {}/table1.md", c.out_dir.display());
+    Ok(())
+}
+
+/// Fig. 3: per-method loss + val-F1 timelines for GCN on all datasets.
+/// (The per-run CSVs are written by Campaign::run; this emits the
+/// combined index so plotting is one file.)
+pub fn run_fig3(c: &mut Campaign) -> Result<()> {
+    curves(c, ModelKind::Gcn, &DATASETS, "fig3")
+}
+
+/// Fig. 8 (appendix): the same curves for GAT on three datasets.
+pub fn run_fig8(c: &mut Campaign) -> Result<()> {
+    curves(c, ModelKind::Gat, &GAT_DATASETS, "fig8")
+}
+
+fn curves(
+    c: &mut Campaign,
+    model: ModelKind,
+    datasets: &[&str],
+    tag: &str,
+) -> Result<()> {
+    let mut rows = Vec::new();
+    for &ds in datasets {
+        for method in Method::all() {
+            let r = c.run(ds, model, method)?;
+            for p in &r.points {
+                rows.push(vec![
+                    ds.to_string(),
+                    method.as_str().to_string(),
+                    p.epoch.to_string(),
+                    format!("{:.6}", p.vtime),
+                    format!("{:.6}", p.train_loss),
+                    format!("{:.4}", p.val_f1),
+                ]);
+            }
+        }
+    }
+    c.write(
+        &format!("{tag}_curves.csv"),
+        &csv_table(
+            &["dataset", "method", "epoch", "vtime", "train_loss", "val_f1"],
+            &rows,
+        ),
+    )?;
+    eprintln!("[exp] {tag} -> {}/{tag}_curves.csv", c.out_dir.display());
+    Ok(())
+}
+
+/// Fig. 4: per-epoch training time (virtual) per method per dataset,
+/// with the compute / KVS / PS / straggle decomposition.
+pub fn run_fig4(c: &mut Campaign) -> Result<()> {
+    let mut rows = Vec::new();
+    for &ds in &DATASETS {
+        for method in Method::all() {
+            let r = c.run(ds, ModelKind::Gcn, method)?;
+            let n = r.epochs.len().max(1) as f64;
+            let avg = |f: fn(&crate::coordinator::EpochBreakdown) -> f64| {
+                r.epochs.iter().map(f).sum::<f64>() / n
+            };
+            rows.push(vec![
+                ds.to_string(),
+                method.as_str().to_string(),
+                format!("{:.6}", r.avg_epoch_vtime()),
+                format!("{:.6}", avg(|b| b.compute)),
+                format!("{:.6}", avg(|b| b.kvs_io)),
+                format!("{:.6}", avg(|b| b.ps_io)),
+                format!("{:.6}", avg(|b| b.straggle)),
+            ]);
+        }
+    }
+    let headers = [
+        "dataset", "method", "epoch_time", "compute", "kvs_io", "ps_io", "straggle",
+    ];
+    c.write("fig4_epoch_time.csv", &csv_table(&headers, &rows))?;
+    c.write(
+        "fig4_epoch_time.md",
+        &format!(
+            "# Fig. 4 — training time per epoch (virtual seconds)\n\n{}",
+            md_table(&headers, &rows)
+        ),
+    )?;
+    eprintln!("[exp] fig4 -> {}/fig4_epoch_time.csv", c.out_dir.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::Budget;
+
+    /// Quick-budget end-to-end of the shared-run experiments on the two
+    /// cheapest datasets (table1 structure, curves, fig4 decomposition).
+    #[test]
+    fn table1_pipeline_quick() {
+        let dir = std::env::temp_dir().join("digest_table1_quick");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut c = Campaign::new(&dir, Budget::quick(), 3).unwrap();
+        // restrict to flickr-s (fast) by running its pieces directly
+        let dgl = c.run("flickr-s", ModelKind::Gcn, Method::Propagation).unwrap();
+        let dig = c.run("flickr-s", ModelKind::Gcn, Method::Digest).unwrap();
+        assert!(dgl.avg_epoch_vtime() > dig.avg_epoch_vtime(),
+            "digest must be faster per epoch: dgl {} vs digest {}",
+            dgl.avg_epoch_vtime(), dig.avg_epoch_vtime());
+        assert!(dir.join("curve_flickr-s_gcn_dgl.csv").exists());
+    }
+}

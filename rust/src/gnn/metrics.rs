@@ -1,0 +1,108 @@
+//! Classification metrics: micro/macro F1 over split subsets.
+//!
+//! The paper reports validation-set F1.  For single-label multiclass
+//! problems micro-F1 equals accuracy; macro-F1 is also provided for the
+//! imbalanced splits (products-s trains on 8% of nodes).
+
+/// Micro-averaged F1 (= accuracy for single-label multiclass).
+pub fn micro_f1(preds: &[usize], labels: &[u32], nodes: &[usize]) -> f64 {
+    if nodes.is_empty() {
+        return 0.0;
+    }
+    let correct = nodes
+        .iter()
+        .filter(|&&v| preds[v] == labels[v] as usize)
+        .count();
+    correct as f64 / nodes.len() as f64
+}
+
+/// Macro-averaged F1 over classes present in `nodes`.
+pub fn macro_f1(preds: &[usize], labels: &[u32], nodes: &[usize], n_class: usize) -> f64 {
+    let mut tp = vec![0usize; n_class];
+    let mut fp = vec![0usize; n_class];
+    let mut fal_n = vec![0usize; n_class];
+    let mut present = vec![false; n_class];
+    for &v in nodes {
+        let t = labels[v] as usize;
+        let p = preds[v];
+        present[t] = true;
+        if p == t {
+            tp[t] += 1;
+        } else {
+            fp[p] += 1;
+            fal_n[t] += 1;
+        }
+    }
+    let mut sum = 0.0;
+    let mut count = 0usize;
+    for c in 0..n_class {
+        if !present[c] {
+            continue;
+        }
+        let denom_p = tp[c] + fp[c];
+        let denom_r = tp[c] + fal_n[c];
+        let prec = if denom_p == 0 { 0.0 } else { tp[c] as f64 / denom_p as f64 };
+        let rec = if denom_r == 0 { 0.0 } else { tp[c] as f64 / denom_r as f64 };
+        let f1 = if prec + rec == 0.0 {
+            0.0
+        } else {
+            2.0 * prec * rec / (prec + rec)
+        };
+        sum += f1;
+        count += 1;
+    }
+    if count == 0 {
+        0.0
+    } else {
+        sum / count as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn micro_f1_is_accuracy() {
+        let preds = vec![0, 1, 2, 0];
+        let labels = vec![0u32, 1, 1, 0];
+        let nodes = vec![0, 1, 2, 3];
+        assert!((micro_f1(&preds, &labels, &nodes) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn micro_f1_respects_subset() {
+        let preds = vec![0, 1, 2];
+        let labels = vec![0u32, 0, 0];
+        assert!((micro_f1(&preds, &labels, &[0]) - 1.0).abs() < 1e-12);
+        assert!((micro_f1(&preds, &labels, &[1, 2]) - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn macro_f1_perfect_prediction() {
+        let preds = vec![0, 1, 2, 0, 1, 2];
+        let labels = vec![0u32, 1, 2, 0, 1, 2];
+        let nodes: Vec<usize> = (0..6).collect();
+        assert!((macro_f1(&preds, &labels, &nodes, 3) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn macro_f1_penalizes_minority_misses_more_than_micro() {
+        // 9 class-0 correct, 1 class-1 wrong -> micro 0.9, macro lower
+        let mut preds = vec![0usize; 10];
+        let mut labels = vec![0u32; 10];
+        labels[9] = 1;
+        preds[9] = 0;
+        let nodes: Vec<usize> = (0..10).collect();
+        let micro = micro_f1(&preds, &labels, &nodes);
+        let macro_ = macro_f1(&preds, &labels, &nodes, 2);
+        assert!((micro - 0.9).abs() < 1e-12);
+        assert!(macro_ < 0.6, "macro {macro_}");
+    }
+
+    #[test]
+    fn empty_nodes_zero() {
+        assert_eq!(micro_f1(&[], &[], &[]), 0.0);
+        assert_eq!(macro_f1(&[], &[], &[], 3), 0.0);
+    }
+}

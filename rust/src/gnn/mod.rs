@@ -1,0 +1,349 @@
+//! Pure-Rust GNN inference oracle + classification metrics.
+//!
+//! Two jobs (DESIGN.md §6.3):
+//!
+//! 1. **Global evaluation** — the paper reports *global* validation F1.
+//!    Evaluating the aggregated weights over the full graph through the
+//!    padded per-subgraph artifacts would itself inject staleness, so the
+//!    coordinator evaluates with this exact CSR forward instead (no
+//!    staleness, no padding, full neighborhoods).
+//! 2. **Numeric oracle** — integration tests assert the HLO artifacts
+//!    (Pallas kernels included) agree with this implementation when the
+//!    stale inputs equal the true representations.
+//!
+//! The math mirrors `python/compile/models/{gcn,gat}.py` exactly:
+//! GCN: H^{l+1} = relu(P H^l W + b), P = D̃^{-1/2}(A+I)D̃^{-1/2};
+//! GAT: single-head masked attention with LeakyReLU(0.2) logits and ELU
+//! hidden activations.  Last layer has no activation (logits).
+
+pub mod metrics;
+
+use crate::graph::Graph;
+use crate::tensor::Matrix;
+use crate::{eyre, Result};
+
+/// Model selector shared across the crate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    Gcn,
+    Gat,
+}
+
+impl ModelKind {
+    pub fn params_per_layer(self) -> usize {
+        match self {
+            ModelKind::Gcn => 2,            // w, b
+            ModelKind::Gat => 4,            // w, b, a_src, a_dst
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ModelKind::Gcn => "gcn",
+            ModelKind::Gat => "gat",
+        }
+    }
+}
+
+impl std::str::FromStr for ModelKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "gcn" => Ok(ModelKind::Gcn),
+            "gat" => Ok(ModelKind::Gat),
+            _ => Err(eyre!("unknown model {s:?}")),
+        }
+    }
+}
+
+/// One layer's parameters, viewed from the flat PS parameter list
+/// (manifest order: w, b[, a_src, a_dst] per layer).
+#[derive(Debug, Clone)]
+pub struct LayerView<'a> {
+    pub w: &'a Matrix,
+    pub b: &'a Matrix,
+    pub a_src: Option<&'a Matrix>,
+    pub a_dst: Option<&'a Matrix>,
+}
+
+/// Split the flat parameter list into per-layer views.
+pub fn layer_views<'a>(kind: ModelKind, flat: &'a [Matrix]) -> Result<Vec<LayerView<'a>>> {
+    let ppl = kind.params_per_layer();
+    if flat.is_empty() || flat.len() % ppl != 0 {
+        return Err(eyre!("flat params len {} not divisible by {ppl}", flat.len()));
+    }
+    Ok(flat
+        .chunks(ppl)
+        .map(|c| LayerView {
+            w: &c[0],
+            b: &c[1],
+            a_src: if kind == ModelKind::Gat { Some(&c[2]) } else { None },
+            a_dst: if kind == ModelKind::Gat { Some(&c[3]) } else { None },
+        })
+        .collect())
+}
+
+const LEAKY_SLOPE: f32 = 0.2;
+
+fn elu(z: f32) -> f32 {
+    if z > 0.0 {
+        z
+    } else {
+        z.exp_m1()
+    }
+}
+
+/// Full-graph GCN forward; returns (logits, per-layer hidden reps).
+pub fn gcn_forward(
+    g: &Graph,
+    x: &Matrix,
+    params: &[Matrix],
+    normalize: bool,
+) -> Result<(Matrix, Vec<Matrix>)> {
+    let layers = layer_views(ModelKind::Gcn, params)?;
+    let n = g.n();
+    if x.rows != n {
+        return Err(eyre!("features rows {} != n {n}", x.rows));
+    }
+    let mut h = x.clone();
+    let mut hidden = Vec::new();
+    for (l, layer) in layers.iter().enumerate() {
+        let last = l == layers.len() - 1;
+        let t = h.matmul(layer.w); // (n, d')
+        let d_out = t.cols;
+        let mut z = Matrix::zeros(n, d_out);
+        for v in 0..n {
+            // self-loop
+            let wv = 1.0 / (g.degree(v) + 1) as f32;
+            let tv = t.row(v).to_vec();
+            {
+                let zrow = z.row_mut(v);
+                for (o, tval) in zrow.iter_mut().zip(&tv) {
+                    *o += wv * tval;
+                }
+            }
+            for &u in g.neighbors(v) {
+                let w = g.norm_weight(v, u as usize);
+                let trow = t.row(u as usize).to_vec();
+                let zrow = z.row_mut(v);
+                for (o, tval) in zrow.iter_mut().zip(&trow) {
+                    *o += w * tval;
+                }
+            }
+            let zrow = z.row_mut(v);
+            for (o, bv) in zrow.iter_mut().zip(&layer.b.data) {
+                *o += bv;
+            }
+        }
+        if !last {
+            for v in &mut z.data {
+                *v = v.max(0.0); // relu
+            }
+            if normalize {
+                l2_normalize_rows(&mut z);
+            }
+            hidden.push(z.clone());
+        }
+        h = z;
+    }
+    Ok((h, hidden))
+}
+
+/// Full-graph single-head GAT forward; returns (logits, hidden reps).
+pub fn gat_forward(
+    g: &Graph,
+    x: &Matrix,
+    params: &[Matrix],
+    normalize: bool,
+) -> Result<(Matrix, Vec<Matrix>)> {
+    let layers = layer_views(ModelKind::Gat, params)?;
+    let n = g.n();
+    let mut h = x.clone();
+    let mut hidden = Vec::new();
+    for (l, layer) in layers.iter().enumerate() {
+        let last = l == layers.len() - 1;
+        let t = h.matmul(layer.w); // (n, d')
+        let a_src = layer.a_src.unwrap();
+        let a_dst = layer.a_dst.unwrap();
+        let s_src: Vec<f32> = (0..n)
+            .map(|v| dot(t.row(v), &a_src.data))
+            .collect();
+        let s_dst: Vec<f32> = (0..n)
+            .map(|v| dot(t.row(v), &a_dst.data))
+            .collect();
+        let d_out = t.cols;
+        let mut z = Matrix::zeros(n, d_out);
+        for v in 0..n {
+            // neighbors ∪ {v}
+            let mut ids: Vec<usize> = vec![v];
+            ids.extend(g.neighbors(v).iter().map(|&u| u as usize));
+            let logits: Vec<f32> = ids
+                .iter()
+                .map(|&u| {
+                    let e = s_src[v] + s_dst[u];
+                    if e > 0.0 {
+                        e
+                    } else {
+                        LEAKY_SLOPE * e
+                    }
+                })
+                .collect();
+            let mx = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f32> = logits.iter().map(|&e| (e - mx).exp()).collect();
+            let denom: f32 = exps.iter().sum();
+            let zrow = z.row_mut(v);
+            for (&u, &e) in ids.iter().zip(&exps) {
+                let alpha = e / denom;
+                for (o, tval) in zrow.iter_mut().zip(t.row(u)) {
+                    *o += alpha * tval;
+                }
+            }
+            for (o, bv) in zrow.iter_mut().zip(&layer.b.data) {
+                *o += bv;
+            }
+        }
+        if !last {
+            for v in &mut z.data {
+                *v = elu(*v);
+            }
+            if normalize {
+                l2_normalize_rows(&mut z);
+            }
+            hidden.push(z.clone());
+        }
+        h = z;
+    }
+    Ok((h, hidden))
+}
+
+/// Dispatch on model kind.
+pub fn forward(
+    kind: ModelKind,
+    g: &Graph,
+    x: &Matrix,
+    params: &[Matrix],
+    normalize: bool,
+) -> Result<(Matrix, Vec<Matrix>)> {
+    match kind {
+        ModelKind::Gcn => gcn_forward(g, x, params, normalize),
+        ModelKind::Gat => gat_forward(g, x, params, normalize),
+    }
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+fn l2_normalize_rows(m: &mut Matrix) {
+    for r in 0..m.rows {
+        let row = m.row_mut(r);
+        let norm = row.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-12);
+        for v in row {
+            *v /= norm;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::registry::load;
+    use crate::util::Rng;
+
+    fn init_params(kind: ModelKind, dims: &[usize], rng: &mut Rng) -> Vec<Matrix> {
+        let mut out = Vec::new();
+        for w in dims.windows(2) {
+            out.push(Matrix::glorot(w[0], w[1], rng));
+            out.push(Matrix::zeros(1, w[1]));
+            if kind == ModelKind::Gat {
+                out.push(Matrix::from_fn(1, w[1], |_, _| 0.1 * rng.normal()));
+                out.push(Matrix::from_fn(1, w[1], |_, _| 0.1 * rng.normal()));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn gcn_forward_shapes_and_finite() {
+        let ds = load("karate", 0).unwrap();
+        let mut rng = Rng::new(1);
+        let params = init_params(ModelKind::Gcn, &[16, 8, 4], &mut rng);
+        let (logits, hidden) = gcn_forward(&ds.graph, &ds.features, &params, false).unwrap();
+        assert_eq!(logits.rows, 34);
+        assert_eq!(logits.cols, 4);
+        assert_eq!(hidden.len(), 1);
+        assert_eq!(hidden[0].cols, 8);
+        assert!(logits.is_finite());
+    }
+
+    #[test]
+    fn gat_forward_shapes_and_finite() {
+        let ds = load("karate", 0).unwrap();
+        let mut rng = Rng::new(2);
+        let params = init_params(ModelKind::Gat, &[16, 8, 4], &mut rng);
+        let (logits, hidden) = gat_forward(&ds.graph, &ds.features, &params, false).unwrap();
+        assert_eq!(logits.rows, 34);
+        assert_eq!(logits.cols, 4);
+        assert_eq!(hidden.len(), 1);
+        assert!(logits.is_finite());
+    }
+
+    #[test]
+    fn gcn_isolated_node_sees_only_itself() {
+        // 3 nodes, edge (0,1); node 2 isolated. Its output must equal
+        // its own transform: z = 1.0 * x W + b (self-loop weight 1/(0+1)).
+        let g = Graph::from_edges(3, &[(0, 1)]);
+        let x = Matrix::from_vec(3, 2, vec![1., 0., 0., 1., 2., 3.]);
+        let mut rng = Rng::new(3);
+        let params = init_params(ModelKind::Gcn, &[2, 2], &mut rng);
+        let (logits, _) = gcn_forward(&g, &x, &params, false).unwrap();
+        let w = &params[0];
+        let want0 = 2.0 * w.get(0, 0) + 3.0 * w.get(1, 0);
+        let want1 = 2.0 * w.get(0, 1) + 3.0 * w.get(1, 1);
+        assert!((logits.get(2, 0) - want0).abs() < 1e-5);
+        assert!((logits.get(2, 1) - want1).abs() < 1e-5);
+    }
+
+    #[test]
+    fn gat_attention_rows_are_convex() {
+        // constant transformed features -> every output = that constant + b
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        let x = Matrix::from_fn(4, 2, |_, _| 1.0);
+        // w = identity-ish so t rows constant
+        let params = vec![
+            Matrix::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]),
+            Matrix::from_vec(1, 2, vec![0.5, -0.5]),
+            Matrix::from_vec(1, 2, vec![0.3, 0.1]),
+            Matrix::from_vec(1, 2, vec![-0.2, 0.4]),
+        ];
+        let (logits, _) = gat_forward(&g, &x, &params, false).unwrap();
+        for v in 0..4 {
+            assert!((logits.get(v, 0) - 1.5).abs() < 1e-5);
+            assert!((logits.get(v, 1) - 0.5).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn normalize_gives_unit_rows() {
+        let ds = load("karate", 0).unwrap();
+        let mut rng = Rng::new(4);
+        let params = init_params(ModelKind::Gcn, &[16, 8, 4], &mut rng);
+        let (_, hidden) = gcn_forward(&ds.graph, &ds.features, &params, true).unwrap();
+        for r in 0..hidden[0].rows {
+            let norm: f32 = hidden[0].row(r).iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!(norm < 1.0 + 1e-4);
+            if norm > 1e-6 {
+                assert!((norm - 1.0).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn layer_views_validation() {
+        let flat = vec![Matrix::zeros(2, 2); 3];
+        assert!(layer_views(ModelKind::Gcn, &flat).is_err());
+        let flat = vec![Matrix::zeros(2, 2); 4];
+        assert_eq!(layer_views(ModelKind::Gcn, &flat).unwrap().len(), 2);
+        assert_eq!(layer_views(ModelKind::Gat, &flat).unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,288 @@
+//! Synthetic graph generators: stochastic block model (SBM) and a
+//! degree-skewed (power-law) variant.
+//!
+//! The SBM is the substitution for the paper's OGB datasets (DESIGN.md
+//! §2): community structure controls partition cut size (and therefore
+//! halo ratios / staleness error), while intra/inter edge probabilities
+//! control density.  Features are class-centroid + Gaussian noise so the
+//! task is learnable but not trivial; label = community.
+
+use super::{Dataset, Graph};
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// Parameters for the SBM dataset generator.
+#[derive(Debug, Clone)]
+pub struct SbmParams {
+    pub name: String,
+    pub nodes: usize,
+    pub communities: usize,
+    /// Expected intra-community degree per node.
+    pub intra_degree: f64,
+    /// Expected inter-community degree per node.
+    pub inter_degree: f64,
+    pub d_in: usize,
+    /// Feature signal-to-noise: centroid scale relative to unit noise.
+    pub signal: f32,
+    /// Degree skew: 0 = uniform; > 0 mixes in a Chung-Lu power-law
+    /// weight w_i ∝ (i+1)^-skew within each community.
+    pub skew: f64,
+    /// Fraction of nodes whose *label* is resampled uniformly while
+    /// their edges/features stay with the true community — irreducible
+    /// error that keeps F1 off the ceiling (real graphs are noisy).
+    pub label_noise: f64,
+    /// (train, val) fractions; test is the remainder.
+    pub train_frac: f64,
+    pub val_frac: f64,
+    pub seed: u64,
+}
+
+impl SbmParams {
+    /// Expected edges: n * (intra + inter) / 2.
+    pub fn expected_edges(&self) -> f64 {
+        self.nodes as f64 * (self.intra_degree + self.inter_degree) / 2.0
+    }
+}
+
+/// Generate an SBM dataset.  Deterministic in `params.seed`.
+pub fn generate_sbm(p: &SbmParams) -> Dataset {
+    assert!(p.communities >= 1 && p.nodes >= p.communities);
+    let mut rng = Rng::new(p.seed);
+    let n = p.nodes;
+    let k = p.communities;
+
+    // community assignment: contiguous blocks shuffled for realism
+    let mut labels: Vec<u32> = (0..n).map(|v| (v % k) as u32).collect();
+    rng.shuffle(&mut labels);
+
+    // node weights for degree skew (Chung-Lu style)
+    let weights: Vec<f64> = (0..n)
+        .map(|i| if p.skew > 0.0 { (i as f64 + 1.0).powf(-p.skew) } else { 1.0 })
+        .collect();
+    let mean_w = weights.iter().sum::<f64>() / n as f64;
+
+    // group nodes by community for targeted sampling
+    let mut by_comm: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for (v, &c) in labels.iter().enumerate() {
+        by_comm[c as usize].push(v as u32);
+    }
+
+    // Sample edges: for each node draw ~Poisson(intra) partners in its
+    // community and ~Poisson(inter) outside, weight-biased.  Using
+    // per-node target counts keeps generation O(E) instead of O(n^2).
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity((p.expected_edges() * 1.2) as usize);
+    for v in 0..n {
+        let c = labels[v] as usize;
+        let bias = weights[v] / mean_w;
+        let intra_n = sample_count(&mut rng, p.intra_degree / 2.0 * bias);
+        let inter_n = sample_count(&mut rng, p.inter_degree / 2.0 * bias);
+        for _ in 0..intra_n {
+            let peers = &by_comm[c];
+            if peers.len() > 1 {
+                let u = peers[rng.below(peers.len())];
+                if u as usize != v {
+                    edges.push((v as u32, u));
+                }
+            }
+        }
+        for _ in 0..inter_n {
+            if k > 1 {
+                let mut oc = rng.below(k);
+                if oc == c {
+                    oc = (oc + 1) % k;
+                }
+                let peers = &by_comm[oc];
+                if !peers.is_empty() {
+                    edges.push((v as u32, peers[rng.below(peers.len())]));
+                }
+            }
+        }
+    }
+    let graph = Graph::from_edges(n, &edges);
+
+    // features: community centroid (random unit-ish direction * signal) + noise
+    let mut centroids = Matrix::zeros(k, p.d_in);
+    for c in 0..k {
+        for j in 0..p.d_in {
+            centroids.set(c, j, rng.normal() * p.signal);
+        }
+    }
+    let mut features = Matrix::zeros(n, p.d_in);
+    for v in 0..n {
+        let c = labels[v] as usize;
+        for j in 0..p.d_in {
+            features.set(v, j, centroids.get(c, j) + rng.normal());
+        }
+    }
+
+    // label noise: flip after edges/features so the graph keeps its
+    // community structure but the target has irreducible error
+    let mut labels = labels;
+    if p.label_noise > 0.0 {
+        for l in labels.iter_mut() {
+            if rng.chance(p.label_noise) {
+                *l = rng.below(k) as u32;
+            }
+        }
+    }
+
+    let split = super::splits::stratified_split(
+        &labels, k, p.train_frac, p.val_frac, &mut rng,
+    );
+
+    let ds = Dataset {
+        name: p.name.clone(),
+        graph,
+        features,
+        labels,
+        n_class: k,
+        split,
+    };
+    debug_assert!(ds.validate().is_ok());
+    ds
+}
+
+/// Poisson-ish integer draw with mean `lambda` (normal approximation for
+/// large lambda, inversion for small — adequate for edge-count sampling).
+fn sample_count(rng: &mut Rng, lambda: f64) -> usize {
+    if lambda <= 0.0 {
+        return 0;
+    }
+    if lambda > 16.0 {
+        let v = lambda + rng.normal() as f64 * lambda.sqrt();
+        return v.max(0.0).round() as usize;
+    }
+    // Knuth inversion
+    let l = (-lambda).exp();
+    let mut k = 0usize;
+    let mut prod = rng.f64();
+    while prod > l && k < 1000 {
+        k += 1;
+        prod *= rng.f64();
+    }
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_params() -> SbmParams {
+        SbmParams {
+            name: "t".into(),
+            nodes: 400,
+            communities: 4,
+            intra_degree: 8.0,
+            inter_degree: 2.0,
+            d_in: 8,
+            signal: 1.5,
+            skew: 0.0,
+            label_noise: 0.0,
+            train_frac: 0.5,
+            val_frac: 0.25,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn sbm_deterministic() {
+        let a = generate_sbm(&small_params());
+        let b = generate_sbm(&small_params());
+        assert_eq!(a.graph.targets, b.graph.targets);
+        assert_eq!(a.features.data, b.features.data);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn sbm_density_near_target() {
+        let ds = generate_sbm(&small_params());
+        let avg = ds.graph.avg_degree();
+        // target total degree = 10; duplicate-collapse loses a bit
+        assert!(avg > 6.0 && avg < 12.0, "avg degree {avg}");
+    }
+
+    #[test]
+    fn sbm_community_structure_dominates() {
+        let ds = generate_sbm(&small_params());
+        let g = &ds.graph;
+        let mut intra = 0usize;
+        let mut inter = 0usize;
+        for v in 0..g.n() {
+            for &u in g.neighbors(v) {
+                if ds.labels[v] == ds.labels[u as usize] {
+                    intra += 1;
+                } else {
+                    inter += 1;
+                }
+            }
+        }
+        assert!(intra > 2 * inter, "intra={intra} inter={inter}");
+    }
+
+    #[test]
+    fn sbm_balanced_communities() {
+        let ds = generate_sbm(&small_params());
+        let mut counts = vec![0usize; 4];
+        for &l in &ds.labels {
+            counts[l as usize] += 1;
+        }
+        assert_eq!(counts.iter().sum::<usize>(), 400);
+        assert!(counts.iter().all(|&c| c == 100));
+    }
+
+    #[test]
+    fn skew_creates_heavier_tail() {
+        let mut p = small_params();
+        p.nodes = 2000;
+        p.intra_degree = 10.0;
+        let uniform = generate_sbm(&p);
+        p.skew = 1.0;
+        p.seed = 2;
+        let skewed = generate_sbm(&p);
+        assert!(skewed.graph.max_degree() > uniform.graph.max_degree());
+    }
+
+    #[test]
+    fn features_carry_class_signal() {
+        let ds = generate_sbm(&small_params());
+        // nearest-centroid classification on raw features should beat chance
+        let k = ds.n_class;
+        let d = ds.d_in();
+        let mut centroids = vec![vec![0f64; d]; k];
+        let mut counts = vec![0usize; k];
+        for v in 0..ds.n() {
+            let c = ds.labels[v] as usize;
+            counts[c] += 1;
+            for j in 0..d {
+                centroids[c][j] += ds.features.get(v, j) as f64;
+            }
+        }
+        for c in 0..k {
+            for j in 0..d {
+                centroids[c][j] /= counts[c] as f64;
+            }
+        }
+        let mut correct = 0usize;
+        for v in 0..ds.n() {
+            let mut best = 0;
+            let mut bestd = f64::MAX;
+            for c in 0..k {
+                let dist: f64 = (0..d)
+                    .map(|j| {
+                        let diff = ds.features.get(v, j) as f64 - centroids[c][j];
+                        diff * diff
+                    })
+                    .sum();
+                if dist < bestd {
+                    bestd = dist;
+                    best = c;
+                }
+            }
+            if best == ds.labels[v] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / ds.n() as f64;
+        assert!(acc > 0.6, "nearest-centroid acc {acc}");
+    }
+}

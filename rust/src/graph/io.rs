@@ -1,0 +1,221 @@
+//! Dataset file I/O: load and save node-classification datasets in a
+//! simple text format, so users can bring real graphs instead of the
+//! synthetic registry ones.
+//!
+//! Format (one directory per dataset):
+//!
+//! * `edges.tsv`    — one `u<TAB>v` pair per line (undirected, 0-indexed)
+//! * `features.tsv` — one row per node, tab-separated f32 values
+//! * `labels.tsv`   — one line per node: `label<TAB>split` where split ∈
+//!   {train, val, test}
+//! * `meta.json`    — `{"name": ..., "n_class": ...}`
+//!
+//! The quickstart docs show exporting karate with `save` and training on
+//! the re-imported copy.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use super::{Dataset, Graph, Split};
+use crate::tensor::Matrix;
+use crate::util::json::Json;
+use crate::{eyre, Result};
+
+/// Save a dataset to `dir` (created if missing).
+pub fn save(ds: &Dataset, dir: impl AsRef<Path>) -> Result<()> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir).map_err(|e| eyre!("creating {dir:?}: {e}"))?;
+
+    let mut edges = BufWriter::new(
+        std::fs::File::create(dir.join("edges.tsv")).map_err(|e| eyre!("{e}"))?,
+    );
+    for v in 0..ds.n() {
+        for &u in ds.graph.neighbors(v) {
+            if (u as usize) > v {
+                writeln!(edges, "{v}\t{u}").map_err(|e| eyre!("{e}"))?;
+            }
+        }
+    }
+    edges.flush().map_err(|e| eyre!("{e}"))?;
+
+    let mut feats = BufWriter::new(
+        std::fs::File::create(dir.join("features.tsv")).map_err(|e| eyre!("{e}"))?,
+    );
+    for v in 0..ds.n() {
+        let row: Vec<String> = ds.features.row(v).iter().map(|x| x.to_string()).collect();
+        writeln!(feats, "{}", row.join("\t")).map_err(|e| eyre!("{e}"))?;
+    }
+    feats.flush().map_err(|e| eyre!("{e}"))?;
+
+    let mut labels = BufWriter::new(
+        std::fs::File::create(dir.join("labels.tsv")).map_err(|e| eyre!("{e}"))?,
+    );
+    for v in 0..ds.n() {
+        let split = match ds.split[v] {
+            Split::Train => "train",
+            Split::Val => "val",
+            Split::Test => "test",
+        };
+        writeln!(labels, "{}\t{}", ds.labels[v], split).map_err(|e| eyre!("{e}"))?;
+    }
+    labels.flush().map_err(|e| eyre!("{e}"))?;
+
+    let meta = Json::obj(vec![
+        ("name", Json::str(ds.name.clone())),
+        ("n_class", Json::num(ds.n_class as f64)),
+        ("nodes", Json::num(ds.n() as f64)),
+    ]);
+    std::fs::write(dir.join("meta.json"), meta.to_string()).map_err(|e| eyre!("{e}"))?;
+    Ok(())
+}
+
+/// Load a dataset from `dir` (the format written by [`save`]).
+pub fn load(dir: impl AsRef<Path>) -> Result<Dataset> {
+    let dir = dir.as_ref();
+    let meta_text = std::fs::read_to_string(dir.join("meta.json"))
+        .map_err(|e| eyre!("reading {dir:?}/meta.json: {e}"))?;
+    let meta = Json::parse(&meta_text)?;
+    let name = meta.get("name")?.as_str()?.to_string();
+    let n_class = meta.get("n_class")?.as_usize()?;
+
+    // labels + splits determine n
+    let labels_file =
+        std::fs::File::open(dir.join("labels.tsv")).map_err(|e| eyre!("labels.tsv: {e}"))?;
+    let mut labels = Vec::new();
+    let mut split = Vec::new();
+    for (i, line) in std::io::BufReader::new(labels_file).lines().enumerate() {
+        let line = line.map_err(|e| eyre!("{e}"))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (l, s) = line
+            .split_once('\t')
+            .ok_or_else(|| eyre!("labels.tsv line {}: need label<TAB>split", i + 1))?;
+        labels.push(l.trim().parse::<u32>().map_err(|e| eyre!("label: {e}"))?);
+        split.push(match s.trim() {
+            "train" => Split::Train,
+            "val" => Split::Val,
+            "test" => Split::Test,
+            other => return Err(eyre!("unknown split {other:?} at line {}", i + 1)),
+        });
+    }
+    let n = labels.len();
+
+    // features
+    let feats_file = std::fs::File::open(dir.join("features.tsv"))
+        .map_err(|e| eyre!("features.tsv: {e}"))?;
+    let mut rows: Vec<Vec<f32>> = Vec::with_capacity(n);
+    for line in std::io::BufReader::new(feats_file).lines() {
+        let line = line.map_err(|e| eyre!("{e}"))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        rows.push(
+            line.split('\t')
+                .map(|t| t.trim().parse::<f32>().map_err(|e| eyre!("feature: {e}")))
+                .collect::<Result<_>>()?,
+        );
+    }
+    if rows.len() != n {
+        return Err(eyre!("features rows {} != labels {}", rows.len(), n));
+    }
+    let d = rows.first().map_or(0, |r| r.len());
+    if rows.iter().any(|r| r.len() != d) {
+        return Err(eyre!("ragged feature rows"));
+    }
+    let mut features = Matrix::zeros(n, d);
+    for (v, row) in rows.iter().enumerate() {
+        features.copy_row_from(v, row);
+    }
+
+    // edges
+    let edges_file =
+        std::fs::File::open(dir.join("edges.tsv")).map_err(|e| eyre!("edges.tsv: {e}"))?;
+    let mut edges = Vec::new();
+    for (i, line) in std::io::BufReader::new(edges_file).lines().enumerate() {
+        let line = line.map_err(|e| eyre!("{e}"))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (a, b) = line
+            .split_once('\t')
+            .ok_or_else(|| eyre!("edges.tsv line {}: need u<TAB>v", i + 1))?;
+        edges.push((
+            a.trim().parse::<u32>().map_err(|e| eyre!("edge: {e}"))?,
+            b.trim().parse::<u32>().map_err(|e| eyre!("edge: {e}"))?,
+        ));
+    }
+    let graph = Graph::from_edges(n, &edges);
+
+    let ds = Dataset {
+        name,
+        graph,
+        features,
+        labels,
+        n_class,
+        split,
+    };
+    ds.validate()?;
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::karate::karate;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("digest_io_{tag}"));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn save_load_round_trips_karate() {
+        let ds = karate(7);
+        let dir = tmpdir("karate");
+        save(&ds, &dir).unwrap();
+        let back = load(&dir).unwrap();
+        assert_eq!(back.n(), ds.n());
+        assert_eq!(back.n_class, ds.n_class);
+        assert_eq!(back.labels, ds.labels);
+        assert_eq!(back.split, ds.split);
+        assert_eq!(back.graph.offsets, ds.graph.offsets);
+        assert_eq!(back.graph.targets, ds.graph.targets);
+        assert!(back.features.max_abs_diff(&ds.features) < 1e-5);
+    }
+
+    #[test]
+    fn load_missing_dir_errors() {
+        assert!(load("/nonexistent/digest/dataset").is_err());
+    }
+
+    #[test]
+    fn load_rejects_corrupt_labels() {
+        let ds = karate(1);
+        let dir = tmpdir("corrupt");
+        save(&ds, &dir).unwrap();
+        std::fs::write(dir.join("labels.tsv"), "0\tbogus\n").unwrap();
+        assert!(load(&dir).is_err());
+    }
+
+    #[test]
+    fn load_rejects_ragged_features() {
+        let ds = karate(2);
+        let dir = tmpdir("ragged");
+        save(&ds, &dir).unwrap();
+        std::fs::write(dir.join("features.tsv"), "1.0\t2.0\n1.0\n").unwrap();
+        assert!(load(&dir).is_err());
+    }
+
+    #[test]
+    fn sbm_round_trip_preserves_structure() {
+        use crate::graph::registry;
+        let ds = registry::load("flickr-s", 3).unwrap();
+        let dir = tmpdir("flickr");
+        save(&ds, &dir).unwrap();
+        let back = super::load(&dir).unwrap();
+        assert_eq!(back.graph.m(), ds.graph.m());
+        assert_eq!(back.labels, ds.labels);
+    }
+}

@@ -1,0 +1,89 @@
+//! Zachary's karate club — the one real graph small enough to embed.
+//!
+//! Used by unit/integration tests and the quickstart example as a
+//! ground-truth sanity workload: 34 nodes, 78 edges, 4 communities (the
+//! standard modularity-based community assignment).  Features are
+//! community-centroid + noise in 16 dims so the GNN task is learnable.
+
+use super::Dataset;
+use crate::graph::Graph;
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// The 78 undirected edges of Zachary's karate club (0-indexed).
+pub const KARATE_EDGES: [(u32, u32); 78] = [
+    (0, 1), (0, 2), (0, 3), (0, 4), (0, 5), (0, 6), (0, 7), (0, 8), (0, 10),
+    (0, 11), (0, 12), (0, 13), (0, 17), (0, 19), (0, 21), (0, 31), (1, 2),
+    (1, 3), (1, 7), (1, 13), (1, 17), (1, 19), (1, 21), (1, 30), (2, 3),
+    (2, 7), (2, 8), (2, 9), (2, 13), (2, 27), (2, 28), (2, 32), (3, 7),
+    (3, 12), (3, 13), (4, 6), (4, 10), (5, 6), (5, 10), (5, 16), (6, 16),
+    (8, 30), (8, 32), (8, 33), (9, 33), (13, 33), (14, 32), (14, 33),
+    (15, 32), (15, 33), (18, 32), (18, 33), (19, 33), (20, 32), (20, 33),
+    (22, 32), (22, 33), (23, 25), (23, 27), (23, 29), (23, 32), (23, 33),
+    (24, 25), (24, 27), (24, 31), (25, 31), (26, 29), (26, 33), (27, 33),
+    (28, 31), (28, 33), (29, 32), (29, 33), (30, 32), (30, 33), (31, 32),
+    (31, 33), (32, 33),
+];
+
+/// Standard 4-community modularity assignment (Newman).
+pub const KARATE_COMMUNITIES: [u32; 34] = [
+    0, 0, 0, 0, 1, 1, 1, 0, 2, 2, 1, 0, 0, 0, 2, 2, 1, 0, 2, 0, 2, 0, 2, 3,
+    3, 3, 2, 3, 3, 2, 2, 3, 2, 2,
+];
+
+/// Build the karate dataset with synthetic class-informative features.
+pub fn karate(seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let graph = Graph::from_edges(34, &KARATE_EDGES);
+    let labels = KARATE_COMMUNITIES.to_vec();
+    let d = 16;
+    let k = 4;
+    let mut centroids = Matrix::zeros(k, d);
+    for c in 0..k {
+        for j in 0..d {
+            centroids.set(c, j, rng.normal() * 2.0);
+        }
+    }
+    let mut features = Matrix::zeros(34, d);
+    for v in 0..34 {
+        let c = labels[v] as usize;
+        for j in 0..d {
+            features.set(v, j, centroids.get(c, j) + 0.5 * rng.normal());
+        }
+    }
+    // 50/25/25 split, stratified
+    let split = super::splits::stratified_split(&labels, k, 0.5, 0.25, &mut rng);
+    Dataset {
+        name: "karate".into(),
+        graph,
+        features,
+        labels,
+        n_class: k,
+        split,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Split;
+
+    #[test]
+    fn karate_structure() {
+        let ds = karate(0);
+        assert_eq!(ds.n(), 34);
+        assert_eq!(ds.graph.m(), 78);
+        // node 33 (the instructor) has the max degree, 17
+        assert_eq!(ds.graph.degree(33), 17);
+        assert_eq!(ds.graph.max_degree(), 17);
+        ds.validate().unwrap();
+    }
+
+    #[test]
+    fn karate_split_covers_all() {
+        let ds = karate(3);
+        assert!(ds.nodes_in_split(Split::Train).len() >= 15);
+        assert!(!ds.nodes_in_split(Split::Val).is_empty());
+        assert!(!ds.nodes_in_split(Split::Test).is_empty());
+    }
+}

@@ -1,0 +1,206 @@
+//! Graph substrate: CSR graphs, node-classification datasets, generators.
+//!
+//! The paper evaluates on OGB-Arxiv / Flickr / Reddit / OGB-Products.
+//! Those cannot be downloaded here, so [`registry`] provides synthetic
+//! stochastic-block-model stand-ins matched in relative density, feature
+//! dimension and class count (DESIGN.md §2), plus the real Zachary
+//! karate-club graph for sanity tests.
+
+pub mod generators;
+pub mod io;
+pub mod karate;
+pub mod registry;
+pub mod splits;
+pub mod stats;
+
+use crate::tensor::Matrix;
+
+/// Undirected graph in CSR form.  Edges are stored in both directions;
+/// no self-loops (GCN normalization adds them).
+#[derive(Debug, Clone)]
+pub struct Graph {
+    /// Row offsets, length n+1.
+    pub offsets: Vec<usize>,
+    /// Column indices (neighbor ids), length 2|E|.
+    pub targets: Vec<u32>,
+}
+
+impl Graph {
+    /// Build from an undirected edge list (u, v); duplicates and
+    /// self-loops are dropped.
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Self {
+        let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for &(u, v) in edges {
+            let (u, v) = (u as usize, v as usize);
+            assert!(u < n && v < n, "edge ({u},{v}) out of range n={n}");
+            if u == v {
+                continue;
+            }
+            adj[u].push(v as u32);
+            adj[v].push(u as u32);
+        }
+        for l in &mut adj {
+            l.sort_unstable();
+            l.dedup();
+        }
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut targets = Vec::new();
+        offsets.push(0);
+        for l in &adj {
+            targets.extend_from_slice(l);
+            offsets.push(targets.len());
+        }
+        Graph { offsets, targets }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of undirected edges.
+    pub fn m(&self) -> usize {
+        self.targets.len() / 2
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.targets[self.offsets[v]..self.offsets[v + 1]]
+    }
+
+    #[inline]
+    pub fn degree(&self, v: usize) -> usize {
+        self.offsets[v + 1] - self.offsets[v]
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.n()).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+
+    pub fn avg_degree(&self) -> f64 {
+        if self.n() == 0 {
+            return 0.0;
+        }
+        self.targets.len() as f64 / self.n() as f64
+    }
+
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.neighbors(u).binary_search(&(v as u32)).is_ok()
+    }
+
+    /// GCN symmetric normalization weight for edge (u, v) including
+    /// self-loops: 1 / sqrt((d_u + 1)(d_v + 1)).
+    #[inline]
+    pub fn norm_weight(&self, u: usize, v: usize) -> f32 {
+        let du = (self.degree(u) + 1) as f32;
+        let dv = (self.degree(v) + 1) as f32;
+        1.0 / (du * dv).sqrt()
+    }
+}
+
+/// Per-node split assignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+    Test,
+}
+
+/// A node-classification dataset: graph + features + labels + split.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub graph: Graph,
+    /// (n, d_in) node features.
+    pub features: Matrix,
+    /// Node labels in [0, n_class).
+    pub labels: Vec<u32>,
+    pub n_class: usize,
+    pub split: Vec<Split>,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.graph.n()
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.features.cols
+    }
+
+    pub fn nodes_in_split(&self, s: Split) -> Vec<usize> {
+        (0..self.n()).filter(|&v| self.split[v] == s).collect()
+    }
+
+    /// Basic structural validation (used by tests and the CLI loader).
+    pub fn validate(&self) -> crate::Result<()> {
+        let n = self.n();
+        if self.features.rows != n {
+            return Err(crate::eyre!("features rows {} != n {}", self.features.rows, n));
+        }
+        if self.labels.len() != n || self.split.len() != n {
+            return Err(crate::eyre!("labels/split length mismatch"));
+        }
+        if let Some(&l) = self.labels.iter().find(|&&l| l as usize >= self.n_class) {
+            return Err(crate::eyre!("label {l} >= n_class {}", self.n_class));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path_graph(n: usize) -> Graph {
+        let edges: Vec<(u32, u32)> = (0..n as u32 - 1).map(|i| (i, i + 1)).collect();
+        Graph::from_edges(n, &edges)
+    }
+
+    #[test]
+    fn csr_from_edges_basic() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3), (0, 1)]);
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.m(), 3); // duplicate dropped
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.degree(0), 1);
+        assert!(g.has_edge(2, 3));
+        assert!(!g.has_edge(0, 3));
+    }
+
+    #[test]
+    fn self_loops_dropped() {
+        let g = Graph::from_edges(3, &[(0, 0), (0, 1)]);
+        assert_eq!(g.m(), 1);
+        assert!(!g.has_edge(0, 0));
+    }
+
+    #[test]
+    fn degrees_and_stats() {
+        let g = path_graph(5);
+        assert_eq!(g.max_degree(), 2);
+        assert!((g.avg_degree() - 8.0 / 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn norm_weight_symmetric() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 2)]);
+        assert!((g.norm_weight(0, 1) - g.norm_weight(1, 0)).abs() < 1e-9);
+        // d0=1, d1=2 -> 1/sqrt(2*3)
+        assert!((g.norm_weight(0, 1) - 1.0 / 6.0f32.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn validate_catches_bad_labels() {
+        let g = path_graph(3);
+        let ds = Dataset {
+            name: "bad".into(),
+            graph: g,
+            features: Matrix::zeros(3, 2),
+            labels: vec![0, 1, 5],
+            n_class: 2,
+            split: vec![Split::Train; 3],
+        };
+        assert!(ds.validate().is_err());
+    }
+}

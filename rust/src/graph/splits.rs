@@ -1,0 +1,79 @@
+//! Stratified train/val/test splits (per-class proportional sampling),
+//! matching the paper's per-dataset split fractions (Table 3).
+
+use super::Split;
+use crate::util::Rng;
+
+/// Assign each node a split, stratified by label so every class appears
+/// in every split (when large enough).
+pub fn stratified_split(
+    labels: &[u32],
+    n_class: usize,
+    train_frac: f64,
+    val_frac: f64,
+    rng: &mut Rng,
+) -> Vec<Split> {
+    assert!(train_frac >= 0.0 && val_frac >= 0.0 && train_frac + val_frac <= 1.0);
+    let n = labels.len();
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); n_class];
+    for (v, &l) in labels.iter().enumerate() {
+        by_class[l as usize].push(v);
+    }
+    let mut split = vec![Split::Test; n];
+    for nodes in by_class.iter_mut() {
+        rng.shuffle(nodes);
+        let n_train = (nodes.len() as f64 * train_frac).round() as usize;
+        let n_val = (nodes.len() as f64 * val_frac).round() as usize;
+        for (i, &v) in nodes.iter().enumerate() {
+            split[v] = if i < n_train {
+                Split::Train
+            } else if i < n_train + n_val {
+                Split::Val
+            } else {
+                Split::Test
+            };
+        }
+    }
+    split
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractions_respected() {
+        let mut rng = Rng::new(0);
+        let labels: Vec<u32> = (0..1000).map(|i| (i % 5) as u32).collect();
+        let split = stratified_split(&labels, 5, 0.5, 0.25, &mut rng);
+        let train = split.iter().filter(|&&s| s == Split::Train).count();
+        let val = split.iter().filter(|&&s| s == Split::Val).count();
+        let test = split.iter().filter(|&&s| s == Split::Test).count();
+        assert_eq!(train, 500);
+        assert_eq!(val, 250);
+        assert_eq!(test, 250);
+    }
+
+    #[test]
+    fn stratification_per_class() {
+        let mut rng = Rng::new(1);
+        let labels: Vec<u32> = (0..300).map(|i| (i % 3) as u32).collect();
+        let split = stratified_split(&labels, 3, 0.6, 0.2, &mut rng);
+        for c in 0..3u32 {
+            let train_c = labels
+                .iter()
+                .zip(&split)
+                .filter(|(&l, &s)| l == c && s == Split::Train)
+                .count();
+            assert_eq!(train_c, 60);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let labels: Vec<u32> = (0..100).map(|i| (i % 4) as u32).collect();
+        let a = stratified_split(&labels, 4, 0.5, 0.3, &mut Rng::new(7));
+        let b = stratified_split(&labels, 4, 0.5, 0.3, &mut Rng::new(7));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,64 @@
+//! Graph statistics used by dataset reports and experiment logs.
+
+use super::Graph;
+
+#[derive(Debug, Clone)]
+pub struct GraphStats {
+    pub nodes: usize,
+    pub edges: usize,
+    pub avg_degree: f64,
+    pub max_degree: usize,
+    pub isolated: usize,
+    /// Degree at the 50th / 90th / 99th percentile.
+    pub deg_p50: usize,
+    pub deg_p90: usize,
+    pub deg_p99: usize,
+}
+
+pub fn graph_stats(g: &Graph) -> GraphStats {
+    let n = g.n();
+    let mut degs: Vec<usize> = (0..n).map(|v| g.degree(v)).collect();
+    degs.sort_unstable();
+    let pct = |p: f64| -> usize {
+        if n == 0 {
+            0
+        } else {
+            degs[((n as f64 - 1.0) * p) as usize]
+        }
+    };
+    GraphStats {
+        nodes: n,
+        edges: g.m(),
+        avg_degree: g.avg_degree(),
+        max_degree: g.max_degree(),
+        isolated: degs.iter().filter(|&&d| d == 0).count(),
+        deg_p50: pct(0.5),
+        deg_p90: pct(0.9),
+        deg_p99: pct(0.99),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    #[test]
+    fn stats_on_star_graph() {
+        // star: node 0 connected to 1..=9
+        let edges: Vec<(u32, u32)> = (1..10).map(|i| (0, i)).collect();
+        let g = Graph::from_edges(10, &edges);
+        let s = graph_stats(&g);
+        assert_eq!(s.nodes, 10);
+        assert_eq!(s.edges, 9);
+        assert_eq!(s.max_degree, 9);
+        assert_eq!(s.isolated, 0);
+        assert_eq!(s.deg_p50, 1);
+    }
+
+    #[test]
+    fn isolated_counted() {
+        let g = Graph::from_edges(4, &[(0, 1)]);
+        assert_eq!(graph_stats(&g).isolated, 2);
+    }
+}

@@ -1,0 +1,421 @@
+//! Subgraph plans: halo extraction and padded propagation matrices.
+//!
+//! For each partition m this module materializes everything the AOT
+//! train/eval artifacts need (paper Eq. 4/5):
+//!
+//! * `own`  — the in-subgraph nodes V_m (ascending global ids);
+//! * `halo` — the out-of-subgraph neighbors ∪_{v∈V_m} N(v) \ V_m, ranked
+//!   by connectivity to the subgraph and truncated to the artifact's
+//!   `B_pad` budget (truncation counted — it is the only place DIGEST
+//!   can lose information, and only when the artifact is under-sized);
+//! * `p_in` (S_pad, S_pad) / `p_out` (S_pad, B_pad) — the full-graph GCN
+//!   propagation matrix D̃^{-1/2}(A+I)D̃^{-1/2} split by column
+//!   ownership (P = P_in + P_out restricted to V_m's rows), or binary
+//!   attention masks for GAT (self-loops on the diagonal of every row,
+//!   including padding, so no softmax row is empty);
+//! * padded features `x`, labels `y`, and per-split masks.
+//!
+//! Zero padding is semantically inert by construction: the Python test
+//! suite asserts padding invariance of the train step
+//! (`test_train_step.py::test_padding_invariance`).
+
+use crate::graph::{Dataset, Split};
+use crate::partition::Partition;
+use crate::tensor::Matrix;
+use crate::{eyre, Result};
+
+/// Which propagation encoding the model expects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PropKind {
+    /// GCN: symmetric-normalized weights with self-loops.
+    GcnNormalized,
+    /// GAT: binary adjacency masks, diag = 1 on all rows.
+    GatMask,
+}
+
+/// Everything static about one subgraph's batch (representations and
+/// weights are supplied per step by the coordinator).
+#[derive(Debug, Clone)]
+pub struct SubgraphPlan {
+    pub part: usize,
+    pub own: Vec<u32>,
+    pub halo: Vec<u32>,
+    /// Halo nodes dropped because the artifact's B_pad was too small.
+    pub truncated_halo: usize,
+    /// Cross edges dropped due to halo truncation.
+    pub dropped_edges: usize,
+    pub s_pad: usize,
+    pub b_pad: usize,
+    pub p_in: Matrix,
+    pub p_out: Matrix,
+    /// (s_pad + b_pad, d_in): own rows then halo rows, zero padding.
+    pub x: Matrix,
+    /// (s_pad,) labels, 0 for padding.
+    pub y: Vec<i32>,
+    pub train_mask: Vec<f32>,
+    pub val_mask: Vec<f32>,
+    pub test_mask: Vec<f32>,
+}
+
+impl SubgraphPlan {
+    pub fn n_own(&self) -> usize {
+        self.own.len()
+    }
+
+    pub fn n_halo(&self) -> usize {
+        self.halo.len()
+    }
+
+    /// Paper Fig. 9 metric for this subgraph.
+    pub fn halo_ratio(&self) -> f64 {
+        if self.own.is_empty() {
+            0.0
+        } else {
+            (self.halo.len() + self.truncated_halo) as f64 / self.own.len() as f64
+        }
+    }
+
+    pub fn mask(&self, split: Split) -> &[f32] {
+        match split {
+            Split::Train => &self.train_mask,
+            Split::Val => &self.val_mask,
+            Split::Test => &self.test_mask,
+        }
+    }
+
+    /// FLOPs of one forward pass through an L-layer GNN on this plan
+    /// (dense padded shapes — what the artifact actually executes).
+    /// Used by the cost model.
+    pub fn forward_flops(&self, dims: &[usize]) -> u64 {
+        let s = self.s_pad as u64;
+        let b = self.b_pad as u64;
+        let mut flops = 0u64;
+        for w in dims.windows(2) {
+            let (din, dout) = (w[0] as u64, w[1] as u64);
+            // transform [S+B, din] @ [din, dout] + aggregate [S, S+B] @ [S+B, dout]
+            flops += 2 * (s + b) * din * dout + 2 * s * (s + b) * dout;
+        }
+        flops
+    }
+}
+
+/// Build the subgraph plan for partition `m`.
+pub fn build_plan(
+    ds: &Dataset,
+    p: &Partition,
+    m: usize,
+    s_pad: usize,
+    b_pad: usize,
+    kind: PropKind,
+) -> Result<SubgraphPlan> {
+    let g = &ds.graph;
+    let own = p.members(m);
+    if own.len() > s_pad {
+        return Err(eyre!(
+            "partition {m} has {} nodes > artifact S_pad {s_pad}",
+            own.len()
+        ));
+    }
+
+    // local index of own nodes
+    let mut own_local = std::collections::HashMap::with_capacity(own.len());
+    for (i, &v) in own.iter().enumerate() {
+        own_local.insert(v, i);
+    }
+
+    // halo candidates with connection counts
+    let mut conn: std::collections::HashMap<u32, usize> = std::collections::HashMap::new();
+    for &v in &own {
+        for &u in g.neighbors(v as usize) {
+            if !own_local.contains_key(&u) {
+                *conn.entry(u).or_insert(0) += 1;
+            }
+        }
+    }
+    let mut ranked: Vec<(u32, usize)> = conn.into_iter().collect();
+    // heaviest-connected first; id tiebreak for determinism
+    ranked.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    let keep = ranked.len().min(b_pad);
+    let truncated_halo = ranked.len() - keep;
+    let dropped_edges: usize = ranked[keep..].iter().map(|&(_, c)| c).sum();
+    let mut halo: Vec<u32> = ranked[..keep].iter().map(|&(v, _)| v).collect();
+    halo.sort_unstable(); // ascending ids for stable KVS addressing
+    let mut halo_local = std::collections::HashMap::with_capacity(halo.len());
+    for (i, &v) in halo.iter().enumerate() {
+        halo_local.insert(v, i);
+    }
+
+    // propagation matrices
+    let mut p_in = Matrix::zeros(s_pad, s_pad);
+    let mut p_out = Matrix::zeros(s_pad, b_pad);
+    for (i, &v) in own.iter().enumerate() {
+        match kind {
+            PropKind::GcnNormalized => {
+                // self-loop weight 1 / (d_v + 1)
+                let dv = (g.degree(v as usize) + 1) as f32;
+                p_in.set(i, i, 1.0 / dv);
+            }
+            PropKind::GatMask => {
+                p_in.set(i, i, 1.0);
+            }
+        }
+        for &u in g.neighbors(v as usize) {
+            let w = match kind {
+                PropKind::GcnNormalized => g.norm_weight(v as usize, u as usize),
+                PropKind::GatMask => 1.0,
+            };
+            if let Some(&j) = own_local.get(&u) {
+                p_in.set(i, j, w);
+            } else if let Some(&j) = halo_local.get(&u) {
+                p_out.set(i, j, w);
+            }
+            // else: truncated halo neighbor, edge dropped (counted above)
+        }
+    }
+    if kind == PropKind::GatMask {
+        // self-loops on padding rows keep every softmax row non-empty
+        for i in own.len()..s_pad {
+            p_in.set(i, i, 1.0);
+        }
+    }
+
+    // padded features
+    let d = ds.d_in();
+    let mut x = Matrix::zeros(s_pad + b_pad, d);
+    for (i, &v) in own.iter().enumerate() {
+        x.copy_row_from(i, ds.features.row(v as usize));
+    }
+    for (j, &v) in halo.iter().enumerate() {
+        x.copy_row_from(s_pad + j, ds.features.row(v as usize));
+    }
+
+    // labels + split masks
+    let mut y = vec![0i32; s_pad];
+    let mut train_mask = vec![0f32; s_pad];
+    let mut val_mask = vec![0f32; s_pad];
+    let mut test_mask = vec![0f32; s_pad];
+    for (i, &v) in own.iter().enumerate() {
+        y[i] = ds.labels[v as usize] as i32;
+        match ds.split[v as usize] {
+            Split::Train => train_mask[i] = 1.0,
+            Split::Val => val_mask[i] = 1.0,
+            Split::Test => test_mask[i] = 1.0,
+        }
+    }
+
+    Ok(SubgraphPlan {
+        part: m,
+        own,
+        halo,
+        truncated_halo,
+        dropped_edges,
+        s_pad,
+        b_pad,
+        p_in,
+        p_out,
+        x,
+        y,
+        train_mask,
+        val_mask,
+        test_mask,
+    })
+}
+
+/// Build plans for every partition.
+pub fn build_all_plans(
+    ds: &Dataset,
+    p: &Partition,
+    s_pad: usize,
+    b_pad: usize,
+    kind: PropKind,
+) -> Result<Vec<SubgraphPlan>> {
+    (0..p.k)
+        .map(|m| build_plan(ds, p, m, s_pad, b_pad, kind))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::registry::load;
+    use crate::partition::{partition, PartitionAlgo};
+
+    fn karate_plans(kind: PropKind) -> (Dataset, Vec<SubgraphPlan>) {
+        let ds = load("karate", 0).unwrap();
+        let p = partition(&ds.graph, 2, PartitionAlgo::Metis, 0);
+        let plans = build_all_plans(&ds, &p, 32, 32, kind).unwrap();
+        (ds, plans)
+    }
+
+    #[test]
+    fn own_and_halo_disjoint_and_complete() {
+        let (ds, plans) = karate_plans(PropKind::GcnNormalized);
+        let mut all_own: Vec<u32> = plans.iter().flat_map(|p| p.own.clone()).collect();
+        all_own.sort_unstable();
+        assert_eq!(all_own, (0..ds.n() as u32).collect::<Vec<_>>());
+        for plan in &plans {
+            for h in &plan.halo {
+                assert!(!plan.own.contains(h));
+            }
+        }
+    }
+
+    #[test]
+    fn gcn_p_split_preserves_full_row_weight() {
+        // P_in + P_out row sums must equal the full-graph P row sums (no
+        // weight lost when B_pad is large enough).
+        let (ds, plans) = karate_plans(PropKind::GcnNormalized);
+        let g = &ds.graph;
+        for plan in &plans {
+            assert_eq!(plan.truncated_halo, 0);
+            for (i, &v) in plan.own.iter().enumerate() {
+                let vd = v as usize;
+                let mut want = 1.0 / (g.degree(vd) + 1) as f32;
+                for &u in g.neighbors(vd) {
+                    want += g.norm_weight(vd, u as usize);
+                }
+                let got: f32 = plan.p_in.row(i).iter().sum::<f32>()
+                    + plan.p_out.row(i).iter().sum::<f32>();
+                assert!((got - want).abs() < 1e-5, "row {v}: {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn gat_masks_binary_with_full_diag() {
+        let (_, plans) = karate_plans(PropKind::GatMask);
+        for plan in &plans {
+            for i in 0..plan.s_pad {
+                assert_eq!(plan.p_in.get(i, i), 1.0, "diag row {i}");
+            }
+            assert!(plan
+                .p_in
+                .data
+                .iter()
+                .chain(&plan.p_out.data)
+                .all(|&v| v == 0.0 || v == 1.0));
+        }
+    }
+
+    #[test]
+    fn padding_rows_are_zero() {
+        let (_, plans) = karate_plans(PropKind::GcnNormalized);
+        for plan in &plans {
+            let s_real = plan.n_own();
+            for i in s_real..plan.s_pad {
+                assert!(plan.p_in.row(i).iter().all(|&v| v == 0.0));
+                assert!(plan.p_out.row(i).iter().all(|&v| v == 0.0));
+                assert!(plan.x.row(i).iter().all(|&v| v == 0.0));
+                assert_eq!(plan.train_mask[i], 0.0);
+            }
+            for j in plan.n_halo()..plan.b_pad {
+                assert!(plan.x.row(plan.s_pad + j).iter().all(|&v| v == 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn features_copied_correctly() {
+        let (ds, plans) = karate_plans(PropKind::GcnNormalized);
+        for plan in &plans {
+            for (i, &v) in plan.own.iter().enumerate() {
+                assert_eq!(plan.x.row(i), ds.features.row(v as usize));
+            }
+            for (j, &v) in plan.halo.iter().enumerate() {
+                assert_eq!(plan.x.row(plan.s_pad + j), ds.features.row(v as usize));
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_keeps_heaviest_connected() {
+        let ds = load("karate", 0).unwrap();
+        let p = partition(&ds.graph, 2, PartitionAlgo::Metis, 0);
+        let full = build_plan(&ds, &p, 0, 32, 32, PropKind::GcnNormalized).unwrap();
+        let tiny_b = 3usize;
+        let trunc = build_plan(&ds, &p, 0, 32, tiny_b, PropKind::GcnNormalized).unwrap();
+        assert_eq!(trunc.halo.len(), tiny_b);
+        assert_eq!(trunc.truncated_halo, full.halo.len() - tiny_b);
+        assert!(trunc.dropped_edges > 0);
+        // kept halo nodes must each have >= connections than any dropped one
+        let conn = |h: u32| -> usize {
+            full.own
+                .iter()
+                .filter(|&&v| ds.graph.has_edge(v as usize, h as usize))
+                .count()
+        };
+        let min_kept = trunc.halo.iter().map(|&h| conn(h)).min().unwrap();
+        let dropped: Vec<u32> = full
+            .halo
+            .iter()
+            .copied()
+            .filter(|h| !trunc.halo.contains(h))
+            .collect();
+        let max_dropped = dropped.iter().map(|&h| conn(h)).max().unwrap();
+        assert!(min_kept >= max_dropped);
+    }
+
+    #[test]
+    fn oversized_partition_errors() {
+        let ds = load("karate", 0).unwrap();
+        let p = partition(&ds.graph, 1, PartitionAlgo::Metis, 0);
+        assert!(build_plan(&ds, &p, 0, 16, 16, PropKind::GcnNormalized).is_err());
+    }
+
+    #[test]
+    fn forward_flops_positive_and_monotone() {
+        let (_, plans) = karate_plans(PropKind::GcnNormalized);
+        let f2 = plans[0].forward_flops(&[16, 16, 4]);
+        let f3 = plans[0].forward_flops(&[16, 16, 16, 4]);
+        assert!(f2 > 0);
+        assert!(f3 > f2);
+    }
+
+    #[test]
+    fn prop_halo_invariants_random_graphs() {
+        use crate::graph::generators::{generate_sbm, SbmParams};
+        crate::util::prop::prop_check(15, |rng| {
+            let n = 40 + rng.below(80);
+            let k = 2 + rng.below(3);
+            let ds = generate_sbm(&SbmParams {
+                name: "prop".into(),
+                nodes: n,
+                communities: 4,
+                intra_degree: 6.0,
+                inter_degree: 2.0,
+                d_in: 8,
+                signal: 1.0,
+                skew: 0.0,
+                label_noise: 0.0,
+                train_frac: 0.5,
+                val_frac: 0.25,
+                seed: rng.next_u64(),
+            });
+            let p = partition(&ds.graph, k, PartitionAlgo::Metis, rng.next_u64());
+            let s_pad = ds.n(); // generous
+            let plans = build_all_plans(&ds, &p, s_pad, s_pad, PropKind::GcnNormalized)
+                .map_err(|e| e.to_string())?;
+            // every cross edge appears in exactly one p_out entry per side
+            for plan in &plans {
+                crate::prop_assert!(plan.truncated_halo == 0, "no truncation expected");
+                for (i, &v) in plan.own.iter().enumerate() {
+                    for &u in ds.graph.neighbors(v as usize) {
+                        let in_own = plan.own.binary_search(&u).is_ok();
+                        let hj = plan.halo.binary_search(&u);
+                        crate::prop_assert!(
+                            in_own != hj.is_ok(),
+                            "neighbor {u} must be own XOR halo"
+                        );
+                        if let Ok(j) = hj {
+                            crate::prop_assert!(
+                                plan.p_out.get(i, j) > 0.0,
+                                "cross edge ({v},{u}) missing from p_out"
+                            );
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

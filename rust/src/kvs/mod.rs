@@ -1,0 +1,354 @@
+//! Shared-memory representation KVS — the paper's Plasma substitute.
+//!
+//! Stores per-(layer, node) stale representations h̃_v^(ℓ).  Workers
+//! `push` their fresh in-subgraph rows after local training and `pull`
+//! the halo rows they need before the next synchronized epoch (Alg. 1
+//! lines 5-6 / 9-10).
+//!
+//! Design points mirroring the paper's system section:
+//!
+//! * **sharded** — keys hash across `n_shards` independent mutexes, so
+//!   concurrent workers don't serialize (the paper's "parallel I/O at
+//!   node granularity");
+//! * **versioned** — every entry records the epoch that wrote it, so
+//!   staleness age is measurable (feeds the Thm 1 experiment) and
+//!   DIGEST-A can quantify bounded delay;
+//! * **metered** — byte counters for every pull/push feed the §3.3
+//!   communication-cost accounting and the cost model.
+//!
+//! Missing entries pull as zeros with version 0 — exactly the cold-start
+//! semantics of GNNAutoscale-style historical embeddings (first epoch
+//! approximates out-of-subgraph representations by zero until the first
+//! push lands).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::tensor::Matrix;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct Key {
+    layer: u16,
+    node: u32,
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    version: u64,
+    data: Vec<f32>,
+}
+
+/// Aggregate KVS traffic statistics (monotonic counters).
+#[derive(Debug, Default)]
+pub struct KvsMetrics {
+    pub pulls: AtomicU64,
+    pub pushes: AtomicU64,
+    pub pulled_rows: AtomicU64,
+    pub pushed_rows: AtomicU64,
+    pub pulled_bytes: AtomicU64,
+    pub pushed_bytes: AtomicU64,
+    pub misses: AtomicU64,
+}
+
+impl KvsMetrics {
+    pub fn snapshot(&self) -> KvsSnapshot {
+        KvsSnapshot {
+            pulls: self.pulls.load(Ordering::Relaxed),
+            pushes: self.pushes.load(Ordering::Relaxed),
+            pulled_rows: self.pulled_rows.load(Ordering::Relaxed),
+            pushed_rows: self.pushed_rows.load(Ordering::Relaxed),
+            pulled_bytes: self.pulled_bytes.load(Ordering::Relaxed),
+            pushed_bytes: self.pushed_bytes.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvsSnapshot {
+    pub pulls: u64,
+    pub pushes: u64,
+    pub pulled_rows: u64,
+    pub pushed_rows: u64,
+    pub pulled_bytes: u64,
+    pub pushed_bytes: u64,
+    pub misses: u64,
+}
+
+impl KvsSnapshot {
+    pub fn total_bytes(&self) -> u64 {
+        self.pulled_bytes + self.pushed_bytes
+    }
+}
+
+/// Result metadata of a pull.
+#[derive(Debug, Clone, Copy)]
+pub struct PullInfo {
+    pub found: usize,
+    pub missing: usize,
+    /// Oldest (minimum) version among found rows; u64::MAX if none found.
+    pub oldest_version: u64,
+    /// Newest version among found rows; 0 if none.
+    pub newest_version: u64,
+}
+
+/// The sharded stale-representation store.
+pub struct RepStore {
+    shards: Vec<Mutex<HashMap<Key, Entry>>>,
+    pub metrics: KvsMetrics,
+}
+
+impl RepStore {
+    pub fn new(n_shards: usize) -> Self {
+        assert!(n_shards > 0);
+        RepStore {
+            shards: (0..n_shards).map(|_| Mutex::new(HashMap::new())).collect(),
+            metrics: KvsMetrics::default(),
+        }
+    }
+
+    #[inline]
+    fn shard(&self, k: &Key) -> &Mutex<HashMap<Key, Entry>> {
+        // fibonacci-hash the node id across shards
+        let h = (k.node as u64 ^ ((k.layer as u64) << 32)).wrapping_mul(0x9E3779B97F4A7C15);
+        &self.shards[(h >> 32) as usize % self.shards.len()]
+    }
+
+    /// Push rows of `reps` (one per node id) for `layer` at `version`.
+    /// `reps.rows` may exceed `nodes.len()` (padded matrices) — only the
+    /// first `nodes.len()` rows are stored.
+    pub fn push(&self, layer: usize, nodes: &[u32], reps: &Matrix, version: u64) {
+        assert!(reps.rows >= nodes.len(), "push: fewer rep rows than nodes");
+        for (i, &v) in nodes.iter().enumerate() {
+            let key = Key {
+                layer: layer as u16,
+                node: v,
+            };
+            let mut shard = self.shard(&key).lock().unwrap();
+            shard.insert(
+                key,
+                Entry {
+                    version,
+                    data: reps.row(i).to_vec(),
+                },
+            );
+        }
+        self.metrics.pushes.fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .pushed_rows
+            .fetch_add(nodes.len() as u64, Ordering::Relaxed);
+        self.metrics
+            .pushed_bytes
+            .fetch_add((nodes.len() * reps.cols * 4) as u64, Ordering::Relaxed);
+    }
+
+    /// Pull rows for `nodes` at `layer` into a fresh (rows_pad, d) matrix
+    /// (rows beyond `nodes.len()` stay zero).  Missing nodes yield zero
+    /// rows (cold start).
+    pub fn pull(
+        &self,
+        layer: usize,
+        nodes: &[u32],
+        d: usize,
+        rows_pad: usize,
+    ) -> (Matrix, PullInfo) {
+        assert!(rows_pad >= nodes.len());
+        let mut out = Matrix::zeros(rows_pad, d);
+        let mut info = PullInfo {
+            found: 0,
+            missing: 0,
+            oldest_version: u64::MAX,
+            newest_version: 0,
+        };
+        for (i, &v) in nodes.iter().enumerate() {
+            let key = Key {
+                layer: layer as u16,
+                node: v,
+            };
+            let shard = self.shard(&key).lock().unwrap();
+            match shard.get(&key) {
+                Some(e) => {
+                    assert_eq!(e.data.len(), d, "stored rep dim mismatch");
+                    out.copy_row_from(i, &e.data);
+                    info.found += 1;
+                    info.oldest_version = info.oldest_version.min(e.version);
+                    info.newest_version = info.newest_version.max(e.version);
+                }
+                None => info.missing += 1,
+            }
+        }
+        self.metrics.pulls.fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .pulled_rows
+            .fetch_add(nodes.len() as u64, Ordering::Relaxed);
+        self.metrics
+            .pulled_bytes
+            .fetch_add((nodes.len() * d * 4) as u64, Ordering::Relaxed);
+        self.metrics
+            .misses
+            .fetch_add(info.missing as u64, Ordering::Relaxed);
+        (out, info)
+    }
+
+    /// Number of stored entries (all layers).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop everything (between experiment repetitions).
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(rows: usize, cols: usize, base: f32) -> Matrix {
+        Matrix::from_fn(rows, cols, |r, c| base + (r * cols + c) as f32)
+    }
+
+    #[test]
+    fn push_then_pull_round_trips() {
+        let kvs = RepStore::new(4);
+        let nodes = [3u32, 9, 127];
+        let reps = mat(3, 5, 10.0);
+        kvs.push(1, &nodes, &reps, 7);
+        let (out, info) = kvs.pull(1, &nodes, 5, 3);
+        assert_eq!(out.data, reps.data);
+        assert_eq!(info.found, 3);
+        assert_eq!(info.missing, 0);
+        assert_eq!(info.oldest_version, 7);
+        assert_eq!(info.newest_version, 7);
+    }
+
+    #[test]
+    fn missing_nodes_pull_zeros() {
+        let kvs = RepStore::new(2);
+        kvs.push(0, &[1], &mat(1, 4, 1.0), 1);
+        let (out, info) = kvs.pull(0, &[1, 2], 4, 4);
+        assert_eq!(out.row(0), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(out.row(1), &[0.0; 4]);
+        assert_eq!(out.row(3), &[0.0; 4]); // padding row
+        assert_eq!(info.found, 1);
+        assert_eq!(info.missing, 1);
+    }
+
+    #[test]
+    fn layers_are_independent_namespaces() {
+        let kvs = RepStore::new(4);
+        kvs.push(0, &[5], &mat(1, 2, 1.0), 1);
+        kvs.push(1, &[5], &mat(1, 2, 100.0), 2);
+        let (l0, _) = kvs.pull(0, &[5], 2, 1);
+        let (l1, _) = kvs.pull(1, &[5], 2, 1);
+        assert_eq!(l0.row(0), &[1.0, 2.0]);
+        assert_eq!(l1.row(0), &[100.0, 101.0]);
+    }
+
+    #[test]
+    fn newer_push_overwrites_and_version_advances() {
+        let kvs = RepStore::new(1);
+        kvs.push(0, &[7], &mat(1, 3, 0.0), 1);
+        kvs.push(0, &[7], &mat(1, 3, 50.0), 4);
+        let (out, info) = kvs.pull(0, &[7], 3, 1);
+        assert_eq!(out.row(0), &[50.0, 51.0, 52.0]);
+        assert_eq!(info.oldest_version, 4);
+    }
+
+    #[test]
+    fn push_with_padded_matrix_only_stores_real_rows() {
+        let kvs = RepStore::new(2);
+        let padded = mat(8, 2, 0.0); // 8 rows, only 2 real
+        kvs.push(0, &[10, 11], &padded, 1);
+        assert_eq!(kvs.len(), 2);
+    }
+
+    #[test]
+    fn metrics_account_bytes() {
+        let kvs = RepStore::new(2);
+        kvs.push(0, &[1, 2], &mat(2, 8, 0.0), 1);
+        kvs.pull(0, &[1, 2, 3], 8, 3);
+        let m = kvs.metrics.snapshot();
+        assert_eq!(m.pushed_bytes, 2 * 8 * 4);
+        assert_eq!(m.pulled_bytes, 3 * 8 * 4);
+        assert_eq!(m.misses, 1);
+        assert_eq!(m.total_bytes(), (2 + 3) * 8 * 4);
+    }
+
+    #[test]
+    fn concurrent_push_pull_is_safe() {
+        use std::sync::Arc;
+        let kvs = Arc::new(RepStore::new(8));
+        let mut handles = Vec::new();
+        for t in 0..4u32 {
+            let kvs = kvs.clone();
+            handles.push(std::thread::spawn(move || {
+                let nodes: Vec<u32> = (t * 100..t * 100 + 50).collect();
+                for epoch in 0..20u64 {
+                    let reps = Matrix::from_fn(50, 4, |r, c| {
+                        (t as f32) * 1000.0 + epoch as f32 + (r * 4 + c) as f32
+                    });
+                    kvs.push(0, &nodes, &reps, epoch);
+                    let (out, info) = kvs.pull(0, &nodes, 4, 50);
+                    assert_eq!(info.missing, 0);
+                    assert!(out.is_finite());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(kvs.len(), 200);
+    }
+
+    #[test]
+    fn clear_empties_store() {
+        let kvs = RepStore::new(3);
+        kvs.push(0, &[1, 2, 3], &mat(3, 2, 0.0), 1);
+        assert!(!kvs.is_empty());
+        kvs.clear();
+        assert!(kvs.is_empty());
+    }
+
+    #[test]
+    fn prop_pull_returns_latest_push() {
+        crate::util::prop::prop_check(20, |rng| {
+            let kvs = RepStore::new(1 + rng.below(8));
+            let d = 1 + rng.below(16);
+            let n_nodes = 1 + rng.below(40);
+            let nodes: Vec<u32> = (0..n_nodes as u32).collect();
+            let mut latest = vec![None::<Vec<f32>>; n_nodes];
+            for round in 0..10u64 {
+                // push a random subset
+                let k = 1 + rng.below(n_nodes);
+                let subset: Vec<u32> =
+                    rng.sample_indices(n_nodes, k).iter().map(|&i| i as u32).collect();
+                let reps = Matrix::from_fn(k, d, |_, _| rng.normal());
+                kvs.push(0, &subset, &reps, round);
+                for (i, &v) in subset.iter().enumerate() {
+                    latest[v as usize] = Some(reps.row(i).to_vec());
+                }
+            }
+            let (out, _) = kvs.pull(0, &nodes, d, n_nodes);
+            for (v, want) in latest.iter().enumerate() {
+                let got = out.row(v);
+                match want {
+                    Some(w) => crate::prop_assert!(got == &w[..], "node {v} stale data"),
+                    None => crate::prop_assert!(
+                        got.iter().all(|&x| x == 0.0),
+                        "unpushed node {v} must be zero"
+                    ),
+                }
+            }
+            Ok(())
+        });
+    }
+}

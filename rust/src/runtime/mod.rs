@@ -1,0 +1,494 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the coordinator hot path.  Python is never involved at runtime.
+//!
+//! Pipeline (see /opt/xla-example/load_hlo for the reference wiring):
+//!
+//! ```text
+//! HLO text --HloModuleProto::from_text_file--> proto
+//!          --XlaComputation::from_proto------> computation
+//!          --PjRtClient::compile-------------> loaded executable (cached)
+//!          --execute(literals)---------------> output tuple literals
+//! ```
+//!
+//! HLO **text** (not serialized proto) is the interchange format because
+//! jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+pub use manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
+
+use crate::halo::SubgraphPlan;
+use crate::tensor::Matrix;
+use crate::util::Rng;
+use crate::{eyre, Result};
+
+/// Owns the PJRT client, the manifest, and the compiled-executable cache.
+///
+/// Executables wrap C pointers and are not `Send`; the coordinator runs
+/// all PJRT executions from one thread (virtual-clock parallelism — see
+/// `coordinator`), which also matches the single-CPU testbed.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    exes: Mutex<HashMap<(String, String), std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    /// Monotonic counters for profiling.
+    pub stats: Mutex<RuntimeStats>,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RuntimeStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub execute_seconds: f64,
+    pub pack_seconds: f64,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| eyre!("PJRT cpu client: {e}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            exes: Mutex::new(HashMap::new()),
+            stats: Mutex::new(RuntimeStats::default()),
+        })
+    }
+
+    /// Compile (or fetch cached) the executable for (name, kind).
+    pub fn load(&self, name: &str, kind: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        let key = (name.to_string(), kind.to_string());
+        if let Some(exe) = self.exes.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.get(name, kind)?;
+        let path = self.manifest.hlo_path(spec);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| eyre!("non-utf8 artifact path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| eyre!("parsing {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| eyre!("compiling {name}/{kind}: {e}"))?;
+        self.stats.lock().unwrap().compiles += 1;
+        let rc = std::rc::Rc::new(exe);
+        self.exes
+            .lock()
+            .unwrap()
+            .insert(key, rc.clone());
+        Ok(rc)
+    }
+
+    /// Execute artifact (name, kind) with packed input literals; returns
+    /// the decomposed output tuple.  Accepts owned literals or
+    /// references (the cached hot path passes `&[&Literal]`).
+    pub fn execute<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        name: &str,
+        kind: &str,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(name, kind)?;
+        let t0 = std::time::Instant::now();
+        let result = exe
+            .execute::<L>(inputs)
+            .map_err(|e| eyre!("executing {name}/{kind}: {e}"))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| eyre!("fetching result of {name}/{kind}: {e}"))?;
+        let parts = tuple
+            .decompose_tuple()
+            .map_err(|e| eyre!("decomposing result tuple: {e}"))?;
+        let mut stats = self.stats.lock().unwrap();
+        stats.executions += 1;
+        stats.execute_seconds += t0.elapsed().as_secs_f64();
+        Ok(parts)
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        *self.stats.lock().unwrap()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal packing / unpacking
+// ---------------------------------------------------------------------------
+
+/// Pack an f32 matrix as a literal with the spec's shape.
+pub fn pack_matrix(spec: &TensorSpec, m: &Matrix) -> Result<xla::Literal> {
+    if spec.dtype != DType::F32 {
+        return Err(eyre!("{}: expected f32", spec.name));
+    }
+    if m.data.len() != spec.elements() {
+        return Err(eyre!(
+            "{}: have {} elements, spec wants {:?}",
+            spec.name,
+            m.data.len(),
+            spec.shape
+        ));
+    }
+    if spec.shape.len() == 2 && !(m.rows == spec.shape[0] && m.cols == spec.shape[1]) {
+        // allow (1, n) <-> (n,) style reshapes only when unambiguous
+        if m.rows != 1 {
+            return Err(eyre!(
+                "{}: matrix {}x{} vs spec {:?}",
+                spec.name,
+                m.rows,
+                m.cols,
+                spec.shape
+            ));
+        }
+    }
+    let lit = xla::Literal::vec1(&m.data);
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| eyre!("reshape {}: {e}", spec.name))
+}
+
+/// Pack an f32 slice (1-D specs).
+pub fn pack_f32(spec: &TensorSpec, v: &[f32]) -> Result<xla::Literal> {
+    if v.len() != spec.elements() {
+        return Err(eyre!("{}: {} vs {:?}", spec.name, v.len(), spec.shape));
+    }
+    Ok(xla::Literal::vec1(v))
+}
+
+/// Pack an i32 slice.
+pub fn pack_i32(spec: &TensorSpec, v: &[i32]) -> Result<xla::Literal> {
+    if spec.dtype != DType::I32 || v.len() != spec.elements() {
+        return Err(eyre!("{}: bad i32 pack", spec.name));
+    }
+    Ok(xla::Literal::vec1(v))
+}
+
+/// Unpack a literal into a Matrix using the spec's (2-D or 1-D) shape.
+pub fn unpack_matrix(spec: &TensorSpec, lit: &xla::Literal) -> Result<Matrix> {
+    let data = lit
+        .to_vec::<f32>()
+        .map_err(|e| eyre!("unpack {}: {e}", spec.name))?;
+    let (rows, cols) = match spec.shape.len() {
+        2 => (spec.shape[0], spec.shape[1]),
+        1 => (1, spec.shape[0]),
+        0 => (1, 1),
+        _ => return Err(eyre!("{}: rank > 2 unsupported", spec.name)),
+    };
+    if data.len() != rows * cols {
+        return Err(eyre!("{}: got {} elements", spec.name, data.len()));
+    }
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+fn unpack_scalar(spec: &TensorSpec, lit: &xla::Literal) -> Result<f32> {
+    let v = lit
+        .to_vec::<f32>()
+        .map_err(|e| eyre!("unpack {}: {e}", spec.name))?;
+    v.first()
+        .copied()
+        .ok_or_else(|| eyre!("{}: empty scalar", spec.name))
+}
+
+// ---------------------------------------------------------------------------
+// Step-level IO
+// ---------------------------------------------------------------------------
+
+/// Parsed outputs of one train-step execution.
+#[derive(Debug, Clone)]
+pub struct TrainOutput {
+    pub loss: f32,
+    pub ncorrect: f32,
+    pub logits: Matrix,
+    /// Fresh per-layer hidden representations (S_pad rows each).
+    pub reps: Vec<Matrix>,
+    /// Gradients in manifest parameter order.
+    pub grads: Vec<Matrix>,
+}
+
+/// Parsed outputs of one eval-step execution.
+#[derive(Debug, Clone)]
+pub struct EvalOutput {
+    pub logits: Matrix,
+    pub reps: Vec<Matrix>,
+}
+
+/// Pack the full train/eval input list for one subgraph step.
+///
+/// Order (the manifest contract): x, p_in, p_out, h_stale_0..L-2,
+/// per-layer params, y, mask.
+pub fn pack_step_inputs(
+    spec: &ArtifactSpec,
+    plan: &SubgraphPlan,
+    stale: &[Matrix],
+    params: &[Matrix],
+    mask: &[f32],
+) -> Result<Vec<xla::Literal>> {
+    if stale.len() != spec.layers - 1 {
+        return Err(eyre!(
+            "need {} stale tensors, got {}",
+            spec.layers - 1,
+            stale.len()
+        ));
+    }
+    if params.len() != spec.n_params() {
+        return Err(eyre!(
+            "need {} param tensors, got {}",
+            spec.n_params(),
+            params.len()
+        ));
+    }
+    let mut lits = Vec::with_capacity(spec.inputs.len());
+    let mut idx = 0usize;
+    lits.push(pack_matrix(&spec.inputs[idx], &plan.x)?);
+    idx += 1;
+    lits.push(pack_matrix(&spec.inputs[idx], &plan.p_in)?);
+    idx += 1;
+    lits.push(pack_matrix(&spec.inputs[idx], &plan.p_out)?);
+    idx += 1;
+    for s in stale {
+        lits.push(pack_matrix(&spec.inputs[idx], s)?);
+        idx += 1;
+    }
+    for p in params {
+        lits.push(pack_matrix(&spec.inputs[idx], p)?);
+        idx += 1;
+    }
+    // eval artifacts end after the params (y/mask are train-only: unused
+    // entry parameters would be DCE'd by XLA)
+    if spec.kind == "train" {
+        lits.push(pack_i32(&spec.inputs[idx], &plan.y)?);
+        idx += 1;
+        lits.push(pack_f32(&spec.inputs[idx], mask)?);
+        idx += 1;
+    }
+    if idx != spec.inputs.len() {
+        return Err(eyre!(
+            "packed {idx} inputs, manifest expects {}",
+            spec.inputs.len()
+        ));
+    }
+    Ok(lits)
+}
+
+/// Parse a train-step output tuple.
+pub fn parse_train_output(spec: &ArtifactSpec, outs: &[xla::Literal]) -> Result<TrainOutput> {
+    if outs.len() != spec.outputs.len() {
+        return Err(eyre!(
+            "train output arity {} != manifest {}",
+            outs.len(),
+            spec.outputs.len()
+        ));
+    }
+    let loss = unpack_scalar(&spec.outputs[0], &outs[0])?;
+    let ncorrect = unpack_scalar(&spec.outputs[1], &outs[1])?;
+    let logits = unpack_matrix(&spec.outputs[2], &outs[2])?;
+    let n_reps = spec.layers - 1;
+    let off = spec.rep_output_offset();
+    let reps = (0..n_reps)
+        .map(|i| unpack_matrix(&spec.outputs[off + i], &outs[off + i]))
+        .collect::<Result<Vec<_>>>()?;
+    let goff = off + n_reps;
+    let grads = (goff..spec.outputs.len())
+        .map(|i| unpack_matrix(&spec.outputs[i], &outs[i]))
+        .collect::<Result<Vec<_>>>()?;
+    if grads.len() != spec.n_params() {
+        return Err(eyre!("grad arity {} != {}", grads.len(), spec.n_params()));
+    }
+    Ok(TrainOutput {
+        loss,
+        ncorrect,
+        logits,
+        reps,
+        grads,
+    })
+}
+
+/// Parse an eval-step output tuple.
+pub fn parse_eval_output(spec: &ArtifactSpec, outs: &[xla::Literal]) -> Result<EvalOutput> {
+    if outs.len() != spec.outputs.len() {
+        return Err(eyre!(
+            "eval output arity {} != manifest {}",
+            outs.len(),
+            spec.outputs.len()
+        ));
+    }
+    let logits = unpack_matrix(&spec.outputs[0], &outs[0])?;
+    let reps = (1..spec.outputs.len())
+        .map(|i| unpack_matrix(&spec.outputs[i], &outs[i]))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(EvalOutput { logits, reps })
+}
+
+// ---------------------------------------------------------------------------
+// Cached-literal hot path (§Perf optimization)
+// ---------------------------------------------------------------------------
+//
+// A subgraph's x, p_in, p_out, y and mask never change across epochs, and
+// its stale tensors change only on sync epochs — but the naive path
+// re-marshals all of them into fresh literals every step (the x matrix
+// alone is ~1 MB for arxiv-scale configs).  The cached path packs the
+// static inputs once per worker, the stale inputs once per pull, and the
+// parameters once per PS fetch (shared by all M workers), then assembles
+// a borrow-only argument list per execution.
+
+/// Statically-packed per-plan input literals.
+pub struct StaticInputs {
+    pub x: xla::Literal,
+    pub p_in: xla::Literal,
+    pub p_out: xla::Literal,
+    pub y: xla::Literal,
+    pub mask: xla::Literal,
+}
+
+/// Pack the inputs of `plan` that never change across epochs.
+/// `mask` selects which split trains (usually the train mask).
+pub fn pack_static_inputs(
+    spec: &ArtifactSpec,
+    plan: &SubgraphPlan,
+    mask: &[f32],
+) -> Result<StaticInputs> {
+    let n_inputs = spec.inputs.len();
+    Ok(StaticInputs {
+        x: pack_matrix(&spec.inputs[0], &plan.x)?,
+        p_in: pack_matrix(&spec.inputs[1], &plan.p_in)?,
+        p_out: pack_matrix(&spec.inputs[2], &plan.p_out)?,
+        y: pack_i32(&spec.inputs[n_inputs - 2], &plan.y)?,
+        mask: pack_f32(&spec.inputs[n_inputs - 1], mask)?,
+    })
+}
+
+/// Pack the L-1 stale tensors (done once per KVS pull, not per step).
+pub fn pack_stale(spec: &ArtifactSpec, stale: &[Matrix]) -> Result<Vec<xla::Literal>> {
+    if stale.len() != spec.layers - 1 {
+        return Err(eyre!("need {} stale tensors", spec.layers - 1));
+    }
+    stale
+        .iter()
+        .enumerate()
+        .map(|(l, s)| pack_matrix(&spec.inputs[3 + l], s))
+        .collect()
+}
+
+/// Pack the parameter tensors (done once per PS fetch, shared by all
+/// workers in the epoch).
+pub fn pack_params(spec: &ArtifactSpec, params: &[Matrix]) -> Result<Vec<xla::Literal>> {
+    if params.len() != spec.n_params() {
+        return Err(eyre!("need {} param tensors", spec.n_params()));
+    }
+    let off = spec.param_input_offset();
+    params
+        .iter()
+        .enumerate()
+        .map(|(i, p)| pack_matrix(&spec.inputs[off + i], p))
+        .collect()
+}
+
+/// Assemble the borrow-only argument list for a step execution.
+/// `kind` decides whether the trailing y/mask are included (train only).
+pub fn assemble_inputs<'a>(
+    spec: &ArtifactSpec,
+    statics: &'a StaticInputs,
+    stale: &'a [xla::Literal],
+    params: &'a [xla::Literal],
+) -> Vec<&'a xla::Literal> {
+    let mut v = Vec::with_capacity(spec.inputs.len());
+    v.push(&statics.x);
+    v.push(&statics.p_in);
+    v.push(&statics.p_out);
+    v.extend(stale.iter());
+    v.extend(params.iter());
+    if spec.kind == "train" {
+        v.push(&statics.y);
+        v.push(&statics.mask);
+    }
+    debug_assert_eq!(v.len(), spec.inputs.len());
+    v
+}
+
+/// Initialize parameters matching the artifact spec (same distribution
+/// as `python/compile/models`: Glorot-uniform W, zero b, 0.1·N(0,1)
+/// attention vectors).  Deterministic in `seed`.
+pub fn init_params(spec: &ArtifactSpec, seed: u64) -> Vec<Matrix> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(spec.n_params());
+    let off = spec.param_input_offset();
+    for t in &spec.inputs[off..off + spec.n_params()] {
+        let m = if t.name.ends_with("_w") {
+            Matrix::glorot(t.shape[0], t.shape[1], &mut rng)
+        } else if t.name.ends_with("_b") {
+            Matrix::zeros(1, t.shape[0])
+        } else {
+            // a_src / a_dst
+            Matrix::from_fn(1, t.shape[0], |_, _| 0.1 * rng.normal())
+        };
+        out.push(m);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec1(name: &str, shape: Vec<usize>, dtype: DType) -> TensorSpec {
+        TensorSpec {
+            name: name.into(),
+            shape,
+            dtype,
+        }
+    }
+
+    #[test]
+    fn pack_matrix_validates_shape() {
+        let spec = spec1("t", vec![2, 3], DType::F32);
+        assert!(pack_matrix(&spec, &Matrix::zeros(2, 3)).is_ok());
+        assert!(pack_matrix(&spec, &Matrix::zeros(3, 2)).is_err());
+        assert!(pack_matrix(&spec, &Matrix::zeros(2, 2)).is_err());
+        // (1, n) flattens into (n,) specs
+        let vecspec = spec1("b", vec![6], DType::F32);
+        assert!(pack_matrix(&vecspec, &Matrix::zeros(1, 6)).is_ok());
+    }
+
+    #[test]
+    fn pack_unpack_round_trip() {
+        let spec = spec1("t", vec![3, 4], DType::F32);
+        let m = Matrix::from_fn(3, 4, |r, c| (r * 4 + c) as f32);
+        let lit = pack_matrix(&spec, &m).unwrap();
+        let back = unpack_matrix(&spec, &lit).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn pack_i32_and_f32_validate_lengths() {
+        let yspec = spec1("y", vec![4], DType::I32);
+        assert!(pack_i32(&yspec, &[1, 2, 3, 4]).is_ok());
+        assert!(pack_i32(&yspec, &[1, 2]).is_err());
+        let mspec = spec1("mask", vec![4], DType::F32);
+        assert!(pack_f32(&mspec, &[1.0; 4]).is_ok());
+        assert!(pack_f32(&mspec, &[1.0; 5]).is_err());
+    }
+
+    #[test]
+    fn init_params_matches_manifest_spec() {
+        let m = Manifest::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).unwrap();
+        for (name, kind) in [("karate_gcn", "train"), ("karate_gat", "train")] {
+            let spec = m.get(name, kind).unwrap();
+            let params = init_params(spec, 7);
+            assert_eq!(params.len(), spec.n_params());
+            let off = spec.param_input_offset();
+            for (p, t) in params.iter().zip(&spec.inputs[off..]) {
+                assert_eq!(p.data.len(), t.elements(), "{}", t.name);
+            }
+            // deterministic
+            let again = init_params(spec, 7);
+            assert_eq!(params[0].data, again[0].data);
+            // w is non-zero, b zero
+            assert!(params[0].frobenius_norm() > 0.0);
+            assert_eq!(params[1].frobenius_norm(), 0.0);
+        }
+    }
+}

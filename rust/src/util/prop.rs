@@ -1,0 +1,59 @@
+//! Tiny property-testing driver (proptest is not in the offline crate
+//! cache).  Runs a property over many seeded random cases and reports
+//! the first failing seed so failures are reproducible; no shrinking.
+//!
+//! ```ignore
+//! prop_check(100, |rng| {
+//!     let n = 2 + rng.below(50);
+//!     let g = random_graph(rng, n);
+//!     check_invariant(&g)
+//! });
+//! ```
+
+use super::Rng;
+
+/// Run `cases` random trials of `property`; panic with the failing seed
+/// and message on the first violation.  `property` returns
+/// `Err(message)` to signal failure.
+pub fn prop_check(cases: u64, mut property: impl FnMut(&mut Rng) -> Result<(), String>) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xD1_6E57 ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        if let Err(msg) = property(&mut rng) {
+            panic!("property failed at case {seed}: {msg}");
+        }
+    }
+}
+
+/// Assert helper returning Err instead of panicking (for prop_check).
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        prop_check(50, |rng| {
+            let a = rng.below(100);
+            prop_assert!(a < 100, "below out of range: {a}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn panics_with_seed_on_failure() {
+        prop_check(50, |rng| {
+            let a = rng.below(100);
+            prop_assert!(a < 50, "half the draws fail: {a}");
+            Ok(())
+        });
+    }
+}
