@@ -1,0 +1,57 @@
+//! Wall-clock scaling of the parallel worker-execution engine: the same
+//! 4-partition synchronous DIGEST run at 1 / 2 / 4 threads.  Since the
+//! engine is bit-deterministic across thread counts, the *only* thing
+//! that changes is `total_wall` — this bench reports the speedup curve
+//! (the acceptance target is > 1.5x at 4 threads on a 4-partition run)
+//! and cross-checks that the numerics really did not move.
+
+#[path = "harness.rs"]
+mod harness;
+
+use digest::config::RunConfig;
+use digest::coordinator::sync::run_sync;
+use digest::coordinator::TrainContext;
+use harness::bench;
+
+fn main() {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("host cores: {cores}\n");
+    for ds in ["flickr-s", "arxiv-s"] {
+        let mut base = RunConfig::default();
+        base.dataset = ds.into();
+        base.parts = 4;
+        base.epochs = 2;
+        base.sync_interval = 1; // maximum KVS churn: stress concurrent pull/push
+        base.eval_every = 1000; // exclude evaluation from the measurement
+        let mut t1 = f64::NAN;
+        let mut ref_loss: Option<u64> = None;
+        for threads in [1usize, 2, 4] {
+            let mut cfg = base.clone();
+            cfg.threads = threads;
+            let ctx = TrainContext::new(cfg).unwrap();
+            // warm the executable cache so compilation never pollutes timing
+            let warm = run_sync(&ctx).unwrap();
+            let loss_bits = warm.points.last().unwrap().train_loss.to_bits();
+            match ref_loss {
+                None => ref_loss = Some(loss_bits),
+                Some(r) => assert_eq!(
+                    r, loss_bits,
+                    "numerics diverged at {threads} threads — determinism bug"
+                ),
+            }
+            let rep = bench(&format!("sync 2-epoch {ds} x4 parts, threads={threads}"), || {
+                // cold store every iteration: without this, runs after the
+                // first would pull the previous iteration's leftover reps
+                // and measure a different (warmer) workload
+                ctx.kvs.clear();
+                run_sync(&ctx).unwrap()
+            });
+            let secs = rep.mean.as_secs_f64();
+            if threads == 1 {
+                t1 = secs;
+            }
+            println!("    -> speedup vs 1 thread: {:.2}x", t1 / secs);
+        }
+        println!();
+    }
+}

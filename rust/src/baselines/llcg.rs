@@ -210,6 +210,7 @@ pub fn run_llcg(ctx: &TrainContext) -> Result<RunResult> {
         model: cfg.model.as_str().to_string(),
         parts: m_parts,
         sync_interval: cfg.sync_interval,
+        threads: 1, // baseline keeps the historical sequential loop
         seed: cfg.seed,
         points,
         epochs: breakdowns,

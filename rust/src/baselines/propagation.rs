@@ -62,7 +62,7 @@ pub fn run_propagation(ctx: &TrainContext) -> Result<RunResult> {
             }
             // ...then all pull the now-fresh halo rows
             for m in 0..m_parts {
-                io_acc[m] += pull_stale(ctx, &mut workers[m]);
+                io_acc[m] += pull_stale(ctx, &mut workers[m], r as u64);
             }
         }
 
@@ -124,6 +124,7 @@ pub fn run_propagation(ctx: &TrainContext) -> Result<RunResult> {
         model: cfg.model.as_str().to_string(),
         parts: m_parts,
         sync_interval: 1, // fresh exchange every epoch by definition
+        threads: 1, // baseline keeps the historical sequential loop
         seed: cfg.seed,
         points,
         epochs: breakdowns,

@@ -90,6 +90,10 @@ pub struct RunConfig {
     pub overlap: bool,
     /// Evaluate global val/test F1 every `eval_every` epochs.
     pub eval_every: usize,
+    /// Worker threads for the parallel execution engine; 0 = auto
+    /// (min(parts, available cores)).  Results are bit-identical across
+    /// thread counts — this only trades wall-clock for cores.
+    pub threads: usize,
     pub seed: u64,
     /// Straggler injection: worker id + delay range in virtual seconds.
     pub straggler: Option<(usize, f64, f64)>,
@@ -112,6 +116,7 @@ impl Default for RunConfig {
             weight_decay: 0.0,
             overlap: true,
             eval_every: 5,
+            threads: 0,
             seed: 42,
             straggler: None,
             artifact_dir: "artifacts".into(),
@@ -159,6 +164,9 @@ impl RunConfig {
         if let Some(v) = j.opt("eval_every") {
             c.eval_every = v.as_usize()?;
         }
+        if let Some(v) = j.opt("threads") {
+            c.threads = v.as_usize()?;
+        }
         if let Some(v) = j.opt("seed") {
             c.seed = v.as_f64()? as u64;
         }
@@ -200,6 +208,7 @@ impl RunConfig {
             "eval_every" => {
                 self.eval_every = v.parse().map_err(|e| eyre!("eval_every: {e}"))?
             }
+            "threads" => self.threads = v.parse().map_err(|e| eyre!("threads: {e}"))?,
             "seed" => self.seed = v.parse().map_err(|e| eyre!("seed: {e}"))?,
             "artifact_dir" => self.artifact_dir = v.to_string(),
             _ => return Err(eyre!("unknown config key {k:?}")),
@@ -211,8 +220,14 @@ impl RunConfig {
         if self.parts == 0 {
             return Err(eyre!("parts must be >= 1"));
         }
+        // the schedulers compute `r % sync_interval` / `r % eval_every`
+        // every epoch — reject 0 here with a clear message instead of a
+        // divide-by-zero panic deep inside the training loop
         if self.sync_interval == 0 {
             return Err(eyre!("sync_interval must be >= 1"));
+        }
+        if self.eval_every == 0 {
+            return Err(eyre!("eval_every must be >= 1"));
         }
         if self.epochs == 0 {
             return Err(eyre!("epochs must be >= 1"));
@@ -296,5 +311,32 @@ mod tests {
         assert!(RunConfig::from_json(&j).is_err());
         let j = Json::parse(r#"{"model": "rnn"}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn zero_intervals_are_validation_errors_not_panics() {
+        let mut c = RunConfig::default();
+        c.sync_interval = 0;
+        let err = c.validate().unwrap_err();
+        assert!(err.to_string().contains("sync_interval"), "{err}");
+        c.sync_interval = 1;
+        c.eval_every = 0;
+        let err = c.validate().unwrap_err();
+        assert!(err.to_string().contains("eval_every"), "{err}");
+        // and through the JSON path too
+        let j = Json::parse(r#"{"eval_every": 0}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"sync_interval": 0}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn threads_knob_parses_and_defaults_to_auto() {
+        assert_eq!(RunConfig::default().threads, 0);
+        let j = Json::parse(r#"{"threads": 4}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&j).unwrap().threads, 4);
+        let mut c = RunConfig::default();
+        c.apply_override("threads=2").unwrap();
+        assert_eq!(c.threads, 2);
     }
 }

@@ -8,22 +8,32 @@
 //!
 //! The scheduler is a classic event queue: workers' step-finish events
 //! are processed in virtual-time order, and the *real* PJRT execution of
-//! a step happens at its finish event using the parameter snapshot the
-//! worker fetched when the step started — so the numerics reproduce true
-//! asynchrony (fast workers train on newer parameters; the straggler's
-//! gradients arrive late and stale), not just the timing.
+//! a step happens with the parameter snapshot the worker fetched when
+//! the step started — so the numerics reproduce true asynchrony (fast
+//! workers train on newer parameters; the straggler's gradients arrive
+//! late and stale), not just the timing.
+//!
+//! Execution is **prefetched** onto a real thread pool (see
+//! [`super::engine::ExecPool`]): a step's inputs are frozen the moment
+//! it is scheduled, so its PJRT execution starts immediately on a pool
+//! thread and is merely *collected* when its finish event pops.  All
+//! PS/KVS mutation stays on the coordinator thread in strict event
+//! order, which keeps the run bit-identical to the sequential event
+//! loop at any thread count while the heavy compute overlaps.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::ps::{optimizer::Optimizer, ParamServer};
-use crate::util::Rng;
+use crate::runtime::SharedLiteral;
 use crate::Result;
 
 use super::context::TrainContext;
+use super::engine::{resolve_threads, ExecPool};
 use super::telemetry::{EpochBreakdown, LogPoint, RunResult};
-use super::worker::{epoch_layer_times, exec_train, pull_stale, push_reps, WorkerState};
+use super::worker::{epoch_layer_times, pull_stale, push_reps, WorkerState};
 
 /// Step-finish event on the virtual clock (min-heap by time).
 struct Ev {
@@ -58,6 +68,7 @@ impl Ord for Ev {
 pub fn run_async(ctx: &TrainContext) -> Result<RunResult> {
     let cfg = &ctx.cfg;
     let m_parts = cfg.parts;
+    let threads = resolve_threads(cfg.threads, m_parts);
     let ps = ParamServer::new(
         ctx.initial_params(),
         Optimizer::new(cfg.optimizer, cfg.lr).with_weight_decay(cfg.weight_decay),
@@ -65,141 +76,164 @@ pub fn run_async(ctx: &TrainContext) -> Result<RunResult> {
     );
     let mut workers: Vec<WorkerState> =
         (0..m_parts).map(|m| WorkerState::new(ctx, m)).collect();
-    // per-worker parameter snapshot, pre-packed as literals
-    let mut snapshots: Vec<Vec<xla::Literal>> = Vec::with_capacity(m_parts);
-    let mut rng = Rng::new(cfg.seed ^ 0xA57C_u64);
+    // per-worker parameter snapshot, pre-packed as shared literals
+    let mut snapshots: Vec<Arc<Vec<SharedLiteral>>> = Vec::with_capacity(m_parts);
 
     let t0 = Instant::now();
-    let mut queue: BinaryHeap<Ev> = BinaryHeap::new();
-    let mut ps_bytes = 0u64;
 
-    // kick off: every worker fetches and starts its first step at t=0
-    for m in 0..m_parts {
-        let (params, v) = ps.fetch();
-        workers[m].fetched_version = v;
-        snapshots.push(crate::runtime::pack_params(&ctx.spec, &params)?);
-        let pull_io = pull_stale(ctx, &mut workers[m]); // cold pull
-        let compute = ctx.cost.compute_time(m, ctx.train_flops(m));
-        let straggle = ctx.cost.straggler_delay(m, &mut rng);
-        let (comp_l, io_l) = epoch_layer_times(ctx, compute, pull_io, 0.0);
-        let t = ctx.cost.worker_epoch_time(&comp_l, &io_l, cfg.overlap, straggle)
-            + ctx.cost.param_time(ctx.param_bytes());
-        ps_bytes += ctx.param_bytes();
-        queue.push(Ev { t, worker: m });
-    }
+    std::thread::scope(|scope| -> Result<RunResult> {
+        let mut pool = ExecPool::start(scope, ctx, threads, m_parts);
+        let mut queue: BinaryHeap<Ev> = BinaryHeap::new();
+        let mut ps_bytes = 0u64;
 
-    let target_updates = cfg.epochs * m_parts;
-    let mut updates = 0usize;
-    let mut vtime = 0.0f64;
-    let mut points = Vec::new();
-    let mut breakdowns = Vec::new();
-    let mut best_val = 0.0f64;
-    let mut final_val = f64::NAN;
-    let mut final_test = f64::NAN;
-    let mut loss_acc = 0.0f64;
-    let mut loss_n = 0usize;
-    let mut last_epoch_t = 0.0f64;
+        // kick off: every worker fetches, pulls cold, and its first step
+        // starts executing on the pool immediately
+        for m in 0..m_parts {
+            let (params, v) = ps.fetch();
+            workers[m].fetched_version = v;
+            snapshots.push(Arc::new(crate::runtime::pack_params(&ctx.spec, &params)?));
+            let pull_io = pull_stale(ctx, &mut workers[m], 0); // cold pull
+            pool.dispatch(&workers[m], snapshots[m].clone());
+            let compute = ctx.cost.compute_time(m, ctx.train_flops(m));
+            let straggle = ctx.cost.straggler_delay(m, &mut workers[m].rng);
+            let (comp_l, io_l) = epoch_layer_times(ctx, compute, pull_io, 0.0);
+            let t = ctx.cost.worker_epoch_time(&comp_l, &io_l, cfg.overlap, straggle)
+                + ctx.cost.param_time(ctx.param_bytes());
+            ps_bytes += ctx.param_bytes();
+            queue.push(Ev { t, worker: m });
+        }
 
-    while updates < target_updates {
-        let ev = queue.pop().expect("event queue empty");
-        let m = ev.worker;
-        vtime = ev.t;
+        let target_updates = cfg.epochs * m_parts;
+        let mut updates = 0usize;
+        let mut vtime = 0.0f64;
+        let mut points = Vec::new();
+        let mut breakdowns = Vec::new();
+        let mut best_val = 0.0f64;
+        let mut final_val = f64::NAN;
+        let mut final_test = f64::NAN;
+        let mut loss_acc = 0.0f64;
+        let mut loss_n = 0usize;
+        let mut last_epoch_t = 0.0f64;
+        // max staleness age observed by pulls within the current
+        // epoch-equivalent logging window (M updates)
+        let mut window_age: Option<u64> = None;
 
-        // the step the worker started earlier finishes NOW: execute it
-        // with the snapshot it fetched back then
-        let (out, compute_t) = exec_train(ctx, &workers[m], &snapshots[m])?;
-        ps.submit_async(&out.grads, workers[m].fetched_version);
-        workers[m].local_epoch += 1;
-        updates += 1;
-        loss_acc += out.loss as f64;
-        loss_n += 1;
+        while updates < target_updates {
+            let ev = queue.pop().expect("event queue empty");
+            let m = ev.worker;
+            vtime = ev.t;
 
-        // periodic representation synchronization on the local clock
-        let sync_now = workers[m].local_epoch % cfg.sync_interval == 0;
-        let push_io = if sync_now {
-            push_reps(ctx, &workers[m], &out.reps, workers[m].local_epoch as u64)
-        } else {
-            0.0
-        };
+            // the step the worker started earlier finishes NOW: collect
+            // its prefetched output (computed from the snapshot the
+            // worker fetched back then)
+            let out = pool.collect(m)?;
+            let compute_t = ctx.cost.compute_time(m, ctx.train_flops(m));
+            ps.submit_async(&out.grads, workers[m].fetched_version);
+            workers[m].local_epoch += 1;
+            updates += 1;
+            loss_acc += out.loss as f64;
+            loss_n += 1;
 
-        // epoch-equivalent logging every M updates
-        if updates % m_parts == 0 {
-            let epoch = updates / m_parts - 1;
-            let evaluate = epoch % cfg.eval_every == 0 || updates == target_updates;
-            let (val, test) = if evaluate {
-                let (p, _) = ps.fetch();
-                let (v, t) = ctx.global_eval(&p)?;
-                best_val = best_val.max(v);
-                final_val = v;
-                final_test = t;
-                (v, t)
+            // periodic representation synchronization on the local clock
+            let sync_now = workers[m].local_epoch % cfg.sync_interval == 0;
+            let push_io = if sync_now {
+                push_reps(ctx, &workers[m], &out.reps, workers[m].local_epoch as u64)
             } else {
-                (f64::NAN, f64::NAN)
+                0.0
             };
-            points.push(LogPoint {
-                epoch,
-                vtime,
-                wall: t0.elapsed().as_secs_f64(),
-                train_loss: loss_acc / loss_n.max(1) as f64,
-                val_f1: val,
-                test_f1: test,
-                kvs_bytes: ctx.kvs.metrics.snapshot().total_bytes(),
-                ps_bytes,
+
+            // epoch-equivalent logging every M updates
+            if updates % m_parts == 0 {
+                let epoch = updates / m_parts - 1;
+                let evaluate = epoch % cfg.eval_every == 0 || updates == target_updates;
+                let (val, test) = if evaluate {
+                    let (p, _) = ps.fetch();
+                    let (v, t) = ctx.global_eval(&p)?;
+                    best_val = best_val.max(v);
+                    final_val = v;
+                    final_test = t;
+                    (v, t)
+                } else {
+                    (f64::NAN, f64::NAN)
+                };
+                points.push(LogPoint {
+                    epoch,
+                    vtime,
+                    wall: t0.elapsed().as_secs_f64(),
+                    train_loss: loss_acc / loss_n.max(1) as f64,
+                    val_f1: val,
+                    test_f1: test,
+                    kvs_bytes: ctx.kvs.metrics.snapshot().total_bytes(),
+                    ps_bytes,
+                });
+                breakdowns.push(EpochBreakdown {
+                    compute: compute_t,
+                    kvs_io: push_io,
+                    ps_io: 0.0,
+                    straggle: 0.0,
+                    max_stale_age: window_age,
+                    total: vtime - last_epoch_t,
+                });
+                last_epoch_t = vtime;
+                loss_acc = 0.0;
+                loss_n = 0;
+                window_age = None;
+            }
+
+            if updates >= target_updates {
+                break;
+            }
+
+            // start the worker's next step immediately (non-blocking):
+            // freeze its inputs and hand the execution to the pool
+            let (params, v) = ps.fetch();
+            workers[m].fetched_version = v;
+            snapshots[m] = Arc::new(crate::runtime::pack_params(&ctx.spec, &params)?);
+            ps_bytes += 2 * ctx.param_bytes();
+            let local_now = workers[m].local_epoch as u64;
+            let pull_io = if sync_now {
+                let io = pull_stale(ctx, &mut workers[m], local_now);
+                if let Some(a) = workers[m].last_pull_age {
+                    window_age = Some(window_age.map_or(a, |x| x.max(a)));
+                }
+                io
+            } else {
+                0.0
+            };
+            pool.dispatch(&workers[m], snapshots[m].clone());
+            let compute = ctx.cost.compute_time(m, ctx.train_flops(m));
+            let straggle = ctx.cost.straggler_delay(m, &mut workers[m].rng);
+            let (comp_l, io_l) = epoch_layer_times(ctx, compute, pull_io, push_io);
+            let dt = ctx.cost.worker_epoch_time(&comp_l, &io_l, cfg.overlap, straggle)
+                + 2.0 * ctx.cost.param_time(ctx.param_bytes());
+            queue.push(Ev {
+                t: vtime + dt,
+                worker: m,
             });
-            breakdowns.push(EpochBreakdown {
-                compute: compute_t,
-                kvs_io: push_io,
-                ps_io: 0.0,
-                straggle: 0.0,
-                total: vtime - last_epoch_t,
-            });
-            last_epoch_t = vtime;
-            loss_acc = 0.0;
-            loss_n = 0;
         }
 
-        if updates >= target_updates {
-            break;
-        }
-
-        // start the worker's next step immediately (non-blocking)
-        let (params, v) = ps.fetch();
-        workers[m].fetched_version = v;
-        snapshots[m] = crate::runtime::pack_params(&ctx.spec, &params)?;
-        ps_bytes += 2 * ctx.param_bytes();
-        let pull_io = if sync_now {
-            pull_stale(ctx, &mut workers[m])
-        } else {
-            0.0
-        };
-        let compute = ctx.cost.compute_time(m, ctx.train_flops(m));
-        let straggle = ctx.cost.straggler_delay(m, &mut rng);
-        let (comp_l, io_l) = epoch_layer_times(ctx, compute, pull_io, push_io);
-        let dt = ctx.cost.worker_epoch_time(&comp_l, &io_l, cfg.overlap, straggle)
-            + 2.0 * ctx.cost.param_time(ctx.param_bytes());
-        queue.push(Ev {
-            t: vtime + dt,
-            worker: m,
-        });
-    }
-
-    Ok(RunResult {
-        method: "digest-a".to_string(),
-        dataset: cfg.dataset.clone(),
-        model: cfg.model.as_str().to_string(),
-        parts: m_parts,
-        sync_interval: cfg.sync_interval,
-        seed: cfg.seed,
-        points,
-        epochs: breakdowns,
-        final_val_f1: final_val,
-        final_test_f1: final_test,
-        best_val_f1: best_val,
-        total_vtime: vtime,
-        total_wall: t0.elapsed().as_secs_f64(),
-        kvs: ctx.kvs.metrics.snapshot(),
-        delay: ps.delay_stats(),
-        final_params: ps.fetch().0,
+        Ok(RunResult {
+            method: "digest-a".to_string(),
+            dataset: cfg.dataset.clone(),
+            model: cfg.model.as_str().to_string(),
+            parts: m_parts,
+            sync_interval: cfg.sync_interval,
+            threads,
+            seed: cfg.seed,
+            points,
+            epochs: breakdowns,
+            final_val_f1: final_val,
+            final_test_f1: final_test,
+            best_val_f1: best_val,
+            total_vtime: vtime,
+            total_wall: t0.elapsed().as_secs_f64(),
+            kvs: ctx.kvs.metrics.snapshot(),
+            delay: ps.delay_stats(),
+            final_params: ps.fetch().0,
+        })
+        // pool drops here: the job channel closes, executors drain any
+        // still-prefetched (now unneeded) steps and exit; the scope
+        // joins them before run_async returns
     })
 }
 
@@ -271,5 +305,26 @@ mod tests {
         assert_eq!(q.pop().unwrap().worker, 1);
         assert_eq!(q.pop().unwrap().worker, 2);
         assert_eq!(q.pop().unwrap().worker, 0);
+    }
+
+    #[test]
+    fn prefetch_pool_width_does_not_change_numerics() {
+        let mut cfg = RunConfig::default();
+        cfg.epochs = 10;
+        cfg.method = Method::DigestAsync;
+        cfg.sync_interval = 2;
+        cfg.eval_every = 5;
+        cfg.threads = 1;
+        let ctx1 = TrainContext::new(cfg.clone()).unwrap();
+        let r1 = run_async(&ctx1).unwrap();
+        cfg.threads = 2;
+        let ctx2 = TrainContext::new(cfg).unwrap();
+        let r2 = run_async(&ctx2).unwrap();
+        for (a, b) in r1.final_params.iter().zip(&r2.final_params) {
+            assert_eq!(a.data, b.data, "async numerics diverged across pool widths");
+        }
+        assert_eq!(r1.total_vtime.to_bits(), r2.total_vtime.to_bits());
+        assert_eq!(r1.delay.updates, r2.delay.updates);
+        assert_eq!(r1.delay.max_delay, r2.delay.max_delay);
     }
 }

@@ -12,7 +12,10 @@ use crate::runtime::{ArtifactSpec, Runtime};
 use crate::tensor::Matrix;
 use crate::Result;
 
-/// Immutable per-run context shared by all schedulers.
+/// Immutable per-run context shared by all schedulers — and, since the
+/// parallel engine landed, by all worker *threads*: every field is
+/// `Sync` (the KVS and runtime guard their interior mutability), which
+/// the assertion at the bottom of this file checks at compile time.
 pub struct TrainContext {
     pub cfg: RunConfig,
     pub ds: Dataset,
@@ -110,6 +113,14 @@ impl TrainContext {
             None => crate::runtime::init_params(&self.spec, self.cfg.seed),
         }
     }
+}
+
+// Compile-time guarantee that worker threads may share the context (and
+// that no future field quietly breaks the parallel engine).
+#[allow(dead_code)]
+fn _assert_train_context_is_shareable() {
+    fn check<T: Send + Sync>() {}
+    check::<TrainContext>();
 }
 
 #[cfg(test)]

@@ -1,0 +1,318 @@
+//! Parallel worker-execution engine.
+//!
+//! Before this module existed both schedulers ran their M workers
+//! sequentially on the coordinator thread and only the *virtual* clock
+//! pretended they were parallel devices.  The engine makes the
+//! parallelism real while keeping every run **bit-identical** to the
+//! single-threaded schedule:
+//!
+//! * [`for_each_mut`] — the synchronous scheduler's primitive: a
+//!   deterministic parallel map over the worker vector on scoped
+//!   threads.  Workers are split into contiguous chunks (one per
+//!   thread); results land in a slot vector indexed by worker, so
+//!   aggregation order never depends on thread interleaving.  A panic
+//!   inside one worker is caught and surfaced as that worker's `Err`
+//!   instead of tearing down the process (and, thanks to the KVS's
+//!   poison recovery, without wedging the other workers' shards).
+//! * [`ExecPool`] — the asynchronous scheduler's primitive: a prefetch
+//!   pool.  DIGEST-A's discrete-event loop must apply PS/KVS mutations
+//!   strictly in virtual-time order, but each pending step's *inputs*
+//!   (parameter snapshot + stale literals) are frozen the moment the
+//!   step is scheduled — so the expensive PJRT execution can start
+//!   immediately on a pool thread and merely be *collected* when the
+//!   step's finish event pops.  Numerics are identical to the
+//!   sequential event loop; the compute overlaps.
+//!
+//! Thread-count policy: `RunConfig::threads` (0 = auto) resolved by
+//! [`resolve_threads`] to `min(parts, available cores)` — never more
+//! threads than workers.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::Scope;
+
+use crate::runtime::{SharedLiteral, StaticInputs, TrainOutput};
+use crate::util::lock_unpoisoned;
+use crate::{eyre, Result};
+
+use super::context::TrainContext;
+use super::worker::{exec_train_with, WorkerState};
+
+/// Resolve the configured thread count: 0 means auto (all cores), and
+/// the result is always clamped to `[1, parts]` — extra threads beyond
+/// one per worker could never be scheduled.
+pub fn resolve_threads(requested: usize, parts: usize) -> usize {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let t = if requested == 0 { cores } else { requested };
+    t.clamp(1, parts.max(1))
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Deterministic parallel map over a mutable slice: item `i`'s result
+/// always lands in output slot `i`, errors are reported for the
+/// lowest-index failing item, and a panic inside `f` becomes that
+/// item's `Err` rather than a process abort.  With `threads == 1` this
+/// degenerates to the plain sequential loop (same code path the
+/// determinism tests compare against).
+///
+/// Threads are scoped per call (spawned and joined here), which costs
+/// ~10µs each — noise next to the PJRT train step every phase-A item
+/// runs.  If a caller ever maps work much cheaper than that per item,
+/// a persistent pool would be the upgrade path.
+pub fn for_each_mut<W, T, F>(threads: usize, items: &mut [W], f: F) -> Result<Vec<T>>
+where
+    W: Send,
+    T: Send,
+    F: Fn(&mut W) -> Result<T> + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let threads = threads.clamp(1, n);
+    let run_one = |i: usize, w: &mut W| -> Result<T> {
+        catch_unwind(AssertUnwindSafe(|| f(w)))
+            .unwrap_or_else(|p| Err(eyre!("worker {i} panicked: {}", panic_msg(&*p))))
+    };
+    if threads == 1 {
+        return items
+            .iter_mut()
+            .enumerate()
+            .map(|(i, w)| run_one(i, w))
+            .collect();
+    }
+    let chunk = n.div_ceil(threads);
+    let mut slots: Vec<Option<Result<T>>> = (0..n).map(|_| None).collect();
+    let fref = &run_one;
+    std::thread::scope(|s| {
+        for (c, (ws, rs)) in items
+            .chunks_mut(chunk)
+            .zip(slots.chunks_mut(chunk))
+            .enumerate()
+        {
+            let base = c * chunk;
+            s.spawn(move || {
+                for (j, (w, slot)) in ws.iter_mut().zip(rs.iter_mut()).enumerate() {
+                    *slot = Some(fref(base + j, w));
+                }
+            });
+        }
+    });
+    // surface errors deterministically: lowest worker index first
+    let mut out = Vec::with_capacity(n);
+    for (i, slot) in slots.into_iter().enumerate() {
+        match slot {
+            Some(Ok(v)) => out.push(v),
+            Some(Err(e)) => return Err(e),
+            None => return Err(eyre!("worker {i} produced no result")),
+        }
+    }
+    Ok(out)
+}
+
+/// One prefetched train-step execution: the inputs are frozen at
+/// dispatch time (Arc snapshots), so the output is independent of when
+/// a pool thread actually runs it.
+struct ExecJob {
+    worker: usize,
+    statics: Arc<StaticInputs>,
+    stale: Arc<Vec<SharedLiteral>>,
+    params: Arc<Vec<SharedLiteral>>,
+}
+
+/// Prefetching execution pool for the discrete-event (async) scheduler.
+///
+/// `dispatch` hands a worker's next step to the pool the moment it is
+/// scheduled; `collect` blocks until that worker's output is available
+/// (usually it already is).  All PS/KVS mutation stays on the caller's
+/// thread, in event order — the pool only computes.
+pub struct ExecPool<'env> {
+    job_tx: Option<mpsc::Sender<ExecJob>>,
+    res_rx: mpsc::Receiver<(usize, Result<TrainOutput>)>,
+    ready: Vec<Option<Result<TrainOutput>>>,
+    /// True from dispatch until collect — `ready[w]` alone can't tell
+    /// "in flight" from "never dispatched", so double-dispatch needs
+    /// this to be caught.
+    in_flight: Vec<bool>,
+    _marker: std::marker::PhantomData<&'env ()>,
+}
+
+impl<'env> ExecPool<'env> {
+    /// Spawn `threads` executor threads on `scope`.  `ctx` must outlive
+    /// the scope (`'env`), which the borrow checker enforces.
+    pub fn start<'scope>(
+        scope: &'scope Scope<'scope, 'env>,
+        ctx: &'env TrainContext,
+        threads: usize,
+        n_workers: usize,
+    ) -> Self {
+        let (job_tx, job_rx) = mpsc::channel::<ExecJob>();
+        let (res_tx, res_rx) = mpsc::channel::<(usize, Result<TrainOutput>)>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        for _ in 0..threads.max(1) {
+            let job_rx = job_rx.clone();
+            let res_tx = res_tx.clone();
+            scope.spawn(move || loop {
+                // hold the receiver lock only for the blocking recv: the
+                // other executors are idle while the queue is empty anyway
+                let job = { lock_unpoisoned(&job_rx).recv() };
+                let Ok(job) = job else { break };
+                let worker = job.worker;
+                let out = catch_unwind(AssertUnwindSafe(|| {
+                    exec_train_with(ctx, &job.statics, &job.stale, &job.params)
+                }))
+                .unwrap_or_else(|p| {
+                    Err(eyre!("worker {worker} panicked: {}", panic_msg(&*p)))
+                });
+                if res_tx.send((worker, out)).is_err() {
+                    break; // coordinator gone; shut down
+                }
+            });
+        }
+        ExecPool {
+            job_tx: Some(job_tx),
+            res_rx,
+            ready: (0..n_workers).map(|_| None).collect(),
+            in_flight: vec![false; n_workers],
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    /// Prefetch worker `w`'s next step.  The worker must not have
+    /// another step in flight (the DES guarantees one pending event per
+    /// worker) — dispatching twice would let two results race for one
+    /// slot and hand a later collect the wrong step's gradients.
+    pub fn dispatch(&mut self, w: &WorkerState, params: Arc<Vec<SharedLiteral>>) {
+        assert!(!self.in_flight[w.id], "worker {} already in flight", w.id);
+        self.in_flight[w.id] = true;
+        let job = ExecJob {
+            worker: w.id,
+            statics: w.statics.clone(),
+            stale: w.stale_lits.clone(),
+            params,
+        };
+        self.job_tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(job)
+            .expect("executor threads exited early");
+    }
+
+    /// Block until worker `m`'s prefetched output is available and take
+    /// it.  Outputs of *other* workers arriving meanwhile are parked in
+    /// their slots.
+    pub fn collect(&mut self, m: usize) -> Result<TrainOutput> {
+        debug_assert!(self.in_flight[m], "collect for worker {m} with no dispatch");
+        loop {
+            if let Some(res) = self.ready[m].take() {
+                self.in_flight[m] = false;
+                return res;
+            }
+            let (w, res) = self
+                .res_rx
+                .recv()
+                .map_err(|_| eyre!("executor threads exited with work pending"))?;
+            debug_assert!(self.ready[w].is_none());
+            self.ready[w] = Some(res);
+        }
+    }
+}
+
+impl Drop for ExecPool<'_> {
+    fn drop(&mut self) {
+        // closing the job channel lets executor threads drain and exit;
+        // the owning thread::scope then joins them
+        self.job_tx.take();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_threads_policy() {
+        // explicit request clamped to the worker count
+        assert_eq!(resolve_threads(8, 4), 4);
+        assert_eq!(resolve_threads(2, 4), 2);
+        assert_eq!(resolve_threads(3, 3), 3);
+        // auto: at least one, never more than parts
+        let auto = resolve_threads(0, 4);
+        assert!((1..=4).contains(&auto));
+        assert_eq!(resolve_threads(0, 1), 1);
+        // degenerate parts
+        assert_eq!(resolve_threads(0, 0), 1);
+    }
+
+    #[test]
+    fn for_each_mut_matches_sequential_order() {
+        let mut seq: Vec<usize> = (0..13).collect();
+        let mut par = seq.clone();
+        let f = |w: &mut usize| -> Result<usize> {
+            *w += 100;
+            Ok(*w * 2)
+        };
+        let a = for_each_mut(1, &mut seq, f).unwrap();
+        let b = for_each_mut(4, &mut par, f).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(seq, par);
+        assert_eq!(a[5], (5 + 100) * 2);
+    }
+
+    #[test]
+    fn for_each_mut_reports_lowest_failing_index() {
+        let mut items: Vec<usize> = (0..8).collect();
+        let err = for_each_mut(3, &mut items, |w| {
+            if *w >= 2 {
+                Err(eyre!("boom at {w}"))
+            } else {
+                Ok(*w)
+            }
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("boom at 2"), "{err}");
+    }
+
+    #[test]
+    fn for_each_mut_converts_panic_to_error_and_finishes_others() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let done = AtomicUsize::new(0);
+        let mut items: Vec<usize> = (0..6).collect();
+        let err = for_each_mut(2, &mut items, |w| {
+            if *w == 3 {
+                panic!("worker exploded");
+            }
+            done.fetch_add(1, Ordering::Relaxed);
+            Ok(())
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("worker 3 panicked"), "{err}");
+        assert!(err.to_string().contains("worker exploded"), "{err}");
+        // every non-panicking worker still ran to completion
+        assert_eq!(done.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn for_each_mut_empty_and_oversubscribed() {
+        let mut none: Vec<usize> = Vec::new();
+        assert!(for_each_mut(4, &mut none, |_| Ok(()))
+            .unwrap()
+            .is_empty());
+        // more threads than items: clamped internally
+        let mut few = vec![1usize, 2];
+        let out = for_each_mut(16, &mut few, |w| Ok(*w)).unwrap();
+        assert_eq!(out, vec![1, 2]);
+    }
+}

@@ -3,8 +3,11 @@
 //! * [`context`] — wires dataset, partitioner, halo plans, PJRT runtime,
 //!   KVS and cost model into a [`context::TrainContext`];
 //! * [`worker`] — per-worker step execution (KVS pull/push + AOT step);
-//! * [`sync`] — synchronous DIGEST (Algorithm 1);
-//! * [`async_`] — asynchronous DIGEST-A (discrete-event, non-blocking);
+//! * [`engine`] — the parallel execution engine: deterministic
+//!   scoped-thread worker map (sync) and prefetching exec pool (async);
+//! * [`sync`] — synchronous DIGEST (Algorithm 1), thread-parallel;
+//! * [`async_`] — asynchronous DIGEST-A (discrete-event, non-blocking,
+//!   with prefetched parallel execution);
 //! * [`telemetry`] — the timeline records every figure is drawn from.
 //!
 //! `run` dispatches on the configured method, including the two baseline
@@ -12,6 +15,7 @@
 
 pub mod async_;
 pub mod context;
+pub mod engine;
 pub mod sync;
 pub mod telemetry;
 pub mod worker;

@@ -11,27 +11,55 @@
 //! 5. it submits gradients; the PS barrier-aggregates and applies the
 //!    optimizer (line 13).
 //!
-//! Workers execute sequentially on this host but the virtual clock
-//! treats them as parallel devices: the epoch advances by the *max*
-//! worker time plus the aggregation step (the straggler therefore
-//! stretches every synchronous epoch — Fig. 7's effect).
+//! Workers now execute **concurrently on real threads** (see
+//! [`super::engine`]): each epoch is two parallel phases over the
+//! worker vector —
+//!
+//! * **phase A** (pull + train + submit): every pull reads the store as
+//!   of the epoch start (no pushes are in flight), the train step runs
+//!   on a pool thread, and the gradient lands in the worker's PS
+//!   *slot*;
+//! * **phase B** (push): only after the phase-A barrier do fresh
+//!   representations get published, so no worker's pull can observe a
+//!   same-round push — exactly the parallel-device semantics of the
+//!   paper (and the property that makes the schedule
+//!   worker-order-independent).
+//!
+//! Combined with slot-ordered gradient reduction on the PS and
+//! per-worker straggler RNG streams, a `threads = 4` run is
+//! **bit-identical** to `threads = 1`.  The virtual clock still
+//! advances by the *max* worker time plus aggregation (the straggler
+//! stretches every synchronous epoch — Fig. 7's effect); `total_wall`
+//! in the result is now a real measurement of the parallel engine.
 
 use std::time::Instant;
 
 use crate::ps::{optimizer::Optimizer, ParamServer};
-use crate::util::Rng;
+use crate::runtime::TrainOutput;
 use crate::Result;
 
 use super::context::TrainContext;
+use super::engine::{for_each_mut, resolve_threads};
 use super::telemetry::{EpochBreakdown, LogPoint, RunResult};
 use super::worker::{
     epoch_layer_times, exec_train, pull_stale, push_reps, WorkerState,
 };
 
+/// Per-worker outcome of one epoch's phase A, aggregated afterwards in
+/// worker-id order so telemetry is schedule-independent.
+struct EpochStep {
+    out: TrainOutput,
+    compute_t: f64,
+    pull_io: f64,
+    straggle: f64,
+    stale_age: Option<u64>,
+}
+
 /// Run synchronous DIGEST; returns the full telemetry record.
 pub fn run_sync(ctx: &TrainContext) -> Result<RunResult> {
     let cfg = &ctx.cfg;
     let m_parts = cfg.parts;
+    let threads = resolve_threads(cfg.threads, m_parts);
     let ps = ParamServer::new(
         ctx.initial_params(),
         Optimizer::new(cfg.optimizer, cfg.lr).with_weight_decay(cfg.weight_decay),
@@ -39,7 +67,6 @@ pub fn run_sync(ctx: &TrainContext) -> Result<RunResult> {
     );
     let mut workers: Vec<WorkerState> =
         (0..m_parts).map(|m| WorkerState::new(ctx, m)).collect();
-    let mut rng = Rng::new(cfg.seed ^ 0x5CED_u64);
 
     let t0 = Instant::now();
     let mut vtime = 0.0f64;
@@ -55,34 +82,64 @@ pub fn run_sync(ctx: &TrainContext) -> Result<RunResult> {
         let (params, _v) = ps.fetch();
         // params are packed ONCE per epoch and shared by all workers
         let param_lits = crate::runtime::pack_params(&ctx.spec, &params)?;
-        let mut max_worker_t = 0.0f64;
-        let mut bd = EpochBreakdown::default();
-        let mut loss_sum = 0.0f64;
+        let (param_lits, ps_ref) = (&param_lits, &ps);
 
-        for m in 0..m_parts {
-            let w = &mut workers[m];
-            let pull_io = if sync_now { pull_stale(ctx, w) } else { 0.0 };
-            let (out, compute_t) = exec_train(ctx, w, &param_lits)?;
-            let push_io = if sync_now {
-                push_reps(ctx, w, &out.reps, r as u64)
+        // ---- phase A: pull + train + slot-submit, concurrently ----
+        let steps: Vec<EpochStep> = for_each_mut(threads, &mut workers, |w| {
+            let pull_io = if sync_now {
+                pull_stale(ctx, w, r as u64)
             } else {
                 0.0
             };
+            let (out, compute_t) = exec_train(ctx, w, param_lits)?;
+            let straggle = ctx.cost.straggler_delay(w.id, &mut w.rng);
+            ps_ref.submit_slot(w.id, &out.grads);
+            w.local_epoch += 1;
+            Ok(EpochStep {
+                out,
+                compute_t,
+                pull_io,
+                straggle,
+                // only a fresh pull contributes an age; on cache-reuse
+                // epochs the breakdown records None
+                stale_age: if sync_now { w.last_pull_age } else { None },
+            })
+        })?;
+
+        // ---- phase B: publish fresh reps after the barrier ----
+        let push_ios: Vec<f64> = if sync_now {
+            let steps_ref = &steps;
+            for_each_mut(threads, &mut workers, |w| {
+                Ok(push_reps(ctx, w, &steps_ref[w.id].out.reps, r as u64))
+            })?
+        } else {
+            vec![0.0; m_parts]
+        };
+
+        // ---- deterministic aggregation in worker-id order ----
+        let mut max_worker_t = 0.0f64;
+        let mut bd = EpochBreakdown::default();
+        let mut loss_sum = 0.0f64;
+        for (m, step) in steps.iter().enumerate() {
             // parameter fetch + gradient submit
             let ps_io = 2.0 * ctx.cost.param_time(ctx.param_bytes());
             ps_bytes += 2 * ctx.param_bytes();
-            let straggle = ctx.cost.straggler_delay(m, &mut rng);
-            let (comp_l, io_l) = epoch_layer_times(ctx, compute_t, pull_io, push_io);
-            let t =
-                ctx.cost.worker_epoch_time(&comp_l, &io_l, cfg.overlap, straggle) + ps_io;
+            let (comp_l, io_l) =
+                epoch_layer_times(ctx, step.compute_t, step.pull_io, push_ios[m]);
+            let t = ctx
+                .cost
+                .worker_epoch_time(&comp_l, &io_l, cfg.overlap, step.straggle)
+                + ps_io;
             max_worker_t = max_worker_t.max(t);
-            bd.compute = bd.compute.max(compute_t);
-            bd.kvs_io = bd.kvs_io.max(pull_io + push_io);
+            bd.compute = bd.compute.max(step.compute_t);
+            bd.kvs_io = bd.kvs_io.max(step.pull_io + push_ios[m]);
             bd.ps_io = bd.ps_io.max(ps_io);
-            bd.straggle = bd.straggle.max(straggle);
-            loss_sum += out.loss as f64;
-            w.local_epoch += 1;
-            ps.submit_sync(&out.grads);
+            bd.straggle = bd.straggle.max(step.straggle);
+            bd.max_stale_age = match (bd.max_stale_age, step.stale_age) {
+                (Some(a), Some(b)) => Some(a.max(b)),
+                (a, b) => a.or(b),
+            };
+            loss_sum += step.out.loss as f64;
         }
         // aggregation happens once all submissions land
         let agg_t = ctx.cost.param_time(ctx.param_bytes());
@@ -120,6 +177,7 @@ pub fn run_sync(ctx: &TrainContext) -> Result<RunResult> {
         model: ctx.cfg.model.as_str().to_string(),
         parts: m_parts,
         sync_interval: cfg.sync_interval,
+        threads,
         seed: cfg.seed,
         points,
         epochs: breakdowns,
@@ -192,5 +250,53 @@ mod tests {
         let ctx_s = TrainContext::new(cfg).unwrap();
         let slow = run_sync(&ctx_s).unwrap();
         assert!(slow.total_vtime > base.total_vtime + 5.0 * 8.0);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_numerics_on_karate() {
+        // the full bit-identity test (4 partitions + straggler) lives in
+        // tests/integration_training.rs; this is the fast unit variant
+        let mut cfg = RunConfig::default();
+        cfg.epochs = 8;
+        cfg.sync_interval = 2;
+        cfg.eval_every = 4;
+        cfg.threads = 1;
+        let ctx1 = TrainContext::new(cfg.clone()).unwrap();
+        let r1 = run_sync(&ctx1).unwrap();
+        cfg.threads = 2;
+        let ctx2 = TrainContext::new(cfg).unwrap();
+        let r2 = run_sync(&ctx2).unwrap();
+        assert_eq!(r1.threads, 1);
+        assert_eq!(r2.threads, 2);
+        for (a, b) in r1.final_params.iter().zip(&r2.final_params) {
+            assert_eq!(a.data, b.data, "parameters diverged across thread counts");
+        }
+        for (p1, p2) in r1.points.iter().zip(&r2.points) {
+            assert_eq!(
+                p1.train_loss.to_bits(),
+                p2.train_loss.to_bits(),
+                "epoch {} loss diverged",
+                p1.epoch
+            );
+        }
+        assert_eq!(r1.total_vtime.to_bits(), r2.total_vtime.to_bits());
+        assert_eq!(r1.final_val_f1.to_bits(), r2.final_val_f1.to_bits());
+    }
+
+    #[test]
+    fn sync_records_staleness_ages() {
+        let mut cfg = RunConfig::default();
+        cfg.epochs = 12;
+        cfg.sync_interval = 5;
+        cfg.eval_every = 100;
+        let ctx = TrainContext::new(cfg).unwrap();
+        let res = run_sync(&ctx).unwrap();
+        // epoch 0 pulls a cold store -> no age; epoch 5 pulls epoch-0
+        // pushes -> age 5; epoch 10 pulls epoch-5 pushes -> age 5
+        assert_eq!(res.epochs[0].max_stale_age, None);
+        assert_eq!(res.epochs[5].max_stale_age, Some(5));
+        assert_eq!(res.epochs[10].max_stale_age, Some(5));
+        // non-sync epochs record no fresh pull
+        assert_eq!(res.epochs[1].max_stale_age, None);
     }
 }

@@ -36,6 +36,10 @@ pub struct EpochBreakdown {
     pub kvs_io: f64,
     pub ps_io: f64,
     pub straggle: f64,
+    /// Max staleness age (version ticks) any worker's pull observed this
+    /// epoch; `None` when no pull found rows (cold store or non-sync
+    /// epoch).  Feeds the Thm 1 staleness accounting.
+    pub max_stale_age: Option<u64>,
     /// Critical-path epoch time (after overlap).
     pub total: f64,
 }
@@ -48,6 +52,10 @@ pub struct RunResult {
     pub model: String,
     pub parts: usize,
     pub sync_interval: usize,
+    /// Resolved worker-thread count the run executed with (results are
+    /// bit-identical across thread counts; this records what `total_wall`
+    /// was measured at).
+    pub threads: usize,
     pub seed: u64,
     pub points: Vec<LogPoint>,
     pub epochs: Vec<EpochBreakdown>,
@@ -103,6 +111,7 @@ impl RunResult {
             ("model", Json::str(self.model.clone())),
             ("parts", Json::num(self.parts as f64)),
             ("sync_interval", Json::num(self.sync_interval as f64)),
+            ("threads", Json::num(self.threads as f64)),
             ("seed", Json::num(self.seed as f64)),
             ("final_val_f1", Json::num(self.final_val_f1)),
             ("final_test_f1", Json::num(self.final_test_f1)),
@@ -128,6 +137,7 @@ mod tests {
             model: "gcn".into(),
             parts: 2,
             sync_interval: 10,
+            threads: 1,
             seed: 0,
             points,
             epochs: vec![EpochBreakdown::default(); 3],

@@ -1,21 +1,26 @@
 //! Per-worker step execution: KVS pull/push with virtual-time costing,
 //! and AOT train/eval step invocation.
 //!
-//! Workers are *logical* devices: numerics run through the real PJRT
-//! executable while time comes from the cost model (DESIGN.md §6.4), so
-//! one CPU reproduces the coordination behaviour of the paper's 8-GPU
-//! box.
+//! Workers are *logical* devices whose numerics run through the real
+//! PJRT executable while time comes from the cost model (DESIGN.md
+//! §6.4) — and, since the parallel engine landed, they are also *real*
+//! threads: `WorkerState` is `Send`, its packed literals are shared
+//! `Arc`s, and its straggler RNG is a private per-worker stream so that
+//! draw order never depends on thread scheduling.
 //!
 //! Hot-path note (§Perf): workers keep their static inputs (x, P_in,
 //! P_out, y, mask) and stale tensors as *pre-packed literals*; only
 //! parameters are re-packed per epoch (once, shared across workers) —
 //! see `runtime::pack_static_inputs` / `pack_stale` / `pack_params`.
 
+use std::sync::Arc;
+
 use crate::runtime::{
     assemble_inputs, pack_stale, pack_static_inputs, parse_eval_output,
-    parse_train_output, EvalOutput, StaticInputs, TrainOutput,
+    parse_train_output, EvalOutput, SharedLiteral, StaticInputs, TrainOutput,
 };
 use crate::tensor::Matrix;
+use crate::util::{domain_seed, Rng};
 use crate::Result;
 
 use super::context::TrainContext;
@@ -26,14 +31,21 @@ pub struct WorkerState {
     /// Cached stale halo representations, one (b_pad, d_h) per hidden
     /// layer; refreshed from the KVS every N epochs.
     pub stale: Vec<Matrix>,
-    /// Pre-packed literals of `stale` (updated on every pull).
-    pub stale_lits: Vec<xla::Literal>,
+    /// Pre-packed literals of `stale` (replaced wholesale on every
+    /// pull; `Arc` so the async prefetch pool can snapshot them).
+    pub stale_lits: Arc<Vec<SharedLiteral>>,
     /// Pre-packed static inputs (x, P_in, P_out, y, train mask).
-    pub statics: StaticInputs,
+    pub statics: Arc<StaticInputs>,
     /// Local epoch counter (== global epoch in sync mode).
     pub local_epoch: usize,
     /// PS version of the params this worker last fetched (async delay).
     pub fetched_version: u64,
+    /// Private RNG stream (straggler draws): seeded per worker so the
+    /// sequence is identical whatever the thread schedule.
+    pub rng: Rng,
+    /// Max staleness age (version ticks) observed by the most recent
+    /// pull; `None` until a pull finds at least one row.
+    pub last_pull_age: Option<u64>,
 }
 
 impl WorkerState {
@@ -42,9 +54,12 @@ impl WorkerState {
         let stale: Vec<Matrix> = (0..ctx.n_hidden())
             .map(|_| Matrix::zeros(ctx.spec.b_pad, ctx.spec.d_h))
             .collect();
-        let stale_lits = pack_stale(&ctx.spec, &stale).expect("stale packing");
-        let statics = pack_static_inputs(&ctx.spec, plan, &plan.train_mask)
-            .expect("static packing");
+        let stale_lits =
+            Arc::new(pack_stale(&ctx.spec, &stale).expect("stale packing"));
+        let statics = Arc::new(
+            pack_static_inputs(&ctx.spec, plan, &plan.train_mask)
+                .expect("static packing"),
+        );
         WorkerState {
             id,
             stale,
@@ -52,25 +67,37 @@ impl WorkerState {
             statics,
             local_epoch: 0,
             fetched_version: 0,
+            rng: Rng::new(
+                domain_seed(ctx.cfg.seed, "worker-straggler")
+                    ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15),
+            ),
+            last_pull_age: None,
         }
     }
 }
 
 /// Pull this worker's halo rows for every hidden layer; returns the
-/// virtual I/O seconds charged (per-layer latency + bytes/bw).
-pub fn pull_stale(ctx: &TrainContext, w: &mut WorkerState) -> f64 {
+/// virtual I/O seconds charged (per-layer latency + bytes/bw).  `now`
+/// is the caller's version clock (global epoch in sync mode, local
+/// epoch in async) used to record the observed staleness age.
+pub fn pull_stale(ctx: &TrainContext, w: &mut WorkerState, now: u64) -> f64 {
     let plan = &ctx.plans[w.id];
     let mut io = 0.0;
+    let mut age: Option<u64> = None;
     for l in 0..ctx.n_hidden() {
-        let (m, _info) = ctx
+        let (m, info) = ctx
             .kvs
             .pull(l, &plan.halo, ctx.spec.d_h, ctx.spec.b_pad);
+        if let Some(a) = info.staleness_age(now) {
+            age = Some(age.map_or(a, |x| x.max(a)));
+        }
         io += ctx
             .cost
             .comm_time((plan.halo.len() * ctx.spec.d_h * 4) as u64);
         w.stale[l] = m;
     }
-    w.stale_lits = pack_stale(&ctx.spec, &w.stale).expect("stale packing");
+    w.last_pull_age = age;
+    w.stale_lits = Arc::new(pack_stale(&ctx.spec, &w.stale).expect("stale packing"));
     io
 }
 
@@ -97,8 +124,8 @@ pub fn push_reps(
 pub fn exec_train_with(
     ctx: &TrainContext,
     statics: &StaticInputs,
-    stale_lits: &[xla::Literal],
-    param_lits: &[xla::Literal],
+    stale_lits: &[SharedLiteral],
+    param_lits: &[SharedLiteral],
 ) -> Result<TrainOutput> {
     let inputs = assemble_inputs(&ctx.spec, statics, stale_lits, param_lits);
     let outs = ctx.rt.execute(&ctx.artifact, "train", &inputs)?;
@@ -110,7 +137,7 @@ pub fn exec_train_with(
 pub fn exec_train(
     ctx: &TrainContext,
     w: &WorkerState,
-    param_lits: &[xla::Literal],
+    param_lits: &[SharedLiteral],
 ) -> Result<(TrainOutput, f64)> {
     let out = exec_train_with(ctx, &w.statics, &w.stale_lits, param_lits)?;
     let vtime = ctx.cost.compute_time(w.id, ctx.train_flops(w.id));
@@ -122,7 +149,7 @@ pub fn exec_train(
 pub fn exec_eval(
     ctx: &TrainContext,
     w: &WorkerState,
-    param_lits: &[xla::Literal],
+    param_lits: &[SharedLiteral],
 ) -> Result<(EvalOutput, f64)> {
     let eval_spec = ctx.rt.manifest.get(&ctx.artifact, "eval")?.clone();
     let inputs = assemble_inputs(&eval_spec, &w.statics, &w.stale_lits, param_lits);
@@ -177,8 +204,10 @@ mod tests {
         assert!(out.loss.is_finite());
         let io_push = push_reps(&ctx, &w1, &out.reps, 1);
         assert!(io_push > 0.0);
-        let io_pull = pull_stale(&ctx, &mut w0);
+        let io_pull = pull_stale(&ctx, &mut w0, 3);
         assert!(io_pull > 0.0);
+        // the pull recorded the staleness age of the version-1 rows
+        assert_eq!(w0.last_pull_age, Some(2));
         // w0's halo nodes owned by w1 must now be non-zero (if any overlap)
         let plan0 = &ctx.plans[0];
         let owned_by_1: Vec<usize> = plan0
@@ -242,9 +271,30 @@ mod tests {
         // next execution's numbers
         let (out1, _) = exec_train(&ctx, &w1, &lits).unwrap();
         push_reps(&ctx, &w1, &out1.reps, 1);
-        pull_stale(&ctx, &mut w0);
+        pull_stale(&ctx, &mut w0, 1);
         let (after, _) = exec_train(&ctx, &w0, &lits).unwrap();
         assert_ne!(before.loss, after.loss);
+    }
+
+    #[test]
+    fn cold_pull_records_no_staleness_age() {
+        let ctx = ctx();
+        let mut w = WorkerState::new(&ctx, 0);
+        // nothing pushed yet: every halo row misses, so there is no age
+        // (the old u64::MAX sentinel must not surface here)
+        pull_stale(&ctx, &mut w, 42);
+        assert_eq!(w.last_pull_age, None);
+    }
+
+    #[test]
+    fn worker_rng_streams_are_deterministic_and_distinct() {
+        let ctx = ctx();
+        let mut a = WorkerState::new(&ctx, 0);
+        let mut b = WorkerState::new(&ctx, 0);
+        let mut c = WorkerState::new(&ctx, 1);
+        // same worker id -> same stream; different id -> different stream
+        assert_eq!(a.rng.next_u64(), b.rng.next_u64());
+        assert_ne!(b.rng.next_u64(), c.rng.next_u64());
     }
 
     #[test]

@@ -34,6 +34,10 @@ struct Measurement {
     max_grad_err: f64,
     mean_rep_err: f64,
     max_rep_err: f64,
+    /// Mean KVS staleness age (version ticks) over epochs whose pulls
+    /// found rows — via `PullInfo::staleness_age`, so cold pulls (no
+    /// rows, `u64::MAX` sentinel) are excluded instead of overflowing.
+    mean_stale_age: f64,
 }
 
 fn flat_norm(gs: &[Matrix]) -> f64 {
@@ -70,6 +74,7 @@ fn measure(c: &Campaign, sync_interval: usize) -> Result<Measurement> {
 
     let mut grad_errs = Vec::new();
     let mut rep_errs = Vec::new();
+    let mut stale_ages = Vec::new();
 
     for r in 0..EPOCHS {
         let (params, _) = ps.fetch();
@@ -86,16 +91,26 @@ fn measure(c: &Campaign, sync_interval: usize) -> Result<Measurement> {
             eval_reps.push(out.reps);
         }
 
+        // DIGEST cadence: pull cached stale every N epochs.  All pulls
+        // happen before any same-epoch push lands (matching run_sync's
+        // phase split), so the recorded staleness age is exactly the
+        // distance to the previous sync epoch.
+        if r % sync_interval == 0 {
+            for m in 0..m_parts {
+                pull_stale(&ctx, &mut workers[m], r as u64);
+                if let Some(age) = workers[m].last_pull_age {
+                    stale_ages.push(age as f64);
+                }
+            }
+        }
+
         // --- per-worker stale vs exact gradients ---
         let mut g_stale_mean: Option<Vec<Matrix>> = None;
         let mut g_exact_mean: Option<Vec<Matrix>> = None;
         let mut epoch_rep_err = 0.0f64;
+        let mut fresh_reps: Vec<Vec<Matrix>> = Vec::with_capacity(m_parts);
         for m in 0..m_parts {
             let plan = &ctx.plans[m];
-            // DIGEST cadence: pull cached stale every N epochs
-            if r % sync_interval == 0 {
-                pull_stale(&ctx, &mut workers[m]);
-            }
             // exact stale: gather true rows for the halo
             let mut exact = Matrix::zeros(ctx.spec.b_pad, ctx.spec.d_h);
             for (j, &h) in plan.halo.iter().enumerate() {
@@ -134,11 +149,15 @@ fn measure(c: &Campaign, sync_interval: usize) -> Result<Measurement> {
             acc(&mut g_exact_mean, &out_exact.grads);
 
             // continue the real DIGEST run with the stale gradient
-            if r % sync_interval == 0 {
-                push_reps(&ctx, &workers[m], &out_stale.reps, r as u64);
-            }
             workers[m].local_epoch += 1;
             ps.submit_sync(&out_stale.grads);
+            fresh_reps.push(out_stale.reps);
+        }
+        // publish after every worker has trained (run_sync's phase B)
+        if r % sync_interval == 0 {
+            for m in 0..m_parts {
+                push_reps(&ctx, &workers[m], &fresh_reps[m], r as u64);
+            }
         }
         let gs = g_stale_mean.unwrap();
         let ge = g_exact_mean.unwrap();
@@ -153,6 +172,7 @@ fn measure(c: &Campaign, sync_interval: usize) -> Result<Measurement> {
         max_grad_err: grad_errs.iter().copied().fold(0.0, f64::max),
         mean_rep_err: crate::util::mean(&rep_errs),
         max_rep_err: rep_errs.iter().copied().fold(0.0, f64::max),
+        mean_stale_age: crate::util::mean(&stale_ages),
     })
 }
 
@@ -168,12 +188,13 @@ pub fn run(c: &mut Campaign) -> Result<()> {
             format!("{:.5}", m.max_grad_err),
             format!("{:.5}", m.mean_rep_err),
             format!("{:.5}", m.max_rep_err),
+            format!("{:.2}", m.mean_stale_age),
         ]);
         ms.push(m);
     }
     let headers = [
         "sync_interval", "mean_grad_rel_err", "max_grad_rel_err", "mean_rep_err",
-        "max_rep_err",
+        "max_rep_err", "mean_stale_age",
     ];
     c.write("thm1_staleness_error.csv", &csv_table(&headers, &rows))?;
     // linearity check: fit grad_err ~ k * rep_err and report residual
@@ -215,5 +236,9 @@ mod tests {
         assert!(loose.mean_rep_err >= tight.mean_rep_err);
         // with N=1 the staleness is one optimizer step -> small error
         assert!(tight.mean_grad_err < 0.5, "{}", tight.mean_grad_err);
+        // the measured KVS staleness age tracks the interval: N=1 pulls
+        // one-epoch-old rows, N=20 pulls twenty-epoch-old rows
+        assert!((tight.mean_stale_age - 1.0).abs() < 1e-9, "{}", tight.mean_stale_age);
+        assert!((loose.mean_stale_age - 20.0).abs() < 1e-9, "{}", loose.mean_stale_age);
     }
 }

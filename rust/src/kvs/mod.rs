@@ -9,7 +9,9 @@
 //!
 //! * **sharded** — keys hash across `n_shards` independent mutexes, so
 //!   concurrent workers don't serialize (the paper's "parallel I/O at
-//!   node granularity");
+//!   node granularity"); batch operations group their keys by shard and
+//!   take each shard mutex once per batch, and a shard poisoned by a
+//!   panicking worker is recovered rather than cascading the panic;
 //! * **versioned** — every entry records the epoch that wrote it, so
 //!   staleness age is measurable (feeds the Thm 1 experiment) and
 //!   DIGEST-A can quantify bounded delay;
@@ -26,6 +28,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::tensor::Matrix;
+use crate::util::lock_unpoisoned;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 struct Key {
@@ -93,6 +96,21 @@ pub struct PullInfo {
     pub newest_version: u64,
 }
 
+impl PullInfo {
+    /// Staleness age (in version ticks) of the oldest row this pull
+    /// returned: `now - oldest_version`, clamped at 0.  Returns `None`
+    /// when the pull found no rows, so the `u64::MAX` sentinel in
+    /// `oldest_version` can never leak into age arithmetic (it used to
+    /// overflow the Thm 1 staleness computation on cold pulls).
+    pub fn staleness_age(&self, now: u64) -> Option<u64> {
+        if self.found == 0 {
+            None
+        } else {
+            Some(now.saturating_sub(self.oldest_version))
+        }
+    }
+}
+
 /// The sharded stale-representation store.
 pub struct RepStore {
     shards: Vec<Mutex<HashMap<Key, Entry>>>,
@@ -109,10 +127,27 @@ impl RepStore {
     }
 
     #[inline]
-    fn shard(&self, k: &Key) -> &Mutex<HashMap<Key, Entry>> {
+    fn shard_index(&self, k: &Key) -> usize {
         // fibonacci-hash the node id across shards
         let h = (k.node as u64 ^ ((k.layer as u64) << 32)).wrapping_mul(0x9E3779B97F4A7C15);
-        &self.shards[(h >> 32) as usize % self.shards.len()]
+        (h >> 32) as usize % self.shards.len()
+    }
+
+    /// Group batch positions by shard so each shard mutex is taken once
+    /// per batch instead of once per node.  Per-node locking was pure
+    /// overhead sequentially and becomes contention collapse once
+    /// workers hit the store concurrently (every row re-fights for the
+    /// same handful of mutexes).
+    fn group_by_shard(&self, layer: usize, nodes: &[u32]) -> Vec<Vec<usize>> {
+        let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
+        for (i, &v) in nodes.iter().enumerate() {
+            let key = Key {
+                layer: layer as u16,
+                node: v,
+            };
+            by_shard[self.shard_index(&key)].push(i);
+        }
+        by_shard
     }
 
     /// Push rows of `reps` (one per node id) for `layer` at `version`.
@@ -120,19 +155,23 @@ impl RepStore {
     /// first `nodes.len()` rows are stored.
     pub fn push(&self, layer: usize, nodes: &[u32], reps: &Matrix, version: u64) {
         assert!(reps.rows >= nodes.len(), "push: fewer rep rows than nodes");
-        for (i, &v) in nodes.iter().enumerate() {
-            let key = Key {
-                layer: layer as u16,
-                node: v,
-            };
-            let mut shard = self.shard(&key).lock().unwrap();
-            shard.insert(
-                key,
-                Entry {
-                    version,
-                    data: reps.row(i).to_vec(),
-                },
-            );
+        for (s, idxs) in self.group_by_shard(layer, nodes).iter().enumerate() {
+            if idxs.is_empty() {
+                continue;
+            }
+            let mut shard = lock_unpoisoned(&self.shards[s]);
+            for &i in idxs {
+                shard.insert(
+                    Key {
+                        layer: layer as u16,
+                        node: nodes[i],
+                    },
+                    Entry {
+                        version,
+                        data: reps.row(i).to_vec(),
+                    },
+                );
+            }
         }
         self.metrics.pushes.fetch_add(1, Ordering::Relaxed);
         self.metrics
@@ -161,21 +200,26 @@ impl RepStore {
             oldest_version: u64::MAX,
             newest_version: 0,
         };
-        for (i, &v) in nodes.iter().enumerate() {
-            let key = Key {
-                layer: layer as u16,
-                node: v,
-            };
-            let shard = self.shard(&key).lock().unwrap();
-            match shard.get(&key) {
-                Some(e) => {
-                    assert_eq!(e.data.len(), d, "stored rep dim mismatch");
-                    out.copy_row_from(i, &e.data);
-                    info.found += 1;
-                    info.oldest_version = info.oldest_version.min(e.version);
-                    info.newest_version = info.newest_version.max(e.version);
+        for (s, idxs) in self.group_by_shard(layer, nodes).iter().enumerate() {
+            if idxs.is_empty() {
+                continue;
+            }
+            let shard = lock_unpoisoned(&self.shards[s]);
+            for &i in idxs {
+                let key = Key {
+                    layer: layer as u16,
+                    node: nodes[i],
+                };
+                match shard.get(&key) {
+                    Some(e) => {
+                        assert_eq!(e.data.len(), d, "stored rep dim mismatch");
+                        out.copy_row_from(i, &e.data);
+                        info.found += 1;
+                        info.oldest_version = info.oldest_version.min(e.version);
+                        info.newest_version = info.newest_version.max(e.version);
+                    }
+                    None => info.missing += 1,
                 }
-                None => info.missing += 1,
             }
         }
         self.metrics.pulls.fetch_add(1, Ordering::Relaxed);
@@ -193,7 +237,7 @@ impl RepStore {
 
     /// Number of stored entries (all layers).
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.shards.iter().map(|s| lock_unpoisoned(s).len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -203,7 +247,7 @@ impl RepStore {
     /// Drop everything (between experiment repetitions).
     pub fn clear(&self) {
         for s in &self.shards {
-            s.lock().unwrap().clear();
+            lock_unpoisoned(s).clear();
         }
     }
 }
@@ -307,6 +351,58 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(kvs.len(), 200);
+    }
+
+    #[test]
+    fn staleness_age_handles_empty_and_found_pulls() {
+        let kvs = RepStore::new(4);
+        // cold pull: nothing found -> no age, never u64::MAX arithmetic
+        let (_, info) = kvs.pull(0, &[1, 2], 3, 2);
+        assert_eq!(info.found, 0);
+        assert_eq!(info.oldest_version, u64::MAX);
+        assert_eq!(info.staleness_age(100), None);
+        // after a push at version 7, age at now=10 is 3
+        kvs.push(0, &[1], &mat(1, 3, 0.0), 7);
+        let (_, info) = kvs.pull(0, &[1], 3, 1);
+        assert_eq!(info.staleness_age(10), Some(3));
+        // clocks never go negative (now older than the write)
+        assert_eq!(info.staleness_age(5), Some(0));
+    }
+
+    #[test]
+    fn poisoned_shard_recovers_for_other_workers() {
+        use std::sync::Arc;
+        // single shard so the panicking pull poisons the one mutex every
+        // other access needs
+        let kvs = Arc::new(RepStore::new(1));
+        kvs.push(0, &[1], &mat(1, 4, 1.0), 1);
+        let k2 = kvs.clone();
+        let h = std::thread::spawn(move || {
+            // dim mismatch asserts while the shard guard is held
+            let _ = k2.pull(0, &[1], 8, 1);
+        });
+        assert!(h.join().is_err(), "mismatched pull should panic");
+        // the store must keep serving other workers, not cascade panics
+        let (out, info) = kvs.pull(0, &[1], 4, 1);
+        assert_eq!(info.found, 1);
+        assert_eq!(out.row(0), &[1.0, 2.0, 3.0, 4.0]);
+        kvs.push(0, &[2], &mat(1, 4, 9.0), 2);
+        assert_eq!(kvs.len(), 2);
+    }
+
+    #[test]
+    fn batched_locking_preserves_per_node_semantics() {
+        // many nodes spread across few shards: grouping by shard must not
+        // change what any single node reads back
+        let kvs = RepStore::new(3);
+        let nodes: Vec<u32> = (0..64).collect();
+        let reps = mat(64, 6, 0.5);
+        kvs.push(2, &nodes, &reps, 9);
+        let (out, info) = kvs.pull(2, &nodes, 6, 64);
+        assert_eq!(out.data, reps.data);
+        assert_eq!(info.found, 64);
+        assert_eq!(info.oldest_version, 9);
+        assert_eq!(info.newest_version, 9);
     }
 
     #[test]

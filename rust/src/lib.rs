@@ -17,6 +17,34 @@
 //! artifacts via the PJRT CPU client (`xla` crate) and executes them from
 //! the coordinator hot path.
 //!
+//! ## Concurrency model
+//!
+//! Workers are **real threads**, not just virtual-clock fictions:
+//!
+//! * the synchronous scheduler runs each epoch as two parallel phases
+//!   over scoped worker threads (pull + train + submit, then push) via
+//!   [`coordinator::engine::for_each_mut`]; the asynchronous scheduler
+//!   prefetches every scheduled step onto a
+//!   [`coordinator::engine::ExecPool`] while its event loop applies
+//!   PS/KVS mutations in strict virtual-time order;
+//! * thread count comes from `RunConfig::threads` (0 = auto,
+//!   min(parts, cores)); results are **bit-identical at any thread
+//!   count** because gradients reduce in fixed slot order on the
+//!   [`ps::ParamServer`] (f32 addition is non-associative — arrival
+//!   order must not matter), straggler RNG draws come from per-worker
+//!   seeded streams, and pushes are barrier-separated from pulls so no
+//!   worker observes a same-round write;
+//! * the [`kvs::RepStore`] is sharded across independent mutexes, takes
+//!   each shard lock once per batch (not once per node), and recovers
+//!   shards poisoned by a panicking worker instead of cascading the
+//!   panic;
+//! * [`runtime::Runtime`] is `Sync`: PJRT's `Execute` is thread-safe,
+//!   and packed literals are immutable host buffers, so executions run
+//!   genuinely concurrently on one compiled executable.
+//!
+//! `RunResult::total_wall` therefore measures real parallel wall-clock
+//! (see `benches/bench_parallel.rs` for the scaling curve).
+//!
 //! Module map (see DESIGN.md for the full inventory):
 //!
 //! | module | role |
@@ -30,7 +58,7 @@
 //! | [`runtime`] | PJRT executable loading + literal packing |
 //! | [`gnn`] | pure-Rust CSR GCN/GAT inference oracle + F1 metrics |
 //! | [`costmodel`] | virtual-time device/network model (speedup figures) |
-//! | [`coordinator`] | DIGEST sync/async training loops + telemetry |
+//! | [`coordinator`] | DIGEST sync/async training loops, parallel engine, telemetry |
 //! | [`baselines`] | LLCG-like and DGL-like comparison frameworks |
 //! | [`exp`] | per-table/figure experiment runners |
 

@@ -10,7 +10,9 @@
 //!
 //! Training knobs are `key=value` overrides on `config::RunConfig`
 //! (dataset, model, parts, method, epochs, sync_interval, lr, optimizer,
-//! overlap, eval_every, seed, ...).  The arg parser is hand-rolled: the
+//! overlap, eval_every, threads, seed, ...).  `threads=0` (default)
+//! auto-sizes the worker pool to min(parts, cores); any thread count
+//! produces bit-identical results.  The arg parser is hand-rolled: the
 //! offline crate cache has no clap (see Cargo.toml note).
 
 use digest::config::RunConfig;
@@ -206,7 +208,7 @@ fn cmd_train(mut args: Vec<String>) -> Result<()> {
     println!("  final val F1   {:.4}", res.final_val_f1);
     println!("  final test F1  {:.4}", res.final_test_f1);
     println!("  virtual time   {:.3}s ({:.4}s/epoch)", res.total_vtime, res.avg_epoch_vtime());
-    println!("  wall time      {:.1}s", res.total_wall);
+    println!("  wall time      {:.1}s ({} worker threads)", res.total_wall, res.threads);
     println!(
         "  KVS traffic    {} ({} pulls, {} pushes, {} misses)",
         human_bytes(res.kvs.total_bytes()),

@@ -5,8 +5,12 @@
 //! W and the optimizer state.
 //!
 //! * **Synchronous (Alg. 1 line 13)** — workers submit gradients for
-//!   round r; once all M have arrived the PS averages them and applies
-//!   one optimizer step: `W^{r+1} = AGG(...)`.
+//!   round r into **per-worker slots**; once all M have arrived the PS
+//!   reduces them in ascending slot order, averages, and applies one
+//!   optimizer step: `W^{r+1} = AGG(...)`.  Float addition is not
+//!   associative, so reducing in arrival order would make concurrent
+//!   runs nondeterministic — the fixed slot order makes a 4-thread
+//!   round bit-identical to the single-threaded one.
 //! * **Asynchronous (DIGEST-A)** — each worker's gradient is applied
 //!   immediately on arrival; the PS records the delay τ = current
 //!   version − version the worker fetched (the bounded-delay quantity of
@@ -19,6 +23,7 @@ pub mod optimizer;
 use std::sync::Mutex;
 
 use crate::tensor::Matrix;
+use crate::util::lock_unpoisoned;
 use optimizer::Optimizer;
 
 /// Statistics on async update delays (Thm 3's τ).
@@ -43,9 +48,10 @@ struct PsInner {
     params: Vec<Matrix>,
     version: u64,
     opt: Optimizer,
-    /// Pending gradient accumulator for the synchronous barrier.
-    accum: Option<Vec<Matrix>>,
-    accum_count: usize,
+    /// Per-worker pending gradients for the synchronous barrier; reduced
+    /// in ascending slot order once all `n_workers` slots are filled.
+    slots: Vec<Option<Vec<Matrix>>>,
+    filled: usize,
     delays: DelayStats,
 }
 
@@ -64,8 +70,8 @@ impl ParamServer {
                 params,
                 version: 0,
                 opt,
-                accum: None,
-                accum_count: 0,
+                slots: (0..n_workers).map(|_| None).collect(),
+                filled: 0,
                 delays: DelayStats::default(),
             }),
             n_workers,
@@ -74,52 +80,88 @@ impl ParamServer {
 
     /// Current global parameters and their version.
     pub fn fetch(&self) -> (Vec<Matrix>, u64) {
-        let inner = self.inner.lock().unwrap();
+        let inner = lock_unpoisoned(&self.inner);
         (inner.params.clone(), inner.version)
     }
 
     pub fn version(&self) -> u64 {
-        self.inner.lock().unwrap().version
+        lock_unpoisoned(&self.inner).version
     }
 
-    /// Synchronous submit: accumulate this worker's gradients; when the
-    /// M-th arrives, apply `mean(grads)` with the optimizer and bump the
-    /// version.  Returns `true` for the caller that completed the round.
+    /// Synchronous slot-indexed submit: store this worker's gradients in
+    /// slot `slot`; when the last slot of the round fills, reduce all
+    /// slots in **ascending slot order**, apply `mean(grads)` with the
+    /// optimizer, and bump the version.  Returns `true` for the caller
+    /// that completed the round.
+    ///
+    /// The fixed reduction order is what makes thread-parallel rounds
+    /// bit-identical to sequential ones: f32 addition is non-associative,
+    /// so arrival-order accumulation would tie the numerics to the OS
+    /// scheduler.
+    pub fn submit_slot(&self, slot: usize, grads: &[Matrix]) -> bool {
+        let mut inner = lock_unpoisoned(&self.inner);
+        assert!(slot < self.n_workers, "slot {slot} >= {}", self.n_workers);
+        Self::fill_slot(&mut inner, slot, grads);
+        self.maybe_reduce(&mut inner)
+    }
+
+    /// Synchronous submit without an explicit slot: takes the lowest
+    /// free slot (for sequential callers this is arrival order, matching
+    /// the historical behaviour).  Concurrent callers that need
+    /// determinism should use [`ParamServer::submit_slot`].
     pub fn submit_sync(&self, grads: &[Matrix]) -> bool {
-        let mut inner = self.inner.lock().unwrap();
-        match &mut inner.accum {
-            None => {
-                inner.accum = Some(grads.to_vec());
-                inner.accum_count = 1;
-            }
-            Some(acc) => {
-                assert_eq!(acc.len(), grads.len(), "gradient arity mismatch");
-                for (a, g) in acc.iter_mut().zip(grads) {
-                    a.add_scaled(g, 1.0);
-                }
-                inner.accum_count += 1;
+        let mut inner = lock_unpoisoned(&self.inner);
+        let slot = inner
+            .slots
+            .iter()
+            .position(|s| s.is_none())
+            .expect("all slots full but round not reduced");
+        Self::fill_slot(&mut inner, slot, grads);
+        self.maybe_reduce(&mut inner)
+    }
+
+    fn fill_slot(inner: &mut PsInner, slot: usize, grads: &[Matrix]) {
+        assert!(
+            inner.slots[slot].is_none(),
+            "duplicate submission for slot {slot} within one round"
+        );
+        if let Some(other) = inner.slots.iter().flatten().next() {
+            assert_eq!(other.len(), grads.len(), "gradient arity mismatch");
+        }
+        inner.slots[slot] = Some(grads.to_vec());
+        inner.filled += 1;
+    }
+
+    /// If every slot is filled, reduce in ascending slot order and step.
+    fn maybe_reduce(&self, inner: &mut PsInner) -> bool {
+        if inner.filled < self.n_workers {
+            return false;
+        }
+        let PsInner {
+            params, opt, slots, ..
+        } = &mut *inner;
+        let mut it = slots.iter_mut();
+        let mut mean = it.next().unwrap().take().unwrap();
+        for s in it {
+            let g = s.take().unwrap();
+            for (a, gm) in mean.iter_mut().zip(&g) {
+                a.add_scaled(gm, 1.0);
             }
         }
-        if inner.accum_count == self.n_workers {
-            let mut mean = inner.accum.take().unwrap();
-            let scale = 1.0 / self.n_workers as f32;
-            for m in &mut mean {
-                m.scale(scale);
-            }
-            inner.accum_count = 0;
-            let PsInner { params, opt, .. } = &mut *inner;
-            opt.step(params, &mean);
-            inner.version += 1;
-            true
-        } else {
-            false
+        let scale = 1.0 / self.n_workers as f32;
+        for m in &mut mean {
+            m.scale(scale);
         }
+        opt.step(params, &mean);
+        inner.filled = 0;
+        inner.version += 1;
+        true
     }
 
     /// Asynchronous submit: apply immediately, recording the delay
     /// relative to `fetched_version`.
     pub fn submit_async(&self, grads: &[Matrix], fetched_version: u64) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_unpoisoned(&self.inner);
         let delay = inner.version.saturating_sub(fetched_version);
         inner.delays.updates += 1;
         inner.delays.max_delay = inner.delays.max_delay.max(delay);
@@ -130,16 +172,16 @@ impl ParamServer {
     }
 
     pub fn delay_stats(&self) -> DelayStats {
-        self.inner.lock().unwrap().delays.clone()
+        lock_unpoisoned(&self.inner).delays.clone()
     }
 
     /// Replace the parameters (tests / experiment resets).
     pub fn reset(&self, params: Vec<Matrix>) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_unpoisoned(&self.inner);
         inner.params = params;
         inner.version = 0;
-        inner.accum = None;
-        inner.accum_count = 0;
+        inner.slots = (0..self.n_workers).map(|_| None).collect();
+        inner.filled = 0;
         inner.delays = DelayStats::default();
         inner.opt.reset();
     }
@@ -202,6 +244,79 @@ mod tests {
         assert_eq!(ps.version(), 0);
         let (p, _) = ps.fetch();
         assert_eq!(p[0].data, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn slot_submission_is_arrival_order_independent() {
+        // the same per-slot gradients submitted in two different orders
+        // must produce bit-identical parameters (fixed reduction order)
+        let mk = || {
+            ParamServer::new(params(), Optimizer::new(OptimizerKind::Adam, 0.05), 3)
+        };
+        let gs = [grads(1.0), grads(0.25), grads(-3.5)];
+        let a = mk();
+        for m in 0..3 {
+            a.submit_slot(m, &gs[m]);
+        }
+        let b = mk();
+        for m in [2usize, 0, 1] {
+            b.submit_slot(m, &gs[m]);
+        }
+        assert_eq!(a.version(), 1);
+        assert_eq!(b.version(), 1);
+        assert_eq!(a.fetch().0[0].data, b.fetch().0[0].data);
+    }
+
+    #[test]
+    fn slot_matches_sequential_submit_sync() {
+        // submit_sync assigns slots in arrival order, so a sequential run
+        // of submit_sync equals explicit in-order slot submission
+        let gs = [grads(1.0), grads(2.0)];
+        let a = ParamServer::new(params(), Optimizer::new(OptimizerKind::Sgd, 0.1), 2);
+        let b = ParamServer::new(params(), Optimizer::new(OptimizerKind::Sgd, 0.1), 2);
+        for m in 0..2 {
+            a.submit_sync(&gs[m]);
+            b.submit_slot(m, &gs[m]);
+        }
+        assert_eq!(a.fetch().0[0].data, b.fetch().0[0].data);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate submission")]
+    fn duplicate_slot_submission_panics() {
+        let ps = ParamServer::new(params(), Optimizer::new(OptimizerKind::Sgd, 0.1), 2);
+        ps.submit_slot(0, &grads(1.0));
+        ps.submit_slot(0, &grads(1.0));
+    }
+
+    #[test]
+    fn concurrent_slot_submissions_reduce_deterministically() {
+        use std::sync::Arc;
+        let seq = ParamServer::new(params(), Optimizer::new(OptimizerKind::Adam, 0.02), 4);
+        let par = Arc::new(ParamServer::new(
+            params(),
+            Optimizer::new(OptimizerKind::Adam, 0.02),
+            4,
+        ));
+        let g = |m: usize| grads(1.0 + m as f32 * 0.7);
+        for round in 0..5 {
+            for m in 0..4 {
+                seq.submit_slot(m, &g(m));
+            }
+            let mut handles = Vec::new();
+            for m in 0..4 {
+                let ps = par.clone();
+                let gm = g(m);
+                handles.push(std::thread::spawn(move || {
+                    ps.submit_slot(m, &gm);
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert_eq!(par.version(), round + 1);
+        }
+        assert_eq!(seq.fetch().0[0].data, par.fetch().0[0].data);
     }
 
     #[test]

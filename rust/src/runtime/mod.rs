@@ -17,27 +17,80 @@
 pub mod manifest;
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 pub use manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
 
 use crate::halo::SubgraphPlan;
 use crate::tensor::Matrix;
-use crate::util::Rng;
+use crate::util::{lock_unpoisoned, Rng};
 use crate::{eyre, Result};
+
+// ---------------------------------------------------------------------------
+// Thread-safety wrappers
+// ---------------------------------------------------------------------------
+//
+// The `xla` binding wraps raw C pointers and conservatively leaves its
+// types `!Send + !Sync`.  The underlying PJRT contracts are stronger:
+// the C API documents `PJRT_LoadedExecutable_Execute` as thread-safe
+// (the CPU client dispatches concurrent executions onto its own thread
+// pool), and a packed `Literal` is an immutable host buffer after
+// construction — executions only *read* it while copying it into device
+// buffers.  The wrappers below encode exactly those two facts so the
+// coordinator can run real worker threads; everything that mutates
+// (executable cache, stats) stays behind mutexes.
+
+/// A compiled PJRT executable shared across worker threads.
+///
+/// Safety: `PJRT_LoadedExecutable_Execute` is thread-safe per the PJRT C
+/// API contract; the handle itself is immutable after compilation.
+pub struct SharedExecutable(xla::PjRtLoadedExecutable);
+
+unsafe impl Send for SharedExecutable {}
+unsafe impl Sync for SharedExecutable {}
+
+/// A packed input literal that worker threads may read concurrently.
+///
+/// Safety: a `Literal` is written only during packing (before it is
+/// shared); every later use is a read of the host buffer.
+pub struct SharedLiteral(xla::Literal);
+
+unsafe impl Send for SharedLiteral {}
+unsafe impl Sync for SharedLiteral {}
+
+impl std::ops::Deref for SharedLiteral {
+    type Target = xla::Literal;
+    fn deref(&self) -> &xla::Literal {
+        &self.0
+    }
+}
+
+impl From<xla::Literal> for SharedLiteral {
+    fn from(lit: xla::Literal) -> Self {
+        SharedLiteral(lit)
+    }
+}
 
 /// Owns the PJRT client, the manifest, and the compiled-executable cache.
 ///
-/// Executables wrap C pointers and are not `Send`; the coordinator runs
-/// all PJRT executions from one thread (virtual-clock parallelism — see
-/// `coordinator`), which also matches the single-CPU testbed.
+/// `Runtime` is `Sync`: `execute` may be called from many worker threads
+/// at once (see [`SharedExecutable`] for the safety argument), which is
+/// what lets the coordinator run M workers truly in parallel instead of
+/// simulating parallelism on the virtual clock alone.
 pub struct Runtime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
-    exes: Mutex<HashMap<(String, String), std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    exes: Mutex<HashMap<(String, String), Arc<SharedExecutable>>>,
     /// Monotonic counters for profiling.
     pub stats: Mutex<RuntimeStats>,
 }
+
+// Safety: `client` compiles under the `exes` mutex (PjRtClient::compile
+// is additionally documented thread-safe in PJRT); all interior
+// mutability is mutex-guarded; executables and literals cross threads
+// only via the wrappers above.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
 
 #[derive(Debug, Clone, Copy, Default)]
 pub struct RuntimeStats {
@@ -60,9 +113,12 @@ impl Runtime {
     }
 
     /// Compile (or fetch cached) the executable for (name, kind).
-    pub fn load(&self, name: &str, kind: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+    /// Compilation happens under the cache lock so concurrent workers
+    /// racing on a cold cache compile each artifact exactly once.
+    pub fn load(&self, name: &str, kind: &str) -> Result<Arc<SharedExecutable>> {
         let key = (name.to_string(), kind.to_string());
-        if let Some(exe) = self.exes.lock().unwrap().get(&key) {
+        let mut exes = lock_unpoisoned(&self.exes);
+        if let Some(exe) = exes.get(&key) {
             return Ok(exe.clone());
         }
         let spec = self.manifest.get(name, kind)?;
@@ -77,12 +133,9 @@ impl Runtime {
             .client
             .compile(&comp)
             .map_err(|e| eyre!("compiling {name}/{kind}: {e}"))?;
-        self.stats.lock().unwrap().compiles += 1;
-        let rc = std::rc::Rc::new(exe);
-        self.exes
-            .lock()
-            .unwrap()
-            .insert(key, rc.clone());
+        lock_unpoisoned(&self.stats).compiles += 1;
+        let rc = Arc::new(SharedExecutable(exe));
+        exes.insert(key, rc.clone());
         Ok(rc)
     }
 
@@ -98,6 +151,7 @@ impl Runtime {
         let exe = self.load(name, kind)?;
         let t0 = std::time::Instant::now();
         let result = exe
+            .0
             .execute::<L>(inputs)
             .map_err(|e| eyre!("executing {name}/{kind}: {e}"))?;
         let mut tuple = result[0][0]
@@ -106,14 +160,14 @@ impl Runtime {
         let parts = tuple
             .decompose_tuple()
             .map_err(|e| eyre!("decomposing result tuple: {e}"))?;
-        let mut stats = self.stats.lock().unwrap();
+        let mut stats = lock_unpoisoned(&self.stats);
         stats.executions += 1;
         stats.execute_seconds += t0.elapsed().as_secs_f64();
         Ok(parts)
     }
 
     pub fn stats(&self) -> RuntimeStats {
-        *self.stats.lock().unwrap()
+        *lock_unpoisoned(&self.stats)
     }
 }
 
@@ -335,13 +389,14 @@ pub fn parse_eval_output(spec: &ArtifactSpec, outs: &[xla::Literal]) -> Result<E
 // parameters once per PS fetch (shared by all M workers), then assembles
 // a borrow-only argument list per execution.
 
-/// Statically-packed per-plan input literals.
+/// Statically-packed per-plan input literals, shareable across the
+/// worker threads that execute against them.
 pub struct StaticInputs {
-    pub x: xla::Literal,
-    pub p_in: xla::Literal,
-    pub p_out: xla::Literal,
-    pub y: xla::Literal,
-    pub mask: xla::Literal,
+    pub x: SharedLiteral,
+    pub p_in: SharedLiteral,
+    pub p_out: SharedLiteral,
+    pub y: SharedLiteral,
+    pub mask: SharedLiteral,
 }
 
 /// Pack the inputs of `plan` that never change across epochs.
@@ -353,29 +408,30 @@ pub fn pack_static_inputs(
 ) -> Result<StaticInputs> {
     let n_inputs = spec.inputs.len();
     Ok(StaticInputs {
-        x: pack_matrix(&spec.inputs[0], &plan.x)?,
-        p_in: pack_matrix(&spec.inputs[1], &plan.p_in)?,
-        p_out: pack_matrix(&spec.inputs[2], &plan.p_out)?,
-        y: pack_i32(&spec.inputs[n_inputs - 2], &plan.y)?,
-        mask: pack_f32(&spec.inputs[n_inputs - 1], mask)?,
+        x: pack_matrix(&spec.inputs[0], &plan.x)?.into(),
+        p_in: pack_matrix(&spec.inputs[1], &plan.p_in)?.into(),
+        p_out: pack_matrix(&spec.inputs[2], &plan.p_out)?.into(),
+        y: pack_i32(&spec.inputs[n_inputs - 2], &plan.y)?.into(),
+        mask: pack_f32(&spec.inputs[n_inputs - 1], mask)?.into(),
     })
 }
 
 /// Pack the L-1 stale tensors (done once per KVS pull, not per step).
-pub fn pack_stale(spec: &ArtifactSpec, stale: &[Matrix]) -> Result<Vec<xla::Literal>> {
+pub fn pack_stale(spec: &ArtifactSpec, stale: &[Matrix]) -> Result<Vec<SharedLiteral>> {
     if stale.len() != spec.layers - 1 {
         return Err(eyre!("need {} stale tensors", spec.layers - 1));
     }
     stale
         .iter()
         .enumerate()
-        .map(|(l, s)| pack_matrix(&spec.inputs[3 + l], s))
+        .map(|(l, s)| pack_matrix(&spec.inputs[3 + l], s).map(Into::into))
         .collect()
 }
 
 /// Pack the parameter tensors (done once per PS fetch, shared by all
-/// workers in the epoch).
-pub fn pack_params(spec: &ArtifactSpec, params: &[Matrix]) -> Result<Vec<xla::Literal>> {
+/// workers in the epoch — and, with the parallel engine, by all worker
+/// *threads* concurrently).
+pub fn pack_params(spec: &ArtifactSpec, params: &[Matrix]) -> Result<Vec<SharedLiteral>> {
     if params.len() != spec.n_params() {
         return Err(eyre!("need {} param tensors", spec.n_params()));
     }
@@ -383,7 +439,7 @@ pub fn pack_params(spec: &ArtifactSpec, params: &[Matrix]) -> Result<Vec<xla::Li
     params
         .iter()
         .enumerate()
-        .map(|(i, p)| pack_matrix(&spec.inputs[off + i], p))
+        .map(|(i, p)| pack_matrix(&spec.inputs[off + i], p).map(Into::into))
         .collect()
 }
 
@@ -392,18 +448,18 @@ pub fn pack_params(spec: &ArtifactSpec, params: &[Matrix]) -> Result<Vec<xla::Li
 pub fn assemble_inputs<'a>(
     spec: &ArtifactSpec,
     statics: &'a StaticInputs,
-    stale: &'a [xla::Literal],
-    params: &'a [xla::Literal],
+    stale: &'a [SharedLiteral],
+    params: &'a [SharedLiteral],
 ) -> Vec<&'a xla::Literal> {
     let mut v = Vec::with_capacity(spec.inputs.len());
-    v.push(&statics.x);
-    v.push(&statics.p_in);
-    v.push(&statics.p_out);
-    v.extend(stale.iter());
-    v.extend(params.iter());
+    v.push(&*statics.x);
+    v.push(&*statics.p_in);
+    v.push(&*statics.p_out);
+    v.extend(stale.iter().map(|l| &**l));
+    v.extend(params.iter().map(|l| &**l));
     if spec.kind == "train" {
-        v.push(&statics.y);
-        v.push(&statics.mask);
+        v.push(&*statics.y);
+        v.push(&*statics.mask);
     }
     debug_assert_eq!(v.len(), spec.inputs.len());
     v

@@ -102,6 +102,16 @@ impl Rng {
     }
 }
 
+/// Lock a mutex, recovering the guard when a panicking thread poisoned
+/// it.  The shared stores guarded this way (KVS shards, PS state,
+/// runtime caches) hold plain data that is structurally valid after any
+/// partial update, so the poison flag carries no information here — and
+/// honoring it would cascade one crashed worker's panic into every
+/// other worker's `.lock().unwrap()`.
+pub fn lock_unpoisoned<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Derive a domain-separated seed: components seeded from the same user
 /// seed must not share RNG streams (a shared stream once made the
 /// "random" partitioner exactly reproduce the SBM community shuffle —
@@ -215,6 +225,23 @@ mod tests {
         d.sort_unstable();
         d.dedup();
         assert_eq!(d.len(), 30);
+    }
+
+    #[test]
+    fn lock_unpoisoned_recovers_poisoned_mutex() {
+        use std::sync::{Arc, Mutex};
+        let m = Arc::new(Mutex::new(7));
+        let m2 = m.clone();
+        let h = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        });
+        assert!(h.join().is_err());
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        assert_eq!(*lock_unpoisoned(&m), 7);
+        // and the guard still works for writes afterwards
+        *lock_unpoisoned(&m) = 9;
+        assert_eq!(*lock_unpoisoned(&m), 9);
     }
 
     #[test]

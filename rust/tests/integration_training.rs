@@ -94,6 +94,80 @@ fn staleness_error_bounded_and_shrinks_with_sync_frequency() {
 }
 
 #[test]
+fn parallel_sync_is_bit_identical_to_single_thread() {
+    // the tentpole guarantee: real 4-thread execution reproduces the
+    // 1-thread run bit for bit — slot-ordered gradient reduction,
+    // phase-split KVS traffic, and per-worker straggler RNG streams all
+    // have to hold for this to pass
+    let mut cfg = base_cfg("flickr-s", 8);
+    cfg.sync_interval = 2;
+    cfg.straggler = Some((1, 0.5, 1.0)); // exercise the per-worker RNG
+    cfg.threads = 1;
+    let r1 = coordinator::run(cfg.clone()).unwrap();
+    cfg.threads = 4;
+    let r4 = coordinator::run(cfg).unwrap();
+    assert_eq!(r1.threads, 1);
+    assert_eq!(r4.threads, 4);
+    assert_eq!(r1.final_params.len(), r4.final_params.len());
+    for (a, b) in r1.final_params.iter().zip(&r4.final_params) {
+        assert_eq!(a.data, b.data, "final params diverged across thread counts");
+    }
+    assert_eq!(r1.final_val_f1.to_bits(), r4.final_val_f1.to_bits());
+    assert_eq!(r1.final_test_f1.to_bits(), r4.final_test_f1.to_bits());
+    for (p1, p4) in r1.points.iter().zip(&r4.points) {
+        assert_eq!(
+            p1.train_loss.to_bits(),
+            p4.train_loss.to_bits(),
+            "epoch {} loss diverged",
+            p1.epoch
+        );
+    }
+    // the virtual clock is scheduling-independent too
+    assert_eq!(r1.total_vtime.to_bits(), r4.total_vtime.to_bits());
+    // and identical KVS traffic was moved
+    assert_eq!(r1.kvs, r4.kvs);
+}
+
+#[test]
+fn parallel_async_is_bit_identical_to_single_thread() {
+    let mut cfg = base_cfg("flickr-s", 6);
+    cfg.method = Method::DigestAsync;
+    cfg.sync_interval = 2;
+    cfg.threads = 1;
+    let r1 = coordinator::run(cfg.clone()).unwrap();
+    cfg.threads = 4;
+    let r4 = coordinator::run(cfg).unwrap();
+    for (a, b) in r1.final_params.iter().zip(&r4.final_params) {
+        assert_eq!(a.data, b.data, "async params diverged across pool widths");
+    }
+    assert_eq!(r1.total_vtime.to_bits(), r4.total_vtime.to_bits());
+    assert_eq!(r1.delay.updates, r4.delay.updates);
+    assert_eq!(r1.delay.max_delay, r4.delay.max_delay);
+    assert_eq!(r1.delay.total_delay, r4.delay.total_delay);
+}
+
+#[test]
+fn concurrent_kvs_stress_through_coordinator() {
+    // N=1 on the densest dataset with 4 real worker threads: every epoch
+    // all workers pull and push concurrently against the sharded store
+    let epochs = 6usize;
+    let mut cfg = base_cfg("reddit-s", epochs);
+    cfg.sync_interval = 1;
+    cfg.threads = 4;
+    let ctx = TrainContext::new(cfg).unwrap();
+    let res = coordinator::run_with_context(&ctx).unwrap();
+    let n_hidden = ctx.n_hidden() as u64;
+    // one pull and one push per worker per hidden layer per epoch
+    assert_eq!(res.kvs.pulls, (epochs * 4) as u64 * n_hidden);
+    assert_eq!(res.kvs.pushes, res.kvs.pulls);
+    // every owned node of every hidden layer was published exactly once
+    assert_eq!(ctx.kvs.len(), ctx.n_hidden() * ctx.ds.n());
+    // no row was lost or corrupted along the way
+    assert!(res.points.iter().all(|p| p.train_loss.is_finite()));
+    assert!(res.final_val_f1.is_finite());
+}
+
+#[test]
 fn products_s_respects_artifact_capacity() {
     // products-s partitions overflow S_pad without the capacity cap;
     // context construction must rebalance instead of erroring.
