@@ -1,0 +1,75 @@
+//! Stepwise sessions + hooks: observe a run between epochs, checkpoint
+//! the full training state mid-flight, and resume it bit-exactly.
+//!
+//! ```sh
+//! cargo run --release --example session_hooks
+//! ```
+
+use digest::config::RunConfig;
+use digest::coordinator::{self, new_session, resume_session, TrainContext, TrainSession as _};
+use digest::Result;
+
+fn main() -> Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.epochs = 20;
+    cfg.sync_interval = 2;
+    cfg.eval_every = 5;
+
+    // --- stepwise driving: the loop owns the cadence, not the library ---
+    let ctx = TrainContext::new(cfg.clone())?;
+    let mut session = new_session(&ctx)?;
+    let ckpt_path = std::env::temp_dir().join("digest_session_demo.json");
+    while !session.is_done() {
+        let report = session.step_epoch()?;
+        if report.evaluated {
+            println!(
+                "epoch {:>2}  loss {:.4}  val F1 {:.4}  (stale age {:?}, {} KVS bytes)",
+                report.epoch,
+                report.point.train_loss,
+                report.point.val_f1,
+                report.breakdown.max_stale_age,
+                report.point.kvs_bytes,
+            );
+        }
+        // checkpoint the FULL training state halfway through
+        if report.epoch + 1 == 10 {
+            session.snapshot()?.save(&ckpt_path)?;
+            println!("-- saved training state at epoch 10 --");
+        }
+    }
+    let full = session.finish()?;
+
+    // --- resume the epoch-10 checkpoint on a fresh context ---
+    let ck = digest::ps::checkpoint::Checkpoint::load(&ckpt_path)?;
+    let ctx2 = TrainContext::new(cfg.clone())?;
+    let mut resumed = resume_session(&ctx2, &ck)?;
+    while !resumed.is_done() {
+        resumed.step_epoch()?;
+    }
+    let second_half = resumed.finish()?;
+    println!(
+        "\ncontinuous best val F1 {:.4}; resumed-from-10 best val F1 {:.4}",
+        full.best_val_f1, second_half.best_val_f1
+    );
+    for (a, b) in full.final_params.iter().zip(&second_half.final_params) {
+        assert_eq!(a.data, b.data, "resume must be bit-exact");
+    }
+    println!("final parameters are bit-identical: resume is exact");
+
+    // --- or let the driver do it: hooks wired straight from the config ---
+    cfg.epochs = 40;
+    cfg.early_stop = 2; // stop after 2 evals without val-F1 improvement
+    cfg.stream_csv = Some(
+        std::env::temp_dir()
+            .join("digest_session_demo.csv")
+            .to_string_lossy()
+            .into_owned(),
+    );
+    let res = coordinator::run(cfg)?;
+    println!(
+        "\ndriver run: {} epochs executed (early stopping may trim the tail), best val F1 {:.4}",
+        res.points.len(),
+        res.best_val_f1
+    );
+    Ok(())
+}

@@ -18,13 +18,18 @@ use std::time::Instant;
 
 use crate::graph::Split;
 use crate::halo::{PropKind, SubgraphPlan};
+use crate::ps::checkpoint::{Checkpoint, TrainState};
 use crate::ps::{optimizer::Optimizer, ParamServer};
 use crate::runtime::{pack_step_inputs, parse_train_output};
 use crate::tensor::Matrix;
+use crate::util::json::Json;
 use crate::util::Rng;
-use crate::Result;
+use crate::{eyre, Result};
 
 use super::super::coordinator::context::TrainContext;
+use crate::coordinator::session::{
+    base_state, state_checkpoint, EpochReport, TrainSession,
+};
 use crate::coordinator::telemetry::{EpochBreakdown, LogPoint, RunResult};
 use crate::coordinator::worker::epoch_layer_times;
 
@@ -96,49 +101,116 @@ pub fn correction_plan(ctx: &TrainContext, rng: &mut Rng) -> SubgraphPlan {
         .expect("correction plan within artifact shapes")
 }
 
-/// Run the LLCG baseline.
-pub fn run_llcg(ctx: &TrainContext) -> Result<RunResult> {
-    let cfg = &ctx.cfg;
-    let m_parts = cfg.parts;
-    let ps = ParamServer::new(
-        ctx.initial_params(),
-        Optimizer::new(cfg.optimizer, cfg.lr).with_weight_decay(cfg.weight_decay),
-        m_parts,
-    );
-    let mut rng = Rng::new(cfg.seed ^ 0x11C6_u64);
-    let dropped: Vec<SubgraphPlan> =
-        ctx.plans.iter().map(|p| drop_edges(ctx, p)).collect();
-    // a small pool of correction mini-batches, rotated per round
-    let corrections: Vec<SubgraphPlan> =
-        (0..4).map(|_| correction_plan(ctx, &mut rng)).collect();
-    let zero_stale: Vec<Matrix> = (0..ctx.n_hidden())
-        .map(|_| Matrix::zeros(ctx.spec.b_pad, ctx.spec.d_h))
-        .collect();
+/// The LLCG baseline as a stepwise state machine
+/// ([`crate::coordinator::session::TrainSession`]).
+pub struct LlcgSession<'a> {
+    ctx: &'a TrainContext,
+    ps: ParamServer,
+    rng: Rng,
+    dropped: Vec<SubgraphPlan>,
+    /// A small pool of correction mini-batches, rotated per round.
+    corrections: Vec<SubgraphPlan>,
+    zero_stale: Vec<Matrix>,
+    t0: Instant,
+    r: usize,
+    vtime: f64,
+    ps_bytes: u64,
+    points: Vec<LogPoint>,
+    breakdowns: Vec<EpochBreakdown>,
+    best_val: f64,
+    final_val: f64,
+    final_test: f64,
+}
 
-    let t0 = Instant::now();
-    let mut vtime = 0.0f64;
-    let mut ps_bytes = 0u64;
-    let mut points = Vec::new();
-    let mut breakdowns = Vec::new();
-    let mut best_val = 0.0f64;
-    let mut final_val = f64::NAN;
-    let mut final_test = f64::NAN;
+impl<'a> LlcgSession<'a> {
+    pub fn new(ctx: &'a TrainContext) -> Result<Self> {
+        let cfg = &ctx.cfg;
+        let mut rng = Rng::new(cfg.seed ^ 0x11C6_u64);
+        let dropped: Vec<SubgraphPlan> =
+            ctx.plans.iter().map(|p| drop_edges(ctx, p)).collect();
+        let corrections: Vec<SubgraphPlan> =
+            (0..4).map(|_| correction_plan(ctx, &mut rng)).collect();
+        Ok(LlcgSession {
+            ctx,
+            ps: ParamServer::new(
+                ctx.initial_params(),
+                Optimizer::new(cfg.optimizer, cfg.lr).with_weight_decay(cfg.weight_decay),
+                cfg.parts,
+            ),
+            rng,
+            dropped,
+            corrections,
+            zero_stale: (0..ctx.n_hidden())
+                .map(|_| Matrix::zeros(ctx.spec.b_pad, ctx.spec.d_h))
+                .collect(),
+            t0: Instant::now(),
+            r: 0,
+            vtime: 0.0,
+            ps_bytes: 0,
+            points: Vec::new(),
+            breakdowns: Vec::new(),
+            best_val: 0.0,
+            final_val: f64::NAN,
+            final_test: f64::NAN,
+        })
+    }
 
-    for r in 0..cfg.epochs {
-        let (params, _) = ps.fetch();
+    /// Rebuild from a v2 checkpoint state.  The dropped plans and the
+    /// correction pool regenerate deterministically from the seed; the
+    /// RNG then jumps to its saved mid-run state so straggler draws
+    /// continue exactly where the exporting run left off.
+    pub fn resume(ctx: &'a TrainContext, state: &TrainState) -> Result<Self> {
+        let mut s = LlcgSession::new(ctx)?;
+        s.ps.import_state(&state.ps);
+        s.rng = Rng::from_state(crate::ps::checkpoint::rng_from_json(
+            state.extra.get("rng")?,
+        )?);
+        s.r = state.epoch;
+        s.vtime = state.vtime;
+        s.ps_bytes = state.ps_bytes;
+        s.best_val = state.best_val_f1;
+        s.final_val = state.final_val_f1;
+        s.final_test = state.final_test_f1;
+        Ok(s)
+    }
+}
+
+impl TrainSession for LlcgSession<'_> {
+    fn ctx(&self) -> &TrainContext {
+        self.ctx
+    }
+
+    fn epochs_done(&self) -> usize {
+        self.r
+    }
+
+    fn step_epoch(&mut self) -> Result<EpochReport> {
+        if self.is_done() {
+            return Err(eyre!("session already ran {} epochs", self.r));
+        }
+        let ctx = self.ctx;
+        let cfg = &ctx.cfg;
+        let m_parts = cfg.parts;
+        let r = self.r;
+        let (params, _) = self.ps.fetch();
         let mut max_worker_t = 0.0f64;
         let mut bd = EpochBreakdown::default();
         let mut loss_sum = 0.0f64;
         for m in 0..m_parts {
-            let plan = &dropped[m];
-            let inputs =
-                pack_step_inputs(&ctx.spec, plan, &zero_stale, &params, &plan.train_mask)?;
+            let plan = &self.dropped[m];
+            let inputs = pack_step_inputs(
+                &ctx.spec,
+                plan,
+                &self.zero_stale,
+                &params,
+                &plan.train_mask,
+            )?;
             let outs = ctx.rt.execute(&ctx.artifact, "train", &inputs)?;
             let out = parse_train_output(&ctx.spec, &outs)?;
             let compute_t = ctx.cost.compute_time(m, ctx.train_flops(m));
             let ps_io = 2.0 * ctx.cost.param_time(ctx.param_bytes());
-            ps_bytes += 2 * ctx.param_bytes();
-            let straggle = ctx.cost.straggler_delay(m, &mut rng);
+            self.ps_bytes += 2 * ctx.param_bytes();
+            let straggle = ctx.cost.straggler_delay(m, &mut self.rng);
             // LLCG has no KVS I/O at all
             let (comp_l, io_l) = epoch_layer_times(ctx, compute_t, 0.0, 0.0);
             let t = ctx.cost.worker_epoch_time(&comp_l, &io_l, cfg.overlap, straggle)
@@ -148,22 +220,22 @@ pub fn run_llcg(ctx: &TrainContext) -> Result<RunResult> {
             bd.ps_io = bd.ps_io.max(ps_io);
             bd.straggle = bd.straggle.max(straggle);
             loss_sum += out.loss as f64;
-            ps.submit_sync(&out.grads);
+            self.ps.submit_sync(&out.grads);
         }
 
         // ---- global server correction (the "correct globally" step) ----
-        let cplan = &corrections[r % corrections.len()];
-        let (params_now, v_now) = ps.fetch();
+        let cplan = &self.corrections[r % self.corrections.len()];
+        let (params_now, v_now) = self.ps.fetch();
         let inputs = pack_step_inputs(
             &ctx.spec,
             cplan,
-            &zero_stale,
+            &self.zero_stale,
             &params_now,
             &cplan.train_mask,
         )?;
         let outs = ctx.rt.execute(&ctx.artifact, "train", &inputs)?;
         let cout = parse_train_output(&ctx.spec, &outs)?;
-        ps.submit_async(&cout.grads, v_now); // applied immediately on the server
+        self.ps.submit_async(&cout.grads, v_now); // applied immediately on the server
         // server compute + moving the mini-batch to the server: the
         // correction uses *full* neighbor information, so its cost grows
         // with the L-hop neighborhood (charge the L-hop explosion factor
@@ -174,55 +246,103 @@ pub fn run_llcg(ctx: &TrainContext) -> Result<RunResult> {
         let batch_bytes =
             ((cplan.n_own() + cplan.n_halo()) * ctx.spec.d_in * 4) as u64;
         let corr_t = corr_compute + ctx.cost.comm_time(batch_bytes);
-        ps_bytes += batch_bytes;
+        self.ps_bytes += batch_bytes;
 
         let epoch_t = max_worker_t + ctx.cost.param_time(ctx.param_bytes()) + corr_t;
-        vtime += epoch_t;
+        self.vtime += epoch_t;
         bd.total = epoch_t;
-        breakdowns.push(bd);
+        self.breakdowns.push(bd);
 
         let evaluate = r % cfg.eval_every == 0 || r + 1 == cfg.epochs;
         let (val, test) = if evaluate {
-            let (p, _) = ps.fetch();
+            let (p, _) = self.ps.fetch();
             let (v, t) = ctx.global_eval(&p)?;
-            best_val = best_val.max(v);
-            final_val = v;
-            final_test = t;
+            self.best_val = self.best_val.max(v);
+            self.final_val = v;
+            self.final_test = t;
             (v, t)
         } else {
             (f64::NAN, f64::NAN)
         };
-        points.push(LogPoint {
+        let point = LogPoint {
             epoch: r,
-            vtime,
-            wall: t0.elapsed().as_secs_f64(),
+            vtime: self.vtime,
+            wall: self.t0.elapsed().as_secs_f64(),
             train_loss: loss_sum / m_parts as f64,
             val_f1: val,
             test_f1: test,
             kvs_bytes: 0,
-            ps_bytes,
-        });
+            ps_bytes: self.ps_bytes,
+        };
+        self.points.push(point.clone());
+        self.r += 1;
+        Ok(EpochReport {
+            epoch: r,
+            target_epochs: cfg.epochs,
+            point,
+            breakdown: bd,
+            evaluated: evaluate,
+            synced: false, // LLCG never exchanges representations
+            best_val_f1: self.best_val,
+        })
     }
 
-    Ok(RunResult {
-        method: "llcg".to_string(),
-        dataset: cfg.dataset.clone(),
-        model: cfg.model.as_str().to_string(),
-        parts: m_parts,
-        sync_interval: cfg.sync_interval,
-        threads: 1, // baseline keeps the historical sequential loop
-        seed: cfg.seed,
-        points,
-        epochs: breakdowns,
-        final_val_f1: final_val,
-        final_test_f1: final_test,
-        best_val_f1: best_val,
-        total_vtime: vtime,
-        total_wall: t0.elapsed().as_secs_f64(),
-        kvs: ctx.kvs.metrics.snapshot(),
-        delay: ps.delay_stats(),
-        final_params: ps.fetch().0,
-    })
+    fn current_params(&self) -> Vec<Matrix> {
+        self.ps.fetch().0
+    }
+
+    fn best_val_f1(&self) -> f64 {
+        self.best_val
+    }
+
+    fn snapshot(&self) -> Result<Checkpoint> {
+        let mut state = base_state(self.ctx, "llcg");
+        state.epoch = self.r;
+        state.vtime = self.vtime;
+        state.ps_bytes = self.ps_bytes;
+        state.best_val_f1 = self.best_val;
+        state.final_val_f1 = self.final_val;
+        state.final_test_f1 = self.final_test;
+        state.ps = self.ps.export_state();
+        state.extra = Json::obj(vec![(
+            "rng",
+            Json::Arr(self.rng.state().iter().map(|&x| Json::uint(x)).collect()),
+        )]);
+        Ok(state_checkpoint(self.ctx, state))
+    }
+
+    fn finish(&mut self) -> Result<RunResult> {
+        let cfg = &self.ctx.cfg;
+        Ok(RunResult {
+            method: "llcg".to_string(),
+            dataset: cfg.dataset.clone(),
+            model: cfg.model.as_str().to_string(),
+            parts: cfg.parts,
+            sync_interval: cfg.sync_interval,
+            threads: 1, // baseline keeps the historical sequential loop
+            seed: cfg.seed,
+            points: std::mem::take(&mut self.points),
+            epochs: std::mem::take(&mut self.breakdowns),
+            final_val_f1: self.final_val,
+            final_test_f1: self.final_test,
+            best_val_f1: self.best_val,
+            total_vtime: self.vtime,
+            total_wall: self.t0.elapsed().as_secs_f64(),
+            kvs: self.ctx.kvs.metrics.snapshot(),
+            delay: self.ps.delay_stats(),
+            final_params: self.ps.fetch().0,
+        })
+    }
+}
+
+/// Run the LLCG baseline to completion (one-shot convenience over
+/// [`LlcgSession`]).
+pub fn run_llcg(ctx: &TrainContext) -> Result<RunResult> {
+    let mut s = LlcgSession::new(ctx)?;
+    while !s.is_done() {
+        s.step_epoch()?;
+    }
+    s.finish()
 }
 
 #[cfg(test)]

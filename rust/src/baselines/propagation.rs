@@ -13,40 +13,112 @@
 
 use std::time::Instant;
 
+use crate::ps::checkpoint::{Checkpoint, TrainState};
 use crate::ps::{optimizer::Optimizer, ParamServer};
+use crate::tensor::Matrix;
+use crate::util::json::Json;
 use crate::util::Rng;
-use crate::Result;
+use crate::{eyre, Result};
 
 use crate::coordinator::context::TrainContext;
+use crate::coordinator::session::{
+    base_state, state_checkpoint, EpochReport, TrainSession,
+};
 use crate::coordinator::telemetry::{EpochBreakdown, LogPoint, RunResult};
 use crate::coordinator::worker::{
     epoch_layer_times, exec_eval, exec_train, pull_stale, push_reps, WorkerState,
 };
 
-/// Run the propagation-based (DGL-like) baseline.
-pub fn run_propagation(ctx: &TrainContext) -> Result<RunResult> {
-    let cfg = &ctx.cfg;
-    let m_parts = cfg.parts;
-    let ps = ParamServer::new(
-        ctx.initial_params(),
-        Optimizer::new(cfg.optimizer, cfg.lr).with_weight_decay(cfg.weight_decay),
-        m_parts,
-    );
-    let mut workers: Vec<WorkerState> =
-        (0..m_parts).map(|m| WorkerState::new(ctx, m)).collect();
-    let mut rng = Rng::new(cfg.seed ^ 0xD61_u64);
+/// The propagation-based (DGL-like) baseline as a stepwise state machine
+/// ([`crate::coordinator::session::TrainSession`]).
+pub struct PropagationSession<'a> {
+    ctx: &'a TrainContext,
+    ps: ParamServer,
+    workers: Vec<WorkerState>,
+    rng: Rng,
+    t0: Instant,
+    r: usize,
+    vtime: f64,
+    ps_bytes: u64,
+    points: Vec<LogPoint>,
+    breakdowns: Vec<EpochBreakdown>,
+    best_val: f64,
+    final_val: f64,
+    final_test: f64,
+}
 
-    let t0 = Instant::now();
-    let mut vtime = 0.0f64;
-    let mut ps_bytes = 0u64;
-    let mut points = Vec::new();
-    let mut breakdowns = Vec::new();
-    let mut best_val = 0.0f64;
-    let mut final_val = f64::NAN;
-    let mut final_test = f64::NAN;
+impl<'a> PropagationSession<'a> {
+    pub fn new(ctx: &'a TrainContext) -> Result<Self> {
+        let cfg = &ctx.cfg;
+        let m_parts = cfg.parts;
+        Ok(PropagationSession {
+            ctx,
+            ps: ParamServer::new(
+                ctx.initial_params(),
+                Optimizer::new(cfg.optimizer, cfg.lr).with_weight_decay(cfg.weight_decay),
+                m_parts,
+            ),
+            workers: (0..m_parts).map(|m| WorkerState::new(ctx, m)).collect(),
+            rng: Rng::new(cfg.seed ^ 0xD61_u64),
+            t0: Instant::now(),
+            r: 0,
+            vtime: 0.0,
+            ps_bytes: 0,
+            points: Vec::new(),
+            breakdowns: Vec::new(),
+            best_val: 0.0,
+            final_val: f64::NAN,
+            final_test: f64::NAN,
+        })
+    }
 
-    for r in 0..cfg.epochs {
-        let (params, _) = ps.fetch();
+    /// Rebuild from a v2 checkpoint state (worker stale caches and the
+    /// straggler RNG resume mid-stream; the KVS is restored by
+    /// [`crate::coordinator::session::resume_session`]).
+    pub fn resume(ctx: &'a TrainContext, state: &TrainState) -> Result<Self> {
+        let mut s = PropagationSession::new(ctx)?;
+        if state.workers.len() != s.workers.len() {
+            return Err(eyre!(
+                "checkpoint has {} workers, config wants {}",
+                state.workers.len(),
+                s.workers.len()
+            ));
+        }
+        s.ps.import_state(&state.ps);
+        for (w, snap) in s.workers.iter_mut().zip(&state.workers) {
+            w.apply_snap(ctx, snap)?;
+        }
+        s.rng = Rng::from_state(crate::ps::checkpoint::rng_from_json(
+            state.extra.get("rng")?,
+        )?);
+        s.r = state.epoch;
+        s.vtime = state.vtime;
+        s.ps_bytes = state.ps_bytes;
+        s.best_val = state.best_val_f1;
+        s.final_val = state.final_val_f1;
+        s.final_test = state.final_test_f1;
+        Ok(s)
+    }
+}
+
+impl TrainSession for PropagationSession<'_> {
+    fn ctx(&self) -> &TrainContext {
+        self.ctx
+    }
+
+    fn epochs_done(&self) -> usize {
+        self.r
+    }
+
+    fn step_epoch(&mut self) -> Result<EpochReport> {
+        if self.is_done() {
+            return Err(eyre!("session already ran {} epochs", self.r));
+        }
+        let ctx = self.ctx;
+        let cfg = &ctx.cfg;
+        let m_parts = cfg.parts;
+        let r = self.r;
+        let (params, _) = self.ps.fetch();
         let param_lits = crate::runtime::pack_params(&ctx.spec, &params)?;
         // worker time accumulators (refresh passes + train step)
         let mut compute_acc = vec![0.0f64; m_parts];
@@ -56,13 +128,13 @@ pub fn run_propagation(ctx: &TrainContext) -> Result<RunResult> {
         for _pass in 0..ctx.n_hidden() {
             // all workers compute fresh reps and push (barrier)...
             for m in 0..m_parts {
-                let (out, comp) = exec_eval(ctx, &workers[m], &param_lits)?;
+                let (out, comp) = exec_eval(ctx, &self.workers[m], &param_lits)?;
                 compute_acc[m] += comp;
-                io_acc[m] += push_reps(ctx, &workers[m], &out.reps, r as u64);
+                io_acc[m] += push_reps(ctx, &self.workers[m], &out.reps, r as u64);
             }
             // ...then all pull the now-fresh halo rows
             for m in 0..m_parts {
-                io_acc[m] += pull_stale(ctx, &mut workers[m], r as u64);
+                io_acc[m] += pull_stale(ctx, &mut self.workers[m], r as u64);
             }
         }
 
@@ -71,11 +143,11 @@ pub fn run_propagation(ctx: &TrainContext) -> Result<RunResult> {
         let mut bd = EpochBreakdown::default();
         let mut loss_sum = 0.0f64;
         for m in 0..m_parts {
-            let (out, comp) = exec_train(ctx, &workers[m], &param_lits)?;
+            let (out, comp) = exec_train(ctx, &self.workers[m], &param_lits)?;
             compute_acc[m] += comp;
             let ps_io = 2.0 * ctx.cost.param_time(ctx.param_bytes());
-            ps_bytes += 2 * ctx.param_bytes();
-            let straggle = ctx.cost.straggler_delay(m, &mut rng);
+            self.ps_bytes += 2 * ctx.param_bytes();
+            let straggle = ctx.cost.straggler_delay(m, &mut self.rng);
             // fresh exchange cannot overlap with compute: the pull for
             // layer l needs the *current* epoch's push, so the critical
             // path is compute + io (no Fig. 2 hiding)
@@ -87,56 +159,105 @@ pub fn run_propagation(ctx: &TrainContext) -> Result<RunResult> {
             bd.ps_io = bd.ps_io.max(ps_io);
             bd.straggle = bd.straggle.max(straggle);
             loss_sum += out.loss as f64;
-            workers[m].local_epoch += 1;
-            ps.submit_sync(&out.grads);
+            self.workers[m].local_epoch += 1;
+            self.ps.submit_sync(&out.grads);
         }
         let epoch_t = max_worker_t + ctx.cost.param_time(ctx.param_bytes());
-        vtime += epoch_t;
+        self.vtime += epoch_t;
         bd.total = epoch_t;
-        breakdowns.push(bd);
+        self.breakdowns.push(bd);
 
         let evaluate = r % cfg.eval_every == 0 || r + 1 == cfg.epochs;
         let (val, test) = if evaluate {
-            let (p, _) = ps.fetch();
+            let (p, _) = self.ps.fetch();
             let (v, t) = ctx.global_eval(&p)?;
-            best_val = best_val.max(v);
-            final_val = v;
-            final_test = t;
+            self.best_val = self.best_val.max(v);
+            self.final_val = v;
+            self.final_test = t;
             (v, t)
         } else {
             (f64::NAN, f64::NAN)
         };
-        points.push(LogPoint {
+        let point = LogPoint {
             epoch: r,
-            vtime,
-            wall: t0.elapsed().as_secs_f64(),
+            vtime: self.vtime,
+            wall: self.t0.elapsed().as_secs_f64(),
             train_loss: loss_sum / m_parts as f64,
             val_f1: val,
             test_f1: test,
             kvs_bytes: ctx.kvs.metrics.snapshot().total_bytes(),
-            ps_bytes,
-        });
+            ps_bytes: self.ps_bytes,
+        };
+        self.points.push(point.clone());
+        self.r += 1;
+        Ok(EpochReport {
+            epoch: r,
+            target_epochs: cfg.epochs,
+            point,
+            breakdown: bd,
+            evaluated: evaluate,
+            synced: true, // fresh exchange every epoch by definition
+            best_val_f1: self.best_val,
+        })
     }
 
-    Ok(RunResult {
-        method: "dgl".to_string(),
-        dataset: cfg.dataset.clone(),
-        model: cfg.model.as_str().to_string(),
-        parts: m_parts,
-        sync_interval: 1, // fresh exchange every epoch by definition
-        threads: 1, // baseline keeps the historical sequential loop
-        seed: cfg.seed,
-        points,
-        epochs: breakdowns,
-        final_val_f1: final_val,
-        final_test_f1: final_test,
-        best_val_f1: best_val,
-        total_vtime: vtime,
-        total_wall: t0.elapsed().as_secs_f64(),
-        kvs: ctx.kvs.metrics.snapshot(),
-        delay: ps.delay_stats(),
-        final_params: ps.fetch().0,
-    })
+    fn current_params(&self) -> Vec<Matrix> {
+        self.ps.fetch().0
+    }
+
+    fn best_val_f1(&self) -> f64 {
+        self.best_val
+    }
+
+    fn snapshot(&self) -> Result<Checkpoint> {
+        let mut state = base_state(self.ctx, "dgl");
+        state.epoch = self.r;
+        state.vtime = self.vtime;
+        state.ps_bytes = self.ps_bytes;
+        state.best_val_f1 = self.best_val;
+        state.final_val_f1 = self.final_val;
+        state.final_test_f1 = self.final_test;
+        state.ps = self.ps.export_state();
+        state.workers = self.workers.iter().map(|w| w.export_snap()).collect();
+        state.extra = Json::obj(vec![(
+            "rng",
+            Json::Arr(self.rng.state().iter().map(|&x| Json::uint(x)).collect()),
+        )]);
+        Ok(state_checkpoint(self.ctx, state))
+    }
+
+    fn finish(&mut self) -> Result<RunResult> {
+        let cfg = &self.ctx.cfg;
+        Ok(RunResult {
+            method: "dgl".to_string(),
+            dataset: cfg.dataset.clone(),
+            model: cfg.model.as_str().to_string(),
+            parts: cfg.parts,
+            sync_interval: 1, // fresh exchange every epoch by definition
+            threads: 1,       // baseline keeps the historical sequential loop
+            seed: cfg.seed,
+            points: std::mem::take(&mut self.points),
+            epochs: std::mem::take(&mut self.breakdowns),
+            final_val_f1: self.final_val,
+            final_test_f1: self.final_test,
+            best_val_f1: self.best_val,
+            total_vtime: self.vtime,
+            total_wall: self.t0.elapsed().as_secs_f64(),
+            kvs: self.ctx.kvs.metrics.snapshot(),
+            delay: self.ps.delay_stats(),
+            final_params: self.ps.fetch().0,
+        })
+    }
+}
+
+/// Run the propagation-based (DGL-like) baseline to completion (one-shot
+/// convenience over [`PropagationSession`]).
+pub fn run_propagation(ctx: &TrainContext) -> Result<RunResult> {
+    let mut s = PropagationSession::new(ctx)?;
+    while !s.is_done() {
+        s.step_epoch()?;
+    }
+    s.finish()
 }
 
 #[cfg(test)]

@@ -99,6 +99,22 @@ pub struct RunConfig {
     pub straggler: Option<(usize, f64, f64)>,
     /// Artifact directory (default "artifacts").
     pub artifact_dir: String,
+    /// Checkpoint the full training state every K epochs (0 = only at
+    /// the end; requires `save_to`).
+    pub save_every: usize,
+    /// Checkpoint path the driver writes to (periodic + final).
+    pub save_to: Option<String>,
+    /// Checkpoint path to resume from (`digest train load_from=...`).
+    pub load_from: Option<String>,
+    /// Early stopping: stop after this many consecutive evaluations
+    /// without a val-F1 improvement (0 = off).
+    pub early_stop: usize,
+    /// Wall-clock budget in real seconds; the driver stops the session
+    /// at the first epoch boundary past it (0 = unlimited).
+    pub wall_budget: f64,
+    /// Stream per-epoch telemetry rows to this CSV file while training
+    /// runs (same columns as the post-hoc `--csv` timeline).
+    pub stream_csv: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -120,6 +136,12 @@ impl Default for RunConfig {
             seed: 42,
             straggler: None,
             artifact_dir: "artifacts".into(),
+            save_every: 0,
+            save_to: None,
+            load_from: None,
+            early_stop: 0,
+            wall_budget: 0.0,
+            stream_csv: None,
         }
     }
 }
@@ -168,10 +190,29 @@ impl RunConfig {
             c.threads = v.as_usize()?;
         }
         if let Some(v) = j.opt("seed") {
-            c.seed = v.as_f64()? as u64;
+            // exact u64 parse: seeds above 2^53 used to round silently
+            c.seed = v.as_u64()?;
         }
         if let Some(v) = j.opt("artifact_dir") {
             c.artifact_dir = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.opt("save_every") {
+            c.save_every = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("save_to") {
+            c.save_to = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = j.opt("load_from") {
+            c.load_from = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = j.opt("early_stop") {
+            c.early_stop = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("wall_budget") {
+            c.wall_budget = v.as_f64()?;
+        }
+        if let Some(v) = j.opt("stream_csv") {
+            c.stream_csv = Some(v.as_str()?.to_string());
         }
         if let Some(v) = j.opt("straggler") {
             let arr = v.as_arr()?;
@@ -211,12 +252,48 @@ impl RunConfig {
             "threads" => self.threads = v.parse().map_err(|e| eyre!("threads: {e}"))?,
             "seed" => self.seed = v.parse().map_err(|e| eyre!("seed: {e}"))?,
             "artifact_dir" => self.artifact_dir = v.to_string(),
+            "save_every" => {
+                self.save_every = v.parse().map_err(|e| eyre!("save_every: {e}"))?
+            }
+            "save_to" => self.save_to = Some(v.to_string()),
+            "load_from" => self.load_from = Some(v.to_string()),
+            "early_stop" => {
+                self.early_stop = v.parse().map_err(|e| eyre!("early_stop: {e}"))?
+            }
+            "wall_budget" => {
+                self.wall_budget = v.parse().map_err(|e| eyre!("wall_budget: {e}"))?
+            }
+            "stream_csv" => self.stream_csv = Some(v.to_string()),
             _ => return Err(eyre!("unknown config key {k:?}")),
         }
-        self.validate()
+        // field-local rules only: cross-field constraints (straggler id
+        // vs parts, save_every vs save_to) are deferred to the full
+        // `validate()` at load/run time, so `save_every=10 save_to=x`
+        // works in either argument order
+        self.validate_fields()
     }
 
+    /// Full validation: every field-local rule plus the cross-field
+    /// constraints.  Runs on JSON load and at `TrainContext::new`.
     pub fn validate(&self) -> Result<()> {
+        self.validate_fields()?;
+        // catch a bad straggler worker id here instead of deep inside
+        // the scheduler (where it used to surface as an index panic)
+        if let Some((w, _, _)) = self.straggler {
+            if w >= self.parts {
+                return Err(eyre!(
+                    "straggler worker {w} out of range (parts = {})",
+                    self.parts
+                ));
+            }
+        }
+        if self.save_every > 0 && self.save_to.is_none() {
+            return Err(eyre!("save_every requires save_to"));
+        }
+        Ok(())
+    }
+
+    fn validate_fields(&self) -> Result<()> {
         if self.parts == 0 {
             return Err(eyre!("parts must be >= 1"));
         }
@@ -234,6 +311,14 @@ impl RunConfig {
         }
         if !(self.lr > 0.0) {
             return Err(eyre!("lr must be positive"));
+        }
+        if let Some((_, lo, hi)) = self.straggler {
+            if !(lo.is_finite() && hi.is_finite() && 0.0 <= lo && lo <= hi) {
+                return Err(eyre!("straggler delay range [{lo}, {hi}] invalid"));
+            }
+        }
+        if self.wall_budget < 0.0 || !self.wall_budget.is_finite() {
+            return Err(eyre!("wall_budget must be a finite non-negative number"));
         }
         Ok(())
     }
@@ -328,6 +413,77 @@ mod tests {
         assert!(RunConfig::from_json(&j).is_err());
         let j = Json::parse(r#"{"sync_interval": 0}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn large_seed_parses_exactly_from_json() {
+        // 0x9E3779B97F4A7C15 has low bits set above 2^53: the old
+        // as_f64()-based parse silently rounded it to a different seed
+        let seed = 0x9E3779B97F4A7C15u64;
+        let j = Json::parse(&format!("{{\"seed\": {seed}}}")).unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.seed, seed);
+        // 2^53 + 1 is the smallest lossy integer
+        let j = Json::parse(r#"{"seed": 9007199254740993}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&j).unwrap().seed, 9007199254740993);
+        // non-integer seeds are config errors, not silent truncations
+        let j = Json::parse(r#"{"seed": 1.5}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn straggler_worker_id_validated_against_parts() {
+        let mut c = RunConfig::default();
+        c.parts = 2;
+        c.straggler = Some((2, 1.0, 2.0));
+        let err = c.validate().unwrap_err();
+        assert!(err.to_string().contains("straggler worker 2"), "{err}");
+        c.straggler = Some((1, 1.0, 2.0));
+        c.validate().unwrap();
+        // inverted or negative delay ranges are rejected too
+        c.straggler = Some((0, 5.0, 2.0));
+        assert!(c.validate().is_err());
+        c.straggler = Some((0, -1.0, 2.0));
+        assert!(c.validate().is_err());
+        // and through the JSON path
+        let j = Json::parse(r#"{"parts": 2, "straggler": [3, 1.0, 2.0]}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn session_knobs_parse_and_validate() {
+        let j = Json::parse(
+            r#"{
+                "save_every": 5, "save_to": "ck.json",
+                "early_stop": 3, "wall_budget": 120.5,
+                "stream_csv": "live.csv"
+            }"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.save_every, 5);
+        assert_eq!(c.save_to.as_deref(), Some("ck.json"));
+        assert_eq!(c.early_stop, 3);
+        assert!((c.wall_budget - 120.5).abs() < 1e-12);
+        assert_eq!(c.stream_csv.as_deref(), Some("live.csv"));
+        // save_every without a path is a config error
+        let j = Json::parse(r#"{"save_every": 5}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        // CLI overrides hit the same fields, in EITHER order (cross-field
+        // constraints are deferred to the full validate at run time)
+        let mut c = RunConfig::default();
+        c.apply_override("save_every=2").unwrap();
+        c.apply_override("save_to=out.json").unwrap();
+        c.apply_override("early_stop=4").unwrap();
+        c.apply_override("load_from=in.json").unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.save_every, 2);
+        assert_eq!(c.load_from.as_deref(), Some("in.json"));
+        assert!(c.apply_override("wall_budget=-1").is_err());
+        // but a config left with save_every and no path fails the full check
+        let mut dangling = RunConfig::default();
+        dangling.apply_override("save_every=2").unwrap();
+        assert!(dangling.validate().is_err());
     }
 
     #[test]

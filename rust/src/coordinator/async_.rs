@@ -20,18 +20,34 @@
 //! PS/KVS mutation stays on the coordinator thread in strict event
 //! order, which keeps the run bit-identical to the sequential event
 //! loop at any thread count while the heavy compute overlaps.
+//!
+//! **Suspending at epoch boundaries** ([`AsyncSession`]): one
+//! `step_epoch` call processes exactly M finish events (one
+//! epoch-equivalent logging window).  The pool is scoped to the call, so
+//! at the window boundary every still-in-flight prefetched step is
+//! drained into a per-worker *stash* — its inputs were frozen at
+//! dispatch, so executing it eagerly changes nothing — and the next
+//! `step_epoch` consumes stashed outputs before asking a fresh pool.
+//! Checkpoints serialize the event queue plus each worker's frozen
+//! inputs (parameter snapshot + stale cache) instead of the stashed
+//! outputs; resume re-dispatches those steps and re-derives bit-identical
+//! outputs from the same inputs.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::ps::checkpoint::{Checkpoint, TrainState};
 use crate::ps::{optimizer::Optimizer, ParamServer};
 use crate::runtime::SharedLiteral;
-use crate::Result;
+use crate::tensor::Matrix;
+use crate::util::json::Json;
+use crate::{eyre, Result};
 
 use super::context::TrainContext;
 use super::engine::{resolve_threads, ExecPool};
+use super::session::{base_state, state_checkpoint, EpochReport, TrainSession};
 use super::telemetry::{EpochBreakdown, LogPoint, RunResult};
 use super::worker::{epoch_layer_times, pull_stale, push_reps, WorkerState};
 
@@ -63,178 +79,491 @@ impl Ord for Ev {
     }
 }
 
-/// Run asynchronous DIGEST-A.  Total work = epochs × M updates, matching
-/// the synchronous run for fair comparison.
-pub fn run_async(ctx: &TrainContext) -> Result<RunResult> {
-    let cfg = &ctx.cfg;
-    let m_parts = cfg.parts;
-    let threads = resolve_threads(cfg.threads, m_parts);
-    let ps = ParamServer::new(
-        ctx.initial_params(),
-        Optimizer::new(cfg.optimizer, cfg.lr).with_weight_decay(cfg.weight_decay),
-        m_parts,
-    );
-    let mut workers: Vec<WorkerState> =
-        (0..m_parts).map(|m| WorkerState::new(ctx, m)).collect();
-    // per-worker parameter snapshot, pre-packed as shared literals
-    let mut snapshots: Vec<Arc<Vec<SharedLiteral>>> = Vec::with_capacity(m_parts);
+/// Asynchronous DIGEST-A as a stepwise state machine.  Total work =
+/// epochs × M updates, matching the synchronous run for fair comparison;
+/// one `step_epoch` = M updates (one logging window).
+pub struct AsyncSession<'a> {
+    ctx: &'a TrainContext,
+    threads: usize,
+    ps: ParamServer,
+    workers: Vec<WorkerState>,
+    /// Per-worker parameter snapshot, pre-packed as shared literals.
+    snapshots: Vec<Arc<Vec<SharedLiteral>>>,
+    /// Raw copies of the snapshots (checkpoint serialization).
+    snapshots_raw: Vec<Vec<Matrix>>,
+    queue: BinaryHeap<Ev>,
+    /// Worker has a scheduled step (an event in `queue`).
+    pending: Vec<bool>,
+    /// Outputs of steps drained from the pool at a window boundary.
+    stash: Vec<Option<crate::runtime::TrainOutput>>,
+    started: bool,
+    t0: Instant,
+    vtime: f64,
+    ps_bytes: u64,
+    updates: usize,
+    loss_acc: f64,
+    loss_n: usize,
+    last_epoch_t: f64,
+    /// Max staleness age observed by pulls within the current
+    /// epoch-equivalent logging window (M updates).
+    window_age: Option<u64>,
+    /// Whether any KVS push/pull happened in the current window.
+    window_synced: bool,
+    points: Vec<LogPoint>,
+    breakdowns: Vec<EpochBreakdown>,
+    best_val: f64,
+    final_val: f64,
+    final_test: f64,
+}
 
-    let t0 = Instant::now();
+impl<'a> AsyncSession<'a> {
+    pub fn new(ctx: &'a TrainContext) -> Result<Self> {
+        let cfg = &ctx.cfg;
+        let m_parts = cfg.parts;
+        Ok(AsyncSession {
+            ctx,
+            threads: resolve_threads(cfg.threads, m_parts),
+            ps: ParamServer::new(
+                ctx.initial_params(),
+                Optimizer::new(cfg.optimizer, cfg.lr).with_weight_decay(cfg.weight_decay),
+                m_parts,
+            ),
+            workers: (0..m_parts).map(|m| WorkerState::new(ctx, m)).collect(),
+            snapshots: (0..m_parts).map(|_| Arc::new(Vec::new())).collect(),
+            snapshots_raw: vec![Vec::new(); m_parts],
+            queue: BinaryHeap::new(),
+            pending: vec![false; m_parts],
+            stash: (0..m_parts).map(|_| None).collect(),
+            started: false,
+            t0: Instant::now(),
+            vtime: 0.0,
+            ps_bytes: 0,
+            updates: 0,
+            loss_acc: 0.0,
+            loss_n: 0,
+            last_epoch_t: 0.0,
+            window_age: None,
+            window_synced: false,
+            points: Vec::new(),
+            breakdowns: Vec::new(),
+            best_val: 0.0,
+            final_val: f64::NAN,
+            final_test: f64::NAN,
+        })
+    }
 
-    std::thread::scope(|scope| -> Result<RunResult> {
-        let mut pool = ExecPool::start(scope, ctx, threads, m_parts);
-        let mut queue: BinaryHeap<Ev> = BinaryHeap::new();
-        let mut ps_bytes = 0u64;
-
-        // kick off: every worker fetches, pulls cold, and its first step
-        // starts executing on the pool immediately
-        for m in 0..m_parts {
-            let (params, v) = ps.fetch();
-            workers[m].fetched_version = v;
-            snapshots.push(Arc::new(crate::runtime::pack_params(&ctx.spec, &params)?));
-            let pull_io = pull_stale(ctx, &mut workers[m], 0); // cold pull
-            pool.dispatch(&workers[m], snapshots[m].clone());
-            let compute = ctx.cost.compute_time(m, ctx.train_flops(m));
-            let straggle = ctx.cost.straggler_delay(m, &mut workers[m].rng);
-            let (comp_l, io_l) = epoch_layer_times(ctx, compute, pull_io, 0.0);
-            let t = ctx.cost.worker_epoch_time(&comp_l, &io_l, cfg.overlap, straggle)
-                + ctx.cost.param_time(ctx.param_bytes());
-            ps_bytes += ctx.param_bytes();
-            queue.push(Ev { t, worker: m });
+    /// Rebuild a session from a v2 checkpoint state.  Pending steps are
+    /// re-dispatched from their frozen inputs on the next `step_epoch`,
+    /// reproducing the outputs the exporting run had in its stash.
+    pub fn resume(ctx: &'a TrainContext, state: &TrainState) -> Result<Self> {
+        let mut s = AsyncSession::new(ctx)?;
+        if state.workers.len() != s.workers.len() {
+            return Err(eyre!(
+                "checkpoint has {} workers, config wants {}",
+                state.workers.len(),
+                s.workers.len()
+            ));
         }
+        s.ps.import_state(&state.ps);
+        for (w, snap) in s.workers.iter_mut().zip(&state.workers) {
+            w.apply_snap(ctx, snap)?;
+        }
+        s.vtime = state.vtime;
+        s.ps_bytes = state.ps_bytes;
+        s.best_val = state.best_val_f1;
+        s.final_val = state.final_val_f1;
+        s.final_test = state.final_test_f1;
 
-        let target_updates = cfg.epochs * m_parts;
-        let mut updates = 0usize;
-        let mut vtime = 0.0f64;
-        let mut points = Vec::new();
-        let mut breakdowns = Vec::new();
-        let mut best_val = 0.0f64;
-        let mut final_val = f64::NAN;
-        let mut final_test = f64::NAN;
-        let mut loss_acc = 0.0f64;
-        let mut loss_n = 0usize;
-        let mut last_epoch_t = 0.0f64;
-        // max staleness age observed by pulls within the current
-        // epoch-equivalent logging window (M updates)
-        let mut window_age: Option<u64> = None;
-
-        while updates < target_updates {
-            let ev = queue.pop().expect("event queue empty");
-            let m = ev.worker;
-            vtime = ev.t;
-
-            // the step the worker started earlier finishes NOW: collect
-            // its prefetched output (computed from the snapshot the
-            // worker fetched back then)
-            let out = pool.collect(m)?;
-            let compute_t = ctx.cost.compute_time(m, ctx.train_flops(m));
-            ps.submit_async(&out.grads, workers[m].fetched_version);
-            workers[m].local_epoch += 1;
-            updates += 1;
-            loss_acc += out.loss as f64;
-            loss_n += 1;
-
-            // periodic representation synchronization on the local clock
-            let sync_now = workers[m].local_epoch % cfg.sync_interval == 0;
-            let push_io = if sync_now {
-                push_reps(ctx, &workers[m], &out.reps, workers[m].local_epoch as u64)
-            } else {
-                0.0
-            };
-
-            // epoch-equivalent logging every M updates
-            if updates % m_parts == 0 {
-                let epoch = updates / m_parts - 1;
-                let evaluate = epoch % cfg.eval_every == 0 || updates == target_updates;
-                let (val, test) = if evaluate {
-                    let (p, _) = ps.fetch();
-                    let (v, t) = ctx.global_eval(&p)?;
-                    best_val = best_val.max(v);
-                    final_val = v;
-                    final_test = t;
-                    (v, t)
-                } else {
-                    (f64::NAN, f64::NAN)
-                };
-                points.push(LogPoint {
-                    epoch,
-                    vtime,
-                    wall: t0.elapsed().as_secs_f64(),
-                    train_loss: loss_acc / loss_n.max(1) as f64,
-                    val_f1: val,
-                    test_f1: test,
-                    kvs_bytes: ctx.kvs.metrics.snapshot().total_bytes(),
-                    ps_bytes,
-                });
-                breakdowns.push(EpochBreakdown {
-                    compute: compute_t,
-                    kvs_io: push_io,
-                    ps_io: 0.0,
-                    straggle: 0.0,
-                    max_stale_age: window_age,
-                    total: vtime - last_epoch_t,
-                });
-                last_epoch_t = vtime;
-                loss_acc = 0.0;
-                loss_n = 0;
-                window_age = None;
+        let extra = &state.extra;
+        s.started = extra.get("started")?.as_bool()?;
+        s.updates = extra.get("updates")?.as_usize()?;
+        s.loss_acc = extra.get("loss_acc")?.as_f64()?;
+        s.loss_n = extra.get("loss_n")?.as_usize()?;
+        s.last_epoch_t = extra.get("last_epoch_t")?.as_f64()?;
+        s.window_age = match extra.get("window_age")? {
+            Json::Null => None,
+            v => Some(v.as_u64()?),
+        };
+        for ev in extra.get("queue")?.as_arr()? {
+            let worker = ev.get("worker")?.as_usize()?;
+            if worker >= s.workers.len() {
+                return Err(eyre!("queued event for unknown worker {worker}"));
             }
-
-            if updates >= target_updates {
-                break;
-            }
-
-            // start the worker's next step immediately (non-blocking):
-            // freeze its inputs and hand the execution to the pool
-            let (params, v) = ps.fetch();
-            workers[m].fetched_version = v;
-            snapshots[m] = Arc::new(crate::runtime::pack_params(&ctx.spec, &params)?);
-            ps_bytes += 2 * ctx.param_bytes();
-            let local_now = workers[m].local_epoch as u64;
-            let pull_io = if sync_now {
-                let io = pull_stale(ctx, &mut workers[m], local_now);
-                if let Some(a) = workers[m].last_pull_age {
-                    window_age = Some(window_age.map_or(a, |x| x.max(a)));
-                }
-                io
-            } else {
-                0.0
-            };
-            pool.dispatch(&workers[m], snapshots[m].clone());
-            let compute = ctx.cost.compute_time(m, ctx.train_flops(m));
-            let straggle = ctx.cost.straggler_delay(m, &mut workers[m].rng);
-            let (comp_l, io_l) = epoch_layer_times(ctx, compute, pull_io, push_io);
-            let dt = ctx.cost.worker_epoch_time(&comp_l, &io_l, cfg.overlap, straggle)
-                + 2.0 * ctx.cost.param_time(ctx.param_bytes());
-            queue.push(Ev {
-                t: vtime + dt,
-                worker: m,
+            s.pending[worker] = true;
+            s.queue.push(Ev {
+                t: ev.get("t")?.as_f64()?,
+                worker,
             });
         }
+        let snaps = extra.get("snapshots")?.as_arr()?;
+        if snaps.len() != s.workers.len() {
+            return Err(eyre!("checkpoint snapshot arity mismatch"));
+        }
+        for (m, sj) in snaps.iter().enumerate() {
+            if !s.pending[m] {
+                continue; // no step in flight; snapshot not needed
+            }
+            let raw: Vec<Matrix> = sj
+                .as_arr()?
+                .iter()
+                .map(crate::ps::checkpoint::mat_from_json)
+                .collect::<Result<_>>()?;
+            s.snapshots[m] = Arc::new(crate::runtime::pack_params(&ctx.spec, &raw)?);
+            s.snapshots_raw[m] = raw;
+        }
+        Ok(s)
+    }
 
+    fn m_parts(&self) -> usize {
+        self.ctx.cfg.parts
+    }
+
+    /// The tail of one event-loop iteration: freeze worker `m`'s next
+    /// step's inputs (fresh PS fetch + optional stale pull), hand the
+    /// execution to the pool, and schedule its finish event.  `sync_now`
+    /// and `push_io` describe the sync the worker just performed (they
+    /// feed the pull decision and the overlap cost model).
+    fn start_next_step(
+        &mut self,
+        pool: &mut ExecPool<'_>,
+        m: usize,
+        sync_now: bool,
+        push_io: f64,
+    ) -> Result<()> {
+        let ctx = self.ctx;
+        let cfg = &ctx.cfg;
+        let (params, v) = self.ps.fetch();
+        self.workers[m].fetched_version = v;
+        self.snapshots[m] = Arc::new(crate::runtime::pack_params(&ctx.spec, &params)?);
+        self.snapshots_raw[m] = params;
+        self.ps_bytes += 2 * ctx.param_bytes();
+        let local_now = self.workers[m].local_epoch as u64;
+        let pull_io = if sync_now {
+            let io = pull_stale(ctx, &mut self.workers[m], local_now);
+            if let Some(a) = self.workers[m].last_pull_age {
+                self.window_age = Some(self.window_age.map_or(a, |x| x.max(a)));
+            }
+            io
+        } else {
+            0.0
+        };
+        pool.dispatch(&self.workers[m], self.snapshots[m].clone());
+        self.pending[m] = true;
+        let compute = ctx.cost.compute_time(m, ctx.train_flops(m));
+        let straggle = ctx.cost.straggler_delay(m, &mut self.workers[m].rng);
+        let (comp_l, io_l) = epoch_layer_times(ctx, compute, pull_io, push_io);
+        let dt = ctx
+            .cost
+            .worker_epoch_time(&comp_l, &io_l, cfg.overlap, straggle)
+            + 2.0 * ctx.cost.param_time(ctx.param_bytes());
+        self.queue.push(Ev {
+            t: self.vtime + dt,
+            worker: m,
+        });
+        Ok(())
+    }
+}
+
+impl TrainSession for AsyncSession<'_> {
+    fn ctx(&self) -> &TrainContext {
+        self.ctx
+    }
+
+    fn epochs_done(&self) -> usize {
+        self.updates / self.m_parts()
+    }
+
+    fn step_epoch(&mut self) -> Result<EpochReport> {
+        if self.is_done() {
+            return Err(eyre!(
+                "session already ran {} epochs",
+                self.epochs_done()
+            ));
+        }
+        let ctx = self.ctx;
+        let cfg = &ctx.cfg;
+        let m_parts = cfg.parts;
+        let target_updates = cfg.epochs * m_parts;
+        let window_end = self.updates + m_parts;
+        self.window_synced = false;
+        let mut window_point: Option<(LogPoint, EpochBreakdown, bool)> = None;
+
+        std::thread::scope(|scope| -> Result<()> {
+            let mut pool = ExecPool::start(scope, ctx, self.threads, m_parts);
+            if !self.started {
+                self.started = true;
+                // kick off: every worker fetches, pulls cold, and its
+                // first step starts executing on the pool immediately
+                for m in 0..m_parts {
+                    let (params, v) = self.ps.fetch();
+                    self.workers[m].fetched_version = v;
+                    self.snapshots[m] =
+                        Arc::new(crate::runtime::pack_params(&ctx.spec, &params)?);
+                    self.snapshots_raw[m] = params;
+                    let pull_io = pull_stale(ctx, &mut self.workers[m], 0); // cold pull
+                    self.window_synced = true;
+                    pool.dispatch(&self.workers[m], self.snapshots[m].clone());
+                    self.pending[m] = true;
+                    let compute = ctx.cost.compute_time(m, ctx.train_flops(m));
+                    let straggle =
+                        ctx.cost.straggler_delay(m, &mut self.workers[m].rng);
+                    let (comp_l, io_l) = epoch_layer_times(ctx, compute, pull_io, 0.0);
+                    let t = ctx
+                        .cost
+                        .worker_epoch_time(&comp_l, &io_l, cfg.overlap, straggle)
+                        + ctx.cost.param_time(ctx.param_bytes());
+                    self.ps_bytes += ctx.param_bytes();
+                    self.queue.push(Ev { t, worker: m });
+                }
+            } else {
+                // resume path: re-dispatch pending steps whose outputs
+                // aren't stashed (their inputs are frozen in the session,
+                // so re-execution is bit-identical)
+                for m in 0..m_parts {
+                    if self.pending[m] && self.stash[m].is_none() {
+                        pool.dispatch(&self.workers[m], self.snapshots[m].clone());
+                    }
+                }
+                // a worker with no event at all was left idle by a
+                // checkpoint taken at run completion (its final
+                // tail-dispatch never ran); when the epoch target is
+                // raised to extend the run, start its next step now —
+                // exactly what an uninterrupted longer run would have
+                // done at this point, with the push cost re-derived
+                // deterministically (the push itself landed pre-save)
+                for m in 0..m_parts {
+                    if !self.pending[m] {
+                        let sync_now =
+                            self.workers[m].local_epoch % cfg.sync_interval == 0;
+                        let push_io = if sync_now {
+                            super::worker::push_io_cost(ctx, m)
+                        } else {
+                            0.0
+                        };
+                        self.start_next_step(&mut pool, m, sync_now, push_io)?;
+                    }
+                }
+            }
+
+            while self.updates < window_end {
+                let ev = self.queue.pop().expect("event queue empty");
+                let m = ev.worker;
+                self.vtime = ev.t;
+
+                // the step the worker started earlier finishes NOW:
+                // collect its (stashed or prefetched) output, computed
+                // from the snapshot the worker fetched back then
+                let out = match self.stash[m].take() {
+                    Some(out) => out,
+                    None => pool.collect(m)?,
+                };
+                self.pending[m] = false;
+                let compute_t = ctx.cost.compute_time(m, ctx.train_flops(m));
+                self.ps.submit_async(&out.grads, self.workers[m].fetched_version);
+                self.workers[m].local_epoch += 1;
+                self.updates += 1;
+                self.loss_acc += out.loss as f64;
+                self.loss_n += 1;
+
+                // periodic representation synchronization, local clock
+                let sync_now = self.workers[m].local_epoch % cfg.sync_interval == 0;
+                let push_io = if sync_now {
+                    self.window_synced = true;
+                    push_reps(
+                        ctx,
+                        &self.workers[m],
+                        &out.reps,
+                        self.workers[m].local_epoch as u64,
+                    )
+                } else {
+                    0.0
+                };
+
+                // epoch-equivalent logging every M updates
+                if self.updates % m_parts == 0 {
+                    let epoch = self.updates / m_parts - 1;
+                    let evaluate = epoch % cfg.eval_every == 0
+                        || self.updates == target_updates;
+                    let (val, test) = if evaluate {
+                        let (p, _) = self.ps.fetch();
+                        let (v, t) = ctx.global_eval(&p)?;
+                        self.best_val = self.best_val.max(v);
+                        self.final_val = v;
+                        self.final_test = t;
+                        (v, t)
+                    } else {
+                        (f64::NAN, f64::NAN)
+                    };
+                    let point = LogPoint {
+                        epoch,
+                        vtime: self.vtime,
+                        wall: self.t0.elapsed().as_secs_f64(),
+                        train_loss: self.loss_acc / self.loss_n.max(1) as f64,
+                        val_f1: val,
+                        test_f1: test,
+                        kvs_bytes: ctx.kvs.metrics.snapshot().total_bytes(),
+                        ps_bytes: self.ps_bytes,
+                    };
+                    let bd = EpochBreakdown {
+                        compute: compute_t,
+                        kvs_io: push_io,
+                        ps_io: 0.0,
+                        straggle: 0.0,
+                        max_stale_age: self.window_age,
+                        total: self.vtime - self.last_epoch_t,
+                    };
+                    self.points.push(point.clone());
+                    self.breakdowns.push(bd);
+                    window_point = Some((point, bd, evaluate));
+                    self.last_epoch_t = self.vtime;
+                    self.loss_acc = 0.0;
+                    self.loss_n = 0;
+                    self.window_age = None;
+                }
+
+                if self.updates >= target_updates {
+                    break;
+                }
+
+                // start the worker's next step immediately (non-blocking)
+                self.start_next_step(&mut pool, m, sync_now, push_io)?;
+            }
+
+            // window boundary: drain still-in-flight prefetches into the
+            // stash so the pool (scoped to this call) can shut down
+            // without losing work.  On the final window there is nothing
+            // useful left — dropping the pool discards leftovers exactly
+            // like the one-shot loop did.
+            if self.updates < target_updates {
+                for m in 0..m_parts {
+                    if self.pending[m] && self.stash[m].is_none() && pool.is_in_flight(m)
+                    {
+                        self.stash[m] = Some(pool.collect(m)?);
+                    }
+                }
+            }
+            Ok(())
+            // pool drops here: the job channel closes, executors drain
+            // any remaining jobs and exit; the scope joins them
+        })?;
+
+        let (point, breakdown, evaluated) =
+            window_point.expect("window completed without a log point");
+        Ok(EpochReport {
+            epoch: point.epoch,
+            target_epochs: cfg.epochs,
+            point,
+            breakdown,
+            evaluated,
+            synced: self.window_synced,
+            best_val_f1: self.best_val,
+        })
+    }
+
+    fn current_params(&self) -> Vec<Matrix> {
+        self.ps.fetch().0
+    }
+
+    fn best_val_f1(&self) -> f64 {
+        self.best_val
+    }
+
+    fn snapshot(&self) -> Result<Checkpoint> {
+        let mut state = base_state(self.ctx, "digest-a");
+        state.epoch = self.epochs_done();
+        state.vtime = self.vtime;
+        state.ps_bytes = self.ps_bytes;
+        state.best_val_f1 = self.best_val;
+        state.final_val_f1 = self.final_val;
+        state.final_test_f1 = self.final_test;
+        state.ps = self.ps.export_state();
+        state.workers = self.workers.iter().map(|w| w.export_snap()).collect();
+        // events sorted ascending: re-pushing them rebuilds a heap with
+        // the identical pop order (total order on (t, worker))
+        let mut events: Vec<&Ev> = self.queue.iter().collect();
+        events.sort_by(|a, b| {
+            a.t.partial_cmp(&b.t)
+                .unwrap_or(Ordering::Equal)
+                .then_with(|| a.worker.cmp(&b.worker))
+        });
+        let queue_json = Json::Arr(
+            events
+                .iter()
+                .map(|e| {
+                    Json::obj(vec![
+                        ("t", Json::num(e.t)),
+                        ("worker", Json::num(e.worker as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        // frozen per-worker parameter snapshots, only for pending steps
+        let snapshots_json = Json::Arr(
+            self.snapshots_raw
+                .iter()
+                .enumerate()
+                .map(|(m, raw)| {
+                    if self.pending[m] {
+                        Json::Arr(
+                            raw.iter().map(crate::ps::checkpoint::mat_json).collect(),
+                        )
+                    } else {
+                        Json::Arr(Vec::new())
+                    }
+                })
+                .collect(),
+        );
+        state.extra = Json::obj(vec![
+            ("started", Json::Bool(self.started)),
+            ("updates", Json::num(self.updates as f64)),
+            ("loss_acc", Json::num(self.loss_acc)),
+            ("loss_n", Json::num(self.loss_n as f64)),
+            ("last_epoch_t", Json::num(self.last_epoch_t)),
+            (
+                "window_age",
+                match self.window_age {
+                    Some(a) => Json::uint(a),
+                    None => Json::Null,
+                },
+            ),
+            ("queue", queue_json),
+            ("snapshots", snapshots_json),
+        ]);
+        Ok(state_checkpoint(self.ctx, state))
+    }
+
+    fn finish(&mut self) -> Result<RunResult> {
+        let cfg = &self.ctx.cfg;
         Ok(RunResult {
             method: "digest-a".to_string(),
             dataset: cfg.dataset.clone(),
             model: cfg.model.as_str().to_string(),
-            parts: m_parts,
+            parts: cfg.parts,
             sync_interval: cfg.sync_interval,
-            threads,
+            threads: self.threads,
             seed: cfg.seed,
-            points,
-            epochs: breakdowns,
-            final_val_f1: final_val,
-            final_test_f1: final_test,
-            best_val_f1: best_val,
-            total_vtime: vtime,
-            total_wall: t0.elapsed().as_secs_f64(),
-            kvs: ctx.kvs.metrics.snapshot(),
-            delay: ps.delay_stats(),
-            final_params: ps.fetch().0,
+            points: std::mem::take(&mut self.points),
+            epochs: std::mem::take(&mut self.breakdowns),
+            final_val_f1: self.final_val,
+            final_test_f1: self.final_test,
+            best_val_f1: self.best_val,
+            total_vtime: self.vtime,
+            total_wall: self.t0.elapsed().as_secs_f64(),
+            kvs: self.ctx.kvs.metrics.snapshot(),
+            delay: self.ps.delay_stats(),
+            final_params: self.ps.fetch().0,
         })
-        // pool drops here: the job channel closes, executors drain any
-        // still-prefetched (now unneeded) steps and exit; the scope
-        // joins them before run_async returns
-    })
+    }
+}
+
+/// Run asynchronous DIGEST-A to completion (one-shot convenience over
+/// [`AsyncSession`]).
+pub fn run_async(ctx: &TrainContext) -> Result<RunResult> {
+    let mut s = AsyncSession::new(ctx)?;
+    while !s.is_done() {
+        s.step_epoch()?;
+    }
+    s.finish()
 }
 
 #[cfg(test)]
@@ -326,5 +655,33 @@ mod tests {
         assert_eq!(r1.total_vtime.to_bits(), r2.total_vtime.to_bits());
         assert_eq!(r1.delay.updates, r2.delay.updates);
         assert_eq!(r1.delay.max_delay, r2.delay.max_delay);
+    }
+
+    #[test]
+    fn session_windows_advance_one_epoch_at_a_time() {
+        let mut cfg = RunConfig::default();
+        cfg.epochs = 5;
+        cfg.method = Method::DigestAsync;
+        cfg.sync_interval = 2;
+        cfg.eval_every = 2;
+        let ctx = TrainContext::new(cfg).unwrap();
+        let mut s = AsyncSession::new(&ctx).unwrap();
+        let mut reports = Vec::new();
+        while !s.is_done() {
+            let before = s.epochs_done();
+            let rep = s.step_epoch().unwrap();
+            assert_eq!(s.epochs_done(), before + 1);
+            assert_eq!(rep.epoch, before);
+            reports.push(rep);
+        }
+        assert!(s.step_epoch().is_err());
+        let res = s.finish().unwrap();
+        assert_eq!(res.points.len(), 5);
+        // every update was processed exactly once across the suspensions
+        assert_eq!(res.delay.updates, 5 * 2);
+        for (rep, p) in reports.iter().zip(&res.points) {
+            assert_eq!(rep.point.train_loss.to_bits(), p.train_loss.to_bits());
+            assert_eq!(rep.point.vtime.to_bits(), p.vtime.to_bits());
+        }
     }
 }

@@ -210,6 +210,13 @@ impl<'env> ExecPool<'env> {
             .expect("executor threads exited early");
     }
 
+    /// Whether worker `m` has a dispatched-but-uncollected step.  The
+    /// stepwise session uses this at epoch boundaries to drain in-flight
+    /// prefetches into its stash before the per-step pool is dropped.
+    pub fn is_in_flight(&self, m: usize) -> bool {
+        self.in_flight[m]
+    }
+
     /// Block until worker `m`'s prefetched output is available and take
     /// it.  Outputs of *other* workers arriving meanwhile are parked in
     /// their slots.

@@ -5,41 +5,109 @@
 //! * [`worker`] — per-worker step execution (KVS pull/push + AOT step);
 //! * [`engine`] — the parallel execution engine: deterministic
 //!   scoped-thread worker map (sync) and prefetching exec pool (async);
+//! * [`session`] — the public training API: every scheduler is a
+//!   stepwise [`session::TrainSession`] (`step_epoch` / `snapshot` /
+//!   `finish`), resumable bit-exactly from v2 checkpoints;
+//! * [`hooks`] — the observer API + generic [`hooks::Driver`] loop:
+//!   streaming-CSV telemetry, early stopping, periodic checkpointing,
+//!   wall-clock budgets;
 //! * [`sync`] — synchronous DIGEST (Algorithm 1), thread-parallel;
 //! * [`async_`] — asynchronous DIGEST-A (discrete-event, non-blocking,
 //!   with prefetched parallel execution);
 //! * [`telemetry`] — the timeline records every figure is drawn from.
 //!
-//! `run` dispatches on the configured method, including the two baseline
-//! frameworks in [`crate::baselines`].
+//! [`run`] / [`run_with_context`] dispatch on the configured method
+//! (including the two baseline frameworks in [`crate::baselines`]) by
+//! building a session and driving it — with whatever hooks the config
+//! asks for — to completion.
 
 pub mod async_;
 pub mod context;
 pub mod engine;
+pub mod hooks;
+pub mod session;
 pub mod sync;
 pub mod telemetry;
 pub mod worker;
 
 pub use context::TrainContext;
+pub use hooks::{Driver, Hook, HookAction};
+pub use session::{new_session, resume_session, EpochReport, TrainSession};
 pub use telemetry::{EpochBreakdown, LogPoint, RunResult};
 
-use crate::config::{Method, RunConfig};
-use crate::Result;
+use crate::config::RunConfig;
+use crate::ps::checkpoint::Checkpoint;
+use crate::{eyre, Result};
 
-/// Run a full training job per the config; returns the telemetry record.
-pub fn run(cfg: RunConfig) -> Result<RunResult> {
-    let ctx = TrainContext::new(cfg)?;
-    run_with_context(&ctx)
+/// Load `cfg.load_from` (if set), apply a v1 params-only file as a warm
+/// start, and hand back the parsed checkpoint for session construction
+/// via [`session_from_checkpoint`].  The single implementation of the
+/// checkpoint-loading policy — `run`, `run_with_context`, and the CLI
+/// all funnel through it.
+pub fn prepare_resume(ctx: &mut TrainContext) -> Result<Option<Checkpoint>> {
+    let Some(path) = ctx.cfg.load_from.clone() else {
+        return Ok(None);
+    };
+    let ckpt = Checkpoint::load(&path)?;
+    ckpt.validate_against(&ctx.spec)?;
+    if ckpt.state.is_none() {
+        ctx.warm_start = Some(ckpt.params.clone());
+    }
+    Ok(Some(ckpt))
 }
 
-/// Run using an already-built context (the harness reuses contexts).
-pub fn run_with_context(ctx: &TrainContext) -> Result<RunResult> {
-    match ctx.cfg.method {
-        Method::Digest => sync::run_sync(ctx),
-        Method::DigestAsync => async_::run_async(ctx),
-        Method::Llcg => crate::baselines::llcg::run_llcg(ctx),
-        Method::Propagation => crate::baselines::propagation::run_propagation(ctx),
+/// Build the session a prepared context asks for: resume a v2 training
+/// state if one was loaded, else start fresh (a v1 warm start is already
+/// on the context).
+pub fn session_from_checkpoint<'a>(
+    ctx: &'a TrainContext,
+    ckpt: Option<&Checkpoint>,
+) -> Result<Box<dyn TrainSession + 'a>> {
+    match ckpt {
+        Some(c) if c.state.is_some() => resume_session(ctx, c),
+        _ => new_session(ctx),
     }
+}
+
+/// Run a full training job per the config; returns the telemetry record.
+/// `cfg.load_from` resumes a v2 training-state checkpoint bit-exactly,
+/// or warm-starts from a v1 params-only file.
+pub fn run(cfg: RunConfig) -> Result<RunResult> {
+    let mut ctx = TrainContext::new(cfg)?;
+    let ckpt = prepare_resume(&mut ctx)?;
+    let mut session = session_from_checkpoint(&ctx, ckpt.as_ref())?;
+    let mut driver = Driver::from_config(&ctx.cfg)?;
+    driver.run(session.as_mut())
+}
+
+/// Run using an already-built context (the harness reuses contexts):
+/// builds the method's session — resuming `cfg.load_from` if set — and
+/// drives it with the hooks the config asks for.  A plain config (no
+/// hook knobs) reduces to the classic one-shot loop and produces
+/// bit-identical results.
+///
+/// The shared-borrow signature cannot apply a v1 warm start (that
+/// mutates the context); callers with a v1 `load_from` must set
+/// `TrainContext::warm_start` first or go through [`run`].
+pub fn run_with_context(ctx: &TrainContext) -> Result<RunResult> {
+    let ckpt = match &ctx.cfg.load_from {
+        Some(path) => {
+            let c = Checkpoint::load(path)?;
+            c.validate_against(&ctx.spec)?;
+            if c.state.is_none() && ctx.warm_start.is_none() {
+                return Err(eyre!(
+                    "load_from={path:?} is a v1 params-only checkpoint; go through \
+                     coordinator::run (or set TrainContext::warm_start) to warm-start \
+                     from it"
+                ));
+            }
+            Some(c)
+        }
+        None => None,
+    };
+    let mut session = session_from_checkpoint(ctx, ckpt.as_ref())?;
+    let mut driver = Driver::from_config(&ctx.cfg)?;
+    driver.run(session.as_mut())
 }
 
 #[cfg(test)]
@@ -58,6 +126,30 @@ mod tests {
             assert_eq!(res.method, method.as_str());
             assert!(res.total_vtime > 0.0, "{method:?}");
             assert!(res.points.iter().all(|p| p.train_loss.is_finite()));
+        }
+    }
+
+    #[test]
+    fn every_method_steps_as_a_session() {
+        for method in Method::all() {
+            let mut cfg = RunConfig::default();
+            cfg.epochs = 3;
+            cfg.eval_every = 2;
+            cfg.method = method;
+            let ctx = TrainContext::new(cfg).unwrap();
+            let mut s = new_session(&ctx).unwrap();
+            assert_eq!(s.epochs_done(), 0);
+            assert_eq!(s.target_epochs(), 3);
+            let rep = s.step_epoch().unwrap();
+            assert_eq!(rep.epoch, 0);
+            assert!(rep.point.train_loss.is_finite(), "{method:?}");
+            assert!(!s.is_done());
+            while !s.is_done() {
+                s.step_epoch().unwrap();
+            }
+            let res = s.finish().unwrap();
+            assert_eq!(res.method, method.as_str());
+            assert_eq!(res.points.len(), 3);
         }
     }
 }

@@ -1,0 +1,188 @@
+//! Stepwise training sessions — the coordinator's public API.
+//!
+//! A [`TrainSession`] is a driver-owned state machine: `step_epoch()`
+//! advances training by exactly one (epoch-equivalent) round and returns
+//! an [`EpochReport`], `is_done()` says whether the configured epoch
+//! target is reached, `snapshot()` captures the full training state as a
+//! v2 [`Checkpoint`] (resumable bit-exactly via [`resume_session`]), and
+//! `finish()` folds the accumulated telemetry into the classic
+//! [`RunResult`].  All four methods implement it — synchronous DIGEST,
+//! DIGEST-A, and both baselines — so `run_with_context` is nothing but a
+//! thin driver loop (see [`super::hooks::Driver`]) and callers can
+//! observe, checkpoint, or stop a job *between* epochs instead of
+//! treating training as a run-to-completion black box.
+//!
+//! Invariants the implementations guarantee:
+//!
+//! * stepping a session epoch-by-epoch produces a `RunResult`
+//!   bit-identical to driving it to completion in one call (and to the
+//!   pre-session one-shot loops), at any thread count;
+//! * `snapshot()` → [`resume_session`] on a fresh context continues the
+//!   run bit-exactly: parameters, optimizer moments, worker RNG
+//!   streams/stale caches, KVS contents *and* byte counters all carry
+//!   over, so a save/resume pair reproduces the uninterrupted timeline.
+
+use crate::config::Method;
+use crate::ps::checkpoint::{Checkpoint, TrainState};
+use crate::tensor::Matrix;
+use crate::{eyre, Result};
+
+use super::context::TrainContext;
+use super::telemetry::{EpochBreakdown, LogPoint, RunResult};
+
+/// What one `step_epoch` call did — handed to hooks and returned to
+/// stepwise callers (read access to loss/F1/staleness/traffic without
+/// waiting for the final `RunResult`).
+#[derive(Debug, Clone)]
+pub struct EpochReport {
+    /// Epoch index just completed (0-based, global).
+    pub epoch: usize,
+    /// Configured epoch target (`cfg.epochs`).
+    pub target_epochs: usize,
+    /// The timeline point this epoch appended.
+    pub point: LogPoint,
+    /// Virtual-time decomposition (includes `max_stale_age`).
+    pub breakdown: EpochBreakdown,
+    /// Whether global val/test evaluation ran this epoch.
+    pub evaluated: bool,
+    /// Whether any representation synchronization (KVS push/pull)
+    /// happened this epoch.
+    pub synced: bool,
+    /// Best validation F1 observed so far in the run.
+    pub best_val_f1: f64,
+}
+
+/// A resumable, observable training run; one value per job.
+///
+/// Call order: any number of `step_epoch` (each an error once
+/// `is_done`), `snapshot` at any epoch boundary, then `finish` exactly
+/// once (early `finish` after a hook-initiated stop is fine — the
+/// result simply covers the epochs that ran).
+pub trait TrainSession {
+    /// The immutable context this session trains over.
+    fn ctx(&self) -> &TrainContext;
+    /// Epochs completed so far (global; resumed sessions start at the
+    /// checkpoint's epoch, not 0).
+    fn epochs_done(&self) -> usize;
+    /// Configured epoch target.
+    fn target_epochs(&self) -> usize {
+        self.ctx().cfg.epochs
+    }
+    fn is_done(&self) -> bool {
+        self.epochs_done() >= self.target_epochs()
+    }
+    /// Advance exactly one epoch (sync/baselines) or one M-update window
+    /// (async); errors if the session is already done.
+    fn step_epoch(&mut self) -> Result<EpochReport>;
+    /// Current global parameters from the PS.
+    fn current_params(&self) -> Vec<Matrix>;
+    /// Best validation F1 observed so far.
+    fn best_val_f1(&self) -> f64;
+    /// Capture the full training state as a v2 checkpoint.
+    fn snapshot(&self) -> Result<Checkpoint>;
+    /// Build the final `RunResult` from everything run so far.  Consumes
+    /// the accumulated telemetry; call once.
+    fn finish(&mut self) -> Result<RunResult>;
+}
+
+/// Build a fresh session for the configured method.
+pub fn new_session(ctx: &TrainContext) -> Result<Box<dyn TrainSession + '_>> {
+    Ok(match ctx.cfg.method {
+        Method::Digest => Box::new(super::sync::SyncSession::new(ctx)?),
+        Method::DigestAsync => Box::new(super::async_::AsyncSession::new(ctx)?),
+        Method::Llcg => Box::new(crate::baselines::llcg::LlcgSession::new(ctx)?),
+        Method::Propagation => {
+            Box::new(crate::baselines::propagation::PropagationSession::new(ctx)?)
+        }
+    })
+}
+
+/// Resume a session from a v2 checkpoint on a *fresh* context built from
+/// the same config.  Restores the shared KVS (contents + counters) and
+/// hands the scheduler its saved state; stepping then continues
+/// bit-exactly where the checkpoint was taken.
+pub fn resume_session<'a>(
+    ctx: &'a TrainContext,
+    ckpt: &Checkpoint,
+) -> Result<Box<dyn TrainSession + 'a>> {
+    let state = ckpt.state.as_ref().ok_or_else(|| {
+        eyre!(
+            "checkpoint has no training state (v1 params-only file); \
+             load it as a warm start instead"
+        )
+    })?;
+    if ckpt.artifact != ctx.artifact {
+        return Err(eyre!(
+            "checkpoint is for artifact {:?}, context expects {:?}",
+            ckpt.artifact,
+            ctx.artifact
+        ));
+    }
+    if state.method != ctx.cfg.method.as_str() {
+        return Err(eyre!(
+            "checkpoint was saved by method {:?}, config asks for {:?}",
+            state.method,
+            ctx.cfg.method.as_str()
+        ));
+    }
+    if state.epoch >= ctx.cfg.epochs {
+        return Err(eyre!(
+            "checkpoint already covers {} epochs but the config asks for only {}; \
+             raise epochs above {} to continue",
+            state.epoch,
+            ctx.cfg.epochs,
+            state.epoch
+        ));
+    }
+    // the KVS lives on the context and is shared by every method
+    ctx.kvs.clear();
+    ctx.kvs.import_entries(&state.kvs_entries);
+    ctx.kvs.import_metrics(state.kvs_metrics);
+    Ok(match ctx.cfg.method {
+        Method::Digest => Box::new(super::sync::SyncSession::resume(ctx, state)?),
+        Method::DigestAsync => Box::new(super::async_::AsyncSession::resume(ctx, state)?),
+        Method::Llcg => Box::new(crate::baselines::llcg::LlcgSession::resume(ctx, state)?),
+        Method::Propagation => Box::new(
+            crate::baselines::propagation::PropagationSession::resume(ctx, state)?,
+        ),
+    })
+}
+
+/// Shared scaffolding for building a session's [`TrainState`]: the
+/// method-independent core (KVS dump + counters slot in here; the caller
+/// fills PS/worker/extra fields).
+pub(crate) fn base_state(ctx: &TrainContext, method: &'static str) -> TrainState {
+    TrainState {
+        method: method.to_string(),
+        epoch: 0,
+        vtime: 0.0,
+        ps_bytes: 0,
+        best_val_f1: 0.0,
+        final_val_f1: f64::NAN,
+        final_test_f1: f64::NAN,
+        ps: crate::ps::checkpoint::PsState {
+            params: Vec::new(),
+            version: 0,
+            opt_t: 0,
+            opt_m: Vec::new(),
+            opt_v: Vec::new(),
+            delays: crate::ps::DelayStats::default(),
+        },
+        workers: Vec::new(),
+        kvs_entries: ctx.kvs.export_entries(),
+        kvs_metrics: ctx.kvs.metrics.snapshot(),
+        extra: crate::util::json::Json::Null,
+    }
+}
+
+/// Wrap a [`TrainState`] into a full checkpoint (params duplicated at
+/// the top level so v2 files still work as plain model exports).
+pub(crate) fn state_checkpoint(ctx: &TrainContext, state: TrainState) -> Checkpoint {
+    Checkpoint {
+        artifact: ctx.artifact.clone(),
+        epoch: state.epoch,
+        best_val_f1: state.best_val_f1,
+        params: state.ps.params.clone(),
+        state: Some(state),
+    }
+}

@@ -11,7 +11,7 @@
 //! 5. it submits gradients; the PS barrier-aggregates and applies the
 //!    optimizer (line 13).
 //!
-//! Workers now execute **concurrently on real threads** (see
+//! Workers execute **concurrently on real threads** (see
 //! [`super::engine`]): each epoch is two parallel phases over the
 //! worker vector —
 //!
@@ -31,15 +31,25 @@
 //! advances by the *max* worker time plus aggregation (the straggler
 //! stretches every synchronous epoch — Fig. 7's effect); `total_wall`
 //! in the result is now a real measurement of the parallel engine.
+//!
+//! The scheduler is packaged as a [`SyncSession`]
+//! ([`super::session::TrainSession`]): one `step_epoch` call runs
+//! exactly the loop body above, so stepwise driving, checkpointing at
+//! any epoch boundary, and one-shot [`run_sync`] all share this code
+//! and produce bit-identical results.
 
 use std::time::Instant;
 
+use crate::ps::checkpoint::{Checkpoint, TrainState};
 use crate::ps::{optimizer::Optimizer, ParamServer};
 use crate::runtime::TrainOutput;
-use crate::Result;
+use crate::tensor::Matrix;
+use crate::util::json::Json;
+use crate::{eyre, Result};
 
 use super::context::TrainContext;
 use super::engine::{for_each_mut, resolve_threads};
+use super::session::{base_state, state_checkpoint, EpochReport, TrainSession};
 use super::telemetry::{EpochBreakdown, LogPoint, RunResult};
 use super::worker::{
     epoch_layer_times, exec_train, pull_stale, push_reps, WorkerState,
@@ -55,37 +65,99 @@ struct EpochStep {
     stale_age: Option<u64>,
 }
 
-/// Run synchronous DIGEST; returns the full telemetry record.
-pub fn run_sync(ctx: &TrainContext) -> Result<RunResult> {
-    let cfg = &ctx.cfg;
-    let m_parts = cfg.parts;
-    let threads = resolve_threads(cfg.threads, m_parts);
-    let ps = ParamServer::new(
-        ctx.initial_params(),
-        Optimizer::new(cfg.optimizer, cfg.lr).with_weight_decay(cfg.weight_decay),
-        m_parts,
-    );
-    let mut workers: Vec<WorkerState> =
-        (0..m_parts).map(|m| WorkerState::new(ctx, m)).collect();
+/// Synchronous DIGEST as a stepwise state machine.
+pub struct SyncSession<'a> {
+    ctx: &'a TrainContext,
+    threads: usize,
+    ps: ParamServer,
+    workers: Vec<WorkerState>,
+    t0: Instant,
+    /// Next epoch to run == epochs completed.
+    r: usize,
+    vtime: f64,
+    ps_bytes: u64,
+    points: Vec<LogPoint>,
+    breakdowns: Vec<EpochBreakdown>,
+    best_val: f64,
+    final_val: f64,
+    final_test: f64,
+}
 
-    let t0 = Instant::now();
-    let mut vtime = 0.0f64;
-    let mut ps_bytes = 0u64;
-    let mut points: Vec<LogPoint> = Vec::with_capacity(cfg.epochs);
-    let mut breakdowns: Vec<EpochBreakdown> = Vec::with_capacity(cfg.epochs);
-    let mut best_val = 0.0f64;
-    let mut final_val = f64::NAN;
-    let mut final_test = f64::NAN;
+impl<'a> SyncSession<'a> {
+    pub fn new(ctx: &'a TrainContext) -> Result<Self> {
+        let cfg = &ctx.cfg;
+        let m_parts = cfg.parts;
+        Ok(SyncSession {
+            ctx,
+            threads: resolve_threads(cfg.threads, m_parts),
+            ps: ParamServer::new(
+                ctx.initial_params(),
+                Optimizer::new(cfg.optimizer, cfg.lr).with_weight_decay(cfg.weight_decay),
+                m_parts,
+            ),
+            workers: (0..m_parts).map(|m| WorkerState::new(ctx, m)).collect(),
+            t0: Instant::now(),
+            r: 0,
+            vtime: 0.0,
+            ps_bytes: 0,
+            points: Vec::with_capacity(cfg.epochs),
+            breakdowns: Vec::with_capacity(cfg.epochs),
+            best_val: 0.0,
+            final_val: f64::NAN,
+            final_test: f64::NAN,
+        })
+    }
 
-    for r in 0..cfg.epochs {
+    /// Rebuild a session from a v2 checkpoint state (see
+    /// [`super::session::resume_session`], which also restores the KVS).
+    pub fn resume(ctx: &'a TrainContext, state: &TrainState) -> Result<Self> {
+        let mut s = SyncSession::new(ctx)?;
+        if state.workers.len() != s.workers.len() {
+            return Err(eyre!(
+                "checkpoint has {} workers, config wants {}",
+                state.workers.len(),
+                s.workers.len()
+            ));
+        }
+        s.ps.import_state(&state.ps);
+        for (w, snap) in s.workers.iter_mut().zip(&state.workers) {
+            w.apply_snap(ctx, snap)?;
+        }
+        s.r = state.epoch;
+        s.vtime = state.vtime;
+        s.ps_bytes = state.ps_bytes;
+        s.best_val = state.best_val_f1;
+        s.final_val = state.final_val_f1;
+        s.final_test = state.final_test_f1;
+        Ok(s)
+    }
+}
+
+impl TrainSession for SyncSession<'_> {
+    fn ctx(&self) -> &TrainContext {
+        self.ctx
+    }
+
+    fn epochs_done(&self) -> usize {
+        self.r
+    }
+
+    fn step_epoch(&mut self) -> Result<EpochReport> {
+        if self.is_done() {
+            return Err(eyre!("session already ran {} epochs", self.r));
+        }
+        let ctx = self.ctx;
+        let cfg = &ctx.cfg;
+        let m_parts = cfg.parts;
+        let r = self.r;
         let sync_now = r % cfg.sync_interval == 0;
-        let (params, _v) = ps.fetch();
+        let (params, _v) = self.ps.fetch();
         // params are packed ONCE per epoch and shared by all workers
         let param_lits = crate::runtime::pack_params(&ctx.spec, &params)?;
-        let (param_lits, ps_ref) = (&param_lits, &ps);
+        let (param_lits, ps_ref) = (&param_lits, &self.ps);
 
         // ---- phase A: pull + train + slot-submit, concurrently ----
-        let steps: Vec<EpochStep> = for_each_mut(threads, &mut workers, |w| {
+        let steps: Vec<EpochStep> = for_each_mut(self.threads, &mut self.workers, |w| {
             let pull_io = if sync_now {
                 pull_stale(ctx, w, r as u64)
             } else {
@@ -109,7 +181,7 @@ pub fn run_sync(ctx: &TrainContext) -> Result<RunResult> {
         // ---- phase B: publish fresh reps after the barrier ----
         let push_ios: Vec<f64> = if sync_now {
             let steps_ref = &steps;
-            for_each_mut(threads, &mut workers, |w| {
+            for_each_mut(self.threads, &mut self.workers, |w| {
                 Ok(push_reps(ctx, w, &steps_ref[w.id].out.reps, r as u64))
             })?
         } else {
@@ -123,7 +195,7 @@ pub fn run_sync(ctx: &TrainContext) -> Result<RunResult> {
         for (m, step) in steps.iter().enumerate() {
             // parameter fetch + gradient submit
             let ps_io = 2.0 * ctx.cost.param_time(ctx.param_bytes());
-            ps_bytes += 2 * ctx.param_bytes();
+            self.ps_bytes += 2 * ctx.param_bytes();
             let (comp_l, io_l) =
                 epoch_layer_times(ctx, step.compute_t, step.pull_io, push_ios[m]);
             let t = ctx
@@ -144,52 +216,99 @@ pub fn run_sync(ctx: &TrainContext) -> Result<RunResult> {
         // aggregation happens once all submissions land
         let agg_t = ctx.cost.param_time(ctx.param_bytes());
         let epoch_t = max_worker_t + agg_t;
-        vtime += epoch_t;
+        self.vtime += epoch_t;
         bd.total = epoch_t;
-        breakdowns.push(bd);
+        self.breakdowns.push(bd);
 
         let evaluate = r % cfg.eval_every == 0 || r + 1 == cfg.epochs;
         let (val, test) = if evaluate {
-            let (p, _) = ps.fetch();
+            let (p, _) = self.ps.fetch();
             let (v, t) = ctx.global_eval(&p)?;
-            best_val = best_val.max(v);
-            final_val = v;
-            final_test = t;
+            self.best_val = self.best_val.max(v);
+            self.final_val = v;
+            self.final_test = t;
             (v, t)
         } else {
             (f64::NAN, f64::NAN)
         };
-        points.push(LogPoint {
+        let point = LogPoint {
             epoch: r,
-            vtime,
-            wall: t0.elapsed().as_secs_f64(),
+            vtime: self.vtime,
+            wall: self.t0.elapsed().as_secs_f64(),
             train_loss: loss_sum / m_parts as f64,
             val_f1: val,
             test_f1: test,
             kvs_bytes: ctx.kvs.metrics.snapshot().total_bytes(),
-            ps_bytes,
-        });
+            ps_bytes: self.ps_bytes,
+        };
+        self.points.push(point.clone());
+        self.r += 1;
+        Ok(EpochReport {
+            epoch: r,
+            target_epochs: cfg.epochs,
+            point,
+            breakdown: bd,
+            evaluated: evaluate,
+            synced: sync_now,
+            best_val_f1: self.best_val,
+        })
     }
 
-    Ok(RunResult {
-        method: cfg.method.as_str().to_string(),
-        dataset: cfg.dataset.clone(),
-        model: ctx.cfg.model.as_str().to_string(),
-        parts: m_parts,
-        sync_interval: cfg.sync_interval,
-        threads,
-        seed: cfg.seed,
-        points,
-        epochs: breakdowns,
-        final_val_f1: final_val,
-        final_test_f1: final_test,
-        best_val_f1: best_val,
-        total_vtime: vtime,
-        total_wall: t0.elapsed().as_secs_f64(),
-        kvs: ctx.kvs.metrics.snapshot(),
-        delay: ps.delay_stats(),
-        final_params: ps.fetch().0,
-    })
+    fn current_params(&self) -> Vec<Matrix> {
+        self.ps.fetch().0
+    }
+
+    fn best_val_f1(&self) -> f64 {
+        self.best_val
+    }
+
+    fn snapshot(&self) -> Result<Checkpoint> {
+        let mut state = base_state(self.ctx, "digest");
+        state.epoch = self.r;
+        state.vtime = self.vtime;
+        state.ps_bytes = self.ps_bytes;
+        state.best_val_f1 = self.best_val;
+        state.final_val_f1 = self.final_val;
+        state.final_test_f1 = self.final_test;
+        state.ps = self.ps.export_state();
+        state.workers = self.workers.iter().map(|w| w.export_snap()).collect();
+        state.extra = Json::Null;
+        Ok(state_checkpoint(self.ctx, state))
+    }
+
+    fn finish(&mut self) -> Result<RunResult> {
+        let cfg = &self.ctx.cfg;
+        Ok(RunResult {
+            method: cfg.method.as_str().to_string(),
+            dataset: cfg.dataset.clone(),
+            model: cfg.model.as_str().to_string(),
+            parts: cfg.parts,
+            sync_interval: cfg.sync_interval,
+            threads: self.threads,
+            seed: cfg.seed,
+            points: std::mem::take(&mut self.points),
+            epochs: std::mem::take(&mut self.breakdowns),
+            final_val_f1: self.final_val,
+            final_test_f1: self.final_test,
+            best_val_f1: self.best_val,
+            total_vtime: self.vtime,
+            total_wall: self.t0.elapsed().as_secs_f64(),
+            kvs: self.ctx.kvs.metrics.snapshot(),
+            delay: self.ps.delay_stats(),
+            final_params: self.ps.fetch().0,
+        })
+    }
+}
+
+/// Run synchronous DIGEST to completion; returns the full telemetry
+/// record.  (One-shot convenience over [`SyncSession`] — benches and
+/// tests that don't need stepwise control call this.)
+pub fn run_sync(ctx: &TrainContext) -> Result<RunResult> {
+    let mut s = SyncSession::new(ctx)?;
+    while !s.is_done() {
+        s.step_epoch()?;
+    }
+    s.finish()
 }
 
 #[cfg(test)]
@@ -298,5 +417,29 @@ mod tests {
         assert_eq!(res.epochs[10].max_stale_age, Some(5));
         // non-sync epochs record no fresh pull
         assert_eq!(res.epochs[1].max_stale_age, None);
+    }
+
+    #[test]
+    fn session_reports_mirror_the_timeline() {
+        let mut cfg = RunConfig::default();
+        cfg.epochs = 6;
+        cfg.sync_interval = 3;
+        cfg.eval_every = 2;
+        let ctx = TrainContext::new(cfg).unwrap();
+        let mut s = SyncSession::new(&ctx).unwrap();
+        let mut reports = Vec::new();
+        while !s.is_done() {
+            reports.push(s.step_epoch().unwrap());
+        }
+        assert!(s.step_epoch().is_err(), "stepping past done must error");
+        let res = s.finish().unwrap();
+        assert_eq!(reports.len(), res.points.len());
+        for (rep, p) in reports.iter().zip(&res.points) {
+            assert_eq!(rep.epoch, p.epoch);
+            assert_eq!(rep.point.train_loss.to_bits(), p.train_loss.to_bits());
+            assert_eq!(rep.synced, rep.epoch % 3 == 0);
+            assert_eq!(rep.evaluated, rep.epoch % 2 == 0 || rep.epoch == 5);
+        }
+        assert_eq!(reports.last().unwrap().best_val_f1, res.best_val_f1);
     }
 }

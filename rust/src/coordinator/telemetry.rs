@@ -29,6 +29,28 @@ pub struct LogPoint {
     pub ps_bytes: u64,
 }
 
+impl LogPoint {
+    /// CSV header matching [`LogPoint::csv_row`] (used by both the
+    /// post-hoc `RunResult::to_csv` and the streaming CSV hook).
+    pub const CSV_HEADER: &str =
+        "epoch,vtime,wall,train_loss,val_f1,test_f1,kvs_bytes,ps_bytes\n";
+
+    /// One newline-terminated CSV row for this point.
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{:.6},{:.3},{:.6},{:.4},{:.4},{},{}\n",
+            self.epoch,
+            self.vtime,
+            self.wall,
+            self.train_loss,
+            self.val_f1,
+            self.test_f1,
+            self.kvs_bytes,
+            self.ps_bytes
+        )
+    }
+}
+
 /// Per-epoch virtual time decomposition (Fig. 4's bars).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct EpochBreakdown {
@@ -90,15 +112,9 @@ impl RunResult {
 
     /// CSV of the timeline (header + one row per point).
     pub fn to_csv(&self) -> String {
-        let mut s = String::from(
-            "epoch,vtime,wall,train_loss,val_f1,test_f1,kvs_bytes,ps_bytes\n",
-        );
+        let mut s = String::from(LogPoint::CSV_HEADER);
         for p in &self.points {
-            s.push_str(&format!(
-                "{},{:.6},{:.3},{:.6},{:.4},{:.4},{},{}\n",
-                p.epoch, p.vtime, p.wall, p.train_loss, p.val_f1, p.test_f1,
-                p.kvs_bytes, p.ps_bytes
-            ));
+            s.push_str(&p.csv_row());
         }
         s
     }

@@ -15,13 +15,14 @@
 
 use std::sync::Arc;
 
+use crate::ps::checkpoint::WorkerSnap;
 use crate::runtime::{
     assemble_inputs, pack_stale, pack_static_inputs, parse_eval_output,
     parse_train_output, EvalOutput, SharedLiteral, StaticInputs, TrainOutput,
 };
 use crate::tensor::Matrix;
 use crate::util::{domain_seed, Rng};
-use crate::Result;
+use crate::{eyre, Result};
 
 use super::context::TrainContext;
 
@@ -74,6 +75,43 @@ impl WorkerState {
             last_pull_age: None,
         }
     }
+
+    /// Export the mutable cross-epoch state (training-state checkpoint).
+    pub fn export_snap(&self) -> WorkerSnap {
+        WorkerSnap {
+            local_epoch: self.local_epoch,
+            fetched_version: self.fetched_version,
+            rng: self.rng.state(),
+            last_pull_age: self.last_pull_age,
+            stale: self.stale.clone(),
+        }
+    }
+
+    /// Restore an exported snapshot onto a freshly built worker: the
+    /// stale cache is re-packed so the next train step sees exactly the
+    /// representations the exporting run had.
+    pub fn apply_snap(&mut self, ctx: &TrainContext, snap: &WorkerSnap) -> Result<()> {
+        if snap.stale.len() != self.stale.len() {
+            return Err(eyre!(
+                "worker {} snapshot has {} stale layers, context wants {}",
+                self.id,
+                snap.stale.len(),
+                self.stale.len()
+            ));
+        }
+        for (have, want) in snap.stale.iter().zip(&self.stale) {
+            if have.rows != want.rows || have.cols != want.cols {
+                return Err(eyre!("worker {} stale cache shape mismatch", self.id));
+            }
+        }
+        self.local_epoch = snap.local_epoch;
+        self.fetched_version = snap.fetched_version;
+        self.rng = Rng::from_state(snap.rng);
+        self.last_pull_age = snap.last_pull_age;
+        self.stale = snap.stale.clone();
+        self.stale_lits = Arc::new(pack_stale(&ctx.spec, &self.stale)?);
+        Ok(())
+    }
 }
 
 /// Pull this worker's halo rows for every hidden layer; returns the
@@ -101,7 +139,9 @@ pub fn pull_stale(ctx: &TrainContext, w: &mut WorkerState, now: u64) -> f64 {
     io
 }
 
-/// Push fresh in-subgraph reps to the KVS; returns virtual I/O seconds.
+/// Push fresh in-subgraph reps to the KVS; returns virtual I/O seconds
+/// (exactly [`push_io_cost`] — the two must agree for async
+/// checkpoint/resume to stay bit-identical).
 pub fn push_reps(
     ctx: &TrainContext,
     w: &WorkerState,
@@ -109,9 +149,22 @@ pub fn push_reps(
     version: u64,
 ) -> f64 {
     let plan = &ctx.plans[w.id];
-    let mut io = 0.0;
+    debug_assert_eq!(reps.len(), ctx.n_hidden(), "one rep per hidden layer");
     for (l, r) in reps.iter().enumerate() {
         ctx.kvs.push(l, &plan.own, r, version);
+    }
+    push_io_cost(ctx, w.id)
+}
+
+/// Virtual I/O cost of a worker's full push, without pushing: one
+/// per-layer comm charge, summed in layer order.  [`push_reps`] returns
+/// this value, and the async session uses it directly to re-derive a
+/// lost `push_io` when resuming a worker whose push already landed
+/// before the checkpoint.
+pub fn push_io_cost(ctx: &TrainContext, id: usize) -> f64 {
+    let plan = &ctx.plans[id];
+    let mut io = 0.0;
+    for _ in 0..ctx.n_hidden() {
         io += ctx
             .cost
             .comm_time((plan.own.len() * ctx.spec.d_h * 4) as u64);

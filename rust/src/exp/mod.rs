@@ -19,6 +19,15 @@
 //! Every run's timeline CSV plus a summary markdown/CSV per experiment
 //! land in `--out-dir` (default `results/`).  Runs are cached within one
 //! invocation so `all` shares work between table1/fig3/fig4/fig8.
+//!
+//! The harness drives **stepwise sessions**
+//! ([`crate::coordinator::session::TrainSession`]), not one-shot runs:
+//! each campaign run attaches a streaming-CSV hook so its curve file
+//! fills epoch by epoch (tail it to watch a long experiment), and any
+//! session knobs in the config — checkpointing, early stopping,
+//! wall-clock budgets — apply to harness runs exactly as they do to
+//! `digest train`.  Custom runs via [`Campaign::run_custom`] go through
+//! the same driver.
 
 pub mod ablate;
 pub mod complexity;
@@ -33,7 +42,8 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use crate::config::{Method, RunConfig};
-use crate::coordinator::{run_with_context, RunResult, TrainContext};
+use crate::coordinator::hooks::CsvStreamHook;
+use crate::coordinator::{new_session, run_with_context, Driver, RunResult, TrainContext};
 use crate::gnn::ModelKind;
 use crate::{eyre, Result};
 
@@ -134,17 +144,24 @@ impl Campaign {
         eprintln!("[exp] running {key} ...");
         let cfg = self.cfg(dataset, model, method);
         let ctx = TrainContext::new(cfg)?;
-        let res = run_with_context(&ctx)?;
-        // timeline CSV for every run
-        self.write(
-            &format!("curve_{}_{}_{}.csv", dataset, model.as_str(), method.as_str()),
-            &res.to_csv(),
-        )?;
+        // drive a stepwise session with a streaming hook: the curve CSV
+        // fills while the run progresses instead of landing post-hoc
+        let curve = self.out_dir.join(format!(
+            "curve_{}_{}_{}.csv",
+            dataset,
+            model.as_str(),
+            method.as_str()
+        ));
+        let mut session = new_session(&ctx)?;
+        let mut driver = Driver::from_config(&ctx.cfg)?;
+        driver.add_hook(Box::new(CsvStreamHook::create(&curve)?));
+        let res = driver.run(session.as_mut())?;
         self.cache.insert(key, res.clone());
         Ok(res)
     }
 
-    /// Run a custom config (not cached).
+    /// Run a custom config (not cached); same session driver as the
+    /// standard runs.
     pub fn run_custom(&self, cfg: RunConfig) -> Result<RunResult> {
         let ctx = TrainContext::new(cfg)?;
         run_with_context(&ctx)

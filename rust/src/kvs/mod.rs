@@ -250,6 +250,53 @@ impl RepStore {
             lock_unpoisoned(s).clear();
         }
     }
+
+    /// Deterministic dump of every stored entry as
+    /// `(layer, node, version, row)` tuples, sorted by (layer, node) —
+    /// the checkpoint serialization of the store.
+    pub fn export_entries(&self) -> Vec<(u16, u32, u64, Vec<f32>)> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            for (k, e) in lock_unpoisoned(s).iter() {
+                out.push((k.layer, k.node, e.version, e.data.clone()));
+            }
+        }
+        out.sort_by_key(|e| (e.0, e.1));
+        out
+    }
+
+    /// Restore dumped entries verbatim.  Traffic metrics are NOT
+    /// touched: a restore is not I/O — use [`RepStore::import_metrics`]
+    /// to carry the counters across a checkpoint boundary.
+    pub fn import_entries(&self, entries: &[(u16, u32, u64, Vec<f32>)]) {
+        for (layer, node, version, data) in entries {
+            let key = Key {
+                layer: *layer,
+                node: *node,
+            };
+            let idx = self.shard_index(&key);
+            lock_unpoisoned(&self.shards[idx]).insert(
+                key,
+                Entry {
+                    version: *version,
+                    data: data.clone(),
+                },
+            );
+        }
+    }
+
+    /// Overwrite the traffic counters (checkpoint restore), so resumed
+    /// runs report cumulative byte counts identical to uninterrupted
+    /// ones.
+    pub fn import_metrics(&self, snap: KvsSnapshot) {
+        self.metrics.pulls.store(snap.pulls, Ordering::Relaxed);
+        self.metrics.pushes.store(snap.pushes, Ordering::Relaxed);
+        self.metrics.pulled_rows.store(snap.pulled_rows, Ordering::Relaxed);
+        self.metrics.pushed_rows.store(snap.pushed_rows, Ordering::Relaxed);
+        self.metrics.pulled_bytes.store(snap.pulled_bytes, Ordering::Relaxed);
+        self.metrics.pushed_bytes.store(snap.pushed_bytes, Ordering::Relaxed);
+        self.metrics.misses.store(snap.misses, Ordering::Relaxed);
+    }
 }
 
 #[cfg(test)]
@@ -403,6 +450,29 @@ mod tests {
         assert_eq!(info.found, 64);
         assert_eq!(info.oldest_version, 9);
         assert_eq!(info.newest_version, 9);
+    }
+
+    #[test]
+    fn export_import_round_trips_without_metric_drift() {
+        let a = RepStore::new(4);
+        a.push(0, &[1, 2, 9], &mat(3, 4, 1.0), 3);
+        a.push(1, &[2], &mat(1, 4, 50.0), 5);
+        a.pull(0, &[1, 2, 9, 17], 4, 4);
+        let entries = a.export_entries();
+        assert_eq!(entries.len(), 4);
+        // sorted by (layer, node)
+        let keys: Vec<(u16, u32)> = entries.iter().map(|e| (e.0, e.1)).collect();
+        assert_eq!(keys, vec![(0, 1), (0, 2), (0, 9), (1, 2)]);
+
+        let b = RepStore::new(7); // different shard count: must not matter
+        b.import_entries(&entries);
+        b.import_metrics(a.metrics.snapshot());
+        assert_eq!(b.export_entries(), entries);
+        assert_eq!(b.metrics.snapshot(), a.metrics.snapshot());
+        // restored rows pull back exactly, versions intact
+        let (out, info) = b.pull(1, &[2], 4, 1);
+        assert_eq!(out.row(0), &[50.0, 51.0, 52.0, 53.0]);
+        assert_eq!(info.oldest_version, 5);
     }
 
     #[test]

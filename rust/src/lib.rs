@@ -17,6 +17,25 @@
 //! artifacts via the PJRT CPU client (`xla` crate) and executes them from
 //! the coordinator hot path.
 //!
+//! ## Training sessions
+//!
+//! Training is **stepwise, observable, and resumable** — not a
+//! run-to-completion black box.  Every scheduler implements
+//! [`coordinator::session::TrainSession`]: `step_epoch()` advances one
+//! epoch and returns an [`coordinator::session::EpochReport`] (loss,
+//! F1, staleness ages, KVS/PS traffic), `snapshot()` captures the full
+//! training state — parameters *and* optimizer moments, worker RNG
+//! streams and stale caches, KVS contents and counters — as a v2
+//! [`ps::checkpoint::Checkpoint`], and
+//! [`coordinator::session::resume_session`] continues it bit-exactly
+//! after a restart.  [`coordinator::hooks::Hook`]s observe a run from
+//! the outside (`on_epoch_end` / `on_eval` / `on_rep_sync` /
+//! `on_checkpoint`) and can stop it early; built-ins cover streaming-CSV
+//! telemetry, early stopping, periodic checkpointing, and wall-clock
+//! budgets, all wired from `RunConfig` knobs by
+//! [`coordinator::hooks::Driver::from_config`].  Stepwise driving is
+//! bit-identical to one-shot `coordinator::run`.
+//!
 //! ## Concurrency model
 //!
 //! Workers are **real threads**, not just virtual-clock fictions:
@@ -26,7 +45,9 @@
 //!   [`coordinator::engine::for_each_mut`]; the asynchronous scheduler
 //!   prefetches every scheduled step onto a
 //!   [`coordinator::engine::ExecPool`] while its event loop applies
-//!   PS/KVS mutations in strict virtual-time order;
+//!   PS/KVS mutations in strict virtual-time order (at epoch boundaries
+//!   the session drains in-flight prefetches into a stash — inputs are
+//!   frozen at dispatch, so suspension never perturbs numerics);
 //! * thread count comes from `RunConfig::threads` (0 = auto,
 //!   min(parts, cores)); results are **bit-identical at any thread
 //!   count** because gradients reduce in fixed slot order on the
@@ -53,14 +74,14 @@
 //! | [`graph`] | CSR graphs, synthetic dataset generators, splits |
 //! | [`partition`] | METIS-style multilevel partitioner + baselines |
 //! | [`halo`] | subgraph plans: halo extraction, padded `P_in`/`P_out` |
-//! | [`kvs`] | sharded stale-representation store (pull/push) |
-//! | [`ps`] | parameter server + optimizers (SGD/momentum/Adam) |
+//! | [`kvs`] | sharded stale-representation store (pull/push, checkpoint dump/restore) |
+//! | [`ps`] | parameter server + optimizers + v1/v2 checkpoints |
 //! | [`runtime`] | PJRT executable loading + literal packing |
 //! | [`gnn`] | pure-Rust CSR GCN/GAT inference oracle + F1 metrics |
 //! | [`costmodel`] | virtual-time device/network model (speedup figures) |
-//! | [`coordinator`] | DIGEST sync/async training loops, parallel engine, telemetry |
-//! | [`baselines`] | LLCG-like and DGL-like comparison frameworks |
-//! | [`exp`] | per-table/figure experiment runners |
+//! | [`coordinator`] | sessions, hooks/driver, sync/async schedulers, parallel engine, telemetry |
+//! | [`baselines`] | LLCG-like and DGL-like comparison frameworks (sessions too) |
+//! | [`exp`] | per-table/figure experiment runners (session-driven, cached) |
 
 pub mod baselines;
 pub mod config;

@@ -12,8 +12,17 @@
 //! (dataset, model, parts, method, epochs, sync_interval, lr, optimizer,
 //! overlap, eval_every, threads, seed, ...).  `threads=0` (default)
 //! auto-sizes the worker pool to min(parts, cores); any thread count
-//! produces bit-identical results.  The arg parser is hand-rolled: the
-//! offline crate cache has no clap (see Cargo.toml note).
+//! produces bit-identical results.
+//!
+//! Session knobs (`coordinator::session` / `coordinator::hooks`):
+//! `save_to=ck.json save_every=K` checkpoints the *full* training state
+//! every K epochs (and at the end), `load_from=ck.json` resumes it
+//! bit-exactly (raise `epochs` above the checkpoint's count to
+//! continue), `stream_csv=live.csv` streams telemetry rows while
+//! training runs, `early_stop=P` stops after P evaluations without
+//! val-F1 improvement, and `wall_budget=SECS` bounds real time.  The
+//! arg parser is hand-rolled: the offline crate cache has no clap (see
+//! Cargo.toml note).
 
 use digest::config::RunConfig;
 use digest::exp::{run_experiment, Budget, Campaign};
@@ -38,6 +47,8 @@ fn usage() -> String {
      digest generate --dataset <name> [--seed N]\n\
      digest partition --dataset <name> [--parts K] [--algo metis|bfs|random] [--seed N]\n\
      digest train [--config file.json] [--csv out.csv] [key=value ...]\n\
+     \x20             (session knobs: save_to= save_every= load_from=\n\
+     \x20              stream_csv= early_stop= wall_budget=)\n\
      digest experiment <id|all> [--out-dir results] [--quick] [--seed N]\n"
         .to_string()
 }
@@ -170,8 +181,13 @@ fn cmd_train(mut args: Vec<String>) -> Result<()> {
         None => RunConfig::default(),
     };
     let csv_out = take_opt(&mut args, "--csv");
-    let save_to = take_opt(&mut args, "--save");
-    let load_from = take_opt(&mut args, "--load");
+    // legacy flags; save_to= / load_from= overrides are the same knobs
+    if let Some(path) = take_opt(&mut args, "--save") {
+        cfg.save_to = Some(path);
+    }
+    if let Some(path) = take_opt(&mut args, "--load") {
+        cfg.load_from = Some(path);
+    }
     for kv in &args {
         cfg.apply_override(kv)?;
     }
@@ -186,22 +202,28 @@ fn cmd_train(mut args: Vec<String>) -> Result<()> {
         cfg.lr
     );
     let mut ctx = coordinator::TrainContext::new(cfg)?;
-    if let Some(path) = load_from {
-        let ckpt = digest::ps::checkpoint::Checkpoint::load(&path)?;
-        ckpt.validate_against(&ctx.spec)?;
-        println!("resuming from {path} (epoch {}, best val F1 {:.4})", ckpt.epoch, ckpt.best_val_f1);
-        ctx.warm_start = Some(ckpt.params);
+    let loaded = coordinator::prepare_resume(&mut ctx)?;
+    if let Some(ckpt) = &loaded {
+        println!(
+            "{} {} (epoch {}, best val F1 {:.4})",
+            if ckpt.state.is_some() {
+                "resuming training state from"
+            } else {
+                "warm-starting params from v1 checkpoint"
+            },
+            ctx.cfg.load_from.as_deref().unwrap_or("?"),
+            ckpt.epoch,
+            ckpt.best_val_f1
+        );
     }
-    let res = coordinator::run_with_context(&ctx)?;
-    if let Some(path) = save_to {
-        digest::ps::checkpoint::Checkpoint {
-            artifact: ctx.artifact.clone(),
-            epoch: ctx.cfg.epochs,
-            best_val_f1: res.best_val_f1,
-            params: res.final_params.clone(),
-        }
-        .save(&path)?;
-        println!("checkpoint saved to {path}");
+    let mut session = coordinator::session_from_checkpoint(&ctx, loaded.as_ref())?;
+    let mut driver = coordinator::Driver::from_config(&ctx.cfg)?;
+    let res = driver.run(session.as_mut())?;
+    if let Some(reason) = driver.stop_reason() {
+        println!("stopped early: {reason}");
+    }
+    if let Some(path) = &ctx.cfg.save_to {
+        println!("training state saved to {path} (resume with load_from={path})");
     }
     println!("\nresults:");
     println!("  best val F1    {:.4}", res.best_val_f1);

@@ -1,18 +1,80 @@
-//! Model checkpointing: save/restore trained parameters.
+//! Model + training-state checkpointing: save/restore mid-flight runs.
 //!
-//! Format: a single JSON file with the artifact name (shape contract),
-//! the flat parameter list in manifest order, and provenance metadata.
-//! JSON keeps the file greppable and dependency-free; parameters at this
-//! library's scale are < 1 MB so the text overhead is irrelevant.  The
-//! CLI exposes `digest train save_to=...` / `load_from=...`.
+//! Two formats share one file type:
+//!
+//! * **v1 (`digest-checkpoint-v1`)** — parameters only, plus provenance
+//!   metadata.  Loading one warm-starts a fresh run (fresh optimizer
+//!   moments, cold KVS) — fine for model export / further evaluation.
+//! * **v2 (`digest-checkpoint-v2`)** — everything a
+//!   [`crate::coordinator::session::TrainSession`] needs to continue
+//!   **bit-exactly**: parameters *and* optimizer moments, PS version and
+//!   delay stats, per-worker RNG streams / local clocks / stale caches,
+//!   the full KVS contents with versions, and the scheduler's own
+//!   counters (virtual time, byte counters, method-specific extras).
+//!   `resume_session` + a v2 file reproduces the loss/F1/telemetry
+//!   timeline of an uninterrupted run.
+//!
+//! Format: a single JSON file.  JSON keeps the file greppable and
+//! dependency-free; parameters at this library's scale are < 1 MB so the
+//! text overhead is irrelevant.  All floats serialize via Rust's
+//! shortest-round-trip formatting (and u64s via the exact
+//! [`Json::uint`] path), so restore is lossless.  The CLI exposes
+//! `digest train save_to=... save_every=K load_from=...`.
 
 use std::path::Path;
 
+use crate::kvs::KvsSnapshot;
+use crate::ps::DelayStats;
 use crate::tensor::Matrix;
 use crate::util::json::Json;
 use crate::{eyre, Result};
 
-/// A saved model: parameters plus enough metadata to validate reuse.
+/// Parameter-server state at a round boundary.
+#[derive(Debug, Clone)]
+pub struct PsState {
+    pub params: Vec<Matrix>,
+    pub version: u64,
+    pub opt_t: u64,
+    pub opt_m: Vec<Vec<f32>>,
+    pub opt_v: Vec<Vec<f32>>,
+    pub delays: DelayStats,
+}
+
+/// One worker's mutable cross-epoch state.
+#[derive(Debug, Clone)]
+pub struct WorkerSnap {
+    pub local_epoch: usize,
+    pub fetched_version: u64,
+    pub rng: [u64; 4],
+    pub last_pull_age: Option<u64>,
+    pub stale: Vec<Matrix>,
+}
+
+/// Full scheduler state at an epoch boundary (checkpoint v2 payload).
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    /// Method string (`digest` / `digest-a` / `llcg` / `dgl`) — resume
+    /// refuses a state saved by a different scheduler.
+    pub method: String,
+    /// Epochs completed when saved (resume continues at this epoch).
+    pub epoch: usize,
+    pub vtime: f64,
+    pub ps_bytes: u64,
+    pub best_val_f1: f64,
+    pub final_val_f1: f64,
+    pub final_test_f1: f64,
+    pub ps: PsState,
+    pub workers: Vec<WorkerSnap>,
+    /// KVS dump: (layer, node, version, row), sorted by (layer, node).
+    pub kvs_entries: Vec<(u16, u32, u64, Vec<f32>)>,
+    pub kvs_metrics: KvsSnapshot,
+    /// Method-specific extras (e.g. the async event queue); schedulers
+    /// own this blob end to end.
+    pub extra: Json,
+}
+
+/// A saved model: parameters plus enough metadata to validate reuse,
+/// and optionally the full training state for bit-exact resume.
 #[derive(Debug, Clone)]
 pub struct Checkpoint {
     /// Artifact config name the parameters belong to (shape contract).
@@ -22,31 +84,279 @@ pub struct Checkpoint {
     /// Best validation F1 observed.
     pub best_val_f1: f64,
     pub params: Vec<Matrix>,
+    /// Full scheduler state (None for v1 params-only checkpoints).
+    pub state: Option<TrainState>,
+}
+
+// ---- JSON helpers (lossless round trips) --------------------------------
+
+/// Lossless Matrix → JSON (schedulers embed matrices in their `extra`
+/// state blobs too, so this is public within the crate's checkpoint
+/// ecosystem).
+pub fn mat_json(m: &Matrix) -> Json {
+    Json::obj(vec![
+        ("rows", Json::num(m.rows as f64)),
+        ("cols", Json::num(m.cols as f64)),
+        ("data", f32s_json(&m.data)),
+    ])
+}
+
+/// Inverse of [`mat_json`].
+pub fn mat_from_json(p: &Json) -> Result<Matrix> {
+    let rows = p.get("rows")?.as_usize()?;
+    let cols = p.get("cols")?.as_usize()?;
+    let data = f32s_from_json(p.get("data")?)?;
+    if data.len() != rows * cols {
+        return Err(eyre!("checkpoint param size mismatch"));
+    }
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+fn f32s_json(v: &[f32]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::num(x as f64)).collect())
+}
+
+fn f32s_from_json(j: &Json) -> Result<Vec<f32>> {
+    j.as_arr()?
+        .iter()
+        .map(|v| match v {
+            // the writer degrades non-finite floats to null (JSON has no
+            // NaN literal); a diverged run's checkpoint thus loads back
+            // as NaN instead of corrupting the file
+            Json::Null => Ok(f32::NAN),
+            other => other.as_f64().map(|x| x as f32),
+        })
+        .collect()
+}
+
+/// Parse a 4-word xoshiro RNG state (shared by worker snapshots and the
+/// baselines' scheduler-level RNG blobs).
+pub fn rng_from_json(j: &Json) -> Result<[u64; 4]> {
+    let arr = j.as_arr()?;
+    if arr.len() != 4 {
+        return Err(eyre!("rng state must have 4 words, got {}", arr.len()));
+    }
+    let mut rng = [0u64; 4];
+    for (slot, v) in rng.iter_mut().zip(arr) {
+        *slot = v.as_u64()?;
+    }
+    Ok(rng)
+}
+
+/// NaN-safe f64 (JSON has no NaN literal): NaN serializes as null.
+fn num_or_null(x: f64) -> Json {
+    if x.is_nan() {
+        Json::Null
+    } else {
+        Json::num(x)
+    }
+}
+
+fn f64_or_nan(j: &Json) -> Result<f64> {
+    match j {
+        Json::Null => Ok(f64::NAN),
+        other => other.as_f64(),
+    }
+}
+
+fn opt_u64_json(v: Option<u64>) -> Json {
+    match v {
+        Some(x) => Json::uint(x),
+        None => Json::Null,
+    }
+}
+
+fn opt_u64_from_json(j: &Json) -> Result<Option<u64>> {
+    match j {
+        Json::Null => Ok(None),
+        other => other.as_u64().map(Some),
+    }
+}
+
+fn ps_state_json(s: &PsState) -> Json {
+    Json::obj(vec![
+        ("params", Json::Arr(s.params.iter().map(mat_json).collect())),
+        ("version", Json::uint(s.version)),
+        ("opt_t", Json::uint(s.opt_t)),
+        ("opt_m", Json::Arr(s.opt_m.iter().map(|v| f32s_json(v)).collect())),
+        ("opt_v", Json::Arr(s.opt_v.iter().map(|v| f32s_json(v)).collect())),
+        (
+            "delays",
+            Json::obj(vec![
+                ("updates", Json::uint(s.delays.updates)),
+                ("max_delay", Json::uint(s.delays.max_delay)),
+                ("total_delay", Json::uint(s.delays.total_delay)),
+            ]),
+        ),
+    ])
+}
+
+fn ps_state_from_json(j: &Json) -> Result<PsState> {
+    let d = j.get("delays")?;
+    Ok(PsState {
+        params: j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(mat_from_json)
+            .collect::<Result<_>>()?,
+        version: j.get("version")?.as_u64()?,
+        opt_t: j.get("opt_t")?.as_u64()?,
+        opt_m: j
+            .get("opt_m")?
+            .as_arr()?
+            .iter()
+            .map(f32s_from_json)
+            .collect::<Result<_>>()?,
+        opt_v: j
+            .get("opt_v")?
+            .as_arr()?
+            .iter()
+            .map(f32s_from_json)
+            .collect::<Result<_>>()?,
+        delays: DelayStats {
+            updates: d.get("updates")?.as_u64()?,
+            max_delay: d.get("max_delay")?.as_u64()?,
+            total_delay: d.get("total_delay")?.as_u64()?,
+        },
+    })
+}
+
+fn worker_json(w: &WorkerSnap) -> Json {
+    Json::obj(vec![
+        ("local_epoch", Json::num(w.local_epoch as f64)),
+        ("fetched_version", Json::uint(w.fetched_version)),
+        ("rng", Json::Arr(w.rng.iter().map(|&x| Json::uint(x)).collect())),
+        ("last_pull_age", opt_u64_json(w.last_pull_age)),
+        ("stale", Json::Arr(w.stale.iter().map(mat_json).collect())),
+    ])
+}
+
+fn worker_from_json(j: &Json) -> Result<WorkerSnap> {
+    Ok(WorkerSnap {
+        local_epoch: j.get("local_epoch")?.as_usize()?,
+        fetched_version: j.get("fetched_version")?.as_u64()?,
+        rng: rng_from_json(j.get("rng")?)?,
+        last_pull_age: opt_u64_from_json(j.get("last_pull_age")?)?,
+        stale: j
+            .get("stale")?
+            .as_arr()?
+            .iter()
+            .map(mat_from_json)
+            .collect::<Result<_>>()?,
+    })
+}
+
+fn kvs_entry_json(e: &(u16, u32, u64, Vec<f32>)) -> Json {
+    Json::obj(vec![
+        ("layer", Json::num(e.0 as f64)),
+        ("node", Json::num(e.1 as f64)),
+        ("version", Json::uint(e.2)),
+        ("row", f32s_json(&e.3)),
+    ])
+}
+
+fn kvs_entry_from_json(j: &Json) -> Result<(u16, u32, u64, Vec<f32>)> {
+    Ok((
+        j.get("layer")?.as_usize()? as u16,
+        j.get("node")?.as_u64()? as u32,
+        j.get("version")?.as_u64()?,
+        f32s_from_json(j.get("row")?)?,
+    ))
+}
+
+fn kvs_metrics_json(m: &KvsSnapshot) -> Json {
+    Json::obj(vec![
+        ("pulls", Json::uint(m.pulls)),
+        ("pushes", Json::uint(m.pushes)),
+        ("pulled_rows", Json::uint(m.pulled_rows)),
+        ("pushed_rows", Json::uint(m.pushed_rows)),
+        ("pulled_bytes", Json::uint(m.pulled_bytes)),
+        ("pushed_bytes", Json::uint(m.pushed_bytes)),
+        ("misses", Json::uint(m.misses)),
+    ])
+}
+
+fn kvs_metrics_from_json(j: &Json) -> Result<KvsSnapshot> {
+    Ok(KvsSnapshot {
+        pulls: j.get("pulls")?.as_u64()?,
+        pushes: j.get("pushes")?.as_u64()?,
+        pulled_rows: j.get("pulled_rows")?.as_u64()?,
+        pushed_rows: j.get("pushed_rows")?.as_u64()?,
+        pulled_bytes: j.get("pulled_bytes")?.as_u64()?,
+        pushed_bytes: j.get("pushed_bytes")?.as_u64()?,
+        misses: j.get("misses")?.as_u64()?,
+    })
+}
+
+fn state_json(s: &TrainState) -> Json {
+    Json::obj(vec![
+        ("method", Json::str(s.method.clone())),
+        ("epoch", Json::num(s.epoch as f64)),
+        ("vtime", Json::num(s.vtime)),
+        ("ps_bytes", Json::uint(s.ps_bytes)),
+        ("best_val_f1", Json::num(s.best_val_f1)),
+        ("final_val_f1", num_or_null(s.final_val_f1)),
+        ("final_test_f1", num_or_null(s.final_test_f1)),
+        ("ps", ps_state_json(&s.ps)),
+        ("workers", Json::Arr(s.workers.iter().map(worker_json).collect())),
+        (
+            "kvs_entries",
+            Json::Arr(s.kvs_entries.iter().map(kvs_entry_json).collect()),
+        ),
+        ("kvs_metrics", kvs_metrics_json(&s.kvs_metrics)),
+        ("extra", s.extra.clone()),
+    ])
+}
+
+fn state_from_json(j: &Json) -> Result<TrainState> {
+    Ok(TrainState {
+        method: j.get("method")?.as_str()?.to_string(),
+        epoch: j.get("epoch")?.as_usize()?,
+        vtime: j.get("vtime")?.as_f64()?,
+        ps_bytes: j.get("ps_bytes")?.as_u64()?,
+        best_val_f1: j.get("best_val_f1")?.as_f64()?,
+        final_val_f1: f64_or_nan(j.get("final_val_f1")?)?,
+        final_test_f1: f64_or_nan(j.get("final_test_f1")?)?,
+        ps: ps_state_from_json(j.get("ps")?)?,
+        workers: j
+            .get("workers")?
+            .as_arr()?
+            .iter()
+            .map(worker_from_json)
+            .collect::<Result<_>>()?,
+        kvs_entries: j
+            .get("kvs_entries")?
+            .as_arr()?
+            .iter()
+            .map(kvs_entry_from_json)
+            .collect::<Result<_>>()?,
+        kvs_metrics: kvs_metrics_from_json(j.get("kvs_metrics")?)?,
+        extra: j.get("extra")?.clone(),
+    })
 }
 
 impl Checkpoint {
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let params: Vec<Json> = self
-            .params
-            .iter()
-            .map(|m| {
-                Json::obj(vec![
-                    ("rows", Json::num(m.rows as f64)),
-                    ("cols", Json::num(m.cols as f64)),
-                    (
-                        "data",
-                        Json::Arr(m.data.iter().map(|&v| Json::num(v as f64)).collect()),
-                    ),
-                ])
-            })
-            .collect();
-        let j = Json::obj(vec![
-            ("format", Json::str("digest-checkpoint-v1")),
+        let params: Vec<Json> = self.params.iter().map(mat_json).collect();
+        let mut fields = vec![
+            (
+                "format",
+                Json::str(if self.state.is_some() {
+                    "digest-checkpoint-v2"
+                } else {
+                    "digest-checkpoint-v1"
+                }),
+            ),
             ("artifact", Json::str(self.artifact.clone())),
             ("epoch", Json::num(self.epoch as f64)),
             ("best_val_f1", Json::num(self.best_val_f1)),
             ("params", Json::Arr(params)),
-        ]);
+        ];
+        if let Some(state) = &self.state {
+            fields.push(("state", state_json(state)));
+        }
+        let j = Json::obj(fields);
         std::fs::write(path.as_ref(), j.to_string())
             .map_err(|e| eyre!("writing {:?}: {e}", path.as_ref()))?;
         Ok(())
@@ -56,33 +366,26 @@ impl Checkpoint {
         let text = std::fs::read_to_string(path.as_ref())
             .map_err(|e| eyre!("reading {:?}: {e}", path.as_ref()))?;
         let j = Json::parse(&text)?;
-        if j.get("format")?.as_str()? != "digest-checkpoint-v1" {
+        let format = j.get("format")?.as_str()?;
+        if format != "digest-checkpoint-v1" && format != "digest-checkpoint-v2" {
             return Err(eyre!("not a digest checkpoint"));
         }
         let params = j
             .get("params")?
             .as_arr()?
             .iter()
-            .map(|p| {
-                let rows = p.get("rows")?.as_usize()?;
-                let cols = p.get("cols")?.as_usize()?;
-                let data: Vec<f32> = p
-                    .get("data")?
-                    .as_arr()?
-                    .iter()
-                    .map(|v| v.as_f64().map(|x| x as f32))
-                    .collect::<Result<_>>()?;
-                if data.len() != rows * cols {
-                    return Err(eyre!("checkpoint param size mismatch"));
-                }
-                Ok(Matrix::from_vec(rows, cols, data))
-            })
+            .map(mat_from_json)
             .collect::<Result<Vec<_>>>()?;
+        let state = match j.opt("state") {
+            Some(s) => Some(state_from_json(s)?),
+            None => None,
+        };
         Ok(Checkpoint {
             artifact: j.get("artifact")?.as_str()?.to_string(),
             epoch: j.get("epoch")?.as_usize()?,
             best_val_f1: j.get("best_val_f1")?.as_f64()?,
             params,
+            state,
         })
     }
 
@@ -129,6 +432,7 @@ mod tests {
                 Matrix::from_fn(3, 2, |r, c| (r * 2 + c) as f32 * 0.5),
                 Matrix::from_vec(1, 2, vec![-1.25, 3.5]),
             ],
+            state: None,
         }
     }
 
@@ -144,6 +448,7 @@ mod tests {
         assert_eq!(back.params.len(), 2);
         assert_eq!(back.params[0].data, c.params[0].data);
         assert_eq!(back.params[1].data, c.params[1].data);
+        assert!(back.state.is_none());
     }
 
     #[test]
@@ -151,6 +456,81 @@ mod tests {
         let path = tmpfile("foreign");
         std::fs::write(&path, r#"{"format": "something-else"}"#).unwrap();
         assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn v2_state_round_trips_bit_exactly() {
+        let state = TrainState {
+            method: "digest".into(),
+            epoch: 4,
+            vtime: 123.456789012345,
+            ps_bytes: 0xDEAD_BEEF_CAFE_F00D, // needs the exact u64 path
+            best_val_f1: 0.75,
+            final_val_f1: f64::NAN, // NaN must survive as NaN
+            final_test_f1: 0.5,
+            ps: PsState {
+                params: vec![Matrix::from_vec(1, 3, vec![0.1, -0.2, 0.3])],
+                version: 4,
+                opt_t: 4,
+                opt_m: vec![vec![0.01, -0.02, 0.03]],
+                opt_v: vec![vec![1e-4, 2e-4, 3e-4]],
+                delays: DelayStats {
+                    updates: 16,
+                    max_delay: 3,
+                    total_delay: 20,
+                },
+            },
+            workers: vec![WorkerSnap {
+                local_epoch: 4,
+                fetched_version: 3,
+                rng: [u64::MAX, 0x9E3779B97F4A7C15, 0, 7],
+                last_pull_age: Some(2),
+                stale: vec![Matrix::from_vec(2, 2, vec![1.5, 0.0, -2.25, 3.0])],
+            }],
+            kvs_entries: vec![(0, 5, 2, vec![0.5, -0.5]), (1, 9, 4, vec![7.0, 8.0])],
+            kvs_metrics: KvsSnapshot {
+                pulls: 3,
+                pushes: 2,
+                pulled_rows: 30,
+                pushed_rows: 20,
+                pulled_bytes: 240,
+                pushed_bytes: 160,
+                misses: 5,
+            },
+            extra: Json::obj(vec![("queue", Json::Arr(vec![Json::num(1.25)]))]),
+        };
+        let c = Checkpoint {
+            artifact: "karate_gcn".into(),
+            epoch: 4,
+            best_val_f1: 0.75,
+            params: state.ps.params.clone(),
+            state: Some(state),
+        };
+        let path = tmpfile("v2");
+        c.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        let s = back.state.expect("v2 state restored");
+        assert_eq!(s.method, "digest");
+        assert_eq!(s.epoch, 4);
+        assert_eq!(s.vtime.to_bits(), 123.456789012345f64.to_bits());
+        assert_eq!(s.ps_bytes, 0xDEAD_BEEF_CAFE_F00D);
+        assert!(s.final_val_f1.is_nan());
+        assert_eq!(s.final_test_f1, 0.5);
+        assert_eq!(s.ps.version, 4);
+        assert_eq!(s.ps.opt_m[0], vec![0.01, -0.02, 0.03]);
+        assert_eq!(s.ps.delays.total_delay, 20);
+        assert_eq!(s.workers[0].rng, [u64::MAX, 0x9E3779B97F4A7C15, 0, 7]);
+        assert_eq!(s.workers[0].last_pull_age, Some(2));
+        assert_eq!(s.workers[0].stale[0].data, vec![1.5, 0.0, -2.25, 3.0]);
+        assert_eq!(s.kvs_entries.len(), 2);
+        assert_eq!(s.kvs_entries[1], (1, 9, 4, vec![7.0, 8.0]));
+        assert_eq!(s.kvs_metrics.pulled_bytes, 240);
+        assert_eq!(
+            s.extra.get("queue").unwrap().as_arr().unwrap()[0]
+                .as_f64()
+                .unwrap(),
+            1.25
+        );
     }
 
     #[test]
@@ -163,6 +543,7 @@ mod tests {
             epoch: 1,
             best_val_f1: 0.5,
             params: init_params(spec, 0),
+            state: None,
         };
         good.validate_against(spec).unwrap();
 
@@ -189,6 +570,7 @@ mod tests {
             epoch: 0,
             best_val_f1: v1,
             params,
+            state: None,
         };
         let path = tmpfile("resume");
         c.save(&path).unwrap();

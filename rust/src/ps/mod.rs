@@ -175,6 +175,35 @@ impl ParamServer {
         lock_unpoisoned(&self.inner).delays.clone()
     }
 
+    /// Export the full server state (params, version, optimizer moments,
+    /// delay stats) for a training-state checkpoint.  Must be called at
+    /// a round boundary: pending synchronous slots are not captured.
+    pub fn export_state(&self) -> checkpoint::PsState {
+        let inner = lock_unpoisoned(&self.inner);
+        debug_assert_eq!(inner.filled, 0, "export mid-round loses pending slots");
+        let (opt_t, opt_m, opt_v) = inner.opt.export_moments();
+        checkpoint::PsState {
+            params: inner.params.clone(),
+            version: inner.version,
+            opt_t,
+            opt_m,
+            opt_v,
+            delays: inner.delays.clone(),
+        }
+    }
+
+    /// Restore previously exported state; subsequent fetch/submit cycles
+    /// continue bit-exactly from the captured round boundary.
+    pub fn import_state(&self, s: &checkpoint::PsState) {
+        let mut inner = lock_unpoisoned(&self.inner);
+        inner.params = s.params.clone();
+        inner.version = s.version;
+        inner.opt.import_moments(s.opt_t, s.opt_m.clone(), s.opt_v.clone());
+        inner.delays = s.delays.clone();
+        inner.slots = (0..self.n_workers).map(|_| None).collect();
+        inner.filled = 0;
+    }
+
     /// Replace the parameters (tests / experiment resets).
     pub fn reset(&self, params: Vec<Matrix>) {
         let mut inner = lock_unpoisoned(&self.inner);
@@ -279,6 +308,29 @@ mod tests {
             b.submit_slot(m, &gs[m]);
         }
         assert_eq!(a.fetch().0[0].data, b.fetch().0[0].data);
+    }
+
+    #[test]
+    fn export_import_continues_rounds_bit_exactly() {
+        let mk = || ParamServer::new(params(), Optimizer::new(OptimizerKind::Adam, 0.05), 2);
+        let cont = mk();
+        for round in 0..3 {
+            cont.submit_slot(0, &grads(1.0 + round as f32));
+            cont.submit_slot(1, &grads(-0.5));
+        }
+        let state = cont.export_state();
+        assert_eq!(state.version, 3);
+        let resumed = mk();
+        resumed.import_state(&state);
+        assert_eq!(resumed.version(), 3);
+        for round in 3..6 {
+            cont.submit_slot(0, &grads(1.0 + round as f32));
+            cont.submit_slot(1, &grads(-0.5));
+            resumed.submit_slot(0, &grads(1.0 + round as f32));
+            resumed.submit_slot(1, &grads(-0.5));
+        }
+        assert_eq!(cont.fetch().0[0].data, resumed.fetch().0[0].data);
+        assert_eq!(cont.version(), resumed.version());
     }
 
     #[test]

@@ -124,6 +124,20 @@ impl Optimizer {
         self.m.clear();
         self.v.clear();
     }
+
+    /// Export the moment state (training-state checkpoints): step count
+    /// plus first/second moment vectors in parameter order.
+    pub fn export_moments(&self) -> (u64, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        (self.t, self.m.clone(), self.v.clone())
+    }
+
+    /// Restore previously exported moment state; the next `step` then
+    /// continues bit-exactly where the exporting run left off.
+    pub fn import_moments(&mut self, t: u64, m: Vec<Vec<f32>>, v: Vec<Vec<f32>>) {
+        self.t = t;
+        self.m = m;
+        self.v = v;
+    }
 }
 
 #[cfg(test)]
@@ -198,6 +212,26 @@ mod tests {
         opt.step(&mut p2, &grads);
         // first-step behaviour again after reset
         assert!((p2[0].data[0] - 0.9).abs() < 1e-4);
+    }
+
+    #[test]
+    fn moment_export_import_continues_bit_exactly() {
+        let grads = vec![Matrix::from_vec(1, 2, vec![0.3, -0.7])];
+        let mut cont = Optimizer::new(OptimizerKind::Adam, 0.05);
+        let mut p_cont = vec![Matrix::from_vec(1, 2, vec![1.0, 2.0])];
+        for _ in 0..3 {
+            cont.step(&mut p_cont, &grads);
+        }
+        let (t, m, v) = cont.export_moments();
+        assert_eq!(t, 3);
+        let mut resumed = Optimizer::new(OptimizerKind::Adam, 0.05);
+        resumed.import_moments(t, m, v);
+        let mut p_res = p_cont.clone();
+        for _ in 0..3 {
+            cont.step(&mut p_cont, &grads);
+            resumed.step(&mut p_res, &grads);
+        }
+        assert_eq!(p_cont[0].data, p_res[0].data);
     }
 
     #[test]

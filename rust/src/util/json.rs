@@ -20,6 +20,11 @@ pub enum Json {
     Null,
     Bool(bool),
     Num(f64),
+    /// Integer literal that is NOT exactly representable as an `f64`
+    /// (e.g. a 64-bit seed).  The parser only produces this variant when
+    /// routing through `Num` would silently change the value, so every
+    /// ordinary number still lives in `Num`.
+    Big(u64),
     Str(String),
     Arr(Vec<Json>),
     Obj(BTreeMap<String, Json>),
@@ -66,16 +71,37 @@ impl Json {
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(n) => Ok(*n),
+            Json::Big(b) => Ok(*b as f64),
+            _ => Err(eyre!("not a number: {self:?}")),
+        }
+    }
+
+    /// Exact u64 accessor.  Unlike `as_f64()? as u64` (which silently
+    /// saturates and loses precision above 2^53), this errors on
+    /// negative, fractional, or non-round-tripping values — and returns
+    /// large integer literals losslessly via [`Json::Big`].
+    pub fn as_u64(&self) -> Result<u64> {
+        match self {
+            Json::Big(b) => Ok(*b),
+            Json::Num(n) => {
+                // upper bound excludes 2^64 itself: the saturating cast
+                // below would otherwise map it onto u64::MAX and pass
+                // the round-trip check
+                if *n < 0.0 || n.fract() != 0.0 || *n >= 18446744073709551616.0 {
+                    return Err(eyre!("not a u64-range integer: {n}"));
+                }
+                let v = *n as u64;
+                if v as f64 != *n {
+                    return Err(eyre!("integer {n} not exactly representable as u64"));
+                }
+                Ok(v)
+            }
             _ => Err(eyre!("not a number: {self:?}")),
         }
     }
 
     pub fn as_usize(&self) -> Result<usize> {
-        let n = self.as_f64()?;
-        if n < 0.0 || n.fract() != 0.0 {
-            return Err(eyre!("not a non-negative integer: {n}"));
-        }
-        Ok(n as usize)
+        Ok(self.as_u64()? as usize)
     }
 
     pub fn as_bool(&self) -> Result<bool> {
@@ -102,6 +128,20 @@ impl Json {
         Json::Num(n)
     }
 
+    /// Lossless u64 constructor: stays in `Num` when the value is
+    /// exactly representable as f64, falls back to [`Json::Big`]
+    /// otherwise (so `uint(x).as_u64() == x` for every u64).
+    pub fn uint(v: u64) -> Json {
+        let f = v as f64;
+        // the f < 2^64 guard keeps u64::MAX (which rounds UP to 2^64,
+        // then saturates back) out of the lossy Num path
+        if f < 18446744073709551616.0 && f as u64 == v {
+            Json::Num(f)
+        } else {
+            Json::Big(v)
+        }
+    }
+
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
@@ -118,11 +158,20 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/inf literal; bare "NaN" would make
+                    // the whole file unparseable, so degrade to null
+                    // (readers that expect possibly-NaN fields map null
+                    // back to NaN)
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
                 }
+            }
+            Json::Big(b) => {
+                let _ = write!(out, "{b}");
             }
             Json::Str(s) => {
                 out.push('"');
@@ -283,6 +332,14 @@ impl<'a> Parser<'a> {
             self.i += 1;
         }
         let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        // pure-integer literals that would lose bits through f64 (values
+        // above 2^53 with low bits set, e.g. 64-bit seeds) are kept
+        // exact in `Big`; everything else takes the f64 path as before
+        if s.bytes().all(|c| c.is_ascii_digit()) {
+            if let Ok(v) = s.parse::<u64>() {
+                return Ok(Json::uint(v));
+            }
+        }
         s.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| eyre!("invalid number {s:?} at byte {start}"))
@@ -396,6 +453,51 @@ mod tests {
         assert!(v.get("n").unwrap().as_usize().is_err());
         assert!(v.get("n").unwrap().as_str().is_err());
         assert_eq!(v.get("n").unwrap().as_f64().unwrap(), 1.5);
+    }
+
+    #[test]
+    fn u64_round_trips_above_f64_precision() {
+        // 2^53 + 1 is the first integer f64 cannot represent: the old
+        // as_f64()-based path silently rounded it to 2^53
+        let v = Json::parse("9007199254740993").unwrap();
+        assert_eq!(v, Json::Big(9007199254740993));
+        assert_eq!(v.as_u64().unwrap(), 9007199254740993);
+        // a full-width 64-bit seed survives write -> parse -> as_u64
+        let seed = 0x9E3779B97F4A7C15u64;
+        let j = Json::uint(seed);
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.as_u64().unwrap(), seed);
+        // u64::MAX (rounds UP to 2^64 in f64) must take the Big path
+        assert_eq!(Json::uint(u64::MAX), Json::Big(u64::MAX));
+        assert_eq!(
+            Json::parse(&u64::MAX.to_string()).unwrap().as_u64().unwrap(),
+            u64::MAX
+        );
+        // representable integers stay plain numbers
+        assert_eq!(Json::uint(1 << 60), Json::Num((1u64 << 60) as f64));
+        assert_eq!(Json::parse("42").unwrap().as_u64().unwrap(), 42);
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null_not_invalid_json() {
+        // bare "NaN"/"inf" would make the whole document unparseable
+        let j = Json::Arr(vec![
+            Json::Num(f64::NAN),
+            Json::Num(f64::INFINITY),
+            Json::Num(1.5),
+        ]);
+        let text = j.to_string();
+        assert_eq!(text, "[null,null,1.5]");
+        Json::parse(&text).unwrap();
+    }
+
+    #[test]
+    fn as_u64_rejects_lossy_values() {
+        assert!(Json::Num(1.5).as_u64().is_err());
+        assert!(Json::Num(-3.0).as_u64().is_err());
+        assert!(Json::Num(1e300).as_u64().is_err());
+        assert!(Json::Num(18446744073709551616.0).as_u64().is_err());
+        assert!(Json::Str("7".into()).as_u64().is_err());
     }
 
     #[test]

@@ -100,6 +100,17 @@ impl Rng {
     pub fn fork(&mut self, tag: u64) -> Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
+
+    /// Export the raw generator state (training-state checkpoints).
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from an exported state: the restored stream
+    /// continues exactly where [`Rng::state`] captured it.
+    pub fn from_state(s: [u64; 4]) -> Rng {
+        Rng { s }
+    }
 }
 
 /// Lock a mutex, recovering the guard when a panicking thread poisoned
@@ -249,6 +260,18 @@ mod tests {
         assert_eq!(human_bytes(512), "512 B");
         assert_eq!(human_bytes(2048), "2.00 KiB");
         assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn rng_state_round_trip_continues_stream() {
+        let mut a = Rng::new(1234);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let mut b = Rng::from_state(a.state());
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
     }
 }
 
