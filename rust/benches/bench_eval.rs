@@ -1,0 +1,186 @@
+//! Global-eval oracle: seed dense-loop forward vs the sparse CSR path
+//! at 1/2/4 eval threads, per dataset tier.
+//!
+//! The dense baseline is `gnn::reference::forward_dense` — the seed
+//! implementation kept verbatim (per-edge `Vec` allocations in the
+//! layer loop), so the speedup measured here is exactly "this PR vs the
+//! seed oracle".  Numerics are cross-checked (< 1e-4 max |Δ|) before
+//! timing, and the sparse path is bit-identical across thread counts
+//! (asserted here too — a bench that silently changed numerics would
+//! be worthless as a baseline).
+//!
+//! Env knobs:
+//!  * `BENCH_EVAL_QUICK=1`   — small tiers only (CI smoke).
+//!  * `BENCH_EVAL_JSON=f`    — also write the machine-readable report
+//!    to `f` (the committed `BENCH_eval.json` baseline is produced
+//!    this way: `BENCH_EVAL_JSON=../BENCH_eval.json cargo bench
+//!    --bench bench_eval`).
+//!  * `BENCH_EVAL_ENFORCE=1` — turn the acceptance summary (sparse
+//!    ≥ 5x over the dense oracle on every `-m` tier) into a hard
+//!    assert.  Off by default: the threshold assumes ≥ 2 usable
+//!    cores, which shared CI runners don't guarantee.
+
+#[path = "harness.rs"]
+mod harness;
+
+use digest::gnn::{self, init_params_for_dims as init_params, reference, ModelKind};
+use digest::graph::registry::load;
+use digest::graph::Dataset;
+use digest::util::Rng;
+use harness::{bench, BenchReport};
+
+const HIDDEN: usize = 128;
+
+struct Row {
+    dataset: String,
+    model: &'static str,
+    nodes: usize,
+    edges: usize,
+    path: &'static str,
+    threads: usize,
+    report: BenchReport,
+    speedup_vs_dense: f64,
+}
+
+fn json_row(r: &Row) -> String {
+    format!(
+        concat!(
+            "    {{\"dataset\": \"{}\", \"model\": \"{}\", \"nodes\": {}, ",
+            "\"edges\": {}, \"path\": \"{}\", \"threads\": {}, ",
+            "\"mean_ms\": {:.3}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, ",
+            "\"speedup_vs_dense\": {:.2}}}"
+        ),
+        r.dataset,
+        r.model,
+        r.nodes,
+        r.edges,
+        r.path,
+        r.threads,
+        r.report.mean.as_secs_f64() * 1e3,
+        r.report.p50.as_secs_f64() * 1e3,
+        r.report.p95.as_secs_f64() * 1e3,
+        r.speedup_vs_dense,
+    )
+}
+
+fn run_tier(ds: &Dataset, rows: &mut Vec<Row>) {
+    let edges = ds.graph.m();
+    for kind in [ModelKind::Gcn, ModelKind::Gat] {
+        let dims = [ds.d_in(), HIDDEN, ds.n_class];
+        let mut rng = Rng::new(1234);
+        let params = init_params(kind, &dims, &mut rng);
+
+        // numeric cross-check before timing anything
+        let (want, _) =
+            reference::forward_dense(kind, &ds.graph, &ds.features, &params, true).unwrap();
+        let (got1, _) = gnn::forward_t(kind, &ds.graph, &ds.features, &params, true, 1).unwrap();
+        let (got4, _) = gnn::forward_t(kind, &ds.graph, &ds.features, &params, true, 4).unwrap();
+        let diff = got1.max_abs_diff(&want);
+        assert!(diff < 1e-4, "{} {}: sparse diverged from oracle by {diff}", ds.name, kind.as_str());
+        assert!(
+            got1.data.iter().zip(&got4.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{} {}: thread-count nondeterminism",
+            ds.name,
+            kind.as_str()
+        );
+
+        let dense = bench(
+            &format!("{} {} dense-loop (seed oracle)", ds.name, kind.as_str()),
+            || reference::forward_dense(kind, &ds.graph, &ds.features, &params, true).unwrap(),
+        );
+        let dense_mean = dense.mean.as_secs_f64();
+        rows.push(Row {
+            dataset: ds.name.clone(),
+            model: kind.as_str(),
+            nodes: ds.n(),
+            edges,
+            path: "dense",
+            threads: 1,
+            report: dense,
+            speedup_vs_dense: 1.0,
+        });
+        for threads in [1usize, 2, 4] {
+            let rep = bench(
+                &format!("{} {} sparse csr, threads={threads}", ds.name, kind.as_str()),
+                || gnn::forward_t(kind, &ds.graph, &ds.features, &params, true, threads).unwrap(),
+            );
+            let speedup = dense_mean / rep.mean.as_secs_f64();
+            println!("    -> speedup vs dense oracle: {speedup:.2}x");
+            rows.push(Row {
+                dataset: ds.name.clone(),
+                model: kind.as_str(),
+                nodes: ds.n(),
+                edges,
+                path: "sparse",
+                threads,
+                report: rep,
+                speedup_vs_dense: speedup,
+            });
+        }
+        println!();
+    }
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_EVAL_QUICK").is_ok();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("host cores: {cores}  (quick = {quick})\n");
+    let tiers: &[&str] = if quick {
+        &["arxiv-s", "reddit-s"]
+    } else {
+        // the -m tiers are the point: the scale where the seed oracle
+        // collapses (generation itself takes a few seconds — done once)
+        &["arxiv-s", "products-s", "arxiv-m", "reddit-m"]
+    };
+    let mut rows = Vec::new();
+    for name in tiers {
+        println!("== {name} ==");
+        let t0 = std::time::Instant::now();
+        let ds = load(name, 42).unwrap();
+        println!(
+            "   n = {}, undirected edges = {}, d_in = {} (generated in {:.1?})",
+            ds.n(),
+            ds.graph.m(),
+            ds.d_in(),
+            t0.elapsed()
+        );
+        run_tier(&ds, &mut rows);
+    }
+
+    // acceptance tracking (ISSUE 3): the sparse path must beat the seed
+    // dense-loop oracle by >= 5x on the eval-scale (-m) tiers
+    let mut summary: Vec<(String, String, f64)> = Vec::new();
+    for r in rows.iter().filter(|r| r.path == "sparse" && r.dataset.ends_with("-m")) {
+        match summary.iter_mut().find(|e| e.0 == r.dataset && e.1 == r.model) {
+            Some(e) => e.2 = e.2.max(r.speedup_vs_dense),
+            None => summary.push((r.dataset.clone(), r.model.to_string(), r.speedup_vs_dense)),
+        }
+    }
+    for (d, m, s) in &summary {
+        let verdict = if *s >= 5.0 { "PASS" } else { "BELOW TARGET" };
+        println!("acceptance {d}/{m}: best sparse speedup {s:.2}x (target 5x) -> {verdict}");
+    }
+    if std::env::var("BENCH_EVAL_ENFORCE").is_ok() {
+        assert!(
+            !summary.is_empty() && summary.iter().all(|e| e.2 >= 5.0),
+            "sparse eval speedup below the 5x acceptance target: {summary:?}"
+        );
+    }
+
+    if let Ok(path) = std::env::var("BENCH_EVAL_JSON") {
+        let body: Vec<String> = rows.iter().map(json_row).collect();
+        let json = format!(
+            concat!(
+                "{{\n  \"bench\": \"eval\",\n",
+                "  \"generated_by\": \"cargo bench --bench bench_eval\",\n",
+                "  \"host_cores\": {},\n  \"quick\": {},\n",
+                "  \"results\": [\n{}\n  ]\n}}\n"
+            ),
+            cores,
+            quick,
+            body.join(",\n")
+        );
+        std::fs::write(&path, json).unwrap();
+        println!("wrote {path}");
+    }
+}

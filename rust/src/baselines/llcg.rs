@@ -21,6 +21,7 @@ use crate::halo::{PropKind, SubgraphPlan};
 use crate::ps::checkpoint::{Checkpoint, TrainState};
 use crate::ps::{optimizer::Optimizer, ParamServer};
 use crate::runtime::{pack_step_inputs, parse_train_output};
+use crate::tensor::sparse::{CsrBuilder, CsrMatrix};
 use crate::tensor::Matrix;
 use crate::util::json::Json;
 use crate::util::Rng;
@@ -37,7 +38,7 @@ use crate::coordinator::worker::epoch_layer_times;
 /// for GCN, P_in re-normalized with *local* (post-drop) degrees.
 pub fn drop_edges(ctx: &TrainContext, plan: &SubgraphPlan) -> SubgraphPlan {
     let mut p = plan.clone();
-    p.p_out = Matrix::zeros(p.s_pad, p.b_pad);
+    p.p_out = CsrMatrix::empty(p.s_pad, p.b_pad);
     let kind = match ctx.cfg.model {
         crate::gnn::ModelKind::Gcn => PropKind::GcnNormalized,
         crate::gnn::ModelKind::Gat => PropKind::GatMask,
@@ -56,19 +57,20 @@ pub fn drop_edges(ctx: &TrainContext, plan: &SubgraphPlan) -> SubgraphPlan {
                     .count()
             })
             .collect();
-        let mut p_in = Matrix::zeros(p.s_pad, p.s_pad);
+        let mut p_in = CsrBuilder::new(p.s_pad, p.s_pad);
         for i in 0..n_own {
             let di = (local_deg[i] + 1) as f32;
-            p_in.set(i, i, 1.0 / di);
+            p_in.push(i as u32, 1.0 / di);
             let v = p.own[i] as usize;
             for &u in g.neighbors(v) {
                 if let Ok(j) = p.own.binary_search(&u) {
                     let dj = (local_deg[j] + 1) as f32;
-                    p_in.set(i, j, 1.0 / (di * dj).sqrt());
+                    p_in.push(j as u32, 1.0 / (di * dj).sqrt());
                 }
             }
+            p_in.finish_row();
         }
-        p.p_in = p_in;
+        p.p_in = p_in.finish();
     }
     // GAT masks need only P_out zeroed (self-loops already on diag)
     p
@@ -354,10 +356,10 @@ mod tests {
     fn dropped_plans_have_zero_pout_and_local_norm() {
         let ctx = TrainContext::new(RunConfig::default()).unwrap();
         let d = drop_edges(&ctx, &ctx.plans[0]);
-        assert!(d.p_out.data.iter().all(|&v| v == 0.0));
+        assert_eq!(d.p_out.nnz(), 0);
         // locally-normalized rows: P_in row weight must equal local
         // GCN row sums and differ from the full-graph split version
-        assert!(d.p_in.data != ctx.plans[0].p_in.data);
+        assert!(d.p_in.to_dense().data != ctx.plans[0].p_in.to_dense().data);
     }
 
     #[test]

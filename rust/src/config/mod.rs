@@ -91,8 +91,11 @@ pub struct RunConfig {
     /// Evaluate global val/test F1 every `eval_every` epochs.
     pub eval_every: usize,
     /// Worker threads for the parallel execution engine; 0 = auto
-    /// (min(parts, available cores)).  Results are bit-identical across
-    /// thread counts — this only trades wall-clock for cores.
+    /// (min(parts, available cores)).  Also drives the sparse
+    /// global-eval forward (`TrainContext::global_eval`), where 0
+    /// resolves to *all* cores and an explicit value caps eval
+    /// parallelism too.  Results are bit-identical across thread
+    /// counts in both uses — this only trades wall-clock for cores.
     pub threads: usize,
     pub seed: u64,
     /// Straggler injection: worker id + delay range in virtual seconds.

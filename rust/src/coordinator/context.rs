@@ -83,14 +83,18 @@ impl TrainContext {
         self.plans[m].forward_flops(&self.spec.dims())
     }
 
-    /// Global evaluation with the pure-Rust oracle: (val_f1, test_f1).
+    /// Global evaluation with the pure-Rust sparse oracle:
+    /// (val_f1, test_f1).  Runs on `RunConfig::threads` eval threads
+    /// (0 = auto); the sparse forward is bit-identical at any thread
+    /// count, so this only trades wall-clock for cores.
     pub fn global_eval(&self, params: &[Matrix]) -> Result<(f64, f64)> {
-        let (logits, _) = gnn::forward(
+        let (logits, _) = gnn::forward_t(
             self.cfg.model,
             &self.ds.graph,
             &self.ds.features,
             params,
             self.spec.normalize,
+            self.cfg.threads,
         )?;
         let preds = logits.argmax_rows();
         let val = self.ds.nodes_in_split(Split::Val);

@@ -15,11 +15,29 @@
 //! GCN: H^{l+1} = relu(P H^l W + b), P = D̃^{-1/2}(A+I)D̃^{-1/2};
 //! GAT: single-head masked attention with LeakyReLU(0.2) logits and ELU
 //! hidden activations.  Last layer has no activation (logits).
+//!
+//! ## Sparse evaluation path
+//!
+//! The forward passes build the propagation/attention structure **once**
+//! as a [`CsrMatrix`] and run every layer as SpMM + bias + activation —
+//! no per-edge allocation anywhere in the layer loop, and the SpMM and
+//! dense-transform kernels parallelize over row chunks with
+//! **bit-identical output at any thread count** ([`gcn_forward_t`] /
+//! [`gat_forward_t`] take the thread count; the plain [`gcn_forward`] /
+//! [`gat_forward`] wrappers are single-threaded).  Within a row the CSR
+//! entry order is self-loop first, then neighbors ascending — exactly
+//! the seed oracle's summation order, so the sparse path reproduces the
+//! dense-loop numerics (see [`reference`], kept as the cross-check
+//! oracle and bench baseline; `benches/bench_eval.rs` tracks the
+//! speedup in `BENCH_eval.json`).
 
 pub mod metrics;
+pub mod reference;
 
 use crate::graph::Graph;
-use crate::tensor::Matrix;
+use crate::tensor::sparse::{balanced_row_chunks, CsrBuilder, CsrMatrix};
+use crate::tensor::{par_matmul_into, Matrix};
+use crate::util::Rng;
 use crate::{eyre, Result};
 
 /// Model selector shared across the crate.
@@ -93,48 +111,124 @@ fn elu(z: f32) -> f32 {
     }
 }
 
-/// Full-graph GCN forward; returns (logits, per-layer hidden reps).
-pub fn gcn_forward(
+/// Resolve an eval thread count: 0 = auto (all cores), clamped to the
+/// row count.  Output is bit-identical at any resolved value, so auto
+/// is always safe.
+pub fn resolve_eval_threads(requested: usize, rows: usize) -> usize {
+    let t = if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    };
+    t.clamp(1, rows.max(1))
+}
+
+/// Build the normalized GCN propagation matrix
+/// P = D̃^{-1/2}(A+I)D̃^{-1/2} as CSR.  Row v holds the self-loop entry
+/// first, then neighbors in ascending id order — the seed oracle's
+/// summation order, which the SpMM path must reproduce (f32 addition is
+/// non-associative).
+pub fn gcn_prop_csr(g: &Graph) -> CsrMatrix {
+    let n = g.n();
+    let mut b = CsrBuilder::new(n, n);
+    b.reserve(g.targets.len() + n);
+    for v in 0..n {
+        b.push(v as u32, 1.0 / (g.degree(v) + 1) as f32);
+        for &u in g.neighbors(v) {
+            b.push(u, g.norm_weight(v, u as usize));
+        }
+        b.finish_row();
+    }
+    b.finish()
+}
+
+/// Attention structure A + I (self-loop first, neighbors ascending).
+/// Values are placeholders — each GAT layer overwrites them with that
+/// layer's softmax coefficients via [`gat_attention_values`].
+pub fn gat_structure_csr(g: &Graph) -> CsrMatrix {
+    let n = g.n();
+    let mut b = CsrBuilder::new(n, n);
+    b.reserve(g.targets.len() + n);
+    for v in 0..n {
+        b.push(v as u32, 1.0);
+        for &u in g.neighbors(v) {
+            b.push(u, 1.0);
+        }
+        b.finish_row();
+    }
+    b.finish()
+}
+
+/// Per-layer shape validation shared by both forwards: mismatched
+/// parameters must surface as `Err`, not an index panic deep inside a
+/// kernel.
+fn check_layer_shapes(l: usize, kind: ModelKind, h: &Matrix, layer: &LayerView) -> Result<()> {
+    if h.cols != layer.w.rows {
+        return Err(eyre!(
+            "layer {l}: input dim {} != w rows {}",
+            h.cols,
+            layer.w.rows
+        ));
+    }
+    if layer.b.data.len() != layer.w.cols {
+        return Err(eyre!(
+            "layer {l}: bias len {} != w cols {}",
+            layer.b.data.len(),
+            layer.w.cols
+        ));
+    }
+    if kind == ModelKind::Gat {
+        for (name, a) in [("a_src", layer.a_src), ("a_dst", layer.a_dst)] {
+            let a = a.expect("GAT layer views carry attention vectors");
+            if a.data.len() != layer.w.cols {
+                return Err(eyre!(
+                    "layer {l}: {name} len {} != w cols {}",
+                    a.data.len(),
+                    layer.w.cols
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `z` rows += bias (one pass after the SpMM — same per-element order
+/// as the seed's per-row bias add).
+fn add_bias_rows(z: &mut Matrix, bias: &[f32]) {
+    for r in 0..z.rows {
+        for (o, bv) in z.row_mut(r).iter_mut().zip(bias) {
+            *o += bv;
+        }
+    }
+}
+
+/// Full-graph GCN forward on the sparse path with `threads` eval
+/// threads (0 = auto); returns (logits, per-layer hidden reps).
+/// Output is bit-identical at any thread count.
+pub fn gcn_forward_t(
     g: &Graph,
     x: &Matrix,
     params: &[Matrix],
     normalize: bool,
+    threads: usize,
 ) -> Result<(Matrix, Vec<Matrix>)> {
     let layers = layer_views(ModelKind::Gcn, params)?;
     let n = g.n();
     if x.rows != n {
         return Err(eyre!("features rows {} != n {n}", x.rows));
     }
+    let threads = resolve_eval_threads(threads, n);
+    let prop = gcn_prop_csr(g);
     let mut h = x.clone();
     let mut hidden = Vec::new();
     for (l, layer) in layers.iter().enumerate() {
         let last = l == layers.len() - 1;
-        let t = h.matmul(layer.w); // (n, d')
-        let d_out = t.cols;
-        let mut z = Matrix::zeros(n, d_out);
-        for v in 0..n {
-            // self-loop
-            let wv = 1.0 / (g.degree(v) + 1) as f32;
-            let tv = t.row(v).to_vec();
-            {
-                let zrow = z.row_mut(v);
-                for (o, tval) in zrow.iter_mut().zip(&tv) {
-                    *o += wv * tval;
-                }
-            }
-            for &u in g.neighbors(v) {
-                let w = g.norm_weight(v, u as usize);
-                let trow = t.row(u as usize).to_vec();
-                let zrow = z.row_mut(v);
-                for (o, tval) in zrow.iter_mut().zip(&trow) {
-                    *o += w * tval;
-                }
-            }
-            let zrow = z.row_mut(v);
-            for (o, bv) in zrow.iter_mut().zip(&layer.b.data) {
-                *o += bv;
-            }
-        }
+        check_layer_shapes(l, ModelKind::Gcn, &h, layer)?;
+        let mut t = Matrix::zeros(n, layer.w.cols);
+        par_matmul_into(&h, layer.w, &mut t, threads);
+        let mut z = Matrix::zeros(n, t.cols);
+        prop.spmm_into_threaded(&t, &mut z, threads)?;
+        add_bias_rows(&mut z, &layer.b.data);
         if !last {
             for v in &mut z.data {
                 *v = v.max(0.0); // relu
@@ -149,59 +243,124 @@ pub fn gcn_forward(
     Ok((h, hidden))
 }
 
-/// Full-graph single-head GAT forward; returns (logits, hidden reps).
-pub fn gat_forward(
+/// Full-graph GCN forward (single-threaded convenience wrapper).
+pub fn gcn_forward(
     g: &Graph,
     x: &Matrix,
     params: &[Matrix],
     normalize: bool,
 ) -> Result<(Matrix, Vec<Matrix>)> {
+    gcn_forward_t(g, x, params, normalize, 1)
+}
+
+/// Overwrite `att.values` with one GAT layer's softmax coefficients:
+/// per row v, alpha(v,u) = softmax_u(LeakyReLU(s_src[v] + s_dst[u]))
+/// over the row's entries (self ∪ neighbors).  Parallelized over
+/// nnz-balanced row chunks; each value is written by exactly one
+/// thread and per-row reduction order is the entry order, so the
+/// result is thread-count independent.
+pub fn gat_attention_values(
+    att: &mut CsrMatrix,
+    s_src: &[f32],
+    s_dst: &[f32],
+    threads: usize,
+) {
+    assert_eq!(att.rows, s_src.len(), "s_src length != rows");
+    assert_eq!(att.cols, s_dst.len(), "s_dst length != cols");
+    let CsrMatrix {
+        row_ptr,
+        col_idx,
+        values,
+        ..
+    } = att;
+    let row_ptr: &[usize] = row_ptr;
+    let col_idx: &[u32] = col_idx;
+    let bounds = balanced_row_chunks(row_ptr, threads);
+    if bounds.len() <= 2 {
+        attention_rows(0, row_ptr, col_idx, s_src, s_dst, values);
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut rest: &mut [f32] = values;
+        for w in bounds.windows(2) {
+            let (lo, hi) = (w[0], w[1]);
+            let (seg, tail) =
+                std::mem::take(&mut rest).split_at_mut(row_ptr[hi] - row_ptr[lo]);
+            rest = tail;
+            s.spawn(move || attention_rows(lo, &row_ptr[lo..=hi], col_idx, s_src, s_dst, seg));
+        }
+    });
+}
+
+/// Attention row kernel: rows `row0..row0 + offsets.len() - 1`, values
+/// written into `seg` (that row range's slice of the values array).
+fn attention_rows(
+    row0: usize,
+    offsets: &[usize],
+    col_idx: &[u32],
+    s_src: &[f32],
+    s_dst: &[f32],
+    seg: &mut [f32],
+) {
+    let base = offsets[0];
+    for (i, w) in offsets.windows(2).enumerate() {
+        let v = row0 + i;
+        let cols = &col_idx[w[0]..w[1]];
+        let vals = &mut seg[w[0] - base..w[1] - base];
+        let sv = s_src[v];
+        // LeakyReLU logits, max-folded in entry order (seed order)
+        let mut mx = f32::NEG_INFINITY;
+        for (val, &c) in vals.iter_mut().zip(cols) {
+            let e = sv + s_dst[c as usize];
+            let e = if e > 0.0 { e } else { LEAKY_SLOPE * e };
+            *val = e;
+            mx = mx.max(e);
+        }
+        // stable softmax; denom accumulates in entry order
+        let mut denom = 0.0f32;
+        for val in vals.iter_mut() {
+            *val = (*val - mx).exp();
+            denom += *val;
+        }
+        for val in vals.iter_mut() {
+            *val /= denom;
+        }
+    }
+}
+
+/// Full-graph single-head GAT forward on the sparse path with
+/// `threads` eval threads (0 = auto); returns (logits, hidden reps).
+/// Output is bit-identical at any thread count.
+pub fn gat_forward_t(
+    g: &Graph,
+    x: &Matrix,
+    params: &[Matrix],
+    normalize: bool,
+    threads: usize,
+) -> Result<(Matrix, Vec<Matrix>)> {
     let layers = layer_views(ModelKind::Gat, params)?;
     let n = g.n();
+    if x.rows != n {
+        // regression guard: mismatched features used to index-panic here
+        return Err(eyre!("features rows {} != n {n}", x.rows));
+    }
+    let threads = resolve_eval_threads(threads, n);
+    let mut att = gat_structure_csr(g);
     let mut h = x.clone();
     let mut hidden = Vec::new();
     for (l, layer) in layers.iter().enumerate() {
         let last = l == layers.len() - 1;
-        let t = h.matmul(layer.w); // (n, d')
+        check_layer_shapes(l, ModelKind::Gat, &h, layer)?;
+        let mut t = Matrix::zeros(n, layer.w.cols);
+        par_matmul_into(&h, layer.w, &mut t, threads);
         let a_src = layer.a_src.unwrap();
         let a_dst = layer.a_dst.unwrap();
-        let s_src: Vec<f32> = (0..n)
-            .map(|v| dot(t.row(v), &a_src.data))
-            .collect();
-        let s_dst: Vec<f32> = (0..n)
-            .map(|v| dot(t.row(v), &a_dst.data))
-            .collect();
-        let d_out = t.cols;
-        let mut z = Matrix::zeros(n, d_out);
-        for v in 0..n {
-            // neighbors ∪ {v}
-            let mut ids: Vec<usize> = vec![v];
-            ids.extend(g.neighbors(v).iter().map(|&u| u as usize));
-            let logits: Vec<f32> = ids
-                .iter()
-                .map(|&u| {
-                    let e = s_src[v] + s_dst[u];
-                    if e > 0.0 {
-                        e
-                    } else {
-                        LEAKY_SLOPE * e
-                    }
-                })
-                .collect();
-            let mx = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-            let exps: Vec<f32> = logits.iter().map(|&e| (e - mx).exp()).collect();
-            let denom: f32 = exps.iter().sum();
-            let zrow = z.row_mut(v);
-            for (&u, &e) in ids.iter().zip(&exps) {
-                let alpha = e / denom;
-                for (o, tval) in zrow.iter_mut().zip(t.row(u)) {
-                    *o += alpha * tval;
-                }
-            }
-            for (o, bv) in zrow.iter_mut().zip(&layer.b.data) {
-                *o += bv;
-            }
-        }
+        let s_src: Vec<f32> = (0..n).map(|v| dot(t.row(v), &a_src.data)).collect();
+        let s_dst: Vec<f32> = (0..n).map(|v| dot(t.row(v), &a_dst.data)).collect();
+        gat_attention_values(&mut att, &s_src, &s_dst, threads);
+        let mut z = Matrix::zeros(n, t.cols);
+        att.spmm_into_threaded(&t, &mut z, threads)?;
+        add_bias_rows(&mut z, &layer.b.data);
         if !last {
             for v in &mut z.data {
                 *v = elu(*v);
@@ -216,7 +375,32 @@ pub fn gat_forward(
     Ok((h, hidden))
 }
 
-/// Dispatch on model kind.
+/// Full-graph GAT forward (single-threaded convenience wrapper).
+pub fn gat_forward(
+    g: &Graph,
+    x: &Matrix,
+    params: &[Matrix],
+    normalize: bool,
+) -> Result<(Matrix, Vec<Matrix>)> {
+    gat_forward_t(g, x, params, normalize, 1)
+}
+
+/// Dispatch on model kind with an explicit eval thread count (0 = auto).
+pub fn forward_t(
+    kind: ModelKind,
+    g: &Graph,
+    x: &Matrix,
+    params: &[Matrix],
+    normalize: bool,
+    threads: usize,
+) -> Result<(Matrix, Vec<Matrix>)> {
+    match kind {
+        ModelKind::Gcn => gcn_forward_t(g, x, params, normalize, threads),
+        ModelKind::Gat => gat_forward_t(g, x, params, normalize, threads),
+    }
+}
+
+/// Dispatch on model kind (single-threaded).
 pub fn forward(
     kind: ModelKind,
     g: &Graph,
@@ -224,10 +408,26 @@ pub fn forward(
     params: &[Matrix],
     normalize: bool,
 ) -> Result<(Matrix, Vec<Matrix>)> {
-    match kind {
-        ModelKind::Gcn => gcn_forward(g, x, params, normalize),
-        ModelKind::Gat => gat_forward(g, x, params, normalize),
+    forward_t(kind, g, x, params, normalize, 1)
+}
+
+/// Parameter list for an explicit `dims` chain, matching
+/// `runtime::init_params`' distributions (Glorot-uniform W, zero b,
+/// 0.1·N(0,1) attention vectors).  Shared by the unit/property tests
+/// and `benches/bench_eval.rs`, which have no artifact spec to derive
+/// shapes from — one copy, so the layout cannot drift from
+/// [`layer_views`].
+pub fn init_params_for_dims(kind: ModelKind, dims: &[usize], rng: &mut Rng) -> Vec<Matrix> {
+    let mut out = Vec::new();
+    for w in dims.windows(2) {
+        out.push(Matrix::glorot(w[0], w[1], rng));
+        out.push(Matrix::zeros(1, w[1]));
+        if kind == ModelKind::Gat {
+            out.push(Matrix::from_fn(1, w[1], |_, _| 0.1 * rng.normal()));
+            out.push(Matrix::from_fn(1, w[1], |_, _| 0.1 * rng.normal()));
+        }
     }
+    out
 }
 
 fn dot(a: &[f32], b: &[f32]) -> f32 {
@@ -246,22 +446,10 @@ fn l2_normalize_rows(m: &mut Matrix) {
 
 #[cfg(test)]
 mod tests {
+    use super::init_params_for_dims as init_params;
     use super::*;
     use crate::graph::registry::load;
     use crate::util::Rng;
-
-    fn init_params(kind: ModelKind, dims: &[usize], rng: &mut Rng) -> Vec<Matrix> {
-        let mut out = Vec::new();
-        for w in dims.windows(2) {
-            out.push(Matrix::glorot(w[0], w[1], rng));
-            out.push(Matrix::zeros(1, w[1]));
-            if kind == ModelKind::Gat {
-                out.push(Matrix::from_fn(1, w[1], |_, _| 0.1 * rng.normal()));
-                out.push(Matrix::from_fn(1, w[1], |_, _| 0.1 * rng.normal()));
-            }
-        }
-        out
-    }
 
     #[test]
     fn gcn_forward_shapes_and_finite() {
@@ -345,5 +533,72 @@ mod tests {
         let flat = vec![Matrix::zeros(2, 2); 4];
         assert_eq!(layer_views(ModelKind::Gcn, &flat).unwrap().len(), 2);
         assert_eq!(layer_views(ModelKind::Gat, &flat).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn forwards_reject_mismatched_feature_rows() {
+        // regression: gat_forward used to index-panic on x.rows != n
+        // where gcn_forward returned Err
+        let ds = load("karate", 0).unwrap();
+        let mut rng = Rng::new(5);
+        let bad = Matrix::zeros(33, 16); // karate has 34 nodes
+        let gcn = init_params(ModelKind::Gcn, &[16, 8, 4], &mut rng);
+        assert!(gcn_forward(&ds.graph, &bad, &gcn, false).is_err());
+        let gat = init_params(ModelKind::Gat, &[16, 8, 4], &mut rng);
+        assert!(gat_forward(&ds.graph, &bad, &gat, false).is_err());
+    }
+
+    #[test]
+    fn forwards_reject_mismatched_layer_dims() {
+        // w1 expects 9 inputs but layer 0 produces 8: Err, not a panic
+        let ds = load("karate", 0).unwrap();
+        let mut rng = Rng::new(6);
+        let mut params = init_params(ModelKind::Gcn, &[16, 8, 4], &mut rng);
+        params[2] = Matrix::glorot(9, 4, &mut rng);
+        assert!(gcn_forward(&ds.graph, &ds.features, &params, false).is_err());
+        // bias length mismatch likewise
+        let mut params = init_params(ModelKind::Gcn, &[16, 8, 4], &mut rng);
+        params[1] = Matrix::zeros(1, 5);
+        assert!(gcn_forward(&ds.graph, &ds.features, &params, false).is_err());
+    }
+
+    #[test]
+    fn sparse_forward_matches_reference_on_karate() {
+        let ds = load("karate", 0).unwrap();
+        let mut rng = Rng::new(8);
+        for kind in [ModelKind::Gcn, ModelKind::Gat] {
+            let params = init_params(kind, &[16, 8, 4], &mut rng);
+            let (want, want_h) =
+                reference::forward_dense(kind, &ds.graph, &ds.features, &params, true).unwrap();
+            for threads in [1usize, 2, 4] {
+                let (got, got_h) =
+                    forward_t(kind, &ds.graph, &ds.features, &params, true, threads).unwrap();
+                assert!(
+                    got.max_abs_diff(&want) < 1e-6,
+                    "{kind:?} logits diverged at {threads} threads"
+                );
+                assert_eq!(got_h.len(), want_h.len());
+                for (a, b) in got_h.iter().zip(&want_h) {
+                    assert!(a.max_abs_diff(b) < 1e-6, "{kind:?} hidden diverged");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_csr_rows_sum_to_seed_weights() {
+        let ds = load("karate", 0).unwrap();
+        let g = &ds.graph;
+        let p = gcn_prop_csr(g);
+        assert_eq!(p.nnz(), g.targets.len() + g.n());
+        for v in 0..g.n() {
+            let mut want = 1.0 / (g.degree(v) + 1) as f32;
+            for &u in g.neighbors(v) {
+                want += g.norm_weight(v, u as usize);
+            }
+            assert!((p.row_sums()[v] - want).abs() < 1e-6);
+        }
+        // entry order: self-loop first
+        assert_eq!(p.row_entries(3).0[0], 3);
     }
 }

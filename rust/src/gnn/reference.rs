@@ -1,0 +1,161 @@
+//! The seed dense-loop forward passes, kept verbatim as a *reference
+//! oracle* for the sparse CSR evaluation path.
+//!
+//! These are the original `gcn_forward`/`gat_forward` implementations:
+//! a per-node loop that walks `Graph::neighbors` directly, allocating a
+//! fresh `Vec` per edge (GCN) or three per node (GAT) in the inner
+//! layer loop.  They are O(edges · d) in *allocations*, which is why
+//! the hot path moved to [`crate::tensor::sparse::CsrMatrix`] SpMM —
+//! but they remain the most literal transcription of the math, so:
+//!
+//! * the property tests check the sparse forward against them on random
+//!   SBM graphs (`tests/integration_eval.rs`), and
+//! * `benches/bench_eval.rs` uses them as the baseline the committed
+//!   `BENCH_eval.json` speedups are measured against.
+//!
+//! Do not "optimize" this module — its value is being the unchanged
+//! seed numerics.
+
+use crate::graph::Graph;
+use crate::tensor::Matrix;
+use crate::{eyre, Result};
+
+use super::{dot, elu, l2_normalize_rows, layer_views, ModelKind, LEAKY_SLOPE};
+
+/// Seed full-graph GCN forward (dense per-edge loop); returns
+/// (logits, per-layer hidden reps).
+pub fn gcn_forward_dense(
+    g: &Graph,
+    x: &Matrix,
+    params: &[Matrix],
+    normalize: bool,
+) -> Result<(Matrix, Vec<Matrix>)> {
+    let layers = layer_views(ModelKind::Gcn, params)?;
+    let n = g.n();
+    if x.rows != n {
+        return Err(eyre!("features rows {} != n {n}", x.rows));
+    }
+    let mut h = x.clone();
+    let mut hidden = Vec::new();
+    for (l, layer) in layers.iter().enumerate() {
+        let last = l == layers.len() - 1;
+        let t = h.matmul(layer.w); // (n, d')
+        let d_out = t.cols;
+        let mut z = Matrix::zeros(n, d_out);
+        for v in 0..n {
+            // self-loop
+            let wv = 1.0 / (g.degree(v) + 1) as f32;
+            let tv = t.row(v).to_vec();
+            {
+                let zrow = z.row_mut(v);
+                for (o, tval) in zrow.iter_mut().zip(&tv) {
+                    *o += wv * tval;
+                }
+            }
+            for &u in g.neighbors(v) {
+                let w = g.norm_weight(v, u as usize);
+                let trow = t.row(u as usize).to_vec();
+                let zrow = z.row_mut(v);
+                for (o, tval) in zrow.iter_mut().zip(&trow) {
+                    *o += w * tval;
+                }
+            }
+            let zrow = z.row_mut(v);
+            for (o, bv) in zrow.iter_mut().zip(&layer.b.data) {
+                *o += bv;
+            }
+        }
+        if !last {
+            for v in &mut z.data {
+                *v = v.max(0.0); // relu
+            }
+            if normalize {
+                l2_normalize_rows(&mut z);
+            }
+            hidden.push(z.clone());
+        }
+        h = z;
+    }
+    Ok((h, hidden))
+}
+
+/// Seed full-graph single-head GAT forward (dense per-node loop);
+/// returns (logits, hidden reps).
+pub fn gat_forward_dense(
+    g: &Graph,
+    x: &Matrix,
+    params: &[Matrix],
+    normalize: bool,
+) -> Result<(Matrix, Vec<Matrix>)> {
+    let layers = layer_views(ModelKind::Gat, params)?;
+    let n = g.n();
+    if x.rows != n {
+        return Err(eyre!("features rows {} != n {n}", x.rows));
+    }
+    let mut h = x.clone();
+    let mut hidden = Vec::new();
+    for (l, layer) in layers.iter().enumerate() {
+        let last = l == layers.len() - 1;
+        let t = h.matmul(layer.w); // (n, d')
+        let a_src = layer.a_src.unwrap();
+        let a_dst = layer.a_dst.unwrap();
+        let s_src: Vec<f32> = (0..n).map(|v| dot(t.row(v), &a_src.data)).collect();
+        let s_dst: Vec<f32> = (0..n).map(|v| dot(t.row(v), &a_dst.data)).collect();
+        let d_out = t.cols;
+        let mut z = Matrix::zeros(n, d_out);
+        for v in 0..n {
+            // neighbors ∪ {v}
+            let mut ids: Vec<usize> = vec![v];
+            ids.extend(g.neighbors(v).iter().map(|&u| u as usize));
+            let logits: Vec<f32> = ids
+                .iter()
+                .map(|&u| {
+                    let e = s_src[v] + s_dst[u];
+                    if e > 0.0 {
+                        e
+                    } else {
+                        LEAKY_SLOPE * e
+                    }
+                })
+                .collect();
+            let mx = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f32> = logits.iter().map(|&e| (e - mx).exp()).collect();
+            let denom: f32 = exps.iter().sum();
+            let zrow = z.row_mut(v);
+            for (&u, &e) in ids.iter().zip(&exps) {
+                let alpha = e / denom;
+                for (o, tval) in zrow.iter_mut().zip(t.row(u)) {
+                    *o += alpha * tval;
+                }
+            }
+            for (o, bv) in zrow.iter_mut().zip(&layer.b.data) {
+                *o += bv;
+            }
+        }
+        if !last {
+            for v in &mut z.data {
+                *v = elu(*v);
+            }
+            if normalize {
+                l2_normalize_rows(&mut z);
+            }
+            hidden.push(z.clone());
+        }
+        h = z;
+    }
+    Ok((h, hidden))
+}
+
+/// Dispatch on model kind (reference path).
+pub fn forward_dense(
+    kind: ModelKind,
+    g: &Graph,
+    x: &Matrix,
+    params: &[Matrix],
+    normalize: bool,
+) -> Result<(Matrix, Vec<Matrix>)> {
+    match kind {
+        ModelKind::Gcn => gcn_forward_dense(g, x, params, normalize),
+        ModelKind::Gat => gat_forward_dense(g, x, params, normalize),
+    }
+}

@@ -10,6 +10,14 @@
 //! Every dataset maps to the AOT artifact config prefix whose padded
 //! shapes fit an M=4 partition (see python/compile/configs.py — the two
 //! sides must stay in lockstep).
+//!
+//! The `-m` ("medium") tiers are eval-scale stand-ins (50k–150k nodes)
+//! for the sparse evaluation path and `benches/bench_eval.rs`: large
+//! enough that the seed dense-loop oracle visibly collapses, still
+//! generatable in seconds.  They have **no AOT artifacts yet** (training
+//! on them errors at manifest lookup) and are deliberately kept out of
+//! the tier-1 test configs — only the benches and explicit CLI use load
+//! them.
 
 use super::generators::{generate_sbm, SbmParams};
 use super::karate::karate;
@@ -35,7 +43,7 @@ pub struct DatasetSpec {
     pub default_parts: usize,
 }
 
-pub const SPECS: [DatasetSpec; 5] = [
+pub const SPECS: [DatasetSpec; 7] = [
     DatasetSpec {
         name: "karate",
         paper_name: "Zachary karate (sanity)",
@@ -106,6 +114,34 @@ pub const SPECS: [DatasetSpec; 5] = [
         artifact: "products_s",
         default_parts: 4,
     },
+    DatasetSpec {
+        name: "arxiv-m",
+        paper_name: "OGB-Arxiv (eval scale)",
+        nodes: 65536,
+        n_class: 40,
+        d_in: 128,
+        intra_degree: 10.0,
+        inter_degree: 3.0,
+        skew: 0.5,
+        train_frac: 0.537,
+        val_frac: 0.176,
+        artifact: "arxiv_m", // not built yet: eval/bench tier only
+        default_parts: 8,
+    },
+    DatasetSpec {
+        name: "reddit-m",
+        paper_name: "Reddit (eval scale)",
+        nodes: 131072,
+        n_class: 41,
+        d_in: 300,
+        intra_degree: 60.0,
+        inter_degree: 40.0, // paper Reddit averages ~100 neighbors
+        skew: 0.6,
+        train_frac: 0.66,
+        val_frac: 0.10,
+        artifact: "reddit_m", // not built yet: eval/bench tier only
+        default_parts: 8,
+    },
 ];
 
 pub fn spec(name: &str) -> crate::Result<&'static DatasetSpec> {
@@ -166,6 +202,20 @@ mod tests {
     #[test]
     fn unknown_dataset_errors() {
         assert!(load("nope", 0).is_err());
+    }
+
+    #[test]
+    fn medium_tiers_registered_but_not_generated_here() {
+        // the -m tiers exist (bench + CLI use them) but stay out of
+        // tier-1 generation: 50k+-node SBMs are bench-only workloads
+        for name in ["arxiv-m", "reddit-m"] {
+            let s = spec(name).unwrap();
+            assert!(s.nodes >= 50_000, "{name} is an eval-scale tier");
+            assert!(s.artifact.ends_with("_m"));
+        }
+        // density ranking preserved at scale: reddit ≫ arxiv
+        let (a, r) = (spec("arxiv-m").unwrap(), spec("reddit-m").unwrap());
+        assert!(r.intra_degree + r.inter_degree > 3.0 * (a.intra_degree + a.inter_degree));
     }
 
     #[test]

@@ -15,12 +15,20 @@
 //!   including padding, so no softmax row is empty);
 //! * padded features `x`, labels `y`, and per-split masks.
 //!
+//! `p_in`/`p_out` are held as [`CsrMatrix`] and assembled in O(edges):
+//! the old dense assembly allocated O(S_pad²) per plan, which is what
+//! capped plan construction at toy scale.  They densify only at
+//! literal-packing time ([`crate::runtime::pack_csr`]) — the packed
+//! bytes are identical to the seed dense construction, so the AOT
+//! artifact contract is unchanged.
+//!
 //! Zero padding is semantically inert by construction: the Python test
 //! suite asserts padding invariance of the train step
 //! (`test_train_step.py::test_padding_invariance`).
 
 use crate::graph::{Dataset, Split};
 use crate::partition::Partition;
+use crate::tensor::sparse::{CsrBuilder, CsrMatrix};
 use crate::tensor::Matrix;
 use crate::{eyre, Result};
 
@@ -46,8 +54,10 @@ pub struct SubgraphPlan {
     pub dropped_edges: usize,
     pub s_pad: usize,
     pub b_pad: usize,
-    pub p_in: Matrix,
-    pub p_out: Matrix,
+    /// (s_pad, s_pad) in-subgraph propagation, sparse (see module doc).
+    pub p_in: CsrMatrix,
+    /// (s_pad, b_pad) halo propagation, sparse.
+    pub p_out: CsrMatrix,
     /// (s_pad + b_pad, d_in): own rows then halo rows, zero padding.
     pub x: Matrix,
     /// (s_pad,) labels, 0 for padding.
@@ -145,18 +155,21 @@ pub fn build_plan(
         halo_local.insert(v, i);
     }
 
-    // propagation matrices
-    let mut p_in = Matrix::zeros(s_pad, s_pad);
-    let mut p_out = Matrix::zeros(s_pad, b_pad);
+    // propagation matrices: sparse row-by-row assembly, O(edges) — the
+    // dense O(S_pad²) buffers only ever exist transiently at literal
+    // packing (`runtime::pack_csr` scatters the same values into the
+    // same slots, so the packed bytes match the seed construction)
+    let mut p_in = CsrBuilder::new(s_pad, s_pad);
+    let mut p_out = CsrBuilder::new(s_pad, b_pad);
     for (i, &v) in own.iter().enumerate() {
         match kind {
             PropKind::GcnNormalized => {
                 // self-loop weight 1 / (d_v + 1)
                 let dv = (g.degree(v as usize) + 1) as f32;
-                p_in.set(i, i, 1.0 / dv);
+                p_in.push(i as u32, 1.0 / dv);
             }
             PropKind::GatMask => {
-                p_in.set(i, i, 1.0);
+                p_in.push(i as u32, 1.0);
             }
         }
         for &u in g.neighbors(v as usize) {
@@ -165,19 +178,25 @@ pub fn build_plan(
                 PropKind::GatMask => 1.0,
             };
             if let Some(&j) = own_local.get(&u) {
-                p_in.set(i, j, w);
+                p_in.push(j as u32, w);
             } else if let Some(&j) = halo_local.get(&u) {
-                p_out.set(i, j, w);
+                p_out.push(j as u32, w);
             }
             // else: truncated halo neighbor, edge dropped (counted above)
         }
+        p_in.finish_row();
+        p_out.finish_row();
     }
     if kind == PropKind::GatMask {
         // self-loops on padding rows keep every softmax row non-empty
         for i in own.len()..s_pad {
-            p_in.set(i, i, 1.0);
+            p_in.push(i as u32, 1.0);
+            p_in.finish_row();
         }
     }
+    // unfinished rows (GCN padding) densify to all-zero rows
+    let p_in = p_in.finish();
+    let p_out = p_out.finish();
 
     // padded features
     let d = ds.d_in();
@@ -274,8 +293,8 @@ mod tests {
                 for &u in g.neighbors(vd) {
                     want += g.norm_weight(vd, u as usize);
                 }
-                let got: f32 = plan.p_in.row(i).iter().sum::<f32>()
-                    + plan.p_out.row(i).iter().sum::<f32>();
+                let got: f32 = plan.p_in.row_entries(i).1.iter().sum::<f32>()
+                    + plan.p_out.row_entries(i).1.iter().sum::<f32>();
                 assert!((got - want).abs() < 1e-5, "row {v}: {got} vs {want}");
             }
         }
@@ -288,12 +307,13 @@ mod tests {
             for i in 0..plan.s_pad {
                 assert_eq!(plan.p_in.get(i, i), 1.0, "diag row {i}");
             }
+            // stored entries are exactly 1.0 (all other slots densify to 0)
             assert!(plan
                 .p_in
-                .data
+                .values
                 .iter()
-                .chain(&plan.p_out.data)
-                .all(|&v| v == 0.0 || v == 1.0));
+                .chain(&plan.p_out.values)
+                .all(|&v| v == 1.0));
         }
     }
 
@@ -303,8 +323,8 @@ mod tests {
         for plan in &plans {
             let s_real = plan.n_own();
             for i in s_real..plan.s_pad {
-                assert!(plan.p_in.row(i).iter().all(|&v| v == 0.0));
-                assert!(plan.p_out.row(i).iter().all(|&v| v == 0.0));
+                assert!(plan.p_in.row_entries(i).0.is_empty());
+                assert!(plan.p_out.row_entries(i).0.is_empty());
                 assert!(plan.x.row(i).iter().all(|&v| v == 0.0));
                 assert_eq!(plan.train_mask[i], 0.0);
             }
@@ -360,6 +380,67 @@ mod tests {
         let ds = load("karate", 0).unwrap();
         let p = partition(&ds.graph, 1, PartitionAlgo::Metis, 0);
         assert!(build_plan(&ds, &p, 0, 16, 16, PropKind::GcnNormalized).is_err());
+    }
+
+    /// The seed's dense p_in/p_out assembly, kept verbatim: the sparse
+    /// build must densify to *byte-identical* matrices (the AOT
+    /// artifact contract — padded literals must not move).
+    fn dense_reference(
+        ds: &Dataset,
+        plan: &SubgraphPlan,
+        kind: PropKind,
+    ) -> (Matrix, Matrix) {
+        let g = &ds.graph;
+        let mut p_in = Matrix::zeros(plan.s_pad, plan.s_pad);
+        let mut p_out = Matrix::zeros(plan.s_pad, plan.b_pad);
+        for (i, &v) in plan.own.iter().enumerate() {
+            match kind {
+                PropKind::GcnNormalized => {
+                    let dv = (g.degree(v as usize) + 1) as f32;
+                    p_in.set(i, i, 1.0 / dv);
+                }
+                PropKind::GatMask => p_in.set(i, i, 1.0),
+            }
+            for &u in g.neighbors(v as usize) {
+                let w = match kind {
+                    PropKind::GcnNormalized => g.norm_weight(v as usize, u as usize),
+                    PropKind::GatMask => 1.0,
+                };
+                if let Ok(j) = plan.own.binary_search(&u) {
+                    p_in.set(i, j, w);
+                } else if let Ok(j) = plan.halo.binary_search(&u) {
+                    p_out.set(i, j, w);
+                }
+            }
+        }
+        if kind == PropKind::GatMask {
+            for i in plan.own.len()..plan.s_pad {
+                p_in.set(i, i, 1.0);
+            }
+        }
+        (p_in, p_out)
+    }
+
+    #[test]
+    fn sparse_build_densifies_byte_identical_to_seed() {
+        for kind in [PropKind::GcnNormalized, PropKind::GatMask] {
+            let ds = load("karate", 0).unwrap();
+            let p = partition(&ds.graph, 2, PartitionAlgo::Metis, 0);
+            // include a truncating configuration (b_pad = 3)
+            for b_pad in [32usize, 3] {
+                for m in 0..2 {
+                    let plan = build_plan(&ds, &p, m, 32, b_pad, kind).unwrap();
+                    let (want_in, want_out) = dense_reference(&ds, &plan, kind);
+                    let got_in = plan.p_in.to_dense();
+                    let got_out = plan.p_out.to_dense();
+                    let bits = |m: &Matrix| -> Vec<u32> {
+                        m.data.iter().map(|v| v.to_bits()).collect()
+                    };
+                    assert_eq!(bits(&got_in), bits(&want_in), "{kind:?} b_pad={b_pad} p_in");
+                    assert_eq!(bits(&got_out), bits(&want_out), "{kind:?} b_pad={b_pad} p_out");
+                }
+            }
+        }
     }
 
     #[test]

@@ -66,18 +66,38 @@
 //! `RunResult::total_wall` therefore measures real parallel wall-clock
 //! (see `benches/bench_parallel.rs` for the scaling curve).
 //!
+//! ## Sparse evaluation path
+//!
+//! Full-graph evaluation and plan construction run on
+//! [`tensor::sparse::CsrMatrix`], not dense matrices:
+//!
+//! * [`gnn`]'s GCN/GAT forwards build the normalized propagation (or
+//!   attention-structure) CSR **once** and run every layer as an
+//!   allocation-free SpMM + bias + activation; the SpMM and the blocked
+//!   dense transform ([`tensor::par_matmul_into`]) parallelize over row
+//!   chunks with **bit-identical output at any thread count**
+//!   (`RunConfig::threads` drives `TrainContext::global_eval` too).
+//!   The seed dense-loop oracle survives as [`gnn::reference`], the
+//!   cross-check the property tests and `benches/bench_eval.rs` run
+//!   against (baseline: `BENCH_eval.json`).
+//! * [`halo`] assembles `p_in`/`p_out` sparsely in O(edges) and
+//!   densifies only inside `runtime::pack_csr`, byte-identical to the
+//!   seed dense literals — the AOT artifact contract is unchanged.
+//! * [`graph::registry`] adds eval-scale `-m` tiers (`arxiv-m` 65k,
+//!   `reddit-m` 131k nodes) that only the benches and explicit CLI use.
+//!
 //! Module map (see DESIGN.md for the full inventory):
 //!
 //! | module | role |
 //! |---|---|
-//! | [`tensor`] | dense f32 matrix used across the coordinator |
+//! | [`tensor`] | dense f32 matrix + sparse CSR (SpMM) used across the coordinator |
 //! | [`graph`] | CSR graphs, synthetic dataset generators, splits |
 //! | [`partition`] | METIS-style multilevel partitioner + baselines |
 //! | [`halo`] | subgraph plans: halo extraction, padded `P_in`/`P_out` |
 //! | [`kvs`] | sharded stale-representation store (pull/push, checkpoint dump/restore) |
 //! | [`ps`] | parameter server + optimizers + v1/v2 checkpoints |
 //! | [`runtime`] | PJRT executable loading + literal packing |
-//! | [`gnn`] | pure-Rust CSR GCN/GAT inference oracle + F1 metrics |
+//! | [`gnn`] | pure-Rust sparse GCN/GAT inference oracle (+ seed reference) + F1 metrics |
 //! | [`costmodel`] | virtual-time device/network model (speedup figures) |
 //! | [`coordinator`] | sessions, hooks/driver, sync/async schedulers, parallel engine, telemetry |
 //! | [`baselines`] | LLCG-like and DGL-like comparison frameworks (sessions too) |

@@ -22,6 +22,7 @@ use std::sync::{Arc, Mutex};
 pub use manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
 
 use crate::halo::SubgraphPlan;
+use crate::tensor::sparse::CsrMatrix;
 use crate::tensor::Matrix;
 use crate::util::{lock_unpoisoned, Rng};
 use crate::{eyre, Result};
@@ -188,19 +189,53 @@ pub fn pack_matrix(spec: &TensorSpec, m: &Matrix) -> Result<xla::Literal> {
             spec.shape
         ));
     }
+    // 2-D specs demand an exact shape match: equal element count alone
+    // once let a (1,6) pass against a (2,3) spec and silently reshape.
     if spec.shape.len() == 2 && !(m.rows == spec.shape[0] && m.cols == spec.shape[1]) {
-        // allow (1, n) <-> (n,) style reshapes only when unambiguous
-        if m.rows != 1 {
-            return Err(eyre!(
-                "{}: matrix {}x{} vs spec {:?}",
-                spec.name,
-                m.rows,
-                m.cols,
-                spec.shape
-            ));
-        }
+        return Err(eyre!(
+            "{}: matrix {}x{} vs spec {:?}",
+            spec.name,
+            m.rows,
+            m.cols,
+            spec.shape
+        ));
+    }
+    // 1-D specs accept only the unambiguous (1, n) <-> (n,) flatten.
+    if spec.shape.len() == 1 && m.rows != 1 {
+        return Err(eyre!(
+            "{}: matrix {}x{} vs 1-D spec {:?} (only (1, n) flattens)",
+            spec.name,
+            m.rows,
+            m.cols,
+            spec.shape
+        ));
     }
     let lit = xla::Literal::vec1(&m.data);
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| eyre!("reshape {}: {e}", spec.name))
+}
+
+/// Densify a sparse plan matrix (p_in / p_out) straight into a literal
+/// with the spec's 2-D shape — the only point where propagation
+/// matrices go dense.  Scattering writes each stored entry into its
+/// slot of a zero buffer, so the packed bytes are identical to packing
+/// the seed's dense construction.
+pub fn pack_csr(spec: &TensorSpec, m: &CsrMatrix) -> Result<xla::Literal> {
+    if spec.dtype != DType::F32 {
+        return Err(eyre!("{}: expected f32", spec.name));
+    }
+    if spec.shape.len() != 2 || spec.shape[0] != m.rows || spec.shape[1] != m.cols {
+        return Err(eyre!(
+            "{}: csr {}x{} vs spec {:?}",
+            spec.name,
+            m.rows,
+            m.cols,
+            spec.shape
+        ));
+    }
+    let mut flat = vec![0f32; m.rows * m.cols];
+    m.scatter_into(&mut flat);
+    let lit = xla::Literal::vec1(&flat);
     let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
     lit.reshape(&dims).map_err(|e| eyre!("reshape {}: {e}", spec.name))
 }
@@ -299,9 +334,9 @@ pub fn pack_step_inputs(
     let mut idx = 0usize;
     lits.push(pack_matrix(&spec.inputs[idx], &plan.x)?);
     idx += 1;
-    lits.push(pack_matrix(&spec.inputs[idx], &plan.p_in)?);
+    lits.push(pack_csr(&spec.inputs[idx], &plan.p_in)?);
     idx += 1;
-    lits.push(pack_matrix(&spec.inputs[idx], &plan.p_out)?);
+    lits.push(pack_csr(&spec.inputs[idx], &plan.p_out)?);
     idx += 1;
     for s in stale {
         lits.push(pack_matrix(&spec.inputs[idx], s)?);
@@ -409,8 +444,8 @@ pub fn pack_static_inputs(
     let n_inputs = spec.inputs.len();
     Ok(StaticInputs {
         x: pack_matrix(&spec.inputs[0], &plan.x)?.into(),
-        p_in: pack_matrix(&spec.inputs[1], &plan.p_in)?.into(),
-        p_out: pack_matrix(&spec.inputs[2], &plan.p_out)?.into(),
+        p_in: pack_csr(&spec.inputs[1], &plan.p_in)?.into(),
+        p_out: pack_csr(&spec.inputs[2], &plan.p_out)?.into(),
         y: pack_i32(&spec.inputs[n_inputs - 2], &plan.y)?.into(),
         mask: pack_f32(&spec.inputs[n_inputs - 1], mask)?.into(),
     })
@@ -504,9 +539,40 @@ mod tests {
         assert!(pack_matrix(&spec, &Matrix::zeros(2, 3)).is_ok());
         assert!(pack_matrix(&spec, &Matrix::zeros(3, 2)).is_err());
         assert!(pack_matrix(&spec, &Matrix::zeros(2, 2)).is_err());
-        // (1, n) flattens into (n,) specs
+        // regression: equal element count must NOT pass a 2-D spec with
+        // a different shape (a (1,6) was silently reshaped to (2,3))
+        assert!(pack_matrix(&spec, &Matrix::zeros(1, 6)).is_err());
+        assert!(pack_matrix(&spec, &Matrix::zeros(6, 1)).is_err());
+        // (1, n) flattens into (n,) specs — the only allowed reshape
         let vecspec = spec1("b", vec![6], DType::F32);
         assert!(pack_matrix(&vecspec, &Matrix::zeros(1, 6)).is_ok());
+        assert!(pack_matrix(&vecspec, &Matrix::zeros(6, 1)).is_err());
+        assert!(pack_matrix(&vecspec, &Matrix::zeros(2, 3)).is_err());
+    }
+
+    #[test]
+    fn pack_csr_matches_dense_packing() {
+        use crate::tensor::sparse::CsrBuilder;
+        let spec = spec1("p", vec![3, 4], DType::F32);
+        let mut b = CsrBuilder::new(3, 4);
+        b.push(1, 0.5);
+        b.push(3, -2.0);
+        b.finish_row();
+        b.finish_row();
+        b.push(0, 1.25);
+        b.finish_row();
+        let csr = b.finish();
+        let lit = pack_csr(&spec, &csr).unwrap();
+        let dense_lit = pack_matrix(&spec, &csr.to_dense()).unwrap();
+        assert_eq!(
+            lit.to_vec::<f32>().unwrap(),
+            dense_lit.to_vec::<f32>().unwrap()
+        );
+        // shape must match the spec exactly
+        let bad = spec1("p", vec![4, 3], DType::F32);
+        assert!(pack_csr(&bad, &csr).is_err());
+        let one_d = spec1("p", vec![12], DType::F32);
+        assert!(pack_csr(&one_d, &csr).is_err());
     }
 
     #[test]

@@ -6,6 +6,8 @@
 //! ([`crate::gnn`]) and padded propagation-matrix construction
 //! ([`crate::halo`]).
 
+pub mod sparse;
+
 use crate::util::Rng;
 
 /// Dense row-major f32 matrix.
@@ -99,13 +101,44 @@ impl Matrix {
         out
     }
 
+    /// `out = self @ other` without allocating: the blocked kernel used
+    /// by the sparse evaluation path.  Output columns are processed in
+    /// register-resident blocks so each output element is written once
+    /// (the seed [`Matrix::matmul`] reloads and restores the whole
+    /// output row on every k step).  Per output element the accumulation
+    /// order is still k-ascending, so results match `matmul` except for
+    /// entries where `matmul`'s zero-skip elides an exact `+ 0.0`.
+    pub fn matmul_into(&self, other: &Matrix, out: &mut Matrix) {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        assert!(
+            out.rows == self.rows && out.cols == other.cols,
+            "matmul_into out shape mismatch"
+        );
+        for i in 0..self.rows {
+            matmul_row(
+                self.row(i),
+                &other.data,
+                other.cols,
+                &mut out.data[i * other.cols..(i + 1) * other.cols],
+            );
+        }
+    }
+
     pub fn transpose(&self) -> Matrix {
         Matrix::from_fn(self.cols, self.rows, |r, c| self.get(c, r))
     }
 
-    /// self += alpha * other
+    /// self += alpha * other.  Shapes must match exactly — equal flat
+    /// length alone once let a (2,3) accumulate into a (3,2) silently.
     pub fn add_scaled(&mut self, other: &Matrix, alpha: f32) {
-        assert_eq!(self.data.len(), other.data.len(), "add_scaled shape mismatch");
+        assert!(
+            self.rows == other.rows && self.cols == other.cols,
+            "add_scaled shape mismatch: {}x{} += {}x{}",
+            self.rows,
+            self.cols,
+            other.rows,
+            other.cols
+        );
         for (a, b) in self.data.iter_mut().zip(&other.data) {
             *a += alpha * b;
         }
@@ -121,9 +154,17 @@ impl Matrix {
         self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
     }
 
-    /// Max |a - b| across entries.
+    /// Max |a - b| across entries.  Shapes must match exactly (not just
+    /// flat length — comparing a (2,3) against a (3,2) is a bug).
     pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
-        assert_eq!(self.data.len(), other.data.len());
+        assert!(
+            self.rows == other.rows && self.cols == other.cols,
+            "max_abs_diff shape mismatch: {}x{} vs {}x{}",
+            self.rows,
+            self.cols,
+            other.rows,
+            other.cols
+        );
         self.data
             .iter()
             .zip(&other.data)
@@ -150,6 +191,66 @@ impl Matrix {
     pub fn is_finite(&self) -> bool {
         self.data.iter().all(|v| v.is_finite())
     }
+}
+
+/// Column-block width of the dense row kernel: 16 f32 accumulators live
+/// in registers across the whole k loop (4×4-wide SSE, or 2×8-wide AVX).
+const MM_BLOCK: usize = 16;
+
+/// One output row of `a_row @ b`, column-blocked.  For each block of 16
+/// output columns the partial sums stay in a register-resident array
+/// across the entire k loop; `b`'s rows stream from cache.  Accumulation
+/// over k is in ascending order for every output element regardless of
+/// blocking, which is what keeps the threaded matmul bit-deterministic.
+fn matmul_row(a_row: &[f32], b: &[f32], b_cols: usize, out_row: &mut [f32]) {
+    let mut j = 0;
+    while j < b_cols {
+        let blk = MM_BLOCK.min(b_cols - j);
+        let mut acc = [0f32; MM_BLOCK];
+        for (k, &av) in a_row.iter().enumerate() {
+            let brow = &b[k * b_cols + j..k * b_cols + j + blk];
+            for (a, &bv) in acc[..blk].iter_mut().zip(brow) {
+                *a += av * bv;
+            }
+        }
+        out_row[j..j + blk].copy_from_slice(&acc[..blk]);
+        j += blk;
+    }
+}
+
+/// Multithreaded `out = a @ b` on scoped threads: `a`'s rows (and the
+/// matching output rows) are split into contiguous chunks, one per
+/// thread.  Every output row is written by exactly one thread and the
+/// per-element accumulation order is fixed (k-ascending), so the result
+/// is **bit-identical at any thread count** — the evaluation-side
+/// counterpart of the training engine's determinism guarantee.
+pub fn par_matmul_into(a: &Matrix, b: &Matrix, out: &mut Matrix, threads: usize) {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+    assert!(
+        out.rows == a.rows && out.cols == b.cols,
+        "par_matmul_into out shape mismatch"
+    );
+    let threads = threads.clamp(1, a.rows.max(1));
+    if threads == 1 || a.cols == 0 || b.cols == 0 {
+        return a.matmul_into(b, out);
+    }
+    let chunk = a.rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (a_rows, out_rows) in a
+            .data
+            .chunks(chunk * a.cols)
+            .zip(out.data.chunks_mut(chunk * b.cols))
+        {
+            s.spawn(move || {
+                for (ar, or) in a_rows
+                    .chunks_exact(a.cols)
+                    .zip(out_rows.chunks_exact_mut(b.cols))
+                {
+                    matmul_row(ar, &b.data, b.cols, or);
+                }
+            });
+        }
+    });
 }
 
 #[cfg(test)]
@@ -218,5 +319,56 @@ mod tests {
         let a = Matrix::zeros(2, 3);
         let b = Matrix::zeros(2, 3);
         let _ = a.matmul(&b);
+    }
+
+    #[test]
+    #[should_panic(expected = "add_scaled shape mismatch")]
+    fn add_scaled_rejects_transposed_shape() {
+        // same flat length, different shape: must not accumulate
+        let mut a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(3, 2);
+        a.add_scaled(&b, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "max_abs_diff shape mismatch")]
+    fn max_abs_diff_rejects_transposed_shape() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(3, 2);
+        let _ = a.max_abs_diff(&b);
+    }
+
+    #[test]
+    fn matmul_into_matches_matmul() {
+        let mut rng = Rng::new(13);
+        // cols crossing the 16-wide block boundary, incl. exact multiple
+        for (m, k, n) in [(3, 5, 4), (7, 11, 16), (5, 9, 17), (4, 2, 33), (1, 1, 1)] {
+            let a = Matrix::from_fn(m, k, |_, _| rng.uniform(-1.0, 1.0));
+            let b = Matrix::from_fn(k, n, |_, _| rng.uniform(-1.0, 1.0));
+            let want = a.matmul(&b);
+            let mut got = Matrix::zeros(m, n);
+            a.matmul_into(&b, &mut got);
+            assert!(got.max_abs_diff(&want) < 1e-6, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn par_matmul_bit_identical_across_threads() {
+        let mut rng = Rng::new(17);
+        let a = Matrix::from_fn(37, 23, |_, _| rng.uniform(-1.0, 1.0));
+        let b = Matrix::from_fn(23, 19, |_, _| rng.uniform(-1.0, 1.0));
+        let mut reference = Matrix::zeros(37, 19);
+        a.matmul_into(&b, &mut reference);
+        for threads in [1, 2, 3, 4, 8, 64] {
+            let mut out = Matrix::zeros(37, 19);
+            par_matmul_into(&a, &b, &mut out, threads);
+            assert!(
+                out.data
+                    .iter()
+                    .zip(&reference.data)
+                    .all(|(x, y)| x.to_bits() == y.to_bits()),
+                "threads={threads} diverged"
+            );
+        }
     }
 }

@@ -1,0 +1,511 @@
+//! Sparse CSR matrices and the allocation-free SpMM kernel behind the
+//! full-graph evaluation path.
+//!
+//! The dense [`Matrix`](super::Matrix) is the right shape for the padded
+//! AOT artifacts, but the *global* propagation matrix of a 100k-node
+//! graph is ~10⁻⁴ dense — materializing it (or walking the graph with a
+//! per-edge `Vec` allocation, as the seed oracle did) collapses long
+//! before ROADMAP scale.  [`CsrMatrix`] stores only the nonzeros and
+//! [`CsrMatrix::spmm_into`] runs `out = self × dense` without a single
+//! allocation in the loop.
+//!
+//! ## Determinism contract
+//!
+//! [`CsrMatrix::spmm_into_threaded`] parallelizes over *contiguous row
+//! chunks* (balanced by nonzero count): every output row is written by
+//! exactly one thread, and within a row the accumulation order is the
+//! CSR entry order regardless of chunking.  Results are therefore
+//! **bit-identical at any thread count** — the same guarantee the
+//! coordinator's parallel engine (`coordinator::engine`) established for
+//! training, extended here to evaluation.
+//!
+//! Entry order within a row is whatever the builder pushed — it is part
+//! of the numeric contract (f32 addition is non-associative), so the
+//! GNN builders deliberately push the self-loop first and neighbors in
+//! ascending id order to reproduce the seed oracle's summation order.
+
+use super::Matrix;
+use crate::{eyre, Result};
+
+/// Compressed-sparse-row f32 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row offsets into `col_idx`/`values`, length `rows + 1`.
+    pub row_ptr: Vec<usize>,
+    /// Column index of each nonzero.
+    pub col_idx: Vec<u32>,
+    /// Value of each nonzero (row-major by `row_ptr`).
+    pub values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Assemble from raw CSR arrays, validating every structural
+    /// invariant (monotone offsets, column bounds, matching lengths).
+    pub fn new(
+        rows: usize,
+        cols: usize,
+        row_ptr: Vec<usize>,
+        col_idx: Vec<u32>,
+        values: Vec<f32>,
+    ) -> Result<Self> {
+        if row_ptr.len() != rows + 1 {
+            return Err(eyre!("row_ptr len {} != rows + 1 ({})", row_ptr.len(), rows + 1));
+        }
+        if row_ptr[0] != 0 || *row_ptr.last().unwrap() != col_idx.len() {
+            return Err(eyre!("row_ptr must span [0, nnz={}]", col_idx.len()));
+        }
+        if row_ptr.windows(2).any(|w| w[0] > w[1]) {
+            return Err(eyre!("row_ptr not monotone"));
+        }
+        if col_idx.len() != values.len() {
+            return Err(eyre!("col_idx len {} != values len {}", col_idx.len(), values.len()));
+        }
+        if let Some(&c) = col_idx.iter().find(|&&c| c as usize >= cols) {
+            return Err(eyre!("column {c} out of range (cols = {cols})"));
+        }
+        // duplicate columns in a row would make SpMM (sums entries) and
+        // densification (last write wins) disagree about the matrix
+        for r in 0..rows {
+            let row = &col_idx[row_ptr[r]..row_ptr[r + 1]];
+            for (i, c) in row.iter().enumerate() {
+                if row[..i].contains(c) {
+                    return Err(eyre!("duplicate column {c} in row {r}"));
+                }
+            }
+        }
+        Ok(CsrMatrix { rows, cols, row_ptr, col_idx, values })
+    }
+
+    /// All-zero matrix (no stored entries).
+    pub fn empty(rows: usize, cols: usize) -> Self {
+        CsrMatrix {
+            rows,
+            cols,
+            row_ptr: vec![0; rows + 1],
+            col_idx: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    /// Sparsify a dense matrix (exact zeros dropped).  Test/bench
+    /// convenience — production builders construct CSR directly.
+    pub fn from_dense(m: &Matrix) -> Self {
+        let mut b = CsrBuilder::new(m.rows, m.cols);
+        for r in 0..m.rows {
+            for (c, &v) in m.row(r).iter().enumerate() {
+                if v != 0.0 {
+                    b.push(c as u32, v);
+                }
+            }
+            b.finish_row();
+        }
+        b.finish()
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// (column indices, values) of row `r`.
+    #[inline]
+    pub fn row_entries(&self, r: usize) -> (&[u32], &[f32]) {
+        let (lo, hi) = (self.row_ptr[r], self.row_ptr[r + 1]);
+        (&self.col_idx[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Point lookup (linear scan of the row — fine for tests and
+    /// plan inspection, not meant for hot loops).
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        let (cols, vals) = self.row_entries(r);
+        cols.iter()
+            .position(|&ci| ci as usize == c)
+            .map_or(0.0, |i| vals[i])
+    }
+
+    /// Densify.  Scatter order is irrelevant for the result (each entry
+    /// has a distinct slot), so this reproduces the dense construction
+    /// byte-for-byte when the values were computed identically.
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        self.scatter_into(&mut m.data);
+        m
+    }
+
+    /// Scatter the nonzeros into a caller-provided row-major buffer of
+    /// `rows * cols` zeros (the literal-packing path densifies straight
+    /// into the staging buffer instead of an intermediate `Matrix`).
+    pub fn scatter_into(&self, flat: &mut [f32]) {
+        assert_eq!(flat.len(), self.rows * self.cols, "scatter buffer shape mismatch");
+        for r in 0..self.rows {
+            let (cols, vals) = self.row_entries(r);
+            let base = r * self.cols;
+            for (&c, &v) in cols.iter().zip(vals) {
+                flat[base + c as usize] = v;
+            }
+        }
+    }
+
+    /// Per-row sums (plan-invariant checks; mirrors dense `row().sum()`).
+    pub fn row_sums(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|r| self.row_entries(r).1.iter().sum())
+            .collect()
+    }
+
+    fn check_spmm_shapes(&self, dense: &Matrix, out: &Matrix) -> Result<()> {
+        if self.cols != dense.rows {
+            return Err(eyre!("spmm: lhs cols {} != rhs rows {}", self.cols, dense.rows));
+        }
+        if out.rows != self.rows || out.cols != dense.cols {
+            return Err(eyre!(
+                "spmm: out is {}x{}, want {}x{}",
+                out.rows,
+                out.cols,
+                self.rows,
+                dense.cols
+            ));
+        }
+        Ok(())
+    }
+
+    /// `out = self × dense`, overwriting `out`.  Allocation-free: the
+    /// only writes are into `out`'s existing buffer.
+    pub fn spmm_into(&self, dense: &Matrix, out: &mut Matrix) -> Result<()> {
+        self.check_spmm_shapes(dense, out)?;
+        spmm_rows(&self.row_ptr, &self.col_idx, &self.values, dense, &mut out.data);
+        Ok(())
+    }
+
+    /// Multithreaded `out = self × dense` on scoped threads.  Rows are
+    /// split into `threads` contiguous chunks balanced by nonzero count;
+    /// each output row is written by exactly one thread, so the result
+    /// is bit-identical to [`CsrMatrix::spmm_into`] at any thread count.
+    pub fn spmm_into_threaded(
+        &self,
+        dense: &Matrix,
+        out: &mut Matrix,
+        threads: usize,
+    ) -> Result<()> {
+        self.check_spmm_shapes(dense, out)?;
+        let bounds = balanced_row_chunks(&self.row_ptr, threads);
+        if bounds.len() <= 2 {
+            // single chunk: skip the thread scope entirely
+            return self.spmm_into(dense, out);
+        }
+        let (row_ptr, col_idx, values) =
+            (&self.row_ptr[..], &self.col_idx[..], &self.values[..]);
+        std::thread::scope(|s| {
+            let mut rest: &mut [f32] = &mut out.data;
+            for w in bounds.windows(2) {
+                let (lo, hi) = (w[0], w[1]);
+                let (chunk, tail) =
+                    std::mem::take(&mut rest).split_at_mut((hi - lo) * dense.cols);
+                rest = tail;
+                s.spawn(move || {
+                    spmm_rows(&row_ptr[lo..=hi], col_idx, values, dense, chunk);
+                });
+            }
+        });
+        Ok(())
+    }
+}
+
+/// Row kernel shared by the sequential and threaded paths.  `offsets`
+/// is the row_ptr slice for exactly the rows being computed (its values
+/// are global indices into `col_idx`/`values`); `out_rows` is those
+/// rows' slice of the output buffer.
+fn spmm_rows(
+    offsets: &[usize],
+    col_idx: &[u32],
+    values: &[f32],
+    dense: &Matrix,
+    out_rows: &mut [f32],
+) {
+    let d = dense.cols;
+    for (r, w) in offsets.windows(2).enumerate() {
+        let orow = &mut out_rows[r * d..(r + 1) * d];
+        orow.fill(0.0);
+        for e in w[0]..w[1] {
+            let a = values[e];
+            let drow = dense.row(col_idx[e] as usize);
+            for (o, x) in orow.iter_mut().zip(drow) {
+                *o += a * x;
+            }
+        }
+    }
+}
+
+/// Split `0..rows` into at most `threads` contiguous chunks with
+/// roughly equal nonzero counts (rows of a power-law graph vary wildly
+/// in degree; equal-row chunks would leave threads idle).  Returns the
+/// chunk boundaries `[0, b1, ..., rows]`.  Deterministic in the
+/// structure and thread count only — and since every row is computed
+/// independently, the *result* does not depend on the boundaries.
+pub fn balanced_row_chunks(row_ptr: &[usize], threads: usize) -> Vec<usize> {
+    let rows = row_ptr.len() - 1;
+    let threads = threads.clamp(1, rows.max(1));
+    let nnz = *row_ptr.last().unwrap();
+    let mut bounds = vec![0usize];
+    if rows == 0 {
+        bounds.push(0);
+        return bounds;
+    }
+    let mut next_target = 1usize;
+    for r in 0..rows {
+        // close the chunk once it reached its share of the nonzeros
+        // (+ its share of rows, so empty-row regions still split)
+        let share = (nnz * next_target) / threads + (rows * next_target) / threads;
+        if row_ptr[r + 1] + r + 1 >= share && next_target < threads && r + 1 < rows {
+            bounds.push(r + 1);
+            next_target += 1;
+        }
+    }
+    bounds.push(rows);
+    bounds
+}
+
+/// Incremental row-by-row CSR assembly.
+pub struct CsrBuilder {
+    rows: usize,
+    cols: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl CsrBuilder {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        CsrBuilder {
+            rows,
+            cols,
+            row_ptr: Vec::with_capacity(rows + 1),
+            col_idx: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    /// Pre-size the entry arrays (builders that know |E| up front).
+    pub fn reserve(&mut self, nnz: usize) {
+        self.col_idx.reserve(nnz);
+        self.values.reserve(nnz);
+    }
+
+    /// Append an entry to the *current* row.  Entry order within the
+    /// row is preserved (it defines the summation order in SpMM).
+    ///
+    /// Precondition: a column appears at most once per row — SpMM would
+    /// *sum* duplicates while densification last-write-wins, so a
+    /// duplicate makes the two views of the matrix disagree.  The
+    /// graph-derived builders satisfy this by construction (adjacency
+    /// lists are deduped); `finish_row` checks it in debug builds.
+    #[inline]
+    pub fn push(&mut self, col: u32, val: f32) {
+        debug_assert!((col as usize) < self.cols, "col {col} out of range");
+        self.col_idx.push(col);
+        self.values.push(val);
+    }
+
+    /// Close the current row and move to the next.  `row_ptr` collects
+    /// row *end* offsets; `finish` prepends the leading 0.
+    #[inline]
+    pub fn finish_row(&mut self) {
+        assert!(self.row_ptr.len() < self.rows, "more rows finished than declared");
+        #[cfg(debug_assertions)]
+        {
+            let start = self.row_ptr.last().copied().unwrap_or(0);
+            let row = &self.col_idx[start..];
+            for (i, c) in row.iter().enumerate() {
+                assert!(!row[..i].contains(c), "duplicate column {c} in row");
+            }
+        }
+        self.row_ptr.push(self.col_idx.len());
+    }
+
+    /// Finalize; unfinished trailing rows become empty rows.
+    pub fn finish(mut self) -> CsrMatrix {
+        // entries pushed after the last finish_row() would otherwise be
+        // silently orphaned (fully-declared builder) or smuggled into
+        // the first padded row — both are caller bugs
+        assert!(
+            self.row_ptr.last().copied().unwrap_or(0) == self.col_idx.len(),
+            "entries pushed after the final finish_row()"
+        );
+        while self.row_ptr.len() < self.rows {
+            self.row_ptr.push(self.col_idx.len());
+        }
+        let mut row_ptr = Vec::with_capacity(self.rows + 1);
+        row_ptr.push(0);
+        row_ptr.extend_from_slice(&self.row_ptr);
+        CsrMatrix {
+            rows: self.rows,
+            cols: self.cols,
+            row_ptr,
+            col_idx: self.col_idx,
+            values: self.values,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_csr(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> CsrMatrix {
+        let mut b = CsrBuilder::new(rows, cols);
+        for _ in 0..rows {
+            for c in 0..cols {
+                if rng.chance(density) {
+                    b.push(c as u32, rng.uniform(-1.0, 1.0));
+                }
+            }
+            b.finish_row();
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn builder_round_trips_through_dense() {
+        let mut b = CsrBuilder::new(3, 4);
+        b.push(2, 5.0);
+        b.push(0, -1.0); // out-of-column-order on purpose: order preserved
+        b.finish_row();
+        b.finish_row(); // empty row
+        b.push(3, 2.0);
+        b.finish_row();
+        let m = b.finish();
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.get(0, 2), 5.0);
+        assert_eq!(m.get(0, 0), -1.0);
+        assert_eq!(m.get(1, 1), 0.0);
+        assert_eq!(m.get(2, 3), 2.0);
+        let d = m.to_dense();
+        assert_eq!(d.get(0, 2), 5.0);
+        assert_eq!(CsrMatrix::from_dense(&d).to_dense().data, d.data);
+    }
+
+    #[test]
+    fn builder_pads_unfinished_rows() {
+        let mut b = CsrBuilder::new(4, 2);
+        b.push(1, 1.0);
+        b.finish_row();
+        let m = b.finish();
+        assert_eq!(m.rows, 4);
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.row_entries(3).0.len(), 0);
+    }
+
+    #[test]
+    fn new_validates_structure() {
+        assert!(CsrMatrix::new(2, 2, vec![0, 1, 1], vec![0], vec![1.0]).is_ok());
+        // wrong row_ptr length
+        assert!(CsrMatrix::new(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err());
+        // non-monotone
+        assert!(CsrMatrix::new(2, 2, vec![0, 1, 0], vec![0], vec![1.0]).is_err());
+        // column out of range
+        assert!(CsrMatrix::new(2, 2, vec![0, 1, 1], vec![5], vec![1.0]).is_err());
+        // values length mismatch
+        assert!(CsrMatrix::new(2, 2, vec![0, 1, 1], vec![0], vec![]).is_err());
+        // last offset != nnz
+        assert!(CsrMatrix::new(2, 2, vec![0, 0, 2], vec![0], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn spmm_matches_dense_matmul() {
+        let mut rng = Rng::new(7);
+        for (r, k, c, density) in [(5, 6, 4, 0.5), (17, 9, 8, 0.2), (1, 3, 2, 1.0)] {
+            let a = random_csr(&mut rng, r, k, density);
+            let b = Matrix::from_fn(k, c, |_, _| rng.uniform(-1.0, 1.0));
+            let mut out = Matrix::zeros(r, c);
+            a.spmm_into(&b, &mut out).unwrap();
+            let want = a.to_dense().matmul(&b);
+            assert!(out.max_abs_diff(&want) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn spmm_shape_validation() {
+        let a = CsrMatrix::empty(3, 4);
+        let b = Matrix::zeros(5, 2); // wrong inner dim
+        let mut out = Matrix::zeros(3, 2);
+        assert!(a.spmm_into(&b, &mut out).is_err());
+        let b = Matrix::zeros(4, 2);
+        let mut bad_out = Matrix::zeros(2, 2); // wrong out rows
+        assert!(a.spmm_into(&b, &mut bad_out).is_err());
+        assert!(a.spmm_into(&b, &mut out).is_ok());
+        assert!(out.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn spmm_threaded_bit_identical_any_thread_count() {
+        let mut rng = Rng::new(42);
+        let a = random_csr(&mut rng, 53, 31, 0.3);
+        let b = Matrix::from_fn(31, 7, |_, _| rng.uniform(-2.0, 2.0));
+        let mut ref_out = Matrix::zeros(53, 7);
+        a.spmm_into(&b, &mut ref_out).unwrap();
+        for threads in [1, 2, 3, 4, 8, 64] {
+            let mut out = Matrix::zeros(53, 7);
+            a.spmm_into_threaded(&b, &mut out, threads).unwrap();
+            let same = out
+                .data
+                .iter()
+                .zip(&ref_out.data)
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(same, "threads={threads} diverged");
+        }
+    }
+
+    #[test]
+    fn balanced_chunks_cover_and_balance() {
+        // 4 heavy rows then 12 empty: nnz-balance must split the heavy part
+        let mut row_ptr = vec![0usize];
+        for r in 0..16 {
+            let nnz = if r < 4 { 100 } else { 0 };
+            row_ptr.push(row_ptr.last().unwrap() + nnz);
+        }
+        let b = balanced_row_chunks(&row_ptr, 4);
+        assert_eq!(*b.first().unwrap(), 0);
+        assert_eq!(*b.last().unwrap(), 16);
+        assert!(b.windows(2).all(|w| w[0] < w[1]), "chunks non-empty: {b:?}");
+        // the heavy rows must not all land in one chunk
+        let first_chunk_rows = b[1];
+        assert!(first_chunk_rows < 4, "heavy rows split: {b:?}");
+        // degenerate inputs
+        assert_eq!(balanced_row_chunks(&[0], 4), vec![0, 0]);
+        assert_eq!(balanced_row_chunks(&[0, 5], 4), vec![0, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "entries pushed after the final finish_row")]
+    fn builder_rejects_orphaned_entries() {
+        let mut b = CsrBuilder::new(1, 2);
+        b.push(0, 1.0);
+        b.finish_row();
+        b.push(1, 2.0); // no row left to hold this entry
+        let _ = b.finish();
+    }
+
+    #[test]
+    fn new_rejects_duplicate_columns() {
+        assert!(CsrMatrix::new(1, 2, vec![0, 2], vec![0, 0], vec![1.0, 2.0]).is_err());
+        assert!(CsrMatrix::new(1, 2, vec![0, 2], vec![0, 1], vec![1.0, 2.0]).is_ok());
+    }
+
+    #[test]
+    fn row_sums_and_scatter() {
+        let mut b = CsrBuilder::new(2, 3);
+        b.push(0, 1.0);
+        b.push(2, 2.0);
+        b.finish_row();
+        b.push(1, -3.0);
+        b.finish_row();
+        let m = b.finish();
+        assert_eq!(m.row_sums(), vec![3.0, -3.0]);
+        let mut flat = vec![0f32; 6];
+        m.scatter_into(&mut flat);
+        assert_eq!(flat, vec![1.0, 0.0, 2.0, 0.0, -3.0, 0.0]);
+    }
+}

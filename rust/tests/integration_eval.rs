@@ -1,0 +1,103 @@
+//! Sparse evaluation path: property-tested equivalence with the seed
+//! dense-loop oracle, and bit-level thread-count determinism.
+//!
+//! These tests need no AOT artifacts — both forwards are pure Rust —
+//! so they always run in tier-1.
+
+use digest::gnn::{self, init_params_for_dims as init_params, reference, ModelKind};
+use digest::graph::generators::{generate_sbm, SbmParams};
+use digest::graph::Dataset;
+use digest::prop_assert;
+use digest::util::prop::prop_check;
+use digest::util::Rng;
+
+fn random_sbm(seed: u64, nodes: usize, d_in: usize, intra: f64, inter: f64) -> Dataset {
+    generate_sbm(&SbmParams {
+        name: "eval-prop".into(),
+        nodes,
+        communities: 4,
+        intra_degree: intra,
+        inter_degree: inter,
+        d_in,
+        signal: 1.0,
+        skew: 0.4, // skewed degrees stress the nnz-balanced chunking
+        label_noise: 0.0,
+        train_frac: 0.5,
+        val_frac: 0.25,
+        seed,
+    })
+}
+
+/// Sparse CSR forward ≡ seed dense-loop forward (within fp tolerance)
+/// on random SBM graphs, GCN and GAT, random thread counts.
+#[test]
+fn prop_sparse_forward_matches_dense_oracle() {
+    for kind in [ModelKind::Gcn, ModelKind::Gat] {
+        prop_check(10, |rng| {
+            let n = 60 + rng.below(140);
+            let ds = random_sbm(rng.next_u64(), n, 12, 6.0, 2.0);
+            let mut prng = Rng::new(rng.next_u64());
+            let params = init_params(kind, &[12, 9, 5], &mut prng);
+            let normalize = rng.chance(0.5);
+            let (want, want_h) =
+                reference::forward_dense(kind, &ds.graph, &ds.features, &params, normalize)
+                    .map_err(|e| e.to_string())?;
+            let threads = 1 + rng.below(4);
+            let (got, got_h) =
+                gnn::forward_t(kind, &ds.graph, &ds.features, &params, normalize, threads)
+                    .map_err(|e| e.to_string())?;
+            let diff = got.max_abs_diff(&want);
+            prop_assert!(diff < 1e-5, "{kind:?} n={n} threads={threads}: logits diff {diff}");
+            prop_assert!(got_h.len() == want_h.len(), "hidden count mismatch");
+            for (a, b) in got_h.iter().zip(&want_h) {
+                let hd = a.max_abs_diff(b);
+                prop_assert!(hd < 1e-5, "{kind:?} hidden diff {hd}");
+            }
+            Ok(())
+        });
+    }
+}
+
+/// Eval output is byte-identical across 1/2/4 eval threads — the
+/// evaluation-side counterpart of the training engine's determinism
+/// guarantee (PR 1).
+#[test]
+fn eval_bit_identical_across_thread_counts() {
+    let ds = random_sbm(7, 1500, 16, 10.0, 4.0);
+    for kind in [ModelKind::Gcn, ModelKind::Gat] {
+        let mut prng = Rng::new(11);
+        let params = init_params(kind, &[16, 24, 6], &mut prng);
+        let (ref_logits, ref_hidden) =
+            gnn::forward_t(kind, &ds.graph, &ds.features, &params, true, 1).unwrap();
+        for threads in [2usize, 4] {
+            let (logits, hidden) =
+                gnn::forward_t(kind, &ds.graph, &ds.features, &params, true, threads).unwrap();
+            let same = logits
+                .data
+                .iter()
+                .zip(&ref_logits.data)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "{kind:?}: logits bits diverged at {threads} threads");
+            for (h, rh) in hidden.iter().zip(&ref_hidden) {
+                let same = h
+                    .data
+                    .iter()
+                    .zip(&rh.data)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "{kind:?}: hidden bits diverged at {threads} threads");
+            }
+        }
+    }
+}
+
+/// The auto thread count (0) resolves to the same numerics as any
+/// explicit count.
+#[test]
+fn auto_threads_match_explicit() {
+    let ds = random_sbm(3, 400, 8, 6.0, 2.0);
+    let mut prng = Rng::new(4);
+    let params = init_params(ModelKind::Gcn, &[8, 6, 4], &mut prng);
+    let (a, _) = gnn::gcn_forward_t(&ds.graph, &ds.features, &params, false, 0).unwrap();
+    let (b, _) = gnn::gcn_forward_t(&ds.graph, &ds.features, &params, false, 3).unwrap();
+    assert!(a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+}
