@@ -1,15 +1,19 @@
 //! Training context: everything a scheduler needs, wired up once.
 
+use std::sync::Mutex;
+
 use crate::config::RunConfig;
 use crate::costmodel::CostModel;
-use crate::gnn::{self, ModelKind};
+use crate::gnn::{self, ModelKind, Workspace, WorkspaceStats};
 use crate::graph::registry::{load, spec as dataset_spec};
 use crate::graph::{Dataset, Split};
 use crate::halo::{build_all_plans, PropKind, SubgraphPlan};
 use crate::kvs::RepStore;
 use crate::partition::{partition, Partition};
 use crate::runtime::{ArtifactSpec, Runtime};
+use crate::tensor::pool::ChunkPool;
 use crate::tensor::Matrix;
+use crate::util::lock_unpoisoned;
 use crate::Result;
 
 /// Immutable per-run context shared by all schedulers — and, since the
@@ -22,6 +26,9 @@ pub struct TrainContext {
     pub partition: Partition,
     pub plans: Vec<SubgraphPlan>,
     pub spec: ArtifactSpec,
+    /// Eval-kind artifact spec, cached once — `exec_eval` used to do a
+    /// manifest lookup plus a full spec clone on every call.
+    pub eval_spec: ArtifactSpec,
     pub rt: Runtime,
     pub kvs: RepStore,
     pub cost: CostModel,
@@ -30,6 +37,11 @@ pub struct TrainContext {
     /// Optional warm-start parameters (checkpoint resume); schedulers
     /// use these instead of fresh Glorot init when present.
     pub warm_start: Option<Vec<Matrix>>,
+    /// Cached global-eval workspace (structure CSR + per-layer
+    /// scratch); a mutex keeps the context `Sync` while `global_eval`
+    /// takes `&self`.  Steady-state evals through it perform zero
+    /// structure rebuilds and zero scratch allocations.
+    eval_ws: Mutex<Workspace>,
 }
 
 impl TrainContext {
@@ -40,6 +52,7 @@ impl TrainContext {
         let artifact = cfg.artifact_name()?;
         let rt = Runtime::new(&cfg.artifact_dir)?;
         let spec = rt.manifest.get(&artifact, "train")?.clone();
+        let eval_spec = rt.manifest.get(&artifact, "eval")?.clone();
         // partitions must fit the artifact's padded shape
         crate::partition::enforce_cap(&ds.graph, &mut part, spec.s_pad);
         let kind = match cfg.model {
@@ -50,17 +63,23 @@ impl TrainContext {
         let mut cost = CostModel::default();
         cost.straggler = cfg.straggler;
         let _ = dataset_spec(&cfg.dataset)?; // validated name
+        let eval_ws = Mutex::new(Workspace::new(cfg.model, &ds.graph));
+        // warm the process-wide compute pool so its worker threads
+        // exist before any hot loop runs (kernels reach it lazily)
+        ChunkPool::global();
         Ok(TrainContext {
             cfg,
             ds,
             partition: part,
             plans,
             spec,
+            eval_spec,
             rt,
             kvs: RepStore::new(16),
             cost,
             artifact,
             warm_start: None,
+            eval_ws,
         })
     }
 
@@ -87,10 +106,15 @@ impl TrainContext {
     /// (val_f1, test_f1).  Runs on `RunConfig::threads` eval threads
     /// (0 = auto); the sparse forward is bit-identical at any thread
     /// count, so this only trades wall-clock for cores.
+    ///
+    /// Forwards through the context's cached [`Workspace`]: the
+    /// structure CSR is built once at context construction and every
+    /// per-layer scratch matrix is reused, so steady-state periodic
+    /// evals rebuild and allocate nothing (see
+    /// [`TrainContext::eval_ws_stats`]).
     pub fn global_eval(&self, params: &[Matrix]) -> Result<(f64, f64)> {
-        let (logits, _) = gnn::forward_t(
-            self.cfg.model,
-            &self.ds.graph,
+        let mut ws = lock_unpoisoned(&self.eval_ws);
+        let (logits, _) = ws.forward(
             &self.ds.features,
             params,
             self.spec.normalize,
@@ -103,6 +127,12 @@ impl TrainContext {
             gnn::metrics::micro_f1(&preds, &self.ds.labels, &val),
             gnn::metrics::micro_f1(&preds, &self.ds.labels, &test),
         ))
+    }
+
+    /// Rebuild/allocation counters of the cached eval workspace (used
+    /// by tests and benches to assert the zero-rebuild steady state).
+    pub fn eval_ws_stats(&self) -> WorkspaceStats {
+        lock_unpoisoned(&self.eval_ws).stats()
     }
 
     /// Number of hidden (stale-exchanged) layers = L - 1.
@@ -143,6 +173,49 @@ mod tests {
         let (val, test) = ctx.global_eval(&params).unwrap();
         assert!((0.0..=1.0).contains(&val));
         assert!((0.0..=1.0).contains(&test));
+    }
+
+    #[test]
+    fn global_eval_reuses_cached_workspace() {
+        let ctx = TrainContext::new(RunConfig::default()).unwrap();
+        let params = init_params(&ctx.spec, 0);
+        let first = ctx.global_eval(&params).unwrap();
+        let warm = ctx.eval_ws_stats();
+        assert_eq!(warm.structure_builds, 1);
+        assert!(warm.scratch_allocs > 0);
+        for _ in 0..3 {
+            assert_eq!(ctx.global_eval(&params).unwrap(), first);
+        }
+        let steady = ctx.eval_ws_stats();
+        assert_eq!(steady.structure_builds, 1, "eval rebuilt the structure CSR");
+        assert_eq!(
+            steady.scratch_allocs, warm.scratch_allocs,
+            "steady-state eval allocated scratch"
+        );
+        assert_eq!(steady.forwards, warm.forwards + 3);
+        // the cached path reproduces the throwaway-workspace wrapper
+        let (logits, _) = gnn::forward_t(
+            ctx.cfg.model,
+            &ctx.ds.graph,
+            &ctx.ds.features,
+            &params,
+            ctx.spec.normalize,
+            ctx.cfg.threads,
+        )
+        .unwrap();
+        let preds = logits.argmax_rows();
+        let val = ctx.ds.nodes_in_split(Split::Val);
+        let want = gnn::metrics::micro_f1(&preds, &ctx.ds.labels, &val);
+        assert_eq!(first.0, want);
+    }
+
+    #[test]
+    fn eval_spec_is_cached_and_matches_manifest() {
+        let ctx = TrainContext::new(RunConfig::default()).unwrap();
+        let fresh = ctx.rt.manifest.get(&ctx.artifact, "eval").unwrap();
+        assert_eq!(ctx.eval_spec.kind, "eval");
+        assert_eq!(ctx.eval_spec.inputs.len(), fresh.inputs.len());
+        assert_eq!(ctx.eval_spec.outputs.len(), fresh.outputs.len());
     }
 
     #[test]

@@ -128,7 +128,9 @@ where
 struct ExecJob {
     worker: usize,
     statics: Arc<StaticInputs>,
-    stale: Arc<Vec<SharedLiteral>>,
+    /// Per-layer `Arc` snapshot of the worker's stale literals (cloning
+    /// L-1 pointers freezes the sync state at dispatch time).
+    stale: Vec<Arc<SharedLiteral>>,
     params: Arc<Vec<SharedLiteral>>,
 }
 

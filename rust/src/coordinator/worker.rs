@@ -17,8 +17,9 @@ use std::sync::Arc;
 
 use crate::ps::checkpoint::WorkerSnap;
 use crate::runtime::{
-    assemble_inputs, pack_stale, pack_static_inputs, parse_eval_output,
-    parse_train_output, EvalOutput, SharedLiteral, StaticInputs, TrainOutput,
+    assemble_inputs, pack_stale, pack_stale_layer, pack_static_inputs,
+    parse_eval_output, parse_train_output, EvalOutput, SharedLiteral, StaticInputs,
+    TrainOutput,
 };
 use crate::tensor::Matrix;
 use crate::util::{domain_seed, Rng};
@@ -30,11 +31,18 @@ use super::context::TrainContext;
 pub struct WorkerState {
     pub id: usize,
     /// Cached stale halo representations, one (b_pad, d_h) per hidden
-    /// layer; refreshed from the KVS every N epochs.
+    /// layer; refreshed **in place** from the KVS every N epochs
+    /// (`RepStore::pull_into` — no per-pull allocation).
     pub stale: Vec<Matrix>,
-    /// Pre-packed literals of `stale` (replaced wholesale on every
-    /// pull; `Arc` so the async prefetch pool can snapshot them).
-    pub stale_lits: Arc<Vec<SharedLiteral>>,
+    /// Pre-packed literals of `stale`, one `Arc` per layer: a sync that
+    /// leaves a layer's content untouched keeps the layer's literal
+    /// (dirty-layer tracking), and the async prefetch pool snapshots
+    /// the vector by cloning L-1 pointers.
+    pub stale_lits: Vec<Arc<SharedLiteral>>,
+    /// Whether `stale[l]` currently holds any found (possibly nonzero)
+    /// rows.  `false` guarantees the layer is all-zero, which is what
+    /// lets an all-miss pull skip the literal re-pack.
+    stale_found: Vec<bool>,
     /// Pre-packed static inputs (x, P_in, P_out, y, train mask).
     pub statics: Arc<StaticInputs>,
     /// Local epoch counter (== global epoch in sync mode).
@@ -55,8 +63,7 @@ impl WorkerState {
         let stale: Vec<Matrix> = (0..ctx.n_hidden())
             .map(|_| Matrix::zeros(ctx.spec.b_pad, ctx.spec.d_h))
             .collect();
-        let stale_lits =
-            Arc::new(pack_stale(&ctx.spec, &stale).expect("stale packing"));
+        let stale_lits = pack_stale(&ctx.spec, &stale).expect("stale packing");
         let statics = Arc::new(
             pack_static_inputs(&ctx.spec, plan, &plan.train_mask)
                 .expect("static packing"),
@@ -65,6 +72,7 @@ impl WorkerState {
             id,
             stale,
             stale_lits,
+            stale_found: vec![false; ctx.n_hidden()],
             statics,
             local_epoch: 0,
             fetched_version: 0,
@@ -87,9 +95,12 @@ impl WorkerState {
         }
     }
 
-    /// Restore an exported snapshot onto a freshly built worker: the
-    /// stale cache is re-packed so the next train step sees exactly the
-    /// representations the exporting run had.
+    /// Restore an exported snapshot onto a freshly built worker: stale
+    /// rows are copied **into the existing buffers** (the seed path
+    /// cloned the snapshot matrices *and* wholesale re-packed every
+    /// literal) and only layers whose content actually differs from the
+    /// worker's current all-zero state re-pack — the same dirty-layer
+    /// rule [`pull_stale`] applies every sync.
     pub fn apply_snap(&mut self, ctx: &TrainContext, snap: &WorkerSnap) -> Result<()> {
         if snap.stale.len() != self.stale.len() {
             return Err(eyre!(
@@ -108,9 +119,24 @@ impl WorkerState {
         self.fetched_version = snap.fetched_version;
         self.rng = Rng::from_state(snap.rng);
         self.last_pull_age = snap.last_pull_age;
-        self.stale = snap.stale.clone();
-        self.stale_lits = Arc::new(pack_stale(&ctx.spec, &self.stale)?);
+        for (l, src) in snap.stale.iter().enumerate() {
+            self.stale[l].data.copy_from_slice(&src.data);
+            // bit-level zero test: -0.0 must count as content, or a
+            // resumed worker's literal could differ bitwise from the
+            // exporting run's (breaking bit-exact resume)
+            let has_content = src.data.iter().any(|&v| v.to_bits() != 0);
+            if has_content || self.stale_found[l] {
+                self.stale_lits[l] = pack_stale_layer(&ctx.spec, l, &self.stale[l])?;
+            }
+            self.stale_found[l] = has_content;
+        }
         Ok(())
+    }
+
+    /// Whether `stale[l]` may hold non-zero content (dirty-layer
+    /// tracking state; exposed for the re-pack regression tests).
+    pub fn stale_layer_found(&self, l: usize) -> bool {
+        self.stale_found[l]
     }
 }
 
@@ -118,24 +144,34 @@ impl WorkerState {
 /// virtual I/O seconds charged (per-layer latency + bytes/bw).  `now`
 /// is the caller's version clock (global epoch in sync mode, local
 /// epoch in async) used to record the observed staleness age.
+///
+/// Allocation-free sync path: rows land in the worker's existing
+/// `stale` matrices ([`crate::kvs::RepStore::pull_into`]), and only
+/// *dirty* layers re-pack their literal.  A layer is clean when the
+/// pull found no rows **and** the cached buffer was already all-zero —
+/// then the new content is byte-identical to the old, so the existing
+/// literal (and its `Arc`) is reused.  This is what shrinks the
+/// per-sync cost the paper's periodic schedule amortizes.
 pub fn pull_stale(ctx: &TrainContext, w: &mut WorkerState, now: u64) -> f64 {
     let plan = &ctx.plans[w.id];
     let mut io = 0.0;
     let mut age: Option<u64> = None;
     for l in 0..ctx.n_hidden() {
-        let (m, info) = ctx
-            .kvs
-            .pull(l, &plan.halo, ctx.spec.d_h, ctx.spec.b_pad);
+        let info = ctx.kvs.pull_into(l, &plan.halo, &mut w.stale[l]);
         if let Some(a) = info.staleness_age(now) {
             age = Some(age.map_or(a, |x| x.max(a)));
         }
         io += ctx
             .cost
             .comm_time((plan.halo.len() * ctx.spec.d_h * 4) as u64);
-        w.stale[l] = m;
+        let found = info.found > 0;
+        if found || w.stale_found[l] {
+            w.stale_lits[l] =
+                pack_stale_layer(&ctx.spec, l, &w.stale[l]).expect("stale packing");
+        }
+        w.stale_found[l] = found;
     }
     w.last_pull_age = age;
-    w.stale_lits = Arc::new(pack_stale(&ctx.spec, &w.stale).expect("stale packing"));
     io
 }
 
@@ -177,7 +213,7 @@ pub fn push_io_cost(ctx: &TrainContext, id: usize) -> f64 {
 pub fn exec_train_with(
     ctx: &TrainContext,
     statics: &StaticInputs,
-    stale_lits: &[SharedLiteral],
+    stale_lits: &[Arc<SharedLiteral>],
     param_lits: &[SharedLiteral],
 ) -> Result<TrainOutput> {
     let inputs = assemble_inputs(&ctx.spec, statics, stale_lits, param_lits);
@@ -199,15 +235,16 @@ pub fn exec_train(
 
 /// Execute the forward-only eval step (used by the propagation baseline
 /// for its per-epoch refresh pass and by distributed-inference demos).
+/// Uses the eval spec cached on the context — this used to re-do the
+/// manifest lookup and clone the whole spec on every call.
 pub fn exec_eval(
     ctx: &TrainContext,
     w: &WorkerState,
     param_lits: &[SharedLiteral],
 ) -> Result<(EvalOutput, f64)> {
-    let eval_spec = ctx.rt.manifest.get(&ctx.artifact, "eval")?.clone();
-    let inputs = assemble_inputs(&eval_spec, &w.statics, &w.stale_lits, param_lits);
+    let inputs = assemble_inputs(&ctx.eval_spec, &w.statics, &w.stale_lits, param_lits);
     let outs = ctx.rt.execute(&ctx.artifact, "eval", &inputs)?;
-    let out = parse_eval_output(&eval_spec, &outs)?;
+    let out = parse_eval_output(&ctx.eval_spec, &outs)?;
     let vtime = ctx.cost.compute_time(w.id, ctx.eval_flops(w.id));
     Ok((out, vtime))
 }
@@ -327,6 +364,73 @@ mod tests {
         pull_stale(&ctx, &mut w0, 1);
         let (after, _) = exec_train(&ctx, &w0, &lits).unwrap();
         assert_ne!(before.loss, after.loss);
+    }
+
+    #[test]
+    fn all_miss_pull_skips_literal_repack() {
+        let ctx = ctx();
+        let mut w0 = WorkerState::new(&ctx, 0);
+        // cold store: every halo row misses and the cache is all-zero,
+        // so NO layer may re-pack its literal (regression: the seed
+        // path re-packed everything wholesale on every pull)
+        let before = w0.stale_lits.clone();
+        pull_stale(&ctx, &mut w0, 5);
+        for (l, (a, b)) in before.iter().zip(&w0.stale_lits).enumerate() {
+            assert!(Arc::ptr_eq(a, b), "layer {l} re-packed on an all-miss pull");
+            assert!(!w0.stale_layer_found(l));
+        }
+        // once another worker pushes overlapping rows, the pull is
+        // dirty and must re-pack
+        let w1 = WorkerState::new(&ctx, 1);
+        let params = init_params(&ctx.spec, 0);
+        let lits = pack_params(&ctx.spec, &params).unwrap();
+        let (out, _) = exec_train(&ctx, &w1, &lits).unwrap();
+        push_reps(&ctx, &w1, &out.reps, 1);
+        let before = w0.stale_lits.clone();
+        pull_stale(&ctx, &mut w0, 2);
+        assert!(
+            before.iter().zip(&w0.stale_lits).any(|(a, b)| !Arc::ptr_eq(a, b)),
+            "a pull that found rows must refresh some literal"
+        );
+        // clearing the store: one more re-pack back to zeros ...
+        ctx.kvs.clear();
+        let before = w0.stale_lits.clone();
+        pull_stale(&ctx, &mut w0, 3);
+        assert!(
+            before.iter().zip(&w0.stale_lits).any(|(a, b)| !Arc::ptr_eq(a, b)),
+            "zeroing a previously-found cache must re-pack"
+        );
+        // ... then steady state: all-miss over an all-zero cache is free
+        let before = w0.stale_lits.clone();
+        pull_stale(&ctx, &mut w0, 4);
+        for (a, b) in before.iter().zip(&w0.stale_lits) {
+            assert!(Arc::ptr_eq(a, b), "steady-state all-miss pull re-packed");
+        }
+    }
+
+    #[test]
+    fn apply_snap_skips_allzero_layers_and_restores_content() {
+        let ctx = ctx();
+        let mut w = WorkerState::new(&ctx, 0);
+        let zero_snap = w.export_snap();
+        let before = w.stale_lits.clone();
+        w.apply_snap(&ctx, &zero_snap).unwrap();
+        for (a, b) in before.iter().zip(&w.stale_lits) {
+            assert!(Arc::ptr_eq(a, b), "all-zero snapshot must not re-pack");
+        }
+        // a snapshot with content copies into the existing buffer,
+        // re-packs, and flags the layer
+        let mut snap = zero_snap.clone();
+        snap.stale[0].set(0, 0, 3.5);
+        w.apply_snap(&ctx, &snap).unwrap();
+        assert_eq!(w.stale[0].get(0, 0), 3.5);
+        assert!(w.stale_layer_found(0));
+        assert!(!Arc::ptr_eq(&before[0], &w.stale_lits[0]));
+        // restoring the zero snapshot afterwards re-packs (content
+        // changed back) and clears the flag
+        w.apply_snap(&ctx, &zero_snap).unwrap();
+        assert_eq!(w.stale[0].get(0, 0), 0.0);
+        assert!(!w.stale_layer_found(0));
     }
 
     #[test]

@@ -18,13 +18,17 @@
 //!
 //! ## Sparse evaluation path
 //!
-//! The forward passes build the propagation/attention structure **once**
-//! as a [`CsrMatrix`] and run every layer as SpMM + bias + activation —
-//! no per-edge allocation anywhere in the layer loop, and the SpMM and
-//! dense-transform kernels parallelize over row chunks with
+//! The forward passes build the propagation/attention structure **once
+//! per [`Workspace`]** as a [`CsrMatrix`] and run every layer as SpMM +
+//! bias + activation — no per-edge allocation anywhere in the layer
+//! loop, and the SpMM and dense-transform kernels fan out over row
+//! chunks on the persistent [`crate::tensor::pool::ChunkPool`] with
 //! **bit-identical output at any thread count** ([`gcn_forward_t`] /
 //! [`gat_forward_t`] take the thread count; the plain [`gcn_forward`] /
-//! [`gat_forward`] wrappers are single-threaded).  Within a row the CSR
+//! [`gat_forward`] wrappers are single-threaded).  A cached
+//! [`Workspace`] (what `TrainContext::global_eval` holds) additionally
+//! makes repeat forwards rebuild- and allocation-free; the `forward_*`
+//! free functions build a throwaway one per call.  Within a row the CSR
 //! entry order is self-loop first, then neighbors ascending — exactly
 //! the seed oracle's summation order, so the sparse path reproduces the
 //! dense-loop numerics (see [`reference`], kept as the cross-check
@@ -33,10 +37,13 @@
 
 pub mod metrics;
 pub mod reference;
+pub mod workspace;
+
+pub use workspace::{Workspace, WorkspaceStats};
 
 use crate::graph::Graph;
 use crate::tensor::sparse::{balanced_row_chunks, CsrBuilder, CsrMatrix};
-use crate::tensor::{par_matmul_into, Matrix};
+use crate::tensor::Matrix;
 use crate::util::Rng;
 use crate::{eyre, Result};
 
@@ -205,6 +212,11 @@ fn add_bias_rows(z: &mut Matrix, bias: &[f32]) {
 /// Full-graph GCN forward on the sparse path with `threads` eval
 /// threads (0 = auto); returns (logits, per-layer hidden reps).
 /// Output is bit-identical at any thread count.
+///
+/// Convenience wrapper that builds (and throws away) a [`Workspace`]
+/// per call.  Hot loops — the periodic `global_eval` above all — should
+/// hold a cached `Workspace` instead and skip the per-call structure
+/// build and scratch allocation entirely.
 pub fn gcn_forward_t(
     g: &Graph,
     x: &Matrix,
@@ -212,35 +224,9 @@ pub fn gcn_forward_t(
     normalize: bool,
     threads: usize,
 ) -> Result<(Matrix, Vec<Matrix>)> {
-    let layers = layer_views(ModelKind::Gcn, params)?;
-    let n = g.n();
-    if x.rows != n {
-        return Err(eyre!("features rows {} != n {n}", x.rows));
-    }
-    let threads = resolve_eval_threads(threads, n);
-    let prop = gcn_prop_csr(g);
-    let mut h = x.clone();
-    let mut hidden = Vec::new();
-    for (l, layer) in layers.iter().enumerate() {
-        let last = l == layers.len() - 1;
-        check_layer_shapes(l, ModelKind::Gcn, &h, layer)?;
-        let mut t = Matrix::zeros(n, layer.w.cols);
-        par_matmul_into(&h, layer.w, &mut t, threads);
-        let mut z = Matrix::zeros(n, t.cols);
-        prop.spmm_into_threaded(&t, &mut z, threads)?;
-        add_bias_rows(&mut z, &layer.b.data);
-        if !last {
-            for v in &mut z.data {
-                *v = v.max(0.0); // relu
-            }
-            if normalize {
-                l2_normalize_rows(&mut z);
-            }
-            hidden.push(z.clone());
-        }
-        h = z;
-    }
-    Ok((h, hidden))
+    let mut ws = Workspace::new(ModelKind::Gcn, g);
+    ws.forward(x, params, normalize, threads)?;
+    Ok(ws.take_outputs())
 }
 
 /// Full-graph GCN forward (single-threaded convenience wrapper).
@@ -256,9 +242,11 @@ pub fn gcn_forward(
 /// Overwrite `att.values` with one GAT layer's softmax coefficients:
 /// per row v, alpha(v,u) = softmax_u(LeakyReLU(s_src[v] + s_dst[u]))
 /// over the row's entries (self ∪ neighbors).  Parallelized over
-/// nnz-balanced row chunks; each value is written by exactly one
-/// thread and per-row reduction order is the entry order, so the
-/// result is thread-count independent.
+/// nnz-balanced row chunks on the persistent
+/// [`ChunkPool`](crate::tensor::pool::ChunkPool) (formerly a per-call
+/// scoped-thread fan-out); each value is written by exactly one chunk
+/// and per-row reduction order is the entry order, so the result is
+/// thread-count independent.
 pub fn gat_attention_values(
     att: &mut CsrMatrix,
     s_src: &[f32],
@@ -280,15 +268,10 @@ pub fn gat_attention_values(
         attention_rows(0, row_ptr, col_idx, s_src, s_dst, values);
         return;
     }
-    std::thread::scope(|s| {
-        let mut rest: &mut [f32] = values;
-        for w in bounds.windows(2) {
-            let (lo, hi) = (w[0], w[1]);
-            let (seg, tail) =
-                std::mem::take(&mut rest).split_at_mut(row_ptr[hi] - row_ptr[lo]);
-            rest = tail;
-            s.spawn(move || attention_rows(lo, &row_ptr[lo..=hi], col_idx, s_src, s_dst, seg));
-        }
+    let nnz_bounds: Vec<usize> = bounds.iter().map(|&r| row_ptr[r]).collect();
+    crate::tensor::pool::ChunkPool::global().run_chunks(values, &nnz_bounds, |i, seg| {
+        let (lo, hi) = (bounds[i], bounds[i + 1]);
+        attention_rows(lo, &row_ptr[lo..=hi], col_idx, s_src, s_dst, seg);
     });
 }
 
@@ -331,6 +314,9 @@ fn attention_rows(
 /// Full-graph single-head GAT forward on the sparse path with
 /// `threads` eval threads (0 = auto); returns (logits, hidden reps).
 /// Output is bit-identical at any thread count.
+///
+/// Convenience wrapper over a throwaway [`Workspace`] — see
+/// [`gcn_forward_t`] for when to cache one instead.
 pub fn gat_forward_t(
     g: &Graph,
     x: &Matrix,
@@ -338,41 +324,9 @@ pub fn gat_forward_t(
     normalize: bool,
     threads: usize,
 ) -> Result<(Matrix, Vec<Matrix>)> {
-    let layers = layer_views(ModelKind::Gat, params)?;
-    let n = g.n();
-    if x.rows != n {
-        // regression guard: mismatched features used to index-panic here
-        return Err(eyre!("features rows {} != n {n}", x.rows));
-    }
-    let threads = resolve_eval_threads(threads, n);
-    let mut att = gat_structure_csr(g);
-    let mut h = x.clone();
-    let mut hidden = Vec::new();
-    for (l, layer) in layers.iter().enumerate() {
-        let last = l == layers.len() - 1;
-        check_layer_shapes(l, ModelKind::Gat, &h, layer)?;
-        let mut t = Matrix::zeros(n, layer.w.cols);
-        par_matmul_into(&h, layer.w, &mut t, threads);
-        let a_src = layer.a_src.unwrap();
-        let a_dst = layer.a_dst.unwrap();
-        let s_src: Vec<f32> = (0..n).map(|v| dot(t.row(v), &a_src.data)).collect();
-        let s_dst: Vec<f32> = (0..n).map(|v| dot(t.row(v), &a_dst.data)).collect();
-        gat_attention_values(&mut att, &s_src, &s_dst, threads);
-        let mut z = Matrix::zeros(n, t.cols);
-        att.spmm_into_threaded(&t, &mut z, threads)?;
-        add_bias_rows(&mut z, &layer.b.data);
-        if !last {
-            for v in &mut z.data {
-                *v = elu(*v);
-            }
-            if normalize {
-                l2_normalize_rows(&mut z);
-            }
-            hidden.push(z.clone());
-        }
-        h = z;
-    }
-    Ok((h, hidden))
+    let mut ws = Workspace::new(ModelKind::Gat, g);
+    ws.forward(x, params, normalize, threads)?;
+    Ok(ws.take_outputs())
 }
 
 /// Full-graph GAT forward (single-threaded convenience wrapper).

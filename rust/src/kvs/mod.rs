@@ -194,6 +194,27 @@ impl RepStore {
     ) -> (Matrix, PullInfo) {
         assert!(rows_pad >= nodes.len());
         let mut out = Matrix::zeros(rows_pad, d);
+        let info = self.pull_rows(layer, nodes, &mut out);
+        (out, info)
+    }
+
+    /// Allocation-free pull: write rows for `nodes` at `layer` into the
+    /// caller's existing matrix (the worker's cached stale buffer).
+    /// `out` is fully overwritten — found rows get the stored data,
+    /// missing and padding rows become zero — so the result is
+    /// byte-identical to what [`RepStore::pull`] would have allocated,
+    /// whatever `out` held before.  Metrics are charged identically.
+    pub fn pull_into(&self, layer: usize, nodes: &[u32], out: &mut Matrix) -> PullInfo {
+        assert!(out.rows >= nodes.len(), "pull_into: fewer out rows than nodes");
+        out.data.fill(0.0);
+        self.pull_rows(layer, nodes, out)
+    }
+
+    /// Shared body of [`RepStore::pull`] / [`RepStore::pull_into`]:
+    /// copy stored rows into `out` (assumed all-zero) and charge the
+    /// traffic metrics.
+    fn pull_rows(&self, layer: usize, nodes: &[u32], out: &mut Matrix) -> PullInfo {
+        let d = out.cols;
         let mut info = PullInfo {
             found: 0,
             missing: 0,
@@ -232,7 +253,7 @@ impl RepStore {
         self.metrics
             .misses
             .fetch_add(info.missing as u64, Ordering::Relaxed);
-        (out, info)
+        info
     }
 
     /// Number of stored entries (all layers).
@@ -398,6 +419,49 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(kvs.len(), 200);
+    }
+
+    #[test]
+    fn pull_into_matches_pull_including_padding() {
+        let kvs = RepStore::new(4);
+        let nodes = [3u32, 9, 127, 4];
+        kvs.push(1, &nodes[..3], &mat(3, 5, 10.0), 7);
+        // fresh pull as the oracle (node 4 misses, 2 padding rows)
+        let (want, want_info) = kvs.pull(1, &nodes, 5, 6);
+        // pull_into over a dirty buffer must produce identical bytes
+        let mut out = Matrix::from_fn(6, 5, |r, c| -((r * 5 + c) as f32));
+        let info = kvs.pull_into(1, &nodes, &mut out);
+        assert_eq!(out.data, want.data);
+        assert_eq!(info.found, want_info.found);
+        assert_eq!(info.missing, want_info.missing);
+        assert_eq!(info.oldest_version, want_info.oldest_version);
+        assert_eq!(info.newest_version, want_info.newest_version);
+        // padding rows zeroed even though the dirty buffer was not
+        assert_eq!(out.row(4), &[0.0; 5]);
+        assert_eq!(out.row(5), &[0.0; 5]);
+    }
+
+    #[test]
+    fn pull_into_all_miss_zeroes_previous_content() {
+        let kvs = RepStore::new(2);
+        let mut out = mat(3, 4, 5.0);
+        let info = kvs.pull_into(0, &[1, 2, 3], &mut out);
+        assert_eq!(info.found, 0);
+        assert_eq!(info.missing, 3);
+        assert!(out.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn pull_into_charges_metrics_like_pull() {
+        let kvs = RepStore::new(2);
+        kvs.push(0, &[1], &mat(1, 8, 0.0), 1);
+        let mut out = Matrix::zeros(3, 8);
+        kvs.pull_into(0, &[1, 2, 3], &mut out);
+        let m = kvs.metrics.snapshot();
+        assert_eq!(m.pulls, 1);
+        assert_eq!(m.pulled_rows, 3);
+        assert_eq!(m.pulled_bytes, 3 * 8 * 4);
+        assert_eq!(m.misses, 2);
     }
 
     #[test]

@@ -72,10 +72,11 @@
 //! [`tensor::sparse::CsrMatrix`], not dense matrices:
 //!
 //! * [`gnn`]'s GCN/GAT forwards build the normalized propagation (or
-//!   attention-structure) CSR **once** and run every layer as an
-//!   allocation-free SpMM + bias + activation; the SpMM and the blocked
-//!   dense transform ([`tensor::par_matmul_into`]) parallelize over row
-//!   chunks with **bit-identical output at any thread count**
+//!   attention-structure) CSR **once per [`gnn::Workspace`]** and run
+//!   every layer as an allocation-free SpMM + bias + activation; the
+//!   SpMM and the blocked dense transform
+//!   ([`tensor::par_matmul_into`]) parallelize over row chunks with
+//!   **bit-identical output at any thread count**
 //!   (`RunConfig::threads` drives `TrainContext::global_eval` too).
 //!   The seed dense-loop oracle survives as [`gnn::reference`], the
 //!   cross-check the property tests and `benches/bench_eval.rs` run
@@ -86,11 +87,34 @@
 //! * [`graph::registry`] adds eval-scale `-m` tiers (`arxiv-m` 65k,
 //!   `reddit-m` 131k nodes) that only the benches and explicit CLI use.
 //!
+//! ## Zero-rebuild hot paths
+//!
+//! The eval/train loop performs its repeated work against long-lived
+//! state instead of rebuilding per call:
+//!
+//! * [`tensor::pool::ChunkPool`] — one persistent set of named worker
+//!   threads runs every chunked kernel (SpMM, blocked matmul, GAT
+//!   attention) that previously spawned and joined scoped threads per
+//!   call.  Chunks are disjoint output slices in fixed order, so
+//!   results stay bit-identical at any pool size;
+//! * [`gnn::Workspace`] — the structure CSR plus per-layer scratch
+//!   (`t`/`z` matrices, attention-score vectors) built once and reused;
+//!   `TrainContext::global_eval` holds one behind a mutex, making
+//!   steady-state periodic evals rebuild- and allocation-free
+//!   (`TrainContext::eval_ws_stats` exposes the counters that prove
+//!   it);
+//! * allocation-free worker sync — [`kvs::RepStore::pull_into`] writes
+//!   halo rows into the worker's existing stale buffers, and
+//!   `pull_stale` re-packs only *dirty* layers' literals (an all-miss
+//!   pull over an all-zero cache re-packs nothing); the eval
+//!   `ArtifactSpec` is cached on the context instead of cloned per
+//!   `exec_eval`.
+//!
 //! Module map (see DESIGN.md for the full inventory):
 //!
 //! | module | role |
 //! |---|---|
-//! | [`tensor`] | dense f32 matrix + sparse CSR (SpMM) used across the coordinator |
+//! | [`tensor`] | dense f32 matrix + sparse CSR (SpMM) + persistent chunk pool |
 //! | [`graph`] | CSR graphs, synthetic dataset generators, splits |
 //! | [`partition`] | METIS-style multilevel partitioner + baselines |
 //! | [`halo`] | subgraph plans: halo extraction, padded `P_in`/`P_out` |

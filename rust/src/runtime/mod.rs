@@ -451,15 +451,35 @@ pub fn pack_static_inputs(
     })
 }
 
-/// Pack the L-1 stale tensors (done once per KVS pull, not per step).
-pub fn pack_stale(spec: &ArtifactSpec, stale: &[Matrix]) -> Result<Vec<SharedLiteral>> {
+/// Pack one hidden layer's stale tensor.  Per-layer granularity is the
+/// point: a periodic sync that leaves a layer's halo rows untouched
+/// reuses the layer's existing `Arc` instead of re-marshalling it
+/// (dirty-layer tracking in `coordinator::worker::pull_stale`).
+pub fn pack_stale_layer(
+    spec: &ArtifactSpec,
+    layer: usize,
+    stale: &Matrix,
+) -> Result<Arc<SharedLiteral>> {
+    if layer >= spec.layers - 1 {
+        return Err(eyre!(
+            "stale layer {layer} out of range (layers = {})",
+            spec.layers
+        ));
+    }
+    Ok(Arc::new(pack_matrix(&spec.inputs[3 + layer], stale)?.into()))
+}
+
+/// Pack the L-1 stale tensors (done once per KVS pull, not per step;
+/// the dirty-layer path repacks individual layers via
+/// [`pack_stale_layer`]).
+pub fn pack_stale(spec: &ArtifactSpec, stale: &[Matrix]) -> Result<Vec<Arc<SharedLiteral>>> {
     if stale.len() != spec.layers - 1 {
         return Err(eyre!("need {} stale tensors", spec.layers - 1));
     }
     stale
         .iter()
         .enumerate()
-        .map(|(l, s)| pack_matrix(&spec.inputs[3 + l], s).map(Into::into))
+        .map(|(l, s)| pack_stale_layer(spec, l, s))
         .collect()
 }
 
@@ -480,17 +500,19 @@ pub fn pack_params(spec: &ArtifactSpec, params: &[Matrix]) -> Result<Vec<SharedL
 
 /// Assemble the borrow-only argument list for a step execution.
 /// `kind` decides whether the trailing y/mask are included (train only).
+/// Stale literals arrive as per-layer `Arc`s (the dirty-layer sync path
+/// shares untouched layers across pulls).
 pub fn assemble_inputs<'a>(
     spec: &ArtifactSpec,
     statics: &'a StaticInputs,
-    stale: &'a [SharedLiteral],
+    stale: &'a [Arc<SharedLiteral>],
     params: &'a [SharedLiteral],
 ) -> Vec<&'a xla::Literal> {
     let mut v = Vec::with_capacity(spec.inputs.len());
     v.push(&*statics.x);
     v.push(&*statics.p_in);
     v.push(&*statics.p_out);
-    v.extend(stale.iter().map(|l| &**l));
+    v.extend(stale.iter().map(|l| &***l));
     v.extend(params.iter().map(|l| &**l));
     if spec.kind == "train" {
         v.push(&*statics.y);

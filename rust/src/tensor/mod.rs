@@ -6,6 +6,7 @@
 //! ([`crate::gnn`]) and padded propagation-matrix construction
 //! ([`crate::halo`]).
 
+pub mod pool;
 pub mod sparse;
 
 use crate::util::Rng;
@@ -218,12 +219,15 @@ fn matmul_row(a_row: &[f32], b: &[f32], b_cols: usize, out_row: &mut [f32]) {
     }
 }
 
-/// Multithreaded `out = a @ b` on scoped threads: `a`'s rows (and the
-/// matching output rows) are split into contiguous chunks, one per
-/// thread.  Every output row is written by exactly one thread and the
-/// per-element accumulation order is fixed (k-ascending), so the result
-/// is **bit-identical at any thread count** — the evaluation-side
-/// counterpart of the training engine's determinism guarantee.
+/// Multithreaded `out = a @ b` on the persistent [`pool::ChunkPool`]:
+/// `a`'s rows (and the matching output rows) are split into contiguous
+/// chunks, one per requested thread.  Every output row is written by
+/// exactly one chunk and the per-element accumulation order is fixed
+/// (k-ascending), so the result is **bit-identical at any thread
+/// count** — the evaluation-side counterpart of the training engine's
+/// determinism guarantee.  (This used to spawn scoped threads per call;
+/// the pool removes that per-call spawn/join cost without changing a
+/// single output bit.)
 pub fn par_matmul_into(a: &Matrix, b: &Matrix, out: &mut Matrix, threads: usize) {
     assert_eq!(a.cols, b.rows, "matmul shape mismatch");
     assert!(
@@ -235,20 +239,16 @@ pub fn par_matmul_into(a: &Matrix, b: &Matrix, out: &mut Matrix, threads: usize)
         return a.matmul_into(b, out);
     }
     let chunk = a.rows.div_ceil(threads);
-    std::thread::scope(|s| {
-        for (a_rows, out_rows) in a
-            .data
-            .chunks(chunk * a.cols)
-            .zip(out.data.chunks_mut(chunk * b.cols))
+    let mut row_bounds: Vec<usize> = (0..=threads).map(|i| (i * chunk).min(a.rows)).collect();
+    row_bounds.dedup();
+    let elem_bounds: Vec<usize> = row_bounds.iter().map(|&r| r * b.cols).collect();
+    pool::ChunkPool::global().run_chunks(&mut out.data, &elem_bounds, |i, out_rows| {
+        let (lo, hi) = (row_bounds[i], row_bounds[i + 1]);
+        for (ar, or) in a.data[lo * a.cols..hi * a.cols]
+            .chunks_exact(a.cols)
+            .zip(out_rows.chunks_exact_mut(b.cols))
         {
-            s.spawn(move || {
-                for (ar, or) in a_rows
-                    .chunks_exact(a.cols)
-                    .zip(out_rows.chunks_exact_mut(b.cols))
-                {
-                    matmul_row(ar, &b.data, b.cols, or);
-                }
-            });
+            matmul_row(ar, &b.data, b.cols, or);
         }
     });
 }

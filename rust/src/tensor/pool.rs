@@ -1,0 +1,470 @@
+//! Persistent chunked-compute pool — the long-lived replacement for the
+//! per-call `std::thread::scope` scaffold that used to be copy-pasted
+//! across `spmm_into_threaded`, `par_matmul_into` and
+//! `gat_attention_values`.
+//!
+//! Every eval-side kernel in this crate has the same shape: one flat
+//! `&mut [f32]` output buffer, split at caller-chosen boundaries into
+//! disjoint contiguous chunks, with a pure row kernel run per chunk.
+//! Spawning and joining fresh OS threads for that on *every* SpMM /
+//! matmul / attention call costs tens of microseconds per call — paid
+//! once per layer per eval, thousands of times over a training run.
+//! [`ChunkPool`] spawns its named worker threads **once** and feeds them
+//! chunk descriptors through a generation-stamped job slot instead.
+//!
+//! ## Determinism contract
+//!
+//! The pool preserves the scoped-scaffold guarantee bit-for-bit: each
+//! chunk is a disjoint slice of the output buffer, chunk boundaries are
+//! chosen by the caller (not the pool), and the kernel runs over a
+//! chunk's rows in fixed order.  *Which thread* runs a chunk is
+//! scheduling-dependent; *what it writes* is not — so results are
+//! *bit-identical at any pool size and any thread count*, exactly as
+//! before the refactor.
+//!
+//! ## Execution / safety protocol
+//!
+//! `run_chunks` erases the chunk closure's lifetime into a shared
+//! [`Job`] and publishes it; workers (and the calling thread, which
+//! always participates) claim chunk indices from an atomic counter.
+//! Soundness rests on two invariants:
+//!
+//! 1. the submitter does not return until every claimed chunk has
+//!    finished (`completed == n`), so the borrowed closure and output
+//!    buffer outlive every dereference;
+//! 2. a worker dereferences the erased closure only between a
+//!    *successful* claim (`i < n`) and that chunk's `completed`
+//!    increment — after `completed == n` every further claim fails, so
+//!    the dangling pointer left in an old [`Job`] is never touched.
+//!
+//! A panic inside a chunk kernel is caught on the executing thread
+//! (workers must survive it — they are long-lived), recorded on the
+//! job, and re-raised on the submitting thread after the barrier.
+//!
+//! Jobs are serialized by a submission mutex: concurrent `run_chunks`
+//! calls (e.g. tests running in parallel against the global pool)
+//! queue up rather than interleave.  Re-entrant submission from inside
+//! a chunk kernel would self-deadlock, so a thread-local depth flag
+//! downgrades nested calls to inline sequential execution.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+use crate::util::lock_unpoisoned;
+
+/// One published fan-out: an erased chunk closure plus the claim /
+/// completion counters.  Allocated fresh per `run_chunks` call (an
+/// `Arc` of a few words — noise next to the thread spawns it replaces)
+/// so a late-waking worker can never mix one job's closure with a
+/// newer job's counters.
+struct Job {
+    /// Lifetime-erased `&dyn Fn(chunk_index)`.  Dangles once the
+    /// submitting call returns; see the module docs for why it is
+    /// provably never dereferenced after that.
+    f: *const (dyn Fn(usize) + Sync),
+    /// Number of chunks.
+    n: usize,
+    /// Next chunk index to claim.
+    next: AtomicUsize,
+    /// Chunks fully executed.
+    completed: AtomicUsize,
+    /// A chunk kernel panicked (re-raised by the submitter).
+    panicked: AtomicBool,
+}
+
+// Safety: `f` crosses threads, but is only dereferenced under the
+// claim protocol above while the submitting stack frame is alive.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+/// State guarded by the pool mutex: the current job (if any), a
+/// generation stamp so sleeping workers can tell "new job" from
+/// spurious wakeups, and the shutdown flag.
+struct Slot {
+    gen: u64,
+    job: Option<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    /// Workers wait here for a new generation.
+    work_cv: Condvar,
+    /// The submitter waits here for `completed == n`.
+    done_cv: Condvar,
+}
+
+thread_local! {
+    /// True while this thread is executing inside the pool (either
+    /// submitting or running a chunk): nested submissions run inline.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// A persistent pool of named worker threads executing disjoint-slice
+/// chunk kernels.  See the module docs for the contract.
+pub struct ChunkPool {
+    shared: Arc<Shared>,
+    /// Serializes submissions; held across the whole fan-out.
+    submit: Mutex<()>,
+    workers: usize,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ChunkPool {
+    /// Spawn a pool with `workers` persistent threads.  The submitting
+    /// thread always participates in every job, so a pool sized
+    /// `cores - 1` saturates the machine and `workers == 0` is a valid
+    /// (fully inline) pool.
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot {
+                gen: 0,
+                job: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("digest-chunk-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        ChunkPool {
+            shared,
+            submit: Mutex::new(()),
+            workers,
+            handles,
+        }
+    }
+
+    /// The process-wide pool, created lazily on first use with
+    /// `available_parallelism() - 1` workers (the caller is the final
+    /// lane).  `TrainContext::new` touches this once so the threads
+    /// exist before any hot loop; standalone kernel callers get the
+    /// same pool on demand.
+    pub fn global() -> &'static ChunkPool {
+        static GLOBAL: OnceLock<ChunkPool> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let cores = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1);
+            ChunkPool::new(cores.saturating_sub(1))
+        })
+    }
+
+    /// Number of persistent worker threads (the effective parallelism
+    /// of a saturating job is `size() + 1`: the submitter participates).
+    pub fn size(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `f(i, seg)` for every chunk `i`, where `seg` is the disjoint
+    /// sub-slice `data[bounds[i]..bounds[i + 1]]`.  `bounds` must be
+    /// monotone with `bounds[last] <= data.len()`; chunks may be empty.
+    /// Blocks until every chunk has executed.  Bit-identical to running
+    /// the chunks sequentially in index order, at any pool size.
+    pub fn run_chunks<F>(&self, data: &mut [f32], bounds: &[usize], f: F)
+    where
+        F: Fn(usize, &mut [f32]) + Sync,
+    {
+        let n = bounds.len().saturating_sub(1);
+        if n == 0 {
+            return;
+        }
+        assert!(
+            bounds.windows(2).all(|w| w[0] <= w[1]),
+            "chunk bounds not monotone"
+        );
+        assert!(
+            *bounds.last().unwrap() <= data.len(),
+            "chunk bounds exceed the data buffer"
+        );
+        if n == 1 {
+            // single chunk: no fan-out, no erasure
+            f(0, &mut data[bounds[0]..bounds[1]]);
+            return;
+        }
+        // Disjointness of `seg` slices follows from monotone bounds;
+        // the raw base pointer lets the shared `Fn(usize)` hand each
+        // claimer its own `&mut` window.
+        let base = SendPtr(data.as_mut_ptr());
+        let runner = move |i: usize| {
+            let (lo, hi) = (bounds[i], bounds[i + 1]);
+            let seg = unsafe { std::slice::from_raw_parts_mut(base.0.add(lo), hi - lo) };
+            f(i, seg);
+        };
+        self.run_erased(n, &runner);
+    }
+
+    fn run_erased(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        // nested submission (a chunk kernel calling a pooled kernel)
+        // would deadlock on `submit`; run inline instead — same chunk
+        // order, same numerics.
+        if IN_POOL.with(|c| c.get()) {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let _submission = lock_unpoisoned(&self.submit);
+        IN_POOL.with(|c| c.set(true));
+        let job = Arc::new(Job {
+            f: erase(f),
+            n,
+            next: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+        });
+        {
+            let mut slot = lock_unpoisoned(&self.shared.slot);
+            slot.gen += 1;
+            slot.job = Some(job.clone());
+            self.shared.work_cv.notify_all();
+        }
+        // the submitter is always a lane of its own job
+        run_claims(&job);
+        {
+            let mut slot = lock_unpoisoned(&self.shared.slot);
+            while job.completed.load(Ordering::SeqCst) < n {
+                slot = self
+                    .shared
+                    .done_cv
+                    .wait(slot)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+            }
+            slot.job = None; // drop the slot's ref; stale workers hold their own
+        }
+        IN_POOL.with(|c| c.set(false));
+        if job.panicked.load(Ordering::SeqCst) {
+            panic!("ChunkPool: a chunk kernel panicked (see worker output above)");
+        }
+    }
+}
+
+impl Drop for ChunkPool {
+    fn drop(&mut self) {
+        {
+            let mut slot = lock_unpoisoned(&self.shared.slot);
+            slot.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Erase the closure's lifetime for the trip through [`Job`].  Sound
+/// because the submitter outlives every dereference (module docs).
+// the transmute exists solely to erase `'a` — clippy flags
+// same-type-modulo-lifetime transmutes as useless
+#[allow(clippy::useless_transmute, clippy::unnecessary_cast)]
+fn erase<'a>(f: &'a (dyn Fn(usize) + Sync + 'a)) -> *const (dyn Fn(usize) + Sync) {
+    unsafe {
+        std::mem::transmute::<&'a (dyn Fn(usize) + Sync + 'a), &'static (dyn Fn(usize) + Sync)>(f)
+    }
+}
+
+/// Raw mutable base pointer of the output buffer, shareable across the
+/// claiming threads.  Safety: monotone bounds make every derived window
+/// disjoint, and the buffer outlives the job (the submitter blocks).
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Claim-and-execute loop shared by workers and the submitter.
+///
+/// Safety note: the erased closure pointer is turned into a reference
+/// only *after* a successful claim (`i < n`) — at that point the
+/// submitter is provably still blocked in `run_erased` (it waits for
+/// this chunk's `completed` increment), so the pointee is alive.
+fn run_claims(job: &Job) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::SeqCst);
+        if i >= job.n {
+            return;
+        }
+        let f = unsafe { &*job.f };
+        if catch_unwind(AssertUnwindSafe(|| f(i))).is_err() {
+            job.panicked.store(true, Ordering::SeqCst);
+        }
+        job.completed.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        let job: Arc<Job> = {
+            let mut slot = lock_unpoisoned(&shared.slot);
+            loop {
+                if slot.shutdown {
+                    return;
+                }
+                if slot.gen != seen {
+                    seen = slot.gen;
+                    match &slot.job {
+                        Some(j) => break j.clone(),
+                        // job already finished and was cleared: nothing
+                        // to do for this generation
+                        None => continue,
+                    }
+                }
+                slot = shared
+                    .work_cv
+                    .wait(slot)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+            }
+        };
+        IN_POOL.with(|c| c.set(true));
+        run_claims(&job);
+        IN_POOL.with(|c| c.set(false));
+        // wake the submitter if we just finished the last chunk; taking
+        // the slot lock orders the notify after its condition check
+        if job.completed.load(Ordering::SeqCst) >= job.n {
+            let _slot = lock_unpoisoned(&shared.slot);
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Sequential oracle for a chunked fill.
+    fn fill_seq(data: &mut [f32], bounds: &[usize]) {
+        for i in 0..bounds.len() - 1 {
+            for (k, v) in data[bounds[i]..bounds[i + 1]].iter_mut().enumerate() {
+                *v = (i * 1000 + k) as f32;
+            }
+        }
+    }
+
+    #[test]
+    fn executes_every_chunk_exactly_once() {
+        for workers in [0usize, 1, 3] {
+            let pool = ChunkPool::new(workers);
+            let bounds = [0usize, 7, 7, 20, 64];
+            let mut want = vec![-1.0f32; 64];
+            fill_seq(&mut want, &bounds);
+            let mut got = vec![-1.0f32; 64];
+            pool.run_chunks(&mut got, &bounds, |i, seg| {
+                for (k, v) in seg.iter_mut().enumerate() {
+                    *v = (i * 1000 + k) as f32;
+                }
+            });
+            assert_eq!(got, want, "workers = {workers}");
+        }
+    }
+
+    #[test]
+    fn pool_reuse_across_many_jobs() {
+        let pool = ChunkPool::new(2);
+        let bounds: Vec<usize> = (0..=8).map(|i| i * 5).collect();
+        for round in 0..50u32 {
+            let mut data = vec![0.0f32; 40];
+            pool.run_chunks(&mut data, &bounds, |i, seg| {
+                seg.fill(round as f32 + i as f32);
+            });
+            for i in 0..8 {
+                assert!(data[i * 5..(i + 1) * 5]
+                    .iter()
+                    .all(|&v| v == round as f32 + i as f32));
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_single_chunk_degenerate() {
+        let pool = ChunkPool::new(2);
+        let mut data = vec![1.0f32; 4];
+        pool.run_chunks(&mut data, &[0], |_, _| panic!("no chunks to run"));
+        pool.run_chunks(&mut data, &[], |_, _| panic!("no chunks to run"));
+        pool.run_chunks(&mut data, &[0, 4], |i, seg| {
+            assert_eq!(i, 0);
+            seg.fill(2.0);
+        });
+        assert!(data.iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn chunk_panic_is_reraised_and_pool_survives() {
+        let pool = ChunkPool::new(2);
+        let mut data = vec![0.0f32; 30];
+        let bounds: Vec<usize> = (0..=6).map(|i| i * 5).collect();
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_chunks(&mut data, &bounds, |i, seg| {
+                if i == 3 {
+                    panic!("kernel bug");
+                }
+                seg.fill(1.0);
+            });
+        }));
+        assert!(result.is_err(), "panic must re-raise on the submitter");
+        // the pool keeps working after a kernel panic
+        pool.run_chunks(&mut data, &bounds, |_, seg| seg.fill(9.0));
+        assert!(data.iter().all(|&v| v == 9.0));
+    }
+
+    #[test]
+    fn concurrent_submissions_serialize_correctly() {
+        let pool = Arc::new(ChunkPool::new(3));
+        let mut handles = Vec::new();
+        for t in 0..4u32 {
+            let pool = pool.clone();
+            handles.push(std::thread::spawn(move || {
+                let bounds: Vec<usize> = (0..=10).map(|i| i * 11).collect();
+                for round in 0..20u32 {
+                    let mut data = vec![0.0f32; 110];
+                    pool.run_chunks(&mut data, &bounds, |i, seg| {
+                        seg.fill((t * 10_000 + round * 100 + i as u32) as f32);
+                    });
+                    for i in 0..10 {
+                        let want = (t * 10_000 + round * 100 + i as u32) as f32;
+                        assert!(
+                            data[i * 11..(i + 1) * 11].iter().all(|&v| v == want),
+                            "thread {t} round {round} chunk {i} corrupted"
+                        );
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn nested_submission_runs_inline() {
+        let pool = ChunkPool::global();
+        let mut outer = vec![0.0f32; 8];
+        pool.run_chunks(&mut outer, &[0, 4, 8], |i, seg| {
+            // a kernel that (illegally, but survivably) re-enters the
+            // pool: must run inline rather than deadlock
+            let mut inner = vec![0.0f32; 4];
+            ChunkPool::global().run_chunks(&mut inner, &[0, 2, 4], |j, s| {
+                s.fill((i * 10 + j) as f32);
+            });
+            seg.copy_from_slice(&inner);
+        });
+        assert_eq!(outer, vec![0.0, 0.0, 1.0, 1.0, 10.0, 10.0, 11.0, 11.0]);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ChunkPool::new(4);
+        let mut data = vec![0.0f32; 16];
+        pool.run_chunks(&mut data, &[0, 8, 16], |_, seg| seg.fill(1.0));
+        drop(pool); // must not hang
+    }
+}

@@ -179,10 +179,13 @@ impl CsrMatrix {
         Ok(())
     }
 
-    /// Multithreaded `out = self × dense` on scoped threads.  Rows are
-    /// split into `threads` contiguous chunks balanced by nonzero count;
-    /// each output row is written by exactly one thread, so the result
-    /// is bit-identical to [`CsrMatrix::spmm_into`] at any thread count.
+    /// Multithreaded `out = self × dense` on the persistent
+    /// [`ChunkPool`](super::pool::ChunkPool).  Rows are split into
+    /// `threads` contiguous chunks balanced by nonzero count; each
+    /// output row is written by exactly one chunk, so the result is
+    /// bit-identical to [`CsrMatrix::spmm_into`] at any thread count.
+    /// (This used to spawn scoped threads per call; the pool removes
+    /// that per-call spawn/join cost with byte-identical output.)
     pub fn spmm_into_threaded(
         &self,
         dense: &Matrix,
@@ -192,22 +195,15 @@ impl CsrMatrix {
         self.check_spmm_shapes(dense, out)?;
         let bounds = balanced_row_chunks(&self.row_ptr, threads);
         if bounds.len() <= 2 {
-            // single chunk: skip the thread scope entirely
+            // single chunk: skip the fan-out entirely
             return self.spmm_into(dense, out);
         }
         let (row_ptr, col_idx, values) =
             (&self.row_ptr[..], &self.col_idx[..], &self.values[..]);
-        std::thread::scope(|s| {
-            let mut rest: &mut [f32] = &mut out.data;
-            for w in bounds.windows(2) {
-                let (lo, hi) = (w[0], w[1]);
-                let (chunk, tail) =
-                    std::mem::take(&mut rest).split_at_mut((hi - lo) * dense.cols);
-                rest = tail;
-                s.spawn(move || {
-                    spmm_rows(&row_ptr[lo..=hi], col_idx, values, dense, chunk);
-                });
-            }
+        let elem_bounds: Vec<usize> = bounds.iter().map(|&r| r * dense.cols).collect();
+        super::pool::ChunkPool::global().run_chunks(&mut out.data, &elem_bounds, |i, chunk| {
+            let (lo, hi) = (bounds[i], bounds[i + 1]);
+            spmm_rows(&row_ptr[lo..=hi], col_idx, values, dense, chunk);
         });
         Ok(())
     }

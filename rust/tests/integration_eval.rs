@@ -90,6 +90,48 @@ fn eval_bit_identical_across_thread_counts() {
     }
 }
 
+/// A cached [`gnn::Workspace`] driven repeatedly (the periodic-eval hot
+/// path) is bit-identical to building a fresh workspace per call, GCN
+/// and GAT, at every thread count — and its structure CSR is built
+/// exactly once with zero steady-state scratch allocations.
+#[test]
+fn workspace_reuse_is_bit_identical_to_fresh_forwards() {
+    let ds = random_sbm(13, 800, 16, 8.0, 3.0);
+    for kind in [ModelKind::Gcn, ModelKind::Gat] {
+        let mut prng = Rng::new(6);
+        let params = init_params(kind, &[16, 20, 5], &mut prng);
+        let mut ws = gnn::Workspace::new(kind, &ds.graph);
+        let mut warm_allocs = None;
+        for threads in [1usize, 2, 4, 2, 1] {
+            let (want, want_h) =
+                gnn::forward_t(kind, &ds.graph, &ds.features, &params, true, threads).unwrap();
+            let (got, got_h) = ws.forward(&ds.features, &params, true, threads).unwrap();
+            assert!(
+                got.data.iter().zip(&want.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{kind:?}: cached-workspace logits diverged at {threads} threads"
+            );
+            assert_eq!(got_h.len(), want_h.len());
+            for (a, b) in got_h.iter().zip(&want_h) {
+                assert!(
+                    a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{kind:?}: cached-workspace hidden diverged at {threads} threads"
+                );
+            }
+            match warm_allocs {
+                None => warm_allocs = Some(ws.stats().scratch_allocs),
+                Some(w) => assert_eq!(
+                    ws.stats().scratch_allocs,
+                    w,
+                    "{kind:?}: steady-state forward allocated scratch"
+                ),
+            }
+        }
+        let stats = ws.stats();
+        assert_eq!(stats.structure_builds, 1, "{kind:?}: structure rebuilt");
+        assert_eq!(stats.forwards, 5);
+    }
+}
+
 /// The auto thread count (0) resolves to the same numerics as any
 /// explicit count.
 #[test]

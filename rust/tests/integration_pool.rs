@@ -1,0 +1,308 @@
+//! ChunkPool refactor safety net: the pooled kernels must be
+//! **bit-identical** to the pre-refactor scoped-thread scaffolds at
+//! 1/2/4 threads.
+//!
+//! The golden references below are verbatim ports of the seed
+//! `std::thread::scope` implementations that `spmm_into_threaded`,
+//! `par_matmul_into` and `gat_attention_values` used before the pool
+//! landed (reconstructed from the same public CSR/Matrix data the old
+//! code read).  Any divergence — a wrong chunk boundary, an overlap, a
+//! reordered accumulation — shows up here as a bit mismatch, not a
+//! tolerance failure.
+
+use digest::gnn::{self, init_params_for_dims as init_params, ModelKind};
+use digest::graph::generators::{generate_sbm, SbmParams};
+use digest::graph::Dataset;
+use digest::tensor::pool::ChunkPool;
+use digest::tensor::sparse::{balanced_row_chunks, CsrMatrix};
+use digest::tensor::{par_matmul_into, Matrix};
+use digest::util::Rng;
+
+fn random_sbm(seed: u64, nodes: usize) -> Dataset {
+    generate_sbm(&SbmParams {
+        name: "pool-test".into(),
+        nodes,
+        communities: 4,
+        intra_degree: 8.0,
+        inter_degree: 3.0,
+        d_in: 12,
+        signal: 1.0,
+        skew: 0.5, // heavy-tailed degrees stress the nnz balancing
+        label_noise: 0.0,
+        train_frac: 0.5,
+        val_frac: 0.25,
+        seed,
+    })
+}
+
+fn bits_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+// ---------------------------------------------------------------------------
+// Golden replicas of the pre-refactor scoped-thread scaffolds
+// ---------------------------------------------------------------------------
+
+/// Seed `spmm_into_threaded`: scoped threads over nnz-balanced chunks.
+fn scoped_spmm(csr: &CsrMatrix, dense: &Matrix, out: &mut Matrix, threads: usize) {
+    assert_eq!(csr.cols, dense.rows);
+    let bounds = balanced_row_chunks(&csr.row_ptr, threads);
+    let (row_ptr, col_idx, values) = (&csr.row_ptr[..], &csr.col_idx[..], &csr.values[..]);
+    std::thread::scope(|s| {
+        let mut rest: &mut [f32] = &mut out.data;
+        for w in bounds.windows(2) {
+            let (lo, hi) = (w[0], w[1]);
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut((hi - lo) * dense.cols);
+            rest = tail;
+            s.spawn(move || {
+                let offsets = &row_ptr[lo..=hi];
+                for (r, win) in offsets.windows(2).enumerate() {
+                    let d = dense.cols;
+                    let orow = &mut chunk[r * d..(r + 1) * d];
+                    orow.fill(0.0);
+                    for e in win[0]..win[1] {
+                        let a = values[e];
+                        let drow = dense.row(col_idx[e] as usize);
+                        for (o, x) in orow.iter_mut().zip(drow) {
+                            *o += a * x;
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Seed `par_matmul_into`: scoped threads over equal-row chunks, with
+/// the same 16-wide column-blocked row kernel.
+fn scoped_matmul(a: &Matrix, b: &Matrix, out: &mut Matrix, threads: usize) {
+    const MM_BLOCK: usize = 16;
+    fn matmul_row(a_row: &[f32], b: &[f32], b_cols: usize, out_row: &mut [f32]) {
+        let mut j = 0;
+        while j < b_cols {
+            let blk = MM_BLOCK.min(b_cols - j);
+            let mut acc = [0f32; MM_BLOCK];
+            for (k, &av) in a_row.iter().enumerate() {
+                let brow = &b[k * b_cols + j..k * b_cols + j + blk];
+                for (acc_v, &bv) in acc[..blk].iter_mut().zip(brow) {
+                    *acc_v += av * bv;
+                }
+            }
+            out_row[j..j + blk].copy_from_slice(&acc[..blk]);
+            j += blk;
+        }
+    }
+    let chunk = a.rows.div_ceil(threads.clamp(1, a.rows.max(1)));
+    std::thread::scope(|s| {
+        for (a_rows, out_rows) in a
+            .data
+            .chunks(chunk * a.cols)
+            .zip(out.data.chunks_mut(chunk * b.cols))
+        {
+            s.spawn(move || {
+                for (ar, or) in a_rows
+                    .chunks_exact(a.cols)
+                    .zip(out_rows.chunks_exact_mut(b.cols))
+                {
+                    matmul_row(ar, &b.data, b.cols, or);
+                }
+            });
+        }
+    });
+}
+
+/// Seed `gat_attention_values`: scoped threads over nnz-balanced row
+/// chunks running the LeakyReLU-logit stable softmax per row.
+fn scoped_attention(att: &mut CsrMatrix, s_src: &[f32], s_dst: &[f32], threads: usize) {
+    const LEAKY_SLOPE: f32 = 0.2;
+    fn attention_rows(
+        row0: usize,
+        offsets: &[usize],
+        col_idx: &[u32],
+        s_src: &[f32],
+        s_dst: &[f32],
+        seg: &mut [f32],
+    ) {
+        let base = offsets[0];
+        for (i, w) in offsets.windows(2).enumerate() {
+            let v = row0 + i;
+            let cols = &col_idx[w[0]..w[1]];
+            let vals = &mut seg[w[0] - base..w[1] - base];
+            let sv = s_src[v];
+            let mut mx = f32::NEG_INFINITY;
+            for (val, &c) in vals.iter_mut().zip(cols) {
+                let e = sv + s_dst[c as usize];
+                let e = if e > 0.0 { e } else { LEAKY_SLOPE * e };
+                *val = e;
+                mx = mx.max(e);
+            }
+            let mut denom = 0.0f32;
+            for val in vals.iter_mut() {
+                *val = (*val - mx).exp();
+                denom += *val;
+            }
+            for val in vals.iter_mut() {
+                *val /= denom;
+            }
+        }
+    }
+    let row_ptr = att.row_ptr.clone();
+    let col_idx = att.col_idx.clone();
+    let bounds = balanced_row_chunks(&row_ptr, threads);
+    if bounds.len() <= 2 {
+        let nnz = att.values.len();
+        attention_rows(0, &row_ptr, &col_idx, s_src, s_dst, &mut att.values[..nnz]);
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut rest: &mut [f32] = &mut att.values;
+        for w in bounds.windows(2) {
+            let (lo, hi) = (w[0], w[1]);
+            let (seg, tail) = std::mem::take(&mut rest).split_at_mut(row_ptr[hi] - row_ptr[lo]);
+            rest = tail;
+            let (row_ptr, col_idx) = (&row_ptr, &col_idx);
+            s.spawn(move || attention_rows(lo, &row_ptr[lo..=hi], col_idx, s_src, s_dst, seg));
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Bit-identity: pooled kernel vs scoped golden, 1/2/4 threads
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pooled_spmm_bit_identical_to_scoped_golden() {
+    let ds = random_sbm(11, 900);
+    let prop = gnn::gcn_prop_csr(&ds.graph);
+    let mut rng = Rng::new(3);
+    let dense = Matrix::from_fn(ds.n(), 24, |_, _| rng.uniform(-1.0, 1.0));
+    for threads in [1usize, 2, 4] {
+        let mut want = Matrix::zeros(ds.n(), 24);
+        scoped_spmm(&prop, &dense, &mut want, threads);
+        let mut got = Matrix::zeros(ds.n(), 24);
+        prop.spmm_into_threaded(&dense, &mut got, threads).unwrap();
+        assert!(
+            bits_equal(&got.data, &want.data),
+            "pooled spmm diverged from the scoped golden at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn pooled_matmul_bit_identical_to_scoped_golden() {
+    let mut rng = Rng::new(7);
+    for (m, k, n) in [(100, 33, 17), (257, 64, 40), (64, 8, 16)] {
+        let a = Matrix::from_fn(m, k, |_, _| rng.uniform(-1.0, 1.0));
+        let b = Matrix::from_fn(k, n, |_, _| rng.uniform(-1.0, 1.0));
+        for threads in [1usize, 2, 4] {
+            let mut want = Matrix::zeros(m, n);
+            scoped_matmul(&a, &b, &mut want, threads);
+            let mut got = Matrix::zeros(m, n);
+            par_matmul_into(&a, &b, &mut got, threads);
+            assert!(
+                bits_equal(&got.data, &want.data),
+                "pooled matmul diverged at {m}x{k}x{n}, {threads} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn pooled_attention_bit_identical_to_scoped_golden() {
+    let ds = random_sbm(23, 700);
+    let mut rng = Rng::new(9);
+    let n = ds.n();
+    let s_src: Vec<f32> = (0..n).map(|_| rng.uniform(-2.0, 2.0)).collect();
+    let s_dst: Vec<f32> = (0..n).map(|_| rng.uniform(-2.0, 2.0)).collect();
+    for threads in [1usize, 2, 4] {
+        let mut want = gnn::gat_structure_csr(&ds.graph);
+        scoped_attention(&mut want, &s_src, &s_dst, threads);
+        let mut got = gnn::gat_structure_csr(&ds.graph);
+        gnn::gat_attention_values(&mut got, &s_src, &s_dst, threads);
+        assert!(
+            bits_equal(&got.values, &want.values),
+            "pooled attention diverged at {threads} threads"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pool-level behavior under kernel-shaped load
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dedicated_pools_of_any_size_agree_with_global() {
+    // run_chunks through pools of size 0/1/3 must all equal the global
+    // pool's result (and thus the sequential kernel)
+    let ds = random_sbm(31, 400);
+    let prop = gnn::gcn_prop_csr(&ds.graph);
+    let mut rng = Rng::new(1);
+    let dense = Matrix::from_fn(ds.n(), 8, |_, _| rng.uniform(-1.0, 1.0));
+    let mut want = Matrix::zeros(ds.n(), 8);
+    prop.spmm_into(&dense, &mut want).unwrap();
+
+    for pool_size in [0usize, 1, 3] {
+        let pool = ChunkPool::new(pool_size);
+        let bounds = balanced_row_chunks(&prop.row_ptr, 4);
+        let elem_bounds: Vec<usize> = bounds.iter().map(|&r| r * dense.cols).collect();
+        let mut got = Matrix::zeros(ds.n(), 8);
+        pool.run_chunks(&mut got.data, &elem_bounds, |i, chunk| {
+            // same row kernel the production path runs
+            let (lo, hi) = (bounds[i], bounds[i + 1]);
+            let d = dense.cols;
+            for (r, w) in prop.row_ptr[lo..=hi].windows(2).enumerate() {
+                let orow = &mut chunk[r * d..(r + 1) * d];
+                orow.fill(0.0);
+                for e in w[0]..w[1] {
+                    let a = prop.values[e];
+                    let drow = dense.row(prop.col_idx[e] as usize);
+                    for (o, x) in orow.iter_mut().zip(drow) {
+                        *o += a * x;
+                    }
+                }
+            }
+        });
+        assert!(
+            bits_equal(&got.data, &want.data),
+            "pool size {pool_size} diverged"
+        );
+    }
+}
+
+#[test]
+fn concurrent_forwards_through_the_global_pool_are_correct() {
+    // several threads driving full GCN/GAT forwards at once: jobs
+    // serialize on the pool without corrupting or deadlocking
+    let ds = std::sync::Arc::new(random_sbm(5, 500));
+    let mut rng = Rng::new(77);
+    let gcn = std::sync::Arc::new(init_params(ModelKind::Gcn, &[12, 10, 4], &mut rng));
+    let gat = std::sync::Arc::new(init_params(ModelKind::Gat, &[12, 10, 4], &mut rng));
+    let (want_gcn, _) =
+        gnn::forward_t(ModelKind::Gcn, &ds.graph, &ds.features, &gcn, true, 1).unwrap();
+    let (want_gat, _) =
+        gnn::forward_t(ModelKind::Gat, &ds.graph, &ds.features, &gat, true, 1).unwrap();
+    let mut handles = Vec::new();
+    for t in 0..4usize {
+        let (ds, gcn, gat) = (ds.clone(), gcn.clone(), gat.clone());
+        let (want_gcn, want_gat) = (want_gcn.clone(), want_gat.clone());
+        handles.push(std::thread::spawn(move || {
+            for round in 0..3 {
+                let threads = 1 + (t + round) % 4;
+                let (kind, params, want) = if (t + round) % 2 == 0 {
+                    (ModelKind::Gcn, &gcn, &want_gcn)
+                } else {
+                    (ModelKind::Gat, &gat, &want_gat)
+                };
+                let (got, _) =
+                    gnn::forward_t(kind, &ds.graph, &ds.features, params, true, threads).unwrap();
+                assert!(
+                    bits_equal(&got.data, &want.data),
+                    "thread {t} round {round}: concurrent forward corrupted"
+                );
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
