@@ -1,0 +1,92 @@
+//! Serving lifecycle: train → export → registry → predict.
+//!
+//! ```sh
+//! cargo run --release --example serve_basic
+//! ```
+//!
+//! Demonstrates the `digest::serve` pieces end to end:
+//! 1. train a few epochs, auto-exporting the best-val-F1 model
+//!    (`export_best=` → `serve::ExportBestHook`);
+//! 2. load the exported `digest-model-v1` file into a
+//!    [`digest::serve::ModelRegistry`];
+//! 3. build a [`digest::serve::InferenceEngine`] over the same graph
+//!    and serve full-graph, node-subset, and top-k queries;
+//! 4. batch two models through `predict_many` and show the engine
+//!    performed zero structure rebuilds after warmup.
+
+use std::sync::Arc;
+
+use digest::config::RunConfig;
+use digest::coordinator::{new_session, Driver, TrainContext, TrainSession as _};
+use digest::graph::registry::load;
+use digest::serve::{InferenceEngine, ModelRegistry, NodeQuery};
+use digest::Result;
+
+fn main() -> Result<()> {
+    // --- 1. train, auto-exporting the best model seen -------------------
+    let best_path = std::env::temp_dir().join("digest_serve_demo_best.json");
+    let mut cfg = RunConfig::default();
+    cfg.epochs = 12;
+    cfg.eval_every = 2;
+    cfg.export_best = Some(best_path.to_string_lossy().into_owned());
+    let ctx = TrainContext::new(cfg)?;
+    let mut session = new_session(&ctx)?;
+    let mut driver = Driver::from_config(&ctx.cfg)?;
+    let res = driver.run(session.as_mut())?;
+    println!(
+        "trained {} epochs, best val F1 {:.4}; best model exported to {:?}",
+        res.points.len(),
+        res.best_val_f1,
+        best_path
+    );
+    // a session also exports directly (no disk involved):
+    let last = session.export_model("karate-last")?;
+    println!(
+        "direct export {:?}: dims {:?}, graph fingerprint {:#018x}",
+        last.name(),
+        last.dims(),
+        last.graph_fingerprint()
+    );
+
+    // --- 2. registry: load / list / evict -------------------------------
+    let mut registry = ModelRegistry::new();
+    let best = registry.load_file(&best_path)?;
+    registry.insert(last);
+    println!("registry holds {:?}", registry.names());
+
+    // --- 3. an engine over the same graph serves predictions ------------
+    // (a serving process would `load("karate", seed)` itself; here we
+    // share the training context's dataset Arc directly)
+    let engine = InferenceEngine::new(ctx.ds.clone());
+    let top3 = engine.predict(&best, &NodeQuery::nodes(vec![0, 16, 33]).with_top_k(3))?;
+    for (i, &node) in top3.nodes.iter().enumerate() {
+        let ranked: Vec<String> = top3.top_k[i]
+            .iter()
+            .map(|&(class, logit)| format!("class {class} ({logit:.3})"))
+            .collect();
+        println!("node {node:>2}: {}", ranked.join(", "));
+    }
+
+    // --- 4. multi-model batch: zero rebuilds after warmup ---------------
+    let last = registry.get("karate-last")?;
+    let q = NodeQuery::full();
+    let requests = [(best.as_ref(), &q), (last.as_ref(), &q)];
+    engine.predict_many(&requests)?; // warmup builds the structure once
+    let warm = engine.stats();
+    for _ in 0..5 {
+        engine.predict_many(&requests)?;
+    }
+    let steady = engine.stats();
+    assert_eq!(steady.structure_builds, warm.structure_builds);
+    println!(
+        "served {} predictions in {} batches with {} structure build(s) total",
+        steady.predictions, steady.batches, steady.structure_builds
+    );
+
+    // a model refuses to run on the wrong graph — structured error:
+    let other = Arc::new(load("karate", 7)?); // same dims, different features
+    let wrong_engine = InferenceEngine::new(other);
+    let err = wrong_engine.predict(&best, &NodeQuery::full()).unwrap_err();
+    println!("\nmismatch guard: {err}");
+    Ok(())
+}

@@ -29,9 +29,12 @@
 #[path = "harness.rs"]
 mod harness;
 
+use std::sync::Arc;
+
 use digest::gnn::{self, init_params_for_dims as init_params, reference, ModelKind, Workspace};
 use digest::graph::registry::load;
 use digest::graph::Dataset;
+use digest::serve::{InferenceEngine, InferenceModel, NodeQuery};
 use digest::tensor::sparse::balanced_row_chunks;
 use digest::tensor::Matrix;
 use digest::util::Rng;
@@ -236,6 +239,111 @@ fn run_pool_vs_scope(ds: &Dataset, rows: &mut Vec<Row>) {
     println!();
 }
 
+/// Serving rows (ISSUE 5): one engine, two GCN models of *different*
+/// hidden widths over the same graph — `serve-single` interleaves
+/// per-model `predict` calls (per-request validation + pool
+/// round-trip), `serve-batch` runs the same requests through one
+/// `predict_many` (grouped by dims, one checkout per group).  Both
+/// paths must be bit-identical and — thanks to the width-aware
+/// workspace pool — rebuild and re-allocate nothing after warmup;
+/// hard-asserted before timing.
+fn run_serve(ds: &Arc<Dataset>, rows: &mut Vec<Row>) {
+    let engine = InferenceEngine::new(ds.clone());
+    let dims_a = [ds.d_in(), HIDDEN, ds.n_class];
+    let dims_b = [ds.d_in(), HIDDEN / 2, ds.n_class];
+    let mut rng = Rng::new(4321);
+    let a = InferenceModel::new(
+        "bench-a",
+        "bench",
+        ModelKind::Gcn,
+        ds.name.clone(),
+        42,
+        dims_a.to_vec(),
+        true,
+        engine.fingerprint(),
+        0,
+        f64::NAN,
+        init_params(ModelKind::Gcn, &dims_a, &mut rng),
+    )
+    .unwrap();
+    let b = InferenceModel::new(
+        "bench-b",
+        "bench",
+        ModelKind::Gcn,
+        ds.name.clone(),
+        42,
+        dims_b.to_vec(),
+        true,
+        engine.fingerprint(),
+        0,
+        f64::NAN,
+        init_params(ModelKind::Gcn, &dims_b, &mut rng),
+    )
+    .unwrap();
+    let q = NodeQuery::full();
+    let reqs = [(&a, &q), (&b, &q)];
+
+    // correctness before timing: batched == single, bitwise
+    let warm_batch = engine.predict_many(&reqs).unwrap();
+    for (model, pred) in [&a, &b].into_iter().zip(&warm_batch) {
+        let single = engine.predict(model, &q).unwrap();
+        assert!(
+            single
+                .logits
+                .data
+                .iter()
+                .zip(&pred.logits.data)
+                .all(|(x, y)| x.to_bits() == y.to_bits()),
+            "{}: batched predict diverged from single predict",
+            ds.name
+        );
+    }
+    let warm = engine.stats();
+
+    let single_rep = bench(&format!("{} serve 2-model single-predict loop", ds.name), || {
+        engine.predict(&a, &q).unwrap();
+        engine.predict(&b, &q).unwrap();
+    });
+    let batch_rep = bench(&format!("{} serve 2-model predict_many     ", ds.name), || {
+        engine.predict_many(&reqs).unwrap();
+    });
+    println!(
+        "    -> batched vs single: {:.2}x",
+        single_rep.mean.as_secs_f64() / batch_rep.mean.as_secs_f64()
+    );
+    let steady = engine.stats();
+    assert_eq!(
+        steady.structure_builds, warm.structure_builds,
+        "{}: serving rebuilt a structure CSR after warmup",
+        ds.name
+    );
+    assert_eq!(
+        steady.scratch_allocs, warm.scratch_allocs,
+        "{}: serving re-allocated workspace scratch after warmup",
+        ds.name
+    );
+    println!(
+        "    serve counters: {} structure build(s), {} scratch allocs, {} forwards, {} predictions",
+        steady.structure_builds, steady.scratch_allocs, steady.forwards, steady.predictions
+    );
+    println!();
+    let single_mean = single_rep.mean.as_secs_f64();
+    for (path, rep) in [("serve-single", single_rep), ("serve-batch", batch_rep)] {
+        // for serve rows "speedup" is vs the single-predict loop
+        let speedup = single_mean / rep.mean.as_secs_f64();
+        rows.push(Row {
+            dataset: ds.name.clone(),
+            model: "serve",
+            nodes: ds.n(),
+            edges: ds.graph.m(),
+            path,
+            threads: 0,
+            report: rep,
+            speedup_vs_dense: speedup,
+        });
+    }
+}
+
 /// The pre-refactor scoped-thread SpMM scaffold, kept verbatim as the
 /// bench baseline (`tests/integration_pool.rs` holds the bit-identity
 /// proof against it).
@@ -286,7 +394,7 @@ fn main() {
     for name in tiers {
         println!("== {name} ==");
         let t0 = std::time::Instant::now();
-        let ds = load(name, 42).unwrap();
+        let ds = Arc::new(load(name, 42).unwrap());
         println!(
             "   n = {}, undirected edges = {}, d_in = {} (generated in {:.1?})",
             ds.n(),
@@ -296,6 +404,7 @@ fn main() {
         );
         run_tier(&ds, &mut rows);
         run_pool_vs_scope(&ds, &mut rows);
+        run_serve(&ds, &mut rows);
     }
 
     // acceptance tracking (ISSUE 3): the *fresh* sparse path must beat

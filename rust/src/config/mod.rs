@@ -118,6 +118,11 @@ pub struct RunConfig {
     /// Stream per-epoch telemetry rows to this CSV file while training
     /// runs (same columns as the post-hoc `--csv` timeline).
     pub stream_csv: Option<String>,
+    /// Auto-export the best-val-F1 model (a sealed
+    /// `serve::InferenceModel`, `digest-model-v1`) to this path while
+    /// training runs; re-written whenever an evaluation sets a new
+    /// best (`serve::ExportBestHook`).
+    pub export_best: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -145,6 +150,7 @@ impl Default for RunConfig {
             early_stop: 0,
             wall_budget: 0.0,
             stream_csv: None,
+            export_best: None,
         }
     }
 }
@@ -217,6 +223,9 @@ impl RunConfig {
         if let Some(v) = j.opt("stream_csv") {
             c.stream_csv = Some(v.as_str()?.to_string());
         }
+        if let Some(v) = j.opt("export_best") {
+            c.export_best = Some(v.as_str()?.to_string());
+        }
         if let Some(v) = j.opt("straggler") {
             let arr = v.as_arr()?;
             if arr.len() != 3 {
@@ -267,6 +276,7 @@ impl RunConfig {
                 self.wall_budget = v.parse().map_err(|e| eyre!("wall_budget: {e}"))?
             }
             "stream_csv" => self.stream_csv = Some(v.to_string()),
+            "export_best" => self.export_best = Some(v.to_string()),
             _ => return Err(eyre!("unknown config key {k:?}")),
         }
         // field-local rules only: cross-field constraints (straggler id
@@ -469,6 +479,15 @@ mod tests {
         assert_eq!(c.early_stop, 3);
         assert!((c.wall_budget - 120.5).abs() < 1e-12);
         assert_eq!(c.stream_csv.as_deref(), Some("live.csv"));
+        // the export_best knob rides the same paths
+        let j = Json::parse(r#"{"export_best": "best.model.json"}"#).unwrap();
+        assert_eq!(
+            RunConfig::from_json(&j).unwrap().export_best.as_deref(),
+            Some("best.model.json")
+        );
+        let mut c2 = RunConfig::default();
+        c2.apply_override("export_best=m.json").unwrap();
+        assert_eq!(c2.export_best.as_deref(), Some("m.json"));
         // save_every without a path is a config error
         let j = Json::parse(r#"{"save_every": 5}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err());

@@ -1,19 +1,18 @@
 //! Training context: everything a scheduler needs, wired up once.
 
-use std::sync::Mutex;
+use std::sync::Arc;
 
 use crate::config::RunConfig;
 use crate::costmodel::CostModel;
-use crate::gnn::{self, ModelKind, Workspace, WorkspaceStats};
+use crate::gnn::{ModelKind, WorkspaceStats};
 use crate::graph::registry::{load, spec as dataset_spec};
-use crate::graph::{Dataset, Split};
+use crate::graph::Dataset;
 use crate::halo::{build_all_plans, PropKind, SubgraphPlan};
 use crate::kvs::RepStore;
 use crate::partition::{partition, Partition};
 use crate::runtime::{ArtifactSpec, Runtime};
-use crate::tensor::pool::ChunkPool;
+use crate::serve::InferenceEngine;
 use crate::tensor::Matrix;
-use crate::util::lock_unpoisoned;
 use crate::Result;
 
 /// Immutable per-run context shared by all schedulers — and, since the
@@ -22,7 +21,9 @@ use crate::Result;
 /// the assertion at the bottom of this file checks at compile time.
 pub struct TrainContext {
     pub cfg: RunConfig,
-    pub ds: Dataset,
+    /// The dataset, `Arc`-shared with the context's [`InferenceEngine`]
+    /// (and any serving engine a caller builds over the same graph).
+    pub ds: Arc<Dataset>,
     pub partition: Partition,
     pub plans: Vec<SubgraphPlan>,
     pub spec: ArtifactSpec,
@@ -37,17 +38,20 @@ pub struct TrainContext {
     /// Optional warm-start parameters (checkpoint resume); schedulers
     /// use these instead of fresh Glorot init when present.
     pub warm_start: Option<Vec<Matrix>>,
-    /// Cached global-eval workspace (structure CSR + per-layer
-    /// scratch); a mutex keeps the context `Sync` while `global_eval`
-    /// takes `&self`.  Steady-state evals through it perform zero
-    /// structure rebuilds and zero scratch allocations.
-    eval_ws: Mutex<Workspace>,
+    /// The engine-grade model-apply path: training eval
+    /// ([`TrainContext::global_eval`]) and serving
+    /// (`serve::InferenceEngine::predict`) run through the *same*
+    /// workspace-pooled forward entry point, so steady-state periodic
+    /// evals perform zero structure rebuilds and zero scratch
+    /// allocations — and serving a trained model is bit-identical to
+    /// evaluating it during training.
+    eval_engine: InferenceEngine,
 }
 
 impl TrainContext {
     pub fn new(cfg: RunConfig) -> Result<Self> {
         cfg.validate()?;
-        let ds = load(&cfg.dataset, cfg.seed)?;
+        let ds = Arc::new(load(&cfg.dataset, cfg.seed)?);
         let mut part = partition(&ds.graph, cfg.parts, cfg.partitioner, cfg.seed);
         let artifact = cfg.artifact_name()?;
         let rt = Runtime::new(&cfg.artifact_dir)?;
@@ -63,10 +67,9 @@ impl TrainContext {
         let mut cost = CostModel::default();
         cost.straggler = cfg.straggler;
         let _ = dataset_spec(&cfg.dataset)?; // validated name
-        let eval_ws = Mutex::new(Workspace::new(cfg.model, &ds.graph));
-        // warm the process-wide compute pool so its worker threads
-        // exist before any hot loop runs (kernels reach it lazily)
-        ChunkPool::global();
+        // the engine warms the process-wide compute pool and shares the
+        // dataset Arc; its workspace pool is built lazily on first eval
+        let eval_engine = InferenceEngine::new(ds.clone()).with_threads(cfg.threads);
         Ok(TrainContext {
             cfg,
             ds,
@@ -79,7 +82,7 @@ impl TrainContext {
             cost,
             artifact,
             warm_start: None,
-            eval_ws,
+            eval_engine,
         })
     }
 
@@ -107,32 +110,32 @@ impl TrainContext {
     /// (0 = auto); the sparse forward is bit-identical at any thread
     /// count, so this only trades wall-clock for cores.
     ///
-    /// Forwards through the context's cached [`Workspace`]: the
-    /// structure CSR is built once at context construction and every
-    /// per-layer scratch matrix is reused, so steady-state periodic
-    /// evals rebuild and allocate nothing (see
-    /// [`TrainContext::eval_ws_stats`]).
+    /// Delegates to the context's [`InferenceEngine`] — the same
+    /// workspace-pooled forward entry point serving uses — so
+    /// steady-state periodic evals rebuild and allocate nothing (see
+    /// [`TrainContext::eval_ws_stats`]) and `predict` over the trained
+    /// model reproduces training-time eval bit-for-bit.
     pub fn global_eval(&self, params: &[Matrix]) -> Result<(f64, f64)> {
-        let mut ws = lock_unpoisoned(&self.eval_ws);
-        let (logits, _) = ws.forward(
-            &self.ds.features,
-            params,
-            self.spec.normalize,
-            self.cfg.threads,
-        )?;
-        let preds = logits.argmax_rows();
-        let val = self.ds.nodes_in_split(Split::Val);
-        let test = self.ds.nodes_in_split(Split::Test);
-        Ok((
-            gnn::metrics::micro_f1(&preds, &self.ds.labels, &val),
-            gnn::metrics::micro_f1(&preds, &self.ds.labels, &test),
-        ))
+        self.eval_engine
+            .eval_f1(self.cfg.model, params, self.spec.normalize, self.cfg.threads)
     }
 
-    /// Rebuild/allocation counters of the cached eval workspace (used
-    /// by tests and benches to assert the zero-rebuild steady state).
+    /// The engine behind [`TrainContext::global_eval`]; also what
+    /// `session.export_model` fingerprints against, and a ready-made
+    /// serving engine for the graph this run trains on.
+    pub fn eval_engine(&self) -> &InferenceEngine {
+        &self.eval_engine
+    }
+
+    /// Rebuild/allocation counters of the cached eval path (used by
+    /// tests and benches to assert the zero-rebuild steady state).
     pub fn eval_ws_stats(&self) -> WorkspaceStats {
-        lock_unpoisoned(&self.eval_ws).stats()
+        let s = self.eval_engine.stats();
+        WorkspaceStats {
+            structure_builds: s.structure_builds,
+            scratch_allocs: s.scratch_allocs,
+            forwards: s.forwards,
+        }
     }
 
     /// Number of hidden (stale-exchanged) layers = L - 1.
@@ -160,6 +163,8 @@ fn _assert_train_context_is_shareable() {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gnn;
+    use crate::graph::Split;
     use crate::runtime::init_params;
 
     #[test]

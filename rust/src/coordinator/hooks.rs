@@ -12,11 +12,13 @@
 //! Built-ins cover the common production needs: [`CsvStreamHook`]
 //! (stream the telemetry timeline to disk while training runs),
 //! [`EarlyStopHook`] (patience on validation F1), [`WallClockHook`]
-//! (real-time budget), and the driver's own [`CheckpointPolicy`]
-//! (periodic + final training-state saves).  All four wire up from
-//! `RunConfig` knobs via [`Driver::from_config`], so
-//! `digest train stream_csv=live.csv early_stop=3 save_to=ck.json
-//! save_every=10 wall_budget=3600` needs no code.
+//! (real-time budget), [`crate::serve::ExportBestHook`] (auto-export
+//! the best-val-F1 model as a servable `digest-model-v1` file), and the
+//! driver's own [`CheckpointPolicy`] (periodic + final training-state
+//! saves).  All of them wire up from `RunConfig` knobs via
+//! [`Driver::from_config`], so `digest train stream_csv=live.csv
+//! early_stop=3 save_to=ck.json save_every=10 wall_budget=3600
+//! export_best=best.json` needs no code.
 //!
 //! Scope note: checkpoints capture the *session* (the training state),
 //! not the driver.  Hook-internal state — early-stop patience counters,
@@ -102,6 +104,10 @@ pub struct Driver {
     hooks: Vec<Box<dyn Hook>>,
     checkpoint: Option<CheckpointPolicy>,
     stop_reason: Option<String>,
+    /// Reusable checkpoint serialization buffer: periodic saves stream
+    /// into the same allocation instead of building a fresh JSON tree
+    /// per save (see `ps::checkpoint::SaveBuf`).
+    save_buf: crate::ps::checkpoint::SaveBuf,
 }
 
 impl Driver {
@@ -121,6 +127,9 @@ impl Driver {
         }
         if cfg.wall_budget > 0.0 {
             d.add_hook(Box::new(WallClockHook::new(cfg.wall_budget)));
+        }
+        if let Some(path) = &cfg.export_best {
+            d.add_hook(Box::new(crate::serve::ExportBestHook::new(path.clone())));
         }
         if let Some(path) = &cfg.save_to {
             d.checkpoint = Some(CheckpointPolicy {
@@ -170,7 +179,7 @@ impl Driver {
             };
             if due && !session.is_done() && stop.is_none() {
                 let path = self.checkpoint.as_ref().expect("due implies policy").path.clone();
-                session.snapshot()?.save(&path)?;
+                session.snapshot()?.save_with(&mut self.save_buf, &path)?;
                 for h in &mut self.hooks {
                     h.on_checkpoint(Path::new(&path), &report)?;
                 }
@@ -184,7 +193,8 @@ impl Driver {
         // final state save: covers both completion and early stops, so a
         // preempted or budget-stopped job is always resumable
         if let Some(p) = &self.checkpoint {
-            session.snapshot()?.save(&p.path)?;
+            let path = p.path.clone();
+            session.snapshot()?.save_with(&mut self.save_buf, &path)?;
         }
         let result = session.finish()?;
         for h in &mut self.hooks {

@@ -80,6 +80,14 @@ pub trait TrainSession {
     fn best_val_f1(&self) -> f64;
     /// Capture the full training state as a v2 checkpoint.
     fn snapshot(&self) -> Result<Checkpoint>;
+    /// Export the current parameters as a sealed, servable
+    /// [`crate::serve::InferenceModel`] — the training→serving
+    /// hand-off.  Unlike [`TrainSession::snapshot`], the result carries
+    /// no training state: just params, dims, and the graph fingerprint
+    /// a `serve::InferenceEngine` validates against.
+    fn export_model(&self, name: &str) -> Result<crate::serve::InferenceModel> {
+        crate::serve::InferenceModel::from_session(name, self)
+    }
     /// Build the final `RunResult` from everything run so far.  Consumes
     /// the accumulated telemetry; call once.
     fn finish(&mut self) -> Result<RunResult>;
@@ -182,6 +190,10 @@ pub(crate) fn state_checkpoint(ctx: &TrainContext, state: TrainState) -> Checkpo
         artifact: ctx.artifact.clone(),
         epoch: state.epoch,
         best_val_f1: state.best_val_f1,
+        // binds the file to the trained graph instance so `digest
+        // export` can refuse a mismatched --seed (computed once, cached
+        // on the engine)
+        graph_fingerprint: Some(ctx.eval_engine().fingerprint()),
         params: state.ps.params.clone(),
         state: Some(state),
     }

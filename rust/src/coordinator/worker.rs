@@ -17,9 +17,8 @@ use std::sync::Arc;
 
 use crate::ps::checkpoint::WorkerSnap;
 use crate::runtime::{
-    assemble_inputs, pack_stale, pack_stale_layer, pack_static_inputs,
-    parse_eval_output, parse_train_output, EvalOutput, SharedLiteral, StaticInputs,
-    TrainOutput,
+    assemble_inputs, pack_stale, pack_stale_layer, pack_static_inputs, parse_train_output,
+    EvalOutput, SharedLiteral, StaticInputs, TrainOutput,
 };
 use crate::tensor::Matrix;
 use crate::util::{domain_seed, Rng};
@@ -235,16 +234,24 @@ pub fn exec_train(
 
 /// Execute the forward-only eval step (used by the propagation baseline
 /// for its per-epoch refresh pass and by distributed-inference demos).
-/// Uses the eval spec cached on the context — this used to re-do the
-/// manifest lookup and clone the whole spec on every call.
+/// Thin wrapper over [`crate::serve::aot_eval_step`] — the engine-grade
+/// AOT eval entry shared with the serving layer — plus the cost-model
+/// timing only training cares about.  Uses the eval spec cached on the
+/// context (this used to re-do the manifest lookup and clone the whole
+/// spec on every call).
 pub fn exec_eval(
     ctx: &TrainContext,
     w: &WorkerState,
     param_lits: &[SharedLiteral],
 ) -> Result<(EvalOutput, f64)> {
-    let inputs = assemble_inputs(&ctx.eval_spec, &w.statics, &w.stale_lits, param_lits);
-    let outs = ctx.rt.execute(&ctx.artifact, "eval", &inputs)?;
-    let out = parse_eval_output(&ctx.eval_spec, &outs)?;
+    let out = crate::serve::aot_eval_step(
+        &ctx.rt,
+        &ctx.artifact,
+        &ctx.eval_spec,
+        &w.statics,
+        &w.stale_lits,
+        param_lits,
+    )?;
     let vtime = ctx.cost.compute_time(w.id, ctx.eval_flops(w.id));
     Ok((out, vtime))
 }

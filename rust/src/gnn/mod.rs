@@ -26,9 +26,11 @@
 //! **bit-identical output at any thread count** ([`gcn_forward_t`] /
 //! [`gat_forward_t`] take the thread count; the plain [`gcn_forward`] /
 //! [`gat_forward`] wrappers are single-threaded).  A cached
-//! [`Workspace`] (what `TrainContext::global_eval` holds) additionally
-//! makes repeat forwards rebuild- and allocation-free; the `forward_*`
-//! free functions build a throwaway one per call.  Within a row the CSR
+//! [`Workspace`]s are pooled by [`crate::serve::InferenceEngine`] —
+//! the engine-grade entry point behind both `TrainContext::global_eval`
+//! and model serving — which additionally makes repeat forwards
+//! rebuild- and allocation-free; the `forward_*` free functions build a
+//! throwaway one per call.  Within a row the CSR
 //! entry order is self-loop first, then neighbors ascending — exactly
 //! the seed oracle's summation order, so the sparse path reproduces the
 //! dense-loop numerics (see [`reference`], kept as the cross-check

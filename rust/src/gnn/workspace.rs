@@ -109,6 +109,19 @@ impl Workspace {
         self.stats
     }
 
+    /// Whether the cached per-layer scratch is already sized for these
+    /// output widths (one entry per layer, = that layer's `w.cols`).
+    /// A never-forwarded workspace matches anything — sizing empty
+    /// scratch is the unavoidable first-use cost, not a resize.  The
+    /// serving engine's pool uses this to route each model to a
+    /// workspace already shaped for it instead of resizing one back
+    /// and forth between differently-sized models.
+    pub fn scratch_matches(&self, widths: &[usize]) -> bool {
+        self.z.is_empty()
+            || (self.z.len() == widths.len()
+                && self.z.iter().zip(widths).all(|(m, &w)| m.cols == w))
+    }
+
     /// Logits of the most recent forward (empty 0×0 before any).
     pub fn logits(&self) -> &Matrix {
         static EMPTY: Matrix = Matrix {
@@ -348,5 +361,20 @@ mod tests {
         assert!(ws.hidden().is_empty());
         assert_eq!(ws.n(), 34);
         assert_eq!(ws.kind(), ModelKind::Gcn);
+    }
+
+    #[test]
+    fn scratch_matches_tracks_forwarded_widths() {
+        let ds = load("karate", 0).unwrap();
+        let mut ws = Workspace::new(ModelKind::Gcn, &ds.graph);
+        // fresh scratch matches anything (first sizing is not a resize)
+        assert!(ws.scratch_matches(&[8, 4]));
+        assert!(ws.scratch_matches(&[64, 10, 7]));
+        let mut rng = Rng::new(2);
+        let params = init_params(ModelKind::Gcn, &[16, 8, 4], &mut rng);
+        ws.forward(&ds.features, &params, false, 1).unwrap();
+        assert!(ws.scratch_matches(&[8, 4]));
+        assert!(!ws.scratch_matches(&[12, 4]), "width mismatch");
+        assert!(!ws.scratch_matches(&[8, 4, 4]), "layer-count mismatch");
     }
 }

@@ -96,6 +96,21 @@ impl Graph {
         let dv = (self.degree(v) + 1) as f32;
         1.0 / (du * dv).sqrt()
     }
+
+    /// Content fingerprint of the graph structure (node count + full
+    /// adjacency).  Two graphs fingerprint equal iff their CSR arrays
+    /// are identical.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::Fnv64::new();
+        h.mix(self.n() as u64);
+        for &o in &self.offsets {
+            h.mix(o as u64);
+        }
+        for &t in &self.targets {
+            h.mix(t as u64);
+        }
+        h.finish()
+    }
 }
 
 /// Per-node split assignment.
@@ -130,6 +145,25 @@ impl Dataset {
 
     pub fn nodes_in_split(&self, s: Split) -> Vec<usize> {
         (0..self.n()).filter(|&v| self.split[v] == s).collect()
+    }
+
+    /// Content fingerprint of everything inference depends on: the
+    /// graph structure plus the feature matrix (shape and exact f32
+    /// bits).  Labels and split assignments are deliberately excluded —
+    /// they do not enter a forward pass.  `serve::InferenceModel`
+    /// records this value at export so an engine serving a *different*
+    /// graph (other dataset, or the same dataset generated from another
+    /// seed) refuses the model with a structured error instead of
+    /// silently producing garbage.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::Fnv64::new();
+        h.mix(self.graph.fingerprint());
+        h.mix(self.features.rows as u64);
+        h.mix(self.features.cols as u64);
+        for &v in &self.features.data {
+            h.mix_f32(v);
+        }
+        h.finish()
     }
 
     /// Basic structural validation (used by tests and the CLI loader).
@@ -188,6 +222,31 @@ mod tests {
         assert!((g.norm_weight(0, 1) - g.norm_weight(1, 0)).abs() < 1e-9);
         // d0=1, d1=2 -> 1/sqrt(2*3)
         assert!((g.norm_weight(0, 1) - 1.0 / 6.0f32.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fingerprints_detect_structure_and_feature_changes() {
+        let g = path_graph(4);
+        let mut ds = Dataset {
+            name: "fp".into(),
+            graph: g.clone(),
+            features: Matrix::from_fn(4, 2, |r, c| (r * 2 + c) as f32),
+            labels: vec![0; 4],
+            n_class: 2,
+            split: vec![Split::Train; 4],
+        };
+        let base = ds.fingerprint();
+        assert_eq!(base, ds.fingerprint(), "deterministic");
+        // labels/splits are not inference inputs: same fingerprint
+        ds.labels = vec![1; 4];
+        ds.split[0] = Split::Val;
+        assert_eq!(base, ds.fingerprint());
+        // a feature bit flips it
+        ds.features.set(0, 0, 0.5);
+        assert_ne!(base, ds.fingerprint());
+        // a structure change flips the graph fingerprint
+        let g2 = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3), (0, 3)]);
+        assert_ne!(g.fingerprint(), g2.fingerprint());
     }
 
     #[test]

@@ -110,6 +110,31 @@
 //!   `ArtifactSpec` is cached on the context instead of cloned per
 //!   `exec_eval`.
 //!
+//! ## Serving (`digest::serve`)
+//!
+//! Model-apply is a first-class phase decoupled from training:
+//!
+//! * [`serve::InferenceModel`] — a sealed trained-model artifact
+//!   (params + kind + dims + graph fingerprint, `digest-model-v1` on
+//!   disk), exported from a checkpoint (`digest export`), a live
+//!   session (`session.export_model`), or automatically during
+//!   training (`export_best=path` → [`serve::ExportBestHook`]);
+//! * [`serve::InferenceEngine`] — owns the `Arc`-shared graph, a pool
+//!   of reusable [`gnn::Workspace`]s keyed by model kind, and the
+//!   process-wide chunk pool; `predict` serves full-graph / node-subset
+//!   / top-k queries ([`serve::NodeQuery`]) and `predict_many` batches
+//!   *multiple models over one graph* with zero structure rebuilds
+//!   after warmup ([`serve::EngineStats`]).  `TrainContext::global_eval`
+//!   routes through the same `forward_raw` entry point, so serving is
+//!   bit-identical to training eval by construction (and the AOT
+//!   subgraph eval shares [`serve::aot_eval_step`] likewise);
+//! * [`serve::ModelRegistry`] — named multi-model store with
+//!   load / list / evict and a buffer-reusing hot `reload`.
+//!
+//! CLI: `digest export <ckpt> <model>`, `digest predict <model>
+//! [--nodes i,j | --split val] [--topk K]`, `digest bench-serve
+//! <model>...` (single vs batched multi-model predict).
+//!
 //! Module map (see DESIGN.md for the full inventory):
 //!
 //! | module | role |
@@ -124,6 +149,7 @@
 //! | [`gnn`] | pure-Rust sparse GCN/GAT inference oracle (+ seed reference) + F1 metrics |
 //! | [`costmodel`] | virtual-time device/network model (speedup figures) |
 //! | [`coordinator`] | sessions, hooks/driver, sync/async schedulers, parallel engine, telemetry |
+//! | [`serve`] | sealed model artifacts, pool-aware multi-model inference engine, registry |
 //! | [`baselines`] | LLCG-like and DGL-like comparison frameworks (sessions too) |
 //! | [`exp`] | per-table/figure experiment runners (session-driven, cached) |
 
@@ -139,6 +165,7 @@ pub mod kvs;
 pub mod partition;
 pub mod ps;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;
 

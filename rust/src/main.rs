@@ -24,11 +24,16 @@
 //! arg parser is hand-rolled: the offline crate cache has no clap (see
 //! Cargo.toml note).
 
+use std::sync::Arc;
+
 use digest::config::RunConfig;
 use digest::exp::{run_experiment, Budget, Campaign};
 use digest::graph::registry::{load, SPECS};
 use digest::graph::stats::graph_stats;
+use digest::graph::Split;
 use digest::partition::{partition, quality, PartitionAlgo};
+use digest::ps::checkpoint::Checkpoint;
+use digest::serve::{self, InferenceEngine, InferenceModel, NodeQuery};
 use digest::util::human_bytes;
 use digest::util::json::Json;
 use digest::{coordinator, eyre, Result};
@@ -41,15 +46,21 @@ fn main() {
 }
 
 fn usage() -> String {
-    "usage: digest <list|generate|partition|train|experiment> [args]\n\
+    "usage: digest <list|generate|partition|train|experiment|export|predict|bench-serve> [args]\n\
      \n\
      digest list\n\
      digest generate --dataset <name> [--seed N]\n\
      digest partition --dataset <name> [--parts K] [--algo metis|bfs|random] [--seed N]\n\
      digest train [--config file.json] [--csv out.csv] [key=value ...]\n\
      \x20             (session knobs: save_to= save_every= load_from=\n\
-     \x20              stream_csv= early_stop= wall_budget=)\n\
-     digest experiment <id|all> [--out-dir results] [--quick] [--seed N]\n"
+     \x20              stream_csv= early_stop= wall_budget= export_best=)\n\
+     digest experiment <id|all> [--out-dir results] [--quick] [--seed N]\n\
+     digest export <checkpoint.json> <model.json> [--seed N] [--name NAME]\n\
+     \x20             [--artifact-dir DIR]\n\
+     digest predict <model.json> [--nodes 0,1,2 | --split train|val|test|all]\n\
+     \x20             [--topk K] [--seed N] [--threads T] [--out report.json]\n\
+     digest bench-serve <model.json> [<model2.json> ...] [--iters N] [--threads T]\n\
+     \x20             [--seed N]\n"
         .to_string()
 }
 
@@ -89,6 +100,9 @@ fn run() -> Result<()> {
         "partition" => cmd_partition(args),
         "train" => cmd_train(args),
         "experiment" => cmd_experiment(args),
+        "export" => cmd_export(args),
+        "predict" => cmd_predict(args),
+        "bench-serve" => cmd_bench_serve(args),
         "help" | "--help" | "-h" => {
             print!("{}", usage());
             Ok(())
@@ -249,6 +263,258 @@ fn cmd_train(mut args: Vec<String>) -> Result<()> {
         std::fs::write(&path, res.to_csv()).map_err(|e| eyre!("writing {path}: {e}"))?;
         println!("  timeline CSV   {path}");
     }
+    Ok(())
+}
+
+/// `digest export <ckpt> <model>` — turn a (v1 or v2) training
+/// checkpoint into a sealed, servable `digest-model-v1` artifact.  The
+/// dataset is derived from the checkpoint's artifact name; `--seed`
+/// must match the training run's dataset seed (default 42) because the
+/// model fingerprints the generated graph instance.
+fn cmd_export(mut args: Vec<String>) -> Result<()> {
+    let seed: u64 = take_opt(&mut args, "--seed").map_or(Ok(42), |s| {
+        s.parse().map_err(|e| eyre!("--seed: {e}"))
+    })?;
+    let artifact_dir =
+        take_opt(&mut args, "--artifact-dir").unwrap_or_else(|| "artifacts".into());
+    let name = take_opt(&mut args, "--name");
+    if args.len() != 2 {
+        return Err(eyre!(
+            "export needs <checkpoint.json> <model-out.json>\n{}",
+            usage()
+        ));
+    }
+    let (ckpt_path, out_path) = (&args[0], &args[1]);
+    let ckpt = Checkpoint::load(ckpt_path)?;
+    let (dspec, kind) = serve::dataset_for_artifact(&ckpt.artifact)?;
+    let manifest = digest::runtime::Manifest::load(&artifact_dir)?;
+    let spec = manifest.get(&ckpt.artifact, "train")?;
+    let ds = load(dspec.name, seed)?;
+    if ckpt.graph_fingerprint.is_none() {
+        eprintln!(
+            "warning: checkpoint records no graph fingerprint (pre-serve file); \
+             trusting --seed {seed} to regenerate the training graph"
+        );
+    }
+    let name = name.unwrap_or_else(|| format!("{}-e{}", ckpt.artifact, ckpt.epoch));
+    let model = InferenceModel::from_checkpoint(&name, &ckpt, spec, &ds, dspec.name, seed)?;
+    model.save(out_path)?;
+    println!(
+        "exported model {:?}: {} {} dims {:?}",
+        model.name(),
+        dspec.name,
+        kind.as_str(),
+        model.dims()
+    );
+    println!(
+        "  from        {ckpt_path} (epoch {}, best val F1 {:.4})",
+        ckpt.epoch, ckpt.best_val_f1
+    );
+    println!(
+        "  graph       {} seed {seed}, fingerprint {:#018x}",
+        dspec.name,
+        model.graph_fingerprint()
+    );
+    println!("  written to  {out_path}");
+    Ok(())
+}
+
+fn parse_node_list(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(|p| p.trim().parse::<usize>().map_err(|e| eyre!("--nodes {p:?}: {e}")))
+        .collect()
+}
+
+/// `digest predict <model>` — serve predictions from an exported model
+/// through a fresh [`InferenceEngine`] (no training stack involved).
+fn cmd_predict(mut args: Vec<String>) -> Result<()> {
+    let topk: usize = take_opt(&mut args, "--topk").map_or(Ok(3), |s| {
+        s.parse().map_err(|e| eyre!("--topk: {e}"))
+    })?;
+    let topk = topk.max(1);
+    let threads: usize = take_opt(&mut args, "--threads").map_or(Ok(0), |s| {
+        s.parse().map_err(|e| eyre!("--threads: {e}"))
+    })?;
+    let seed_opt: Option<u64> = match take_opt(&mut args, "--seed") {
+        Some(s) => Some(s.parse().map_err(|e| eyre!("--seed: {e}"))?),
+        None => None,
+    };
+    let nodes_opt = take_opt(&mut args, "--nodes");
+    let split_opt = take_opt(&mut args, "--split");
+    let out_opt = take_opt(&mut args, "--out");
+    if nodes_opt.is_some() && split_opt.is_some() {
+        return Err(eyre!(
+            "--nodes and --split are mutually exclusive (pass one node selection)"
+        ));
+    }
+    if args.len() != 1 {
+        return Err(eyre!("predict needs <model.json>\n{}", usage()));
+    }
+    let model = InferenceModel::load(&args[0])?;
+    let seed = seed_opt.unwrap_or_else(|| model.seed());
+    let ds = Arc::new(load(model.dataset(), seed)?);
+    let engine = InferenceEngine::new(ds.clone()).with_threads(threads);
+    let query = match (nodes_opt, split_opt.as_deref()) {
+        (Some(list), _) => NodeQuery::nodes(parse_node_list(&list)?),
+        (None, Some("all")) => NodeQuery::full(),
+        (None, split) => {
+            // default: the validation split
+            let s = match split.unwrap_or("val") {
+                "train" => Split::Train,
+                "val" => Split::Val,
+                "test" => Split::Test,
+                other => return Err(eyre!("--split {other:?} (train|val|test|all)")),
+            };
+            NodeQuery::nodes(ds.nodes_in_split(s))
+        }
+    }
+    .with_top_k(topk);
+    let pred = engine.predict(&model, &query)?;
+    println!(
+        "model {:?} ({} {}, exported at epoch {}, val F1 {:.4})",
+        model.name(),
+        model.dataset(),
+        model.kind().as_str(),
+        model.epoch(),
+        model.val_f1()
+    );
+    let correct = pred
+        .nodes
+        .iter()
+        .zip(&pred.classes)
+        .filter(|&(&v, &c)| ds.labels[v] as usize == c)
+        .count();
+    println!(
+        "predicted {} node(s); agreement with dataset labels {:.4} ({correct}/{})",
+        pred.nodes.len(),
+        correct as f64 / pred.nodes.len() as f64,
+        pred.nodes.len()
+    );
+    for (i, &v) in pred.nodes.iter().take(10).enumerate() {
+        let tk: Vec<String> = pred.top_k[i]
+            .iter()
+            .map(|&(c, l)| format!("class {c} ({l:.3})"))
+            .collect();
+        println!("  node {v:>6}: {}", tk.join(", "));
+    }
+    if pred.nodes.len() > 10 {
+        println!("  ... {} more node(s)", pred.nodes.len() - 10);
+    }
+    if let Some(path) = out_opt {
+        let rows: Vec<Json> = pred
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| {
+                Json::obj(vec![
+                    ("node", Json::num(v as f64)),
+                    ("class", Json::num(pred.classes[i] as f64)),
+                    (
+                        "topk",
+                        Json::Arr(
+                            pred.top_k[i]
+                                .iter()
+                                .map(|&(c, l)| {
+                                    Json::obj(vec![
+                                        ("class", Json::num(c as f64)),
+                                        ("logit", Json::num(l as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        let j = Json::obj(vec![
+            ("model", Json::str(model.name())),
+            ("dataset", Json::str(model.dataset())),
+            ("predictions", Json::Arr(rows)),
+        ]);
+        std::fs::write(&path, j.to_string()).map_err(|e| eyre!("writing {path}: {e}"))?;
+        println!("  report JSON   {path}");
+    }
+    Ok(())
+}
+
+/// `digest bench-serve <model>...` — single interleaved predicts vs one
+/// batched `predict_many` over the same engine; asserts the warm engine
+/// performs zero structure rebuilds either way.
+fn cmd_bench_serve(mut args: Vec<String>) -> Result<()> {
+    let iters: usize = take_opt(&mut args, "--iters").map_or(Ok(50), |s| {
+        s.parse().map_err(|e| eyre!("--iters: {e}"))
+    })?;
+    let threads: usize = take_opt(&mut args, "--threads").map_or(Ok(0), |s| {
+        s.parse().map_err(|e| eyre!("--threads: {e}"))
+    })?;
+    let seed_opt: Option<u64> = match take_opt(&mut args, "--seed") {
+        Some(s) => Some(s.parse().map_err(|e| eyre!("--seed: {e}"))?),
+        None => None,
+    };
+    if args.is_empty() {
+        return Err(eyre!("bench-serve needs at least one <model.json>\n{}", usage()));
+    }
+    let models: Vec<InferenceModel> = args
+        .iter()
+        .map(InferenceModel::load)
+        .collect::<Result<_>>()?;
+    for m in &models[1..] {
+        if m.graph_fingerprint() != models[0].graph_fingerprint() {
+            return Err(eyre!(
+                "models {:?} and {:?} were exported for different graphs",
+                models[0].name(),
+                m.name()
+            ));
+        }
+    }
+    let seed = seed_opt.unwrap_or_else(|| models[0].seed());
+    let ds = Arc::new(load(models[0].dataset(), seed)?);
+    let n_nodes = ds.n();
+    let engine = InferenceEngine::new(ds).with_threads(threads);
+    let q = NodeQuery::full();
+    let reqs: Vec<(&InferenceModel, &NodeQuery)> = models.iter().map(|m| (m, &q)).collect();
+    engine.predict_many(&reqs)?; // warmup: builds structures + scratch
+    let warm = engine.stats();
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        for m in &models {
+            engine.predict(m, &q)?;
+        }
+    }
+    let single = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    for _ in 0..iters {
+        engine.predict_many(&reqs)?;
+    }
+    let batched = t1.elapsed();
+    let steady = engine.stats();
+    if steady.structure_builds != warm.structure_builds {
+        return Err(eyre!(
+            "structure rebuilt after warmup ({} -> {})",
+            warm.structure_builds,
+            steady.structure_builds
+        ));
+    }
+    let per = (iters * models.len()) as f64;
+    println!(
+        "bench-serve: {} model(s) over {} ({n_nodes} nodes), {iters} iters, threads={threads}",
+        models.len(),
+        models[0].dataset()
+    );
+    println!(
+        "  single   {:9.3} ms/predict",
+        single.as_secs_f64() * 1e3 / per
+    );
+    println!(
+        "  batched  {:9.3} ms/predict   ({:.2}x vs single)",
+        batched.as_secs_f64() * 1e3 / per,
+        single.as_secs_f64() / batched.as_secs_f64()
+    );
+    println!(
+        "  engine   {} structure build(s), {} scratch alloc(s), {} forwards, {} predictions",
+        steady.structure_builds, steady.scratch_allocs, steady.forwards, steady.predictions
+    );
+    println!("  zero structure rebuilds after warmup: OK");
     Ok(())
 }
 

@@ -83,6 +83,13 @@ pub struct Checkpoint {
     pub epoch: usize,
     /// Best validation F1 observed.
     pub best_val_f1: f64,
+    /// [`crate::graph::Dataset::fingerprint`] of the graph/features the
+    /// run trained on (None in files written before PR 5).  `digest
+    /// export` validates the regenerated dataset against this instead
+    /// of trusting the CLI `--seed` flag — a seed mismatch would
+    /// otherwise stamp the exported model with the *wrong* graph's
+    /// fingerprint and defeat the serve-side misuse guard entirely.
+    pub graph_fingerprint: Option<u64>,
     pub params: Vec<Matrix>,
     /// Full scheduler state (None for v1 params-only checkpoints).
     pub state: Option<TrainState>,
@@ -106,10 +113,68 @@ pub fn mat_from_json(p: &Json) -> Result<Matrix> {
     let rows = p.get("rows")?.as_usize()?;
     let cols = p.get("cols")?.as_usize()?;
     let data = f32s_from_json(p.get("data")?)?;
-    if data.len() != rows * cols {
+    if Some(data.len()) != checked_elems(rows, cols) {
         return Err(eyre!("checkpoint param size mismatch"));
     }
     Ok(Matrix::from_vec(rows, cols, data))
+}
+
+/// `rows * cols` without overflow UB surface: a corrupt or hostile
+/// file with absurd shape fields must produce a structured `Err` from
+/// the callers above, not a multiply-overflow panic (debug) or a
+/// wrapped product that defeats the size check (release).
+fn checked_elems(rows: usize, cols: usize) -> Option<usize> {
+    rows.checked_mul(cols)
+}
+
+/// Validate a [`mat_json`] value without allocating anything: shape
+/// fields present, element count matches, every element parses.
+/// Returns (rows, cols).  Run this before [`mat_from_json_into`] when
+/// all-or-nothing semantics matter (the model registry's hot reload
+/// must not half-overwrite a served model on a corrupt file).
+pub fn mat_json_shape(p: &Json) -> Result<(usize, usize)> {
+    let rows = p.get("rows")?.as_usize()?;
+    let cols = p.get("cols")?.as_usize()?;
+    let data = p.get("data")?.as_arr()?;
+    if Some(data.len()) != checked_elems(rows, cols) {
+        return Err(eyre!(
+            "matrix json has {} elements, shape says {rows}x{cols}",
+            data.len()
+        ));
+    }
+    for v in data {
+        if !matches!(v, Json::Null) {
+            v.as_f64()?;
+        }
+    }
+    Ok((rows, cols))
+}
+
+/// Parse a [`mat_json`] value into an *existing* matrix, reusing its
+/// buffer whenever the shape matches (the read-side half of the
+/// reusable-buffer checkpoint path; the write side is
+/// [`Checkpoint::save_with`]).  Returns `true` when the destination had
+/// to be re-allocated because the shape changed.  On `Err` the
+/// destination may be partially overwritten — validate first with
+/// [`mat_json_shape`] if that matters.
+pub fn mat_from_json_into(p: &Json, m: &mut Matrix) -> Result<bool> {
+    let rows = p.get("rows")?.as_usize()?;
+    let cols = p.get("cols")?.as_usize()?;
+    let data = p.get("data")?.as_arr()?;
+    if Some(data.len()) != checked_elems(rows, cols) {
+        return Err(eyre!("checkpoint param size mismatch"));
+    }
+    let resized = m.rows != rows || m.cols != cols;
+    if resized {
+        *m = Matrix::zeros(rows, cols);
+    }
+    for (slot, v) in m.data.iter_mut().zip(data) {
+        *slot = match v {
+            Json::Null => f32::NAN,
+            other => other.as_f64()? as f32,
+        };
+    }
+    Ok(resized)
 }
 
 fn f32s_json(v: &[f32]) -> Json {
@@ -143,26 +208,10 @@ pub fn rng_from_json(j: &Json) -> Result<[u64; 4]> {
     Ok(rng)
 }
 
-/// NaN-safe f64 (JSON has no NaN literal): NaN serializes as null.
-fn num_or_null(x: f64) -> Json {
-    if x.is_nan() {
-        Json::Null
-    } else {
-        Json::num(x)
-    }
-}
-
 fn f64_or_nan(j: &Json) -> Result<f64> {
     match j {
         Json::Null => Ok(f64::NAN),
         other => other.as_f64(),
-    }
-}
-
-fn opt_u64_json(v: Option<u64>) -> Json {
-    match v {
-        Some(x) => Json::uint(x),
-        None => Json::Null,
     }
 }
 
@@ -171,24 +220,6 @@ fn opt_u64_from_json(j: &Json) -> Result<Option<u64>> {
         Json::Null => Ok(None),
         other => other.as_u64().map(Some),
     }
-}
-
-fn ps_state_json(s: &PsState) -> Json {
-    Json::obj(vec![
-        ("params", Json::Arr(s.params.iter().map(mat_json).collect())),
-        ("version", Json::uint(s.version)),
-        ("opt_t", Json::uint(s.opt_t)),
-        ("opt_m", Json::Arr(s.opt_m.iter().map(|v| f32s_json(v)).collect())),
-        ("opt_v", Json::Arr(s.opt_v.iter().map(|v| f32s_json(v)).collect())),
-        (
-            "delays",
-            Json::obj(vec![
-                ("updates", Json::uint(s.delays.updates)),
-                ("max_delay", Json::uint(s.delays.max_delay)),
-                ("total_delay", Json::uint(s.delays.total_delay)),
-            ]),
-        ),
-    ])
 }
 
 fn ps_state_from_json(j: &Json) -> Result<PsState> {
@@ -222,16 +253,6 @@ fn ps_state_from_json(j: &Json) -> Result<PsState> {
     })
 }
 
-fn worker_json(w: &WorkerSnap) -> Json {
-    Json::obj(vec![
-        ("local_epoch", Json::num(w.local_epoch as f64)),
-        ("fetched_version", Json::uint(w.fetched_version)),
-        ("rng", Json::Arr(w.rng.iter().map(|&x| Json::uint(x)).collect())),
-        ("last_pull_age", opt_u64_json(w.last_pull_age)),
-        ("stale", Json::Arr(w.stale.iter().map(mat_json).collect())),
-    ])
-}
-
 fn worker_from_json(j: &Json) -> Result<WorkerSnap> {
     Ok(WorkerSnap {
         local_epoch: j.get("local_epoch")?.as_usize()?,
@@ -247,15 +268,6 @@ fn worker_from_json(j: &Json) -> Result<WorkerSnap> {
     })
 }
 
-fn kvs_entry_json(e: &(u16, u32, u64, Vec<f32>)) -> Json {
-    Json::obj(vec![
-        ("layer", Json::num(e.0 as f64)),
-        ("node", Json::num(e.1 as f64)),
-        ("version", Json::uint(e.2)),
-        ("row", f32s_json(&e.3)),
-    ])
-}
-
 fn kvs_entry_from_json(j: &Json) -> Result<(u16, u32, u64, Vec<f32>)> {
     Ok((
         j.get("layer")?.as_usize()? as u16,
@@ -263,18 +275,6 @@ fn kvs_entry_from_json(j: &Json) -> Result<(u16, u32, u64, Vec<f32>)> {
         j.get("version")?.as_u64()?,
         f32s_from_json(j.get("row")?)?,
     ))
-}
-
-fn kvs_metrics_json(m: &KvsSnapshot) -> Json {
-    Json::obj(vec![
-        ("pulls", Json::uint(m.pulls)),
-        ("pushes", Json::uint(m.pushes)),
-        ("pulled_rows", Json::uint(m.pulled_rows)),
-        ("pushed_rows", Json::uint(m.pushed_rows)),
-        ("pulled_bytes", Json::uint(m.pulled_bytes)),
-        ("pushed_bytes", Json::uint(m.pushed_bytes)),
-        ("misses", Json::uint(m.misses)),
-    ])
 }
 
 fn kvs_metrics_from_json(j: &Json) -> Result<KvsSnapshot> {
@@ -287,26 +287,6 @@ fn kvs_metrics_from_json(j: &Json) -> Result<KvsSnapshot> {
         pushed_bytes: j.get("pushed_bytes")?.as_u64()?,
         misses: j.get("misses")?.as_u64()?,
     })
-}
-
-fn state_json(s: &TrainState) -> Json {
-    Json::obj(vec![
-        ("method", Json::str(s.method.clone())),
-        ("epoch", Json::num(s.epoch as f64)),
-        ("vtime", Json::num(s.vtime)),
-        ("ps_bytes", Json::uint(s.ps_bytes)),
-        ("best_val_f1", Json::num(s.best_val_f1)),
-        ("final_val_f1", num_or_null(s.final_val_f1)),
-        ("final_test_f1", num_or_null(s.final_test_f1)),
-        ("ps", ps_state_json(&s.ps)),
-        ("workers", Json::Arr(s.workers.iter().map(worker_json).collect())),
-        (
-            "kvs_entries",
-            Json::Arr(s.kvs_entries.iter().map(kvs_entry_json).collect()),
-        ),
-        ("kvs_metrics", kvs_metrics_json(&s.kvs_metrics)),
-        ("extra", s.extra.clone()),
-    ])
 }
 
 fn state_from_json(j: &Json) -> Result<TrainState> {
@@ -336,30 +316,249 @@ fn state_from_json(j: &Json) -> Result<TrainState> {
     })
 }
 
-impl Checkpoint {
-    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let params: Vec<Json> = self.params.iter().map(mat_json).collect();
-        let mut fields = vec![
-            (
-                "format",
-                Json::str(if self.state.is_some() {
-                    "digest-checkpoint-v2"
-                } else {
-                    "digest-checkpoint-v1"
-                }),
-            ),
-            ("artifact", Json::str(self.artifact.clone())),
-            ("epoch", Json::num(self.epoch as f64)),
-            ("best_val_f1", Json::num(self.best_val_f1)),
-            ("params", Json::Arr(params)),
-        ];
-        if let Some(state) = &self.state {
-            fields.push(("state", state_json(state)));
+// ---- streaming save (reusable buffer) -----------------------------------
+//
+// `Checkpoint::save` used to build a full `Json` tree first — one
+// `Vec<Json>` per matrix / optimizer row / KVS entry, thousands of
+// short-lived allocations per periodic save — then serialize and drop
+// it.  The driver's checkpoint cadence repeats that identical work
+// every K epochs, so the save path now streams the JSON text straight
+// into a reusable [`SaveBuf`]: scalar formatting goes through
+// stack-built [`Json`] values (no tree nodes, and byte-identical
+// number/escape rules, so round trips stay bit-exact), matrices and
+// f32 rows stream element-wise, and the only buffer involved reaches
+// its high-water capacity on the first save and is reused — without
+// growing — by every later one (asserted in the tests below).
+
+/// Reusable checkpoint serialization buffer.  The
+/// [`crate::coordinator::hooks::Driver`] holds one across its periodic
+/// + final saves; one-off callers get a fresh buffer via
+/// [`Checkpoint::save`].
+#[derive(Default)]
+pub struct SaveBuf {
+    out: String,
+    saves: u64,
+}
+
+impl SaveBuf {
+    pub fn new() -> Self {
+        SaveBuf::default()
+    }
+
+    /// Current buffer capacity — steady after the first save of a given
+    /// checkpoint shape (the round-trip allocation-count assertion).
+    pub fn capacity(&self) -> usize {
+        self.out.capacity()
+    }
+
+    /// Checkpoints written through this buffer.
+    pub fn saves(&self) -> u64 {
+        self.saves
+    }
+}
+
+pub(crate) fn w_num(out: &mut String, x: f64) {
+    // Json::Num carries no heap; this inherits the tree writer's exact
+    // formatting (including non-finite -> null)
+    Json::num(x).write_into(out);
+}
+
+pub(crate) fn w_uint(out: &mut String, v: u64) {
+    Json::uint(v).write_into(out);
+}
+
+pub(crate) fn w_str(out: &mut String, s: &str) {
+    crate::util::json::write_str_escaped(s, out);
+}
+
+pub(crate) fn w_f32s(out: &mut String, v: &[f32]) {
+    out.push('[');
+    for (i, &x) in v.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
         }
-        let j = Json::obj(fields);
-        std::fs::write(path.as_ref(), j.to_string())
-            .map_err(|e| eyre!("writing {:?}: {e}", path.as_ref()))?;
-        Ok(())
+        w_num(out, x as f64);
+    }
+    out.push(']');
+}
+
+pub(crate) fn w_mat(out: &mut String, m: &Matrix) {
+    out.push_str("{\"cols\":");
+    w_num(out, m.cols as f64);
+    out.push_str(",\"data\":");
+    w_f32s(out, &m.data);
+    out.push_str(",\"rows\":");
+    w_num(out, m.rows as f64);
+    out.push('}');
+}
+
+pub(crate) fn w_mats(out: &mut String, ms: &[Matrix]) {
+    out.push('[');
+    for (i, m) in ms.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        w_mat(out, m);
+    }
+    out.push(']');
+}
+
+fn w_ps_state(out: &mut String, s: &PsState) {
+    out.push_str("{\"delays\":{\"max_delay\":");
+    w_uint(out, s.delays.max_delay);
+    out.push_str(",\"total_delay\":");
+    w_uint(out, s.delays.total_delay);
+    out.push_str(",\"updates\":");
+    w_uint(out, s.delays.updates);
+    out.push_str("},\"opt_m\":[");
+    for (i, v) in s.opt_m.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        w_f32s(out, v);
+    }
+    out.push_str("],\"opt_t\":");
+    w_uint(out, s.opt_t);
+    out.push_str(",\"opt_v\":[");
+    for (i, v) in s.opt_v.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        w_f32s(out, v);
+    }
+    out.push_str("],\"params\":");
+    w_mats(out, &s.params);
+    out.push_str(",\"version\":");
+    w_uint(out, s.version);
+    out.push('}');
+}
+
+fn w_worker(out: &mut String, w: &WorkerSnap) {
+    out.push_str("{\"fetched_version\":");
+    w_uint(out, w.fetched_version);
+    out.push_str(",\"last_pull_age\":");
+    match w.last_pull_age {
+        Some(a) => w_uint(out, a),
+        None => out.push_str("null"),
+    }
+    out.push_str(",\"local_epoch\":");
+    w_num(out, w.local_epoch as f64);
+    out.push_str(",\"rng\":[");
+    for (i, &x) in w.rng.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        w_uint(out, x);
+    }
+    out.push_str("],\"stale\":");
+    w_mats(out, &w.stale);
+    out.push('}');
+}
+
+fn w_state(out: &mut String, s: &TrainState) {
+    out.push_str("{\"best_val_f1\":");
+    w_num(out, s.best_val_f1);
+    out.push_str(",\"epoch\":");
+    w_num(out, s.epoch as f64);
+    out.push_str(",\"extra\":");
+    s.extra.write_into(out);
+    out.push_str(",\"final_test_f1\":");
+    w_num(out, s.final_test_f1); // NaN streams as null (reader maps back)
+    out.push_str(",\"final_val_f1\":");
+    w_num(out, s.final_val_f1);
+    out.push_str(",\"kvs_entries\":[");
+    for (i, e) in s.kvs_entries.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str("{\"layer\":");
+        w_num(out, e.0 as f64);
+        out.push_str(",\"node\":");
+        w_num(out, e.1 as f64);
+        out.push_str(",\"row\":");
+        w_f32s(out, &e.3);
+        out.push_str(",\"version\":");
+        w_uint(out, e.2);
+        out.push('}');
+    }
+    out.push_str("],\"kvs_metrics\":{\"misses\":");
+    w_uint(out, s.kvs_metrics.misses);
+    out.push_str(",\"pulled_bytes\":");
+    w_uint(out, s.kvs_metrics.pulled_bytes);
+    out.push_str(",\"pulled_rows\":");
+    w_uint(out, s.kvs_metrics.pulled_rows);
+    out.push_str(",\"pulls\":");
+    w_uint(out, s.kvs_metrics.pulls);
+    out.push_str(",\"pushed_bytes\":");
+    w_uint(out, s.kvs_metrics.pushed_bytes);
+    out.push_str(",\"pushed_rows\":");
+    w_uint(out, s.kvs_metrics.pushed_rows);
+    out.push_str(",\"pushes\":");
+    w_uint(out, s.kvs_metrics.pushes);
+    out.push_str("},\"method\":");
+    w_str(out, &s.method);
+    out.push_str(",\"ps\":");
+    w_ps_state(out, &s.ps);
+    out.push_str(",\"ps_bytes\":");
+    w_uint(out, s.ps_bytes);
+    out.push_str(",\"vtime\":");
+    w_num(out, s.vtime);
+    out.push_str(",\"workers\":[");
+    for (i, w) in s.workers.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        w_worker(out, w);
+    }
+    out.push_str("]}");
+}
+
+impl Checkpoint {
+    /// One-off save through a fresh buffer.  Repeated savers (the
+    /// driver's checkpoint policy) should hold a [`SaveBuf`] and call
+    /// [`Checkpoint::save_with`] so the serialization buffer is reused
+    /// across saves.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        self.save_with(&mut SaveBuf::new(), path)
+    }
+
+    /// Stream this checkpoint as JSON into `buf` (cleared first,
+    /// capacity retained) and write it to `path`.  Output parses back
+    /// bit-exactly via [`Checkpoint::load`].
+    pub fn save_with(&self, buf: &mut SaveBuf, path: impl AsRef<Path>) -> Result<()> {
+        let out = &mut buf.out;
+        out.clear();
+        out.push_str("{\"artifact\":");
+        w_str(out, &self.artifact);
+        out.push_str(",\"best_val_f1\":");
+        w_num(out, self.best_val_f1);
+        out.push_str(",\"epoch\":");
+        w_num(out, self.epoch as f64);
+        out.push_str(",\"format\":");
+        w_str(
+            out,
+            if self.state.is_some() {
+                "digest-checkpoint-v2"
+            } else {
+                "digest-checkpoint-v1"
+            },
+        );
+        if let Some(fp) = self.graph_fingerprint {
+            out.push_str(",\"graph_fingerprint\":");
+            w_uint(out, fp);
+        }
+        out.push_str(",\"params\":");
+        w_mats(out, &self.params);
+        if let Some(state) = &self.state {
+            out.push_str(",\"state\":");
+            w_state(out, state);
+        }
+        out.push('}');
+        buf.saves += 1;
+        // atomic replace: a crash (or a concurrent resume reading the
+        // path) mid-save must not leave a truncated checkpoint
+        crate::util::write_atomic(path.as_ref(), out.as_bytes())
+            .map_err(|e| eyre!("writing {:?}: {e}", path.as_ref()))
     }
 
     pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
@@ -384,6 +583,10 @@ impl Checkpoint {
             artifact: j.get("artifact")?.as_str()?.to_string(),
             epoch: j.get("epoch")?.as_usize()?,
             best_val_f1: j.get("best_val_f1")?.as_f64()?,
+            graph_fingerprint: j
+                .opt("graph_fingerprint")
+                .map(|v| v.as_u64())
+                .transpose()?,
             params,
             state,
         })
@@ -428,6 +631,7 @@ mod tests {
             artifact: "karate_gcn".into(),
             epoch: 42,
             best_val_f1: 0.87,
+            graph_fingerprint: None,
             params: vec![
                 Matrix::from_fn(3, 2, |r, c| (r * 2 + c) as f32 * 0.5),
                 Matrix::from_vec(1, 2, vec![-1.25, 3.5]),
@@ -449,6 +653,80 @@ mod tests {
         assert_eq!(back.params[0].data, c.params[0].data);
         assert_eq!(back.params[1].data, c.params[1].data);
         assert!(back.state.is_none());
+        // fingerprint field: absent stays None (pre-PR-5 files), a
+        // value round-trips exactly (incl. above 2^53)
+        assert!(back.graph_fingerprint.is_none());
+        let mut with_fp = c.clone();
+        with_fp.graph_fingerprint = Some(0x9E3779B97F4A7C15);
+        with_fp.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.graph_fingerprint, Some(0x9E3779B97F4A7C15));
+    }
+
+    #[test]
+    fn streamed_save_matches_tree_serialization() {
+        // the streaming writer must emit byte-for-byte what serializing
+        // the equivalent Json tree emits (v1 shape: every field type)
+        let c = ckpt();
+        let path = tmpfile("stream_eq");
+        c.save(&path).unwrap();
+        let got = std::fs::read_to_string(&path).unwrap();
+        let tree = Json::obj(vec![
+            ("format", Json::str("digest-checkpoint-v1")),
+            ("artifact", Json::str(c.artifact.clone())),
+            ("epoch", Json::num(c.epoch as f64)),
+            ("best_val_f1", Json::num(c.best_val_f1)),
+            ("params", Json::Arr(c.params.iter().map(mat_json).collect())),
+        ]);
+        assert_eq!(got, tree.to_string());
+    }
+
+    #[test]
+    fn save_buf_capacity_is_steady_across_saves() {
+        // the round-trip allocation-count assertion: after the first
+        // save sizes the buffer, later saves of the same checkpoint
+        // shape must not grow it (clear keeps capacity; same content
+        // length cannot outgrow it)
+        let c = ckpt();
+        let path = tmpfile("reuse");
+        let mut buf = SaveBuf::new();
+        c.save_with(&mut buf, &path).unwrap();
+        let high_water = buf.capacity();
+        assert!(high_water > 0);
+        for _ in 0..3 {
+            c.save_with(&mut buf, &path).unwrap();
+            assert_eq!(buf.capacity(), high_water, "save re-grew the buffer");
+        }
+        assert_eq!(buf.saves(), 4);
+        // and the streamed bytes still load back bit-exactly
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.params[0].data, c.params[0].data);
+    }
+
+    #[test]
+    fn mat_from_json_into_reuses_matrix_buffers() {
+        let m = Matrix::from_fn(4, 3, |r, c| (r * 3 + c) as f32 * -0.25);
+        let j = mat_json(&m);
+        mat_json_shape(&j).unwrap();
+        // same shape: buffer reused, contents bit-exact
+        let mut dst = Matrix::zeros(4, 3);
+        let ptr = dst.data.as_ptr();
+        assert!(!mat_from_json_into(&j, &mut dst).unwrap());
+        assert_eq!(dst.data.as_ptr(), ptr, "same-shape parse re-allocated");
+        assert_eq!(dst.data, m.data);
+        // shape change: re-allocates and reports it
+        let mut small = Matrix::zeros(1, 1);
+        assert!(mat_from_json_into(&j, &mut small).unwrap());
+        assert_eq!((small.rows, small.cols), (4, 3));
+        assert_eq!(small.data, m.data);
+        // corrupt element count is an error (and shape-validates first)
+        let bad = Json::obj(vec![
+            ("rows", Json::num(2.0)),
+            ("cols", Json::num(2.0)),
+            ("data", Json::Arr(vec![Json::num(1.0)])),
+        ]);
+        assert!(mat_json_shape(&bad).is_err());
+        assert!(mat_from_json_into(&bad, &mut dst).is_err());
     }
 
     #[test]
@@ -503,6 +781,7 @@ mod tests {
             artifact: "karate_gcn".into(),
             epoch: 4,
             best_val_f1: 0.75,
+            graph_fingerprint: None,
             params: state.ps.params.clone(),
             state: Some(state),
         };
@@ -542,6 +821,7 @@ mod tests {
             artifact: "karate_gcn".into(),
             epoch: 1,
             best_val_f1: 0.5,
+            graph_fingerprint: None,
             params: init_params(spec, 0),
             state: None,
         };
@@ -569,6 +849,7 @@ mod tests {
             artifact: ctx.artifact.clone(),
             epoch: 0,
             best_val_f1: v1,
+            graph_fingerprint: Some(ctx.eval_engine().fingerprint()),
             params,
             state: None,
         };

@@ -107,6 +107,13 @@ impl ArtifactSpec {
         })
     }
 
+    /// The crate-wide [`crate::gnn::ModelKind`] this artifact was built
+    /// for (the manifest stores it as a string; `serve` export
+    /// validates through this instead of re-parsing ad hoc).
+    pub fn model_kind(&self) -> crate::Result<crate::gnn::ModelKind> {
+        self.model.parse()
+    }
+
     /// GNN layer dims [d_in, d_h, ..., n_class].
     pub fn dims(&self) -> Vec<usize> {
         let mut d = vec![self.d_in];
@@ -218,6 +225,7 @@ mod tests {
     fn gat_artifact_has_attention_params() {
         let m = Manifest::load(manifest_dir()).unwrap();
         let spec = m.get("karate_gat", "train").unwrap();
+        assert_eq!(spec.model_kind().unwrap(), crate::gnn::ModelKind::Gat);
         assert_eq!(spec.n_params(), 8);
         assert_eq!(spec.inputs[4].name, "l0_w");
         assert_eq!(spec.inputs[6].name, "l0_a_src");

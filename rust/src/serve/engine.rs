@@ -1,0 +1,671 @@
+//! [`InferenceEngine`] — pool-aware, multi-model prediction over one
+//! graph.
+//!
+//! The engine owns the dataset (graph + features, shared via `Arc` with
+//! the training context when one exists), a small pool of reusable
+//! [`Workspace`]s keyed by [`ModelKind`] (with width-aware routing so
+//! differently-sized models each keep a workspace shaped for them),
+//! and a handle on the process-wide [`ChunkPool`] the chunked kernels
+//! fan out on.  Every
+//! model-apply in the crate funnels through [`InferenceEngine::forward_raw`]:
+//! `TrainContext::global_eval` calls it for training-time evaluation,
+//! and [`InferenceEngine::predict`] / [`InferenceEngine::predict_many`]
+//! call it for serving — one code path, so serving is bit-identical to
+//! training eval by construction.
+//!
+//! Steady-state cost model: the structure CSR is built once per
+//! (kind, graph) when the pool first sees that kind, and every workspace
+//! checkout after warmup reuses both the structure and the per-layer
+//! scratch.  [`EngineStats`] exposes the counters
+//! (`structure_builds` must stay flat across a warm `predict_many`
+//! batch — asserted in `tests/integration_serve.rs` and the serve rows
+//! of `benches/bench_eval.rs`).
+//!
+//! Concurrency: every method takes `&self`.  Concurrent predicts check
+//! out distinct workspaces (the pool grows up to a small cap per kind),
+//! run genuinely in parallel, and are bit-stable because the underlying
+//! kernels are thread-count deterministic.
+
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::gnn::{metrics, ModelKind, Workspace};
+use crate::graph::{Dataset, Split};
+use crate::runtime::{
+    assemble_inputs, parse_eval_output, ArtifactSpec, EvalOutput, Runtime, SharedLiteral,
+    StaticInputs,
+};
+use crate::tensor::pool::ChunkPool;
+use crate::tensor::Matrix;
+use crate::util::lock_unpoisoned;
+use crate::{eyre, Result};
+
+use super::model::InferenceModel;
+
+/// Which nodes a prediction request covers, and whether per-node top-k
+/// class scores should be materialized.
+#[derive(Debug, Clone, Default)]
+pub struct NodeQuery {
+    /// None = every node in the graph.
+    nodes: Option<Vec<usize>>,
+    /// 0 = argmax only; k > 0 additionally returns the top-k
+    /// (class, logit) list per queried node.
+    top_k: usize,
+}
+
+impl NodeQuery {
+    /// Full-graph query (argmax per node).
+    pub fn full() -> Self {
+        NodeQuery::default()
+    }
+
+    /// Query a node subset (argmax per node).
+    pub fn nodes(ids: Vec<usize>) -> Self {
+        NodeQuery {
+            nodes: Some(ids),
+            top_k: 0,
+        }
+    }
+
+    /// Request top-k (class, logit) per node on top of the argmax.
+    pub fn with_top_k(mut self, k: usize) -> Self {
+        self.top_k = k;
+        self
+    }
+
+    pub fn queried(&self) -> Option<&[usize]> {
+        self.nodes.as_deref()
+    }
+
+    pub fn top_k(&self) -> usize {
+        self.top_k
+    }
+}
+
+/// One served prediction: logits are copied out of the workspace (the
+/// workspace itself goes straight back to the pool), so a `Prediction`
+/// is free-standing data the caller can hold as long as it likes.
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    /// Name of the model that produced this prediction.
+    pub model: String,
+    /// Queried node ids, row-aligned with `logits`/`classes`/`top_k`.
+    pub nodes: Vec<usize>,
+    /// (nodes.len(), n_class) raw logits.
+    pub logits: Matrix,
+    /// Predicted class per queried node.  Plain queries use
+    /// [`Matrix::argmax_rows`] — the exact reduction training eval
+    /// uses; top-k queries re-derive it as `top_k[i][0].0` so the two
+    /// fields can never disagree.  On finite logits both derivations
+    /// coincide; they differ only on rows containing NaN (a diverged
+    /// model), where the top-k ranking deliberately puts NaN last.
+    pub classes: Vec<usize>,
+    /// Top-k (class, logit) per queried node, best first; empty unless
+    /// the query asked for it.  Ties break toward the lower class id,
+    /// and `top_k[i][0].0 == classes[i]` holds by construction.
+    pub top_k: Vec<Vec<(usize, f32)>>,
+}
+
+/// Monotonic engine counters (the serving-side analogue of
+/// [`crate::gnn::WorkspaceStats`], aggregated over the workspace pool).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    /// Structure-CSR constructions — one per workspace ever built; must
+    /// stay flat once the pool is warm for the kinds being served.
+    pub structure_builds: u64,
+    /// Scratch allocations across all forwards (flat in steady state
+    /// for a fixed set of model shapes).
+    pub scratch_allocs: u64,
+    /// Forward passes executed.
+    pub forwards: u64,
+    /// Predictions served (`predict` + every request in a batch).
+    pub predictions: u64,
+    /// `predict_many` batches served.
+    pub batches: u64,
+}
+
+/// Workspaces kept pooled per model kind; extras built under concurrent
+/// load are dropped on return rather than hoarded.
+const MAX_POOLED_PER_KIND: usize = 4;
+
+/// Pool-aware inference engine over one graph.  See the module docs.
+pub struct InferenceEngine {
+    ds: Arc<Dataset>,
+    /// Lazily computed (`OnceLock`): hashing the full feature matrix is
+    /// an O(n·d) pass that pure-training contexts — which build an
+    /// engine for `global_eval` but may never export or serve — should
+    /// not pay up front.
+    fingerprint: OnceLock<u64>,
+    /// Default thread count for predictions (0 = auto); explicit-thread
+    /// callers (training eval) pass their own to [`Self::forward_raw`].
+    threads: usize,
+    pool: Mutex<Vec<Workspace>>,
+    counters: Mutex<EngineStats>,
+}
+
+impl InferenceEngine {
+    pub fn new(ds: Arc<Dataset>) -> Self {
+        // warm the process-wide compute pool so its worker threads
+        // exist before the first request (kernels reach it lazily)
+        ChunkPool::global();
+        InferenceEngine {
+            ds,
+            fingerprint: OnceLock::new(),
+            threads: 0,
+            pool: Mutex::new(Vec::new()),
+            counters: Mutex::new(EngineStats::default()),
+        }
+    }
+
+    /// Set the default prediction thread count (0 = auto; output is
+    /// bit-identical at any value).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    pub fn ds(&self) -> &Dataset {
+        &self.ds
+    }
+
+    /// Fingerprint of the served graph + features; models must match.
+    /// Computed on first use and cached.
+    pub fn fingerprint(&self) -> u64 {
+        *self.fingerprint.get_or_init(|| self.ds.fingerprint())
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        *lock_unpoisoned(&self.counters)
+    }
+
+    /// Currently pooled (idle) workspaces.
+    pub fn pooled_workspaces(&self) -> usize {
+        lock_unpoisoned(&self.pool).len()
+    }
+
+    /// Check a workspace of `kind` out of the pool, run `f`, account
+    /// the stats delta, return it.  `widths` is the per-layer output
+    /// widths the caller is about to forward with (empty = no hint):
+    /// checkout prefers a workspace whose scratch is already sized for
+    /// them, builds a fresh one (up to the per-kind cap) when only
+    /// differently-sized workspaces are pooled — resizing a pooled
+    /// workspace back and forth between two models' shapes would
+    /// defeat the zero-alloc steady state — and resizes an existing
+    /// one only once the cap is reached.
+    fn with_workspace<R>(
+        &self,
+        kind: ModelKind,
+        widths: &[usize],
+        f: impl FnOnce(&mut Workspace) -> Result<R>,
+    ) -> Result<R> {
+        let mut ws = {
+            let mut pool = lock_unpoisoned(&self.pool);
+            let exact = pool.iter().position(|w| {
+                w.kind() == kind && (widths.is_empty() || w.scratch_matches(widths))
+            });
+            let slot = exact.or_else(|| {
+                // no shape match: only reuse (and resize) a same-kind
+                // workspace once the pool already holds the cap for it
+                if pool.iter().filter(|w| w.kind() == kind).count() >= MAX_POOLED_PER_KIND {
+                    pool.iter().position(|w| w.kind() == kind)
+                } else {
+                    None
+                }
+            });
+            match slot {
+                Some(i) => pool.swap_remove(i),
+                None => {
+                    drop(pool); // structure build runs outside the lock
+                    let ws = Workspace::new(kind, &self.ds.graph);
+                    lock_unpoisoned(&self.counters).structure_builds += 1;
+                    ws
+                }
+            }
+        };
+        let before = ws.stats();
+        let out = f(&mut ws);
+        let after = ws.stats();
+        {
+            let mut c = lock_unpoisoned(&self.counters);
+            c.scratch_allocs += after.scratch_allocs - before.scratch_allocs;
+            c.forwards += after.forwards - before.forwards;
+        }
+        let mut pool = lock_unpoisoned(&self.pool);
+        if pool.iter().filter(|w| w.kind() == kind).count() < MAX_POOLED_PER_KIND {
+            pool.push(ws);
+        }
+        out
+    }
+
+    /// Per-layer output widths implied by a flat parameter list (the
+    /// workspace-routing hint); empty when the list is malformed — the
+    /// forward itself surfaces the real validation error.
+    fn param_widths(kind: ModelKind, params: &[Matrix]) -> Vec<usize> {
+        let ppl = kind.params_per_layer();
+        if params.is_empty() || params.len() % ppl != 0 {
+            return Vec::new();
+        }
+        params.chunks(ppl).map(|c| c[0].cols).collect()
+    }
+
+    /// The engine-grade forward entry point: every full-graph
+    /// model-apply in the crate (training eval and serving alike) runs
+    /// through here.  `read` sees the workspace-borrowed logits and
+    /// hidden reps and extracts whatever the caller needs; the
+    /// workspace returns to the pool afterwards.  Bit-identical at any
+    /// `threads` (0 = auto).
+    pub fn forward_raw<R>(
+        &self,
+        kind: ModelKind,
+        params: &[Matrix],
+        normalize: bool,
+        threads: usize,
+        read: impl FnOnce(&Matrix, &[Matrix]) -> R,
+    ) -> Result<R> {
+        let widths = Self::param_widths(kind, params);
+        self.with_workspace(kind, &widths, |ws| {
+            let (logits, hidden) = ws.forward(&self.ds.features, params, normalize, threads)?;
+            Ok(read(logits, hidden))
+        })
+    }
+
+    /// Global (val, test) micro-F1 of raw parameters — what
+    /// `TrainContext::global_eval` delegates to.
+    pub fn eval_f1(
+        &self,
+        kind: ModelKind,
+        params: &[Matrix],
+        normalize: bool,
+        threads: usize,
+    ) -> Result<(f64, f64)> {
+        self.forward_raw(kind, params, normalize, threads, |logits, _| {
+            let preds = logits.argmax_rows();
+            let val = self.ds.nodes_in_split(Split::Val);
+            let test = self.ds.nodes_in_split(Split::Test);
+            (
+                metrics::micro_f1(&preds, &self.ds.labels, &val),
+                metrics::micro_f1(&preds, &self.ds.labels, &test),
+            )
+        })
+    }
+
+    /// Refuse models that do not belong to this engine's graph — a
+    /// structured `Err` naming both fingerprints and the dims, never a
+    /// shape panic downstream.
+    pub fn validate_model(&self, model: &InferenceModel) -> Result<()> {
+        if model.d_in() != self.ds.features.cols {
+            return Err(eyre!(
+                "model {:?} expects d_in {} (dims {:?}) but engine features have {} columns",
+                model.name(),
+                model.d_in(),
+                model.dims(),
+                self.ds.features.cols
+            ));
+        }
+        if model.graph_fingerprint() != self.fingerprint() {
+            return Err(eyre!(
+                "model {:?} was exported for graph fingerprint {:#018x} (dataset {:?}, seed {}) \
+                 but this engine serves fingerprint {:#018x} (dataset {:?}); refusing to apply",
+                model.name(),
+                model.graph_fingerprint(),
+                model.dataset(),
+                model.seed(),
+                self.fingerprint(),
+                self.ds.name
+            ));
+        }
+        Ok(())
+    }
+
+    fn resolve_nodes(&self, q: &NodeQuery) -> Result<Vec<usize>> {
+        match q.queried() {
+            None => Ok((0..self.ds.n()).collect()),
+            Some(ids) => {
+                if ids.is_empty() {
+                    return Err(eyre!("query selects no nodes"));
+                }
+                for &v in ids {
+                    if v >= self.ds.n() {
+                        return Err(eyre!(
+                            "query node {v} out of range (graph has {} nodes)",
+                            self.ds.n()
+                        ));
+                    }
+                }
+                Ok(ids.to_vec())
+            }
+        }
+    }
+
+    /// Copy the queried rows out of the full-graph logits and derive
+    /// argmax / top-k.  Top-k order is deterministic: logit descending,
+    /// ties toward the lower class id (matching `argmax_rows`).
+    fn prediction_from_logits(
+        &self,
+        model: &InferenceModel,
+        q: &NodeQuery,
+        nodes: Vec<usize>,
+        logits: &Matrix,
+    ) -> Prediction {
+        let n_class = logits.cols;
+        let mut sub = Matrix::zeros(nodes.len(), n_class);
+        for (i, &v) in nodes.iter().enumerate() {
+            sub.copy_row_from(i, logits.row(v));
+        }
+        let mut classes = sub.argmax_rows();
+        let top_k: Vec<Vec<(usize, f32)>> = if q.top_k() == 0 {
+            Vec::new()
+        } else {
+            let k = q.top_k().min(n_class);
+            (0..nodes.len())
+                .map(|i| {
+                    let row = sub.row(i);
+                    let mut idx: Vec<usize> = (0..n_class).collect();
+                    idx.sort_by(|&a, &b| {
+                        let (x, y) = (row[a], row[b]);
+                        // descending by logit; NaN (diverged model)
+                        // ranks below every real value; ties toward
+                        // the lower class id
+                        y.partial_cmp(&x)
+                            .unwrap_or_else(|| x.is_nan().cmp(&y.is_nan()))
+                            .then(a.cmp(&b))
+                    });
+                    idx.into_iter().take(k).map(|c| (c, row[c])).collect()
+                })
+                .collect()
+        };
+        if !top_k.is_empty() {
+            // the documented invariant top_k[i][0].0 == classes[i] holds
+            // by construction — argmax_rows and the NaN-last ranking
+            // could disagree on rows containing NaN logits
+            for (c, tk) in classes.iter_mut().zip(&top_k) {
+                *c = tk[0].0;
+            }
+        }
+        Prediction {
+            model: model.name().to_string(),
+            nodes,
+            logits: sub,
+            classes,
+            top_k,
+        }
+    }
+
+    /// Serve one prediction.  Logits are bit-identical to
+    /// `TrainContext::global_eval` over the same parameters at any
+    /// thread/pool size (same forward entry point).
+    pub fn predict(&self, model: &InferenceModel, q: &NodeQuery) -> Result<Prediction> {
+        self.validate_model(model)?;
+        let nodes = self.resolve_nodes(q)?;
+        let pred = self.forward_raw(
+            model.kind(),
+            model.params(),
+            model.normalize(),
+            self.threads,
+            |logits, _| self.prediction_from_logits(model, q, nodes, logits),
+        )?;
+        lock_unpoisoned(&self.counters).predictions += 1;
+        Ok(pred)
+    }
+
+    /// Serve a batch of requests — typically *different models over the
+    /// same graph* — back to back.  Requests are grouped by
+    /// (kind, dims) and each group runs through one workspace checkout,
+    /// so a warm batch performs **zero structure rebuilds and zero
+    /// scratch re-allocations** and skips the per-request pool
+    /// round-trip that interleaved single predicts pay.  Results come
+    /// back in request order.
+    pub fn predict_many(
+        &self,
+        requests: &[(&InferenceModel, &NodeQuery)],
+    ) -> Result<Vec<Prediction>> {
+        for (model, _) in requests {
+            self.validate_model(model)?;
+        }
+        let mut out: Vec<Option<Prediction>> = requests.iter().map(|_| None).collect();
+        let mut done = vec![false; requests.len()];
+        for i in 0..requests.len() {
+            if done[i] {
+                continue;
+            }
+            let kind = requests[i].0.kind();
+            let dims = requests[i].0.dims().to_vec();
+            let group: Vec<usize> = (i..requests.len())
+                .filter(|&j| {
+                    !done[j]
+                        && requests[j].0.kind() == kind
+                        && requests[j].0.dims() == dims.as_slice()
+                })
+                .collect();
+            self.with_workspace(kind, &dims[1..], |ws| {
+                for &j in &group {
+                    let (model, q) = requests[j];
+                    let nodes = self.resolve_nodes(q)?;
+                    let (logits, _) = ws.forward(
+                        &self.ds.features,
+                        model.params(),
+                        model.normalize(),
+                        self.threads,
+                    )?;
+                    out[j] = Some(self.prediction_from_logits(model, q, nodes, logits));
+                }
+                Ok(())
+            })?;
+            for &j in &group {
+                done[j] = true;
+            }
+        }
+        let mut c = lock_unpoisoned(&self.counters);
+        c.batches += 1;
+        c.predictions += requests.len() as u64;
+        drop(c);
+        Ok(out
+            .into_iter()
+            .map(|p| p.expect("every request belongs to exactly one group"))
+            .collect())
+    }
+}
+
+/// Engine-grade AOT eval-step entry point: the per-subgraph (padded,
+/// stale-input) counterpart of [`InferenceEngine::forward_raw`].
+/// Training-internal eval (`coordinator::worker::exec_eval`, the
+/// propagation baseline's refresh pass) and any distributed serving
+/// path execute eval artifacts through this one function, so there is a
+/// single code path from packed literals to parsed eval output.
+pub fn aot_eval_step(
+    rt: &Runtime,
+    artifact: &str,
+    spec: &ArtifactSpec,
+    statics: &StaticInputs,
+    stale: &[Arc<SharedLiteral>],
+    params: &[SharedLiteral],
+) -> Result<EvalOutput> {
+    let inputs = assemble_inputs(spec, statics, stale, params);
+    let outs = rt.execute(artifact, &spec.kind, &inputs)?;
+    parse_eval_output(spec, &outs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gnn::init_params_for_dims;
+    use crate::graph::registry::load;
+    use crate::util::Rng;
+
+    fn engine() -> InferenceEngine {
+        InferenceEngine::new(Arc::new(load("karate", 0).unwrap()))
+    }
+
+    fn model_for(
+        engine: &InferenceEngine,
+        kind: ModelKind,
+        dims: &[usize],
+        seed: u64,
+    ) -> InferenceModel {
+        let mut rng = Rng::new(seed);
+        let params = init_params_for_dims(kind, dims, &mut rng);
+        InferenceModel::new(
+            format!("m{seed}"),
+            "karate_gcn",
+            kind,
+            "karate",
+            0,
+            dims.to_vec(),
+            true,
+            engine.fingerprint(),
+            0,
+            0.5,
+            params,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn predict_full_and_subset_agree() {
+        let e = engine();
+        let m = model_for(&e, ModelKind::Gcn, &[16, 8, 4], 1);
+        let full = e.predict(&m, &NodeQuery::full()).unwrap();
+        assert_eq!(full.nodes.len(), 34);
+        assert_eq!(full.logits.rows, 34);
+        assert_eq!(full.classes.len(), 34);
+        assert!(full.top_k.is_empty());
+        let sub = e.predict(&m, &NodeQuery::nodes(vec![5, 0, 33])).unwrap();
+        assert_eq!(sub.nodes, vec![5, 0, 33]);
+        for (i, &v) in sub.nodes.iter().enumerate() {
+            assert_eq!(sub.classes[i], full.classes[v]);
+            assert_eq!(sub.logits.row(i), full.logits.row(v));
+        }
+    }
+
+    #[test]
+    fn top_k_is_sorted_and_consistent_with_argmax() {
+        let e = engine();
+        let m = model_for(&e, ModelKind::Gcn, &[16, 8, 4], 2);
+        let p = e.predict(&m, &NodeQuery::full().with_top_k(3)).unwrap();
+        assert_eq!(p.top_k.len(), 34);
+        for (i, tk) in p.top_k.iter().enumerate() {
+            assert_eq!(tk.len(), 3);
+            assert_eq!(tk[0].0, p.classes[i], "top-1 must equal argmax");
+            for w in tk.windows(2) {
+                assert!(w[0].1 >= w[1].1, "top-k not sorted");
+            }
+        }
+        // k larger than n_class clamps
+        let p = e.predict(&m, &NodeQuery::nodes(vec![0]).with_top_k(99)).unwrap();
+        assert_eq!(p.top_k[0].len(), 4);
+    }
+
+    #[test]
+    fn pool_reuses_workspaces_across_predicts() {
+        let e = engine();
+        let m = model_for(&e, ModelKind::Gcn, &[16, 8, 4], 3);
+        e.predict(&m, &NodeQuery::full()).unwrap();
+        let warm = e.stats();
+        assert_eq!(warm.structure_builds, 1);
+        assert!(warm.scratch_allocs > 0);
+        for _ in 0..4 {
+            e.predict(&m, &NodeQuery::full()).unwrap();
+        }
+        let steady = e.stats();
+        assert_eq!(steady.structure_builds, 1, "predict rebuilt the structure CSR");
+        assert_eq!(steady.scratch_allocs, warm.scratch_allocs);
+        assert_eq!(steady.predictions, 5);
+        assert_eq!(e.pooled_workspaces(), 1);
+        // a GAT model brings its own structure, once
+        let g = model_for(&e, ModelKind::Gat, &[16, 8, 4], 4);
+        e.predict(&g, &NodeQuery::full()).unwrap();
+        e.predict(&g, &NodeQuery::full()).unwrap();
+        assert_eq!(e.stats().structure_builds, 2);
+        assert_eq!(e.pooled_workspaces(), 2);
+    }
+
+    #[test]
+    fn bad_queries_are_structured_errors() {
+        let e = engine();
+        let m = model_for(&e, ModelKind::Gcn, &[16, 8, 4], 5);
+        let err = e.predict(&m, &NodeQuery::nodes(vec![34])).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        assert!(e.predict(&m, &NodeQuery::nodes(vec![])).is_err());
+    }
+
+    #[test]
+    fn mismatched_models_are_refused_with_fingerprints() {
+        let e = engine();
+        // wrong d_in: dims named in the error
+        let mut rng = Rng::new(6);
+        let params = init_params_for_dims(ModelKind::Gcn, &[8, 4, 4], &mut rng);
+        let narrow = InferenceModel::new(
+            "narrow",
+            "x",
+            ModelKind::Gcn,
+            "other",
+            9,
+            vec![8, 4, 4],
+            false,
+            123,
+            0,
+            0.0,
+            params,
+        )
+        .unwrap();
+        let err = e.predict(&narrow, &NodeQuery::full()).unwrap_err();
+        assert!(err.to_string().contains("d_in 8"), "{err}");
+        assert!(err.to_string().contains("[8, 4, 4]"), "{err}");
+        // right dims, wrong graph: both fingerprints named
+        let mut rng = Rng::new(7);
+        let params = init_params_for_dims(ModelKind::Gcn, &[16, 8, 4], &mut rng);
+        let foreign = InferenceModel::new(
+            "foreign",
+            "x",
+            ModelKind::Gcn,
+            "other",
+            9,
+            vec![16, 8, 4],
+            false,
+            123,
+            0,
+            0.0,
+            params,
+        )
+        .unwrap();
+        let err = e.predict(&foreign, &NodeQuery::full()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("fingerprint"), "{msg}");
+        assert!(msg.contains(&format!("{:#018x}", e.fingerprint())), "{msg}");
+        assert!(msg.contains(&format!("{:#018x}", 123u64)), "{msg}");
+        // predict_many refuses the whole batch up front
+        let ok = model_for(&e, ModelKind::Gcn, &[16, 8, 4], 8);
+        let q = NodeQuery::full();
+        assert!(e.predict_many(&[(&ok, &q), (&foreign, &q)]).is_err());
+        assert_eq!(e.stats().batches, 0);
+    }
+
+    #[test]
+    fn predict_many_orders_results_and_counts_one_batch() {
+        let e = engine();
+        let a = model_for(&e, ModelKind::Gcn, &[16, 8, 4], 10);
+        let b = model_for(&e, ModelKind::Gcn, &[16, 12, 4], 11); // different width
+        let g = model_for(&e, ModelKind::Gat, &[16, 8, 4], 12);
+        let q = NodeQuery::full().with_top_k(2);
+        let single: Vec<Prediction> = [&a, &b, &g, &a]
+            .iter()
+            .map(|m| e.predict(m, &q).unwrap())
+            .collect();
+        let batch = e
+            .predict_many(&[(&a, &q), (&b, &q), (&g, &q), (&a, &q)])
+            .unwrap();
+        assert_eq!(batch.len(), 4);
+        for (s, bt) in single.iter().zip(&batch) {
+            assert_eq!(s.model, bt.model);
+            assert_eq!(s.classes, bt.classes);
+            assert!(
+                s.logits.data.iter().zip(&bt.logits.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "batched prediction diverged from single predict"
+            );
+        }
+        assert_eq!(e.stats().batches, 1);
+    }
+}

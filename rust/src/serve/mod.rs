@@ -1,0 +1,120 @@
+//! `digest::serve` — pool-aware, multi-model inference decoupled from
+//! the training stack.
+//!
+//! Training makes models; this module *applies* them, as a first-class
+//! phase of its own (cf. the distributed-GNN serving literature: once
+//! stale-sync training makes trained GNNs cheap to produce, embedding /
+//! prediction serving becomes the phase that actually faces traffic).
+//! Three pieces:
+//!
+//! * [`InferenceModel`] — a **sealed, immutable trained-model
+//!   artifact**: parameters + model kind + layer dims + a fingerprint
+//!   of the graph/features it was trained on, with a versioned on-disk
+//!   format (`digest-model-v1`).  Exported from a checkpoint
+//!   ([`InferenceModel::from_checkpoint`], CLI `digest export`), from a
+//!   live session (`session.export_model(name)`), or automatically
+//!   during training ([`ExportBestHook`]).  Every construction path
+//!   validates, so a mismatched model surfaces as a structured `Err` —
+//!   never a shape panic mid-forward.
+//! * [`InferenceEngine`] — owns the graph (shared `Arc<Dataset>`), a
+//!   small pool of reusable [`crate::gnn::Workspace`]s keyed by model
+//!   kind, and the process-wide
+//!   [`crate::tensor::pool::ChunkPool`]; serves
+//!   [`InferenceEngine::predict`] (full-graph, node-subset, and top-k
+//!   queries via [`NodeQuery`]) and the batched
+//!   [`InferenceEngine::predict_many`], which runs requests for
+//!   *different models over the same graph* back to back with zero
+//!   structure rebuilds ([`EngineStats`] proves it).  Training eval
+//!   (`TrainContext::global_eval`) routes through the same
+//!   [`InferenceEngine::forward_raw`] entry point, so serving is
+//!   bit-identical to training eval by construction; the AOT
+//!   per-subgraph eval path shares [`aot_eval_step`] the same way.
+//! * [`ModelRegistry`] — named multi-model store (load / list / evict /
+//!   hot-[`ModelRegistry::reload`]) for serving processes.
+//!
+//! CLI: `digest export <ckpt> <model>`, `digest predict <model>`,
+//! `digest bench-serve <model>...`; `digest train export_best=<path>`
+//! auto-exports the best-val-F1 model while training runs.
+
+pub mod engine;
+pub mod model;
+pub mod registry;
+
+pub use engine::{aot_eval_step, EngineStats, InferenceEngine, NodeQuery, Prediction};
+pub use model::{dataset_for_artifact, InferenceModel, MODEL_FORMAT};
+pub use registry::ModelRegistry;
+
+use crate::coordinator::hooks::{Hook, HookAction};
+use crate::coordinator::session::{EpochReport, TrainSession};
+use crate::Result;
+
+/// Training-side auto-export: whenever the run's best validation F1
+/// improves, re-export the current parameters as an [`InferenceModel`]
+/// at a fixed path — when the run ends (or the process dies), the file
+/// holds the best model seen so far, ready for `digest predict` / a
+/// [`ModelRegistry`] to [`ModelRegistry::reload`].
+///
+/// Fires on `on_epoch_end` against the *cumulative*
+/// `EpochReport::best_val_f1` rather than on `on_eval` against that
+/// epoch's point value: an async session's step covers a whole
+/// M-update window whose report only surfaces the final epoch, so a
+/// best-setting evaluation mid-window would never reach `on_eval` —
+/// the cumulative counter catches it at the next boundary.  (Hooks see
+/// the session only at step boundaries, so the exported weights are
+/// the end-of-step parameters: exact for the synchronous scheduler,
+/// and for DIGEST-A up to the PS updates that landed between the
+/// best-setting eval and the window end.)  Checkpoints are no
+/// substitute — they may be disabled entirely, and a later checkpoint
+/// would carry post-best parameters.  Wired from the
+/// `RunConfig::export_best` knob by `Driver::from_config`.
+pub struct ExportBestHook {
+    path: String,
+    best: f64,
+    exports: u64,
+}
+
+impl ExportBestHook {
+    pub fn new(path: impl Into<String>) -> Self {
+        ExportBestHook {
+            path: path.into(),
+            best: f64::NEG_INFINITY,
+            exports: 0,
+        }
+    }
+
+    /// Model files written so far.
+    pub fn exports(&self) -> u64 {
+        self.exports
+    }
+}
+
+impl Hook for ExportBestHook {
+    fn name(&self) -> &'static str {
+        "export-best"
+    }
+
+    fn on_epoch_end(
+        &mut self,
+        report: &EpochReport,
+        session: &dyn TrainSession,
+    ) -> Result<HookAction> {
+        let best = report.best_val_f1;
+        if self.best.is_infinite() && report.epoch > 0 {
+            // resumed run (first callback is past epoch 0): the
+            // restored cumulative best belongs to a model this hook
+            // never saw.  Seed the threshold WITHOUT exporting, or the
+            // resume point's parameters — which never scored that F1 —
+            // would overwrite the historic best model file.
+            self.best = best;
+            return Ok(HookAction::Continue);
+        }
+        if best.is_finite() && best > self.best {
+            let name = format!("{}-best", session.ctx().artifact);
+            let model = InferenceModel::from_session(&name, session)?;
+            model.save(&self.path)?;
+            self.best = best;
+            self.exports += 1;
+        }
+        Ok(HookAction::Continue)
+    }
+}

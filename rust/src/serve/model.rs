@@ -1,0 +1,660 @@
+//! [`InferenceModel`] — a sealed, immutable trained-model artifact.
+//!
+//! Training produces parameters tangled up with training state
+//! (checkpoints carry optimizer moments, worker RNG streams, the KVS
+//! dump).  Serving needs none of that: it needs the parameters plus
+//! exactly enough metadata to *refuse misuse* — the model kind, the
+//! layer dims, and a fingerprint of the graph/features the model was
+//! trained against.  An `InferenceModel` is that artifact: constructed
+//! only through validating paths (export from a [`Checkpoint`], export
+//! from a live `TrainSession`, or load of a `digest-model-v1` file),
+//! with private fields so no caller can un-seal it into an
+//! inconsistent state.
+//!
+//! On-disk format (`digest-model-v1`): a single JSON file, same
+//! dependency-free codec as checkpoints, floats via shortest-round-trip
+//! formatting so load is bit-exact.
+
+use std::path::Path;
+
+use crate::gnn::ModelKind;
+use crate::graph::registry::{DatasetSpec, SPECS};
+use crate::graph::Dataset;
+use crate::ps::checkpoint::{mat_from_json, mat_from_json_into, mat_json_shape, Checkpoint};
+use crate::runtime::ArtifactSpec;
+use crate::tensor::Matrix;
+use crate::util::json::Json;
+use crate::{eyre, Result};
+
+/// On-disk format tag of a serialized model.
+pub const MODEL_FORMAT: &str = "digest-model-v1";
+
+/// A sealed trained model: parameters + the metadata needed to validate
+/// every reuse.  Immutable after construction (the registry's hot
+/// reload replaces the contents wholesale, after validating the whole
+/// file).
+#[derive(Debug, Clone)]
+pub struct InferenceModel {
+    name: String,
+    artifact: String,
+    kind: ModelKind,
+    dataset: String,
+    seed: u64,
+    /// Layer dims [d_in, d_h, ..., n_class].
+    dims: Vec<usize>,
+    normalize: bool,
+    /// [`Dataset::fingerprint`] of the graph + features this model was
+    /// trained on; engines refuse to apply the model elsewhere.
+    graph_fingerprint: u64,
+    /// Epochs completed when exported (provenance).
+    epoch: usize,
+    /// Validation F1 at export (provenance; NaN when never evaluated).
+    val_f1: f64,
+    params: Vec<Matrix>,
+}
+
+/// Parameter-tensor shapes implied by (kind, dims), in flat manifest
+/// order: per layer w (d_l, d_{l+1}), b (1, d_{l+1}) [, a_src, a_dst
+/// (1, d_{l+1})].
+fn expected_shapes(kind: ModelKind, dims: &[usize]) -> Result<Vec<(usize, usize)>> {
+    if dims.len() < 2 {
+        return Err(eyre!("model needs >= 2 layer dims, got {dims:?}"));
+    }
+    let mut out = Vec::with_capacity((dims.len() - 1) * kind.params_per_layer());
+    for w in dims.windows(2) {
+        out.push((w[0], w[1]));
+        out.push((1, w[1]));
+        if kind == ModelKind::Gat {
+            out.push((1, w[1]));
+            out.push((1, w[1]));
+        }
+    }
+    Ok(out)
+}
+
+fn validate_params(kind: ModelKind, dims: &[usize], params: &[Matrix]) -> Result<()> {
+    let want = expected_shapes(kind, dims)?;
+    if params.len() != want.len() {
+        return Err(eyre!(
+            "{} model with dims {dims:?} needs {} param tensors, got {}",
+            kind.as_str(),
+            want.len(),
+            params.len()
+        ));
+    }
+    for (i, (p, &(r, c))) in params.iter().zip(&want).enumerate() {
+        if p.rows != r || p.cols != c {
+            return Err(eyre!(
+                "param {i}: {}x{} does not match the {r}x{c} implied by dims {dims:?}",
+                p.rows,
+                p.cols
+            ));
+        }
+    }
+    Ok(())
+}
+
+impl InferenceModel {
+    /// Seal a model from parts.  Every construction path funnels
+    /// through here, so a held `InferenceModel` always has parameters
+    /// consistent with its (kind, dims) — mismatches surface as `Err`
+    /// at build/load time, never as a shape panic inside a forward.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: impl Into<String>,
+        artifact: impl Into<String>,
+        kind: ModelKind,
+        dataset: impl Into<String>,
+        seed: u64,
+        dims: Vec<usize>,
+        normalize: bool,
+        graph_fingerprint: u64,
+        epoch: usize,
+        val_f1: f64,
+        params: Vec<Matrix>,
+    ) -> Result<Self> {
+        validate_params(kind, &dims, &params)?;
+        Ok(InferenceModel {
+            name: name.into(),
+            artifact: artifact.into(),
+            kind,
+            dataset: dataset.into(),
+            seed,
+            dims,
+            normalize,
+            graph_fingerprint,
+            epoch,
+            val_f1,
+            params,
+        })
+    }
+
+    /// Export from a saved [`Checkpoint`] (v1 or v2): validates the
+    /// parameters against the artifact spec — and, when the checkpoint
+    /// recorded the training graph's fingerprint, that `ds` really is
+    /// that graph — then seals them with the dataset's fingerprint.
+    /// `dataset`/`seed` name the graph the checkpointed run trained on
+    /// (the fingerprint binds to the generated instance, so the seed
+    /// matters; checkpoints without a recorded fingerprint trust the
+    /// caller).
+    pub fn from_checkpoint(
+        name: &str,
+        ckpt: &Checkpoint,
+        spec: &ArtifactSpec,
+        ds: &Dataset,
+        dataset: &str,
+        seed: u64,
+    ) -> Result<Self> {
+        ckpt.validate_against(spec)?;
+        let fp = ds.fingerprint();
+        if let Some(trained) = ckpt.graph_fingerprint {
+            if trained != fp {
+                return Err(eyre!(
+                    "checkpoint was trained on graph fingerprint {trained:#018x} but dataset \
+                     {dataset:?} seed {seed} regenerates {fp:#018x}; re-export with the \
+                     training run's seed"
+                ));
+            }
+        }
+        InferenceModel::new(
+            name,
+            ckpt.artifact.clone(),
+            spec.model_kind()?,
+            dataset,
+            seed,
+            spec.dims(),
+            spec.normalize,
+            fp,
+            ckpt.epoch,
+            ckpt.best_val_f1,
+            ckpt.params.clone(),
+        )
+    }
+
+    /// Export from a live (or finished) training session: current
+    /// parameters, sealed against the session context's graph.  Also
+    /// reachable as `session.export_model(name)`.
+    pub fn from_session<S>(name: &str, s: &S) -> Result<Self>
+    where
+        S: crate::coordinator::session::TrainSession + ?Sized,
+    {
+        let ctx = s.ctx();
+        InferenceModel::new(
+            name,
+            ctx.artifact.clone(),
+            ctx.spec.model_kind()?,
+            ctx.cfg.dataset.clone(),
+            ctx.cfg.seed,
+            ctx.spec.dims(),
+            ctx.spec.normalize,
+            ctx.eval_engine().fingerprint(),
+            s.epochs_done(),
+            s.best_val_f1(),
+            s.current_params(),
+        )
+    }
+
+    // ---- accessors (sealed: no mutators) --------------------------------
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn artifact(&self) -> &str {
+        &self.artifact
+    }
+
+    pub fn kind(&self) -> ModelKind {
+        self.kind
+    }
+
+    pub fn dataset(&self) -> &str {
+        &self.dataset
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.dims[0]
+    }
+
+    pub fn n_class(&self) -> usize {
+        *self.dims.last().expect("dims validated non-empty")
+    }
+
+    pub fn normalize(&self) -> bool {
+        self.normalize
+    }
+
+    pub fn graph_fingerprint(&self) -> u64 {
+        self.graph_fingerprint
+    }
+
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    pub fn val_f1(&self) -> f64 {
+        self.val_f1
+    }
+
+    pub fn params(&self) -> &[Matrix] {
+        &self.params
+    }
+
+    /// Parameter bytes (f32) — registry eviction decisions.
+    pub fn param_bytes(&self) -> usize {
+        self.params.iter().map(|p| p.data.len() * 4).sum()
+    }
+
+    // ---- on-disk format --------------------------------------------------
+
+    /// Save as `digest-model-v1`, streaming through the same writers as
+    /// [`crate::ps::checkpoint::Checkpoint::save_with`] — no per-element
+    /// JSON tree nodes (the export hook re-runs this at every new best
+    /// during training), byte-identical to serializing the equivalent
+    /// tree.  Written atomically: the hook overwrites this file while a
+    /// serving registry may be hot-reloading it.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        use crate::ps::checkpoint::{w_mats, w_num, w_str, w_uint};
+        let mut out = String::new();
+        out.push_str("{\"artifact\":");
+        w_str(&mut out, &self.artifact);
+        out.push_str(",\"dataset\":");
+        w_str(&mut out, &self.dataset);
+        out.push_str(",\"dims\":[");
+        for (i, &d) in self.dims.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            w_num(&mut out, d as f64);
+        }
+        out.push_str("],\"epoch\":");
+        w_num(&mut out, self.epoch as f64);
+        out.push_str(",\"format\":");
+        w_str(&mut out, MODEL_FORMAT);
+        out.push_str(",\"graph_fingerprint\":");
+        w_uint(&mut out, self.graph_fingerprint);
+        out.push_str(",\"model\":");
+        w_str(&mut out, self.kind.as_str());
+        out.push_str(",\"name\":");
+        w_str(&mut out, &self.name);
+        out.push_str(",\"normalize\":");
+        out.push_str(if self.normalize { "true" } else { "false" });
+        out.push_str(",\"params\":");
+        w_mats(&mut out, &self.params);
+        out.push_str(",\"seed\":");
+        w_uint(&mut out, self.seed);
+        out.push_str(",\"val_f1\":");
+        w_num(&mut out, self.val_f1); // NaN streams as null
+        out.push('}');
+        crate::util::write_atomic(path.as_ref(), out.as_bytes())
+            .map_err(|e| eyre!("writing model {:?}: {e}", path.as_ref()))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| eyre!("reading model {:?}: {e}", path.as_ref()))?;
+        let j = Json::parse(&text)?;
+        Self::from_json(&j).map_err(|e| eyre!("model file {:?}: {e}", path.as_ref()))
+    }
+
+    fn check_format(j: &Json) -> Result<()> {
+        let format = j.get("format")?.as_str()?;
+        if format != MODEL_FORMAT {
+            return Err(eyre!(
+                "not a digest model (format {format:?}, expected {MODEL_FORMAT:?})"
+            ));
+        }
+        Ok(())
+    }
+
+    fn meta_from_json(j: &Json) -> Result<(ModelKind, Vec<usize>)> {
+        Self::check_format(j)?;
+        let kind: ModelKind = j.get("model")?.as_str()?.parse()?;
+        let dims: Vec<usize> = j
+            .get("dims")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<_>>()?;
+        Ok((kind, dims))
+    }
+
+    pub(crate) fn from_json(j: &Json) -> Result<Self> {
+        let (kind, dims) = Self::meta_from_json(j)?;
+        let params = j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(mat_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let val_f1 = match j.get("val_f1")? {
+            Json::Null => f64::NAN,
+            other => other.as_f64()?,
+        };
+        // re-seal: loaded files get the full consistency validation too
+        InferenceModel::new(
+            j.get("name")?.as_str()?,
+            j.get("artifact")?.as_str()?,
+            kind,
+            j.get("dataset")?.as_str()?,
+            j.get("seed")?.as_u64()?,
+            dims,
+            j.get("normalize")?.as_bool()?,
+            j.get("graph_fingerprint")?.as_u64()?,
+            j.get("epoch")?.as_usize()?,
+            val_f1,
+            params,
+        )
+    }
+
+    /// Hot-reload `path` into this model in place, reusing each
+    /// parameter buffer whose shape is unchanged (the registry's reload
+    /// path: the auto-export hook overwrites the model file as training
+    /// improves, and a serving registry picks the new weights up
+    /// without re-allocating the served parameter set).
+    /// All-or-nothing: the whole file is validated *before* any field
+    /// mutates, so `Err` leaves the model exactly as it was.
+    pub fn reload(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| eyre!("reading model {:?}: {e}", path.as_ref()))?;
+        let j = Json::parse(&text)?;
+        self.reload_from_json(&j)
+            .map_err(|e| eyre!("model file {:?}: {e}", path.as_ref()))
+    }
+
+    /// [`InferenceModel::reload`] against an already-parsed value — the
+    /// registry uses this so its rename-collision check and the apply
+    /// see the *same* file contents (a concurrent rewrite of the path
+    /// between two reads could otherwise slip past the guard).
+    pub(crate) fn reload_from_json(&mut self, j: &Json) -> Result<()> {
+        let (kind, dims) = Self::meta_from_json(j)?;
+        let pj = j.get("params")?.as_arr()?;
+        let want = expected_shapes(kind, &dims)?;
+        if pj.len() != want.len() {
+            return Err(eyre!(
+                "{} model with dims {dims:?} needs {} param tensors, file has {}",
+                kind.as_str(),
+                want.len(),
+                pj.len()
+            ));
+        }
+        for (i, (p, &(r, c))) in pj.iter().zip(&want).enumerate() {
+            let (rows, cols) = mat_json_shape(p)?;
+            if (rows, cols) != (r, c) {
+                return Err(eyre!(
+                    "param {i}: file has {rows}x{cols}, dims {dims:?} imply {r}x{c}"
+                ));
+            }
+        }
+        let val_f1 = match j.get("val_f1")? {
+            Json::Null => f64::NAN,
+            other => other.as_f64()?,
+        };
+        // every fallible read happens BEFORE any field mutates — the
+        // all-or-nothing contract above depends on it (a file with one
+        // bad metadata key must not leave fingerprint and params from
+        // different models)
+        let name = j.get("name")?.as_str()?.to_string();
+        let artifact = j.get("artifact")?.as_str()?.to_string();
+        let dataset = j.get("dataset")?.as_str()?.to_string();
+        let seed = j.get("seed")?.as_u64()?;
+        let normalize = j.get("normalize")?.as_bool()?;
+        let graph_fingerprint = j.get("graph_fingerprint")?.as_u64()?;
+        let epoch = j.get("epoch")?.as_usize()?;
+        // validated end to end: mutate, reusing matching buffers
+        self.name = name;
+        self.artifact = artifact;
+        self.dataset = dataset;
+        self.seed = seed;
+        self.normalize = normalize;
+        self.graph_fingerprint = graph_fingerprint;
+        self.epoch = epoch;
+        self.val_f1 = val_f1;
+        self.kind = kind;
+        self.dims = dims;
+        self.params
+            .resize_with(pj.len(), || Matrix::zeros(0, 0));
+        for (p, m) in pj.iter().zip(&mut self.params) {
+            // cannot fail: count, shapes, and every element were
+            // validated by mat_json_shape above
+            mat_from_json_into(p, m)?;
+        }
+        Ok(())
+    }
+}
+
+/// The model name recorded in a parsed `digest-model-v1` value,
+/// without constructing the model.  The registry checks rename
+/// collisions with this against the same parse it then applies.
+pub(crate) fn json_model_name(j: &Json) -> Result<String> {
+    InferenceModel::check_format(j)?;
+    Ok(j.get("name")?.as_str()?.to_string())
+}
+
+/// Map an artifact name (`karate_gcn`, `arxiv_s_gat`, ...) back to the
+/// registry dataset it was built for plus the model kind — what lets
+/// `digest export` regenerate the right graph from a checkpoint alone.
+pub fn dataset_for_artifact(artifact: &str) -> Result<(&'static DatasetSpec, ModelKind)> {
+    let (prefix, kind_str) = artifact
+        .rsplit_once('_')
+        .ok_or_else(|| eyre!("artifact name {artifact:?} has no _<model> suffix"))?;
+    let kind: ModelKind = kind_str
+        .parse()
+        .map_err(|_| eyre!("artifact {artifact:?} does not end in _gcn or _gat"))?;
+    let spec = SPECS
+        .iter()
+        .find(|s| s.artifact == prefix)
+        .ok_or_else(|| {
+            eyre!("no registry dataset maps to artifact prefix {prefix:?} (from {artifact:?})")
+        })?;
+    Ok((spec, kind))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gnn::init_params_for_dims;
+    use crate::graph::registry::load;
+    use crate::ps::checkpoint::mat_json;
+    use crate::util::Rng;
+
+    fn model(kind: ModelKind, dims: &[usize], seed: u64) -> InferenceModel {
+        let ds = load("karate", 0).unwrap();
+        let mut rng = Rng::new(seed);
+        let params = init_params_for_dims(kind, dims, &mut rng);
+        InferenceModel::new(
+            "m",
+            "karate_gcn",
+            kind,
+            "karate",
+            0,
+            dims.to_vec(),
+            true,
+            ds.fingerprint(),
+            3,
+            0.5,
+            params,
+        )
+        .unwrap()
+    }
+
+    fn tmppath(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("digest_model_{tag}.json"))
+    }
+
+    /// Shorthand for the validation tests: metadata is irrelevant, only
+    /// (kind, dims, params) consistency is under test.
+    fn new_for_test(
+        kind: ModelKind,
+        dims: Vec<usize>,
+        params: Vec<Matrix>,
+    ) -> Result<InferenceModel> {
+        InferenceModel::new("m", "a", kind, "karate", 0, dims, true, 0, 0, 0.0, params)
+    }
+
+    #[test]
+    fn new_seals_param_shapes() {
+        let m = model(ModelKind::Gcn, &[16, 8, 4], 1);
+        assert_eq!(m.d_in(), 16);
+        assert_eq!(m.n_class(), 4);
+        assert_eq!(m.params().len(), 4);
+        assert!(m.param_bytes() > 0);
+        // wrong arity
+        let mut rng = Rng::new(2);
+        let p = init_params_for_dims(ModelKind::Gcn, &[16, 8, 4], &mut rng);
+        let err = new_for_test(ModelKind::Gat, vec![16, 8, 4], p).unwrap_err();
+        assert!(err.to_string().contains("param tensors"), "{err}");
+        // wrong shape
+        let mut p = init_params_for_dims(ModelKind::Gcn, &[16, 8, 4], &mut rng);
+        p[2] = Matrix::zeros(9, 4);
+        let err = new_for_test(ModelKind::Gcn, vec![16, 8, 4], p).unwrap_err();
+        assert!(err.to_string().contains("9x4"), "{err}");
+        // degenerate dims
+        assert!(expected_shapes(ModelKind::Gcn, &[16]).is_err());
+    }
+
+    #[test]
+    fn save_load_round_trips_bit_exactly() {
+        let m = model(ModelKind::Gat, &[16, 8, 4], 7);
+        let path = tmppath("rt");
+        m.save(&path).unwrap();
+        let back = InferenceModel::load(&path).unwrap();
+        assert_eq!(back.name(), "m");
+        assert_eq!(back.kind(), ModelKind::Gat);
+        assert_eq!(back.dims(), &[16, 8, 4]);
+        assert_eq!(back.seed(), 0);
+        assert_eq!(back.epoch(), 3);
+        assert_eq!(back.graph_fingerprint(), m.graph_fingerprint());
+        assert!(back.normalize());
+        assert_eq!(back.params().len(), m.params().len());
+        for (a, b) in back.params().iter().zip(m.params()) {
+            assert!(
+                a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "params must round-trip bit-exactly"
+            );
+        }
+    }
+
+    #[test]
+    fn streamed_model_save_matches_tree_serialization() {
+        // the streaming writer must emit byte-for-byte what serializing
+        // the equivalent Json tree emits (BTreeMap = alphabetical keys)
+        let m = model(ModelKind::Gat, &[16, 8, 4], 21);
+        let path = tmppath("stream_eq");
+        m.save(&path).unwrap();
+        let got = std::fs::read_to_string(&path).unwrap();
+        let tree = Json::obj(vec![
+            ("format", Json::str(MODEL_FORMAT)),
+            ("name", Json::str(m.name())),
+            ("artifact", Json::str(m.artifact())),
+            ("model", Json::str(m.kind().as_str())),
+            ("dataset", Json::str(m.dataset())),
+            ("seed", Json::uint(m.seed())),
+            (
+                "dims",
+                Json::Arr(m.dims().iter().map(|&d| Json::num(d as f64)).collect()),
+            ),
+            ("normalize", Json::Bool(m.normalize())),
+            ("graph_fingerprint", Json::uint(m.graph_fingerprint())),
+            ("epoch", Json::num(m.epoch() as f64)),
+            ("val_f1", Json::num(m.val_f1())),
+            ("params", Json::Arr(m.params().iter().map(mat_json).collect())),
+        ]);
+        assert_eq!(got, tree.to_string());
+    }
+
+    #[test]
+    fn load_rejects_foreign_and_tampered_files() {
+        let path = tmppath("foreign");
+        std::fs::write(&path, r#"{"format": "something-else"}"#).unwrap();
+        assert!(InferenceModel::load(&path).is_err());
+        // tamper the dims so params no longer match: structured Err
+        let m = model(ModelKind::Gcn, &[16, 8, 4], 3);
+        let path = tmppath("tamper");
+        m.save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let tampered = text.replace("\"dims\":[16,8,4]", "\"dims\":[16,12,4]");
+        assert_ne!(text, tampered, "test must actually tamper");
+        std::fs::write(&path, tampered).unwrap();
+        let err = InferenceModel::load(&path).unwrap_err();
+        assert!(err.to_string().contains("dims"), "{err}");
+    }
+
+    #[test]
+    fn reload_reuses_buffers_and_is_all_or_nothing() {
+        let a = model(ModelKind::Gcn, &[16, 8, 4], 11);
+        let b = model(ModelKind::Gcn, &[16, 8, 4], 12);
+        let path = tmppath("reload");
+        b.save(&path).unwrap();
+        let mut live = a.clone();
+        let ptr = live.params()[0].data.as_ptr();
+        live.reload(&path).unwrap();
+        assert_eq!(live.params()[0].data.as_ptr(), ptr, "same-shape reload re-allocated");
+        assert_eq!(live.params()[0].data, b.params()[0].data);
+        // corrupt file: Err and untouched contents
+        std::fs::write(&path, "{not json").unwrap();
+        let before = live.params()[0].data.clone();
+        assert!(live.reload(&path).is_err());
+        assert_eq!(live.params()[0].data, before);
+    }
+
+    #[test]
+    fn artifact_maps_back_to_dataset() {
+        let (spec, kind) = dataset_for_artifact("karate_gcn").unwrap();
+        assert_eq!(spec.name, "karate");
+        assert_eq!(kind, ModelKind::Gcn);
+        let (spec, kind) = dataset_for_artifact("products_s_gat").unwrap();
+        assert_eq!(spec.name, "products-s");
+        assert_eq!(kind, ModelKind::Gat);
+        assert!(dataset_for_artifact("nope_gcn").is_err());
+        assert!(dataset_for_artifact("karate_rnn").is_err());
+        assert!(dataset_for_artifact("nounderscore").is_err());
+    }
+
+    #[test]
+    fn from_checkpoint_validates_against_spec() {
+        use crate::runtime::{init_params, Manifest};
+        let m = Manifest::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).unwrap();
+        let spec = m.get("karate_gcn", "train").unwrap();
+        let ds = load("karate", 42).unwrap();
+        let ckpt = Checkpoint {
+            artifact: "karate_gcn".into(),
+            epoch: 5,
+            best_val_f1: 0.7,
+            graph_fingerprint: Some(ds.fingerprint()),
+            params: init_params(spec, 1),
+            state: None,
+        };
+        let model =
+            InferenceModel::from_checkpoint("k", &ckpt, spec, &ds, "karate", 42).unwrap();
+        assert_eq!(model.dims(), spec.dims().as_slice());
+        assert_eq!(model.epoch(), 5);
+        assert_eq!(model.graph_fingerprint(), ds.fingerprint());
+        // a checkpoint for another artifact is refused
+        let mut wrong = ckpt.clone();
+        wrong.artifact = "arxiv_s_gcn".into();
+        assert!(
+            InferenceModel::from_checkpoint("k", &wrong, spec, &ds, "karate", 42).is_err()
+        );
+        // a recorded fingerprint refuses export against the wrong seed's
+        // regenerated graph (the CLI --seed foot-gun)
+        let other = load("karate", 7).unwrap();
+        let err = InferenceModel::from_checkpoint("k", &ckpt, spec, &other, "karate", 7)
+            .unwrap_err();
+        assert!(err.to_string().contains("seed"), "{err}");
+        // pre-PR-5 checkpoints (no fingerprint) trust the caller
+        let mut legacy = ckpt.clone();
+        legacy.graph_fingerprint = None;
+        assert!(
+            InferenceModel::from_checkpoint("k", &legacy, spec, &other, "karate", 7).is_ok()
+        );
+    }
+}

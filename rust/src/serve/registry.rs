@@ -1,0 +1,236 @@
+//! [`ModelRegistry`] — named multi-model store for a serving process.
+//!
+//! A registry maps names to [`Arc<InferenceModel>`]s so many engines /
+//! request handlers can share one loaded parameter set.  `load` / `list`
+//! / `evict` are the whole lifecycle; [`ModelRegistry::reload`] is the
+//! hot path for picking up a model file the training-side
+//! [`crate::serve::ExportBestHook`] keeps overwriting — it re-reads the
+//! file *into the existing parameter buffers* when no one else holds
+//! the model (and falls back to a fresh load when someone does).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::{eyre, Result};
+
+use super::model::InferenceModel;
+
+/// Named store of sealed models.
+#[derive(Default)]
+pub struct ModelRegistry {
+    models: BTreeMap<String, Arc<InferenceModel>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        ModelRegistry::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// Register under the model's own name; replaces any previous entry
+    /// (the old `Arc` stays valid for anyone still holding it).
+    pub fn insert(&mut self, model: InferenceModel) -> Arc<InferenceModel> {
+        let arc = Arc::new(model);
+        self.models.insert(arc.name().to_string(), arc.clone());
+        arc
+    }
+
+    /// Load a `digest-model-v1` file and register it.
+    pub fn load_file(&mut self, path: impl AsRef<Path>) -> Result<Arc<InferenceModel>> {
+        Ok(self.insert(InferenceModel::load(path)?))
+    }
+
+    /// Fetch by name; unknown names list what *is* loaded.
+    pub fn get(&self, name: &str) -> Result<Arc<InferenceModel>> {
+        self.models.get(name).cloned().ok_or_else(|| {
+            eyre!(
+                "no model {name:?} in registry (loaded: {:?})",
+                self.names()
+            )
+        })
+    }
+
+    /// Registered names, sorted.
+    pub fn names(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// All registered models, name-sorted.
+    pub fn list(&self) -> Vec<&InferenceModel> {
+        self.models.values().map(|a| a.as_ref()).collect()
+    }
+
+    /// Drop an entry; returns it so callers can log/inspect.  In-flight
+    /// holders of the `Arc` are unaffected.
+    pub fn evict(&mut self, name: &str) -> Option<Arc<InferenceModel>> {
+        self.models.remove(name)
+    }
+
+    /// Hot-reload entry `name` from `path`.  When the registry holds
+    /// the only reference, the new weights land in the **existing**
+    /// parameter buffers (`InferenceModel::reload`; all-or-nothing);
+    /// otherwise a fresh model is loaded and swapped in so in-flight
+    /// predictions keep their consistent old snapshot.  If the file
+    /// carries a different model name, the entry is re-keyed so the
+    /// `key == model.name()` invariant [`ModelRegistry::insert`]
+    /// establishes keeps holding — unless the new name already belongs
+    /// to *another* entry, which is refused up front (before anything
+    /// mutates) rather than silently clobbering an unrelated live
+    /// model.
+    pub fn reload(&mut self, name: &str, path: impl AsRef<Path>) -> Result<Arc<InferenceModel>> {
+        if !self.models.contains_key(name) {
+            return Err(eyre!("no model {name:?} in registry to reload"));
+        }
+        // one read + parse: the collision check and the apply see the
+        // SAME file contents, so a concurrent rewrite of `path` (the
+        // export hook is exactly such a writer) cannot slip a renamed
+        // model past the guard between two reads
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| eyre!("reading model {:?}: {e}", path.as_ref()))?;
+        let j = crate::util::json::Json::parse(&text)?;
+        let new_name = super::model::json_model_name(&j)
+            .map_err(|e| eyre!("model file {:?}: {e}", path.as_ref()))?;
+        if new_name != name && self.models.contains_key(&new_name) {
+            return Err(eyre!(
+                "reloading {name:?} from {:?} would rename it to {new_name:?}, which already \
+                 names another registry entry; evict one of them first",
+                path.as_ref()
+            ));
+        }
+        let slot = self.models.get_mut(name).expect("checked above");
+        let applied = match Arc::get_mut(slot) {
+            Some(live) => live.reload_from_json(&j),
+            None => InferenceModel::from_json(&j).map(|m| *slot = Arc::new(m)),
+        };
+        applied.map_err(|e| eyre!("model file {:?}: {e}", path.as_ref()))?;
+        let arc = slot.clone();
+        if arc.name() != name {
+            self.models.remove(name);
+            self.models.insert(arc.name().to_string(), arc.clone());
+        }
+        Ok(arc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gnn::{init_params_for_dims, ModelKind};
+    use crate::util::Rng;
+
+    fn model(name: &str, seed: u64) -> InferenceModel {
+        let mut rng = Rng::new(seed);
+        let params = init_params_for_dims(ModelKind::Gcn, &[16, 8, 4], &mut rng);
+        InferenceModel::new(
+            name,
+            "karate_gcn",
+            ModelKind::Gcn,
+            "karate",
+            0,
+            vec![16, 8, 4],
+            true,
+            7,
+            1,
+            0.5,
+            params,
+        )
+        .unwrap()
+    }
+
+    fn tmppath(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("digest_registry_{tag}.json"))
+    }
+
+    #[test]
+    fn insert_get_list_evict() {
+        let mut r = ModelRegistry::new();
+        assert!(r.is_empty());
+        r.insert(model("b", 1));
+        r.insert(model("a", 2));
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.names(), vec!["a", "b"]);
+        assert_eq!(r.list().len(), 2);
+        assert_eq!(r.get("a").unwrap().name(), "a");
+        let err = r.get("zzz").unwrap_err();
+        assert!(err.to_string().contains("\"a\""), "{err}");
+        assert!(r.evict("a").is_some());
+        assert!(r.evict("a").is_none());
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn load_file_registers_under_model_name() {
+        let path = tmppath("load");
+        model("from-disk", 3).save(&path).unwrap();
+        let mut r = ModelRegistry::new();
+        let m = r.load_file(&path).unwrap();
+        assert_eq!(m.name(), "from-disk");
+        assert!(r.get("from-disk").is_ok());
+    }
+
+    #[test]
+    fn reload_reuses_buffers_when_unshared() {
+        let path = tmppath("reload");
+        model("live", 4).save(&path).unwrap();
+        let mut r = ModelRegistry::new();
+        r.load_file(&path).unwrap(); // Arc held only by the registry
+        let ptr = r.get("live").unwrap().params()[0].data.as_ptr();
+        // overwrite the file with new weights, same shape
+        model("live", 5).save(&path).unwrap();
+        let reloaded = r.reload("live", &path).unwrap();
+        assert_eq!(
+            reloaded.params()[0].data.as_ptr(),
+            ptr,
+            "unshared reload must reuse the parameter buffers"
+        );
+        // a shared Arc forces the copy-and-swap path instead
+        let held = r.get("live").unwrap();
+        model("live", 6).save(&path).unwrap();
+        let swapped = r.reload("live", &path).unwrap();
+        assert!(!Arc::ptr_eq(&held, &swapped));
+        // the holder's snapshot is untouched
+        assert_ne!(held.params()[0].data, swapped.params()[0].data);
+        assert!(r.reload("nope", &path).is_err());
+    }
+
+    #[test]
+    fn reload_rekeys_when_the_file_renames_the_model() {
+        let path = tmppath("rekey");
+        model("early", 7).save(&path).unwrap();
+        let mut r = ModelRegistry::new();
+        r.load_file(&path).unwrap();
+        // the export hook overwrites the file with a renamed model
+        model("best", 8).save(&path).unwrap();
+        let reloaded = r.reload("early", &path).unwrap();
+        assert_eq!(reloaded.name(), "best");
+        assert_eq!(r.names(), vec!["best"], "entry must be re-keyed");
+        assert!(r.get("early").is_err());
+        assert_eq!(r.get("best").unwrap().name(), "best");
+    }
+
+    #[test]
+    fn reload_refuses_rename_collisions_without_mutating() {
+        let path = tmppath("collide");
+        model("a", 1).save(&path).unwrap();
+        let mut r = ModelRegistry::new();
+        r.load_file(&path).unwrap();
+        r.insert(model("b", 2));
+        let a_before = r.get("a").unwrap().params()[0].data.clone();
+        let b_before = r.get("b").unwrap().params()[0].data.clone();
+        // the file now renames "a" to "b": refused, nothing touched
+        model("b", 3).save(&path).unwrap();
+        let err = r.reload("a", &path).unwrap_err();
+        assert!(err.to_string().contains("already"), "{err}");
+        assert_eq!(r.names(), vec!["a", "b"]);
+        assert_eq!(r.get("a").unwrap().params()[0].data, a_before);
+        assert_eq!(r.get("b").unwrap().params()[0].data, b_before);
+    }
+}

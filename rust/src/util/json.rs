@@ -149,11 +149,16 @@ impl Json {
     /// Compact serialization.
     pub fn to_string(&self) -> String {
         let mut out = String::new();
-        self.write(&mut out);
+        self.write_into(&mut out);
         out
     }
 
-    fn write(&self, out: &mut String) {
+    /// Serialize into an existing buffer (appends).  Public so
+    /// streaming writers — above all the reusable-buffer checkpoint
+    /// serializer in [`crate::ps::checkpoint`] — can emit stack-built
+    /// `Json` scalars with the exact same number/escape formatting as a
+    /// full tree serialization, without allocating tree nodes.
+    pub fn write_into(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
@@ -173,30 +178,14 @@ impl Json {
             Json::Big(b) => {
                 let _ = write!(out, "{b}");
             }
-            Json::Str(s) => {
-                out.push('"');
-                for c in s.chars() {
-                    match c {
-                        '"' => out.push_str("\\\""),
-                        '\\' => out.push_str("\\\\"),
-                        '\n' => out.push_str("\\n"),
-                        '\t' => out.push_str("\\t"),
-                        '\r' => out.push_str("\\r"),
-                        c if (c as u32) < 0x20 => {
-                            let _ = write!(out, "\\u{:04x}", c as u32);
-                        }
-                        c => out.push(c),
-                    }
-                }
-                out.push('"');
-            }
+            Json::Str(s) => write_str_escaped(s, out),
             Json::Arr(a) => {
                 out.push('[');
                 for (i, v) in a.iter().enumerate() {
                     if i > 0 {
                         out.push(',');
                     }
-                    v.write(out);
+                    v.write_into(out);
                 }
                 out.push(']');
             }
@@ -206,14 +195,35 @@ impl Json {
                     if i > 0 {
                         out.push(',');
                     }
-                    Json::Str(k.clone()).write(out);
+                    write_str_escaped(k, out);
                     out.push(':');
-                    v.write(out);
+                    v.write_into(out);
                 }
                 out.push('}');
             }
         }
     }
+}
+
+/// Append `s` as a JSON string literal (quoted + escaped) — the one
+/// string-escaping implementation shared by tree serialization and the
+/// streaming checkpoint writer.
+pub fn write_str_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {

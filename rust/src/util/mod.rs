@@ -136,6 +136,75 @@ pub fn domain_seed(seed: u64, domain: &str) -> u64 {
     seed ^ h
 }
 
+/// Incremental 64-bit content hash (FNV-1a style word mixer) used for
+/// dataset/graph fingerprints: a [`crate::serve::InferenceModel`]
+/// records the fingerprint of the graph it was trained on so a serving
+/// engine can refuse to apply it to a different graph with a structured
+/// error instead of producing silently-wrong predictions.  Mixing whole
+/// 64-bit words (rather than canonical byte-at-a-time FNV) keeps
+/// fingerprinting a 100k-node feature matrix in the tens of
+/// milliseconds; this is a content identity, not a cryptographic hash.
+#[derive(Debug, Clone)]
+pub struct Fnv64(u64);
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Self {
+        Fnv64(0xcbf29ce484222325)
+    }
+
+    #[inline]
+    pub fn mix(&mut self, v: u64) {
+        self.0 = (self.0 ^ v).wrapping_mul(0x100000001b3);
+    }
+
+    #[inline]
+    pub fn mix_f32(&mut self, v: f32) {
+        // bit pattern, not value: -0.0 and 0.0 fingerprint differently,
+        // matching the crate's bit-exactness contracts elsewhere
+        self.mix(v.to_bits() as u64);
+    }
+
+    pub fn finish(&self) -> u64 {
+        // final avalanche (SplitMix64 finalizer) so short inputs still
+        // spread across all 64 bits
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// Write a file atomically: write and fsync a same-directory temp
+/// file, then rename it over the target.  Readers polling the path —
+/// a serving registry hot-reloading the model file the training-side
+/// export hook keeps overwriting, or a resume loading a checkpoint
+/// mid-save — never observe a truncated or half-written file; the
+/// `sync_all` before the rename keeps that true across a power loss
+/// too (without it, journaling filesystems can commit the rename
+/// before the data blocks).  The parent directory is not fsynced: a
+/// crash can at worst revert to the previous complete file, never
+/// expose a partial one.
+pub fn write_atomic(path: &std::path::Path, bytes: &[u8]) -> crate::Result<()> {
+    use std::io::Write as _;
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    let mut f =
+        std::fs::File::create(&tmp).map_err(|e| crate::eyre!("creating {tmp:?}: {e}"))?;
+    f.write_all(bytes)
+        .and_then(|_| f.sync_all())
+        .map_err(|e| crate::eyre!("writing {tmp:?}: {e}"))?;
+    drop(f);
+    std::fs::rename(&tmp, path)
+        .map_err(|e| crate::eyre!("renaming {tmp:?} over {path:?}: {e}"))
+}
+
 /// Format a byte count human-readably (metrics/telemetry output).
 pub fn human_bytes(b: u64) -> String {
     const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
@@ -253,6 +322,37 @@ mod tests {
         // and the guard still works for writes afterwards
         *lock_unpoisoned(&m) = 9;
         assert_eq!(*lock_unpoisoned(&m), 9);
+    }
+
+    #[test]
+    fn fnv64_is_deterministic_and_order_sensitive() {
+        let mut a = Fnv64::new();
+        a.mix(1);
+        a.mix(2);
+        let mut b = Fnv64::new();
+        b.mix(1);
+        b.mix(2);
+        assert_eq!(a.finish(), b.finish());
+        let mut c = Fnv64::new();
+        c.mix(2);
+        c.mix(1);
+        assert_ne!(a.finish(), c.finish(), "order must matter");
+        // sign of a float zero is content
+        let mut z0 = Fnv64::new();
+        z0.mix_f32(0.0);
+        let mut z1 = Fnv64::new();
+        z1.mix_f32(-0.0);
+        assert_ne!(z0.finish(), z1.finish());
+    }
+
+    #[test]
+    fn write_atomic_replaces_and_renames_the_tmp_away() {
+        let path = std::env::temp_dir().join("digest_util_atomic.txt");
+        write_atomic(&path, b"one").unwrap();
+        write_atomic(&path, b"two").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"two");
+        let tmp = std::path::PathBuf::from(format!("{}.tmp", path.display()));
+        assert!(!tmp.exists(), "tmp file must be renamed over the target");
     }
 
     #[test]

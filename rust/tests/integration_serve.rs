@@ -1,0 +1,419 @@
+//! Serving-path integration tests (ISSUE 5 acceptance):
+//!
+//! * `predict` logits are **bit-identical** to the training-eval path
+//!   (`TrainContext::global_eval` / `gnn::forward_t`) for the same
+//!   parameters at 1/2/4 pool threads;
+//! * a `predict_many` batch over >= 2 models on one engine performs
+//!   **zero structure rebuilds after warmup** (`EngineStats` asserted);
+//! * concurrent `predict` / `predict_many` from multiple threads over
+//!   one engine is race-free and bit-stable;
+//! * model/graph mismatches are structured errors (fingerprint + dims
+//!   in the message), never shape panics;
+//! * export → save → load → predict round-trips end to end, including
+//!   the training-time `ExportBestHook` and the registry hot reload.
+
+use std::sync::Arc;
+
+use digest::config::RunConfig;
+use digest::coordinator::{self, Driver, TrainContext, TrainSession as _};
+use digest::gnn::{self, init_params_for_dims, ModelKind};
+use digest::graph::registry::load;
+use digest::runtime::init_params;
+use digest::serve::{InferenceEngine, InferenceModel, ModelRegistry, NodeQuery};
+use digest::util::Rng;
+
+fn tmppath(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("digest_serve_{tag}.json"))
+}
+
+/// Wrap raw parameters as a sealed model for `engine`'s graph.
+fn seal(
+    engine: &InferenceEngine,
+    name: &str,
+    kind: ModelKind,
+    dims: &[usize],
+    normalize: bool,
+    params: Vec<digest::tensor::Matrix>,
+) -> InferenceModel {
+    InferenceModel::new(
+        name,
+        "test",
+        kind,
+        engine.ds().name.clone(),
+        0,
+        dims.to_vec(),
+        normalize,
+        engine.fingerprint(),
+        0,
+        f64::NAN,
+        params,
+    )
+    .unwrap()
+}
+
+#[test]
+fn predict_is_bit_identical_to_training_eval_at_any_pool_size() {
+    let ctx = TrainContext::new(RunConfig::default()).unwrap();
+    let params = init_params(&ctx.spec, 7);
+    let want_f1 = ctx.global_eval(&params).unwrap();
+    for threads in [1usize, 2, 4] {
+        let engine = InferenceEngine::new(ctx.ds.clone()).with_threads(threads);
+        let model = seal(
+            &engine,
+            "ctx-model",
+            ctx.cfg.model,
+            &ctx.spec.dims(),
+            ctx.spec.normalize,
+            params.clone(),
+        );
+        let pred = engine.predict(&model, &NodeQuery::full()).unwrap();
+        // logits bitwise against the documented-identical forward path
+        let (ref_logits, _) = gnn::forward_t(
+            ctx.cfg.model,
+            &ctx.ds.graph,
+            &ctx.ds.features,
+            &params,
+            ctx.spec.normalize,
+            threads,
+        )
+        .unwrap();
+        assert_eq!(pred.logits.rows, ref_logits.rows);
+        assert!(
+            pred.logits
+                .data
+                .iter()
+                .zip(&ref_logits.data)
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+            "predict logits diverged from training eval at {threads} threads"
+        );
+        // and the F1 the engine computes equals global_eval exactly
+        let got_f1 = engine
+            .eval_f1(ctx.cfg.model, &params, ctx.spec.normalize, threads)
+            .unwrap();
+        assert_eq!(got_f1, want_f1, "threads={threads}");
+    }
+}
+
+#[test]
+fn context_engine_serves_predictions_too() {
+    // the SAME engine instance that backs global_eval serves predict —
+    // one code path, shared workspace pool
+    let ctx = TrainContext::new(RunConfig::default()).unwrap();
+    let params = init_params(&ctx.spec, 3);
+    let (val, _) = ctx.global_eval(&params).unwrap();
+    let model = seal(
+        ctx.eval_engine(),
+        "shared",
+        ctx.cfg.model,
+        &ctx.spec.dims(),
+        ctx.spec.normalize,
+        params.clone(),
+    );
+    let builds_before = ctx.eval_ws_stats().structure_builds;
+    let pred = ctx
+        .eval_engine()
+        .predict(&model, &NodeQuery::full())
+        .unwrap();
+    assert_eq!(
+        ctx.eval_ws_stats().structure_builds,
+        builds_before,
+        "predict over the eval engine must reuse the eval workspace"
+    );
+    // F1 recomputed from the served classes matches global_eval
+    let val_nodes = ctx.ds.nodes_in_split(digest::graph::Split::Val);
+    let got = gnn::metrics::micro_f1(&pred.classes, &ctx.ds.labels, &val_nodes);
+    assert_eq!(got, val);
+}
+
+#[test]
+fn predict_many_over_multiple_models_is_zero_rebuild_after_warmup() {
+    let ds = Arc::new(load("karate", 0).unwrap());
+    let engine = InferenceEngine::new(ds);
+    let mut rng = Rng::new(41);
+    // three models, two widths, two kinds — worst case for naive reuse
+    let a = seal(
+        &engine,
+        "a",
+        ModelKind::Gcn,
+        &[16, 8, 4],
+        true,
+        init_params_for_dims(ModelKind::Gcn, &[16, 8, 4], &mut rng),
+    );
+    let b = seal(
+        &engine,
+        "b",
+        ModelKind::Gcn,
+        &[16, 12, 4],
+        true,
+        init_params_for_dims(ModelKind::Gcn, &[16, 12, 4], &mut rng),
+    );
+    let g = seal(
+        &engine,
+        "g",
+        ModelKind::Gat,
+        &[16, 8, 4],
+        true,
+        init_params_for_dims(ModelKind::Gat, &[16, 8, 4], &mut rng),
+    );
+    let q = NodeQuery::full().with_top_k(2);
+    let reqs = [(&a, &q), (&b, &q), (&g, &q), (&a, &q)];
+    let first = engine.predict_many(&reqs).unwrap();
+    let warm = engine.stats();
+    assert!(warm.structure_builds >= 2, "gcn + gat structures built");
+    for round in 0..3 {
+        let again = engine.predict_many(&reqs).unwrap();
+        for (x, y) in first.iter().zip(&again) {
+            assert!(
+                x.logits
+                    .data
+                    .iter()
+                    .zip(&y.logits.data)
+                    .all(|(p, q)| p.to_bits() == q.to_bits()),
+                "round {round}: batched predictions not bit-stable"
+            );
+            assert_eq!(x.classes, y.classes);
+            assert_eq!(x.top_k, y.top_k);
+        }
+    }
+    let steady = engine.stats();
+    // THE acceptance assertion: warm batches rebuild nothing
+    assert_eq!(
+        steady.structure_builds, warm.structure_builds,
+        "predict_many rebuilt a structure CSR after warmup"
+    );
+    assert_eq!(
+        steady.scratch_allocs, warm.scratch_allocs,
+        "predict_many re-allocated scratch after warmup"
+    );
+    assert_eq!(steady.batches, 4);
+    assert_eq!(steady.predictions, 16);
+}
+
+#[test]
+fn concurrent_predicts_over_one_engine_are_race_free_and_bit_stable() {
+    let ds = Arc::new(load("karate", 0).unwrap());
+    let engine = InferenceEngine::new(ds);
+    let mut rng = Rng::new(99);
+    let models: Vec<InferenceModel> = (0..4)
+        .map(|i| {
+            seal(
+                &engine,
+                &format!("m{i}"),
+                ModelKind::Gcn,
+                &[16, 8, 4],
+                true,
+                init_params_for_dims(ModelKind::Gcn, &[16, 8, 4], &mut rng),
+            )
+        })
+        .collect();
+    let q = NodeQuery::full();
+    // sequential reference per model
+    let want: Vec<Vec<u32>> = models
+        .iter()
+        .map(|m| {
+            engine
+                .predict(m, &q)
+                .unwrap()
+                .logits
+                .data
+                .iter()
+                .map(|v| v.to_bits())
+                .collect()
+        })
+        .collect();
+    // 4 threads x 5 predicts each, all against the same engine
+    std::thread::scope(|s| {
+        let handles: Vec<_> = models
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                let engine = &engine;
+                let q = &q;
+                let want = &want;
+                s.spawn(move || {
+                    for _ in 0..5 {
+                        let p = engine.predict(m, q).unwrap();
+                        let got: Vec<u32> =
+                            p.logits.data.iter().map(|v| v.to_bits()).collect();
+                        assert_eq!(got, want[i], "model {i} diverged under concurrency");
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    // concurrent batched predicts too
+    std::thread::scope(|s| {
+        for _ in 0..2 {
+            let engine = &engine;
+            let q = &q;
+            let models = &models;
+            let want = &want;
+            s.spawn(move || {
+                let reqs: Vec<_> = models.iter().map(|m| (m, q)).collect();
+                let preds = engine.predict_many(&reqs).unwrap();
+                for (i, p) in preds.iter().enumerate() {
+                    let got: Vec<u32> = p.logits.data.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(&got, &want[i], "batched model {i} diverged");
+                }
+            });
+        }
+    });
+    // the pool never hoarded more than its cap
+    assert!(engine.pooled_workspaces() <= 4);
+}
+
+#[test]
+fn wrong_graph_or_dims_is_a_structured_error_never_a_panic() {
+    // export against karate, serve against arxiv-s: refused by
+    // fingerprint with both identities in the message
+    let karate = Arc::new(load("karate", 0).unwrap());
+    let arxiv = Arc::new(load("arxiv-s", 0).unwrap());
+    let karate_engine = InferenceEngine::new(karate);
+    let arxiv_engine = InferenceEngine::new(arxiv);
+    let mut rng = Rng::new(5);
+    let m = seal(
+        &karate_engine,
+        "karate-model",
+        ModelKind::Gcn,
+        &[16, 8, 4],
+        true,
+        init_params_for_dims(ModelKind::Gcn, &[16, 8, 4], &mut rng),
+    );
+    let err = arxiv_engine.predict(&m, &NodeQuery::full()).unwrap_err();
+    let msg = err.to_string();
+    // arxiv-s features are 128-wide, so the dims check trips first —
+    // with the dims in the message
+    assert!(msg.contains("d_in 16"), "{msg}");
+    assert!(msg.contains("128"), "{msg}");
+    // same seed family, different dataset seed: features differ, so the
+    // fingerprint check trips even though every dim matches
+    let karate7 = Arc::new(load("karate", 7).unwrap());
+    let karate7_engine = InferenceEngine::new(karate7);
+    let err = karate7_engine.predict(&m, &NodeQuery::full()).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("fingerprint"), "{msg}");
+    assert!(
+        msg.contains(&format!("{:#018x}", karate_engine.fingerprint())),
+        "{msg}"
+    );
+    assert!(
+        msg.contains(&format!("{:#018x}", karate7_engine.fingerprint())),
+        "{msg}"
+    );
+}
+
+#[test]
+fn checkpoint_export_save_load_predict_round_trip() {
+    // train a couple of epochs, checkpoint, export, reload, predict
+    let mut cfg = RunConfig::default();
+    cfg.epochs = 2;
+    cfg.eval_every = 1;
+    let ctx = TrainContext::new(cfg).unwrap();
+    let mut session = coordinator::new_session(&ctx).unwrap();
+    while !session.is_done() {
+        session.step_epoch().unwrap();
+    }
+    // path A: straight from the session
+    let from_session = session.export_model("direct").unwrap();
+    assert_eq!(from_session.epoch(), 2);
+    // path B: through a checkpoint file (what `digest export` does)
+    let ckpt = session.snapshot().unwrap();
+    let from_ckpt = InferenceModel::from_checkpoint(
+        "via-ckpt",
+        &ckpt,
+        &ctx.spec,
+        &ctx.ds,
+        &ctx.cfg.dataset,
+        ctx.cfg.seed,
+    )
+    .unwrap();
+    for (a, b) in from_session.params().iter().zip(from_ckpt.params()) {
+        assert!(
+            a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "session export and checkpoint export disagree"
+        );
+    }
+    // disk round trip, then serve from a fresh engine
+    let path = tmppath("roundtrip");
+    from_ckpt.save(&path).unwrap();
+    let mut registry = ModelRegistry::new();
+    let served = registry.load_file(&path).unwrap();
+    let engine = InferenceEngine::new(ctx.ds.clone());
+    let pred = engine
+        .predict(&served, &NodeQuery::nodes(vec![0, 1, 2]).with_top_k(3))
+        .unwrap();
+    assert_eq!(pred.nodes, vec![0, 1, 2]);
+    assert_eq!(pred.top_k.len(), 3);
+    assert!(pred.top_k.iter().all(|tk| tk.len() == 3), "non-empty top-k");
+    // the served logits equal the in-memory model's (bit-exact disk IO)
+    let direct = engine.predict(&from_session, &NodeQuery::nodes(vec![0, 1, 2])).unwrap();
+    assert!(
+        pred.logits.data.iter().zip(&direct.logits.data).all(|(a, b)| a.to_bits() == b.to_bits())
+    );
+}
+
+#[test]
+fn export_best_hook_writes_the_best_model_during_training() {
+    let path = tmppath("export_best");
+    let _ = std::fs::remove_file(&path);
+    let mut cfg = RunConfig::default();
+    cfg.epochs = 6;
+    cfg.eval_every = 2;
+    cfg.export_best = Some(path.to_string_lossy().into_owned());
+    let ctx = TrainContext::new(cfg).unwrap();
+    let mut session = coordinator::new_session(&ctx).unwrap();
+    let mut driver = Driver::from_config(&ctx.cfg).unwrap();
+    let res = driver.run(session.as_mut()).unwrap();
+    let model = InferenceModel::load(&path).expect("export_best wrote a model file");
+    assert_eq!(model.val_f1(), res.best_val_f1, "exported model carries the best F1");
+    assert_eq!(model.graph_fingerprint(), ctx.eval_engine().fingerprint());
+    // and it serves
+    let pred = ctx
+        .eval_engine()
+        .predict(&model, &NodeQuery::full().with_top_k(1))
+        .unwrap();
+    assert_eq!(pred.nodes.len(), ctx.ds.n());
+}
+
+#[test]
+fn registry_hot_reload_follows_the_export_file() {
+    let ds = Arc::new(load("karate", 0).unwrap());
+    let engine = InferenceEngine::new(ds);
+    let mut rng = Rng::new(13);
+    let v1 = seal(
+        &engine,
+        "live",
+        ModelKind::Gcn,
+        &[16, 8, 4],
+        true,
+        init_params_for_dims(ModelKind::Gcn, &[16, 8, 4], &mut rng),
+    );
+    let v2 = seal(
+        &engine,
+        "live",
+        ModelKind::Gcn,
+        &[16, 8, 4],
+        true,
+        init_params_for_dims(ModelKind::Gcn, &[16, 8, 4], &mut rng),
+    );
+    let path = tmppath("hot_reload");
+    v1.save(&path).unwrap();
+    let mut registry = ModelRegistry::new();
+    registry.load_file(&path).unwrap();
+    let before = engine
+        .predict(&registry.get("live").unwrap(), &NodeQuery::full())
+        .unwrap();
+    // training exports a better model over the same path; reload picks
+    // it up in place
+    v2.save(&path).unwrap();
+    let reloaded = registry.reload("live", &path).unwrap();
+    let after = engine.predict(&reloaded, &NodeQuery::full()).unwrap();
+    assert_ne!(before.logits.data, after.logits.data, "reload must change weights");
+    let want = engine.predict(&v2, &NodeQuery::full()).unwrap();
+    assert!(
+        after.logits.data.iter().zip(&want.logits.data).all(|(a, b)| a.to_bits() == b.to_bits())
+    );
+}
