@@ -100,6 +100,7 @@ pub fn correction_plan(ctx: &TrainContext, rng: &mut Rng) -> SubgraphPlan {
         crate::gnn::ModelKind::Gat => PropKind::GatMask,
     };
     crate::halo::build_plan(ds, &partition, 0, ctx.spec.s_pad, ctx.spec.b_pad, kind)
+        // lint:allow(D002, plan shapes were validated when the artifact manifest loaded; a mismatch here is a build bug worth a loud stop)
         .expect("correction plan within artifact shapes")
 }
 
@@ -145,6 +146,7 @@ impl<'a> LlcgSession<'a> {
             zero_stale: (0..ctx.n_hidden())
                 .map(|_| Matrix::zeros(ctx.spec.b_pad, ctx.spec.d_h))
                 .collect(),
+            // lint:allow(D006, observational wall-clock anchor for telemetry columns only; never feeds training math)
             t0: Instant::now(),
             r: 0,
             vtime: 0.0,

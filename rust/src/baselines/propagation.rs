@@ -60,6 +60,7 @@ impl<'a> PropagationSession<'a> {
             ),
             workers: (0..m_parts).map(|m| WorkerState::new(ctx, m)).collect(),
             rng: Rng::new(cfg.seed ^ 0xD61_u64),
+            // lint:allow(D006, observational wall-clock anchor for telemetry columns only; never feeds training math)
             t0: Instant::now(),
             r: 0,
             vtime: 0.0,

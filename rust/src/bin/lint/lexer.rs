@@ -1,0 +1,547 @@
+//! Comment/string-aware lexing for `digest-lint`.
+//!
+//! The rule checks in [`crate::rules`] are lexical, so the one thing
+//! that must be *right* is knowing what is code and what is not: a
+//! `thread::spawn` inside a string literal, a `.unwrap()` quoted in a
+//! doc comment, or a fixture snippet in a raw string must never fire a
+//! rule.  [`lex_source`] walks the byte stream once and produces, per
+//! line, the **blanked code** (string/char contents replaced by spaces,
+//! comments removed) plus the **comment text** (for `SAFETY:` checks
+//! and `lint:allow` pragmas), then marks `#[cfg(test)]` regions by
+//! brace matching over the blanked code.
+
+/// One source line after lexing.
+#[derive(Debug, Clone)]
+pub struct Line {
+    /// The raw source line, for reporting.
+    pub raw: String,
+    /// Code with comments stripped and literal contents blanked; the
+    /// quote delimiters themselves are kept so the text stays readable.
+    pub code: String,
+    /// Concatenated text of every comment on this line (`//`, `///`,
+    /// `//!`, and the per-line slices of `/* .. */` blocks).
+    pub comment: Option<String>,
+}
+
+/// An inline `// lint:allow(RULE[, RULE...], reason)` pragma.
+#[derive(Debug, Clone)]
+pub struct Pragma {
+    /// Line the pragma comment sits on (1-based).
+    pub line: usize,
+    /// Line whose findings it suppresses (its own line for trailing
+    /// comments, the next code line for whole-line comments).
+    pub target: usize,
+    pub rules: Vec<String>,
+    pub reason: String,
+    /// Raw text inside the parentheses, for malformed-pragma reports.
+    pub text: String,
+}
+
+/// A lexed file: lines, test-region mask, and pragmas.
+#[derive(Debug)]
+pub struct SourceFile {
+    pub lines: Vec<Line>,
+    /// `in_test[i]` is true when line i+1 sits inside a `#[cfg(test)]`
+    /// item (the attribute line through the item's closing brace).
+    pub in_test: Vec<bool>,
+    pub pragmas: Vec<Pragma>,
+}
+
+impl SourceFile {
+    /// Blanked code of 1-based line `n` ("" when out of range).
+    pub fn code(&self, n: usize) -> &str {
+        self.lines.get(n - 1).map(|l| l.code.as_str()).unwrap_or("")
+    }
+
+    /// Comment text of 1-based line `n`.
+    pub fn comment(&self, n: usize) -> Option<&str> {
+        self.lines.get(n - 1).and_then(|l| l.comment.as_deref())
+    }
+
+    pub fn is_test_line(&self, n: usize) -> bool {
+        self.in_test.get(n - 1).copied().unwrap_or(false)
+    }
+}
+
+#[derive(PartialEq)]
+enum State {
+    Code,
+    LineComment,
+    /// Nested depth (Rust block comments nest).
+    BlockComment(u32),
+    /// Inside a normal string; bool = previous byte was a backslash.
+    Str(bool),
+    /// Inside a raw string closed by `"` + this many `#`s.
+    RawStr(u32),
+    /// Inside a char/byte literal; bool = previous byte was a backslash.
+    Char(bool),
+}
+
+/// Lex `src` into blanked-code lines, comments, test regions, pragmas.
+pub fn lex_source(src: &str) -> SourceFile {
+    let bytes = src.as_bytes();
+    let mut lines: Vec<Line> = Vec::new();
+    let mut raw = String::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut state = State::Code;
+    let mut i = 0usize;
+
+    macro_rules! end_line {
+        () => {{
+            lines.push(Line {
+                raw: std::mem::take(&mut raw),
+                code: std::mem::take(&mut code),
+                comment: if comment.is_empty() {
+                    None
+                } else {
+                    Some(std::mem::take(&mut comment))
+                },
+            });
+            comment.clear();
+        }};
+    }
+
+    while i < bytes.len() {
+        let b = bytes[i];
+        if b == b'\n' {
+            if state == State::LineComment {
+                state = State::Code;
+            }
+            end_line!();
+            i += 1;
+            continue;
+        }
+        // raw text always records the byte (multi-byte UTF-8 is copied
+        // through verbatim; all rule triggers are ASCII)
+        raw.push(b as char);
+        match state {
+            State::Code => {
+                if b == b'/' && bytes.get(i + 1) == Some(&b'/') {
+                    state = State::LineComment;
+                    i += 2;
+                    raw.push('/');
+                    continue;
+                }
+                if b == b'/' && bytes.get(i + 1) == Some(&b'*') {
+                    state = State::BlockComment(1);
+                    i += 2;
+                    raw.push('*');
+                    continue;
+                }
+                if let Some(hashes) = raw_string_open(bytes, i) {
+                    // keep the prefix + opening quote in the code text
+                    let open_len = raw_prefix_len(bytes, i) + hashes as usize + 1;
+                    for k in 1..open_len {
+                        raw.push(bytes[i + k] as char);
+                    }
+                    for k in 0..open_len {
+                        code.push(bytes[i + k] as char);
+                    }
+                    state = State::RawStr(hashes);
+                    i += open_len;
+                    continue;
+                }
+                if b == b'"' {
+                    code.push('"');
+                    state = State::Str(false);
+                    i += 1;
+                    continue;
+                }
+                if b == b'\'' {
+                    if let Some(len) = char_literal_len(bytes, i) {
+                        // blank the contents, keep the quotes
+                        code.push('\'');
+                        for k in 1..len - 1 {
+                            raw.push(bytes[i + k] as char);
+                            code.push(' ');
+                        }
+                        raw.push('\'');
+                        code.push('\'');
+                        i += len;
+                        continue;
+                    }
+                    // a lifetime / loop label: the quote is plain code
+                    code.push('\'');
+                    i += 1;
+                    continue;
+                }
+                code.push(b as char);
+                i += 1;
+            }
+            State::LineComment => {
+                comment.push(b as char);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if b == b'/' && bytes.get(i + 1) == Some(&b'*') {
+                    state = State::BlockComment(depth + 1);
+                    comment.push_str("/*");
+                    raw.push('*');
+                    i += 2;
+                } else if b == b'*' && bytes.get(i + 1) == Some(&b'/') {
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                    if depth > 1 {
+                        comment.push_str("*/");
+                    }
+                    raw.push('/');
+                    i += 2;
+                } else {
+                    comment.push(b as char);
+                    i += 1;
+                }
+            }
+            State::Str(escaped) => {
+                if escaped {
+                    state = State::Str(false);
+                    code.push(' ');
+                } else if b == b'\\' {
+                    state = State::Str(true);
+                    code.push(' ');
+                } else if b == b'"' {
+                    state = State::Code;
+                    code.push('"');
+                } else {
+                    code.push(' ');
+                }
+                i += 1;
+            }
+            State::RawStr(hashes) => {
+                if b == b'"' && count_hashes(bytes, i + 1) >= hashes {
+                    for k in 1..=hashes as usize {
+                        raw.push(bytes[i + k] as char);
+                    }
+                    code.push('"');
+                    for _ in 0..hashes {
+                        code.push('#');
+                    }
+                    state = State::Code;
+                    i += 1 + hashes as usize;
+                } else {
+                    code.push(if b == b'\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+            State::Char(escaped) => {
+                if escaped {
+                    state = State::Char(false);
+                    code.push(' ');
+                } else if b == b'\\' {
+                    state = State::Char(true);
+                    code.push(' ');
+                } else if b == b'\'' {
+                    state = State::Code;
+                    code.push('\'');
+                } else {
+                    code.push(' ');
+                }
+                i += 1;
+            }
+        }
+    }
+    end_line!();
+
+    let in_test = mark_test_regions(&lines);
+    let pragmas = collect_pragmas(&lines);
+    SourceFile {
+        lines,
+        in_test,
+        pragmas,
+    }
+}
+
+/// Length of an `r` / `b` / `br` prefix at `i` if it opens a raw or
+/// byte string (the prefix bytes before any `#` or `"`).
+fn raw_prefix_len(bytes: &[u8], i: usize) -> usize {
+    match bytes[i] {
+        b'r' => 1,
+        b'b' if bytes.get(i + 1) == Some(&b'r') => 2,
+        b'b' => 1,
+        _ => 0,
+    }
+}
+
+/// If position `i` opens a raw string (`r"`, `r#"`, `br##"` ...),
+/// return its hash count; `b"` opens a plain byte string (hash 0 via
+/// the normal-string path, so returns None for it).
+fn raw_string_open(bytes: &[u8], i: usize) -> Option<u32> {
+    // an identifier character before the prefix means this `r`/`b` is
+    // part of a longer name (e.g. `var`), not a literal prefix
+    if i > 0 && is_ident_byte(bytes[i - 1]) {
+        return None;
+    }
+    let start = match bytes[i] {
+        b'r' => i + 1,
+        b'b' if bytes.get(i + 1) == Some(&b'r') => i + 2,
+        _ => return None,
+    };
+    let hashes = count_hashes(bytes, start);
+    if bytes.get(start + hashes as usize) == Some(&b'"') {
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+fn count_hashes(bytes: &[u8], from: usize) -> u32 {
+    let mut n = 0u32;
+    while bytes.get(from + n as usize) == Some(&b'#') {
+        n += 1;
+    }
+    n
+}
+
+/// If the `'` at `i` opens a char literal (not a lifetime), return the
+/// literal's total byte length including both quotes.
+fn char_literal_len(bytes: &[u8], i: usize) -> Option<usize> {
+    let next = *bytes.get(i + 1)?;
+    if next == b'\\' {
+        // escaped char: scan to the closing quote
+        let mut k = i + 2;
+        let mut escaped = true;
+        while k < bytes.len() {
+            let b = bytes[k];
+            if escaped {
+                escaped = false;
+            } else if b == b'\\' {
+                escaped = true;
+            } else if b == b'\'' {
+                return Some(k - i + 1);
+            }
+            k += 1;
+        }
+        return None;
+    }
+    if bytes.get(i + 2) == Some(&b'\'') && next != b'\'' {
+        return Some(3);
+    }
+    None
+}
+
+pub fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Mark every line covered by a `#[cfg(test)]` item: from the attribute
+/// line through the matching close brace of the item's body.
+fn mark_test_regions(lines: &[Line]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut li = 0usize;
+    while li < lines.len() {
+        if !lines[li].code.contains("#[cfg(test)]") {
+            li += 1;
+            continue;
+        }
+        // find the item's opening brace, then match to its close
+        let mut depth = 0i64;
+        let mut opened = false;
+        let mut end = lines.len() - 1;
+        'scan: for (k, line) in lines.iter().enumerate().skip(li) {
+            for ch in line.code.chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if opened && depth <= 0 {
+                            end = k;
+                            break 'scan;
+                        }
+                    }
+                    // an item ending before any brace (`#[cfg(test)]
+                    // use ...;`) covers only through the semicolon
+                    ';' if !opened => {
+                        end = k;
+                        break 'scan;
+                    }
+                    _ => {}
+                }
+            }
+        }
+        for m in mask.iter_mut().take(end + 1).skip(li) {
+            *m = true;
+        }
+        li = end + 1;
+    }
+    mask
+}
+
+/// Extract `lint:allow(...)` pragmas from comment text.
+fn collect_pragmas(lines: &[Line]) -> Vec<Pragma> {
+    let mut out = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let n = idx + 1;
+        let Some(c) = &line.comment else { continue };
+        // pragmas live in plain `//` comments only: doc comments (`///`,
+        // `//!`, `/**`, `/*!`) may *mention* the syntax without it being
+        // a live allowlist entry
+        if matches!(c.as_bytes().first(), Some(b'/') | Some(b'!') | Some(b'*')) {
+            continue;
+        }
+        let Some(pos) = c.find("lint:allow") else {
+            continue;
+        };
+        let rest = &c[pos + "lint:allow".len()..];
+        let inner = rest
+            .strip_prefix('(')
+            .and_then(|r| r.split_once(')'))
+            .map(|(inside, _after)| inside)
+            .unwrap_or("");
+        let mut rules = Vec::new();
+        let mut reason_parts: Vec<&str> = Vec::new();
+        for part in inner.split(',') {
+            let t = part.trim();
+            if reason_parts.is_empty() && is_rule_id(t) {
+                rules.push(t.to_string());
+            } else {
+                reason_parts.push(t);
+            }
+        }
+        let reason = reason_parts.join(", ").trim().to_string();
+        // whole-line comments guard the next code line; trailing
+        // comments guard their own line
+        let target = if line.code.trim().is_empty() {
+            let mut t = n + 1;
+            while t <= lines.len() && lines[t - 1].code.trim().is_empty() {
+                t += 1;
+            }
+            t
+        } else {
+            n
+        };
+        out.push(Pragma {
+            line: n,
+            target,
+            rules,
+            reason,
+            text: inner.trim().to_string(),
+        });
+    }
+    out
+}
+
+pub fn is_rule_id(s: &str) -> bool {
+    s.len() == 4 && s.starts_with('D') && s[1..].bytes().all(|b| b.is_ascii_digit())
+}
+
+#[cfg(test)]
+#[rustfmt::skip] // fixture snippets are hand-laid-out
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_code_and_comment() {
+        let f = lex_source("let x = 1; // trailing note\n// full line\nlet y = 2;\n");
+        assert_eq!(f.lines[0].code.trim_end(), "let x = 1;");
+        assert_eq!(f.lines[0].comment.as_deref(), Some(" trailing note"));
+        assert_eq!(f.lines[1].code.trim(), "");
+        assert_eq!(f.lines[1].comment.as_deref(), Some(" full line"));
+        assert_eq!(f.lines[2].comment, None);
+    }
+
+    #[test]
+    fn blanks_string_contents_but_keeps_quotes() {
+        let f = lex_source(r#"let s = "a.unwrap() // not a comment"; s.len();"#);
+        let code = &f.lines[0].code;
+        assert!(!code.contains("unwrap"));
+        assert!(!code.contains("//"));
+        assert!(code.contains('"'));
+        assert!(code.ends_with("s.len();"));
+        assert_eq!(f.lines[0].comment, None);
+    }
+
+    #[test]
+    fn escapes_inside_strings_do_not_end_them() {
+        let f = lex_source(r#"let s = "quote \" then .unwrap()"; done();"#);
+        assert!(!f.lines[0].code.contains("unwrap"));
+        assert!(f.lines[0].code.ends_with("done();"));
+    }
+
+    #[test]
+    fn raw_strings_blank_without_escape_processing() {
+        let f = lex_source(r##"let s = r#"panic!("\") thread::spawn"#; after();"##);
+        assert!(!f.lines[0].code.contains("panic"));
+        assert!(!f.lines[0].code.contains("spawn"));
+        assert!(f.lines[0].code.ends_with("after();"));
+    }
+
+    #[test]
+    fn multiline_raw_string_blanks_every_line() {
+        let f = lex_source("let s = r\"line one .unwrap()\nline two panic!\";\nnext();");
+        assert!(!f.lines[0].code.contains("unwrap"));
+        assert!(!f.lines[1].code.contains("panic"));
+        assert_eq!(f.lines[2].code, "next();");
+    }
+
+    #[test]
+    fn char_literals_blank_but_lifetimes_stay() {
+        let f = lex_source("let c = '\"'; let s: &'static str = x;");
+        // the quote char literal must not open a string state
+        assert!(f.lines[0].code.contains("&'static str"));
+        let f = lex_source(r"let c = '\''; after();");
+        assert!(f.lines[0].code.ends_with("after();"));
+    }
+
+    #[test]
+    fn nested_block_comments_close_at_depth_zero() {
+        let f = lex_source("/* a /* b */ still */ code();\n");
+        assert_eq!(f.lines[0].code.trim(), "code();");
+        assert!(f.lines[0].comment.as_deref().unwrap_or("").contains("still"));
+    }
+
+    #[test]
+    fn cfg_test_region_spans_matching_braces() {
+        let src = "fn lib() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n    fn t() { x(); }\n}\n\
+                   fn after() {}\n";
+        let f = lex_source(src);
+        assert!(!f.is_test_line(1));
+        assert!(f.is_test_line(2));
+        assert!(f.is_test_line(4));
+        assert!(f.is_test_line(5));
+        assert!(!f.is_test_line(6));
+    }
+
+    #[test]
+    fn cfg_test_on_semicolon_item_covers_only_that_item() {
+        let src = "#[cfg(test)]\nuse helpers::x;\nfn lib() {}\n";
+        let f = lex_source(src);
+        assert!(f.is_test_line(2));
+        assert!(!f.is_test_line(3));
+    }
+
+    #[test]
+    fn pragmas_parse_rules_reason_and_target() {
+        let f = lex_source("// lint:allow(D001, D002, both are sorted later)\nlet x = m.keys();\n");
+        assert_eq!(f.pragmas.len(), 1);
+        let p = &f.pragmas[0];
+        assert_eq!(p.rules, vec!["D001", "D002"]);
+        assert_eq!(p.reason, "both are sorted later");
+        assert_eq!(p.target, 2); // whole-line comment guards the next code line
+        let f = lex_source("let x = m.keys(); // lint:allow(D001, sorted)\n");
+        assert_eq!(f.pragmas[0].target, 1); // trailing comment guards its own line
+    }
+
+    #[test]
+    fn pragma_mentions_in_strings_and_doc_comments_are_ignored() {
+        let f = lex_source("let s = \"lint:allow(D001, fake)\";\n/// doc: lint:allow(D002, fake)\n//! inner: lint:allow(D003, fake)\nfn f() {}\n");
+        assert!(f.pragmas.is_empty());
+    }
+
+    #[test]
+    fn rule_id_shape() {
+        assert!(is_rule_id("D001"));
+        assert!(is_rule_id("D999"));
+        assert!(!is_rule_id("D01"));
+        assert!(!is_rule_id("E001"));
+        assert!(!is_rule_id("Dnnn"));
+        assert!(!is_rule_id("D0011"));
+    }
+}

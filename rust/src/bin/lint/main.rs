@@ -1,0 +1,357 @@
+//! `digest-lint` — the crate's in-repo static-analysis pass.
+//!
+//! Enforces the determinism / panic-freedom / unsafe-hygiene
+//! invariants the DIGEST reproduction depends on (rule catalog in
+//! [`rules`]; lexing in [`lexer`]).  Zero dependencies beyond `std`.
+//!
+//! ```text
+//! digest-lint [PATHS...] [--json] [--only D001,D004] [--deny all|D001,..]
+//!             [--baseline FILE] [--write-baseline FILE] [--list-rules]
+//! ```
+//!
+//! With no `PATHS` the tool self-checks this crate's `src/` tree.  Exit
+//! codes: `0` clean (or warnings only), `1` usage/IO error, `2` at
+//! least one denied finding.
+
+mod lexer;
+mod rules;
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+struct Options {
+    paths: Vec<PathBuf>,
+    json: bool,
+    only: Option<BTreeSet<String>>,
+    /// `None` means deny everything (the default); otherwise the set of
+    /// rule ids that fail the run.
+    deny: Option<BTreeSet<String>>,
+    baseline: Option<PathBuf>,
+    write_baseline: Option<PathBuf>,
+    list_rules: bool,
+}
+
+const USAGE: &str = "usage: digest-lint [PATHS...] [--json] [--only RULES] [--deny all|RULES] \
+                     [--baseline FILE] [--write-baseline FILE] [--list-rules]";
+
+fn main() -> ExitCode {
+    let opts = match parse_args(std::env::args().skip(1)) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("digest-lint: {e}");
+            eprintln!("{USAGE}");
+            return ExitCode::from(1);
+        }
+    };
+    if opts.list_rules {
+        for r in rules::RULES {
+            println!("{}  {}", r.id, collapse_ws(r.summary));
+        }
+        return ExitCode::SUCCESS;
+    }
+    match run(&opts) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("digest-lint: {e}");
+            ExitCode::from(1)
+        }
+    }
+}
+
+fn parse_args(args: impl Iterator<Item = String>) -> Result<Options, String> {
+    let mut opts = Options {
+        paths: Vec::new(),
+        json: false,
+        only: None,
+        deny: None,
+        baseline: None,
+        write_baseline: None,
+        list_rules: false,
+    };
+    let mut it = args;
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--json" => opts.json = true,
+            "--list-rules" => opts.list_rules = true,
+            "--only" => {
+                let v = it.next().ok_or("--only needs a rule list")?;
+                opts.only = Some(parse_rules(&v)?);
+            }
+            "--deny" => {
+                let v = it.next().ok_or("--deny needs `all` or a rule list")?;
+                if v != "all" {
+                    opts.deny = Some(parse_rules(&v)?);
+                }
+            }
+            "--baseline" => {
+                let v = it.next().ok_or("--baseline needs a file")?;
+                opts.baseline = Some(PathBuf::from(v));
+            }
+            "--write-baseline" => {
+                let v = it.next().ok_or("--write-baseline needs a file")?;
+                opts.write_baseline = Some(PathBuf::from(v));
+            }
+            "--help" | "-h" => return Err("help requested".to_string()),
+            flag if flag.starts_with('-') => return Err(format!("unknown flag `{flag}`")),
+            path => opts.paths.push(PathBuf::from(path)),
+        }
+    }
+    if opts.paths.is_empty() {
+        opts.paths
+            .push(PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/src")));
+    }
+    Ok(opts)
+}
+
+fn parse_rules(list: &str) -> Result<BTreeSet<String>, String> {
+    let mut out = BTreeSet::new();
+    for part in list.split(',') {
+        let t = part.trim();
+        if !lexer::is_rule_id(t) || !rules::RULES.iter().any(|r| r.id == t) {
+            return Err(format!("unknown rule `{t}`"));
+        }
+        out.insert(t.to_string());
+    }
+    Ok(out)
+}
+
+fn run(opts: &Options) -> Result<ExitCode, String> {
+    let mut files: Vec<(String, PathBuf)> = Vec::new();
+    for root in &opts.paths {
+        collect_rs_files(root, &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+
+    let baseline = match &opts.baseline {
+        Some(p) => load_baseline(p)?,
+        None => BTreeSet::new(),
+    };
+
+    let mut findings: Vec<rules::Finding> = Vec::new();
+    for (rel, path) in &files {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let mut fs = rules::lint_file(rel, &src);
+        if let Some(only) = &opts.only {
+            fs.retain(|f| only.contains(f.rule));
+        }
+        findings.extend(fs);
+    }
+
+    if let Some(out) = &opts.write_baseline {
+        write_baseline(out, &findings)?;
+    }
+
+    let mut denied = 0usize;
+    let mut baselined = 0usize;
+    for f in &findings {
+        if baseline.contains(&baseline_key(f)) {
+            baselined += 1;
+            continue;
+        }
+        let is_denied = match &opts.deny {
+            None => true,
+            Some(set) => set.contains(f.rule),
+        };
+        if is_denied {
+            denied += 1;
+        }
+    }
+
+    if opts.json {
+        print_json(&findings, &baseline, denied, baselined, files.len());
+    } else {
+        print_human(&findings, &baseline, denied, baselined, files.len());
+    }
+    if denied > 0 {
+        Ok(ExitCode::from(2))
+    } else {
+        Ok(ExitCode::SUCCESS)
+    }
+}
+
+/// Recursively collect `.rs` files under `root` (or `root` itself),
+/// keyed by their path relative to the crate `src/` root so rule
+/// scoping (`kvs/mod.rs`, `tensor/pool.rs`, ...) works.
+fn collect_rs_files(root: &Path, out: &mut Vec<(String, PathBuf)>) -> Result<(), String> {
+    let meta = std::fs::metadata(root).map_err(|e| format!("{}: {e}", root.display()))?;
+    if meta.is_file() {
+        if root.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push((rel_key(root, None), root.to_path_buf()));
+        }
+        return Ok(());
+    }
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let entries =
+            std::fs::read_dir(&dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+        for entry in entries {
+            let entry = entry.map_err(|e| format!("{}: {e}", dir.display()))?;
+            let path = entry.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+                out.push((rel_key(&path, Some(root)), path));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Path relative to the crate `src/` root with `/` separators: the
+/// portion after the last `/src/` component when present, else the
+/// portion under the scan root, else the file name.
+fn rel_key(path: &Path, root: Option<&Path>) -> String {
+    let s = path.to_string_lossy().replace('\\', "/");
+    if let Some(pos) = s.rfind("/src/") {
+        return s[pos + 5..].to_string();
+    }
+    if let Some(stripped) = s.strip_prefix("src/") {
+        return stripped.to_string();
+    }
+    if let Some(root) = root {
+        if let Ok(rel) = path.strip_prefix(root) {
+            return rel.to_string_lossy().replace('\\', "/");
+        }
+    }
+    path.file_name()
+        .map(|f| f.to_string_lossy().into_owned())
+        .unwrap_or(s)
+}
+
+fn baseline_key(f: &rules::Finding) -> String {
+    format!("{} {}:{}", f.rule, f.file, f.line)
+}
+
+/// Baseline file: one `RULE path:line` entry per line, `#` comments and
+/// blank lines ignored.
+fn load_baseline(path: &Path) -> Result<BTreeSet<String>, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("baseline {}: {e}", path.display()))?;
+    let mut out = BTreeSet::new();
+    for line in text.lines() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        out.insert(t.to_string());
+    }
+    Ok(out)
+}
+
+fn write_baseline(path: &Path, findings: &[rules::Finding]) -> Result<(), String> {
+    let mut text = String::from(
+        "# digest-lint baseline: `RULE path:line` per entry.\n\
+         # Regenerate with `cargo run --bin digest-lint -- --write-baseline <file>`.\n",
+    );
+    for f in findings {
+        text.push_str(&baseline_key(f));
+        text.push('\n');
+    }
+    std::fs::write(path, text).map_err(|e| format!("baseline {}: {e}", path.display()))
+}
+
+fn print_human(
+    findings: &[rules::Finding],
+    baseline: &BTreeSet<String>,
+    denied: usize,
+    baselined: usize,
+    n_files: usize,
+) {
+    for f in findings {
+        let tag = if baseline.contains(&baseline_key(f)) {
+            " [baselined]"
+        } else {
+            ""
+        };
+        println!(
+            "{}:{} {}{} {}",
+            f.file,
+            f.line,
+            f.rule,
+            tag,
+            collapse_ws(&f.message)
+        );
+        if !f.excerpt.is_empty() {
+            println!("    | {}", f.excerpt);
+        }
+    }
+    if findings.is_empty() {
+        println!("digest-lint: clean ({n_files} files)");
+    } else {
+        println!(
+            "digest-lint: {} finding(s) across {n_files} files ({denied} denied, \
+             {baselined} baselined)",
+            findings.len()
+        );
+    }
+}
+
+fn print_json(
+    findings: &[rules::Finding],
+    baseline: &BTreeSet<String>,
+    denied: usize,
+    baselined: usize,
+    n_files: usize,
+) {
+    let mut out = String::from("{\"findings\":[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"rule\":{},\"file\":{},\"line\":{},\"message\":{},\"excerpt\":{},\
+             \"baselined\":{}}}",
+            json_str(f.rule),
+            json_str(&f.file),
+            f.line,
+            json_str(&collapse_ws(&f.message)),
+            json_str(&f.excerpt),
+            baseline.contains(&baseline_key(f))
+        ));
+    }
+    out.push_str(&format!(
+        "],\"files\":{n_files},\"total\":{},\"denied\":{denied},\"baselined\":{baselined}}}",
+        findings.len()
+    ));
+    println!("{out}");
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Rule summaries / messages wrap across source lines; collapse the
+/// runs of spaces that introduces.
+fn collapse_ws(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut prev_space = false;
+    for c in s.chars() {
+        if c == ' ' {
+            if !prev_space {
+                out.push(c);
+            }
+            prev_space = true;
+        } else {
+            prev_space = false;
+            out.push(c);
+        }
+    }
+    out
+}

@@ -1,0 +1,927 @@
+//! The `digest-lint` rule catalog.
+//!
+//! Every rule encodes an invariant this crate's determinism /
+//! robustness story depends on (see README "Correctness tooling" for
+//! the rationale and the allowlisting workflow):
+//!
+//! | id | invariant |
+//! |---|---|
+//! | D001 | no `HashMap`/`HashSet` iteration in determinism-critical modules |
+//! | D002 | no `unwrap()` / `expect()` / `panic!` in library code outside tests |
+//! | D003 | no `thread::spawn` / `thread::scope` outside `tensor/pool.rs` |
+//! | D004 | every `unsafe` site carries a `// SAFETY:` comment |
+//! | D005 | no raw `.lock()` outside `util::lock_unpoisoned` |
+//! | D006 | no `Instant::now` / `SystemTime` in session/worker step paths |
+//!
+//! Checks are *lexical* (over [`crate::lexer`]'s blanked code), so each
+//! is a documented approximation of the semantic rule: sound against
+//! strings/comments, conservative about receiver types.  Deliberate
+//! exceptions are burned in with `// lint:allow(Dnnn, reason)` pragmas;
+//! a pragma with no reason, or one that suppresses nothing, is itself
+//! reported (D000) so the allowlist can never rot silently.
+
+use crate::lexer::{is_ident_byte, lex_source, SourceFile};
+
+/// One lint finding.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    /// Path as reported (relative to the scan root).
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    pub message: String,
+    /// The offending source line, trimmed.
+    pub excerpt: String,
+}
+
+/// Rule catalog entry (for `--list-rules` and docs).
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub summary: &'static str,
+}
+
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "D000",
+        summary: "malformed, reason-less, or unused lint:allow pragma (not suppressible)",
+    },
+    RuleInfo {
+        id: "D001",
+        summary: "HashMap/HashSet iteration in determinism-critical modules \
+                  (kvs, ps, coordinator, serve, runtime)",
+    },
+    RuleInfo {
+        id: "D002",
+        summary: "unwrap()/expect()/panic! in library code outside #[cfg(test)]",
+    },
+    RuleInfo {
+        id: "D003",
+        summary: "thread::spawn/scope/Builder outside tensor/pool.rs (use the ChunkPool)",
+    },
+    RuleInfo {
+        id: "D004",
+        summary: "unsafe block or impl without a // SAFETY: comment",
+    },
+    RuleInfo {
+        id: "D005",
+        summary: "raw .lock() outside util::lock_unpoisoned (poison-recovery convention)",
+    },
+    RuleInfo {
+        id: "D006",
+        summary: "Instant::now/SystemTime in session/worker step paths \
+                  (wall-clock belongs in hooks/telemetry)",
+    },
+];
+
+/// Modules whose iteration order reaches checkpoints and telemetry.
+const D001_MODULES: &[&str] = &["kvs", "ps", "coordinator", "serve", "runtime"];
+
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "retain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+];
+
+/// Lint one file.  `rel` is the path relative to the scan root, with
+/// `/` separators (rule scoping keys off it).
+pub fn lint_file(rel: &str, src: &str) -> Vec<Finding> {
+    let lexed = lex_source(src);
+    let mut raw_findings: Vec<Finding> = Vec::new();
+    check_d001(rel, &lexed, &mut raw_findings);
+    check_d002(rel, &lexed, &mut raw_findings);
+    check_d003(rel, &lexed, &mut raw_findings);
+    check_d004(rel, &lexed, &mut raw_findings);
+    check_d005(rel, &lexed, &mut raw_findings);
+    check_d006(rel, &lexed, &mut raw_findings);
+    apply_pragmas(rel, &lexed, raw_findings)
+}
+
+/// Suppress findings covered by a well-formed pragma; report pragma
+/// problems as D000.
+fn apply_pragmas(rel: &str, lexed: &SourceFile, raw: Vec<Finding>) -> Vec<Finding> {
+    let mut used = vec![false; lexed.pragmas.len()];
+    let mut out: Vec<Finding> = Vec::new();
+    for f in raw {
+        let mut suppressed = false;
+        for (pi, p) in lexed.pragmas.iter().enumerate() {
+            if p.target == f.line
+                && !p.rules.is_empty()
+                && !p.reason.is_empty()
+                && p.rules.iter().any(|r| r == f.rule)
+            {
+                used[pi] = true;
+                suppressed = true;
+            }
+        }
+        if !suppressed {
+            out.push(f);
+        }
+    }
+    for (pi, p) in lexed.pragmas.iter().enumerate() {
+        if p.rules.is_empty() || p.reason.is_empty() {
+            out.push(finding(
+                "D000",
+                rel,
+                lexed,
+                p.line,
+                format!(
+                    "malformed lint:allow pragma `({})`: need rule ids and a non-empty reason, \
+                     e.g. `lint:allow(D002, reason)`",
+                    p.text
+                ),
+            ));
+        } else if !used[pi] {
+            out.push(finding(
+                "D000",
+                rel,
+                lexed,
+                p.line,
+                format!(
+                    "lint:allow({}) suppresses nothing on line {}; remove the stale pragma",
+                    p.rules.join(", "),
+                    p.target
+                ),
+            ));
+        }
+    }
+    out.sort_by_key(|f| (f.line, f.rule));
+    out
+}
+
+fn finding(
+    rule: &'static str,
+    rel: &str,
+    lexed: &SourceFile,
+    line: usize,
+    message: String,
+) -> Finding {
+    let excerpt = lexed
+        .lines
+        .get(line - 1)
+        .map(|l| l.raw.trim().to_string())
+        .unwrap_or_default();
+    Finding {
+        rule,
+        file: rel.to_string(),
+        line,
+        message,
+        excerpt,
+    }
+}
+
+fn in_module(rel: &str, modules: &[&str]) -> bool {
+    modules.iter().any(|m| {
+        rel.strip_prefix(m)
+            .is_some_and(|rest| rest.starts_with('/') || rest == ".rs")
+    })
+}
+
+// ---------------------------------------------------------------------------
+// token scanning helpers (over blanked code)
+// ---------------------------------------------------------------------------
+
+/// Find `.method(` starting at or after `from`; returns the byte offset
+/// of the `.`.  Token-exact: `.unwrap_or(` does not match `unwrap`.
+fn find_method_call(code: &str, method: &str, from: usize) -> Option<usize> {
+    let bytes = code.as_bytes();
+    let pat = format!(".{method}");
+    let mut at = from;
+    while let Some(pos) = code[at..].find(&pat) {
+        let start = at + pos;
+        let after = start + pat.len();
+        let boundary = bytes.get(after).map(|&b| !is_ident_byte(b)).unwrap_or(true);
+        if boundary {
+            let mut k = after;
+            while bytes.get(k) == Some(&b' ') {
+                k += 1;
+            }
+            if bytes.get(k) == Some(&b'(') {
+                return Some(start);
+            }
+        }
+        at = start + 1;
+    }
+    None
+}
+
+/// Whether `code` contains `ident` as a whole token.
+fn has_token(code: &str, ident: &str) -> bool {
+    token_pos(code, ident, 0).is_some()
+}
+
+/// Offset of the next whole-token occurrence of `ident` at/after `from`.
+fn token_pos(code: &str, ident: &str, from: usize) -> Option<usize> {
+    let bytes = code.as_bytes();
+    let mut at = from;
+    while let Some(pos) = code[at..].find(ident) {
+        let start = at + pos;
+        let pre_ok = start == 0 || !is_ident_byte(bytes[start - 1]);
+        let end = start + ident.len();
+        let post_ok = bytes.get(end).map(|&b| !is_ident_byte(b)).unwrap_or(true);
+        if pre_ok && post_ok {
+            return Some(start);
+        }
+        at = start + 1;
+    }
+    None
+}
+
+/// `a :: b` with arbitrary spaces: does token `a` at `pos` connect to
+/// token `b` via `::`?
+fn path_follows(code: &str, after_token_end: usize, next: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut k = after_token_end;
+    while bytes.get(k) == Some(&b' ') {
+        k += 1;
+    }
+    if bytes.get(k) != Some(&b':') || bytes.get(k + 1) != Some(&b':') {
+        return false;
+    }
+    k += 2;
+    while bytes.get(k) == Some(&b' ') {
+        k += 1;
+    }
+    code[k..].starts_with(next) && {
+        let end = k + next.len();
+        bytes.get(end).map(|&b| !is_ident_byte(b)).unwrap_or(true)
+    }
+}
+
+/// The identifier token ending immediately before byte `pos` (skipping
+/// nothing): for `self.shards.iter`, pos at the final `.` returns
+/// `shards`.
+fn ident_before(code: &str, pos: usize) -> Option<&str> {
+    let bytes = code.as_bytes();
+    if pos == 0 {
+        return None;
+    }
+    let mut start = pos;
+    while start > 0 && is_ident_byte(bytes[start - 1]) {
+        start -= 1;
+    }
+    if start == pos {
+        return None;
+    }
+    // reject numeric "identifiers"
+    if bytes[start].is_ascii_digit() {
+        return None;
+    }
+    Some(&code[start..pos])
+}
+
+// ---------------------------------------------------------------------------
+// D001 — HashMap/HashSet iteration in determinism-critical modules
+// ---------------------------------------------------------------------------
+//
+// Lexical approximation: a file-local binding analysis collects names
+// whose *outermost* declared type is HashMap/HashSet (fields, params,
+// `let` bindings with annotations or `HashMap::`/`HashSet::`
+// constructors).  Flagged: iteration-method calls on such names,
+// `for .. in` over them, and iteration-method calls on a
+// `lock_unpoisoned(..)` / `.lock()` guard in files that declare a
+// `Mutex<HashMap/..Set>` anywhere (the sharded-store pattern).
+
+fn check_d001(rel: &str, lexed: &SourceFile, out: &mut Vec<Finding>) {
+    if !in_module(rel, D001_MODULES) {
+        return;
+    }
+    let mut hash_names: Vec<String> = Vec::new();
+    let mut file_has_mutex_hash = false;
+    for line in &lexed.lines {
+        collect_hash_bindings(&line.code, &mut hash_names, &mut file_has_mutex_hash);
+    }
+    for (idx, line) in lexed.lines.iter().enumerate() {
+        let n = idx + 1;
+        if lexed.is_test_line(n) {
+            continue;
+        }
+        let code = &line.code;
+        for method in ITER_METHODS {
+            let mut from = 0usize;
+            while let Some(dot) = find_method_call(code, method, from) {
+                from = dot + 1;
+                let receiver = ident_before(code, dot);
+                let flagged = match receiver {
+                    Some(name) => hash_names.iter().any(|h| h == name),
+                    // a call-result receiver: flag guard iteration in
+                    // sharded-store files
+                    None => {
+                        code.as_bytes().get(dot.wrapping_sub(1)) == Some(&b')')
+                            && file_has_mutex_hash
+                            && (code.contains("lock_unpoisoned(") || code.contains(".lock("))
+                    }
+                };
+                if flagged {
+                    out.push(finding(
+                        "D001",
+                        rel,
+                        lexed,
+                        n,
+                        format!(
+                            "iteration (`.{method}()`) over a HashMap/HashSet in a \
+                             determinism-critical module: the visit order is arbitrary and \
+                             leaks into checkpoints/telemetry; sort keys first or use BTreeMap"
+                        ),
+                    ));
+                }
+            }
+        }
+        // `for .. in <expr containing a hash-typed name not behind `.`>`
+        if let Some(for_pos) = token_pos(code, "for", 0) {
+            if let Some(in_rel) = token_pos(code, "in", for_pos) {
+                let expr = &code[in_rel + 2..];
+                for h in &hash_names {
+                    let mut at = 0usize;
+                    while let Some(p) = token_pos(expr, h, at) {
+                        at = p + 1;
+                        let after = expr.as_bytes().get(p + h.len()).copied().unwrap_or(b' ');
+                        if after != b'.' {
+                            out.push(finding(
+                                "D001",
+                                rel,
+                                lexed,
+                                n,
+                                format!(
+                                    "`for .. in` over HashMap/HashSet `{h}` in a \
+                                     determinism-critical module: the visit order is arbitrary; \
+                                     sort keys first or use BTreeMap"
+                                ),
+                            ));
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Record `name` for `name: HashMap<..>` / `let name = HashMap::..`
+/// style bindings (outermost type only), and whether the line mentions
+/// `Mutex<HashMap/..Set` at any nesting depth.
+fn collect_hash_bindings(code: &str, names: &mut Vec<String>, mutex_hash: &mut bool) {
+    for ty in ["HashMap", "HashSet"] {
+        let mut at = 0usize;
+        while let Some(pos) = token_pos(code, ty, at) {
+            at = pos + 1;
+            if let Some(m) = token_pos(code, "Mutex", 0) {
+                if m < pos {
+                    *mutex_hash = true;
+                }
+            }
+            // `= HashMap::new()` constructor: bind the `let` name
+            if let Some(name) = let_binding_before_eq(code, pos) {
+                push_unique(names, name);
+                continue;
+            }
+            // annotation form: walk left over path/reference noise to a
+            // `:` and take the identifier before it
+            if let Some(name) = annotated_name_before(code, pos) {
+                push_unique(names, name);
+            }
+        }
+    }
+}
+
+fn push_unique(names: &mut Vec<String>, name: String) {
+    if !names.contains(&name) {
+        names.push(name);
+    }
+}
+
+/// For `let [mut] NAME [: ..] = [path::]HashMap::..` with the HashMap
+/// token at `pos` after the `=`, return NAME.
+fn let_binding_before_eq(code: &str, pos: usize) -> Option<String> {
+    let before = &code[..pos];
+    let eq = before.rfind('=')?;
+    // only constructor bindings: the type token must follow the `=`,
+    // with at most a path prefix (`std::collections::`) in between
+    let between = before[eq + 1..].trim();
+    if !between.is_empty()
+        && !between.ends_with("::")
+        && !between.chars().all(|c| is_ident_byte(c as u8) || c == ':' || c == ' ')
+    {
+        return None;
+    }
+    let let_pos = token_pos(before, "let", 0)?;
+    let mut toks = before[let_pos + 3..eq].split_whitespace();
+    let mut name = toks.next()?;
+    if name == "mut" {
+        name = toks.next()?;
+    }
+    let name = name.trim_end_matches(':');
+    if name.is_empty() || !name.bytes().all(is_ident_byte) {
+        return None;
+    }
+    Some(name.to_string())
+}
+
+/// For `NAME: [&|mut|path::]*HashMap<..` with the type token at `pos`,
+/// return NAME; wrapped types (`Vec<..HashMap..>`) return None.
+fn annotated_name_before(code: &str, pos: usize) -> Option<String> {
+    let bytes = code.as_bytes();
+    let mut k = pos;
+    // walk left over: whitespace, `&`, path segments ending in `::`
+    loop {
+        while k > 0 && bytes[k - 1] == b' ' {
+            k -= 1;
+        }
+        if k >= 2 && bytes[k - 1] == b':' && bytes[k - 2] == b':' {
+            k -= 2;
+            while k > 0 && is_ident_byte(bytes[k - 1]) {
+                k -= 1;
+            }
+            continue;
+        }
+        if k > 0 && bytes[k - 1] == b'&' {
+            k -= 1;
+            continue;
+        }
+        // `mut ` (reference mutability)
+        if k >= 3 && &code[k - 3..k] == "mut" && (k == 3 || !is_ident_byte(bytes[k - 4])) {
+            k -= 3;
+            continue;
+        }
+        break;
+    }
+    if k == 0 || bytes[k - 1] != b':' {
+        return None;
+    }
+    k -= 1;
+    while k > 0 && bytes[k - 1] == b' ' {
+        k -= 1;
+    }
+    let name = ident_before(code, k)?;
+    if name.is_empty() {
+        None
+    } else {
+        Some(name.to_string())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// D002 — unwrap/expect/panic! in library code outside tests
+// ---------------------------------------------------------------------------
+
+fn check_d002(rel: &str, lexed: &SourceFile, out: &mut Vec<Finding>) {
+    if rel == "main.rs" || rel.starts_with("bin/") {
+        return; // binaries may exit loudly on operator error
+    }
+    for (idx, line) in lexed.lines.iter().enumerate() {
+        let n = idx + 1;
+        if lexed.is_test_line(n) {
+            continue;
+        }
+        let code = &line.code;
+        for method in ["unwrap", "expect"] {
+            let mut from = 0usize;
+            while let Some(dot) = find_method_call(code, method, from) {
+                from = dot + 1;
+                out.push(finding(
+                    "D002",
+                    rel,
+                    lexed,
+                    n,
+                    format!(
+                        "`.{method}()` in library code: return a structured error \
+                         (or burn it in with `// lint:allow(D002, reason)`)"
+                    ),
+                ));
+            }
+        }
+        let mut at = 0usize;
+        while let Some(pos) = code[at..].find("panic!") {
+            let start = at + pos;
+            at = start + 1;
+            let pre_ok = start == 0 || !is_ident_byte(code.as_bytes()[start - 1]);
+            if pre_ok {
+                out.push(finding(
+                    "D002",
+                    rel,
+                    lexed,
+                    n,
+                    "`panic!` in library code: return a structured error \
+                     (or burn it in with `// lint:allow(D002, reason)`)"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// D003 — ad-hoc threads outside the ChunkPool
+// ---------------------------------------------------------------------------
+
+fn check_d003(rel: &str, lexed: &SourceFile, out: &mut Vec<Finding>) {
+    if rel == "tensor/pool.rs" {
+        return; // the one sanctioned spawn site
+    }
+    for (idx, line) in lexed.lines.iter().enumerate() {
+        let n = idx + 1;
+        if lexed.is_test_line(n) {
+            continue; // concurrency tests legitimately spawn
+        }
+        let code = &line.code;
+        let mut at = 0usize;
+        while let Some(pos) = token_pos(code, "thread", at) {
+            at = pos + 1;
+            let end = pos + "thread".len();
+            for target in ["spawn", "scope", "Builder"] {
+                if path_follows(code, end, target) {
+                    out.push(finding(
+                        "D003",
+                        rel,
+                        lexed,
+                        n,
+                        format!(
+                            "`thread::{target}` outside tensor/pool.rs: all parallelism goes \
+                             through the ChunkPool so thread count never changes results"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// D004 — undocumented unsafe
+// ---------------------------------------------------------------------------
+
+fn check_d004(rel: &str, lexed: &SourceFile, out: &mut Vec<Finding>) {
+    for (idx, line) in lexed.lines.iter().enumerate() {
+        let n = idx + 1;
+        if !has_token(&line.code, "unsafe") {
+            continue;
+        }
+        if line.comment.as_deref().map(|c| c.contains("SAFETY:")) == Some(true) {
+            continue;
+        }
+        if safety_comment_above(lexed, n) {
+            continue;
+        }
+        out.push(finding(
+            "D004",
+            rel,
+            lexed,
+            n,
+            "`unsafe` without a `// SAFETY:` comment directly above (or trailing): \
+             every unsafe site must state why it is sound"
+                .to_string(),
+        ));
+    }
+}
+
+/// Walk upward from line `n` over contiguous comment lines, attribute
+/// lines, and other `unsafe impl` lines (Send/Sync pairs share one
+/// argument), looking for `SAFETY:` in a comment.
+fn safety_comment_above(lexed: &SourceFile, n: usize) -> bool {
+    let mut k = n - 1;
+    while k >= 1 {
+        let code = lexed.code(k).trim();
+        if code.is_empty() {
+            match lexed.comment(k) {
+                Some(c) => {
+                    if c.contains("SAFETY:") {
+                        return true;
+                    }
+                }
+                None => return false, // blank line breaks the block
+            }
+        } else if code.starts_with("#[") || code.starts_with("#![") {
+            // attributes may sit between the comment and the item
+        } else if code.starts_with("unsafe impl") {
+            if lexed.comment(k).map(|c| c.contains("SAFETY:")) == Some(true) {
+                return true;
+            }
+        } else {
+            return false;
+        }
+        k -= 1;
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// D005 — raw .lock()
+// ---------------------------------------------------------------------------
+
+fn check_d005(rel: &str, lexed: &SourceFile, out: &mut Vec<Finding>) {
+    if rel == "util/mod.rs" {
+        return; // lock_unpoisoned's own definition + poison tests
+    }
+    for (idx, line) in lexed.lines.iter().enumerate() {
+        let n = idx + 1;
+        let code = &line.code;
+        let mut from = 0usize;
+        while let Some(dot) = find_method_call(code, "lock", from) {
+            from = dot + 1;
+            out.push(finding(
+                "D005",
+                rel,
+                lexed,
+                n,
+                "raw `.lock()`: use `util::lock_unpoisoned` so one panicking worker \
+                 cannot cascade poisoning into every other worker"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// D006 — wall-clock reads in step paths
+// ---------------------------------------------------------------------------
+
+fn check_d006(rel: &str, lexed: &SourceFile, out: &mut Vec<Finding>) {
+    let in_scope = (rel.starts_with("coordinator/")
+        && rel != "coordinator/hooks.rs"
+        && rel != "coordinator/telemetry.rs")
+        || rel.starts_with("baselines/");
+    if !in_scope {
+        return;
+    }
+    for (idx, line) in lexed.lines.iter().enumerate() {
+        let n = idx + 1;
+        if lexed.is_test_line(n) {
+            continue;
+        }
+        let code = &line.code;
+        let mut at = 0usize;
+        while let Some(pos) = token_pos(code, "Instant", at) {
+            at = pos + 1;
+            if path_follows(code, pos + "Instant".len(), "now") {
+                out.push(finding(
+                    "D006",
+                    rel,
+                    lexed,
+                    n,
+                    "`Instant::now` in a session/worker step path: wall-clock belongs in \
+                     hooks/telemetry so step logic stays replayable"
+                        .to_string(),
+                ));
+            }
+        }
+        if has_token(code, "SystemTime") {
+            out.push(finding(
+                "D006",
+                rel,
+                lexed,
+                n,
+                "`SystemTime` in a session/worker step path: wall-clock belongs in \
+                 hooks/telemetry so step logic stays replayable"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+#[rustfmt::skip] // fixture tables are hand-laid-out
+mod tests {
+    use super::*;
+
+    /// Sorted, deduplicated rule ids fired on a fixture.
+    fn rules_of(rel: &str, src: &str) -> Vec<String> {
+        let mut out: Vec<String> = lint_file(rel, src)
+            .into_iter()
+            .map(|f| f.rule.to_string())
+            .collect();
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    fn assert_fires(rel: &str, src: &str, want: &[&str]) {
+        assert_eq!(rules_of(rel, src), want, "fixture: {src}");
+    }
+
+    #[test]
+    fn d001_fires_on_hash_iteration_in_scoped_modules() {
+        assert_fires(
+            "kvs/mod.rs",
+            r#"fn f(m: &HashMap<u32, f32>) -> Vec<u32> { m.keys().copied().collect() }"#,
+            &["D001"],
+        );
+        assert_fires(
+            "ps/mod.rs",
+            r#"fn f(set: HashSet<u32>) { for v in &set { drop(v); } }"#,
+            &["D001"],
+        );
+        assert_fires(
+            "serve/x.rs",
+            r#"fn f() { let m = HashMap::new(); m.insert(1, 2); for (k, v) in m { drop(k); } }"#,
+            &["D001"],
+        );
+    }
+
+    #[test]
+    fn d001_quiet_on_fixed_and_unscoped_forms() {
+        // BTreeMap is the fix
+        assert_fires(
+            "kvs/mod.rs",
+            r#"fn f(m: &BTreeMap<u32, f32>) -> Vec<u32> { m.keys().copied().collect() }"#,
+            &[],
+        );
+        // module out of scope
+        assert_fires(
+            "graph/mod.rs",
+            r#"fn f(m: &HashMap<u32, f32>) -> Vec<u32> { m.keys().copied().collect() }"#,
+            &[],
+        );
+        // outer type is Vec: iterating the Vec of shards is fine
+        assert_fires(
+            "kvs/mod.rs",
+            "struct S { shards: Vec<Mutex<HashMap<u32, f32>>> }\n\
+             impl S { fn len(&self) -> usize { self.shards.iter().count() } }",
+            &[],
+        );
+    }
+
+    #[test]
+    fn d001_pragma_allows_with_reason() {
+        assert_fires(
+            "kvs/mod.rs",
+            "fn f(m: &HashMap<u32, f32>) -> Vec<u32> {\n    \
+                 // lint:allow(D001, sorted by caller)\n    \
+                 m.keys().copied().collect()\n}",
+            &[],
+        );
+    }
+
+    #[test]
+    fn d002_fires_on_unwrap_expect_panic() {
+        assert_fires("gnn/mod.rs", r#"fn f(x: Option<u32>) -> u32 { x.unwrap() }"#, &["D002"]);
+        assert_fires(
+            "gnn/mod.rs",
+            r#"fn f(x: Option<u32>) -> u32 { x.expect("set") }"#,
+            &["D002"],
+        );
+        assert_fires("gnn/mod.rs", r#"fn f() { panic!("boom"); }"#, &["D002"]);
+    }
+
+    #[test]
+    fn d002_quiet_on_fixed_and_exempt_forms() {
+        // unwrap_or is not unwrap
+        assert_fires("gnn/mod.rs", r#"fn f(x: Option<u32>) -> u32 { x.unwrap_or(0) }"#, &[]);
+        // binaries are exempt
+        assert_fires("main.rs", r#"fn f(x: Option<u32>) -> u32 { x.unwrap() }"#, &[]);
+        // test regions are exempt
+        assert_fires(
+            "gnn/mod.rs",
+            "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { Some(1).unwrap(); }\n}",
+            &[],
+        );
+        // pragma with reason
+        assert_fires(
+            "gnn/mod.rs",
+            "fn f() -> u32 {\n    // lint:allow(D002, reason here)\n    Some(1).unwrap()\n}",
+            &[],
+        );
+    }
+
+    #[test]
+    fn triggers_inside_literals_and_comments_never_fire() {
+        assert_fires(
+            "gnn/mod.rs",
+            r#"fn f() -> &'static str { "call .unwrap() and panic!" }"#,
+            &[],
+        );
+        assert_fires("gnn/mod.rs", "fn f() {} // old code did x.unwrap() here", &[]);
+        assert_fires(
+            "gnn/mod.rs",
+            r##"fn f() -> &'static str { r#"thread::spawn .lock() "# }"##,
+            &[],
+        );
+    }
+
+    #[test]
+    fn d003_fires_outside_pool_quiet_inside_and_in_tests() {
+        assert_fires("graph/mod.rs", r#"fn f() { std::thread::spawn(|| {}); }"#, &["D003"]);
+        assert_fires("graph/mod.rs", r#"fn f() { std::thread::scope(|s| {}); }"#, &["D003"]);
+        assert_fires("tensor/pool.rs", r#"fn f() { std::thread::spawn(|| {}); }"#, &[]);
+        assert_fires(
+            "graph/mod.rs",
+            "#[cfg(test)]\nmod tests {\n    fn t() { std::thread::spawn(|| {}); }\n}",
+            &[],
+        );
+    }
+
+    #[test]
+    fn d004_fires_without_safety_comment_quiet_with() {
+        assert_fires("tensor/x.rs", r#"fn f(p: *const u32) -> u32 { unsafe { *p } }"#, &["D004"]);
+        assert_fires(
+            "tensor/x.rs",
+            "fn f(p: *const u32) -> u32 {\n    \
+                 // SAFETY: caller guarantees validity\n    \
+                 unsafe { *p }\n}",
+            &[],
+        );
+        assert_fires("tensor/x.rs", "unsafe impl Send for X {}", &["D004"]);
+        // one SAFETY comment covers a Send/Sync impl pair
+        assert_fires(
+            "tensor/x.rs",
+            "// SAFETY: no interior mutability\n\
+             unsafe impl Send for X {}\n\
+             unsafe impl Sync for X {}",
+            &[],
+        );
+        // trailing form
+        assert_fires(
+            "tensor/x.rs",
+            "fn f(p: *const u32) -> u32 { unsafe { *p } } // SAFETY: valid by contract",
+            &[],
+        );
+    }
+
+    #[test]
+    fn d005_fires_on_raw_lock_quiet_on_convention() {
+        assert_fires(
+            "coordinator/x.rs",
+            r#"fn f(m: &Mutex<u32>) -> u32 { *m.lock().unwrap() }"#,
+            &["D002", "D005"],
+        );
+        assert_fires("coordinator/x.rs", r#"fn f(m: &Mutex<u32>) -> u32 { *lock_unpoisoned(m) }"#, &[]);
+        // util/mod.rs hosts the convention itself
+        assert_fires(
+            "util/mod.rs",
+            r#"fn f(m: &Mutex<u32>) -> u32 { *m.lock().unwrap_or_else(|e| e.into_inner()) }"#,
+            &[],
+        );
+    }
+
+    #[test]
+    fn d006_fires_in_step_paths_quiet_in_hooks_and_elsewhere() {
+        assert_fires("coordinator/x.rs", r#"fn f() -> Instant { Instant::now() }"#, &["D006"]);
+        assert_fires(
+            "coordinator/x.rs",
+            r#"fn f() -> u64 { SystemTime::now().elapsed().len() }"#,
+            &["D006"],
+        );
+        assert_fires("coordinator/hooks.rs", r#"fn f() -> Instant { Instant::now() }"#, &[]);
+        assert_fires("graph/mod.rs", r#"fn f() -> Instant { Instant::now() }"#, &[]);
+    }
+
+    #[test]
+    fn d000_reports_pragma_misuse() {
+        // missing reason: malformed, and the finding survives
+        assert_fires(
+            "gnn/mod.rs",
+            "fn f() -> u32 {\n    // lint:allow(D002)\n    Some(1).unwrap()\n}",
+            &["D000", "D002"],
+        );
+        // suppresses nothing: stale
+        assert_fires(
+            "gnn/mod.rs",
+            "fn f() {\n    // lint:allow(D002, stale reason)\n    let x = 1;\n    drop(x);\n}",
+            &["D000"],
+        );
+        // wrong rule: does not suppress
+        assert_fires(
+            "gnn/mod.rs",
+            "fn f() -> u32 {\n    // lint:allow(D003, wrong rule)\n    Some(1).unwrap()\n}",
+            &["D000", "D002"],
+        );
+        // multi-rule pragma suppresses both
+        assert_fires(
+            "coordinator/x.rs",
+            "fn f(m: &Mutex<u32>) -> u32 {\n    \
+                 // lint:allow(D002, D005, test-only helper shared by fixtures)\n    \
+                 *m.lock().unwrap()\n}",
+            &[],
+        );
+    }
+
+    #[test]
+    fn lexer_corner_cases_stay_quiet() {
+        // lifetimes are not char literals
+        assert_fires("gnn/mod.rs", r#"fn f<'a>(x: &'a str) -> &'a str { x }"#, &[]);
+        // nested block comments
+        assert_fires(
+            "gnn/mod.rs",
+            "/* outer /* nested .unwrap() */ still comment panic! */\nfn f() {}",
+            &[],
+        );
+        // doc comments may mention the pragma syntax without it counting
+        assert_fires("gnn/mod.rs", "/// use `// lint:allow(D002, reason)` to allow\nfn f() {}", &[]);
+    }
+
+    #[test]
+    fn findings_carry_location_and_excerpt() {
+        let fs = lint_file("gnn/mod.rs", "fn a() {}\nfn f() { panic!(\"x\"); }\n");
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, "D002");
+        assert_eq!(fs[0].line, 2);
+        assert_eq!(fs[0].file, "gnn/mod.rs");
+        assert!(fs[0].excerpt.contains("panic!"));
+    }
+}

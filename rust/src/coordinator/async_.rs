@@ -135,6 +135,7 @@ impl<'a> AsyncSession<'a> {
             pending: vec![false; m_parts],
             stash: (0..m_parts).map(|_| None).collect(),
             started: false,
+            // lint:allow(D006, observational wall-clock anchor for telemetry columns only; never feeds training math)
             t0: Instant::now(),
             vtime: 0.0,
             ps_bytes: 0,
@@ -288,6 +289,7 @@ impl TrainSession for AsyncSession<'_> {
         self.window_synced = false;
         let mut window_point: Option<(LogPoint, EpochBreakdown, bool)> = None;
 
+        // lint:allow(D003, long-lived worker orchestration needing scoped borrows; chunk-level compute inside still goes through the ChunkPool)
         std::thread::scope(|scope| -> Result<()> {
             let mut pool = ExecPool::start(scope, ctx, self.threads, m_parts);
             if !self.started {
@@ -346,6 +348,7 @@ impl TrainSession for AsyncSession<'_> {
             }
 
             while self.updates < window_end {
+                // lint:allow(D002, the simulator keeps one in-flight event per busy worker; an empty queue is a scheduler bug worth a loud stop)
                 let ev = self.queue.pop().expect("event queue empty");
                 let m = ev.worker;
                 self.vtime = ev.t;
@@ -448,6 +451,7 @@ impl TrainSession for AsyncSession<'_> {
         })?;
 
         let (point, breakdown, evaluated) =
+            // lint:allow(D002, every window records exactly one log point by construction; absence is a scheduler bug worth a loud stop)
             window_point.expect("window completed without a log point");
         Ok(EpochReport {
             epoch: point.epoch,

@@ -96,6 +96,7 @@ where
     let chunk = n.div_ceil(threads);
     let mut slots: Vec<Option<Result<T>>> = (0..n).map(|_| None).collect();
     let fref = &run_one;
+    // lint:allow(D003, per-worker executor lanes need scoped borrows of worker state; per-chunk tensor compute still goes through the ChunkPool)
     std::thread::scope(|s| {
         for (c, (ws, rs)) in items
             .chunks_mut(chunk)
@@ -207,8 +208,10 @@ impl<'env> ExecPool<'env> {
         };
         self.job_tx
             .as_ref()
+            // lint:allow(D002, submitting after shutdown is a driver sequencing bug; returning Err would mask it)
             .expect("pool already shut down")
             .send(job)
+            // lint:allow(D002, a dead executor thread already reported its own panic; propagating Err here would mask it)
             .expect("executor threads exited early");
     }
 

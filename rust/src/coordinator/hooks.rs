@@ -173,15 +173,18 @@ impl Driver {
                 }
                 dispatch(h.on_epoch_end(&report, &*session)?);
             }
-            let due = match &self.checkpoint {
-                Some(p) => p.every > 0 && (report.epoch + 1) % p.every == 0,
-                None => false,
+            let due_path = match &self.checkpoint {
+                Some(p) if p.every > 0 && (report.epoch + 1) % p.every == 0 => {
+                    Some(p.path.clone())
+                }
+                _ => None,
             };
-            if due && !session.is_done() && stop.is_none() {
-                let path = self.checkpoint.as_ref().expect("due implies policy").path.clone();
-                session.snapshot()?.save_with(&mut self.save_buf, &path)?;
-                for h in &mut self.hooks {
-                    h.on_checkpoint(Path::new(&path), &report)?;
+            if let Some(path) = due_path {
+                if !session.is_done() && stop.is_none() {
+                    session.snapshot()?.save_with(&mut self.save_buf, &path)?;
+                    for h in &mut self.hooks {
+                        h.on_checkpoint(Path::new(&path), &report)?;
+                    }
                 }
             }
             if let Some(reason) = stop {
@@ -328,6 +331,7 @@ impl Hook for WallClockHook {
 mod tests {
     use super::*;
     use crate::config::RunConfig;
+    use crate::util::lock_unpoisoned;
     use crate::coordinator::session::new_session;
     use crate::coordinator::TrainContext;
 
@@ -381,7 +385,7 @@ mod tests {
             _r: &EpochReport,
             _s: &dyn TrainSession,
         ) -> Result<HookAction> {
-            self.counters.lock().unwrap().syncs += 1;
+            lock_unpoisoned(&self.counters).syncs += 1;
             Ok(HookAction::Continue)
         }
         fn on_eval(
@@ -389,7 +393,7 @@ mod tests {
             _r: &EpochReport,
             _s: &dyn TrainSession,
         ) -> Result<HookAction> {
-            self.counters.lock().unwrap().evals += 1;
+            lock_unpoisoned(&self.counters).evals += 1;
             Ok(HookAction::Continue)
         }
         fn on_epoch_end(
@@ -397,18 +401,18 @@ mod tests {
             r: &EpochReport,
             _s: &dyn TrainSession,
         ) -> Result<HookAction> {
-            self.counters.lock().unwrap().epochs += 1;
+            lock_unpoisoned(&self.counters).epochs += 1;
             if self.stop_at == Some(r.epoch) {
                 return Ok(HookAction::Stop("test stop".into()));
             }
             Ok(HookAction::Continue)
         }
         fn on_checkpoint(&mut self, _p: &Path, _r: &EpochReport) -> Result<()> {
-            self.counters.lock().unwrap().checkpoints += 1;
+            lock_unpoisoned(&self.counters).checkpoints += 1;
             Ok(())
         }
         fn on_finish(&mut self, _res: &RunResult) -> Result<()> {
-            self.counters.lock().unwrap().finished += 1;
+            lock_unpoisoned(&self.counters).finished += 1;
             Ok(())
         }
     }
@@ -423,7 +427,7 @@ mod tests {
         let res = driver.run(session.as_mut()).unwrap();
         assert_eq!(res.points.len(), 6);
         assert!(driver.stop_reason().is_none());
-        let c = counters.lock().unwrap();
+        let c = lock_unpoisoned(&counters);
         assert_eq!(c.epochs, 6);
         assert_eq!(c.evals, 6); // eval_every = 1
         assert_eq!(c.syncs, 3); // sync at epochs 0, 2, 4
@@ -440,7 +444,7 @@ mod tests {
         let res = driver.run(session.as_mut()).unwrap();
         assert_eq!(res.points.len(), 3); // epochs 0, 1, 2 ran
         assert_eq!(driver.stop_reason(), Some("test stop"));
-        assert_eq!(counters.lock().unwrap().finished, 1);
+        assert_eq!(lock_unpoisoned(&counters).finished, 1);
     }
 
     #[test]
@@ -458,7 +462,7 @@ mod tests {
         driver.run(session.as_mut()).unwrap();
         // periodic saves after epochs 2 and 4 notify hooks (the final
         // epoch-6 save doesn't re-notify) — and the file holds a v2 state
-        assert_eq!(counters.lock().unwrap().checkpoints, 2);
+        assert_eq!(lock_unpoisoned(&counters).checkpoints, 2);
         let ck = crate::ps::checkpoint::Checkpoint::load(&path).unwrap();
         let state = ck.state.expect("v2 training state");
         assert_eq!(state.epoch, 6);

@@ -96,6 +96,7 @@ impl<'a> SyncSession<'a> {
                 m_parts,
             ),
             workers: (0..m_parts).map(|m| WorkerState::new(ctx, m)).collect(),
+            // lint:allow(D006, observational wall-clock anchor for telemetry columns only; never feeds training math)
             t0: Instant::now(),
             r: 0,
             vtime: 0.0,

@@ -21,7 +21,7 @@ use crate::gnn::ModelKind;
 use crate::ps::{optimizer::Optimizer, ParamServer};
 use crate::runtime::init_params;
 use crate::tensor::Matrix;
-use crate::Result;
+use crate::{eyre, Result};
 
 use super::{csv_table, md_table, Campaign};
 
@@ -159,8 +159,8 @@ fn measure(c: &Campaign, sync_interval: usize) -> Result<Measurement> {
                 push_reps(&ctx, &workers[m], &fresh_reps[m], r as u64);
             }
         }
-        let gs = g_stale_mean.unwrap();
-        let ge = g_exact_mean.unwrap();
+        let gs = g_stale_mean.ok_or_else(|| eyre!("no workers produced a stale gradient"))?;
+        let ge = g_exact_mean.ok_or_else(|| eyre!("no workers produced an exact gradient"))?;
         let denom = flat_norm(&ge).max(1e-12);
         grad_errs.push(flat_diff_norm(&gs, &ge) / denom);
         rep_errs.push(epoch_rep_err);

@@ -188,6 +188,7 @@ fn check_layer_shapes(l: usize, kind: ModelKind, h: &Matrix, layer: &LayerView) 
     }
     if kind == ModelKind::Gat {
         for (name, a) in [("a_src", layer.a_src), ("a_dst", layer.a_dst)] {
+            // lint:allow(D002, the ModelKind::Gat arm only sees layer views built with attention vectors present)
             let a = a.expect("GAT layer views carry attention vectors");
             if a.data.len() != layer.w.cols {
                 return Err(eyre!(

@@ -97,7 +97,9 @@ pub fn gat_forward_dense(
     for (l, layer) in layers.iter().enumerate() {
         let last = l == layers.len() - 1;
         let t = h.matmul(layer.w); // (n, d')
+        // lint:allow(D002, seed oracle preserved verbatim; the GAT reference path is only invoked with attention vectors present)
         let a_src = layer.a_src.unwrap();
+        // lint:allow(D002, seed oracle preserved verbatim; the GAT reference path is only invoked with attention vectors present)
         let a_dst = layer.a_dst.unwrap();
         let s_src: Vec<f32> = (0..n).map(|v| dot(t.row(v), &a_src.data)).collect();
         let s_dst: Vec<f32> = (0..n).map(|v| dot(t.row(v), &a_dst.data)).collect();

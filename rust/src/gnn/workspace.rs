@@ -149,6 +149,7 @@ impl Workspace {
     pub fn take_outputs(&mut self) -> (Matrix, Vec<Matrix>) {
         let mut z = std::mem::take(&mut self.z);
         self.t = Vec::new();
+        // lint:allow(D002, API misuse guard; taking outputs before any forward is a programmer error worth a loud stop)
         let logits = z.pop().expect("take_outputs before any forward");
         (logits, z)
     }
@@ -199,7 +200,9 @@ impl Workspace {
             let h: &Matrix = if l == 0 { x } else { &self.z[l - 1] };
             par_matmul_into(h, layer.w, &mut self.t[l], threads);
             if self.kind == ModelKind::Gat {
+                // lint:allow(D002, the GAT branch only sees layer views built with attention vectors present)
                 let a_src = layer.a_src.expect("GAT layer views carry attention vectors");
+                // lint:allow(D002, the GAT branch only sees layer views built with attention vectors present)
                 let a_dst = layer.a_dst.expect("GAT layer views carry attention vectors");
                 if self.s_src.len() != n {
                     self.s_src.resize(n, 0.0);

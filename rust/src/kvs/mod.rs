@@ -278,6 +278,7 @@ impl RepStore {
     pub fn export_entries(&self) -> Vec<(u16, u32, u64, Vec<f32>)> {
         let mut out = Vec::new();
         for s in &self.shards {
+            // lint:allow(D001, entries are collected then sorted by layer and node below so shard iteration order never escapes)
             for (k, e) in lock_unpoisoned(s).iter() {
                 out.push((k.layer, k.node, e.version, e.data.clone()));
             }
@@ -537,6 +538,34 @@ mod tests {
         let (out, info) = b.pull(1, &[2], 4, 1);
         assert_eq!(out.row(0), &[50.0, 51.0, 52.0, 53.0]);
         assert_eq!(info.oldest_version, 5);
+    }
+
+    #[test]
+    fn snapshots_serialize_byte_identically_regardless_of_insert_order() {
+        // The shard HashMaps iterate in arbitrary order; export_entries
+        // must still be a canonical serialization of the logical state.
+        // Build the same state three ways (different push order, push
+        // granularity, and shard count) and require byte-identical
+        // serializations.
+        let a = RepStore::new(4);
+        a.push(0, &[1, 2, 9, 40, 77], &mat(5, 3, 1.0), 3);
+        a.push(1, &[2, 8], &mat(2, 3, 30.0), 5);
+
+        let b = RepStore::new(11);
+        b.push(1, &[8], &mat(1, 3, 33.0), 5);
+        b.push(0, &[77], &mat(1, 3, 13.0), 3);
+        b.push(0, &[9, 40], &mat(2, 3, 7.0), 3);
+        b.push(1, &[2], &mat(1, 3, 30.0), 5);
+        b.push(0, &[1, 2], &mat(2, 3, 1.0), 3);
+
+        let c = RepStore::new(1); // single shard: one big HashMap
+        c.import_entries(&a.export_entries());
+
+        let ser_a = format!("{:?}", a.export_entries());
+        let ser_b = format!("{:?}", b.export_entries());
+        let ser_c = format!("{:?}", c.export_entries());
+        assert_eq!(ser_a, ser_b);
+        assert_eq!(ser_a, ser_c);
     }
 
     #[test]

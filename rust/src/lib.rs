@@ -135,6 +135,18 @@
 //! [--nodes i,j | --split val] [--topk K]`, `digest bench-serve
 //! <model>...` (single vs batched multi-model predict).
 //!
+//! ## Correctness tooling
+//!
+//! The determinism / panic-freedom / unsafe-hygiene invariants above are
+//! machine-checked by `digest-lint` (`src/bin/lint/`, run as
+//! `cargo run --bin digest-lint -- --deny all`): no hash-order
+//! iteration in checkpoint-reaching modules, no library panics outside
+//! tests, all parallelism through the [`tensor::pool::ChunkPool`],
+//! `// SAFETY:` comments on every unsafe site, `util::lock_unpoisoned`
+//! instead of raw locks, and no wall-clock reads in step paths.  See
+//! the README's "Correctness tooling" section for the rule catalog and
+//! the `lint:allow` pragma convention.
+//!
 //! Module map (see DESIGN.md for the full inventory):
 //!
 //! | module | role |

@@ -51,6 +51,7 @@ pub fn partition_bfs(g: &Graph, k: usize, seed: u64) -> Partition {
     // orphans (disconnected or capped-out regions) go to the smallest part
     for v in 0..n {
         if parts[v] == u32::MAX {
+            // lint:allow(D002, k is validated nonzero at entry so the minimum over parts always exists)
             let m = (0..k).min_by_key(|&m| sizes[m]).unwrap();
             parts[v] = m as u32;
             sizes[m] += 1;

@@ -218,6 +218,7 @@ fn initial_partition(g: &WGraph, k: usize, rng: &mut Rng) -> Vec<u32> {
     // unassigned (disconnected) -> lightest part
     for v in 0..n {
         if parts[v] == u32::MAX {
+            // lint:allow(D002, k is validated nonzero at entry so the minimum over parts always exists)
             let m = (0..k).min_by_key(|&m| weights[m]).unwrap();
             parts[v] = m as u32;
             weights[m] += g.vw[v];
@@ -314,6 +315,7 @@ pub fn partition_multilevel(g: &Graph, k: usize, seed: u64) -> Partition {
         for m in 0..k {
             if result.sizes()[m] == 0 {
                 // steal a node from the largest part
+                // lint:allow(D002, k is validated nonzero at entry so the maximum over parts always exists)
                 let big = (0..k).max_by_key(|&x| result.sizes()[x]).unwrap();
                 if let Some(v) = result.parts.iter().position(|&p| p as usize == big) {
                     result.parts[v] = m as u32;

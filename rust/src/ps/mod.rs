@@ -115,6 +115,7 @@ impl ParamServer {
             .slots
             .iter()
             .position(|s| s.is_none())
+            // lint:allow(D002, a free slot is the reduction invariant; all-full without a reduce is a coordinator bug worth a loud stop)
             .expect("all slots full but round not reduced");
         Self::fill_slot(&mut inner, slot, grads);
         self.maybe_reduce(&mut inner)
@@ -141,8 +142,10 @@ impl ParamServer {
             params, opt, slots, ..
         } = &mut *inner;
         let mut it = slots.iter_mut();
+        // lint:allow(D002, maybe_reduce runs only when every slot is filled so each take yields a gradient)
         let mut mean = it.next().unwrap().take().unwrap();
         for s in it {
+            // lint:allow(D002, maybe_reduce runs only when every slot is filled so each take yields a gradient)
             let g = s.take().unwrap();
             for (a, gm) in mean.iter_mut().zip(&g) {
                 a.add_scaled(gm, 1.0);

@@ -47,6 +47,9 @@ use crate::{eyre, Result};
 /// API contract; the handle itself is immutable after compilation.
 pub struct SharedExecutable(xla::PjRtLoadedExecutable);
 
+// SAFETY: `PJRT_LoadedExecutable_Execute` is thread-safe per the PJRT C
+// API contract, and the handle is immutable after compilation — no
+// unsynchronized interior mutability crosses threads.
 unsafe impl Send for SharedExecutable {}
 unsafe impl Sync for SharedExecutable {}
 
@@ -56,6 +59,9 @@ unsafe impl Sync for SharedExecutable {}
 /// shared); every later use is a read of the host buffer.
 pub struct SharedLiteral(xla::Literal);
 
+// SAFETY: the literal's host buffer is written only during packing,
+// strictly before it is shared; every cross-thread use afterwards is a
+// read, so concurrent access is data-race free.
 unsafe impl Send for SharedLiteral {}
 unsafe impl Sync for SharedLiteral {}
 
@@ -86,7 +92,7 @@ pub struct Runtime {
     pub stats: Mutex<RuntimeStats>,
 }
 
-// Safety: `client` compiles under the `exes` mutex (PjRtClient::compile
+// SAFETY: `client` compiles under the `exes` mutex (PjRtClient::compile
 // is additionally documented thread-safe in PJRT); all interior
 // mutability is mutex-guarded; executables and literals cross threads
 // only via the wrappers above.

@@ -225,6 +225,7 @@ impl InferenceModel {
     }
 
     pub fn n_class(&self) -> usize {
+        // lint:allow(D002, from_json rejects empty dims so the last element exists)
         *self.dims.last().expect("dims validated non-empty")
     }
 

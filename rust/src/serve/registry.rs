@@ -105,6 +105,7 @@ impl ModelRegistry {
                 path.as_ref()
             ));
         }
+        // lint:allow(D002, presence was checked a few lines above under the same exclusive borrow)
         let slot = self.models.get_mut(name).expect("checked above");
         let applied = match Arc::get_mut(slot) {
             Some(live) => live.reload_from_json(&j),

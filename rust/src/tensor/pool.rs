@@ -37,6 +37,12 @@
 //!    increment — after `completed == n` every further claim fails, so
 //!    the dangling pointer left in an old [`Job`] is never touched.
 //!
+//! The raw-pointer aliasing in `run_chunks` is sound for the same
+//! reason the old scoped scaffold was: the `&mut [f32]` windows handed
+//! to chunk kernels are `data[bounds[i]..bounds[i + 1]]` for a
+//! *monotone* `bounds` (asserted on entry), so any two windows are
+//! disjoint and no two claimers ever hold `&mut` to the same element.
+//!
 //! A panic inside a chunk kernel is caught on the executing thread
 //! (workers must survive it — they are long-lived), recorded on the
 //! job, and re-raised on the submitting thread after the barrier.
@@ -75,8 +81,9 @@ struct Job {
     panicked: AtomicBool,
 }
 
-// Safety: `f` crosses threads, but is only dereferenced under the
-// claim protocol above while the submitting stack frame is alive.
+// SAFETY: `f` crosses threads, but is only dereferenced under the
+// claim protocol above while the submitting stack frame is alive; the
+// counters are atomics and `n` is immutable after publication.
 unsafe impl Send for Job {}
 unsafe impl Sync for Job {}
 
@@ -134,6 +141,7 @@ impl ChunkPool {
                 std::thread::Builder::new()
                     .name(format!("digest-chunk-{i}"))
                     .spawn(move || worker_loop(&shared))
+                    // lint:allow(D002, a process that cannot spawn its compute pool at startup has no useful degraded mode)
                     .expect("spawning pool worker")
             })
             .collect();
@@ -184,7 +192,7 @@ impl ChunkPool {
             "chunk bounds not monotone"
         );
         assert!(
-            *bounds.last().unwrap() <= data.len(),
+            bounds[n] <= data.len(),
             "chunk bounds exceed the data buffer"
         );
         if n == 1 {
@@ -198,6 +206,10 @@ impl ChunkPool {
         let base = SendPtr(data.as_mut_ptr());
         let runner = move |i: usize| {
             let (lo, hi) = (bounds[i], bounds[i + 1]);
+            // SAFETY: `bounds` is monotone with `bounds[n] <= data.len()`
+            // (asserted above), so `lo..hi` is in bounds and the windows
+            // for distinct `i` are disjoint; `data` outlives the job
+            // because the submitter blocks until every chunk completes.
             let seg = unsafe { std::slice::from_raw_parts_mut(base.0.add(lo), hi - lo) };
             f(i, seg);
         };
@@ -244,6 +256,7 @@ impl ChunkPool {
         }
         IN_POOL.with(|c| c.set(false));
         if job.panicked.load(Ordering::SeqCst) {
+            // lint:allow(D002, deliberate re-raise of a caught chunk-kernel panic on the submitting thread per the pool contract)
             panic!("ChunkPool: a chunk kernel panicked (see worker output above)");
         }
     }
@@ -268,6 +281,10 @@ impl Drop for ChunkPool {
 // same-type-modulo-lifetime transmutes as useless
 #[allow(clippy::useless_transmute, clippy::unnecessary_cast)]
 fn erase<'a>(f: &'a (dyn Fn(usize) + Sync + 'a)) -> *const (dyn Fn(usize) + Sync) {
+    // SAFETY: only the lifetime is transmuted away; the resulting
+    // pointer is dereferenced solely between a successful chunk claim
+    // and its completion increment, while `run_erased` (holding the
+    // `'a` borrow) is still blocked on the completion barrier.
     unsafe {
         std::mem::transmute::<&'a (dyn Fn(usize) + Sync + 'a), &'static (dyn Fn(usize) + Sync)>(f)
     }
@@ -278,6 +295,10 @@ fn erase<'a>(f: &'a (dyn Fn(usize) + Sync + 'a)) -> *const (dyn Fn(usize) + Sync
 /// disjoint, and the buffer outlives the job (the submitter blocks).
 #[derive(Clone, Copy)]
 struct SendPtr(*mut f32);
+// SAFETY: the pointer is the base of the submitter's output buffer;
+// every access through it goes to a window derived from monotone chunk
+// bounds (disjoint per claimer) while the submitter keeps the buffer
+// alive, so shared cross-thread access never aliases a `&mut`.
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
 
@@ -293,6 +314,9 @@ fn run_claims(job: &Job) {
         if i >= job.n {
             return;
         }
+        // SAFETY: the claim succeeded (`i < n`), so the submitter has not
+        // yet seen `completed == n` and is still blocked in `run_erased`
+        // with the closure and its captures alive.
         let f = unsafe { &*job.f };
         if catch_unwind(AssertUnwindSafe(|| f(i))).is_err() {
             job.panicked.store(true, Ordering::SeqCst);

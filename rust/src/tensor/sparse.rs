@@ -53,7 +53,7 @@ impl CsrMatrix {
         if row_ptr.len() != rows + 1 {
             return Err(eyre!("row_ptr len {} != rows + 1 ({})", row_ptr.len(), rows + 1));
         }
-        if row_ptr[0] != 0 || *row_ptr.last().unwrap() != col_idx.len() {
+        if row_ptr[0] != 0 || row_ptr[rows] != col_idx.len() {
             return Err(eyre!("row_ptr must span [0, nnz={}]", col_idx.len()));
         }
         if row_ptr.windows(2).any(|w| w[0] > w[1]) {
@@ -243,7 +243,7 @@ fn spmm_rows(
 pub fn balanced_row_chunks(row_ptr: &[usize], threads: usize) -> Vec<usize> {
     let rows = row_ptr.len() - 1;
     let threads = threads.clamp(1, rows.max(1));
-    let nnz = *row_ptr.last().unwrap();
+    let nnz = row_ptr[rows];
     let mut bounds = vec![0usize];
     if rows == 0 {
         bounds.push(0);

@@ -245,7 +245,7 @@ impl<'a> Parser<'a> {
             .ok_or_else(|| eyre!("unexpected end of input"))
     }
 
-    fn expect(&mut self, c: u8) -> Result<()> {
+    fn expect_byte(&mut self, c: u8) -> Result<()> {
         if self.peek()? != c {
             return Err(eyre!(
                 "expected {:?} at byte {}, found {:?}",
@@ -280,7 +280,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut s = String::new();
         loop {
             let c = self.peek()?;
@@ -341,7 +341,8 @@ impl<'a> Parser<'a> {
         {
             self.i += 1;
         }
-        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let s = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| eyre!("non-UTF-8 bytes in number at byte {start}"))?;
         // pure-integer literals that would lose bits through f64 (values
         // above 2^53 with low bits set, e.g. 64-bit seeds) are kept
         // exact in `Big`; everything else takes the f64 path as before
@@ -356,7 +357,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut items = Vec::new();
         self.ws();
         if self.peek()? == b']' {
@@ -379,7 +380,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut map = BTreeMap::new();
         self.ws();
         if self.peek()? == b'}' {
@@ -390,7 +391,7 @@ impl<'a> Parser<'a> {
             self.ws();
             let key = self.string()?;
             self.ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             self.ws();
             map.insert(key, self.value()?);
             self.ws();

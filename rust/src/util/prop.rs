@@ -19,6 +19,7 @@ pub fn prop_check(cases: u64, mut property: impl FnMut(&mut Rng) -> Result<(), S
     for seed in 0..cases {
         let mut rng = Rng::new(0xD1_6E57 ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
         if let Err(msg) = property(&mut rng) {
+            // lint:allow(D002, the property harness reports failures by panicking; that is its contract with the test runner)
             panic!("property failed at case {seed}: {msg}");
         }
     }

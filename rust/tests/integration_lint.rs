@@ -1,0 +1,130 @@
+//! The `digest-lint` self-check as a test: the crate's own source tree
+//! must be lint-clean under `--deny all`, and the binary's CLI contract
+//! (JSON shape, exit codes, rule selection) must hold.  This is the
+//! same gate CI runs, wired into `cargo test` so a violation fails
+//! locally before a push.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+fn lint_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_digest-lint")
+}
+
+fn crate_src() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("src")
+}
+
+#[test]
+fn self_check_crate_is_lint_clean() {
+    let out = Command::new(lint_bin())
+        .arg(crate_src())
+        .args(["--deny", "all"])
+        .output()
+        .expect("running digest-lint");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "digest-lint found violations in the crate:\n{stdout}"
+    );
+    assert!(
+        stdout.contains("digest-lint: clean"),
+        "unexpected output: {stdout}"
+    );
+}
+
+#[test]
+fn violations_fail_with_exit_code_2_and_json_findings() {
+    let dir = std::env::temp_dir().join("digest_lint_fixture_viol");
+    let src_dir = dir.join("src").join("kvs");
+    std::fs::create_dir_all(&src_dir).expect("fixture dir");
+    std::fs::write(
+        src_dir.join("mod.rs"),
+        "fn f(m: &HashMap<u32, f32>) -> u32 {\n    for v in m.values() {\n        drop(v);\n    }\n    m.len().unwrap()\n}\n",
+    )
+    .expect("fixture write");
+
+    let out = Command::new(lint_bin())
+        .arg(dir.join("src"))
+        .args(["--json", "--deny", "all"])
+        .output()
+        .expect("running digest-lint");
+    assert_eq!(out.status.code(), Some(2), "violations must exit 2");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("\"rule\":\"D001\""), "json: {stdout}");
+    assert!(stdout.contains("\"rule\":\"D002\""), "json: {stdout}");
+    assert!(stdout.contains("\"file\":\"kvs/mod.rs\""), "json: {stdout}");
+
+    // --only restricts to the selected rules
+    let out = Command::new(lint_bin())
+        .arg(dir.join("src"))
+        .args(["--json", "--only", "D002", "--deny", "all"])
+        .output()
+        .expect("running digest-lint");
+    assert_eq!(out.status.code(), Some(2));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(!stdout.contains("\"rule\":\"D001\""), "json: {stdout}");
+    assert!(stdout.contains("\"rule\":\"D002\""), "json: {stdout}");
+
+    // a warn-only run (deny nothing that fired) exits 0 but reports
+    let out = Command::new(lint_bin())
+        .arg(dir.join("src"))
+        .args(["--deny", "D004"])
+        .output()
+        .expect("running digest-lint");
+    assert_eq!(out.status.code(), Some(0), "warn-only must exit 0");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("D001"), "warnings still print: {stdout}");
+}
+
+#[test]
+fn baseline_suppresses_exactly_the_listed_findings() {
+    let dir = std::env::temp_dir().join("digest_lint_fixture_base");
+    let src_dir = dir.join("src").join("ps");
+    std::fs::create_dir_all(&src_dir).expect("fixture dir");
+    std::fs::write(
+        src_dir.join("mod.rs"),
+        "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n",
+    )
+    .expect("fixture write");
+    let baseline = dir.join("baseline.txt");
+    std::fs::write(&baseline, "# comment line\nD002 ps/mod.rs:2\n").expect("baseline write");
+
+    let out = Command::new(lint_bin())
+        .arg(dir.join("src"))
+        .arg("--baseline")
+        .arg(&baseline)
+        .args(["--deny", "all"])
+        .output()
+        .expect("running digest-lint");
+    assert_eq!(
+        out.status.code(),
+        Some(0),
+        "baselined finding must not deny: {}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("[baselined]"), "report: {stdout}");
+}
+
+#[test]
+fn list_rules_covers_the_catalog() {
+    let out = Command::new(lint_bin())
+        .arg("--list-rules")
+        .output()
+        .expect("running digest-lint");
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for id in ["D001", "D002", "D003", "D004", "D005", "D006"] {
+        assert!(stdout.contains(id), "missing {id} in: {stdout}");
+    }
+}
+
+#[test]
+fn unknown_flag_is_a_usage_error() {
+    let out = Command::new(lint_bin())
+        .arg("--frobnicate")
+        .output()
+        .expect("running digest-lint");
+    assert_eq!(out.status.code(), Some(1));
+}
