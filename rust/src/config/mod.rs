@@ -343,6 +343,62 @@ impl RunConfig {
     }
 }
 
+/// Configuration for the `digest serve` daemon (`serve::net::Server`).
+/// Built from CLI flags in `main.rs`; `validate()` runs at
+/// `Server::bind`, so a bad config is a structured startup error, not
+/// a panic in the accept loop.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Listen address; `127.0.0.1:0` = ephemeral port (tests read the
+    /// bound address back via `Server::local_addr`).
+    pub addr: String,
+    /// Connection-handler cap: connection `max_conns + 1` gets a
+    /// structured `Busy` frame (explicit backpressure, never a hang).
+    pub max_conns: usize,
+    /// Hot-rollover watch file (the training side's `export_best=`
+    /// target); None disables rollover.
+    pub watch: Option<String>,
+    /// Watch-file poll interval in milliseconds.
+    pub poll_ms: u64,
+    /// Engine thread count (0 = auto), forwarded to
+    /// `InferenceEngine::with_threads`.
+    pub threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7411".to_string(),
+            max_conns: 64,
+            watch: None,
+            poll_ms: 200,
+            threads: 0,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.addr.is_empty() {
+            return Err(eyre!("serve addr must not be empty"));
+        }
+        if self.max_conns == 0 {
+            return Err(eyre!("max_conns must be >= 1"));
+        }
+        if self.poll_ms == 0 {
+            // the accept loop computes `elapsed >= poll_ms` each idle
+            // tick; 0 would busy-spin the watch stat() call
+            return Err(eyre!("poll_ms must be >= 1"));
+        }
+        if let Some(w) = &self.watch {
+            if w.is_empty() {
+                return Err(eyre!("watch path must not be empty"));
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -516,5 +572,29 @@ mod tests {
         let mut c = RunConfig::default();
         c.apply_override("threads=2").unwrap();
         assert_eq!(c.threads, 2);
+    }
+
+    #[test]
+    fn serve_config_defaults_validate() {
+        let c = ServeConfig::default();
+        c.validate().unwrap();
+        assert_eq!(c.max_conns, 64);
+        assert!(c.watch.is_none());
+    }
+
+    #[test]
+    fn serve_config_rejects_degenerate_values() {
+        let mut c = ServeConfig::default();
+        c.max_conns = 0;
+        assert!(c.validate().is_err());
+        let mut c = ServeConfig::default();
+        c.poll_ms = 0;
+        assert!(c.validate().is_err());
+        let mut c = ServeConfig::default();
+        c.addr = String::new();
+        assert!(c.validate().is_err());
+        let mut c = ServeConfig::default();
+        c.watch = Some(String::new());
+        assert!(c.validate().is_err());
     }
 }

@@ -129,11 +129,23 @@
 //!   bit-identical to training eval by construction (and the AOT
 //!   subgraph eval shares [`serve::aot_eval_step`] likewise);
 //! * [`serve::ModelRegistry`] — named multi-model store with
-//!   load / list / evict and a buffer-reusing hot `reload`.
+//!   load / list / evict and a buffer-reusing hot `reload`;
+//! * [`serve::net`] — the network layer: the `digest serve` TCP daemon
+//!   (`digest-wire-v1` length-prefixed binary protocol over `std::net`,
+//!   zero new dependencies), bounded thread-per-connection concurrency
+//!   with structured `Busy` backpressure, graceful `Shutdown` drain,
+//!   hot model rollover by watching the training side's `export_best=`
+//!   file, the blocking [`serve::net::Client`], and the
+//!   [`serve::net::run_load`] latency-histogram load generator.
+//!   Concurrent remote clients are bit-identical to in-process
+//!   `predict` because all compute still dispatches through the shared
+//!   engine onto the chunk pool.
 //!
 //! CLI: `digest export <ckpt> <model>`, `digest predict <model>
 //! [--nodes i,j | --split val] [--topk K]`, `digest bench-serve
-//! <model>...` (single vs batched multi-model predict).
+//! <model>...` (single vs batched multi-model predict, or `--remote`
+//! against a daemon), `digest serve <model>... [--watch FILE]`, and
+//! `digest query [--list|--stats|--reload|--shutdown]`.
 //!
 //! ## Correctness tooling
 //!
@@ -162,6 +174,7 @@
 //! | [`costmodel`] | virtual-time device/network model (speedup figures) |
 //! | [`coordinator`] | sessions, hooks/driver, sync/async schedulers, parallel engine, telemetry |
 //! | [`serve`] | sealed model artifacts, pool-aware multi-model inference engine, registry |
+//! | [`serve::net`] | `digest serve` TCP daemon: `digest-wire-v1` codec, bounded handlers, client + load bench |
 //! | [`baselines`] | LLCG-like and DGL-like comparison frameworks (sessions too) |
 //! | [`exp`] | per-table/figure experiment runners (session-driven, cached) |
 

@@ -6,6 +6,9 @@
 //! digest partition --dataset arxiv-s --parts 4 --algo metis
 //! digest train [--config run.json] [key=value ...] [--csv out.csv]
 //! digest experiment <id|all> [--out-dir results] [--quick] [--seed N]
+//! digest serve model.json --watch best.json      # TCP inference daemon
+//! digest query --nodes 0,1,2 --topk 3            # remote predict over digest-wire-v1
+//! digest bench-serve --remote --clients 4        # latency-histogram load bench
 //! ```
 //!
 //! Training knobs are `key=value` overrides on `config::RunConfig`
@@ -26,14 +29,16 @@
 
 use std::sync::Arc;
 
-use digest::config::RunConfig;
+use digest::config::{RunConfig, ServeConfig};
 use digest::exp::{run_experiment, Budget, Campaign};
 use digest::graph::registry::{load, SPECS};
 use digest::graph::stats::graph_stats;
 use digest::graph::Split;
 use digest::partition::{partition, quality, PartitionAlgo};
 use digest::ps::checkpoint::Checkpoint;
+use digest::serve::net::{run_load, Client, LoadedModel, Server, WIRE_VERSION};
 use digest::serve::{self, InferenceEngine, InferenceModel, NodeQuery};
+use digest::util::hist::{HistSummary, LatencyHistogram};
 use digest::util::human_bytes;
 use digest::util::json::Json;
 use digest::{coordinator, eyre, Result};
@@ -46,7 +51,7 @@ fn main() {
 }
 
 fn usage() -> String {
-    "usage: digest <list|generate|partition|train|experiment|export|predict|bench-serve> [args]\n\
+    "usage: digest <list|generate|partition|train|experiment|export|predict|bench-serve|serve|query> [args]\n\
      \n\
      digest list\n\
      digest generate --dataset <name> [--seed N]\n\
@@ -60,7 +65,13 @@ fn usage() -> String {
      digest predict <model.json> [--nodes 0,1,2 | --split train|val|test|all]\n\
      \x20             [--topk K] [--seed N] [--threads T] [--out report.json]\n\
      digest bench-serve <model.json> [<model2.json> ...] [--iters N] [--threads T]\n\
-     \x20             [--seed N]\n"
+     \x20             [--seed N] [--json out.json]\n\
+     digest bench-serve --remote [--addr H:P] [--model NAME] [--clients C]\n\
+     \x20             [--requests R] [--nodes 0,1,2] [--topk K] [--json out.json]\n\
+     digest serve <model.json> [<model2.json> ...] [--addr H:P] [--max-conns N]\n\
+     \x20             [--watch FILE] [--poll-ms MS] [--threads T] [--seed N]\n\
+     digest query [--addr H:P] [--model NAME] [--nodes 0,1,2] [--topk K]\n\
+     \x20             [--list] [--stats] [--reload [NAME]] [--shutdown]\n"
         .to_string()
 }
 
@@ -103,6 +114,8 @@ fn run() -> Result<()> {
         "export" => cmd_export(args),
         "predict" => cmd_predict(args),
         "bench-serve" => cmd_bench_serve(args),
+        "serve" => cmd_serve(args),
+        "query" => cmd_query(args),
         "help" | "--help" | "-h" => {
             print!("{}", usage());
             Ok(())
@@ -437,10 +450,90 @@ fn cmd_predict(mut args: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+/// One `bench-serve` result row; in-process and `--remote` runs emit
+/// the same p50/p90/p99 schema (printed and in `--json` output,
+/// matching the `BENCH_serve.json` baseline format).
+struct BenchRow {
+    mode: &'static str,
+    target: String,
+    /// What one histogram sample measures ("predict", "batch", "request").
+    unit: &'static str,
+    clients: usize,
+    summary: HistSummary,
+    throughput_rps: f64,
+    /// Wire cost per completed request; None for in-process rows.
+    bytes_out_per_req: Option<f64>,
+    bytes_in_per_req: Option<f64>,
+}
+
+impl BenchRow {
+    fn print(&self) {
+        let s = &self.summary;
+        println!(
+            "  {:<18} n={:<6} mean {:8.3} ms  p50 {:8.3}  p90 {:8.3}  p99 {:8.3}  max {:8.3}",
+            self.mode,
+            s.count,
+            s.mean * 1e3,
+            s.p50 * 1e3,
+            s.p90 * 1e3,
+            s.p99 * 1e3,
+            s.max * 1e3
+        );
+        println!(
+            "  {:<18} {:10.1} {}(s)/s over {} client(s)",
+            "", self.throughput_rps, self.unit, self.clients
+        );
+        if let (Some(out), Some(inn)) = (self.bytes_out_per_req, self.bytes_in_per_req) {
+            println!(
+                "  {:<18} wire: {:.0} B out + {:.0} B in per request",
+                "", out, inn
+            );
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let s = &self.summary;
+        let opt = |v: Option<f64>| v.map_or(Json::Null, Json::num);
+        Json::obj(vec![
+            ("mode", Json::str(self.mode)),
+            ("target", Json::str(self.target.as_str())),
+            ("unit", Json::str(self.unit)),
+            ("clients", Json::uint(self.clients as u64)),
+            ("requests", Json::uint(s.count)),
+            ("mean_ms", Json::num(s.mean * 1e3)),
+            ("p50_ms", Json::num(s.p50 * 1e3)),
+            ("p90_ms", Json::num(s.p90 * 1e3)),
+            ("p99_ms", Json::num(s.p99 * 1e3)),
+            ("max_ms", Json::num(s.max * 1e3)),
+            ("throughput_rps", Json::num(self.throughput_rps)),
+            ("bytes_out_per_req", opt(self.bytes_out_per_req)),
+            ("bytes_in_per_req", opt(self.bytes_in_per_req)),
+        ])
+    }
+}
+
+/// Write bench rows in the `BENCH_serve.json` baseline schema.
+fn write_bench_serve_json(path: &str, rows: &[BenchRow]) -> Result<()> {
+    let j = Json::obj(vec![
+        ("bench", Json::str("serve")),
+        ("schema", Json::str("digest-bench-serve-v1")),
+        ("rows", Json::Arr(rows.iter().map(BenchRow::to_json).collect())),
+    ]);
+    std::fs::write(path, j.to_string()).map_err(|e| eyre!("writing {path}: {e}"))?;
+    println!("  bench JSON   {path}");
+    Ok(())
+}
+
 /// `digest bench-serve <model>...` — single interleaved predicts vs one
 /// batched `predict_many` over the same engine; asserts the warm engine
-/// performs zero structure rebuilds either way.
+/// performs zero structure rebuilds either way.  With `--remote`, a
+/// concurrent load generator against a running `digest serve` daemon;
+/// both variants report the same latency-histogram schema.
 fn cmd_bench_serve(mut args: Vec<String>) -> Result<()> {
+    let json_out = take_opt(&mut args, "--json");
+    if take_flag(&mut args, "--remote") {
+        return cmd_bench_serve_remote(args, json_out);
+    }
     let iters: usize = take_opt(&mut args, "--iters").map_or(Ok(50), |s| {
         s.parse().map_err(|e| eyre!("--iters: {e}"))
     })?;
@@ -475,16 +568,22 @@ fn cmd_bench_serve(mut args: Vec<String>) -> Result<()> {
     let reqs: Vec<(&InferenceModel, &NodeQuery)> = models.iter().map(|m| (m, &q)).collect();
     engine.predict_many(&reqs)?; // warmup: builds structures + scratch
     let warm = engine.stats();
+    let mut single_hist = LatencyHistogram::new();
     let t0 = std::time::Instant::now();
     for _ in 0..iters {
         for m in &models {
+            let t = std::time::Instant::now();
             engine.predict(m, &q)?;
+            single_hist.record(t.elapsed().as_secs_f64());
         }
     }
     let single = t0.elapsed();
+    let mut batched_hist = LatencyHistogram::new();
     let t1 = std::time::Instant::now();
     for _ in 0..iters {
+        let t = std::time::Instant::now();
         engine.predict_many(&reqs)?;
+        batched_hist.record(t.elapsed().as_secs_f64());
     }
     let batched = t1.elapsed();
     let steady = engine.stats();
@@ -495,26 +594,326 @@ fn cmd_bench_serve(mut args: Vec<String>) -> Result<()> {
             steady.structure_builds
         ));
     }
-    let per = (iters * models.len()) as f64;
+    let target = format!("{} x{} models", models[0].dataset(), models.len());
+    let rows = [
+        BenchRow {
+            mode: "in-process-single",
+            target: target.clone(),
+            unit: "predict",
+            clients: 1,
+            summary: single_hist.summary(),
+            throughput_rps: single_hist.count() as f64 / single.as_secs_f64().max(1e-12),
+            bytes_out_per_req: None,
+            bytes_in_per_req: None,
+        },
+        BenchRow {
+            mode: "in-process-batched",
+            target,
+            unit: "batch",
+            clients: 1,
+            summary: batched_hist.summary(),
+            throughput_rps: batched_hist.count() as f64 / batched.as_secs_f64().max(1e-12),
+            bytes_out_per_req: None,
+            bytes_in_per_req: None,
+        },
+    ];
     println!(
         "bench-serve: {} model(s) over {} ({n_nodes} nodes), {iters} iters, threads={threads}",
         models.len(),
         models[0].dataset()
     );
+    for row in &rows {
+        row.print();
+    }
     println!(
-        "  single   {:9.3} ms/predict",
-        single.as_secs_f64() * 1e3 / per
-    );
-    println!(
-        "  batched  {:9.3} ms/predict   ({:.2}x vs single)",
-        batched.as_secs_f64() * 1e3 / per,
-        single.as_secs_f64() / batched.as_secs_f64()
+        "  ({:.2}x batched vs single per prediction)",
+        single.as_secs_f64() / batched.as_secs_f64().max(1e-12)
     );
     println!(
         "  engine   {} structure build(s), {} scratch alloc(s), {} forwards, {} predictions",
         steady.structure_builds, steady.scratch_allocs, steady.forwards, steady.predictions
     );
     println!("  zero structure rebuilds after warmup: OK");
+    if let Some(path) = json_out {
+        write_bench_serve_json(&path, &rows)?;
+    }
+    Ok(())
+}
+
+/// `digest bench-serve --remote` — drive a running `digest serve`
+/// daemon with N concurrent client threads and report the merged
+/// latency histogram plus bytes on the wire per request.
+fn cmd_bench_serve_remote(mut args: Vec<String>, json_out: Option<String>) -> Result<()> {
+    let addr = take_opt(&mut args, "--addr").unwrap_or_else(|| ServeConfig::default().addr);
+    let clients: usize = take_opt(&mut args, "--clients").map_or(Ok(4), |s| {
+        s.parse().map_err(|e| eyre!("--clients: {e}"))
+    })?;
+    let requests: usize = take_opt(&mut args, "--requests").map_or(Ok(50), |s| {
+        s.parse().map_err(|e| eyre!("--requests: {e}"))
+    })?;
+    let topk: usize = take_opt(&mut args, "--topk").map_or(Ok(3), |s| {
+        s.parse().map_err(|e| eyre!("--topk: {e}"))
+    })?;
+    let nodes_opt = take_opt(&mut args, "--nodes");
+    let model_opt = take_opt(&mut args, "--model");
+    if !args.is_empty() {
+        return Err(eyre!("bench-serve --remote: unexpected args {args:?}\n{}", usage()));
+    }
+    let model = match model_opt {
+        Some(m) => m,
+        None => sole_remote_model(&addr)?,
+    };
+    let query = match &nodes_opt {
+        Some(list) => NodeQuery::nodes(parse_node_list(list)?),
+        None => NodeQuery::full(),
+    }
+    .with_top_k(topk);
+    println!(
+        "bench-serve --remote: {clients} client(s) x {requests} request(s) \
+         against {addr} (model {model:?})"
+    );
+    let report = run_load(&addr, &model, &query, clients, requests)?;
+    if report.errors > 0 {
+        println!(
+            "  WARNING: {} request(s) failed (first: {})",
+            report.errors,
+            report.first_error.as_deref().unwrap_or("?")
+        );
+    }
+    let row = BenchRow {
+        mode: "remote",
+        target: addr.clone(),
+        unit: "request",
+        clients,
+        summary: report.hist.summary(),
+        throughput_rps: report.throughput_rps(),
+        bytes_out_per_req: Some(report.bytes_out_per_req()),
+        bytes_in_per_req: Some(report.bytes_in_per_req()),
+    };
+    row.print();
+    println!("{}", report.hist.ascii(40));
+    if let Some(path) = json_out {
+        write_bench_serve_json(&path, &[row])?;
+    }
+    if report.errors > 0 && report.completed == 0 {
+        return Err(eyre!("every request failed"));
+    }
+    Ok(())
+}
+
+/// Ask the daemon for its model list and return the single model's
+/// name (error if there are zero or several — pass `--model` then).
+fn sole_remote_model(addr: &str) -> Result<String> {
+    let mut probe = Client::connect(addr)?;
+    let models = probe.list_models()?;
+    match models.len() {
+        1 => Ok(models[0].name.clone()),
+        0 => Err(eyre!("daemon at {addr} serves no models")),
+        _ => Err(eyre!(
+            "daemon serves {} models — pick one with --model: {:?}",
+            models.len(),
+            models.iter().map(|m| m.name.as_str()).collect::<Vec<_>>()
+        )),
+    }
+}
+
+/// `digest serve <models...>` — the long-running TCP inference daemon
+/// (`serve::net::Server`): bounded concurrency, `digest-wire-v1`
+/// protocol, optional hot rollover of the `--watch` file.
+fn cmd_serve(mut args: Vec<String>) -> Result<()> {
+    let mut cfg = ServeConfig::default();
+    if let Some(v) = take_opt(&mut args, "--addr") {
+        cfg.addr = v;
+    }
+    if let Some(v) = take_opt(&mut args, "--max-conns") {
+        cfg.max_conns = v.parse().map_err(|e| eyre!("--max-conns: {e}"))?;
+    }
+    cfg.watch = take_opt(&mut args, "--watch");
+    if let Some(v) = take_opt(&mut args, "--poll-ms") {
+        cfg.poll_ms = v.parse().map_err(|e| eyre!("--poll-ms: {e}"))?;
+    }
+    if let Some(v) = take_opt(&mut args, "--threads") {
+        cfg.threads = v.parse().map_err(|e| eyre!("--threads: {e}"))?;
+    }
+    let seed_opt: Option<u64> = match take_opt(&mut args, "--seed") {
+        Some(s) => Some(s.parse().map_err(|e| eyre!("--seed: {e}"))?),
+        None => None,
+    };
+    if args.is_empty() {
+        // `digest serve --watch best.json` alone works once the file
+        // exists: serve the watched model from the start
+        match &cfg.watch {
+            Some(w) if std::path::Path::new(w).is_file() => args.push(w.clone()),
+            _ => {
+                return Err(eyre!(
+                    "serve needs at least one <model.json> (or --watch pointing at an \
+                     existing model file)\n{}",
+                    usage()
+                ))
+            }
+        }
+    }
+    let mut models = Vec::with_capacity(args.len());
+    for path in &args {
+        models.push((InferenceModel::load(path)?, path.clone()));
+    }
+    for (m, _) in &models[1..] {
+        if m.graph_fingerprint() != models[0].0.graph_fingerprint() {
+            return Err(eyre!(
+                "models {:?} and {:?} were exported for different graphs",
+                models[0].0.name(),
+                m.name()
+            ));
+        }
+    }
+    let seed = seed_opt.unwrap_or_else(|| models[0].0.seed());
+    let ds = Arc::new(load(models[0].0.dataset(), seed)?);
+    let engine = Arc::new(InferenceEngine::new(ds).with_threads(cfg.threads));
+    let loaded: Vec<LoadedModel> = models
+        .into_iter()
+        .map(|(model, path)| LoadedModel {
+            model,
+            source: Some(path),
+        })
+        .collect();
+    let n_models = loaded.len();
+    let server = Server::bind(&cfg, engine, loaded)?;
+    let addr = server.local_addr()?;
+    println!(
+        "digest serve: {n_models} model(s) on {addr} ({WIRE_VERSION}, max-conns {}{})",
+        cfg.max_conns,
+        match &cfg.watch {
+            Some(w) => format!(", watching {w} every {}ms", cfg.poll_ms),
+            None => String::new(),
+        }
+    );
+    println!("  stop with: digest query --addr {addr} --shutdown");
+    let stats = server.run()?;
+    println!(
+        "digest serve: drained. {} accepted, {} served, {} busy-rejected, {} reload(s)",
+        stats.accepted, stats.served, stats.busy_rejected, stats.reloads
+    );
+    println!(
+        "  wire: {} in, {} out; {} app error(s), {} frame error(s)",
+        human_bytes(stats.bytes_in),
+        human_bytes(stats.bytes_out),
+        stats.app_errors,
+        stats.frame_errors
+    );
+    Ok(())
+}
+
+/// `digest query` — remote client for a running daemon: predict over
+/// TCP plus the admin verbs (`--list`, `--stats`, `--reload`,
+/// `--shutdown`).
+fn cmd_query(mut args: Vec<String>) -> Result<()> {
+    let addr = take_opt(&mut args, "--addr").unwrap_or_else(|| ServeConfig::default().addr);
+    let list = take_flag(&mut args, "--list");
+    let stats = take_flag(&mut args, "--stats");
+    let shutdown = take_flag(&mut args, "--shutdown");
+    // --reload takes an OPTIONAL model name: bare --reload = all
+    // file-backed models
+    let reload: Option<String> = match args.iter().position(|a| a == "--reload") {
+        Some(i) => {
+            args.remove(i);
+            if i < args.len() && !args[i].starts_with("--") {
+                Some(args.remove(i))
+            } else {
+                Some(String::new())
+            }
+        }
+        None => None,
+    };
+    let model_opt = take_opt(&mut args, "--model");
+    let nodes_opt = take_opt(&mut args, "--nodes");
+    let topk: usize = take_opt(&mut args, "--topk").map_or(Ok(3), |s| {
+        s.parse().map_err(|e| eyre!("--topk: {e}"))
+    })?;
+    if !args.is_empty() {
+        return Err(eyre!("query: unexpected args {args:?}\n{}", usage()));
+    }
+    let admin = list || stats || shutdown || reload.is_some();
+    let do_predict = !admin || model_opt.is_some() || nodes_opt.is_some();
+    let mut client = Client::connect(&addr)?;
+    if list {
+        let models = client.list_models()?;
+        println!("{} model(s) at {addr}:", models.len());
+        for m in &models {
+            println!(
+                "  {:24} {} {}  dims {:?}  epoch {}  val F1 {:.4}  graph {:#018x}",
+                m.name, m.dataset, m.kind, m.dims, m.epoch, m.val_f1, m.graph_fingerprint
+            );
+        }
+    }
+    if let Some(name) = reload {
+        let reloaded = client.reload(&name)?;
+        println!("reloaded {} model(s): {reloaded:?}", reloaded.len());
+    }
+    if stats {
+        let s = client.stats()?;
+        println!("daemon stats at {addr}:");
+        println!(
+            "  conns    {} active / {} max; {} accepted, {} busy-rejected",
+            s.active_conns, s.max_conns, s.accepted, s.busy_rejected
+        );
+        println!(
+            "  traffic  {} served, {} in, {} out, {} app error(s), {} frame error(s)",
+            s.served,
+            human_bytes(s.bytes_in),
+            human_bytes(s.bytes_out),
+            s.app_errors,
+            s.frame_errors
+        );
+        println!("  models   {} loaded, {} reload(s)", s.models, s.reloads);
+        println!(
+            "  engine   {} structure build(s), {} scratch alloc(s), {} forwards, \
+             {} predictions, {} batches",
+            s.engine.structure_builds,
+            s.engine.scratch_allocs,
+            s.engine.forwards,
+            s.engine.predictions,
+            s.engine.batches
+        );
+    }
+    if do_predict {
+        let model = match model_opt {
+            Some(m) => m,
+            None => sole_remote_model(&addr)?,
+        };
+        let query = match &nodes_opt {
+            Some(listing) => NodeQuery::nodes(parse_node_list(listing)?),
+            None => NodeQuery::full(),
+        }
+        .with_top_k(topk.max(1));
+        let t0 = std::time::Instant::now();
+        let pred = client.predict(&model, &query)?;
+        let rtt = t0.elapsed();
+        println!(
+            "model {:?} via {addr}: {} node(s) in {:.2} ms",
+            pred.model,
+            pred.nodes.len(),
+            rtt.as_secs_f64() * 1e3
+        );
+        for (i, &v) in pred.nodes.iter().take(10).enumerate() {
+            let tk: Vec<String> = pred.top_k[i]
+                .iter()
+                .map(|&(c, l)| format!("class {c} ({l:.3})"))
+                .collect();
+            println!("  node {v:>6}: {}", tk.join(", "));
+        }
+        if pred.nodes.len() > 10 {
+            println!("  ... {} more node(s)", pred.nodes.len() - 10);
+        }
+        println!(
+            "  wire: {} B out, {} B in this connection",
+            client.bytes_out(),
+            client.bytes_in()
+        );
+    }
+    if shutdown {
+        client.shutdown()?;
+        println!("daemon at {addr} acknowledged shutdown (drain + exit)");
+    }
     Ok(())
 }
 

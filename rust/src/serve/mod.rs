@@ -31,13 +31,21 @@
 //!   per-subgraph eval path shares [`aot_eval_step`] the same way.
 //! * [`ModelRegistry`] — named multi-model store (load / list / evict /
 //!   hot-[`ModelRegistry::reload`]) for serving processes.
+//! * [`net`] — the network layer on top of the three: the `digest
+//!   serve` TCP daemon (`digest-wire-v1` binary protocol, bounded
+//!   concurrency with explicit `Busy` backpressure, graceful shutdown
+//!   drain, hot rollover by watching the `export_best=` file), the
+//!   blocking [`net::Client`] behind `digest query`, and the
+//!   concurrent load generator behind `digest bench-serve --remote`.
 //!
 //! CLI: `digest export <ckpt> <model>`, `digest predict <model>`,
-//! `digest bench-serve <model>...`; `digest train export_best=<path>`
-//! auto-exports the best-val-F1 model while training runs.
+//! `digest bench-serve <model>...`, `digest serve <model>...`,
+//! `digest query`; `digest train export_best=<path>` auto-exports the
+//! best-val-F1 model while training runs.
 
 pub mod engine;
 pub mod model;
+pub mod net;
 pub mod registry;
 
 pub use engine::{aot_eval_step, EngineStats, InferenceEngine, NodeQuery, Prediction};

@@ -1,0 +1,290 @@
+//! Blocking `digest-wire-v1` client: the API under `digest query` and
+//! the `digest bench-serve --remote` load generator.
+//!
+//! A [`Client`] owns one connection (handshake performed in
+//! [`Client::connect`]) and issues sequential request→response calls.
+//! Server-side [`Response::Error`] and [`Response::Busy`] frames
+//! surface as structured `Err`s — [`is_busy`] distinguishes
+//! backpressure from real failures so callers can retry.  Every client
+//! tracks its own bytes on the wire ([`Client::bytes_out`] /
+//! [`Client::bytes_in`]), which is how the load report measures
+//! per-request wire cost.
+//!
+//! [`run_load`] drives N concurrent client threads for the latency
+//! histogram bench.  Those threads are plain `std::thread` —
+//! intentionally *outside* the ChunkPool (D003 pragma below): they are
+//! I/O-bound request generators that must overlap in real time to
+//! exercise the server's concurrency; all compute they trigger runs
+//! server-side on the pool.
+
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::serve::engine::{NodeQuery, Prediction};
+use crate::util::frame::{read_frame, write_frame, FrameRead};
+use crate::util::hist::LatencyHistogram;
+use crate::{eyre, Result};
+
+use super::wire::{
+    predict_request, ModelInfo, Request, Response, WireStats, MAX_FRAME, WIRE_VERSION,
+};
+
+/// Marker embedded in the `Err` a [`Response::Busy`] frame becomes;
+/// [`is_busy`] keys off it.
+const BUSY_TAG: &str = "server busy";
+
+/// True if this error is the server's `Busy` backpressure signal
+/// (retryable) rather than a real failure.
+pub fn is_busy(err: &anyhow::Error) -> bool {
+    err.to_string().contains(BUSY_TAG)
+}
+
+/// One blocking connection to a `digest serve` daemon.
+pub struct Client {
+    stream: TcpStream,
+    bytes_out: u64,
+    bytes_in: u64,
+}
+
+impl Client {
+    /// Connect and run the version handshake.  A server at its
+    /// connection cap answers the connect with `Busy` — that surfaces
+    /// here as an `Err` for which [`is_busy`] returns true.
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| eyre!("connecting to {addr}: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+        let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+        let mut client = Client {
+            stream,
+            bytes_out: 0,
+            bytes_in: 0,
+        };
+        match client.roundtrip(&Request::Hello {
+            version: WIRE_VERSION.to_string(),
+        })? {
+            Response::HelloOk { version } if version == WIRE_VERSION => Ok(client),
+            Response::HelloOk { version } => Err(eyre!(
+                "version mismatch: server {version:?}, client {WIRE_VERSION:?}"
+            )),
+            other => Err(unexpected("HelloOk", &other)),
+        }
+    }
+
+    /// Bytes this client has written to the socket (frames included).
+    pub fn bytes_out(&self) -> u64 {
+        self.bytes_out
+    }
+
+    /// Bytes this client has read from the socket.
+    pub fn bytes_in(&self) -> u64 {
+        self.bytes_in
+    }
+
+    /// Remote predict; the returned [`Prediction`] is bit-identical to
+    /// what `InferenceEngine::predict` returns in-process.
+    pub fn predict(&mut self, model: &str, query: &NodeQuery) -> Result<Prediction> {
+        let req = predict_request(model, query)?;
+        match self.roundtrip(&req)? {
+            Response::Prediction(wp) => wp.into_prediction(),
+            other => Err(unexpected("Prediction", &other)),
+        }
+    }
+
+    /// List the models the daemon currently serves.
+    pub fn list_models(&mut self) -> Result<Vec<ModelInfo>> {
+        match self.roundtrip(&Request::ListModels)? {
+            Response::ModelList(list) => Ok(list),
+            other => Err(unexpected("ModelList", &other)),
+        }
+    }
+
+    /// Ask the daemon to re-read model files: `""` = every file-backed
+    /// model, otherwise one model by name.  Returns the (possibly
+    /// re-keyed) names reloaded.
+    pub fn reload(&mut self, name: &str) -> Result<Vec<String>> {
+        match self.roundtrip(&Request::Reload {
+            name: name.to_string(),
+        })? {
+            Response::ReloadOk { reloaded } => Ok(reloaded),
+            other => Err(unexpected("ReloadOk", &other)),
+        }
+    }
+
+    /// Engine + daemon counters.
+    pub fn stats(&mut self) -> Result<WireStats> {
+        match self.roundtrip(&Request::Stats)? {
+            Response::Stats(s) => Ok(s),
+            other => Err(unexpected("Stats", &other)),
+        }
+    }
+
+    /// Graceful daemon shutdown: in-flight requests complete, the
+    /// listener closes, `digest serve` exits.
+    pub fn shutdown(&mut self) -> Result<()> {
+        match self.roundtrip(&Request::Shutdown)? {
+            Response::ShutdownOk => Ok(()),
+            other => Err(unexpected("ShutdownOk", &other)),
+        }
+    }
+
+    /// One request→response exchange, with byte accounting.
+    fn roundtrip(&mut self, req: &Request) -> Result<Response> {
+        let (op, payload) = req.encode()?;
+        self.bytes_out += write_frame(&mut self.stream, op, &payload)?;
+        match read_frame(&mut self.stream, MAX_FRAME)? {
+            FrameRead::Frame(op, payload) => {
+                self.bytes_in += 5 + payload.len() as u64;
+                Response::decode(op, &payload)
+            }
+            FrameRead::Closed => Err(eyre!("server closed the connection")),
+            FrameRead::TimedOut => Err(eyre!("timed out waiting for the server's reply")),
+        }
+    }
+}
+
+/// Map the two out-of-band responses to structured errors; anything
+/// else unexpected is a protocol bug.
+fn unexpected(wanted: &str, got: &Response) -> anyhow::Error {
+    match got {
+        Response::Error { message } => eyre!("server error: {message}"),
+        Response::Busy { active, max } => eyre!("{BUSY_TAG}: {active}/{max} connections"),
+        other => eyre!("protocol error: expected {wanted}, got {other:?}"),
+    }
+}
+
+/// What [`run_load`] measured: merged latency histogram + wire cost.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub clients: usize,
+    pub requests_per_client: usize,
+    /// Requests that returned a prediction.
+    pub completed: u64,
+    /// Requests that errored (the first error message is kept).
+    pub errors: u64,
+    pub first_error: Option<String>,
+    /// Wall-clock for the whole run (all clients, connect to join).
+    pub elapsed_secs: f64,
+    pub hist: LatencyHistogram,
+    /// Total bytes written/read across all clients (handshakes included).
+    pub bytes_out: u64,
+    pub bytes_in: u64,
+}
+
+impl LoadReport {
+    pub fn throughput_rps(&self) -> f64 {
+        if self.elapsed_secs > 0.0 {
+            self.completed as f64 / self.elapsed_secs
+        } else {
+            0.0
+        }
+    }
+
+    pub fn bytes_out_per_req(&self) -> f64 {
+        per_req(self.bytes_out, self.completed)
+    }
+
+    pub fn bytes_in_per_req(&self) -> f64 {
+        per_req(self.bytes_in, self.completed)
+    }
+}
+
+fn per_req(bytes: u64, reqs: u64) -> f64 {
+    if reqs > 0 {
+        bytes as f64 / reqs as f64
+    } else {
+        0.0
+    }
+}
+
+/// Drive `clients` concurrent connections, each issuing `requests`
+/// sequential predicts, and merge the per-thread latency histograms.
+/// A client that cannot connect fails the whole run (a load bench
+/// against a saturated server is a configuration error — lower
+/// `clients` below the daemon's `--max-conns`).
+pub fn run_load(
+    addr: &str,
+    model: &str,
+    query: &NodeQuery,
+    clients: usize,
+    requests: usize,
+) -> Result<LoadReport> {
+    if clients == 0 || requests == 0 {
+        return Err(eyre!("load run needs clients >= 1 and requests >= 1"));
+    }
+    struct ThreadOut {
+        hist: LatencyHistogram,
+        completed: u64,
+        errors: u64,
+        first_error: Option<String>,
+        bytes_out: u64,
+        bytes_in: u64,
+    }
+    let t0 = Instant::now();
+    // lint:allow(D003, load-generator threads are I/O-bound request drivers that must overlap in real time to exercise server concurrency; the compute they trigger runs server-side on the ChunkPool)
+    let outs: Vec<Result<ThreadOut>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|_| {
+                s.spawn(move || -> Result<ThreadOut> {
+                    let mut client = Client::connect(addr)?;
+                    let mut out = ThreadOut {
+                        hist: LatencyHistogram::new(),
+                        completed: 0,
+                        errors: 0,
+                        first_error: None,
+                        bytes_out: 0,
+                        bytes_in: 0,
+                    };
+                    for _ in 0..requests {
+                        let t = Instant::now();
+                        match client.predict(model, query) {
+                            Ok(_) => {
+                                out.hist.record(t.elapsed().as_secs_f64());
+                                out.completed += 1;
+                            }
+                            Err(e) => {
+                                out.errors += 1;
+                                out.first_error.get_or_insert_with(|| e.to_string());
+                            }
+                        }
+                    }
+                    out.bytes_out = client.bytes_out();
+                    out.bytes_in = client.bytes_in();
+                    Ok(out)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(r) => r,
+                Err(_) => Err(eyre!("load-generator thread panicked")),
+            })
+            .collect()
+    });
+    let elapsed_secs = t0.elapsed().as_secs_f64();
+    let mut report = LoadReport {
+        clients,
+        requests_per_client: requests,
+        completed: 0,
+        errors: 0,
+        first_error: None,
+        elapsed_secs,
+        hist: LatencyHistogram::new(),
+        bytes_out: 0,
+        bytes_in: 0,
+    };
+    for out in outs {
+        let out = out?;
+        report.completed += out.completed;
+        report.errors += out.errors;
+        if report.first_error.is_none() {
+            report.first_error = out.first_error;
+        }
+        report.hist.merge(&out.hist);
+        report.bytes_out += out.bytes_out;
+        report.bytes_in += out.bytes_in;
+    }
+    Ok(report)
+}

@@ -1,0 +1,34 @@
+//! `serve::net` — the serving stack's network layer: the `digest
+//! serve` daemon, its `digest-wire-v1` binary protocol, and the
+//! blocking client under `digest query` / `digest bench-serve
+//! --remote`.
+//!
+//! Three modules, `std::net` only (zero new dependencies):
+//!
+//! * [`wire`] — the versioned length-prefixed message codec
+//!   ([`Request`] / [`Response`], byte-exact round trips, per-frame
+//!   size caps, structured `Error` / `Busy` frames).  Transport
+//!   framing lives in [`crate::util::frame`].
+//! * [`server`] — the daemon: non-blocking accept loop +
+//!   thread-per-connection handlers capped at `max_conns` (exact
+//!   [`Response::Busy`] backpressure), compute dispatched through the
+//!   shared [`crate::serve::InferenceEngine`] onto the process
+//!   ChunkPool (concurrent clients ≡ serial predict, bit-exact),
+//!   graceful [`Request::Shutdown`] drain, and hot model rollover by
+//!   polling the training side's `export_best=` file.
+//! * [`client`] — blocking [`Client`] (predict + admin verbs, per-call
+//!   byte accounting) and the [`run_load`] concurrent load generator
+//!   behind the latency-histogram bench.
+//!
+//! The codec and framing layer deliberately know nothing about
+//! serving: they are the seed for the ROADMAP multi-process training
+//! transport, which needs the same length-prefixed frames for
+//! parameter/representation traffic.
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::{is_busy, run_load, Client, LoadReport};
+pub use server::{LoadedModel, Server};
+pub use wire::{ModelInfo, Request, Response, WirePrediction, WireStats, WIRE_VERSION};

@@ -1,0 +1,582 @@
+//! The `digest serve` daemon: a bounded-concurrency TCP front end over
+//! [`ModelRegistry`] + [`InferenceEngine`].
+//!
+//! Architecture (all `std::net`, zero new dependencies):
+//!
+//! * **One non-blocking accept loop** (the thread that calls
+//!   [`Server::run`]).  Between accepts it polls the optional
+//!   `--watch` file for hot model rollover and checks the shutdown
+//!   flag, so the daemon needs no extra timer threads.
+//! * **Thread-per-connection handlers, capped at `max_conns`.**  The
+//!   accept loop increments the active-connection count *before*
+//!   spawning, so the cap is exact: connection `max_conns + 1` gets a
+//!   structured [`Response::Busy`] frame — explicit backpressure, never
+//!   a hang or a silent drop.  Handler threads do blocking socket I/O
+//!   only; **all compute dispatches through the shared
+//!   [`InferenceEngine`]** onto the process-wide
+//!   [`crate::tensor::pool::ChunkPool`], whose submission lock
+//!   serializes chunk fan-outs — concurrent clients therefore get
+//!   answers bit-identical to serial `predict` calls (asserted in
+//!   `tests/integration_net.rs`).
+//! * **Graceful drain on [`Request::Shutdown`]**: the flag flips, the
+//!   accept loop stops accepting, every handler finishes the request it
+//!   is serving (and closes keep-alive connections at the next 100 ms
+//!   read-poll tick), and [`Server::run`] joins them all before
+//!   returning the final counter snapshot.
+//! * **Hot rollover**: when the watched file's (mtime, len) changes —
+//!   the training-side [`crate::serve::ExportBestHook`] rewrites it via
+//!   `util::write_atomic`, so a poll never sees a half-written file —
+//!   the daemon re-reads it through [`ModelRegistry::reload`] (or first
+//!   loads it, if the file did not exist at startup).
+//!
+//! Error policy per the wire docs: application failures are
+//! [`Response::Error`] frames on a connection that stays usable;
+//! framing-level corruption gets a best-effort `Error` frame and a
+//! close, because the byte stream can no longer be trusted.
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant, SystemTime};
+
+use crate::config::ServeConfig;
+use crate::serve::engine::{InferenceEngine, NodeQuery};
+use crate::serve::model::InferenceModel;
+use crate::serve::registry::ModelRegistry;
+use crate::util::frame::{read_frame, write_frame, FrameRead};
+use crate::util::lock_unpoisoned;
+use crate::{eyre, Result};
+
+use super::wire::{
+    ModelInfo, Request, Response, WirePrediction, WireStats, MAX_FRAME, WIRE_VERSION,
+};
+
+/// How long a handler blocks in `read` before re-checking the shutdown
+/// flag; bounds drain latency for idle keep-alive connections.
+const READ_POLL: Duration = Duration::from_millis(100);
+
+/// Accept-loop sleep when no connection is pending.
+const ACCEPT_IDLE: Duration = Duration::from_millis(5);
+
+/// A model plus the file it came from (if any) — file-backed models are
+/// eligible for `Reload` and watch-driven rollover.
+pub struct LoadedModel {
+    pub model: InferenceModel,
+    pub source: Option<String>,
+}
+
+/// Monotonic daemon counters, shared across handler threads.
+#[derive(Default)]
+struct Counters {
+    accepted: AtomicU64,
+    served: AtomicU64,
+    busy_rejected: AtomicU64,
+    app_errors: AtomicU64,
+    frame_errors: AtomicU64,
+    reloads: AtomicU64,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+}
+
+/// State shared between the accept loop and handler threads.
+struct Shared {
+    engine: Arc<InferenceEngine>,
+    /// Registry plus name→source-path map under ONE mutex: handlers
+    /// only hold it long enough to clone a model `Arc` (predict runs
+    /// lock-free); `Reload` holds it across the file re-read so a
+    /// concurrent predict never observes a half-swapped registry.
+    models: Mutex<Models>,
+    shutdown: AtomicBool,
+    active: AtomicUsize,
+    max_conns: usize,
+    counters: Counters,
+}
+
+struct Models {
+    registry: ModelRegistry,
+    /// model name → path it was loaded from (Reload / rollover targets).
+    sources: BTreeMap<String, String>,
+}
+
+impl Shared {
+    fn stats(&self) -> WireStats {
+        let models = lock_unpoisoned(&self.models).registry.len() as u32;
+        WireStats {
+            models,
+            active_conns: self.active.load(Ordering::SeqCst) as u32,
+            max_conns: self.max_conns as u32,
+            accepted: self.counters.accepted.load(Ordering::Relaxed),
+            served: self.counters.served.load(Ordering::Relaxed),
+            busy_rejected: self.counters.busy_rejected.load(Ordering::Relaxed),
+            app_errors: self.counters.app_errors.load(Ordering::Relaxed),
+            frame_errors: self.counters.frame_errors.load(Ordering::Relaxed),
+            reloads: self.counters.reloads.load(Ordering::Relaxed),
+            bytes_in: self.counters.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.counters.bytes_out.load(Ordering::Relaxed),
+            engine: self.engine.stats(),
+        }
+    }
+}
+
+/// Watch-file change detection state: last observed (mtime, len).
+struct Watch {
+    path: String,
+    last: Option<(Option<SystemTime>, u64)>,
+}
+
+impl Watch {
+    fn stat(path: &str) -> Option<(Option<SystemTime>, u64)> {
+        let md = std::fs::metadata(path).ok()?;
+        Some((md.modified().ok(), md.len()))
+    }
+}
+
+/// The daemon; see module docs.  `bind` then `run` (blocking).
+pub struct Server {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    poll_every: Duration,
+    watch: Option<Watch>,
+}
+
+impl Server {
+    /// Validate the config, register (and fingerprint-validate) the
+    /// models, initialise watch state, and bind the listener.  Fails
+    /// fast on a model/graph mismatch rather than erroring per-request.
+    pub fn bind(
+        cfg: &ServeConfig,
+        engine: Arc<InferenceEngine>,
+        models: Vec<LoadedModel>,
+    ) -> Result<Server> {
+        cfg.validate()?;
+        if models.is_empty() {
+            return Err(eyre!("serve: no models to serve"));
+        }
+        let mut registry = ModelRegistry::new();
+        let mut sources = BTreeMap::new();
+        for lm in models {
+            engine.validate_model(&lm.model)?;
+            let name = lm.model.name().to_string();
+            if let Some(path) = lm.source {
+                sources.insert(name.clone(), path);
+            }
+            if registry.get(&name).is_ok() {
+                return Err(eyre!("serve: duplicate model name {name:?}"));
+            }
+            registry.insert(lm.model);
+        }
+        let mut models = Models { registry, sources };
+        let watch = match &cfg.watch {
+            None => None,
+            Some(path) => {
+                let last = Watch::stat(path);
+                if last.is_some() && !models.sources.values().any(|p| p == path) {
+                    // watch target exists but wasn't among the CLI
+                    // models: serve it from the start.
+                    let arc = models.registry.load_file(path)?;
+                    engine.validate_model(&arc)?;
+                    models.sources.insert(arc.name().to_string(), path.clone());
+                }
+                Some(Watch {
+                    path: path.clone(),
+                    last,
+                })
+            }
+        };
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| eyre!("serve: binding {:?}: {e}", cfg.addr))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| eyre!("serve: set_nonblocking: {e}"))?;
+        Ok(Server {
+            listener,
+            shared: Arc::new(Shared {
+                engine,
+                models: Mutex::new(models),
+                shutdown: AtomicBool::new(false),
+                active: AtomicUsize::new(0),
+                max_conns: cfg.max_conns,
+                counters: Counters::default(),
+            }),
+            poll_every: Duration::from_millis(cfg.poll_ms),
+            watch,
+        })
+    }
+
+    /// The bound address — with `--addr 127.0.0.1:0` this is where the
+    /// OS actually put us (ephemeral-port tests).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener
+            .local_addr()
+            .map_err(|e| eyre!("serve: local_addr: {e}"))
+    }
+
+    /// Serve until a `Shutdown` request: accept → handler threads,
+    /// watch polling in the idle gaps, then a full drain (every handler
+    /// joined) before returning the final counters.
+    pub fn run(mut self) -> Result<WireStats> {
+        let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        let mut last_poll = Instant::now();
+        while !self.shared.shutdown.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let id = self.shared.counters.accepted.fetch_add(1, Ordering::Relaxed);
+                    let _ = stream.set_nonblocking(false);
+                    let _ = stream.set_nodelay(true);
+                    if self.shared.active.load(Ordering::SeqCst) >= self.shared.max_conns {
+                        self.shared
+                            .counters
+                            .busy_rejected
+                            .fetch_add(1, Ordering::Relaxed);
+                        reject_busy(stream, &self.shared);
+                        continue;
+                    }
+                    self.shared.active.fetch_add(1, Ordering::SeqCst);
+                    let shared = self.shared.clone();
+                    let spawned = std::thread::Builder::new()
+                        .name(format!("digest-serve-{id}"))
+                        .spawn(move || handle_conn(stream, shared));
+                    match spawned {
+                        Ok(h) => handles.push(h),
+                        Err(e) => {
+                            // undo the reservation; the client sees a close
+                            self.shared.active.fetch_sub(1, Ordering::SeqCst);
+                            eprintln!("[serve] spawning handler: {e}");
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if self.watch.is_some() && last_poll.elapsed() >= self.poll_every {
+                        self.poll_watch();
+                        last_poll = Instant::now();
+                    }
+                    std::thread::sleep(ACCEPT_IDLE);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    // transient accept failure (e.g. EMFILE): log, back
+                    // off, keep serving existing connections
+                    eprintln!("[serve] accept: {e}");
+                    std::thread::sleep(ACCEPT_IDLE);
+                }
+            }
+            handles.retain(|h| !h.is_finished());
+        }
+        // Drain: stop accepting (listener drops with self at return),
+        // let every in-flight handler finish its current request.
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(self.shared.stats())
+    }
+
+    /// Watch-file poll: on (mtime, len) change, reload the model that
+    /// was loaded from that path — or load the file fresh if it has
+    /// just appeared.  Failures warn and keep the old model serving.
+    fn poll_watch(&mut self) {
+        let Some(watch) = self.watch.as_mut() else {
+            return;
+        };
+        let cur = Watch::stat(&watch.path);
+        if cur.is_none() || cur == watch.last {
+            return;
+        }
+        // remember what we saw even if the load fails, so a bad file
+        // warns once instead of once per poll tick
+        watch.last = cur;
+        match reload_path(&self.shared, &watch.path) {
+            Ok(name) => {
+                self.shared.counters.reloads.fetch_add(1, Ordering::Relaxed);
+                println!("[serve] rollover: reloaded {name:?} from {}", watch.path);
+            }
+            Err(e) => eprintln!("[serve] rollover failed for {}: {e}", watch.path),
+        }
+    }
+}
+
+/// Reload the model loaded from `path` (registering it first if the
+/// file is new), re-keying the source map if the artifact was renamed.
+/// Returns the (possibly new) model name.
+fn reload_path(shared: &Shared, path: &str) -> Result<String> {
+    let mut models = lock_unpoisoned(&shared.models);
+    let known = models
+        .sources
+        .iter()
+        .find(|(_, p)| p.as_str() == path)
+        .map(|(name, _)| name.clone());
+    let arc = match &known {
+        Some(name) => models.registry.reload(name, path)?,
+        None => models.registry.load_file(path)?,
+    };
+    shared.engine.validate_model(&arc)?;
+    let new_name = arc.name().to_string();
+    if known.as_deref() != Some(new_name.as_str()) {
+        if let Some(old) = known {
+            models.sources.remove(&old);
+        }
+    }
+    models.sources.insert(new_name.clone(), path.to_string());
+    Ok(new_name)
+}
+
+/// Best-effort `Busy` frame to a connection over the cap, then close.
+fn reject_busy(mut stream: TcpStream, shared: &Shared) {
+    let _ = stream.set_write_timeout(Some(READ_POLL));
+    let busy = Response::Busy {
+        active: shared.active.load(Ordering::SeqCst) as u32,
+        max: shared.max_conns as u32,
+    };
+    if let Ok((op, payload)) = busy.encode() {
+        if let Ok(n) = write_frame(&mut stream, op, &payload) {
+            shared.counters.bytes_out.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Decrements the active-connection count when the handler exits —
+/// including by panic, so a crashed handler can never leak a
+/// connection slot and wedge the daemon at `Busy`.
+struct ActiveGuard(Arc<Shared>);
+
+impl Drop for ActiveGuard {
+    fn drop(&mut self) {
+        self.0.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// One connection's request→response loop.
+fn handle_conn(mut stream: TcpStream, shared: Arc<Shared>) {
+    let _guard = ActiveGuard(shared.clone());
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    let mut hello_done = false;
+    loop {
+        let (opcode, payload) = match read_frame(&mut stream, MAX_FRAME) {
+            Ok(FrameRead::Frame(op, p)) => (op, p),
+            Ok(FrameRead::Closed) => return,
+            Ok(FrameRead::TimedOut) => {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return; // drain: close idle keep-alive connections
+                }
+                continue;
+            }
+            Err(e) => {
+                // framing broke: answer (best effort), then close —
+                // the stream is no longer at a trustable boundary
+                shared.counters.frame_errors.fetch_add(1, Ordering::Relaxed);
+                send(
+                    &mut stream,
+                    &shared,
+                    &Response::Error {
+                        message: format!("framing error: {e}"),
+                    },
+                );
+                return;
+            }
+        };
+        shared
+            .counters
+            .bytes_in
+            .fetch_add(5 + payload.len() as u64, Ordering::Relaxed);
+
+        let request = match Request::decode(opcode, &payload) {
+            Ok(req) => req,
+            Err(e) => {
+                // the frame boundary is intact — reply and keep serving
+                shared.counters.app_errors.fetch_add(1, Ordering::Relaxed);
+                if !send(
+                    &mut stream,
+                    &shared,
+                    &Response::Error {
+                        message: format!("bad request: {e}"),
+                    },
+                ) {
+                    return;
+                }
+                continue;
+            }
+        };
+
+        // handshake gate: the first frame must be a version-matched
+        // Hello; anything else means the peer speaks another protocol
+        // (or version), so its payload layouts cannot be trusted
+        if !hello_done {
+            match &request {
+                Request::Hello { version } if version == WIRE_VERSION => {}
+                Request::Hello { version } => {
+                    shared.counters.app_errors.fetch_add(1, Ordering::Relaxed);
+                    send(
+                        &mut stream,
+                        &shared,
+                        &Response::Error {
+                            message: format!(
+                                "version mismatch: client {version:?}, server {WIRE_VERSION:?}"
+                            ),
+                        },
+                    );
+                    return;
+                }
+                _ => {
+                    shared.counters.app_errors.fetch_add(1, Ordering::Relaxed);
+                    send(
+                        &mut stream,
+                        &shared,
+                        &Response::Error {
+                            message: format!("expected {WIRE_VERSION:?} Hello handshake first"),
+                        },
+                    );
+                    return;
+                }
+            }
+            hello_done = true;
+        }
+
+        let shutting_down = matches!(request, Request::Shutdown);
+        let response = dispatch(&shared, request);
+        if matches!(response, Response::Error { .. }) {
+            shared.counters.app_errors.fetch_add(1, Ordering::Relaxed);
+        }
+        if !send(&mut stream, &shared, &response) {
+            return;
+        }
+        if shutting_down {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            return;
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return; // drain: this request was in flight, it completed
+        }
+    }
+}
+
+/// Encode + write one response, tracking bytes; false = connection gone.
+fn send(stream: &mut TcpStream, shared: &Shared, resp: &Response) -> bool {
+    let (op, payload) = match resp.encode() {
+        Ok(x) => x,
+        Err(e) => {
+            // encoding failure (e.g. >u32 shape): degrade to an Error
+            // frame rather than dropping the connection
+            match (Response::Error {
+                message: format!("encoding response: {e}"),
+            })
+            .encode()
+            {
+                Ok(x) => x,
+                Err(_) => return false,
+            }
+        }
+    };
+    match write_frame(stream, op, &payload) {
+        Ok(n) => {
+            shared.counters.bytes_out.fetch_add(n, Ordering::Relaxed);
+            true
+        }
+        Err(_) => false,
+    }
+}
+
+/// Map one decoded request to its response.  Never panics; every
+/// failure is a structured [`Response::Error`].
+fn dispatch(shared: &Shared, request: Request) -> Response {
+    match request {
+        Request::Hello { .. } => Response::HelloOk {
+            version: WIRE_VERSION.to_string(),
+        },
+        Request::Predict {
+            model,
+            nodes,
+            top_k,
+        } => {
+            let arc = {
+                let models = lock_unpoisoned(&shared.models);
+                models.registry.get(&model)
+            };
+            let arc = match arc {
+                Ok(a) => a,
+                Err(e) => {
+                    return Response::Error {
+                        message: e.to_string(),
+                    }
+                }
+            };
+            let query = match nodes {
+                None => NodeQuery::full(),
+                Some(ids) => NodeQuery::nodes(ids.into_iter().map(|n| n as usize).collect()),
+            }
+            .with_top_k(top_k as usize);
+            // compute runs on the shared ChunkPool via the engine; the
+            // registry lock is already released
+            match shared
+                .engine
+                .predict(&arc, &query)
+                .and_then(|p| WirePrediction::from_prediction(&p))
+            {
+                Ok(wp) => {
+                    shared.counters.served.fetch_add(1, Ordering::Relaxed);
+                    Response::Prediction(wp)
+                }
+                Err(e) => Response::Error {
+                    message: e.to_string(),
+                },
+            }
+        }
+        Request::ListModels => {
+            let models = lock_unpoisoned(&shared.models);
+            let infos: Result<Vec<ModelInfo>> = models
+                .registry
+                .list()
+                .into_iter()
+                .map(ModelInfo::from_model)
+                .collect();
+            match infos {
+                Ok(list) => Response::ModelList(list),
+                Err(e) => Response::Error {
+                    message: e.to_string(),
+                },
+            }
+        }
+        Request::Reload { name } => {
+            let targets: Vec<String> = {
+                let models = lock_unpoisoned(&shared.models);
+                if name.is_empty() {
+                    models.sources.values().cloned().collect()
+                } else {
+                    match models.sources.get(&name) {
+                        Some(path) => vec![path.clone()],
+                        None => {
+                            return Response::Error {
+                                message: format!(
+                                    "model {name:?} was not loaded from a file (cannot reload)"
+                                ),
+                            }
+                        }
+                    }
+                }
+            };
+            if targets.is_empty() {
+                return Response::Error {
+                    message: "no file-backed models to reload".to_string(),
+                };
+            }
+            let mut reloaded = Vec::with_capacity(targets.len());
+            for path in targets {
+                match reload_path(shared, &path) {
+                    Ok(name) => reloaded.push(name),
+                    Err(e) => {
+                        return Response::Error {
+                            message: format!("reloading {path:?}: {e}"),
+                        }
+                    }
+                }
+            }
+            shared
+                .counters
+                .reloads
+                .fetch_add(reloaded.len() as u64, Ordering::Relaxed);
+            Response::ReloadOk { reloaded }
+        }
+        Request::Stats => Response::Stats(shared.stats()),
+        Request::Shutdown => Response::ShutdownOk,
+    }
+}

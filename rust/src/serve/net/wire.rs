@@ -1,0 +1,830 @@
+//! `digest-wire-v1` — the serve daemon's versioned binary message codec.
+//!
+//! Transport framing comes from [`crate::util::frame`]: every message is
+//! one `u32 LE length + u8 opcode + payload` frame, capped at
+//! [`MAX_FRAME`].  This module defines what the opcodes and payloads
+//! *mean*: the [`Request`] / [`Response`] enums and their byte-exact
+//! encode/decode.
+//!
+//! Protocol rules (enforced by `server.rs` / `client.rs`):
+//!
+//! * A connection opens with a version handshake — the client's first
+//!   frame must be [`Request::Hello`] carrying [`WIRE_VERSION`]; any
+//!   mismatch gets a structured [`Response::Error`] and a close, since
+//!   payload layouts cannot be trusted across versions.
+//! * After the handshake the connection is a sequential
+//!   request→response loop (no pipelining in v1).
+//! * Application-level failures (unknown model, bad node id, version
+//!   skew on `Reload`) are [`Response::Error`] frames; the connection
+//!   stays usable.  Only *framing*-level corruption (oversized length
+//!   prefix, truncated frame) closes a connection — after a best-effort
+//!   `Error` frame, never silently.
+//! * A server at its connection cap answers with [`Response::Busy`]
+//!   before closing — backpressure is explicit, not a hang.
+//!
+//! All numbers are little-endian; floats travel as IEEE-754 bit
+//! patterns, so a remote [`Prediction`] is **bit-identical** to the
+//! in-process one (asserted in `tests/integration_net.rs`).  Every
+//! decoder finishes with [`ByteReader::finish`], so trailing garbage is
+//! rejected, and every message round-trips byte-exactly (unit tests
+//! below cover each variant plus truncation/oversize rejection).
+
+use crate::serve::engine::{EngineStats, NodeQuery, Prediction};
+use crate::serve::model::InferenceModel;
+use crate::tensor::Matrix;
+use crate::util::frame::{put_f32, put_f64, put_str, put_u32, put_u64, put_u8, ByteReader};
+use crate::{eyre, Result};
+
+/// Protocol identity exchanged in the `Hello` handshake.
+pub const WIRE_VERSION: &str = "digest-wire-v1";
+
+/// Per-frame size cap for this protocol (re-exported from the frame
+/// layer; both sides enforce it on read *and* write).
+pub const MAX_FRAME: u32 = crate::util::frame::MAX_FRAME;
+
+// Request opcodes (client → server).
+pub const OP_HELLO: u8 = 0x00;
+pub const OP_PREDICT: u8 = 0x01;
+pub const OP_LIST_MODELS: u8 = 0x02;
+pub const OP_RELOAD: u8 = 0x03;
+pub const OP_STATS: u8 = 0x04;
+pub const OP_SHUTDOWN: u8 = 0x05;
+
+// Response opcodes (server → client): request opcode | 0x80, plus the
+// two out-of-band replies `Busy` and `Error`.
+pub const OP_HELLO_OK: u8 = 0x80;
+pub const OP_PREDICTION: u8 = 0x81;
+pub const OP_MODEL_LIST: u8 = 0x82;
+pub const OP_RELOAD_OK: u8 = 0x83;
+pub const OP_STATS_REPLY: u8 = 0x84;
+pub const OP_SHUTDOWN_OK: u8 = 0x85;
+pub const OP_BUSY: u8 = 0x7E;
+pub const OP_ERROR: u8 = 0x7F;
+
+/// Client → server messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Version handshake; must be the first frame on a connection.
+    Hello { version: String },
+    /// Run inference: `model` by registry name, `nodes` None = full
+    /// graph, `top_k` 0 = no per-node score lists.
+    Predict {
+        model: String,
+        nodes: Option<Vec<u32>>,
+        top_k: u32,
+    },
+    /// List every model the registry currently serves.
+    ListModels,
+    /// Re-read model files from disk: `name` names one model, empty
+    /// string = every model that was loaded from a file.
+    Reload { name: String },
+    /// Engine + server counters.
+    Stats,
+    /// Graceful drain: in-flight requests complete, listener closes.
+    Shutdown,
+}
+
+/// Server → client messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    HelloOk { version: String },
+    Prediction(WirePrediction),
+    ModelList(Vec<ModelInfo>),
+    ReloadOk { reloaded: Vec<String> },
+    Stats(WireStats),
+    ShutdownOk,
+    /// Connection cap reached: `active`/`max` handler slots in use.
+    Busy { active: u32, max: u32 },
+    /// Application-level failure; the connection stays usable unless
+    /// the *framing* itself broke.
+    Error { message: String },
+}
+
+/// A [`Prediction`] in wire form (u32 ids, logits as f32 bit patterns).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WirePrediction {
+    pub model: String,
+    pub n_class: u32,
+    pub nodes: Vec<u32>,
+    pub classes: Vec<u32>,
+    /// Row-major `nodes.len() × n_class` logits.
+    pub logits: Vec<f32>,
+    /// Per node: `k` (class, score) pairs, best first; empty if the
+    /// query asked for no top-k.
+    pub top_k: Vec<Vec<(u32, f32)>>,
+}
+
+/// One registry entry in a [`Response::ModelList`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelInfo {
+    pub name: String,
+    pub dataset: String,
+    pub kind: String,
+    pub dims: Vec<u32>,
+    pub epoch: u64,
+    pub val_f1: f64,
+    pub graph_fingerprint: u64,
+}
+
+/// Engine + server counters in a [`Response::Stats`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct WireStats {
+    pub models: u32,
+    pub active_conns: u32,
+    pub max_conns: u32,
+    pub accepted: u64,
+    pub served: u64,
+    pub busy_rejected: u64,
+    pub app_errors: u64,
+    pub frame_errors: u64,
+    pub reloads: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub engine: EngineStats,
+}
+
+impl Request {
+    /// Encode to `(opcode, payload)`.
+    pub fn encode(&self) -> Result<(u8, Vec<u8>)> {
+        let mut p = Vec::new();
+        let op = match self {
+            Request::Hello { version } => {
+                put_str(&mut p, version)?;
+                OP_HELLO
+            }
+            Request::Predict {
+                model,
+                nodes,
+                top_k,
+            } => {
+                put_str(&mut p, model)?;
+                match nodes {
+                    None => put_u8(&mut p, 0),
+                    Some(ids) => {
+                        put_u8(&mut p, 1);
+                        put_u32(&mut p, u32_len(ids.len(), "node list")?);
+                        for &id in ids {
+                            put_u32(&mut p, id);
+                        }
+                    }
+                }
+                put_u32(&mut p, *top_k);
+                OP_PREDICT
+            }
+            Request::ListModels => OP_LIST_MODELS,
+            Request::Reload { name } => {
+                put_str(&mut p, name)?;
+                OP_RELOAD
+            }
+            Request::Stats => OP_STATS,
+            Request::Shutdown => OP_SHUTDOWN,
+        };
+        Ok((op, p))
+    }
+
+    /// Decode from `(opcode, payload)`; rejects unknown opcodes,
+    /// truncation, and trailing bytes.
+    pub fn decode(opcode: u8, payload: &[u8]) -> Result<Request> {
+        let mut r = ByteReader::new(payload);
+        let req = match opcode {
+            OP_HELLO => Request::Hello { version: r.str()? },
+            OP_PREDICT => {
+                let model = r.str()?;
+                let nodes = match r.u8()? {
+                    0 => None,
+                    1 => {
+                        let n = r.u32()? as usize;
+                        let mut ids = Vec::with_capacity(n.min(payload.len() / 4 + 1));
+                        for _ in 0..n {
+                            ids.push(r.u32()?);
+                        }
+                        Some(ids)
+                    }
+                    tag => return Err(eyre!("bad node-scope tag {tag} in Predict")),
+                };
+                let top_k = r.u32()?;
+                Request::Predict {
+                    model,
+                    nodes,
+                    top_k,
+                }
+            }
+            OP_LIST_MODELS => Request::ListModels,
+            OP_RELOAD => Request::Reload { name: r.str()? },
+            OP_STATS => Request::Stats,
+            OP_SHUTDOWN => Request::Shutdown,
+            op => return Err(eyre!("unknown request opcode {op:#04x}")),
+        };
+        r.finish()?;
+        Ok(req)
+    }
+}
+
+impl Response {
+    /// Encode to `(opcode, payload)`.
+    pub fn encode(&self) -> Result<(u8, Vec<u8>)> {
+        let mut p = Vec::new();
+        let op = match self {
+            Response::HelloOk { version } => {
+                put_str(&mut p, version)?;
+                OP_HELLO_OK
+            }
+            Response::Prediction(wp) => {
+                wp.encode_into(&mut p)?;
+                OP_PREDICTION
+            }
+            Response::ModelList(models) => {
+                put_u32(&mut p, u32_len(models.len(), "model list")?);
+                for m in models {
+                    m.encode_into(&mut p)?;
+                }
+                OP_MODEL_LIST
+            }
+            Response::ReloadOk { reloaded } => {
+                put_u32(&mut p, u32_len(reloaded.len(), "reload list")?);
+                for name in reloaded {
+                    put_str(&mut p, name)?;
+                }
+                OP_RELOAD_OK
+            }
+            Response::Stats(s) => {
+                s.encode_into(&mut p);
+                OP_STATS_REPLY
+            }
+            Response::ShutdownOk => OP_SHUTDOWN_OK,
+            Response::Busy { active, max } => {
+                put_u32(&mut p, *active);
+                put_u32(&mut p, *max);
+                OP_BUSY
+            }
+            Response::Error { message } => {
+                put_str(&mut p, message)?;
+                OP_ERROR
+            }
+        };
+        Ok((op, p))
+    }
+
+    /// Decode from `(opcode, payload)`; rejects unknown opcodes,
+    /// truncation, and trailing bytes.
+    pub fn decode(opcode: u8, payload: &[u8]) -> Result<Response> {
+        let mut r = ByteReader::new(payload);
+        let resp = match opcode {
+            OP_HELLO_OK => Response::HelloOk { version: r.str()? },
+            OP_PREDICTION => Response::Prediction(WirePrediction::decode_from(&mut r)?),
+            OP_MODEL_LIST => {
+                let n = r.u32()? as usize;
+                let mut models = Vec::with_capacity(n.min(1024));
+                for _ in 0..n {
+                    models.push(ModelInfo::decode_from(&mut r)?);
+                }
+                Response::ModelList(models)
+            }
+            OP_RELOAD_OK => {
+                let n = r.u32()? as usize;
+                let mut reloaded = Vec::with_capacity(n.min(1024));
+                for _ in 0..n {
+                    reloaded.push(r.str()?);
+                }
+                Response::ReloadOk { reloaded }
+            }
+            OP_STATS_REPLY => Response::Stats(WireStats::decode_from(&mut r)?),
+            OP_SHUTDOWN_OK => Response::ShutdownOk,
+            OP_BUSY => Response::Busy {
+                active: r.u32()?,
+                max: r.u32()?,
+            },
+            OP_ERROR => Response::Error { message: r.str()? },
+            op => return Err(eyre!("unknown response opcode {op:#04x}")),
+        };
+        r.finish()?;
+        Ok(resp)
+    }
+}
+
+impl WirePrediction {
+    /// Lower an engine [`Prediction`] to wire form.  Fails only on
+    /// shape inconsistencies that would corrupt the frame (node ids
+    /// beyond u32, ragged top-k rows) — never silently truncates.
+    pub fn from_prediction(p: &Prediction) -> Result<WirePrediction> {
+        let n_class = u32_len(p.logits.cols, "class count")?;
+        let nodes = p
+            .nodes
+            .iter()
+            .map(|&n| u32_len(n, "node id"))
+            .collect::<Result<Vec<u32>>>()?;
+        let classes = p
+            .classes
+            .iter()
+            .map(|&c| u32_len(c, "class id"))
+            .collect::<Result<Vec<u32>>>()?;
+        if p.logits.rows != nodes.len() || classes.len() != nodes.len() {
+            return Err(eyre!(
+                "inconsistent prediction shapes: {} nodes, {} logit rows, {} classes",
+                nodes.len(),
+                p.logits.rows,
+                classes.len()
+            ));
+        }
+        let k = p.top_k.first().map_or(0, Vec::len);
+        let mut top_k = Vec::with_capacity(p.top_k.len());
+        for row in &p.top_k {
+            if row.len() != k {
+                return Err(eyre!("ragged top-k rows ({} vs {k})", row.len()));
+            }
+            top_k.push(
+                row.iter()
+                    .map(|&(c, s)| Ok((u32_len(c, "top-k class")?, s)))
+                    .collect::<Result<Vec<(u32, f32)>>>()?,
+            );
+        }
+        if !top_k.is_empty() && top_k.len() != nodes.len() {
+            return Err(eyre!(
+                "top-k rows ({}) != nodes ({})",
+                top_k.len(),
+                nodes.len()
+            ));
+        }
+        Ok(WirePrediction {
+            model: p.model.clone(),
+            n_class,
+            nodes,
+            classes,
+            logits: p.logits.data.clone(),
+            top_k,
+        })
+    }
+
+    /// Raise back to the engine type; the logits matrix, classes, and
+    /// top-k lists are bit-identical to what `from_prediction` saw.
+    pub fn into_prediction(self) -> Result<Prediction> {
+        let rows = self.nodes.len();
+        let cols = self.n_class as usize;
+        if self.logits.len() != rows * cols {
+            return Err(eyre!(
+                "logits length {} != {rows} nodes x {cols} classes",
+                self.logits.len()
+            ));
+        }
+        if self.classes.len() != rows || (!self.top_k.is_empty() && self.top_k.len() != rows) {
+            return Err(eyre!("prediction field lengths disagree"));
+        }
+        Ok(Prediction {
+            model: self.model,
+            nodes: self.nodes.into_iter().map(|n| n as usize).collect(),
+            logits: Matrix::from_vec(rows, cols, self.logits),
+            classes: self.classes.into_iter().map(|c| c as usize).collect(),
+            top_k: self
+                .top_k
+                .into_iter()
+                .map(|row| row.into_iter().map(|(c, s)| (c as usize, s)).collect())
+                .collect(),
+        })
+    }
+
+    fn encode_into(&self, p: &mut Vec<u8>) -> Result<()> {
+        put_str(p, &self.model)?;
+        let n = u32_len(self.nodes.len(), "node count")?;
+        if self.classes.len() != self.nodes.len()
+            || self.logits.len() != self.nodes.len() * self.n_class as usize
+            || (!self.top_k.is_empty() && self.top_k.len() != self.nodes.len())
+        {
+            return Err(eyre!("inconsistent wire-prediction shapes"));
+        }
+        let k = self.top_k.first().map_or(0, Vec::len);
+        put_u32(p, n);
+        put_u32(p, self.n_class);
+        put_u32(p, u32_len(k, "top-k")?);
+        for &id in &self.nodes {
+            put_u32(p, id);
+        }
+        for &c in &self.classes {
+            put_u32(p, c);
+        }
+        for &v in &self.logits {
+            put_f32(p, v);
+        }
+        for row in &self.top_k {
+            if row.len() != k {
+                return Err(eyre!("ragged top-k rows ({} vs {k})", row.len()));
+            }
+            for &(c, s) in row {
+                put_u32(p, c);
+                put_f32(p, s);
+            }
+        }
+        Ok(())
+    }
+
+    fn decode_from(r: &mut ByteReader<'_>) -> Result<WirePrediction> {
+        let model = r.str()?;
+        let n = r.u32()? as usize;
+        let n_class = r.u32()?;
+        let k = r.u32()? as usize;
+        // capacity hints are clamped so a lying length prefix cannot
+        // force a huge allocation before the bounds checks trip
+        let mut nodes = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            nodes.push(r.u32()?);
+        }
+        let mut classes = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            classes.push(r.u32()?);
+        }
+        let mut logits = Vec::with_capacity((n * n_class as usize).min(1 << 22));
+        for _ in 0..n * n_class as usize {
+            logits.push(r.f32()?);
+        }
+        let mut top_k = Vec::new();
+        if k > 0 {
+            top_k.reserve(n.min(1 << 20));
+            for _ in 0..n {
+                let mut row = Vec::with_capacity(k.min(1 << 10));
+                for _ in 0..k {
+                    let c = r.u32()?;
+                    let s = r.f32()?;
+                    row.push((c, s));
+                }
+                top_k.push(row);
+            }
+        }
+        Ok(WirePrediction {
+            model,
+            n_class,
+            nodes,
+            classes,
+            logits,
+            top_k,
+        })
+    }
+}
+
+impl ModelInfo {
+    pub fn from_model(m: &InferenceModel) -> Result<ModelInfo> {
+        Ok(ModelInfo {
+            name: m.name().to_string(),
+            dataset: m.dataset().to_string(),
+            kind: m.kind().as_str().to_string(),
+            dims: m
+                .dims()
+                .iter()
+                .map(|&d| u32_len(d, "layer dim"))
+                .collect::<Result<Vec<u32>>>()?,
+            epoch: m.epoch() as u64,
+            val_f1: m.val_f1(),
+            graph_fingerprint: m.graph_fingerprint(),
+        })
+    }
+
+    fn encode_into(&self, p: &mut Vec<u8>) -> Result<()> {
+        put_str(p, &self.name)?;
+        put_str(p, &self.dataset)?;
+        put_str(p, &self.kind)?;
+        put_u32(p, u32_len(self.dims.len(), "dims")?);
+        for &d in &self.dims {
+            put_u32(p, d);
+        }
+        put_u64(p, self.epoch);
+        put_f64(p, self.val_f1);
+        put_u64(p, self.graph_fingerprint);
+        Ok(())
+    }
+
+    fn decode_from(r: &mut ByteReader<'_>) -> Result<ModelInfo> {
+        let name = r.str()?;
+        let dataset = r.str()?;
+        let kind = r.str()?;
+        let nd = r.u32()? as usize;
+        let mut dims = Vec::with_capacity(nd.min(64));
+        for _ in 0..nd {
+            dims.push(r.u32()?);
+        }
+        Ok(ModelInfo {
+            name,
+            dataset,
+            kind,
+            dims,
+            epoch: r.u64()?,
+            val_f1: r.f64()?,
+            graph_fingerprint: r.u64()?,
+        })
+    }
+}
+
+impl WireStats {
+    fn encode_into(&self, p: &mut Vec<u8>) {
+        put_u32(p, self.models);
+        put_u32(p, self.active_conns);
+        put_u32(p, self.max_conns);
+        for v in [
+            self.accepted,
+            self.served,
+            self.busy_rejected,
+            self.app_errors,
+            self.frame_errors,
+            self.reloads,
+            self.bytes_in,
+            self.bytes_out,
+            self.engine.structure_builds,
+            self.engine.scratch_allocs,
+            self.engine.forwards,
+            self.engine.predictions,
+            self.engine.batches,
+        ] {
+            put_u64(p, v);
+        }
+    }
+
+    fn decode_from(r: &mut ByteReader<'_>) -> Result<WireStats> {
+        Ok(WireStats {
+            models: r.u32()?,
+            active_conns: r.u32()?,
+            max_conns: r.u32()?,
+            accepted: r.u64()?,
+            served: r.u64()?,
+            busy_rejected: r.u64()?,
+            app_errors: r.u64()?,
+            frame_errors: r.u64()?,
+            reloads: r.u64()?,
+            bytes_in: r.u64()?,
+            bytes_out: r.u64()?,
+            engine: EngineStats {
+                structure_builds: r.u64()?,
+                scratch_allocs: r.u64()?,
+                forwards: r.u64()?,
+                predictions: r.u64()?,
+                batches: r.u64()?,
+            },
+        })
+    }
+}
+
+/// Build the wire [`Request::Predict`] for an engine-side [`NodeQuery`]
+/// (node ids must fit u32 — the wire format's id width).
+pub fn predict_request(model: &str, q: &NodeQuery) -> Result<Request> {
+    let nodes = q
+        .queried()
+        .map(|ids| {
+            ids.iter()
+                .map(|&n| u32_len(n, "node id"))
+                .collect::<Result<Vec<u32>>>()
+        })
+        .transpose()?;
+    Ok(Request::Predict {
+        model: model.to_string(),
+        nodes,
+        top_k: u32_len(q.top_k(), "top_k")?,
+    })
+}
+
+fn u32_len(n: usize, what: &str) -> Result<u32> {
+    u32::try_from(n).map_err(|_| eyre!("{what} {n} exceeds the wire format's u32 range"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt_request(req: Request) {
+        let (op, payload) = req.encode().unwrap();
+        let back = Request::decode(op, &payload).unwrap();
+        assert_eq!(req, back);
+        // byte-exact: re-encoding the decoded value is identical
+        let (op2, payload2) = back.encode().unwrap();
+        assert_eq!((op, payload), (op2, payload2));
+    }
+
+    fn rt_response(resp: Response) {
+        let (op, payload) = resp.encode().unwrap();
+        let back = Response::decode(op, &payload).unwrap();
+        assert_eq!(resp, back);
+        let (op2, payload2) = back.encode().unwrap();
+        assert_eq!((op, payload), (op2, payload2));
+    }
+
+    fn sample_prediction() -> WirePrediction {
+        WirePrediction {
+            model: "karate-gcn".into(),
+            n_class: 3,
+            nodes: vec![0, 5, 33],
+            classes: vec![2, 0, 1],
+            logits: vec![
+                0.1, -0.5, 2.25, 1.0, 0.0, -0.0, f32::MIN_POSITIVE, 3.5, -7.125,
+            ],
+            top_k: vec![
+                vec![(2, 2.25), (0, 0.1)],
+                vec![(0, 1.0), (1, 0.0)],
+                vec![(1, 3.5), (0, f32::MIN_POSITIVE)],
+            ],
+        }
+    }
+
+    #[test]
+    fn every_request_round_trips_byte_exactly() {
+        rt_request(Request::Hello {
+            version: WIRE_VERSION.into(),
+        });
+        rt_request(Request::Predict {
+            model: "karate-gcn".into(),
+            nodes: None,
+            top_k: 0,
+        });
+        rt_request(Request::Predict {
+            model: "m".into(),
+            nodes: Some(vec![0, 1, 2, 4_000_000_000]),
+            top_k: 5,
+        });
+        rt_request(Request::Predict {
+            model: "m".into(),
+            nodes: Some(Vec::new()),
+            top_k: 1,
+        });
+        rt_request(Request::ListModels);
+        rt_request(Request::Reload { name: String::new() });
+        rt_request(Request::Reload {
+            name: "karate-gcn-best".into(),
+        });
+        rt_request(Request::Stats);
+        rt_request(Request::Shutdown);
+    }
+
+    #[test]
+    fn every_response_round_trips_byte_exactly() {
+        rt_response(Response::HelloOk {
+            version: WIRE_VERSION.into(),
+        });
+        rt_response(Response::Prediction(sample_prediction()));
+        // no-top-k prediction
+        let mut p = sample_prediction();
+        p.top_k.clear();
+        rt_response(Response::Prediction(p));
+        rt_response(Response::ModelList(vec![
+            ModelInfo {
+                name: "a".into(),
+                dataset: "karate".into(),
+                kind: "gcn".into(),
+                dims: vec![34, 16, 4],
+                epoch: 7,
+                val_f1: 0.875,
+                graph_fingerprint: 0xFEEDFACE12345678,
+            },
+            ModelInfo {
+                name: "b".into(),
+                dataset: "arxiv-m".into(),
+                kind: "gat".into(),
+                dims: vec![128, 64, 40],
+                epoch: 0,
+                val_f1: f64::NEG_INFINITY,
+                graph_fingerprint: 1,
+            },
+        ]));
+        rt_response(Response::ModelList(Vec::new()));
+        rt_response(Response::ReloadOk {
+            reloaded: vec!["a".into(), "b".into()],
+        });
+        rt_response(Response::Stats(WireStats {
+            models: 2,
+            active_conns: 3,
+            max_conns: 64,
+            accepted: 10,
+            served: 9,
+            busy_rejected: 1,
+            app_errors: 2,
+            frame_errors: 0,
+            reloads: 4,
+            bytes_in: 12345,
+            bytes_out: 67890,
+            engine: EngineStats {
+                structure_builds: 1,
+                scratch_allocs: 2,
+                forwards: 3,
+                predictions: 4,
+                batches: 5,
+            },
+        }));
+        rt_response(Response::ShutdownOk);
+        rt_response(Response::Busy { active: 8, max: 8 });
+        rt_response(Response::Error {
+            message: "no model named \"x\"".into(),
+        });
+    }
+
+    #[test]
+    fn nan_logits_survive_the_wire_bit_exactly() {
+        let mut p = sample_prediction();
+        p.logits[0] = f32::from_bits(0x7FC0_0001); // a specific NaN payload
+        let (op, payload) = Response::Prediction(p.clone()).encode().unwrap();
+        match Response::decode(op, &payload).unwrap() {
+            Response::Prediction(back) => {
+                assert_eq!(back.logits[0].to_bits(), 0x7FC0_0001);
+                assert_eq!(back.logits.len(), p.logits.len());
+            }
+            other => panic!("expected prediction, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_payloads_are_rejected_for_every_type() {
+        let samples: Vec<(u8, Vec<u8>)> = vec![
+            Request::Hello {
+                version: WIRE_VERSION.into(),
+            }
+            .encode()
+            .unwrap(),
+            Request::Predict {
+                model: "m".into(),
+                nodes: Some(vec![1, 2, 3]),
+                top_k: 2,
+            }
+            .encode()
+            .unwrap(),
+            Request::Reload { name: "m".into() }.encode().unwrap(),
+            Response::Prediction(sample_prediction()).encode().unwrap(),
+            Response::Stats(WireStats::default()).encode().unwrap(),
+            Response::Busy { active: 1, max: 2 }.encode().unwrap(),
+            Response::Error {
+                message: "boom".into(),
+            }
+            .encode()
+            .unwrap(),
+        ];
+        for (op, payload) in samples {
+            assert!(!payload.is_empty(), "opcode {op:#04x}");
+            // chop the last byte: decode must fail, not mis-read
+            let cut = &payload[..payload.len() - 1];
+            let req_err = Request::decode(op, cut);
+            let resp_err = Response::decode(op, cut);
+            assert!(
+                req_err.is_err() && resp_err.is_err(),
+                "opcode {op:#04x} accepted a truncated payload"
+            );
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        let (op, mut payload) = Request::Stats.encode().unwrap();
+        payload.push(0xAA);
+        assert!(Request::decode(op, &payload).is_err());
+        let (op, mut payload) = Response::ShutdownOk.encode().unwrap();
+        payload.push(0);
+        assert!(Response::decode(op, &payload).is_err());
+    }
+
+    #[test]
+    fn unknown_opcodes_are_structured_errors() {
+        let err = Request::decode(0x6F, &[]).unwrap_err();
+        assert!(err.to_string().contains("unknown request opcode"), "{err}");
+        let err = Response::decode(0x10, &[]).unwrap_err();
+        assert!(err.to_string().contains("unknown response opcode"), "{err}");
+    }
+
+    #[test]
+    fn predict_request_maps_node_query() {
+        let q = NodeQuery::nodes(vec![3, 1, 4]).with_top_k(2);
+        match predict_request("m", &q).unwrap() {
+            Request::Predict {
+                model,
+                nodes,
+                top_k,
+            } => {
+                assert_eq!(model, "m");
+                assert_eq!(nodes, Some(vec![3, 1, 4]));
+                assert_eq!(top_k, 2);
+            }
+            other => panic!("{other:?}"),
+        }
+        match predict_request("m", &NodeQuery::full()).unwrap() {
+            Request::Predict { nodes, top_k, .. } => {
+                assert_eq!(nodes, None);
+                assert_eq!(top_k, 0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn wire_prediction_conversion_is_lossless() {
+        let wp = sample_prediction();
+        let p = wp.clone().into_prediction().unwrap();
+        assert_eq!(p.nodes, vec![0, 5, 33]);
+        assert_eq!(p.logits.rows, 3);
+        assert_eq!(p.logits.cols, 3);
+        let back = WirePrediction::from_prediction(&p).unwrap();
+        assert_eq!(wp, back);
+    }
+
+    #[test]
+    fn ragged_top_k_is_refused() {
+        let mut wp = sample_prediction();
+        wp.top_k[1].pop();
+        assert!(wp.encode_into(&mut Vec::new()).is_err());
+    }
+
+    #[test]
+    fn logits_shape_mismatch_is_refused_on_raise() {
+        let mut wp = sample_prediction();
+        wp.logits.pop();
+        assert!(wp.into_prediction().is_err());
+    }
+}

@@ -1,0 +1,418 @@
+//! Length-prefixed binary frame I/O — the transport primitive under
+//! `serve::net`'s `digest-wire-v1` protocol (and the codec seed for the
+//! ROADMAP multi-process training transport).
+//!
+//! A frame on the wire is:
+//!
+//! ```text
+//! u32 LE  length      # bytes that follow: 1 (opcode) + payload.len()
+//! u8      opcode
+//! [u8]    payload
+//! ```
+//!
+//! The length prefix is capped ([`MAX_FRAME`] by default, callers can
+//! tighten it) so a corrupt or hostile peer cannot make a reader
+//! allocate unbounded memory.  All multi-byte primitives everywhere in
+//! the codec are little-endian; floats travel as their IEEE-754 bit
+//! patterns, so values round-trip bit-exactly — the same contract the
+//! rest of the crate holds (checkpoints, fingerprints, predictions).
+//!
+//! [`ByteReader`] and the `put_*` helpers are the bounds-checked
+//! primitive layer message codecs build on: every read is validated
+//! against the remaining payload, strings carry a u32 length and must
+//! be valid UTF-8, and [`ByteReader::finish`] rejects trailing bytes so
+//! a decoded message is exactly its payload — nothing silently ignored.
+
+use std::io::{ErrorKind, Read, Write};
+
+use crate::{eyre, Result};
+
+/// Default cap on the length prefix a reader will accept (64 MiB) —
+/// comfortably above any real prediction frame (a full-graph reddit-m
+/// response is ~20 MiB of logits) while bounding what a corrupt peer
+/// can make us allocate.
+pub const MAX_FRAME: u32 = 64 << 20;
+
+/// Cap on an encoded string's length (names, error messages, paths).
+pub const MAX_STR: usize = 1 << 16;
+
+/// Outcome of one [`read_frame`] call.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameRead {
+    /// A complete frame: opcode + payload.
+    Frame(u8, Vec<u8>),
+    /// The peer closed the connection cleanly at a frame boundary.
+    Closed,
+    /// The socket's read timeout expired before the first byte of a
+    /// frame arrived (only with a read timeout set); no bytes were
+    /// consumed, so the stream is still at a frame boundary.
+    TimedOut,
+}
+
+/// Write one frame and return the bytes put on the wire
+/// (`4 + 1 + payload.len()`).  The frame is assembled into a single
+/// buffer and written with one `write_all`, so a frame is never
+/// interleaved mid-write with another writer's bytes on a duplicated
+/// stream handle.
+pub fn write_frame(w: &mut impl Write, opcode: u8, payload: &[u8]) -> Result<u64> {
+    let body = payload.len() as u64 + 1;
+    if body > MAX_FRAME as u64 {
+        return Err(eyre!(
+            "frame payload of {} bytes exceeds the {} byte cap",
+            payload.len(),
+            MAX_FRAME
+        ));
+    }
+    let mut buf = Vec::with_capacity(5 + payload.len());
+    buf.extend_from_slice(&(body as u32).to_le_bytes());
+    buf.push(opcode);
+    buf.extend_from_slice(payload);
+    w.write_all(&buf)
+        .map_err(|e| eyre!("writing {} byte frame: {e}", buf.len()))?;
+    Ok(buf.len() as u64)
+}
+
+/// Read one frame, enforcing `max_len` on the length prefix.
+///
+/// Distinguishes a clean close (EOF before any length byte →
+/// [`FrameRead::Closed`]) and a first-byte timeout ([`FrameRead::TimedOut`],
+/// for sockets with a read timeout set) from mid-frame truncation,
+/// oversized prefixes, and I/O errors, which are all hard `Err`s — once
+/// a frame is partially consumed the stream can no longer be trusted to
+/// be at a boundary.
+pub fn read_frame(r: &mut impl Read, max_len: u32) -> Result<FrameRead> {
+    let mut len4 = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len4[got..]) {
+            Ok(0) if got == 0 => return Ok(FrameRead::Closed),
+            Ok(0) => return Err(eyre!("peer closed mid-frame ({got}/4 length bytes)")),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e)
+                if got == 0
+                    && matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) =>
+            {
+                return Ok(FrameRead::TimedOut);
+            }
+            Err(e) => return Err(eyre!("reading frame length: {e}")),
+        }
+    }
+    let len = u32::from_le_bytes(len4);
+    if len == 0 {
+        return Err(eyre!("zero-length frame (missing opcode)"));
+    }
+    if len > max_len {
+        return Err(eyre!("frame of {len} bytes exceeds the {max_len} byte cap"));
+    }
+    let mut body = vec![0u8; len as usize];
+    read_exact_uninterrupted(r, &mut body)
+        .map_err(|e| eyre!("reading {len} byte frame body: {e}"))?;
+    let opcode = body[0];
+    body.copy_within(1.., 0);
+    body.truncate(len as usize - 1);
+    Ok(FrameRead::Frame(opcode, body))
+}
+
+/// `read_exact` that retries `Interrupted` but treats a timeout
+/// mid-body as the hard error it is (the stream has lost frame sync).
+fn read_exact_uninterrupted(r: &mut impl Read, buf: &mut [u8]) -> std::io::Result<()> {
+    let mut at = 0usize;
+    while at < buf.len() {
+        match r.read(&mut buf[at..]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    ErrorKind::UnexpectedEof,
+                    format!("peer closed after {at}/{} body bytes", buf.len()),
+                ))
+            }
+            Ok(n) => at += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+// ---- primitive encode helpers ------------------------------------------
+
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// f32 as its IEEE-754 bit pattern (bit-exact round trip).
+pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// f64 as its IEEE-754 bit pattern (bit-exact round trip).
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// u32 length + UTF-8 bytes; errors above [`MAX_STR`].
+pub fn put_str(out: &mut Vec<u8>, s: &str) -> Result<()> {
+    if s.len() > MAX_STR {
+        return Err(eyre!("string of {} bytes exceeds the {MAX_STR} byte cap", s.len()));
+    }
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+    Ok(())
+}
+
+// ---- bounds-checked payload reader -------------------------------------
+
+/// Cursor over a message payload; every accessor validates against the
+/// remaining bytes and returns a structured `Err` on truncation.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, at: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.at
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(eyre!(
+                "truncated payload: {what} needs {n} bytes, {} remain",
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1, "u8")?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4, "u32")?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8, "u64")?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// u32 length + UTF-8 bytes, capped at [`MAX_STR`].
+    pub fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        if len > MAX_STR {
+            return Err(eyre!("string of {len} bytes exceeds the {MAX_STR} byte cap"));
+        }
+        let bytes = self.take(len, "string body")?;
+        String::from_utf8(bytes.to_vec()).map_err(|e| eyre!("invalid UTF-8 string: {e}"))
+    }
+
+    /// Reject trailing bytes: a message must consume its payload exactly.
+    pub fn finish(self) -> Result<()> {
+        if self.at != self.buf.len() {
+            return Err(eyre!(
+                "{} trailing bytes after message body",
+                self.buf.len() - self.at
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_round_trips_and_counts_bytes() {
+        let mut buf = Vec::new();
+        let n = write_frame(&mut buf, 0x42, b"hello").unwrap();
+        assert_eq!(n, 4 + 1 + 5);
+        assert_eq!(buf.len() as u64, n);
+        let mut c = Cursor::new(buf);
+        match read_frame(&mut c, MAX_FRAME).unwrap() {
+            FrameRead::Frame(op, payload) => {
+                assert_eq!(op, 0x42);
+                assert_eq!(payload, b"hello");
+            }
+            other => panic!("expected frame, got {other:?}"),
+        }
+        // stream is drained: next read is a clean close
+        assert_eq!(read_frame(&mut c, MAX_FRAME).unwrap(), FrameRead::Closed);
+    }
+
+    #[test]
+    fn empty_payload_frame_round_trips() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 7, b"").unwrap();
+        let mut c = Cursor::new(buf);
+        assert_eq!(
+            read_frame(&mut c, MAX_FRAME).unwrap(),
+            FrameRead::Frame(7, Vec::new())
+        );
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        buf.push(1);
+        let err = read_frame(&mut Cursor::new(buf), MAX_FRAME).unwrap_err();
+        assert!(err.to_string().contains("exceeds"), "{err}");
+        // and a tightened per-call cap applies too
+        let mut small = Vec::new();
+        write_frame(&mut small, 1, &[0u8; 100]).unwrap();
+        let err = read_frame(&mut Cursor::new(small), 16).unwrap_err();
+        assert!(err.to_string().contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn zero_length_frame_is_rejected() {
+        let buf = 0u32.to_le_bytes().to_vec();
+        let err = read_frame(&mut Cursor::new(buf), MAX_FRAME).unwrap_err();
+        assert!(err.to_string().contains("zero-length"), "{err}");
+    }
+
+    #[test]
+    fn truncation_mid_length_and_mid_body_are_errors() {
+        let mut full = Vec::new();
+        write_frame(&mut full, 9, b"abcdef").unwrap();
+        // cut inside the length prefix
+        let err = read_frame(&mut Cursor::new(&full[..2]), MAX_FRAME).unwrap_err();
+        assert!(err.to_string().contains("mid-frame"), "{err}");
+        // cut inside the body
+        let err = read_frame(&mut Cursor::new(&full[..7]), MAX_FRAME).unwrap_err();
+        assert!(err.to_string().contains("frame body"), "{err}");
+    }
+
+    #[test]
+    fn oversized_write_is_refused() {
+        // don't allocate 64 MiB in a unit test: a zero-copy reader over a
+        // fake huge slice isn't possible, so check the boundary math via
+        // the length check (payload.len() + 1 > MAX_FRAME).
+        struct NullWriter;
+        impl std::io::Write for NullWriter {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let big = vec![0u8; MAX_FRAME as usize];
+        let err = write_frame(&mut NullWriter, 1, &big).unwrap_err();
+        assert!(err.to_string().contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn byte_reader_round_trips_primitives_bit_exactly() {
+        let mut out = Vec::new();
+        put_u8(&mut out, 200);
+        put_u32(&mut out, 0xDEADBEEF);
+        put_u64(&mut out, u64::MAX - 1);
+        put_f32(&mut out, -0.0);
+        put_f32(&mut out, f32::NAN);
+        put_f64(&mut out, 1.0 / 3.0);
+        put_str(&mut out, "karate-gcn").unwrap();
+        let mut r = ByteReader::new(&out);
+        assert_eq!(r.u8().unwrap(), 200);
+        assert_eq!(r.u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert!(r.f32().unwrap().is_nan());
+        assert_eq!(r.f64().unwrap().to_bits(), (1.0f64 / 3.0).to_bits());
+        assert_eq!(r.str().unwrap(), "karate-gcn");
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn byte_reader_rejects_truncation_and_trailing_bytes() {
+        let mut out = Vec::new();
+        put_u32(&mut out, 5);
+        let mut r = ByteReader::new(&out);
+        r.u32().unwrap();
+        assert!(r.u8().is_err(), "read past end must fail");
+
+        let mut out = Vec::new();
+        put_u32(&mut out, 1);
+        put_u32(&mut out, 2);
+        let mut r = ByteReader::new(&out);
+        r.u32().unwrap();
+        let err = r.finish().unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn string_caps_apply_both_ways() {
+        let long = "x".repeat(MAX_STR + 1);
+        assert!(put_str(&mut Vec::new(), &long).is_err());
+        // decode side: a length prefix above the cap is refused before
+        // any allocation
+        let mut out = Vec::new();
+        put_u32(&mut out, (MAX_STR + 1) as u32);
+        assert!(ByteReader::new(&out).str().is_err());
+    }
+
+    #[test]
+    fn non_utf8_string_is_a_structured_error() {
+        let mut out = Vec::new();
+        put_u32(&mut out, 2);
+        out.extend_from_slice(&[0xFF, 0xFE]);
+        let err = ByteReader::new(&out).str().unwrap_err();
+        assert!(err.to_string().contains("UTF-8"), "{err}");
+    }
+
+    #[test]
+    fn timeout_surfaces_only_at_frame_boundary() {
+        struct TimeoutReader;
+        impl Read for TimeoutReader {
+            fn read(&mut self, _: &mut [u8]) -> std::io::Result<usize> {
+                Err(std::io::Error::new(ErrorKind::WouldBlock, "timed out"))
+            }
+        }
+        assert_eq!(
+            read_frame(&mut TimeoutReader, MAX_FRAME).unwrap(),
+            FrameRead::TimedOut
+        );
+        // mid-length timeout is a hard error: one good byte, then block
+        struct PartialThenBlock(usize);
+        impl Read for PartialThenBlock {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                if self.0 == 0 {
+                    self.0 = 1;
+                    buf[0] = 9;
+                    Ok(1)
+                } else {
+                    Err(std::io::Error::new(ErrorKind::WouldBlock, "timed out"))
+                }
+            }
+        }
+        assert!(read_frame(&mut PartialThenBlock(0), MAX_FRAME).is_err());
+    }
+}

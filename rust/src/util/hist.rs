@@ -1,0 +1,229 @@
+//! Exact-sample latency histogram for the serving benches.
+//!
+//! Stores every recorded sample (seconds, f64) rather than bucketed
+//! counts: the serve benches record at most a few hundred thousand
+//! samples per run, so exactness is cheap — quantiles are true
+//! order statistics (nearest-rank), not bucket-boundary estimates,
+//! and merging per-thread histograms is lossless concatenation.
+//! Log-spaced buckets exist only for display ([`LatencyHistogram::ascii`]).
+
+/// Collects latency samples; see module docs.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyHistogram {
+    samples: Vec<f64>,
+}
+
+/// Point-in-time summary of a [`LatencyHistogram`]; all values seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HistSummary {
+    pub count: u64,
+    pub mean: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample in seconds.  Non-finite or negative values
+    /// (clock anomalies) are dropped rather than poisoning quantiles.
+    pub fn record(&mut self, secs: f64) {
+        if secs.is_finite() && secs >= 0.0 {
+            self.samples.push(secs);
+        }
+    }
+
+    /// Lossless merge (exact samples, so no bucket-resolution loss).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.samples.len() as u64
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Nearest-rank quantile over the recorded samples (0 if empty).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let sorted = self.sorted();
+        quantile_sorted(&sorted, q)
+    }
+
+    /// Summary statistics; one sort per call, so call once and reuse.
+    pub fn summary(&self) -> HistSummary {
+        let sorted = self.sorted();
+        let n = sorted.len();
+        if n == 0 {
+            return HistSummary {
+                count: 0,
+                mean: 0.0,
+                min: 0.0,
+                p50: 0.0,
+                p90: 0.0,
+                p99: 0.0,
+                max: 0.0,
+            };
+        }
+        HistSummary {
+            count: n as u64,
+            mean: sorted.iter().sum::<f64>() / n as f64,
+            min: sorted[0],
+            p50: quantile_sorted(&sorted, 0.50),
+            p90: quantile_sorted(&sorted, 0.90),
+            p99: quantile_sorted(&sorted, 0.99),
+            max: sorted[n - 1],
+        }
+    }
+
+    /// Compact log₂-bucket bar chart (microsecond-and-up buckets), for
+    /// human-facing bench output.  Deterministic for a given sample set.
+    pub fn ascii(&self, width: usize) -> String {
+        let sorted = self.sorted();
+        if sorted.is_empty() {
+            return String::from("  (no samples)\n");
+        }
+        // bucket i covers [2^i, 2^(i+1)) microseconds; bucket 0 also
+        // absorbs anything below 1us.
+        let bucket_of = |s: f64| -> u32 {
+            let us = s * 1e6;
+            if us < 2.0 {
+                0
+            } else {
+                us.log2().floor() as u32
+            }
+        };
+        let lo = bucket_of(sorted[0]);
+        let hi = bucket_of(sorted[sorted.len() - 1]);
+        let mut counts = vec![0u64; (hi - lo + 1) as usize];
+        for &s in &sorted {
+            counts[(bucket_of(s) - lo) as usize] += 1;
+        }
+        let peak = counts.iter().copied().max().unwrap_or(1).max(1);
+        let mut out = String::new();
+        for (i, &c) in counts.iter().enumerate() {
+            let lo_us = 1u64 << (lo as u64 + i as u64);
+            let bar_w = ((c as f64 / peak as f64) * width as f64).round() as usize;
+            let bar = "#".repeat(bar_w);
+            out.push_str(&format!("  {:>9} | {:<w$} {}\n", fmt_us(lo_us), bar, c, w = width));
+        }
+        out
+    }
+
+    fn sorted(&self) -> Vec<f64> {
+        let mut s = self.samples.clone();
+        // samples are finite by construction (record() filters), so
+        // total_cmp == partial order here; total_cmp keeps this
+        // panic-free either way.
+        s.sort_by(f64::total_cmp);
+        s
+    }
+}
+
+fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let q = q.clamp(0.0, 1.0);
+    // nearest-rank: the ceil(q*n)-th smallest sample (1-indexed)
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+fn fmt_us(us: u64) -> String {
+    if us >= 1_000_000 {
+        format!("{:.1}s", us as f64 / 1e6)
+    } else if us >= 1_000 {
+        format!("{:.1}ms", us as f64 / 1e3)
+    } else {
+        format!("{us}us")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_are_exact_order_statistics() {
+        let mut h = LatencyHistogram::new();
+        // 1..=100 ms, shuffled insertion order must not matter
+        let mut vals: Vec<u64> = (1..=100).collect();
+        vals.rotate_left(37);
+        for v in vals {
+            h.record(v as f64 * 1e-3);
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 100);
+        assert!((s.p50 - 0.050).abs() < 1e-12, "p50={}", s.p50);
+        assert!((s.p90 - 0.090).abs() < 1e-12, "p90={}", s.p90);
+        assert!((s.p99 - 0.099).abs() < 1e-12, "p99={}", s.p99);
+        assert!((s.min - 0.001).abs() < 1e-12);
+        assert!((s.max - 0.100).abs() < 1e-12);
+        assert!((s.mean - 0.0505).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_sample_summary() {
+        let mut h = LatencyHistogram::new();
+        h.record(0.25);
+        let s = h.summary();
+        assert_eq!(s.count, 1);
+        for v in [s.mean, s.min, s.p50, s.p90, s.p99, s.max] {
+            assert!((v - 0.25).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn empty_summary_is_zeroes_not_panics() {
+        let s = LatencyHistogram::new().summary();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p99, 0.0);
+        assert!(LatencyHistogram::new().ascii(40).contains("no samples"));
+    }
+
+    #[test]
+    fn merge_is_lossless() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for i in 0..50 {
+            a.record(i as f64 * 1e-3);
+            b.record((i + 50) as f64 * 1e-3);
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        let mut all = LatencyHistogram::new();
+        for i in 0..100 {
+            all.record(i as f64 * 1e-3);
+        }
+        assert_eq!(merged.summary(), all.summary());
+    }
+
+    #[test]
+    fn non_finite_and_negative_samples_are_dropped() {
+        let mut h = LatencyHistogram::new();
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        h.record(-1.0);
+        h.record(0.5);
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn ascii_renders_buckets() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=64 {
+            h.record(i as f64 * 1e-4); // 0.1ms .. 6.4ms
+        }
+        let art = h.ascii(30);
+        assert!(art.contains('#'));
+        assert!(art.lines().count() >= 2, "expect multiple buckets:\n{art}");
+    }
+}

@@ -375,6 +375,8 @@ mod tests {
     }
 }
 
+pub mod frame;
+pub mod hist;
 pub mod json;
 pub mod prop;
 

@@ -1,0 +1,399 @@
+//! `serve::net` integration tests (ISSUE 7 acceptance):
+//!
+//! * a remote predict over the `digest-wire-v1` TCP protocol is
+//!   **byte-identical** to the in-process `InferenceEngine::predict`;
+//! * 4 concurrent clients hammering one daemon stay bit-stable and
+//!   equal to the serial reference;
+//! * connection `max_conns + 1` gets a structured `Busy` frame
+//!   (explicit backpressure), and the slot frees once a client leaves;
+//! * application errors are `Error` frames on a connection that stays
+//!   usable; framing corruption gets an `Error` frame and a close;
+//! * hot rollover: rewriting the watched model file swaps the served
+//!   weights without restarting the daemon;
+//! * `Shutdown` drains cleanly — `Server::run` returns its counters
+//!   and the listener closes;
+//! * the `run_load` load generator completes with a full histogram and
+//!   non-zero bytes-per-request accounting.
+//!
+//! Every test binds `127.0.0.1:0` (ephemeral port) so they can run in
+//! parallel.  Direct `std::thread` use is fine here: digest-lint scans
+//! `src/` only, and these threads are test clients, not compute.
+
+use std::io::{Read as _, Write as _};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use digest::config::ServeConfig;
+use digest::gnn::{init_params_for_dims, ModelKind};
+use digest::graph::registry::load;
+use digest::serve::net::wire::{OP_ERROR, OP_HELLO_OK, OP_MODEL_LIST};
+use digest::serve::net::{is_busy, run_load, Client, LoadedModel, Request, Server, WIRE_VERSION};
+use digest::serve::{InferenceEngine, InferenceModel, NodeQuery, Prediction};
+use digest::util::frame::{read_frame, write_frame, FrameRead};
+use digest::util::Rng;
+
+fn tmppath(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("digest_net_{tag}.json"))
+}
+
+/// Wrap raw parameters as a sealed model for `engine`'s graph.
+fn seal(engine: &InferenceEngine, name: &str, seed: u64) -> InferenceModel {
+    let dims = [16usize, 8, 4];
+    let mut rng = Rng::new(seed);
+    InferenceModel::new(
+        name,
+        "test",
+        ModelKind::Gcn,
+        engine.ds().name.clone(),
+        0,
+        dims.to_vec(),
+        true,
+        engine.fingerprint(),
+        0,
+        f64::NAN,
+        init_params_for_dims(ModelKind::Gcn, &dims, &mut rng),
+    )
+    .unwrap()
+}
+
+/// Fresh karate engine + one sealed model per (name, seed).
+fn engine_and_models(specs: &[(&str, u64)]) -> (Arc<InferenceEngine>, Vec<InferenceModel>) {
+    let ds = Arc::new(load("karate", 0).unwrap());
+    let engine = Arc::new(InferenceEngine::new(ds));
+    let models = specs.iter().map(|&(n, s)| seal(&engine, n, s)).collect();
+    (engine, models)
+}
+
+type ServerHandle = std::thread::JoinHandle<digest::Result<digest::serve::net::WireStats>>;
+
+/// Bind on an ephemeral port and run the daemon on a test thread.
+fn serve_on(
+    engine: Arc<InferenceEngine>,
+    models: Vec<LoadedModel>,
+    tweak: impl FnOnce(&mut ServeConfig),
+) -> (String, ServerHandle) {
+    let mut cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        ..ServeConfig::default()
+    };
+    tweak(&mut cfg);
+    let server = Server::bind(&cfg, engine, models).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.run());
+    (addr, handle)
+}
+
+fn unsourced(models: Vec<InferenceModel>) -> Vec<LoadedModel> {
+    models
+        .into_iter()
+        .map(|model| LoadedModel {
+            model,
+            source: None,
+        })
+        .collect()
+}
+
+/// Bitwise equality of everything a prediction carries.
+fn assert_bit_identical(got: &Prediction, want: &Prediction, what: &str) {
+    assert_eq!(got.model, want.model, "{what}: model name");
+    assert_eq!(got.nodes, want.nodes, "{what}: node ids");
+    assert_eq!(got.classes, want.classes, "{what}: argmax classes");
+    assert_eq!(got.logits.rows, want.logits.rows, "{what}: logit rows");
+    assert_eq!(got.logits.cols, want.logits.cols, "{what}: logit cols");
+    assert!(
+        got.logits
+            .data
+            .iter()
+            .zip(&want.logits.data)
+            .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "{what}: logits not bit-identical"
+    );
+    assert_eq!(got.top_k.len(), want.top_k.len(), "{what}: top-k rows");
+    for (g, w) in got.top_k.iter().zip(&want.top_k) {
+        assert_eq!(g.len(), w.len(), "{what}: top-k width");
+        for (&(gc, gl), &(wc, wl)) in g.iter().zip(w) {
+            assert_eq!(gc, wc, "{what}: top-k class");
+            assert_eq!(gl.to_bits(), wl.to_bits(), "{what}: top-k logit bits");
+        }
+    }
+}
+
+#[test]
+fn remote_predict_is_byte_identical_to_in_process() {
+    let (engine, models) = engine_and_models(&[("m", 7)]);
+    let reference = models[0].clone();
+    let (addr, server) = serve_on(engine.clone(), unsourced(models), |_| {});
+    for query in [
+        NodeQuery::full(),
+        NodeQuery::full().with_top_k(3),
+        NodeQuery::nodes(vec![0, 5, 17, 33]).with_top_k(2),
+    ] {
+        let want = engine.predict(&reference, &query).unwrap();
+        let mut client = Client::connect(&addr).unwrap();
+        let got = client.predict("m", &query).unwrap();
+        assert_bit_identical(&got, &want, "remote vs in-process");
+        assert!(client.bytes_out() > 0 && client.bytes_in() > 0);
+    }
+    // admin surface over the same wire
+    let mut client = Client::connect(&addr).unwrap();
+    let listing = client.list_models().unwrap();
+    assert_eq!(listing.len(), 1);
+    assert_eq!(listing[0].name, "m");
+    assert_eq!(listing[0].graph_fingerprint, engine.fingerprint());
+    let stats = client.stats().unwrap();
+    assert!(stats.served >= 3, "served={}", stats.served);
+    assert_eq!(stats.models, 1);
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn four_concurrent_clients_are_bit_identical_to_serial_predict() {
+    let (engine, models) = engine_and_models(&[("a", 1), ("b", 2), ("c", 3), ("d", 4)]);
+    let names = ["a", "b", "c", "d"];
+    let query = NodeQuery::full().with_top_k(2);
+    let want: Vec<Prediction> = models
+        .iter()
+        .map(|m| engine.predict(m, &query).unwrap())
+        .collect();
+    let (addr, server) = serve_on(engine, unsourced(models), |cfg| cfg.max_conns = 8);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = names
+            .iter()
+            .enumerate()
+            .map(|(i, name)| {
+                let addr = addr.as_str();
+                let query = &query;
+                let want = &want;
+                s.spawn(move || {
+                    let mut client = Client::connect(addr).unwrap();
+                    for round in 0..5 {
+                        let got = client.predict(name, query).unwrap();
+                        assert_bit_identical(
+                            &got,
+                            &want[i],
+                            &format!("client {i} round {round}"),
+                        );
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    let mut admin = Client::connect(&addr).unwrap();
+    let stats = admin.stats().unwrap();
+    assert_eq!(stats.served, 20, "4 clients x 5 predicts all served");
+    admin.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn busy_backpressure_at_max_conns_and_slot_reuse() {
+    let (engine, models) = engine_and_models(&[("m", 11)]);
+    let (addr, server) = serve_on(engine, unsourced(models), |cfg| cfg.max_conns = 2);
+    let query = NodeQuery::nodes(vec![0, 1]);
+    // two clients fill the cap (a completed predict proves the handler
+    // is live, not merely queued)
+    let mut c1 = Client::connect(&addr).unwrap();
+    let mut c2 = Client::connect(&addr).unwrap();
+    c1.predict("m", &query).unwrap();
+    c2.predict("m", &query).unwrap();
+    // the third gets a structured Busy, not a hang or a silent drop
+    let err = Client::connect(&addr).unwrap_err();
+    assert!(is_busy(&err), "expected Busy, got: {err}");
+    assert!(err.to_string().contains("2/2"), "{err}");
+    // closing one connection frees the slot (handler notices EOF within
+    // its read-poll tick)
+    drop(c1);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut c3 = loop {
+        match Client::connect(&addr) {
+            Ok(c) => break c,
+            Err(e) if is_busy(&e) && Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => panic!("reconnect after slot freed: {e}"),
+        }
+    };
+    c3.predict("m", &query).unwrap();
+    let stats = c3.stats().unwrap();
+    assert!(stats.busy_rejected >= 1, "busy_rejected={}", stats.busy_rejected);
+    c3.shutdown().unwrap();
+    drop(c2);
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn app_errors_keep_the_connection_usable() {
+    let (engine, models) = engine_and_models(&[("m", 5)]);
+    let (addr, server) = serve_on(engine, unsourced(models), |_| {});
+    let mut client = Client::connect(&addr).unwrap();
+    // unknown model: structured server error, connection survives
+    let err = client.predict("nope", &NodeQuery::full()).unwrap_err();
+    assert!(err.to_string().contains("server error"), "{err}");
+    // same connection still serves
+    let pred = client.predict("m", &NodeQuery::full()).unwrap();
+    assert_eq!(pred.model, "m");
+    // unknown opcode on a raw socket: Error frame, connection survives
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let (op, payload) = Request::Hello {
+        version: WIRE_VERSION.to_string(),
+    }
+    .encode()
+    .unwrap();
+    write_frame(&mut raw, op, &payload).unwrap();
+    match read_frame(&mut raw, 1 << 20).unwrap() {
+        FrameRead::Frame(op, _) => assert_eq!(op, OP_HELLO_OK),
+        other => panic!("expected HelloOk, got {other:?}"),
+    }
+    write_frame(&mut raw, 0x55, b"junk").unwrap();
+    match read_frame(&mut raw, 1 << 20).unwrap() {
+        FrameRead::Frame(op, _) => assert_eq!(op, OP_ERROR, "Error frame for unknown opcode"),
+        other => panic!("expected Error frame, got {other:?}"),
+    }
+    // and the raw connection still answers a well-formed request
+    let (op, payload) = Request::ListModels.encode().unwrap();
+    write_frame(&mut raw, op, &payload).unwrap();
+    match read_frame(&mut raw, 1 << 20).unwrap() {
+        FrameRead::Frame(op, _) => assert_eq!(op, OP_MODEL_LIST),
+        other => panic!("expected ModelList, got {other:?}"),
+    }
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn framing_corruption_gets_an_error_frame_then_close() {
+    let (engine, models) = engine_and_models(&[("m", 6)]);
+    let (addr, server) = serve_on(engine, unsourced(models), |_| {});
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // a frame header claiming a body far over the cap: the server must
+    // answer with an Error frame and close — never allocate the claim.
+    // (Only the 4 length bytes go out: the server rejects at the header,
+    // and unread bytes at close would turn the FIN into an RST.)
+    let huge = (1u32 << 30).to_le_bytes();
+    raw.write_all(&huge).unwrap();
+    match read_frame(&mut raw, 1 << 20).unwrap() {
+        FrameRead::Frame(op, body) => {
+            assert_eq!(op, OP_ERROR, "Error frame");
+            assert!(
+                String::from_utf8_lossy(&body).contains("framing"),
+                "framing error message"
+            );
+        }
+        other => panic!("expected Error frame, got {other:?}"),
+    }
+    // ...then EOF: the stream is no longer at a trustable boundary
+    let mut rest = Vec::new();
+    raw.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "no bytes after the close");
+    let mut admin = Client::connect(&addr).unwrap();
+    assert!(admin.stats().unwrap().frame_errors >= 1);
+    admin.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn hot_rollover_follows_the_watched_model_file() {
+    let ds = Arc::new(load("karate", 0).unwrap());
+    let engine = Arc::new(InferenceEngine::new(ds));
+    let v1 = seal(&engine, "live", 21);
+    let v2 = seal(&engine, "live", 22);
+    let path = tmppath("rollover");
+    v1.save(&path).unwrap();
+    let source = path.to_string_lossy().into_owned();
+    let (addr, server) = serve_on(
+        engine.clone(),
+        vec![LoadedModel {
+            model: v1.clone(),
+            source: Some(source.clone()),
+        }],
+        |cfg| {
+            cfg.watch = Some(source.clone());
+            cfg.poll_ms = 25;
+        },
+    );
+    let query = NodeQuery::full();
+    let want_v1 = engine.predict(&v1, &query).unwrap();
+    let want_v2 = engine.predict(&v2, &query).unwrap();
+    let mut client = Client::connect(&addr).unwrap();
+    assert_bit_identical(&client.predict("live", &query).unwrap(), &want_v1, "pre-rollover");
+    // training exports a better model over the same path (atomic write,
+    // as ExportBestHook does); the daemon's watch poll must pick it up
+    std::thread::sleep(Duration::from_millis(50)); // distinct mtime
+    v2.save(&path).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let rolled = loop {
+        let got = client.predict("live", &query).unwrap();
+        let changed = got
+            .logits
+            .data
+            .iter()
+            .zip(&want_v1.logits.data)
+            .any(|(a, b)| a.to_bits() != b.to_bits());
+        if changed {
+            break got;
+        }
+        if Instant::now() >= deadline {
+            panic!("rollover never observed");
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    assert_bit_identical(&rolled, &want_v2, "post-rollover");
+    let stats = client.stats().unwrap();
+    assert!(stats.reloads >= 1, "reloads={}", stats.reloads);
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn shutdown_drains_and_closes_the_listener() {
+    let (engine, models) = engine_and_models(&[("m", 9)]);
+    let (addr, server) = serve_on(engine, unsourced(models), |_| {});
+    let mut client = Client::connect(&addr).unwrap();
+    client.predict("m", &NodeQuery::full()).unwrap();
+    client.shutdown().unwrap();
+    // run() returns the final counters once every handler drained
+    let stats = server.join().unwrap().unwrap();
+    assert!(stats.accepted >= 1);
+    assert_eq!(stats.served, 1);
+    assert_eq!(stats.active_conns, 0, "all handlers drained");
+    // the listener is gone: new connections are refused, not queued
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match Client::connect(&addr) {
+            Err(_) => break,
+            // a connect may still win a race against teardown
+            Ok(_) if Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Ok(_) => panic!("listener still accepting after drain"),
+        }
+    }
+}
+
+#[test]
+fn run_load_reports_full_histogram_and_wire_costs() {
+    let (engine, models) = engine_and_models(&[("m", 13)]);
+    let (addr, server) = serve_on(engine, unsourced(models), |cfg| cfg.max_conns = 8);
+    let query = NodeQuery::nodes(vec![0, 1, 2]).with_top_k(2);
+    let report = run_load(&addr, "m", &query, 3, 7).unwrap();
+    assert_eq!(report.completed, 21, "errors: {:?}", report.first_error);
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.hist.count(), 21);
+    let summary = report.hist.summary();
+    assert!(summary.p50 <= summary.p90 && summary.p90 <= summary.p99);
+    assert!(summary.p99 <= summary.max && summary.max > 0.0);
+    assert!(report.throughput_rps() > 0.0);
+    // wire accounting: every request costs real bytes both ways
+    assert!(report.bytes_out_per_req() > 5.0, "{}", report.bytes_out_per_req());
+    assert!(report.bytes_in_per_req() > 5.0, "{}", report.bytes_in_per_req());
+    let mut admin = Client::connect(&addr).unwrap();
+    admin.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
