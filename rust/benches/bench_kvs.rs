@@ -5,14 +5,14 @@
 #[path = "harness.rs"]
 mod harness;
 
-use digest::kvs::RepStore;
+use digest::kvs::KVStore;
 use digest::tensor::Matrix;
 use harness::{bench, throughput};
 
 fn main() {
     let d = 64; // hidden dim of every dataset config
     for &n_nodes in &[256usize, 1024] {
-        let kvs = RepStore::new(16);
+        let kvs = KVStore::new(16);
         let nodes: Vec<u32> = (0..n_nodes as u32).collect();
         let reps = Matrix::from_fn(n_nodes, d, |r, c| (r * d + c) as f32);
 
@@ -29,7 +29,7 @@ fn main() {
 
     // shard scaling under 4-thread contention
     for &shards in &[1usize, 4, 16] {
-        let kvs = std::sync::Arc::new(RepStore::new(shards));
+        let kvs = std::sync::Arc::new(KVStore::new(shards));
         let r = bench(&format!("kvs contended pull+push, {shards} shards"), || {
             let mut handles = Vec::new();
             for t in 0..4u32 {

@@ -277,6 +277,7 @@ impl TrainSession for LlcgSession<'_> {
             test_f1: test,
             kvs_bytes: 0,
             ps_bytes: self.ps_bytes,
+            wire_bytes: ctx.kvs.wire_bytes(),
         };
         self.points.push(point.clone());
         self.r += 1;
@@ -300,7 +301,7 @@ impl TrainSession for LlcgSession<'_> {
     }
 
     fn snapshot(&self) -> Result<Checkpoint> {
-        let mut state = base_state(self.ctx, "llcg");
+        let mut state = base_state(self.ctx, "llcg")?;
         state.epoch = self.r;
         state.vtime = self.vtime;
         state.ps_bytes = self.ps_bytes;
@@ -332,7 +333,7 @@ impl TrainSession for LlcgSession<'_> {
             best_val_f1: self.best_val,
             total_vtime: self.vtime,
             total_wall: self.t0.elapsed().as_secs_f64(),
-            kvs: self.ctx.kvs.metrics.snapshot(),
+            kvs: self.ctx.kvs.metrics(),
             delay: self.ps.delay_stats(),
             final_params: self.ps.fetch().0,
         })

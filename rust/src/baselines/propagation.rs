@@ -131,11 +131,11 @@ impl TrainSession for PropagationSession<'_> {
             for m in 0..m_parts {
                 let (out, comp) = exec_eval(ctx, &self.workers[m], &param_lits)?;
                 compute_acc[m] += comp;
-                io_acc[m] += push_reps(ctx, &self.workers[m], &out.reps, r as u64);
+                io_acc[m] += push_reps(ctx, &self.workers[m], &out.reps, r as u64)?;
             }
             // ...then all pull the now-fresh halo rows
             for m in 0..m_parts {
-                io_acc[m] += pull_stale(ctx, &mut self.workers[m], r as u64);
+                io_acc[m] += pull_stale(ctx, &mut self.workers[m], r as u64)?;
             }
         }
 
@@ -186,8 +186,9 @@ impl TrainSession for PropagationSession<'_> {
             train_loss: loss_sum / m_parts as f64,
             val_f1: val,
             test_f1: test,
-            kvs_bytes: ctx.kvs.metrics.snapshot().total_bytes(),
+            kvs_bytes: ctx.kvs.metrics().total_bytes(),
             ps_bytes: self.ps_bytes,
+            wire_bytes: ctx.kvs.wire_bytes(),
         };
         self.points.push(point.clone());
         self.r += 1;
@@ -211,7 +212,7 @@ impl TrainSession for PropagationSession<'_> {
     }
 
     fn snapshot(&self) -> Result<Checkpoint> {
-        let mut state = base_state(self.ctx, "dgl");
+        let mut state = base_state(self.ctx, "dgl")?;
         state.epoch = self.r;
         state.vtime = self.vtime;
         state.ps_bytes = self.ps_bytes;
@@ -244,7 +245,7 @@ impl TrainSession for PropagationSession<'_> {
             best_val_f1: self.best_val,
             total_vtime: self.vtime,
             total_wall: self.t0.elapsed().as_secs_f64(),
-            kvs: self.ctx.kvs.metrics.snapshot(),
+            kvs: self.ctx.kvs.metrics(),
             delay: self.ps.delay_stats(),
             final_params: self.ps.fetch().0,
         })

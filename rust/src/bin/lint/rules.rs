@@ -533,7 +533,17 @@ fn check_d002(rel: &str, lexed: &SourceFile, out: &mut Vec<Finding>) {
 ///   submission lock serializes chunk fan-outs — so handler-thread
 ///   count never changes numeric results, which is the invariant this
 ///   rule exists to protect.
-const D003_EXEMPT: &[&str] = &["tensor/pool.rs", "serve/net/server.rs"];
+/// * `coordinator/dist/server.rs` — the `ps-serve` training daemon's
+///   per-worker connection handlers.  Same shape as the serve daemon:
+///   I/O-bound listener threads that block on socket reads, with all
+///   gradient reduction funneled through the slot-ordered
+///   `ParamServer` and epoch bookkeeping under one state lock, so
+///   handler scheduling never changes numeric results.
+const D003_EXEMPT: &[&str] = &[
+    "tensor/pool.rs",
+    "serve/net/server.rs",
+    "coordinator/dist/server.rs",
+];
 
 fn check_d003(rel: &str, lexed: &SourceFile, out: &mut Vec<Finding>) {
     if D003_EXEMPT.contains(&rel) {
@@ -833,6 +843,18 @@ mod tests {
         assert_fires(
             "serve/net/client.rs",
             r#"fn f() { std::thread::scope(|s| {}); }"#,
+            &["D003"],
+        );
+        // the ps-serve training daemon's per-connection handlers are
+        // sanctioned; the wire-speaking client/worker modules are not
+        assert_fires(
+            "coordinator/dist/server.rs",
+            r#"fn f() { std::thread::scope(|s| {}); }"#,
+            &[],
+        );
+        assert_fires(
+            "coordinator/dist/client.rs",
+            r#"fn f() { std::thread::spawn(|| {}); }"#,
             &["D003"],
         );
         assert_fires(

@@ -123,6 +123,15 @@ pub struct RunConfig {
     /// training runs; re-written whenever an evaluation sets a new
     /// best (`serve::ExportBestHook`).
     pub export_best: Option<String>,
+    /// Delta-encode rep pushes on the socket backend: only rows whose
+    /// fingerprint changed since this worker's last push cross the
+    /// wire (the daemon reconstructs the full matrix, so training is
+    /// still bit-identical to in-memory).  Ignored in-memory.
+    pub wire_delta: bool,
+    /// Quantize rep-push rows to f16 on the socket backend.  *Lossy*:
+    /// breaks bit-identity with the in-memory run (accuracy stays
+    /// within epsilon — asserted in tests); off by default.
+    pub wire_f16: bool,
 }
 
 impl Default for RunConfig {
@@ -151,6 +160,8 @@ impl Default for RunConfig {
             wall_budget: 0.0,
             stream_csv: None,
             export_best: None,
+            wire_delta: true,
+            wire_f16: false,
         }
     }
 }
@@ -226,6 +237,12 @@ impl RunConfig {
         if let Some(v) = j.opt("export_best") {
             c.export_best = Some(v.as_str()?.to_string());
         }
+        if let Some(v) = j.opt("wire_delta") {
+            c.wire_delta = v.as_bool()?;
+        }
+        if let Some(v) = j.opt("wire_f16") {
+            c.wire_f16 = v.as_bool()?;
+        }
         if let Some(v) = j.opt("straggler") {
             let arr = v.as_arr()?;
             if arr.len() != 3 {
@@ -277,6 +294,10 @@ impl RunConfig {
             }
             "stream_csv" => self.stream_csv = Some(v.to_string()),
             "export_best" => self.export_best = Some(v.to_string()),
+            "wire_delta" => {
+                self.wire_delta = v.parse().map_err(|e| eyre!("wire_delta: {e}"))?
+            }
+            "wire_f16" => self.wire_f16 = v.parse().map_err(|e| eyre!("wire_f16: {e}"))?,
             _ => return Err(eyre!("unknown config key {k:?}")),
         }
         // field-local rules only: cross-field constraints (straggler id
@@ -449,6 +470,22 @@ mod tests {
         assert!(c.apply_override("epochs=0").is_err());
         assert!(c.apply_override("bogus=1").is_err());
         assert!(c.apply_override("noequals").is_err());
+    }
+
+    #[test]
+    fn wire_knobs_parse_and_default() {
+        let c = RunConfig::default();
+        assert!(c.wire_delta, "delta encoding is the lossless default");
+        assert!(!c.wire_f16, "lossy quantization must be opt-in");
+        let j = Json::parse(r#"{"wire_delta": false, "wire_f16": true}"#).unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert!(!c.wire_delta);
+        assert!(c.wire_f16);
+        let mut c = RunConfig::default();
+        c.apply_override("wire_delta=false").unwrap();
+        c.apply_override("wire_f16=true").unwrap();
+        assert!(!c.wire_delta && c.wire_f16);
+        assert!(c.apply_override("wire_f16=maybe").is_err());
     }
 
     #[test]

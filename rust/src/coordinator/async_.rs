@@ -39,7 +39,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::ps::checkpoint::{Checkpoint, TrainState};
-use crate::ps::{optimizer::Optimizer, ParamServer};
+use crate::ps::{optimizer::Optimizer, ParamServer, ParamService};
 use crate::runtime::SharedLiteral;
 use crate::tensor::Matrix;
 use crate::util::json::Json;
@@ -100,6 +100,9 @@ pub struct AsyncSession<'a> {
     t0: Instant,
     vtime: f64,
     ps_bytes: u64,
+    /// Cumulative transport bytes already attributed to past windows
+    /// (always 0 for the in-memory backend).
+    wire_seen: u64,
     updates: usize,
     loss_acc: f64,
     loss_n: usize,
@@ -139,6 +142,7 @@ impl<'a> AsyncSession<'a> {
             t0: Instant::now(),
             vtime: 0.0,
             ps_bytes: 0,
+            wire_seen: 0,
             updates: 0,
             loss_acc: 0.0,
             loss_n: 0,
@@ -171,6 +175,7 @@ impl<'a> AsyncSession<'a> {
         }
         s.vtime = state.vtime;
         s.ps_bytes = state.ps_bytes;
+        s.wire_seen = ctx.kvs.wire_bytes();
         s.best_val = state.best_val_f1;
         s.final_val = state.final_val_f1;
         s.final_test = state.final_test_f1;
@@ -240,7 +245,7 @@ impl<'a> AsyncSession<'a> {
         self.ps_bytes += 2 * ctx.param_bytes();
         let local_now = self.workers[m].local_epoch as u64;
         let pull_io = if sync_now {
-            let io = pull_stale(ctx, &mut self.workers[m], local_now);
+            let io = pull_stale(ctx, &mut self.workers[m], local_now)?;
             if let Some(a) = self.workers[m].last_pull_age {
                 self.window_age = Some(self.window_age.map_or(a, |x| x.max(a)));
             }
@@ -302,7 +307,7 @@ impl TrainSession for AsyncSession<'_> {
                     self.snapshots[m] =
                         Arc::new(crate::runtime::pack_params(&ctx.spec, &params)?);
                     self.snapshots_raw[m] = params;
-                    let pull_io = pull_stale(ctx, &mut self.workers[m], 0); // cold pull
+                    let pull_io = pull_stale(ctx, &mut self.workers[m], 0)?; // cold pull
                     self.window_synced = true;
                     pool.dispatch(&self.workers[m], self.snapshots[m].clone());
                     self.pending[m] = true;
@@ -362,7 +367,12 @@ impl TrainSession for AsyncSession<'_> {
                 };
                 self.pending[m] = false;
                 let compute_t = ctx.cost.compute_time(m, ctx.train_flops(m));
-                self.ps.submit_async(&out.grads, self.workers[m].fetched_version);
+                // UFCS through the trait seam the socket backend shares
+                ParamService::submit_async(
+                    &self.ps,
+                    &out.grads,
+                    self.workers[m].fetched_version,
+                )?;
                 self.workers[m].local_epoch += 1;
                 self.updates += 1;
                 self.loss_acc += out.loss as f64;
@@ -377,7 +387,7 @@ impl TrainSession for AsyncSession<'_> {
                         &self.workers[m],
                         &out.reps,
                         self.workers[m].local_epoch as u64,
-                    )
+                    )?
                 } else {
                     0.0
                 };
@@ -397,6 +407,7 @@ impl TrainSession for AsyncSession<'_> {
                     } else {
                         (f64::NAN, f64::NAN)
                     };
+                    let wire_total = ctx.kvs.wire_bytes();
                     let point = LogPoint {
                         epoch,
                         vtime: self.vtime,
@@ -404,8 +415,9 @@ impl TrainSession for AsyncSession<'_> {
                         train_loss: self.loss_acc / self.loss_n.max(1) as f64,
                         val_f1: val,
                         test_f1: test,
-                        kvs_bytes: ctx.kvs.metrics.snapshot().total_bytes(),
+                        kvs_bytes: ctx.kvs.metrics().total_bytes(),
                         ps_bytes: self.ps_bytes,
+                        wire_bytes: wire_total,
                     };
                     let bd = EpochBreakdown {
                         compute: compute_t,
@@ -414,7 +426,9 @@ impl TrainSession for AsyncSession<'_> {
                         straggle: 0.0,
                         max_stale_age: self.window_age,
                         total: self.vtime - self.last_epoch_t,
+                        wire_bytes: wire_total.saturating_sub(self.wire_seen),
                     };
+                    self.wire_seen = wire_total;
                     self.points.push(point.clone());
                     self.breakdowns.push(bd);
                     window_point = Some((point, bd, evaluate));
@@ -473,7 +487,7 @@ impl TrainSession for AsyncSession<'_> {
     }
 
     fn snapshot(&self) -> Result<Checkpoint> {
-        let mut state = base_state(self.ctx, "digest-a");
+        let mut state = base_state(self.ctx, "digest-a")?;
         state.epoch = self.epochs_done();
         state.vtime = self.vtime;
         state.ps_bytes = self.ps_bytes;
@@ -553,7 +567,7 @@ impl TrainSession for AsyncSession<'_> {
             best_val_f1: self.best_val,
             total_vtime: self.vtime,
             total_wall: self.t0.elapsed().as_secs_f64(),
-            kvs: self.ctx.kvs.metrics.snapshot(),
+            kvs: self.ctx.kvs.metrics(),
             delay: self.ps.delay_stats(),
             final_params: self.ps.fetch().0,
         })

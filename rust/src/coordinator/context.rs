@@ -8,7 +8,7 @@ use crate::gnn::{ModelKind, WorkspaceStats};
 use crate::graph::registry::{load, spec as dataset_spec};
 use crate::graph::Dataset;
 use crate::halo::{build_all_plans, PropKind, SubgraphPlan};
-use crate::kvs::RepStore;
+use crate::kvs::{KVStore, RepStore};
 use crate::partition::{partition, Partition};
 use crate::runtime::{ArtifactSpec, Runtime};
 use crate::serve::InferenceEngine;
@@ -31,7 +31,11 @@ pub struct TrainContext {
     /// manifest lookup plus a full spec clone on every call.
     pub eval_spec: ArtifactSpec,
     pub rt: Runtime,
-    pub kvs: RepStore,
+    /// The representation plane, behind the [`RepStore`] trait seam:
+    /// the in-memory [`KVStore`] by default
+    /// ([`TrainContext::new`]), or a socket-backed remote store in a
+    /// `digest worker` process ([`TrainContext::with_store`]).
+    pub kvs: Box<dyn RepStore>,
     pub cost: CostModel,
     /// Artifact name for runtime execution.
     pub artifact: String,
@@ -50,6 +54,15 @@ pub struct TrainContext {
 
 impl TrainContext {
     pub fn new(cfg: RunConfig) -> Result<Self> {
+        Self::with_store(cfg, Box::new(KVStore::new(16)))
+    }
+
+    /// Build a context over an explicit [`RepStore`] backend — the seam
+    /// the socket transport plugs into (`digest worker` wires a
+    /// `RemoteRepStore` here so `pull_stale`/`push_reps` cross the
+    /// network unchanged).  [`TrainContext::new`] is this with the
+    /// default in-memory [`KVStore`].
+    pub fn with_store(cfg: RunConfig, kvs: Box<dyn RepStore>) -> Result<Self> {
         cfg.validate()?;
         let ds = Arc::new(load(&cfg.dataset, cfg.seed)?);
         let mut part = partition(&ds.graph, cfg.parts, cfg.partitioner, cfg.seed);
@@ -78,7 +91,7 @@ impl TrainContext {
             spec,
             eval_spec,
             rt,
-            kvs: RepStore::new(16),
+            kvs,
             cost,
             artifact,
             warm_start: None,

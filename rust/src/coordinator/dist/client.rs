@@ -1,0 +1,425 @@
+//! Worker-side transport: one blocking connection to `digest ps-serve`,
+//! wrapped as the [`RepStore`] + [`ParamService`] backends a
+//! `digest worker` process plugs into the unchanged training loop.
+//!
+//! Both planes share one socket (an epoch's calls are strictly
+//! sequential per worker, so one connection is enough), guarded by a
+//! mutex so the `Box<dyn RepStore>` seam — which requires `Sync` — is
+//! satisfied.  All waiting happens **daemon-side** (barriers, versioned
+//! fetches); the client just blocks on the reply frame, looping on
+//! read-timeout polls so a stalled daemon is distinguishable from a
+//! dead one (a dropped connection surfaces as a structured error).
+
+use std::collections::HashMap;
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::config::RunConfig;
+use crate::kvs::{KvsSnapshot, PullInfo, RepStore};
+use crate::ps::{DelayStats, ParamService};
+use crate::tensor::Matrix;
+use crate::util::frame::{read_frame, write_frame, FrameRead, MAX_FRAME};
+use crate::util::lock_unpoisoned;
+use crate::{eyre, Result};
+
+use super::super::sync::StepReport;
+use super::wire::{
+    row_fingerprint, DHello, FinishSnap, ParamSubmit, RepPush, Request, Response,
+    ENC_DELTA, ENC_F16, NO_WAIT, TRAIN_WIRE_VERSION,
+};
+
+/// Map an unexpected reply to a structured error (daemon [`Response::Error`]
+/// frames carry their message through).
+fn unexpected(wanted: &str, got: &Response) -> anyhow::Error {
+    match got {
+        Response::Error { message } => eyre!("daemon error: {message}"),
+        other => eyre!("protocol error: expected {wanted}, got {other:?}"),
+    }
+}
+
+/// One blocking training-plane connection (handshake done in
+/// [`DistClient::connect`]); tracks its own bytes on the wire, which is
+/// where the `wire_bytes` telemetry column comes from.
+pub struct DistClient {
+    stream: TcpStream,
+    bytes_out: u64,
+    bytes_in: u64,
+}
+
+impl DistClient {
+    /// Connect (with a short retry window for the daemon still binding),
+    /// then run the config handshake — the daemon rejects any config
+    /// mismatch, so a successful connect guarantees both processes
+    /// rebuild identical dataset/partition/plan state.
+    pub fn connect(addr: &str, hello: &DHello) -> Result<DistClient> {
+        let mut last_err = None;
+        let mut stream = None;
+        for _attempt in 0..100 {
+            match TcpStream::connect(addr) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(e) => {
+                    last_err = Some(e);
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+            }
+        }
+        let stream = match stream {
+            Some(s) => s,
+            None => {
+                return Err(eyre!(
+                    "connecting to ps-serve at {addr}: {}",
+                    last_err.map_or_else(|| "no attempt".to_string(), |e| e.to_string())
+                ))
+            }
+        };
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+        let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+        let mut c = DistClient {
+            stream,
+            bytes_out: 0,
+            bytes_in: 0,
+        };
+        match c.roundtrip(&Request::Hello(hello.clone()))? {
+            Response::HelloOk { parts, .. } if parts == hello.parts => Ok(c),
+            Response::HelloOk { parts, .. } => Err(eyre!(
+                "daemon runs {parts} parts, this worker was configured for {}",
+                hello.parts
+            )),
+            other => Err(unexpected("HelloOk", &other)),
+        }
+    }
+
+    /// Total bytes this connection has put on the wire (both directions,
+    /// frame overhead included).
+    pub fn wire_bytes(&self) -> u64 {
+        self.bytes_out + self.bytes_in
+    }
+
+    /// One request→response exchange with byte accounting.  Blocking
+    /// daemon calls (barriers, versioned fetches) can out-wait the
+    /// socket read timeout; a timeout at a frame boundary just polls
+    /// again — only a closed connection or a mid-frame cut is fatal.
+    fn roundtrip(&mut self, req: &Request) -> Result<Response> {
+        let (op, payload) = req.encode()?;
+        self.bytes_out += write_frame(&mut self.stream, op, &payload)?;
+        loop {
+            match read_frame(&mut self.stream, MAX_FRAME)? {
+                FrameRead::Frame(op, payload) => {
+                    self.bytes_in += 5 + payload.len() as u64;
+                    return Response::decode(op, &payload);
+                }
+                FrameRead::Closed => {
+                    return Err(eyre!("ps-serve closed the connection mid-run"))
+                }
+                FrameRead::TimedOut => continue, // daemon-side wait outlasted the poll
+            }
+        }
+    }
+}
+
+/// The acknowledgement of one [`ParamSubmit`]: whether this submit
+/// completed a sync round, and (async) whether the update budget is
+/// exhausted and the worker should stop.
+#[derive(Debug, Clone, Copy)]
+pub struct SubmitAck {
+    pub filled: bool,
+    pub stop: bool,
+}
+
+/// Socket-backed [`RepStore`]: `push`/`pull_into` become
+/// `digest-wire-v1` rep frames against the daemon's in-memory store.
+///
+/// Pulls always return full f32 rows, so the worker's stale cache is
+/// byte-identical to the in-memory backend's.  Pushes are
+/// delta-encoded when `wire_delta` is on: a per-(layer, node)
+/// fingerprint cache tracks what this worker last sent, and only
+/// changed rows travel (the daemon reconstructs the rest from its own
+/// row cache).  Traffic **metrics** stay daemon-side — the daemon's
+/// store charges pulls/pushes exactly like the in-memory run, so the
+/// checkpoint counters match; this client reports only real
+/// [`RepStore::wire_bytes`].
+pub struct RemoteRepStore {
+    conn: Arc<Mutex<DistClient>>,
+    delta: bool,
+    f16: bool,
+    fingerprints: Mutex<HashMap<(u32, u32), u64>>,
+}
+
+impl RemoteRepStore {
+    pub fn new(conn: Arc<Mutex<DistClient>>, cfg: &RunConfig) -> Self {
+        RemoteRepStore {
+            conn,
+            delta: cfg.wire_delta,
+            f16: cfg.wire_f16,
+            fingerprints: Mutex::new(HashMap::new()),
+        }
+    }
+}
+
+impl RepStore for RemoteRepStore {
+    fn push(&self, layer: usize, nodes: &[u32], reps: &Matrix, version: u64) -> Result<()> {
+        if reps.rows < nodes.len() {
+            return Err(eyre!("push: fewer rep rows than nodes"));
+        }
+        let d = reps.cols;
+        let (encoding, changed, rows) = if self.delta {
+            let mut fps = lock_unpoisoned(&self.fingerprints);
+            let mut changed = Vec::new();
+            let mut rows = Vec::new();
+            for (i, &node) in nodes.iter().enumerate() {
+                let row = reps.row(i);
+                let fp = row_fingerprint(row);
+                let key = (layer as u32, node);
+                if fps.get(&key) != Some(&fp) {
+                    fps.insert(key, fp);
+                    changed.push(i as u32);
+                    rows.extend_from_slice(row);
+                }
+            }
+            let enc = ENC_DELTA | if self.f16 { ENC_F16 } else { 0 };
+            (enc, changed, rows)
+        } else {
+            let mut rows = Vec::with_capacity(nodes.len() * d);
+            for i in 0..nodes.len() {
+                rows.extend_from_slice(reps.row(i));
+            }
+            (if self.f16 { ENC_F16 } else { 0 }, Vec::new(), rows)
+        };
+        let req = Request::RepPush(RepPush {
+            layer: layer as u32,
+            version,
+            d: d as u32,
+            encoding,
+            nodes: nodes.to_vec(),
+            changed,
+            rows,
+        });
+        let mut c = lock_unpoisoned(&self.conn);
+        match c.roundtrip(&req)? {
+            Response::RepPushOk => Ok(()),
+            other => Err(unexpected("RepPushOk", &other)),
+        }
+    }
+
+    fn pull_into(&self, layer: usize, nodes: &[u32], out: &mut Matrix) -> Result<PullInfo> {
+        if out.rows < nodes.len() {
+            return Err(eyre!("pull_into: fewer out rows than nodes"));
+        }
+        let d = out.cols;
+        let req = Request::RepPull {
+            layer: layer as u32,
+            d: d as u32,
+            nodes: nodes.to_vec(),
+        };
+        let mut c = lock_unpoisoned(&self.conn);
+        match c.roundtrip(&req)? {
+            Response::PullReps {
+                n,
+                d: rd,
+                found,
+                missing,
+                oldest,
+                newest,
+                rows,
+            } => {
+                if n as usize != nodes.len() || rd as usize != d {
+                    return Err(eyre!(
+                        "pull reply shape {n}x{rd}, requested {}x{d}",
+                        nodes.len()
+                    ));
+                }
+                out.data.fill(0.0);
+                out.data[..nodes.len() * d].copy_from_slice(&rows);
+                Ok(PullInfo {
+                    found: found as usize,
+                    missing: missing as usize,
+                    oldest_version: oldest,
+                    newest_version: newest,
+                })
+            }
+            other => Err(unexpected("PullReps", &other)),
+        }
+    }
+
+    /// Entry count lives daemon-side; the remote view reports 0 (only
+    /// checkpoint code asks, and checkpoints are daemon-side too).
+    fn len(&self) -> usize {
+        0
+    }
+
+    /// No-op: the daemon owns store lifecycle.
+    fn clear(&self) {}
+
+    fn export_entries(&self) -> Result<Vec<(u16, u32, u64, Vec<f32>)>> {
+        Err(eyre!(
+            "KVS export is daemon-side; a worker process cannot checkpoint the store"
+        ))
+    }
+
+    fn import_entries(&self, _entries: &[(u16, u32, u64, Vec<f32>)]) -> Result<()> {
+        Err(eyre!(
+            "KVS import is daemon-side; a worker process cannot restore the store"
+        ))
+    }
+
+    fn import_metrics(&self, _snap: KvsSnapshot) -> Result<()> {
+        Err(eyre!("KVS metrics are daemon-side"))
+    }
+
+    /// Logical traffic counters are charged on the daemon's store (so
+    /// checkpoints match the in-memory run); the remote view has none.
+    fn metrics(&self) -> KvsSnapshot {
+        KvsSnapshot::default()
+    }
+
+    fn wire_bytes(&self) -> u64 {
+        lock_unpoisoned(&self.conn).wire_bytes()
+    }
+}
+
+/// Socket-backed [`ParamService`] plus the distributed-only calls
+/// (versioned fetch, cost-annotated submit, barriers, the end-of-run
+/// state dump).
+pub struct RemoteParamService {
+    conn: Arc<Mutex<DistClient>>,
+}
+
+impl RemoteParamService {
+    pub fn new(conn: Arc<Mutex<DistClient>>) -> Self {
+        RemoteParamService { conn }
+    }
+
+    /// Fetch parameters, blocking daemon-side until its version reaches
+    /// `wait_version` ([`NO_WAIT`] returns immediately) — how a sync
+    /// worker aligns with the epoch-r reduction without a local PS.
+    pub fn fetch_when(&self, wait_version: u64) -> Result<(Vec<Matrix>, u64)> {
+        let mut c = lock_unpoisoned(&self.conn);
+        match c.roundtrip(&Request::ParamFetch { wait_version })? {
+            Response::Params { version, params } => {
+                Ok((params.iter().map(|m| m.to_matrix()).collect(), version))
+            }
+            other => Err(unexpected("Params", &other)),
+        }
+    }
+
+    /// Submit gradients together with the worker's cost-model numbers
+    /// (the wire form of the in-memory `StepReport`).  `pub(crate)`
+    /// because `StepReport` is a crate-internal aggregation input.
+    pub(crate) fn submit_step(
+        &self,
+        slot: usize,
+        mode: u8,
+        fetched_version: u64,
+        grads: &[Matrix],
+        report: &StepReport,
+    ) -> Result<SubmitAck> {
+        let req = Request::ParamSubmit(ParamSubmit {
+            slot: slot as u32,
+            mode,
+            fetched_version,
+            grads: grads.iter().map(super::wire::WireMat::from_matrix).collect(),
+            loss: report.loss,
+            compute_t: report.compute_t,
+            pull_io: report.pull_io,
+            push_io: report.push_io,
+            straggle: report.straggle,
+            stale_age: report.stale_age,
+        });
+        let mut c = lock_unpoisoned(&self.conn);
+        match c.roundtrip(&req)? {
+            Response::SubmitOk { filled, stop } => Ok(SubmitAck { filled, stop }),
+            other => Err(unexpected("SubmitOk", &other)),
+        }
+    }
+
+    /// Block until every worker reached this (epoch, phase) barrier —
+    /// the wire form of the sync engine's phase-A/phase-B joins.
+    pub fn barrier(&self, epoch: u64, phase: u8) -> Result<()> {
+        let mut c = lock_unpoisoned(&self.conn);
+        match c.roundtrip(&Request::Barrier { epoch, phase })? {
+            Response::BarrierOk => Ok(()),
+            other => Err(unexpected("BarrierOk", &other)),
+        }
+    }
+
+    /// Ship the worker's final state (checkpoint ingredients) and wait
+    /// for the run-level scores; the daemon replies only once the whole
+    /// run is finished.
+    pub fn finish(&self, snap: FinishSnap) -> Result<(f64, f64)> {
+        let mut c = lock_unpoisoned(&self.conn);
+        match c.roundtrip(&Request::Finish(snap))? {
+            Response::FinishOk {
+                final_val,
+                final_test,
+            } => Ok((final_val, final_test)),
+            other => Err(unexpected("FinishOk", &other)),
+        }
+    }
+
+    pub fn wire_bytes(&self) -> u64 {
+        lock_unpoisoned(&self.conn).wire_bytes()
+    }
+}
+
+impl ParamService for RemoteParamService {
+    fn fetch(&self) -> Result<(Vec<Matrix>, u64)> {
+        self.fetch_when(NO_WAIT)
+    }
+
+    /// A version probe costs a full fetch over the wire; the training
+    /// loops never call this hot (they use [`RemoteParamService::fetch_when`]).
+    fn version(&self) -> Result<u64> {
+        Ok(self.fetch_when(NO_WAIT)?.1)
+    }
+
+    fn submit_slot(&self, slot: usize, grads: &[Matrix]) -> Result<bool> {
+        let zero = StepReport {
+            loss: 0.0,
+            compute_t: 0.0,
+            pull_io: 0.0,
+            push_io: 0.0,
+            straggle: 0.0,
+            stale_age: None,
+        };
+        Ok(self
+            .submit_step(slot, super::wire::MODE_SYNC, 0, grads, &zero)?
+            .filled)
+    }
+
+    fn submit_async(&self, grads: &[Matrix], fetched_version: u64) -> Result<()> {
+        let zero = StepReport {
+            loss: 0.0,
+            compute_t: 0.0,
+            pull_io: 0.0,
+            push_io: 0.0,
+            straggle: 0.0,
+            stale_age: None,
+        };
+        self.submit_step(0, super::wire::MODE_ASYNC, fetched_version, grads, &zero)?;
+        Ok(())
+    }
+
+    /// Delay statistics live daemon-side (they are part of the daemon's
+    /// run result, not any single worker's view).
+    fn delay_stats(&self) -> Result<DelayStats> {
+        Err(eyre!("delay stats are daemon-side; workers do not track them"))
+    }
+}
+
+/// Dial `addr`, handshake as `part`, and hand back the shared
+/// connection — the one constructor `run_worker` needs.
+pub fn connect_worker(
+    cfg: &RunConfig,
+    part: usize,
+    addr: &str,
+) -> Result<Arc<Mutex<DistClient>>> {
+    let hello = DHello::from_config(cfg, part);
+    debug_assert_eq!(hello.version, TRAIN_WIRE_VERSION);
+    let client = DistClient::connect(addr, &hello)?;
+    Ok(Arc::new(Mutex::new(client)))
+}

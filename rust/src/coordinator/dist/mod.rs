@@ -1,0 +1,29 @@
+//! Process-per-partition training over `digest-wire-v1-train`.
+//!
+//! The in-memory coordinator simulates M workers inside one process;
+//! this module makes each partition a real OS process. The pieces:
+//!
+//! * [`wire`] — the binary frame codec: rep push/pull, param
+//!   fetch/submit, barriers, the config-validating hello, and the
+//!   delta / f16 row encodings that shrink bytes-on-wire.
+//! * [`client`] — worker side: [`RemoteRepStore`] implements
+//!   [`crate::kvs::RepStore`] and [`RemoteParamService`] implements
+//!   [`crate::ps::ParamService`] over one shared TCP connection, so
+//!   all coordinator code runs unchanged against the socket backend.
+//! * [`server`] — `digest ps-serve`: the daemon hosting the KVS, the
+//!   parameter server, the sync barrier, and the epoch bookkeeping.
+//! * [`worker`] — `digest worker`: the per-partition training loop.
+//!
+//! Sync (`digest`) runs are checkpoint-byte-identical to the in-memory
+//! scheduler (with f16 quantization off); async (`digest-a`) runs are
+//! real asynchrony and match the in-memory simulator's semantics, not
+//! its virtual clock.
+
+pub mod client;
+pub mod server;
+pub mod wire;
+pub mod worker;
+
+pub use client::{connect_worker, DistClient, RemoteParamService, RemoteRepStore};
+pub use server::{DistOutcome, PsServer};
+pub use worker::{run_worker, WorkerRun};

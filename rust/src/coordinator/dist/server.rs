@@ -1,0 +1,920 @@
+//! `digest ps-serve` — the central daemon of a process-per-partition run.
+//!
+//! One process hosts the whole coordination plane: the in-memory
+//! [`KVStore`] (behind the [`RepStore`] trait, exactly as an in-memory
+//! run would use it), the [`ParamServer`], the sync barrier, and the
+//! epoch bookkeeping that `SyncSession` normally does inline.  Workers
+//! connect over TCP speaking `digest-wire-v1-train` (see
+//! [`super::wire`]) and drive the run; the daemon is purely reactive.
+//!
+//! # Bit-identity (sync)
+//!
+//! A 2-process sync run must checkpoint byte-identically to the
+//! in-memory `SyncSession`.  The invariants that make this hold:
+//!
+//! * **Slot-ordered reduction** — gradients land via
+//!   `ParamServer::submit_slot(part, ..)`, the same slot-buffered
+//!   reduction the in-memory path uses, so arrival order is irrelevant.
+//! * **Epoch bookkeeping at a quiescent point** — for sync-exchange
+//!   epochs the books close when the *last* worker arrives at the
+//!   `PHASE_PUSHES` barrier (all pulls, submits and pushes for the
+//!   epoch have landed; no worker can start epoch r+1 before the
+//!   barrier opens).  For non-exchange epochs there is no barrier and
+//!   the books close inside the same critical section as the
+//!   round-filling `submit_slot`, before the version advance is
+//!   observable to `ParamFetch` waiters.
+//! * **Server-side store charging** — rep pushes are decoded (delta
+//!   reconstruction included) into full row matrices and fed through
+//!   `RepStore::push` on the daemon's own `KVStore`, so entries,
+//!   versions and traffic counters match the in-memory run bit for
+//!   bit.  Pulls charge through `RepStore::pull` the same way.
+//! * **Worker-side cost math** — compute/pull/push/straggle times are
+//!   computed by the workers (same deterministic cost model, same
+//!   per-worker RNG sequence) and travel as exact f64 bits in
+//!   [`wire::ParamSubmit`]; [`aggregate_epoch`] then runs on the same
+//!   inputs in the same slot order as in-memory.
+//!
+//! # Async mode
+//!
+//! `digest-a` over the wire applies gradients **on arrival** — real
+//! asynchrony.  The in-memory `AsyncSession` is a discrete-event
+//! *simulator* (virtual clock, modeled overlap), so a distributed
+//! async run is *not* bit-identical to it and makes no such claim;
+//! `vtime` in its log points is wall-clock.  Checkpointing
+//! (`--save`) is therefore rejected for async daemon runs.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::{Method, RunConfig};
+use crate::ps::checkpoint::WorkerSnap;
+use crate::ps::{optimizer::Optimizer, ParamServer};
+use crate::tensor::Matrix;
+use crate::util::frame::{read_frame, write_frame, FrameRead, MAX_FRAME};
+use crate::util::json::Json;
+use crate::util::lock_unpoisoned;
+use crate::{eyre, Result};
+
+use super::super::context::TrainContext;
+use super::super::session::{base_state, state_checkpoint};
+use super::super::sync::{aggregate_epoch, StepReport};
+use super::super::telemetry::{EpochBreakdown, LogPoint};
+use super::wire::{
+    ParamSubmit, RepPush, Request, Response, ENC_DELTA, MODE_ASYNC, MODE_SYNC,
+    NO_WAIT, PHASE_PUSHES,
+};
+
+/// Handler read-poll granularity: how often a blocked connection checks
+/// the abort flag.  Purely an error-propagation latency knob.
+const READ_POLL: Duration = Duration::from_millis(250);
+/// Condvar re-check granularity for barrier / versioned-fetch waits.
+const WAIT_POLL: Duration = Duration::from_millis(100);
+/// Handshake read deadline — a connection that does not produce a
+/// `DHello` within this window is dropped.
+const HELLO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// What a completed daemon run hands back to the CLI: the same summary
+/// numbers the in-memory sessions put in their `RunResult`, plus the
+/// real bytes-on-wire total.
+#[derive(Debug, Clone)]
+pub struct DistOutcome {
+    pub final_val_f1: f64,
+    pub final_test_f1: f64,
+    pub best_val_f1: f64,
+    pub total_vtime: f64,
+    pub points: Vec<LogPoint>,
+    pub breakdowns: Vec<EpochBreakdown>,
+    pub kvs: crate::kvs::KvsSnapshot,
+    /// Frame bytes moved over all worker connections, both directions.
+    pub wire_bytes: u64,
+    /// Gradient applications (async: one per submit; sync: parts × epochs).
+    pub updates: u64,
+}
+
+/// A bound-but-not-yet-running daemon.  [`PsServer::bind`] validates
+/// the config and grabs the port (so callers can spawn workers against
+/// [`PsServer::local_addr`] before [`PsServer::run`] blocks).
+pub struct PsServer {
+    listener: TcpListener,
+    cfg: RunConfig,
+    save_to: Option<String>,
+}
+
+impl PsServer {
+    pub fn bind(cfg: RunConfig, addr: &str, save_to: Option<String>) -> Result<PsServer> {
+        match cfg.method {
+            Method::Digest | Method::DigestAsync => {}
+            other => {
+                return Err(eyre!(
+                    "ps-serve hosts digest / digest-a runs only, not {:?}",
+                    other
+                ))
+            }
+        }
+        if cfg.method == Method::DigestAsync && save_to.is_some() {
+            return Err(eyre!(
+                "--save is sync-only: a distributed async run applies gradients \
+                 on arrival and is not bit-resumable"
+            ));
+        }
+        if cfg.parts == 0 {
+            return Err(eyre!("ps-serve needs at least one partition"));
+        }
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| eyre!("ps-serve bind {addr}: {e}"))?;
+        Ok(PsServer {
+            listener,
+            cfg,
+            save_to,
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener
+            .local_addr()
+            .map_err(|e| eyre!("local_addr: {e}"))
+    }
+
+    /// Accept exactly `parts` workers, serve the run to completion, and
+    /// return the outcome.  Blocks the calling thread; the per-worker
+    /// handlers run on scoped threads.
+    pub fn run(self) -> Result<DistOutcome> {
+        let cfg = self.cfg.clone();
+        let m = cfg.parts;
+        let ctx = TrainContext::new(cfg.clone())?;
+        let ps = ParamServer::new(
+            ctx.initial_params(),
+            Optimizer::new(cfg.optimizer, cfg.lr).with_weight_decay(cfg.weight_decay),
+            m,
+        );
+        let central = Central::new(&ctx, ps, self.save_to.clone());
+
+        // ---- handshake: collect one connection per partition ----
+        let mut conns: Vec<Option<TcpStream>> = (0..m).map(|_| None).collect();
+        let mut connected = 0usize;
+        while connected < m {
+            let (stream, _peer) = self
+                .listener
+                .accept()
+                .map_err(|e| eyre!("ps-serve accept: {e}"))?;
+            match central.handshake(stream) {
+                Ok((part, stream)) => {
+                    if conns[part].is_some() {
+                        // duplicate partition: refuse, keep the original
+                        central.refuse(stream, &format!("partition {part} already connected"));
+                    } else {
+                        conns[part] = Some(stream);
+                        connected += 1;
+                    }
+                }
+                Err(e) => {
+                    // bad hello: the offender was already sent an Error
+                    // frame and dropped inside handshake(); keep accepting
+                    let _ = e;
+                }
+            }
+        }
+        drop(self.listener);
+
+        // ---- serve: one handler thread per worker connection ----
+        let mut first_err: Option<anyhow::Error> = None;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = conns
+                .into_iter()
+                .enumerate()
+                .map(|(part, stream)| {
+                    let central = &central;
+                    // a handshaken slot is always Some; guard anyway
+                    let stream = stream.ok_or_else(|| eyre!("partition {part} never connected"));
+                    s.spawn(move || central.handle_conn(part, stream?))
+                })
+                .collect();
+            for (part, h) in handles.into_iter().enumerate() {
+                match h.join() {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
+                    Err(_) => {
+                        if first_err.is_none() {
+                            first_err = Some(eyre!("handler for worker {part} panicked"));
+                        }
+                    }
+                }
+            }
+        });
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        central.into_outcome()
+    }
+}
+
+/// Mutable run state, all under one mutex.  Handlers take it briefly;
+/// long waits (barriers, versioned fetches) release it via
+/// `Condvar::wait_timeout`.
+struct CentralState {
+    /// One slot per partition, filled by `ParamSubmit`, drained by
+    /// `finish_epoch` in slot order.
+    reports: Vec<Option<StepReport>>,
+    /// Epochs fully booked (the sync epoch counter).
+    r: usize,
+    vtime: f64,
+    ps_bytes: u64,
+    /// Wire total at the last `finish_epoch` (per-epoch delta basis).
+    wire_seen: u64,
+    points: Vec<LogPoint>,
+    breakdowns: Vec<EpochBreakdown>,
+    best_val: f64,
+    final_val: f64,
+    final_test: f64,
+    /// Barrier arrival counts / generation counters, indexed by phase.
+    barrier_count: [usize; 2],
+    barrier_gen: [u64; 2],
+    // -- async bookkeeping --
+    updates: u64,
+    window_loss: f64,
+    window_n: usize,
+    window_age: Option<u64>,
+    async_done: bool,
+    // -- shutdown --
+    finishes: Vec<Option<WorkerSnap>>,
+    finished: usize,
+    err: Option<String>,
+}
+
+/// Shared daemon core: the training context (with its in-memory rep
+/// store), the parameter server, and the run state.  Borrowed by every
+/// handler thread.
+struct Central<'a> {
+    ctx: &'a TrainContext,
+    ps: ParamServer,
+    m: usize,
+    save_to: Option<String>,
+    t0: Instant,
+    state: Mutex<CentralState>,
+    /// Signalled on every version advance / run completion.
+    fetch_cv: Condvar,
+    /// Signalled when a barrier generation opens.
+    barrier_cv: Condvar,
+    wire_in: AtomicU64,
+    wire_out: AtomicU64,
+    /// Per-partition last-pushed rows, keyed `(layer, node)` — the
+    /// server side of delta decoding.  One lock per partition; access
+    /// is `get`/`insert` only (no iteration → deterministic).
+    row_cache: Vec<Mutex<HashMap<(u32, u32), Vec<f32>>>>,
+}
+
+impl<'a> Central<'a> {
+    fn new(ctx: &'a TrainContext, ps: ParamServer, save_to: Option<String>) -> Self {
+        let m = ctx.cfg.parts;
+        Central {
+            ctx,
+            ps,
+            m,
+            save_to,
+            // lint:allow(D006, observational wall-clock anchor for telemetry columns only; never feeds training math)
+            t0: Instant::now(),
+            state: Mutex::new(CentralState {
+                reports: (0..m).map(|_| None).collect(),
+                r: 0,
+                vtime: 0.0,
+                ps_bytes: 0,
+                wire_seen: 0,
+                points: Vec::new(),
+                breakdowns: Vec::new(),
+                best_val: 0.0,
+                final_val: f64::NAN,
+                final_test: f64::NAN,
+                barrier_count: [0, 0],
+                barrier_gen: [0, 0],
+                updates: 0,
+                window_loss: 0.0,
+                window_n: 0,
+                window_age: None,
+                async_done: false,
+                finishes: (0..m).map(|_| None).collect(),
+                finished: 0,
+                err: None,
+            }),
+            fetch_cv: Condvar::new(),
+            barrier_cv: Condvar::new(),
+            wire_in: AtomicU64::new(0),
+            wire_out: AtomicU64::new(0),
+            row_cache: (0..m).map(|_| Mutex::new(HashMap::new())).collect(),
+        }
+    }
+
+    fn wire_total(&self) -> u64 {
+        self.wire_in.load(Ordering::Relaxed) + self.wire_out.load(Ordering::Relaxed)
+    }
+
+    /// First-error-wins abort: records the message and wakes every
+    /// blocked waiter so handlers can fail fast instead of hanging.
+    fn abort(&self, msg: &str) {
+        let mut st = lock_unpoisoned(&self.state);
+        if st.err.is_none() {
+            st.err = Some(msg.to_string());
+        }
+        self.fetch_cv.notify_all();
+        self.barrier_cv.notify_all();
+    }
+
+    fn ensure_live(&self, st: &CentralState) -> Result<()> {
+        match &st.err {
+            Some(e) => Err(eyre!("run aborted: {e}")),
+            None => Ok(()),
+        }
+    }
+
+    // ---- handshake ------------------------------------------------------
+
+    /// Read and validate the `DHello` on a fresh connection; reply
+    /// `HelloOk` and return the claimed partition.  On any failure the
+    /// stream gets a best-effort `Error` frame and is dropped.
+    fn handshake(&self, mut stream: TcpStream) -> Result<(usize, TcpStream)> {
+        let res = self.handshake_inner(&mut stream);
+        match res {
+            Ok(part) => Ok((part, stream)),
+            Err(e) => {
+                self.refuse(stream, &format!("{e}"));
+                Err(e)
+            }
+        }
+    }
+
+    fn handshake_inner(&self, stream: &mut TcpStream) -> Result<usize> {
+        stream
+            .set_read_timeout(Some(HELLO_TIMEOUT))
+            .map_err(|e| eyre!("set_read_timeout: {e}"))?;
+        stream.set_nodelay(true).map_err(|e| eyre!("set_nodelay: {e}"))?;
+        let (op, payload) = match read_frame(stream, MAX_FRAME)? {
+            FrameRead::Frame(op, payload) => (op, payload),
+            FrameRead::Closed => return Err(eyre!("connection closed before hello")),
+            FrameRead::TimedOut => return Err(eyre!("no hello within {HELLO_TIMEOUT:?}")),
+        };
+        self.wire_in
+            .fetch_add(5 + payload.len() as u64, Ordering::Relaxed);
+        let hello = match Request::decode(op, &payload)? {
+            Request::Hello(h) => h,
+            other => return Err(eyre!("expected hello, got {other:?}")),
+        };
+        hello.validate(&self.ctx.cfg)?;
+        let part = hello.part as usize;
+        let (rop, rpayload) = Response::HelloOk {
+            version: self.ps.version(),
+            parts: self.m as u32,
+        }
+        .encode()?;
+        let n = write_frame(stream, rop, &rpayload)?;
+        self.wire_out.fetch_add(n, Ordering::Relaxed);
+        Ok(part)
+    }
+
+    /// Best-effort `Error` reply on a stream we are about to drop.
+    fn refuse(&self, mut stream: TcpStream, message: &str) {
+        if let Ok((op, payload)) = (Response::Error {
+            message: message.to_string(),
+        })
+        .encode()
+        {
+            let _ = write_frame(&mut stream, op, &payload);
+        }
+    }
+
+    // ---- per-connection serve loop --------------------------------------
+
+    fn handle_conn(&self, part: usize, mut stream: TcpStream) -> Result<()> {
+        let res = self.serve_conn(part, &mut stream);
+        if let Err(e) = &res {
+            self.abort(&format!("worker {part}: {e}"));
+            if let Ok((op, payload)) = (Response::Error {
+                message: format!("{e}"),
+            })
+            .encode()
+            {
+                let _ = write_frame(&mut stream, op, &payload);
+            }
+        }
+        res
+    }
+
+    fn serve_conn(&self, part: usize, stream: &mut TcpStream) -> Result<()> {
+        stream
+            .set_read_timeout(Some(READ_POLL))
+            .map_err(|e| eyre!("set_read_timeout: {e}"))?;
+        loop {
+            match read_frame(stream, MAX_FRAME)? {
+                FrameRead::TimedOut => {
+                    let st = lock_unpoisoned(&self.state);
+                    self.ensure_live(&st)?;
+                }
+                FrameRead::Closed => {
+                    return Err(eyre!("disconnected mid-run"));
+                }
+                FrameRead::Frame(op, payload) => {
+                    self.wire_in
+                        .fetch_add(5 + payload.len() as u64, Ordering::Relaxed);
+                    let req = Request::decode(op, &payload)?;
+                    let (resp, done) = self.handle(part, req)?;
+                    let (rop, rpayload) = resp.encode()?;
+                    let n = write_frame(stream, rop, &rpayload)?;
+                    self.wire_out.fetch_add(n, Ordering::Relaxed);
+                    if done {
+                        return Ok(());
+                    }
+                }
+            }
+        }
+    }
+
+    /// Dispatch one request.  Returns the reply and whether the
+    /// connection is done (after `FinishOk`).
+    fn handle(&self, part: usize, req: Request) -> Result<(Response, bool)> {
+        match req {
+            Request::Hello(_) => Err(eyre!("duplicate hello")),
+            Request::RepPush(p) => self.rep_push(part, p).map(|r| (r, false)),
+            Request::RepPull { layer, d, nodes } => {
+                self.rep_pull(layer, d, nodes).map(|r| (r, false))
+            }
+            Request::ParamFetch { wait_version } => {
+                self.param_fetch(wait_version).map(|r| (r, false))
+            }
+            Request::ParamSubmit(s) => self.param_submit(part, s).map(|r| (r, false)),
+            Request::Barrier { epoch, phase } => {
+                self.barrier(part, epoch, phase).map(|r| (r, false))
+            }
+            Request::Finish(snap) => self.finish(part, snap).map(|r| (r, true)),
+        }
+    }
+
+    // ---- representation plane -------------------------------------------
+
+    /// Decode a (possibly delta-encoded) push into full rows and feed it
+    /// through the daemon's own [`crate::kvs::RepStore`] — entries and
+    /// traffic counters charge exactly as an in-memory push would.
+    fn rep_push(&self, part: usize, p: RepPush) -> Result<Response> {
+        let d = p.d as usize;
+        let n = p.nodes.len();
+        let mut full = Matrix::zeros(n, d);
+        {
+            let mut cache = lock_unpoisoned(&self.row_cache[part]);
+            if p.encoding & ENC_DELTA != 0 {
+                let mut next = 0usize;
+                for i in 0..n {
+                    let key = (p.layer, p.nodes[i]);
+                    if next < p.changed.len() && p.changed[next] as usize == i {
+                        let row = &p.rows[next * d..(next + 1) * d];
+                        full.copy_row_from(i, row);
+                        cache.insert(key, row.to_vec());
+                        next += 1;
+                    } else {
+                        let row = cache.get(&key).ok_or_else(|| {
+                            eyre!(
+                                "delta push references unchanged row never pushed \
+                                 (layer {}, node {})",
+                                p.layer,
+                                p.nodes[i]
+                            )
+                        })?;
+                        if row.len() != d {
+                            return Err(eyre!(
+                                "cached row width {} != push width {d}",
+                                row.len()
+                            ));
+                        }
+                        full.copy_row_from(i, row);
+                    }
+                }
+            } else {
+                for i in 0..n {
+                    let row = &p.rows[i * d..(i + 1) * d];
+                    full.copy_row_from(i, row);
+                    cache.insert((p.layer, p.nodes[i]), row.to_vec());
+                }
+            }
+        }
+        self.ctx
+            .kvs
+            .push(p.layer as usize, &p.nodes, &full, p.version)?;
+        Ok(Response::RepPushOk)
+    }
+
+    fn rep_pull(&self, layer: u32, d: u32, nodes: Vec<u32>) -> Result<Response> {
+        let (mat, info) = self
+            .ctx
+            .kvs
+            .pull(layer as usize, &nodes, d as usize, nodes.len())?;
+        Ok(Response::PullReps {
+            n: nodes.len() as u32,
+            d,
+            found: info.found as u32,
+            missing: info.missing as u32,
+            oldest: info.oldest_version,
+            newest: info.newest_version,
+            rows: mat.data,
+        })
+    }
+
+    // ---- parameter plane -------------------------------------------------
+
+    fn param_fetch(&self, wait_version: u64) -> Result<Response> {
+        if wait_version != NO_WAIT {
+            let mut st = lock_unpoisoned(&self.state);
+            while self.ps.version() < wait_version {
+                self.ensure_live(&st)?;
+                st = self
+                    .fetch_cv
+                    .wait_timeout(st, WAIT_POLL)
+                    .unwrap_or_else(|p| p.into_inner())
+                    .0;
+            }
+        }
+        let (params, version) = self.ps.fetch();
+        Ok(Response::Params {
+            version,
+            params: params.iter().map(super::wire::WireMat::from_matrix).collect(),
+        })
+    }
+
+    fn param_submit(&self, part: usize, s: ParamSubmit) -> Result<Response> {
+        let grads: Vec<Matrix> = s.grads.iter().map(|g| g.to_matrix()).collect();
+        let report = StepReport {
+            loss: s.loss,
+            compute_t: s.compute_t,
+            pull_io: s.pull_io,
+            push_io: s.push_io,
+            straggle: s.straggle,
+            stale_age: s.stale_age,
+        };
+        match s.mode {
+            MODE_SYNC => self.submit_sync(part, s.slot as usize, &grads, report),
+            MODE_ASYNC => self.submit_async(&grads, s.fetched_version, report),
+            other => Err(eyre!("unknown submit mode {other}")),
+        }
+    }
+
+    fn submit_sync(
+        &self,
+        part: usize,
+        slot: usize,
+        grads: &[Matrix],
+        report: StepReport,
+    ) -> Result<Response> {
+        if self.ctx.cfg.method != Method::Digest {
+            return Err(eyre!("sync submit on a {:?} run", self.ctx.cfg.method));
+        }
+        if slot != part {
+            return Err(eyre!("worker {part} submitted into slot {slot}"));
+        }
+        let mut st = lock_unpoisoned(&self.state);
+        self.ensure_live(&st)?;
+        if st.reports[slot].is_some() {
+            return Err(eyre!("double submit for epoch {} slot {slot}", st.r));
+        }
+        st.reports[slot] = Some(report);
+        // submit under the state lock: the version advance and the epoch
+        // bookkeeping below must be atomic w.r.t. ParamFetch waiters, or
+        // a fast worker could slip an epoch-r+1 submit in before the
+        // books for epoch r close.
+        let filled = self.ps.submit_slot(slot, grads);
+        if filled && st.r % self.ctx.cfg.sync_interval != 0 {
+            // no PHASE_PUSHES barrier on non-exchange epochs: the round
+            // is complete the moment the last gradient lands
+            self.finish_epoch(&mut st)?;
+        }
+        self.fetch_cv.notify_all();
+        Ok(Response::SubmitOk {
+            filled,
+            stop: false,
+        })
+    }
+
+    fn submit_async(
+        &self,
+        grads: &[Matrix],
+        fetched_version: u64,
+        report: StepReport,
+    ) -> Result<Response> {
+        let cfg = &self.ctx.cfg;
+        if cfg.method != Method::DigestAsync {
+            return Err(eyre!("async submit on a {:?} run", cfg.method));
+        }
+        let target = (cfg.epochs * self.m) as u64;
+        let mut st = lock_unpoisoned(&self.state);
+        self.ensure_live(&st)?;
+        if st.updates >= target {
+            // late straggler after the run completed: drop, tell it to stop
+            return Ok(Response::SubmitOk {
+                filled: false,
+                stop: true,
+            });
+        }
+        self.ps.submit_async(grads, fetched_version);
+        st.updates += 1;
+        st.ps_bytes += 2 * self.ctx.param_bytes();
+        st.window_loss += report.loss as f64;
+        st.window_n += 1;
+        if let Some(a) = report.stale_age {
+            st.window_age = Some(st.window_age.map_or(a, |b| b.max(a)));
+        }
+        let mut bd = EpochBreakdown::default();
+        bd.compute = report.compute_t;
+        bd.kvs_io = report.pull_io + report.push_io;
+        bd.straggle = report.straggle;
+        let last = st.updates == target;
+        if st.updates % self.m as u64 == 0 {
+            self.async_window(&mut st, last, bd)?;
+        }
+        let stop = st.updates >= target;
+        if stop {
+            st.async_done = true;
+        }
+        self.fetch_cv.notify_all();
+        Ok(Response::SubmitOk {
+            filled: true,
+            stop,
+        })
+    }
+
+    /// Close one async logging window (every `parts` updates).  `vtime`
+    /// is wall-clock here — a real multi-process run has no virtual
+    /// event queue to replay (see module docs).
+    fn async_window(
+        &self,
+        st: &mut CentralState,
+        last: bool,
+        mut bd: EpochBreakdown,
+    ) -> Result<()> {
+        let cfg = &self.ctx.cfg;
+        let epoch = (st.updates / self.m as u64 - 1) as usize;
+        let wall = self.t0.elapsed().as_secs_f64();
+        let evaluate = epoch % cfg.eval_every == 0 || last;
+        let (val, test) = if evaluate {
+            let (p, _) = self.ps.fetch();
+            let (v, t) = self.ctx.global_eval(&p)?;
+            st.best_val = st.best_val.max(v);
+            st.final_val = v;
+            st.final_test = t;
+            (v, t)
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+        let wire_total = self.wire_total();
+        bd.max_stale_age = st.window_age.take();
+        // window duration: vtime tracks the previous window's wall mark
+        bd.total = (wall - st.vtime).max(0.0);
+        bd.wire_bytes = wire_total.saturating_sub(st.wire_seen);
+        st.wire_seen = wire_total;
+        st.vtime = wall;
+        st.points.push(LogPoint {
+            epoch,
+            vtime: wall,
+            wall,
+            train_loss: if st.window_n > 0 {
+                st.window_loss / st.window_n as f64
+            } else {
+                f64::NAN
+            },
+            val_f1: val,
+            test_f1: test,
+            kvs_bytes: self.ctx.kvs.metrics().total_bytes(),
+            ps_bytes: st.ps_bytes,
+            wire_bytes: wire_total,
+        });
+        st.breakdowns.push(bd);
+        st.window_loss = 0.0;
+        st.window_n = 0;
+        st.r += 1;
+        Ok(())
+    }
+
+    // ---- sync barrier ----------------------------------------------------
+
+    fn barrier(&self, _part: usize, epoch: u64, phase: u8) -> Result<Response> {
+        if phase > PHASE_PUSHES {
+            return Err(eyre!("unknown barrier phase {phase}"));
+        }
+        let idx = phase as usize;
+        let mut st = lock_unpoisoned(&self.state);
+        self.ensure_live(&st)?;
+        st.barrier_count[idx] += 1;
+        if st.barrier_count[idx] == self.m {
+            if phase == PHASE_PUSHES {
+                // all pulls, submits and pushes for this epoch have
+                // landed: close the books before opening the barrier
+                if epoch as usize != st.r {
+                    return Err(eyre!(
+                        "push barrier for epoch {epoch} but bookkeeping is at {}",
+                        st.r
+                    ));
+                }
+                self.finish_epoch(&mut st)?;
+            }
+            st.barrier_count[idx] = 0;
+            st.barrier_gen[idx] += 1;
+            self.barrier_cv.notify_all();
+        } else {
+            let gen = st.barrier_gen[idx];
+            while st.barrier_gen[idx] == gen {
+                self.ensure_live(&st)?;
+                st = self
+                    .barrier_cv
+                    .wait_timeout(st, WAIT_POLL)
+                    .unwrap_or_else(|p| p.into_inner())
+                    .0;
+            }
+        }
+        Ok(Response::BarrierOk)
+    }
+
+    /// The daemon's copy of `SyncSession::step_epoch`'s bookkeeping
+    /// tail: slot-ordered aggregation, virtual clock, eval cadence, log
+    /// point.  Caller holds the state lock at a quiescent point.
+    fn finish_epoch(&self, st: &mut CentralState) -> Result<()> {
+        let ctx = self.ctx;
+        let cfg = &ctx.cfg;
+        let r = st.r;
+        let mut reports = Vec::with_capacity(self.m);
+        for slot in 0..self.m {
+            reports.push(st.reports[slot].take().ok_or_else(|| {
+                eyre!("epoch {r} bookkeeping ran with no report from worker {slot}")
+            })?);
+        }
+        let (mut bd, loss_sum) = aggregate_epoch(ctx, &reports);
+        st.ps_bytes += self.m as u64 * 2 * ctx.param_bytes();
+        st.vtime += bd.total;
+        let wire_total = self.wire_total();
+        bd.wire_bytes = wire_total.saturating_sub(st.wire_seen);
+        st.wire_seen = wire_total;
+        st.breakdowns.push(bd);
+        let evaluate = r % cfg.eval_every == 0 || r + 1 == cfg.epochs;
+        let (val, test) = if evaluate {
+            let (p, _) = self.ps.fetch();
+            let (v, t) = ctx.global_eval(&p)?;
+            st.best_val = st.best_val.max(v);
+            st.final_val = v;
+            st.final_test = t;
+            (v, t)
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+        st.points.push(LogPoint {
+            epoch: r,
+            vtime: st.vtime,
+            wall: self.t0.elapsed().as_secs_f64(),
+            train_loss: loss_sum / self.m as f64,
+            val_f1: val,
+            test_f1: test,
+            kvs_bytes: ctx.kvs.metrics().total_bytes(),
+            ps_bytes: st.ps_bytes,
+            wire_bytes: wire_total,
+        });
+        st.r += 1;
+        Ok(())
+    }
+
+    // ---- shutdown --------------------------------------------------------
+
+    /// A worker finished its loop: wait for the whole run to complete,
+    /// record its final state, and (once all snaps are in, sync only)
+    /// write the checkpoint.  Replies with the final global scores.
+    fn finish(&self, part: usize, snap: super::wire::FinishSnap) -> Result<Response> {
+        let cfg = &self.ctx.cfg;
+        let is_async = cfg.method == Method::DigestAsync;
+        let mut st = lock_unpoisoned(&self.state);
+        loop {
+            let complete = if is_async {
+                st.async_done
+            } else {
+                st.r >= cfg.epochs
+            };
+            if complete {
+                break;
+            }
+            self.ensure_live(&st)?;
+            st = self
+                .fetch_cv
+                .wait_timeout(st, WAIT_POLL)
+                .unwrap_or_else(|p| p.into_inner())
+                .0;
+        }
+        self.ensure_live(&st)?;
+        if snap.part as usize != part {
+            return Err(eyre!("finish snap claims part {}, conn is {part}", snap.part));
+        }
+        if st.finishes[part].is_some() {
+            return Err(eyre!("worker {part} finished twice"));
+        }
+        st.finishes[part] = Some(WorkerSnap {
+            local_epoch: snap.local_epoch as usize,
+            fetched_version: snap.fetched_version,
+            rng: snap.rng,
+            last_pull_age: snap.last_pull_age,
+            stale: snap.stale.iter().map(|m| m.to_matrix()).collect(),
+        });
+        st.finished += 1;
+        if st.finished == self.m {
+            if let Some(path) = &self.save_to {
+                self.save_checkpoint(&mut st, path)?;
+            }
+            self.fetch_cv.notify_all();
+        }
+        Ok(Response::FinishOk {
+            final_val: st.final_val,
+            final_test: st.final_test,
+        })
+    }
+
+    /// Assemble the same `TrainState` an in-memory `SyncSession`
+    /// snapshot would produce and save it — the byte-identity
+    /// deliverable.  Sync only (bind rejects async + save).
+    fn save_checkpoint(&self, st: &mut CentralState, path: &str) -> Result<()> {
+        let ctx = self.ctx;
+        let mut state = base_state(ctx, "digest")?;
+        state.epoch = st.r;
+        state.vtime = st.vtime;
+        state.ps_bytes = st.ps_bytes;
+        state.best_val_f1 = st.best_val;
+        state.final_val_f1 = st.final_val;
+        state.final_test_f1 = st.final_test;
+        state.ps = self.ps.export_state();
+        state.workers = st
+            .finishes
+            .iter_mut()
+            .enumerate()
+            .map(|(p, s)| s.take().ok_or_else(|| eyre!("missing snap for worker {p}")))
+            .collect::<Result<Vec<_>>>()?;
+        state.extra = Json::Null;
+        state_checkpoint(ctx, state).save(path)?;
+        Ok(())
+    }
+
+    fn into_outcome(self) -> Result<DistOutcome> {
+        let st = self
+            .state
+            .into_inner()
+            .unwrap_or_else(|p| p.into_inner());
+        if let Some(e) = st.err {
+            return Err(eyre!("run aborted: {e}"));
+        }
+        let wire_bytes = self.wire_in.load(Ordering::Relaxed)
+            + self.wire_out.load(Ordering::Relaxed);
+        let updates = if self.ctx.cfg.method == Method::DigestAsync {
+            st.updates
+        } else {
+            (st.r * self.m) as u64
+        };
+        Ok(DistOutcome {
+            final_val_f1: st.final_val,
+            final_test_f1: st.final_test,
+            best_val_f1: st.best_val,
+            total_vtime: st.vtime,
+            points: st.points,
+            breakdowns: st.breakdowns,
+            kvs: self.ctx.kvs.metrics(),
+            wire_bytes,
+            updates,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bind_rejects_non_digest_methods() {
+        let mut cfg = RunConfig::default();
+        cfg.method = Method::Llcg;
+        let err = PsServer::bind(cfg, "127.0.0.1:0", None).unwrap_err();
+        assert!(format!("{err}").contains("digest"), "{err}");
+    }
+
+    #[test]
+    fn bind_rejects_async_with_save() {
+        let mut cfg = RunConfig::default();
+        cfg.method = Method::DigestAsync;
+        let err =
+            PsServer::bind(cfg, "127.0.0.1:0", Some("/tmp/x.json".into())).unwrap_err();
+        assert!(format!("{err}").contains("sync-only"), "{err}");
+    }
+
+    #[test]
+    fn bind_rejects_zero_partitions() {
+        let mut cfg = RunConfig::default();
+        cfg.parts = 0;
+        assert!(PsServer::bind(cfg, "127.0.0.1:0", None).is_err());
+    }
+
+    #[test]
+    fn bound_server_reports_an_ephemeral_port() {
+        let srv = PsServer::bind(RunConfig::default(), "127.0.0.1:0", None).unwrap();
+        assert_ne!(srv.local_addr().unwrap().port(), 0);
+    }
+}

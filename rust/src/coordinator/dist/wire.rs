@@ -1,0 +1,1260 @@
+//! `digest-wire-v1` **training-plane** codec: the rep/param frames a
+//! `digest worker` process exchanges with the `digest ps-serve` daemon.
+//!
+//! Same transport grammar as the serving plane (`serve::net::wire`):
+//! length-prefixed frames from [`crate::util::frame`], little-endian
+//! primitives, floats as IEEE-754 bit patterns so every value
+//! round-trips bit-exactly, `ByteReader::finish()` rejecting trailing
+//! bytes.  Training opcodes live in the 0x10+ block so a confused peer
+//! that connects a worker to an inference daemon (or vice versa) gets a
+//! structured unknown-opcode error, not silent misparsing.
+//!
+//! Two push encodings shrink the dominant flow (rep pushes) without
+//! touching pulls, which always return full f32 rows so every worker's
+//! stale cache stays bit-identical to the in-memory backend:
+//!
+//! * **delta** ([`ENC_DELTA`], `wire_delta=true`, default): the client
+//!   fingerprints each row (FNV-1a over the f32 bit patterns) and sends
+//!   only rows whose fingerprint changed since its last push; the
+//!   daemon reconstructs unchanged rows from its per-worker row cache.
+//!   Lossless — the store ends up byte-identical.
+//! * **f16** ([`ENC_F16`], `wire_f16=true`, off by default): row values
+//!   travel as IEEE-754 binary16 (round-to-nearest-even), halving row
+//!   bytes at a bounded quantization error.  Lossy — documented and
+//!   gated off wherever bit-identity is asserted.
+
+use crate::tensor::Matrix;
+use crate::util::frame::{put_f32, put_f64, put_str, put_u32, put_u64, put_u8, ByteReader};
+use crate::{eyre, Result};
+
+/// Protocol identity carried in the training-plane hello.  Distinct
+/// from the serving plane's `digest-wire-v1` tag so a version mismatch
+/// (or a worker dialing an inference daemon) fails loudly at handshake.
+pub const TRAIN_WIRE_VERSION: &str = "digest-wire-v1-train";
+
+// ---- opcodes (request | 0x80 = its response) ---------------------------
+
+pub const OP_DHELLO: u8 = 0x10;
+pub const OP_REP_PUSH: u8 = 0x11;
+pub const OP_REP_PULL: u8 = 0x12;
+pub const OP_PARAM_FETCH: u8 = 0x13;
+pub const OP_PARAM_SUBMIT: u8 = 0x14;
+pub const OP_BARRIER: u8 = 0x15;
+pub const OP_FINISH: u8 = 0x16;
+/// Structured error response (shared opcode space with `serve::net`).
+pub const OP_ERROR: u8 = 0x7F;
+
+/// Rep-push encoding bitflags (OR-able).
+pub const ENC_F16: u8 = 0b01;
+pub const ENC_DELTA: u8 = 0b10;
+
+/// Barrier phases of one sync epoch (Alg. 1's two parallel phases).
+pub const PHASE_PULLS: u8 = 0;
+pub const PHASE_PUSHES: u8 = 1;
+
+/// `ParamSubmit.mode`: slot-ordered sync reduction vs apply-on-arrival.
+pub const MODE_SYNC: u8 = 0;
+pub const MODE_ASYNC: u8 = 1;
+
+/// `ParamFetch.wait_version` sentinel: return the current parameters
+/// immediately instead of blocking until a version is reached.
+pub const NO_WAIT: u64 = u64::MAX;
+
+fn u32_len(n: usize, what: &str) -> Result<u32> {
+    u32::try_from(n).map_err(|_| eyre!("{what} count {n} exceeds u32"))
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn read_u16(r: &mut ByteReader) -> Result<u16> {
+    let lo = r.u8()? as u16;
+    let hi = r.u8()? as u16;
+    Ok(lo | (hi << 8))
+}
+
+fn put_opt_u64(out: &mut Vec<u8>, v: Option<u64>) {
+    match v {
+        Some(x) => {
+            put_u8(out, 1);
+            put_u64(out, x);
+        }
+        None => put_u8(out, 0),
+    }
+}
+
+fn read_opt_u64(r: &mut ByteReader) -> Result<Option<u64>> {
+    match r.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(r.u64()?)),
+        t => Err(eyre!("invalid Option tag {t}")),
+    }
+}
+
+// ---- f16 (IEEE-754 binary16) conversion --------------------------------
+
+/// f32 → binary16 bits, round-to-nearest-even (overflow → ±inf,
+/// underflow → signed zero, NaN stays NaN).
+pub fn f32_to_f16_bits(v: f32) -> u16 {
+    let bits = v.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp32 = ((bits >> 23) & 0xff) as i32;
+    let frac = bits & 0x007f_ffff;
+    if exp32 == 0xff {
+        // inf / NaN; force a mantissa bit so NaN never collapses to inf
+        return sign | 0x7c00 | if frac != 0 { 0x0200 } else { 0 };
+    }
+    let unbiased = exp32 - 127;
+    if unbiased >= 16 {
+        return sign | 0x7c00; // overflow to inf
+    }
+    if unbiased >= -14 {
+        // normal half
+        let mut out = (((unbiased + 15) as u32) << 10) | (frac >> 13);
+        // round to nearest, ties to even (a carry may bump the exponent
+        // — that is exactly the right rounding, 65520.0 → inf included)
+        if (frac & 0x1000) != 0 && ((frac & 0x0fff) != 0 || (out & 1) == 1) {
+            out += 1;
+        }
+        return sign | out as u16;
+    }
+    if unbiased >= -25 {
+        // subnormal half
+        let frac = frac | 0x0080_0000; // implicit leading 1
+        let shift = (-14 - unbiased) as u32 + 13;
+        let mut out = frac >> shift;
+        let rem = frac & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        if rem > half || (rem == half && (out & 1) == 1) {
+            out += 1;
+        }
+        return sign | out as u16;
+    }
+    sign // underflow to signed zero
+}
+
+/// binary16 bits → f32 (exact: every half value is representable).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let frac = (h & 0x03ff) as u32;
+    if exp == 0x1f {
+        return f32::from_bits(sign | 0x7f80_0000 | (frac << 13));
+    }
+    if exp == 0 {
+        if frac == 0 {
+            return f32::from_bits(sign); // signed zero
+        }
+        // subnormal half: normalize into an f32 exponent
+        let mut e = -14i32;
+        let mut f = frac;
+        while f & 0x0400 == 0 {
+            f <<= 1;
+            e -= 1;
+        }
+        f &= 0x03ff;
+        return f32::from_bits(sign | (((e + 127) as u32) << 23) | (f << 13));
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (frac << 13))
+}
+
+// ---- row fingerprint (delta encoding) ----------------------------------
+
+/// FNV-1a 64 over a row's f32 bit patterns: the delta encoder's
+/// "did this row change since my last push?" test.  Bit-pattern based,
+/// so `-0.0` vs `0.0` and NaN payload changes all count as changes —
+/// the conservative direction (a false "changed" costs bytes, a false
+/// "unchanged" would corrupt the store).
+pub fn row_fingerprint(row: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in row {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+// ---- matrix codec ------------------------------------------------------
+
+/// A matrix on the wire: shape + row-major f32 data.  Mirror of
+/// [`crate::tensor::Matrix`] with `PartialEq` for codec round-trip
+/// tests; conversions are exact copies.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireMat {
+    pub rows: u32,
+    pub cols: u32,
+    pub data: Vec<f32>,
+}
+
+impl WireMat {
+    pub fn from_matrix(m: &Matrix) -> Self {
+        WireMat {
+            rows: m.rows as u32,
+            cols: m.cols as u32,
+            data: m.data.clone(),
+        }
+    }
+
+    pub fn to_matrix(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows as usize, self.cols as usize);
+        m.data.copy_from_slice(&self.data);
+        m
+    }
+}
+
+fn put_mat(out: &mut Vec<u8>, m: &WireMat) -> Result<()> {
+    let n = (m.rows as u64) * (m.cols as u64);
+    if n != m.data.len() as u64 {
+        return Err(eyre!(
+            "matrix {}x{} carries {} values",
+            m.rows,
+            m.cols,
+            m.data.len()
+        ));
+    }
+    put_u32(out, m.rows);
+    put_u32(out, m.cols);
+    for &v in &m.data {
+        put_f32(out, v);
+    }
+    Ok(())
+}
+
+fn read_mat(r: &mut ByteReader) -> Result<WireMat> {
+    let rows = r.u32()?;
+    let cols = r.u32()?;
+    let n = (rows as u64) * (cols as u64);
+    if n * 4 > r.remaining() as u64 {
+        return Err(eyre!(
+            "matrix {rows}x{cols} needs {} bytes, {} remain",
+            n * 4,
+            r.remaining()
+        ));
+    }
+    let mut data = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        data.push(r.f32()?);
+    }
+    Ok(WireMat { rows, cols, data })
+}
+
+fn put_mats(out: &mut Vec<u8>, ms: &[WireMat], what: &str) -> Result<()> {
+    put_u32(out, u32_len(ms.len(), what)?);
+    for m in ms {
+        put_mat(out, m)?;
+    }
+    Ok(())
+}
+
+fn read_mats(r: &mut ByteReader) -> Result<Vec<WireMat>> {
+    let n = r.u32()? as usize;
+    let mut out = Vec::with_capacity(n.min(1 << 10));
+    for _ in 0..n {
+        out.push(read_mat(r)?);
+    }
+    Ok(out)
+}
+
+fn put_u32s(out: &mut Vec<u8>, vs: &[u32], what: &str) -> Result<()> {
+    put_u32(out, u32_len(vs.len(), what)?);
+    for &v in vs {
+        put_u32(out, v);
+    }
+    Ok(())
+}
+
+fn read_u32s(r: &mut ByteReader) -> Result<Vec<u32>> {
+    let n = r.u32()? as usize;
+    if n * 4 > r.remaining() {
+        return Err(eyre!(
+            "u32 list of {n} needs {} bytes, {} remain",
+            n * 4,
+            r.remaining()
+        ));
+    }
+    let mut out = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        out.push(r.u32()?);
+    }
+    Ok(out)
+}
+
+// ---- handshake ---------------------------------------------------------
+
+/// Worker → daemon handshake: full run identity.  The daemon rejects
+/// any field that disagrees with its own config — both processes must
+/// rebuild the identical dataset/partition/plan state from the same
+/// `RunConfig`, or determinism (and correctness) is gone.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DHello {
+    pub version: String,
+    pub part: u32,
+    pub parts: u32,
+    pub dataset: String,
+    pub model: String,
+    pub method: String,
+    pub epochs: u64,
+    pub sync_interval: u64,
+    pub eval_every: u64,
+    pub seed: u64,
+    pub wire_delta: bool,
+    pub wire_f16: bool,
+}
+
+impl DHello {
+    pub fn from_config(cfg: &crate::config::RunConfig, part: usize) -> Self {
+        DHello {
+            version: TRAIN_WIRE_VERSION.to_string(),
+            part: part as u32,
+            parts: cfg.parts as u32,
+            dataset: cfg.dataset.clone(),
+            model: cfg.model.as_str().to_string(),
+            method: cfg.method.as_str().to_string(),
+            epochs: cfg.epochs as u64,
+            sync_interval: cfg.sync_interval as u64,
+            eval_every: cfg.eval_every as u64,
+            seed: cfg.seed,
+            wire_delta: cfg.wire_delta,
+            wire_f16: cfg.wire_f16,
+        }
+    }
+
+    /// Daemon-side validation against its own run config.
+    pub fn validate(&self, cfg: &crate::config::RunConfig) -> Result<()> {
+        let want = DHello::from_config(cfg, self.part as usize);
+        if self.version != want.version {
+            return Err(eyre!(
+                "wire version mismatch: worker {:?}, daemon {:?}",
+                self.version,
+                want.version
+            ));
+        }
+        if self.part >= cfg.parts as u32 {
+            return Err(eyre!(
+                "worker part {} out of range (daemon has {} parts)",
+                self.part,
+                cfg.parts
+            ));
+        }
+        if *self != want {
+            return Err(eyre!(
+                "run config mismatch: worker {self:?} vs daemon {want:?} — both \
+                 processes must be launched with identical training configs"
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ---- rep push ----------------------------------------------------------
+
+/// One layer's representation push.  `rows` is row-major with `d`
+/// columns: `changed.len()` rows under [`ENC_DELTA`] (indices into
+/// `nodes`, strictly increasing), else `nodes.len()` rows.  Under
+/// [`ENC_F16`] the rows travel as binary16 and are dequantized to f32
+/// at decode (so the in-memory struct always holds f32).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RepPush {
+    pub layer: u32,
+    pub version: u64,
+    pub d: u32,
+    pub encoding: u8,
+    pub nodes: Vec<u32>,
+    pub changed: Vec<u32>,
+    pub rows: Vec<f32>,
+}
+
+impl RepPush {
+    fn check(&self) -> Result<()> {
+        if self.encoding & !(ENC_F16 | ENC_DELTA) != 0 {
+            return Err(eyre!("unknown rep-push encoding {:#04x}", self.encoding));
+        }
+        let n_rows = if self.encoding & ENC_DELTA != 0 {
+            let n = self.nodes.len() as u32;
+            let mut prev: Option<u32> = None;
+            for &c in &self.changed {
+                if c >= n {
+                    return Err(eyre!("changed index {c} out of range ({n} nodes)"));
+                }
+                if let Some(p) = prev {
+                    if c <= p {
+                        return Err(eyre!("changed indices not strictly increasing"));
+                    }
+                }
+                prev = Some(c);
+            }
+            self.changed.len()
+        } else {
+            if !self.changed.is_empty() {
+                return Err(eyre!("changed list present without ENC_DELTA"));
+            }
+            self.nodes.len()
+        };
+        if self.rows.len() != n_rows * self.d as usize {
+            return Err(eyre!(
+                "rep push carries {} values, want {} rows x {} cols",
+                self.rows.len(),
+                n_rows,
+                self.d
+            ));
+        }
+        Ok(())
+    }
+
+    fn encode_into(&self, out: &mut Vec<u8>) -> Result<()> {
+        self.check()?;
+        put_u32(out, self.layer);
+        put_u64(out, self.version);
+        put_u32(out, self.d);
+        put_u8(out, self.encoding);
+        put_u32s(out, &self.nodes, "push nodes")?;
+        put_u32s(out, &self.changed, "push changed")?;
+        put_u32(out, u32_len(self.rows.len(), "push values")?);
+        if self.encoding & ENC_F16 != 0 {
+            for &v in &self.rows {
+                put_u16(out, f32_to_f16_bits(v));
+            }
+        } else {
+            for &v in &self.rows {
+                put_f32(out, v);
+            }
+        }
+        Ok(())
+    }
+
+    fn decode_from(r: &mut ByteReader) -> Result<Self> {
+        let layer = r.u32()?;
+        let version = r.u64()?;
+        let d = r.u32()?;
+        let encoding = r.u8()?;
+        let nodes = read_u32s(r)?;
+        let changed = read_u32s(r)?;
+        let n = r.u32()? as usize;
+        let width = if encoding & ENC_F16 != 0 { 2 } else { 4 };
+        if n * width > r.remaining() {
+            return Err(eyre!(
+                "push rows need {} bytes, {} remain",
+                n * width,
+                r.remaining()
+            ));
+        }
+        let mut rows = Vec::with_capacity(n.min(1 << 20));
+        if encoding & ENC_F16 != 0 {
+            for _ in 0..n {
+                rows.push(f16_bits_to_f32(read_u16(r)?));
+            }
+        } else {
+            for _ in 0..n {
+                rows.push(r.f32()?);
+            }
+        }
+        let push = RepPush {
+            layer,
+            version,
+            d,
+            encoding,
+            nodes,
+            changed,
+            rows,
+        };
+        push.check()?;
+        Ok(push)
+    }
+}
+
+// ---- param submit / finish ---------------------------------------------
+
+/// One worker's per-epoch gradient submission plus the cost-model
+/// numbers the daemon feeds into `aggregate_epoch` — exactly the
+/// in-memory `StepReport`, so the daemon's virtual clock is
+/// bit-identical to `SyncSession`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSubmit {
+    pub slot: u32,
+    pub mode: u8,
+    pub fetched_version: u64,
+    pub grads: Vec<WireMat>,
+    pub loss: f32,
+    pub compute_t: f64,
+    pub pull_io: f64,
+    pub push_io: f64,
+    pub straggle: f64,
+    pub stale_age: Option<u64>,
+}
+
+/// Worker → daemon end-of-run state dump: everything the daemon needs
+/// to assemble this worker's `WorkerSnap` in the final checkpoint, so
+/// a 2-process run's checkpoint is byte-identical to the in-memory one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FinishSnap {
+    pub part: u32,
+    pub local_epoch: u64,
+    pub fetched_version: u64,
+    pub rng: [u64; 4],
+    pub last_pull_age: Option<u64>,
+    pub stale: Vec<WireMat>,
+}
+
+// ---- request / response enums ------------------------------------------
+
+/// Worker → daemon messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Hello(DHello),
+    RepPush(RepPush),
+    RepPull {
+        layer: u32,
+        d: u32,
+        nodes: Vec<u32>,
+    },
+    ParamFetch {
+        wait_version: u64,
+    },
+    ParamSubmit(ParamSubmit),
+    Barrier {
+        epoch: u64,
+        phase: u8,
+    },
+    Finish(FinishSnap),
+}
+
+/// Daemon → worker replies (request opcode | 0x80, or [`OP_ERROR`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    HelloOk {
+        version: u64,
+        parts: u32,
+    },
+    RepPushOk,
+    /// Full f32 rows for the requested nodes (missing rows zero), plus
+    /// the `PullInfo` fields the client rebuilds locally.
+    PullReps {
+        n: u32,
+        d: u32,
+        found: u32,
+        missing: u32,
+        oldest: u64,
+        newest: u64,
+        rows: Vec<f32>,
+    },
+    Params {
+        version: u64,
+        params: Vec<WireMat>,
+    },
+    SubmitOk {
+        filled: bool,
+        stop: bool,
+    },
+    BarrierOk,
+    FinishOk {
+        final_val: f64,
+        final_test: f64,
+    },
+    Error {
+        message: String,
+    },
+}
+
+impl Request {
+    pub fn encode(&self) -> Result<(u8, Vec<u8>)> {
+        let mut out = Vec::new();
+        let op = match self {
+            Request::Hello(h) => {
+                put_str(&mut out, &h.version)?;
+                put_u32(&mut out, h.part);
+                put_u32(&mut out, h.parts);
+                put_str(&mut out, &h.dataset)?;
+                put_str(&mut out, &h.model)?;
+                put_str(&mut out, &h.method)?;
+                put_u64(&mut out, h.epochs);
+                put_u64(&mut out, h.sync_interval);
+                put_u64(&mut out, h.eval_every);
+                put_u64(&mut out, h.seed);
+                put_u8(&mut out, h.wire_delta as u8);
+                put_u8(&mut out, h.wire_f16 as u8);
+                OP_DHELLO
+            }
+            Request::RepPush(p) => {
+                p.encode_into(&mut out)?;
+                OP_REP_PUSH
+            }
+            Request::RepPull { layer, d, nodes } => {
+                put_u32(&mut out, *layer);
+                put_u32(&mut out, *d);
+                put_u32s(&mut out, nodes, "pull nodes")?;
+                OP_REP_PULL
+            }
+            Request::ParamFetch { wait_version } => {
+                put_u64(&mut out, *wait_version);
+                OP_PARAM_FETCH
+            }
+            Request::ParamSubmit(s) => {
+                put_u32(&mut out, s.slot);
+                put_u8(&mut out, s.mode);
+                put_u64(&mut out, s.fetched_version);
+                put_mats(&mut out, &s.grads, "gradients")?;
+                put_f32(&mut out, s.loss);
+                put_f64(&mut out, s.compute_t);
+                put_f64(&mut out, s.pull_io);
+                put_f64(&mut out, s.push_io);
+                put_f64(&mut out, s.straggle);
+                put_opt_u64(&mut out, s.stale_age);
+                OP_PARAM_SUBMIT
+            }
+            Request::Barrier { epoch, phase } => {
+                put_u64(&mut out, *epoch);
+                put_u8(&mut out, *phase);
+                OP_BARRIER
+            }
+            Request::Finish(f) => {
+                put_u32(&mut out, f.part);
+                put_u64(&mut out, f.local_epoch);
+                put_u64(&mut out, f.fetched_version);
+                for &x in &f.rng {
+                    put_u64(&mut out, x);
+                }
+                put_opt_u64(&mut out, f.last_pull_age);
+                put_mats(&mut out, &f.stale, "stale layers")?;
+                OP_FINISH
+            }
+        };
+        Ok((op, out))
+    }
+
+    pub fn decode(opcode: u8, payload: &[u8]) -> Result<Self> {
+        let mut r = ByteReader::new(payload);
+        let req = match opcode {
+            OP_DHELLO => {
+                let h = DHello {
+                    version: r.str()?,
+                    part: r.u32()?,
+                    parts: r.u32()?,
+                    dataset: r.str()?,
+                    model: r.str()?,
+                    method: r.str()?,
+                    epochs: r.u64()?,
+                    sync_interval: r.u64()?,
+                    eval_every: r.u64()?,
+                    seed: r.u64()?,
+                    wire_delta: r.u8()? != 0,
+                    wire_f16: r.u8()? != 0,
+                };
+                Request::Hello(h)
+            }
+            OP_REP_PUSH => Request::RepPush(RepPush::decode_from(&mut r)?),
+            OP_REP_PULL => Request::RepPull {
+                layer: r.u32()?,
+                d: r.u32()?,
+                nodes: read_u32s(&mut r)?,
+            },
+            OP_PARAM_FETCH => Request::ParamFetch {
+                wait_version: r.u64()?,
+            },
+            OP_PARAM_SUBMIT => Request::ParamSubmit(ParamSubmit {
+                slot: r.u32()?,
+                mode: r.u8()?,
+                fetched_version: r.u64()?,
+                grads: read_mats(&mut r)?,
+                loss: r.f32()?,
+                compute_t: r.f64()?,
+                pull_io: r.f64()?,
+                push_io: r.f64()?,
+                straggle: r.f64()?,
+                stale_age: read_opt_u64(&mut r)?,
+            }),
+            OP_BARRIER => Request::Barrier {
+                epoch: r.u64()?,
+                phase: r.u8()?,
+            },
+            OP_FINISH => {
+                let part = r.u32()?;
+                let local_epoch = r.u64()?;
+                let fetched_version = r.u64()?;
+                let rng = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+                Request::Finish(FinishSnap {
+                    part,
+                    local_epoch,
+                    fetched_version,
+                    rng,
+                    last_pull_age: read_opt_u64(&mut r)?,
+                    stale: read_mats(&mut r)?,
+                })
+            }
+            other => return Err(eyre!("unknown training request opcode {other:#04x}")),
+        };
+        r.finish()?;
+        Ok(req)
+    }
+}
+
+impl Response {
+    pub fn encode(&self) -> Result<(u8, Vec<u8>)> {
+        let mut out = Vec::new();
+        let op = match self {
+            Response::HelloOk { version, parts } => {
+                put_u64(&mut out, *version);
+                put_u32(&mut out, *parts);
+                OP_DHELLO | 0x80
+            }
+            Response::RepPushOk => OP_REP_PUSH | 0x80,
+            Response::PullReps {
+                n,
+                d,
+                found,
+                missing,
+                oldest,
+                newest,
+                rows,
+            } => {
+                if rows.len() as u64 != (*n as u64) * (*d as u64) {
+                    return Err(eyre!(
+                        "pull reply carries {} values, want {n} x {d}",
+                        rows.len()
+                    ));
+                }
+                put_u32(&mut out, *n);
+                put_u32(&mut out, *d);
+                put_u32(&mut out, *found);
+                put_u32(&mut out, *missing);
+                put_u64(&mut out, *oldest);
+                put_u64(&mut out, *newest);
+                for &v in rows {
+                    put_f32(&mut out, v);
+                }
+                OP_REP_PULL | 0x80
+            }
+            Response::Params { version, params } => {
+                put_u64(&mut out, *version);
+                put_mats(&mut out, params, "parameters")?;
+                OP_PARAM_FETCH | 0x80
+            }
+            Response::SubmitOk { filled, stop } => {
+                put_u8(&mut out, *filled as u8);
+                put_u8(&mut out, *stop as u8);
+                OP_PARAM_SUBMIT | 0x80
+            }
+            Response::BarrierOk => OP_BARRIER | 0x80,
+            Response::FinishOk {
+                final_val,
+                final_test,
+            } => {
+                put_f64(&mut out, *final_val);
+                put_f64(&mut out, *final_test);
+                OP_FINISH | 0x80
+            }
+            Response::Error { message } => {
+                put_str(&mut out, message)?;
+                OP_ERROR
+            }
+        };
+        Ok((op, out))
+    }
+
+    pub fn decode(opcode: u8, payload: &[u8]) -> Result<Self> {
+        let mut r = ByteReader::new(payload);
+        let resp = match opcode {
+            x if x == OP_DHELLO | 0x80 => Response::HelloOk {
+                version: r.u64()?,
+                parts: r.u32()?,
+            },
+            x if x == OP_REP_PUSH | 0x80 => Response::RepPushOk,
+            x if x == OP_REP_PULL | 0x80 => {
+                let n = r.u32()?;
+                let d = r.u32()?;
+                let found = r.u32()?;
+                let missing = r.u32()?;
+                let oldest = r.u64()?;
+                let newest = r.u64()?;
+                let count = (n as u64) * (d as u64);
+                if count * 4 > r.remaining() as u64 {
+                    return Err(eyre!(
+                        "pull reply needs {} bytes, {} remain",
+                        count * 4,
+                        r.remaining()
+                    ));
+                }
+                let mut rows = Vec::with_capacity((count as usize).min(1 << 20));
+                for _ in 0..count {
+                    rows.push(r.f32()?);
+                }
+                Response::PullReps {
+                    n,
+                    d,
+                    found,
+                    missing,
+                    oldest,
+                    newest,
+                    rows,
+                }
+            }
+            x if x == OP_PARAM_FETCH | 0x80 => Response::Params {
+                version: r.u64()?,
+                params: read_mats(&mut r)?,
+            },
+            x if x == OP_PARAM_SUBMIT | 0x80 => Response::SubmitOk {
+                filled: r.u8()? != 0,
+                stop: r.u8()? != 0,
+            },
+            x if x == OP_BARRIER | 0x80 => Response::BarrierOk,
+            x if x == OP_FINISH | 0x80 => Response::FinishOk {
+                final_val: r.f64()?,
+                final_test: r.f64()?,
+            },
+            OP_ERROR => Response::Error { message: r.str()? },
+            other => return Err(eyre!("unknown training response opcode {other:#04x}")),
+        };
+        r.finish()?;
+        Ok(resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wm(rows: u32, cols: u32, base: f32) -> WireMat {
+        WireMat {
+            rows,
+            cols,
+            data: (0..rows * cols).map(|i| base + i as f32).collect(),
+        }
+    }
+
+    fn hello() -> DHello {
+        DHello {
+            version: TRAIN_WIRE_VERSION.to_string(),
+            part: 1,
+            parts: 2,
+            dataset: "karate".into(),
+            model: "gcn".into(),
+            method: "digest".into(),
+            epochs: 4,
+            sync_interval: 2,
+            eval_every: 2,
+            seed: 42,
+            wire_delta: true,
+            wire_f16: false,
+        }
+    }
+
+    fn sample_requests() -> Vec<Request> {
+        vec![
+            Request::Hello(hello()),
+            Request::RepPush(RepPush {
+                layer: 0,
+                version: 7,
+                d: 3,
+                encoding: 0,
+                nodes: vec![4, 9, 2],
+                changed: vec![],
+                rows: vec![1.0, -2.5, 0.0, 3.25, f32::MIN_POSITIVE, -0.0, 9.0, 1e30, -1e-30],
+            }),
+            Request::RepPush(RepPush {
+                layer: 1,
+                version: 9,
+                d: 2,
+                encoding: ENC_DELTA,
+                nodes: vec![10, 11, 12, 13],
+                changed: vec![0, 3],
+                rows: vec![0.5, 1.5, -4.0, 8.0],
+            }),
+            Request::RepPush(RepPush {
+                layer: 0,
+                version: 3,
+                d: 2,
+                // f16 rows: values chosen exactly representable in binary16
+                // so encode→decode→re-encode is byte-stable
+                encoding: ENC_F16 | ENC_DELTA,
+                nodes: vec![1, 2],
+                changed: vec![1],
+                rows: vec![1.5, -0.25],
+            }),
+            Request::RepPull {
+                layer: 1,
+                d: 8,
+                nodes: vec![3, 1, 4, 1, 5],
+            },
+            Request::ParamFetch { wait_version: 12 },
+            Request::ParamFetch {
+                wait_version: NO_WAIT,
+            },
+            Request::ParamSubmit(ParamSubmit {
+                slot: 1,
+                mode: MODE_SYNC,
+                fetched_version: 0,
+                grads: vec![wm(2, 3, 0.5), wm(1, 4, -2.0)],
+                loss: 0.693,
+                compute_t: 0.01,
+                pull_io: 0.002,
+                push_io: 0.0,
+                straggle: 1.5,
+                stale_age: Some(5),
+            }),
+            Request::ParamSubmit(ParamSubmit {
+                slot: 0,
+                mode: MODE_ASYNC,
+                fetched_version: 31,
+                grads: vec![wm(2, 2, 1.0)],
+                loss: 0.1,
+                compute_t: 0.02,
+                pull_io: 0.0,
+                push_io: 0.001,
+                straggle: 0.0,
+                stale_age: None,
+            }),
+            Request::Barrier {
+                epoch: 6,
+                phase: PHASE_PUSHES,
+            },
+            Request::Finish(FinishSnap {
+                part: 0,
+                local_epoch: 4,
+                fetched_version: 0,
+                rng: [1, 2, 3, u64::MAX],
+                last_pull_age: Some(2),
+                stale: vec![wm(4, 2, 0.0)],
+            }),
+        ]
+    }
+
+    fn sample_responses() -> Vec<Response> {
+        vec![
+            Response::HelloOk {
+                version: 0,
+                parts: 2,
+            },
+            Response::RepPushOk,
+            Response::PullReps {
+                n: 2,
+                d: 3,
+                found: 1,
+                missing: 1,
+                oldest: 4,
+                newest: 4,
+                rows: vec![1.0, 2.0, 3.0, 0.0, 0.0, 0.0],
+            },
+            Response::Params {
+                version: 17,
+                params: vec![wm(3, 2, 0.25), wm(2, 1, -1.0)],
+            },
+            Response::SubmitOk {
+                filled: true,
+                stop: false,
+            },
+            Response::BarrierOk,
+            Response::FinishOk {
+                final_val: 0.875,
+                final_test: 0.75,
+            },
+            Response::Error {
+                message: "part 3 out of range".into(),
+            },
+        ]
+    }
+
+    #[test]
+    fn rt_requests_byte_exact() {
+        for req in sample_requests() {
+            let (op, payload) = req.encode().unwrap();
+            let back = Request::decode(op, &payload).unwrap();
+            assert_eq!(back, req, "decode mismatch for {req:?}");
+            let (op2, payload2) = back.encode().unwrap();
+            assert_eq!((op2, &payload2), (op, &payload), "re-encode drifted");
+        }
+    }
+
+    #[test]
+    fn rt_responses_byte_exact() {
+        for resp in sample_responses() {
+            let (op, payload) = resp.encode().unwrap();
+            let back = Response::decode(op, &payload).unwrap();
+            assert_eq!(back, resp, "decode mismatch for {resp:?}");
+            let (op2, payload2) = back.encode().unwrap();
+            assert_eq!((op2, &payload2), (op, &payload), "re-encode drifted");
+        }
+    }
+
+    #[test]
+    fn truncated_payloads_are_structured_errors() {
+        for req in sample_requests() {
+            let (op, payload) = req.encode().unwrap();
+            // chop at several depths: every cut must Err, never panic
+            for cut in [0, 1, payload.len() / 2, payload.len().saturating_sub(1)] {
+                if cut >= payload.len() {
+                    continue;
+                }
+                assert!(
+                    Request::decode(op, &payload[..cut]).is_err(),
+                    "cut at {cut} of {req:?} decoded"
+                );
+            }
+        }
+        for resp in sample_responses() {
+            let (op, payload) = resp.encode().unwrap();
+            if payload.is_empty() {
+                continue;
+            }
+            for cut in [0, payload.len() / 2, payload.len() - 1] {
+                assert!(
+                    Response::decode(op, &payload[..cut]).is_err(),
+                    "cut at {cut} of {resp:?} decoded"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        for req in sample_requests() {
+            let (op, mut payload) = req.encode().unwrap();
+            payload.push(0xAA);
+            assert!(
+                Request::decode(op, &payload).is_err(),
+                "trailing byte accepted for {req:?}"
+            );
+        }
+        for resp in sample_responses() {
+            let (op, mut payload) = resp.encode().unwrap();
+            payload.push(0xAA);
+            assert!(
+                Response::decode(op, &payload).is_err(),
+                "trailing byte accepted for {resp:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_opcodes_are_rejected() {
+        for op in [0x00u8, 0x0F, 0x17, 0x42, 0xFF] {
+            assert!(Request::decode(op, &[]).is_err());
+        }
+        for op in [0x00u8, 0x10, 0x42, 0x97, 0xFF] {
+            assert!(Response::decode(op, &[]).is_err());
+        }
+    }
+
+    #[test]
+    fn nan_bit_patterns_survive_f32_rows() {
+        let weird = f32::from_bits(0x7fc0_1234);
+        let req = Request::RepPush(RepPush {
+            layer: 0,
+            version: 1,
+            d: 1,
+            encoding: 0,
+            nodes: vec![0],
+            changed: vec![],
+            rows: vec![weird],
+        });
+        let (op, payload) = req.encode().unwrap();
+        match Request::decode(op, &payload).unwrap() {
+            Request::RepPush(p) => assert_eq!(p.rows[0].to_bits(), weird.to_bits()),
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rep_push_validation_rejects_malformed_deltas() {
+        let base = RepPush {
+            layer: 0,
+            version: 1,
+            d: 2,
+            encoding: ENC_DELTA,
+            nodes: vec![1, 2, 3],
+            changed: vec![0, 2],
+            rows: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        assert!(Request::RepPush(base.clone()).encode().is_ok());
+        // out-of-range changed index
+        let mut bad = base.clone();
+        bad.changed = vec![0, 3];
+        assert!(Request::RepPush(bad).encode().is_err());
+        // non-increasing indices
+        let mut bad = base.clone();
+        bad.changed = vec![2, 0];
+        assert!(Request::RepPush(bad).encode().is_err());
+        // wrong row count
+        let mut bad = base.clone();
+        bad.rows = vec![1.0, 2.0];
+        assert!(Request::RepPush(bad).encode().is_err());
+        // changed list without the delta flag
+        let mut bad = base.clone();
+        bad.encoding = 0;
+        assert!(Request::RepPush(bad).encode().is_err());
+        // unknown encoding bits
+        let mut bad = base;
+        bad.encoding = 0b100;
+        assert!(Request::RepPush(bad).encode().is_err());
+    }
+
+    #[test]
+    fn oversized_shape_prefixes_are_rejected_before_allocation() {
+        // a pull reply claiming 1B rows x 1B cols must fail the
+        // remaining-bytes guard, not try to allocate
+        let mut payload = Vec::new();
+        put_u32(&mut payload, u32::MAX); // n
+        put_u32(&mut payload, u32::MAX); // d
+        put_u32(&mut payload, 0); // found
+        put_u32(&mut payload, 0); // missing
+        put_u64(&mut payload, 0); // oldest
+        put_u64(&mut payload, 0); // newest
+        let err = Response::decode(OP_REP_PULL | 0x80, &payload).unwrap_err();
+        assert!(err.to_string().contains("remain"), "{err}");
+
+        // same for an absurd matrix header inside Params
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 1); // version
+        put_u32(&mut payload, 1); // 1 matrix
+        put_u32(&mut payload, u32::MAX); // rows
+        put_u32(&mut payload, u32::MAX); // cols
+        let err = Response::decode(OP_PARAM_FETCH | 0x80, &payload).unwrap_err();
+        assert!(err.to_string().contains("remain"), "{err}");
+    }
+
+    #[test]
+    fn delta_encoding_shrinks_payloads() {
+        let d = 16usize;
+        let nodes: Vec<u32> = (0..100).collect();
+        let full = RepPush {
+            layer: 0,
+            version: 1,
+            d: d as u32,
+            encoding: 0,
+            nodes: nodes.clone(),
+            changed: vec![],
+            rows: vec![1.0; 100 * d],
+        };
+        let delta = RepPush {
+            layer: 0,
+            version: 1,
+            d: d as u32,
+            encoding: ENC_DELTA,
+            nodes,
+            changed: vec![17, 63],
+            rows: vec![1.0; 2 * d],
+        };
+        let full_len = Request::RepPush(full).encode().unwrap().1.len();
+        let delta_len = Request::RepPush(delta.clone()).encode().unwrap().1.len();
+        assert!(
+            delta_len * 4 < full_len,
+            "delta {delta_len} vs full {full_len}"
+        );
+        // and f16 halves the row bytes again
+        let mut half = delta;
+        half.encoding = ENC_DELTA | ENC_F16;
+        let half_len = Request::RepPush(half).encode().unwrap().1.len();
+        assert!(half_len < delta_len, "f16 {half_len} vs f32 {delta_len}");
+    }
+
+    #[test]
+    fn f16_known_values() {
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF); // f16::MAX
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7C00); // rounds to inf
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xFC00);
+        assert_eq!(f32_to_f16_bits(6.103_515_6e-5), 0x0400); // min normal
+        assert_eq!(f32_to_f16_bits(5.960_464_5e-8), 0x0001); // min subnormal
+        assert_eq!(f32_to_f16_bits(1e-9), 0x0000); // underflow
+        assert_ne!(f32_to_f16_bits(f32::NAN) & 0x03FF, 0, "NaN stays NaN");
+        // round-to-nearest-even at the tie: 1.0 + 2^-11 is exactly
+        // between 0x3C00 and 0x3C01 -> even (0x3C00)
+        assert_eq!(f32_to_f16_bits(1.0 + 2f32.powi(-11)), 0x3C00);
+        // 1.0 + 3*2^-11 ties between 0x3C01/0x3C02 -> even (0x3C02)
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 * 2f32.powi(-11)), 0x3C02);
+    }
+
+    #[test]
+    fn f16_decode_known_values() {
+        assert_eq!(f16_bits_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_bits_to_f32(0xC000), -2.0);
+        assert_eq!(f16_bits_to_f32(0x7BFF), 65504.0);
+        assert_eq!(f16_bits_to_f32(0x7C00), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(0xFC00), f32::NEG_INFINITY);
+        assert!(f16_bits_to_f32(0x7E00).is_nan());
+        assert_eq!(f16_bits_to_f32(0x0000).to_bits(), 0.0f32.to_bits());
+        assert_eq!(f16_bits_to_f32(0x8000).to_bits(), (-0.0f32).to_bits());
+        assert_eq!(f16_bits_to_f32(0x0001), 5.960_464_5e-8);
+        assert_eq!(f16_bits_to_f32(0x0400), 6.103_515_6e-5);
+    }
+
+    #[test]
+    fn f16_round_trip_is_exact_for_all_half_values() {
+        // every finite half value decodes to an f32 that re-encodes to
+        // the same bits — the property the rt tests above rely on
+        for h in 0..=0xFFFFu32 {
+            let h = h as u16;
+            let exp = (h >> 10) & 0x1f;
+            if exp == 0x1f && (h & 0x03ff) != 0 {
+                // NaN: payload need not round-trip, NaN-ness must
+                assert!(f16_bits_to_f32(h).is_nan());
+                continue;
+            }
+            assert_eq!(f32_to_f16_bits(f16_bits_to_f32(h)), h, "h={h:#06x}");
+        }
+    }
+
+    #[test]
+    fn f16_quantization_error_is_bounded() {
+        // relative error of round-to-nearest binary16 is <= 2^-11 for
+        // normal-range values
+        let mut x = 1e-3f32;
+        while x < 6e4 {
+            let q = f16_bits_to_f32(f32_to_f16_bits(x));
+            let rel = ((q - x) / x).abs();
+            assert!(rel <= 2f32.powi(-11), "x={x} q={q} rel={rel}");
+            x *= 1.7;
+        }
+    }
+
+    #[test]
+    fn row_fingerprint_detects_bit_level_changes() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [1.0f32, 2.0, 3.0];
+        assert_eq!(row_fingerprint(&a), row_fingerprint(&b));
+        let c = [1.0f32, 2.0, 3.0000002];
+        assert_ne!(row_fingerprint(&a), row_fingerprint(&c));
+        // sign of zero is a bit-level change
+        assert_ne!(row_fingerprint(&[0.0f32]), row_fingerprint(&[-0.0f32]));
+        // FNV-1a of empty input is the offset basis
+        assert_eq!(row_fingerprint(&[]), 0xcbf2_9ce4_8422_2325);
+    }
+
+    #[test]
+    fn hello_validation_catches_mismatches() {
+        let cfg = crate::config::RunConfig {
+            parts: 2,
+            epochs: 4,
+            sync_interval: 2,
+            eval_every: 2,
+            ..Default::default()
+        };
+        let mut h = DHello::from_config(&cfg, 1);
+        h.validate(&cfg).unwrap();
+        h.part = 5;
+        assert!(h.validate(&cfg).is_err(), "out-of-range part accepted");
+        let mut h = DHello::from_config(&cfg, 0);
+        h.seed ^= 1;
+        assert!(h.validate(&cfg).is_err(), "seed mismatch accepted");
+        let mut h = DHello::from_config(&cfg, 0);
+        h.version = "digest-wire-v0".into();
+        assert!(h.validate(&cfg).is_err(), "version mismatch accepted");
+        let mut h = DHello::from_config(&cfg, 0);
+        h.epochs += 1;
+        assert!(h.validate(&cfg).is_err(), "epoch mismatch accepted");
+    }
+
+    #[test]
+    fn wire_mat_round_trips_through_matrix() {
+        let w = wm(3, 4, -1.5);
+        let m = w.to_matrix();
+        assert_eq!(m.rows, 3);
+        assert_eq!(m.cols, 4);
+        assert_eq!(WireMat::from_matrix(&m), w);
+    }
+}

@@ -1,0 +1,186 @@
+//! `digest worker --part K --connect ADDR` — one training partition as
+//! its own OS process.
+//!
+//! The worker owns everything partition-local: the partitioned dataset
+//! (rebuilt deterministically from the shared config), the XLA
+//! runtime, its stale-representation cache, and its straggler RNG.
+//! Everything shared lives behind the wire: representations go through
+//! [`super::client::RemoteRepStore`] (the [`crate::kvs::RepStore`]
+//! trait over TCP), parameters and epoch reports through
+//! [`super::client::RemoteParamService`].
+//!
+//! The sync loop below is `SyncSession::step_epoch`'s phase A/B for a
+//! single worker, with the two in-memory barriers replaced by daemon
+//! barriers — see [`super::server`] for why the result is bit-identical
+//! to the in-memory run.
+
+use crate::config::{Method, RunConfig};
+use crate::runtime::pack_params;
+use crate::{eyre, Result};
+
+use super::super::context::TrainContext;
+use super::super::sync::StepReport;
+use super::super::worker::{
+    exec_train, pull_stale, push_io_cost, push_reps, WorkerState,
+};
+use super::client::{connect_worker, RemoteParamService, RemoteRepStore};
+use super::wire::{FinishSnap, WireMat, MODE_ASYNC, MODE_SYNC, NO_WAIT, PHASE_PULLS, PHASE_PUSHES};
+
+/// What one worker process reports back to its CLI when its run ends.
+#[derive(Debug, Clone)]
+pub struct WorkerRun {
+    pub part: usize,
+    /// Final global scores as evaluated by the daemon.
+    pub final_val_f1: f64,
+    pub final_test_f1: f64,
+    /// Local epochs this worker trained.
+    pub epochs_run: usize,
+    /// Frame bytes this worker moved, both directions.
+    pub wire_bytes: u64,
+}
+
+/// Run one partition against a `ps-serve` daemon to completion.
+pub fn run_worker(cfg: &RunConfig, part: usize, addr: &str) -> Result<WorkerRun> {
+    if part >= cfg.parts {
+        return Err(eyre!(
+            "--part {part} out of range for a {}-partition run",
+            cfg.parts
+        ));
+    }
+    match cfg.method {
+        Method::Digest | Method::DigestAsync => {}
+        other => return Err(eyre!("worker runs digest / digest-a only, not {other:?}")),
+    }
+    let conn = connect_worker(cfg, part, addr)?;
+    let store = RemoteRepStore::new(conn.clone(), cfg);
+    let ctx = TrainContext::with_store(cfg.clone(), Box::new(store))?;
+    let svc = RemoteParamService::new(conn);
+    let mut w = WorkerState::new(&ctx, part);
+
+    if cfg.method == Method::Digest {
+        run_sync_loop(&ctx, &svc, &mut w)?;
+    } else {
+        run_async_loop(&ctx, &svc, &mut w)?;
+    }
+
+    // ship the final local state (checkpoint ingredients) and collect
+    // the daemon's final global scores
+    let snap = w.export_snap();
+    let fin = FinishSnap {
+        part: part as u32,
+        local_epoch: snap.local_epoch as u64,
+        fetched_version: snap.fetched_version,
+        rng: snap.rng,
+        last_pull_age: snap.last_pull_age,
+        stale: snap.stale.iter().map(WireMat::from_matrix).collect(),
+    };
+    let (final_val, final_test) = svc.finish(fin)?;
+    Ok(WorkerRun {
+        part,
+        final_val_f1: final_val,
+        final_test_f1: final_test,
+        epochs_run: snap.local_epoch,
+        wire_bytes: svc.wire_bytes(),
+    })
+}
+
+/// Algorithm 1 phase A/B for one partition, epoch-stepped against the
+/// daemon.  Field-for-field the same arithmetic as the in-memory
+/// `SyncSession` (costs drawn from the same deterministic model, RNG
+/// sequence identical), which is what makes the daemon's checkpoint
+/// byte-identical.
+fn run_sync_loop(
+    ctx: &TrainContext,
+    svc: &RemoteParamService,
+    w: &mut WorkerState,
+) -> Result<()> {
+    let cfg = &ctx.cfg;
+    for r in 0..cfg.epochs {
+        // epoch r trains on the epoch-r reduction (version == r)
+        let (params, _v) = svc.fetch_when(r as u64)?;
+        let param_lits = pack_params(&ctx.spec, &params)?;
+        let sync_now = r % cfg.sync_interval == 0;
+        // phase A: refresh the stale cache, then wait for everyone —
+        // no worker may push epoch-r rows while another still pulls
+        let pull_io = if sync_now {
+            let io = pull_stale(ctx, w, r as u64)?;
+            svc.barrier(r as u64, PHASE_PULLS)?;
+            io
+        } else {
+            0.0
+        };
+        let (out, compute_t) = exec_train(ctx, w, &param_lits)?;
+        let straggle = ctx.cost.straggler_delay(w.id, &mut w.rng);
+        let push_io = if sync_now { push_io_cost(ctx, w.id) } else { 0.0 };
+        let report = StepReport {
+            loss: out.loss,
+            compute_t,
+            pull_io,
+            push_io,
+            straggle,
+            stale_age: if sync_now { w.last_pull_age } else { None },
+        };
+        // sync submits never carry a fetched version (the in-memory
+        // path leaves WorkerState::fetched_version at 0; so do we)
+        svc.submit_step(w.id, MODE_SYNC, 0, &out.grads, &report)?;
+        w.local_epoch += 1;
+        if sync_now {
+            // phase B: publish fresh rows, then the push barrier — the
+            // daemon closes the epoch's books when the last worker lands
+            push_reps(ctx, w, &out.reps, r as u64)?;
+            svc.barrier(r as u64, PHASE_PUSHES)?;
+        }
+    }
+    Ok(())
+}
+
+/// Free-running async loop: fetch whatever parameters are current,
+/// train, submit with the fetched version for the delay-compensated
+/// update, repeat until the daemon says the global update budget is
+/// spent.  Matches the in-memory async scheduler's *semantics* (pull
+/// cadence, push cadence, version tagging) but not its virtual clock —
+/// see the module docs in [`super::server`].
+fn run_async_loop(
+    ctx: &TrainContext,
+    svc: &RemoteParamService,
+    w: &mut WorkerState,
+) -> Result<()> {
+    let cfg = &ctx.cfg;
+    let n = cfg.sync_interval;
+    loop {
+        let (params, v) = svc.fetch_when(NO_WAIT)?;
+        w.fetched_version = v;
+        let param_lits = pack_params(&ctx.spec, &params)?;
+        let sync_now = w.local_epoch % n == 0;
+        let pull_io = if sync_now {
+            pull_stale(ctx, w, w.local_epoch as u64)?
+        } else {
+            0.0
+        };
+        let (out, compute_t) = exec_train(ctx, w, &param_lits)?;
+        let straggle = ctx.cost.straggler_delay(w.id, &mut w.rng);
+        // the in-memory scheduler pushes when the *post-step* local
+        // clock hits the exchange cadence
+        let will_push = (w.local_epoch + 1) % n == 0;
+        let push_io = if will_push { push_io_cost(ctx, w.id) } else { 0.0 };
+        let report = StepReport {
+            loss: out.loss,
+            compute_t,
+            pull_io,
+            push_io,
+            straggle,
+            stale_age: if sync_now { w.last_pull_age } else { None },
+        };
+        let ack = svc.submit_step(w.id, MODE_ASYNC, v, &out.grads, &report)?;
+        if ack.filled {
+            // the update applied: this step counts
+            w.local_epoch += 1;
+            if will_push {
+                push_reps(ctx, w, &out.reps, w.local_epoch as u64)?;
+            }
+        }
+        if ack.stop {
+            return Ok(());
+        }
+    }
+}

@@ -501,6 +501,7 @@ mod tests {
                 test_f1: f64::NAN,
                 kvs_bytes: 0,
                 ps_bytes: 0,
+                wire_bytes: 0,
             },
             breakdown: Default::default(),
             evaluated: true,
@@ -540,6 +541,7 @@ mod tests {
                 test_f1: f64::NAN,
                 kvs_bytes: 0,
                 ps_bytes: 0,
+                wire_bytes: 0,
             },
             breakdown: Default::default(),
             evaluated: false,

@@ -14,6 +14,9 @@
 //! * [`sync`] — synchronous DIGEST (Algorithm 1), thread-parallel;
 //! * [`async_`] — asynchronous DIGEST-A (discrete-event, non-blocking,
 //!   with prefetched parallel execution);
+//! * [`dist`] — process-per-partition training over TCP
+//!   (`digest-wire-v1-train`): the `ps-serve` daemon, the per-partition
+//!   `worker` loop, and the socket-backed rep/param backends;
 //! * [`telemetry`] — the timeline records every figure is drawn from.
 //!
 //! [`run`] / [`run_with_context`] dispatch on the configured method
@@ -23,6 +26,7 @@
 
 pub mod async_;
 pub mod context;
+pub mod dist;
 pub mod engine;
 pub mod hooks;
 pub mod session;

@@ -144,8 +144,8 @@ pub fn resume_session<'a>(
     }
     // the KVS lives on the context and is shared by every method
     ctx.kvs.clear();
-    ctx.kvs.import_entries(&state.kvs_entries);
-    ctx.kvs.import_metrics(state.kvs_metrics);
+    ctx.kvs.import_entries(&state.kvs_entries)?;
+    ctx.kvs.import_metrics(state.kvs_metrics)?;
     Ok(match ctx.cfg.method {
         Method::Digest => Box::new(super::sync::SyncSession::resume(ctx, state)?),
         Method::DigestAsync => Box::new(super::async_::AsyncSession::resume(ctx, state)?),
@@ -158,9 +158,12 @@ pub fn resume_session<'a>(
 
 /// Shared scaffolding for building a session's [`TrainState`]: the
 /// method-independent core (KVS dump + counters slot in here; the caller
-/// fills PS/worker/extra fields).
-pub(crate) fn base_state(ctx: &TrainContext, method: &'static str) -> TrainState {
-    TrainState {
+/// fills PS/worker/extra fields).  Fallible since the [`RepStore`]
+/// seam landed: exporting a remote store's entries crosses the wire.
+///
+/// [`RepStore`]: crate::kvs::RepStore
+pub(crate) fn base_state(ctx: &TrainContext, method: &'static str) -> Result<TrainState> {
+    Ok(TrainState {
         method: method.to_string(),
         epoch: 0,
         vtime: 0.0,
@@ -177,10 +180,10 @@ pub(crate) fn base_state(ctx: &TrainContext, method: &'static str) -> TrainState
             delays: crate::ps::DelayStats::default(),
         },
         workers: Vec::new(),
-        kvs_entries: ctx.kvs.export_entries(),
-        kvs_metrics: ctx.kvs.metrics.snapshot(),
+        kvs_entries: ctx.kvs.export_entries()?,
+        kvs_metrics: ctx.kvs.metrics(),
         extra: crate::util::json::Json::Null,
-    }
+    })
 }
 
 /// Wrap a [`TrainState`] into a full checkpoint (params duplicated at

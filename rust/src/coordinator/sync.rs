@@ -41,7 +41,7 @@
 use std::time::Instant;
 
 use crate::ps::checkpoint::{Checkpoint, TrainState};
-use crate::ps::{optimizer::Optimizer, ParamServer};
+use crate::ps::{optimizer::Optimizer, ParamServer, ParamService};
 use crate::runtime::TrainOutput;
 use crate::tensor::Matrix;
 use crate::util::json::Json;
@@ -65,6 +65,65 @@ struct EpochStep {
     stale_age: Option<u64>,
 }
 
+/// Everything one worker reports about one sync epoch — the input to
+/// [`aggregate_epoch`].  Shared with the distributed daemon
+/// ([`super::dist`]): a `digest worker` process sends exactly these
+/// numbers over the wire so the daemon's virtual clock and breakdowns
+/// are bit-identical to the in-memory [`SyncSession`].
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct StepReport {
+    pub loss: f32,
+    pub compute_t: f64,
+    pub pull_io: f64,
+    pub push_io: f64,
+    pub straggle: f64,
+    pub stale_age: Option<u64>,
+}
+
+/// Deterministic worker-id-order aggregation of one sync epoch: the
+/// virtual-clock arithmetic of Algorithm 1's barrier (max worker time +
+/// PS aggregation), the per-epoch breakdown maxima, and the f64 loss
+/// sum — all in slot order, so the result is independent of arrival
+/// order.  Returns the filled breakdown (`total` = epoch virtual
+/// seconds) and the loss sum; the caller adds `total` to its clock and
+/// charges `2 * param_bytes` of PS traffic per report.
+///
+/// This is *the* clock: [`SyncSession::step_epoch`] and the socket
+/// daemon both call it, which is what makes a 2-process run's
+/// checkpoint byte-identical to the in-memory one.
+pub(crate) fn aggregate_epoch(
+    ctx: &TrainContext,
+    steps: &[StepReport],
+) -> (EpochBreakdown, f64) {
+    let mut max_worker_t = 0.0f64;
+    let mut bd = EpochBreakdown::default();
+    let mut loss_sum = 0.0f64;
+    for step in steps {
+        // parameter fetch + gradient submit
+        let ps_io = 2.0 * ctx.cost.param_time(ctx.param_bytes());
+        let (comp_l, io_l) =
+            epoch_layer_times(ctx, step.compute_t, step.pull_io, step.push_io);
+        let t = ctx
+            .cost
+            .worker_epoch_time(&comp_l, &io_l, ctx.cfg.overlap, step.straggle)
+            + ps_io;
+        max_worker_t = max_worker_t.max(t);
+        bd.compute = bd.compute.max(step.compute_t);
+        bd.kvs_io = bd.kvs_io.max(step.pull_io + step.push_io);
+        bd.ps_io = bd.ps_io.max(ps_io);
+        bd.straggle = bd.straggle.max(step.straggle);
+        bd.max_stale_age = match (bd.max_stale_age, step.stale_age) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, b) => a.or(b),
+        };
+        loss_sum += step.loss as f64;
+    }
+    // aggregation happens once all submissions land
+    let agg_t = ctx.cost.param_time(ctx.param_bytes());
+    bd.total = max_worker_t + agg_t;
+    (bd, loss_sum)
+}
+
 /// Synchronous DIGEST as a stepwise state machine.
 pub struct SyncSession<'a> {
     ctx: &'a TrainContext,
@@ -76,6 +135,9 @@ pub struct SyncSession<'a> {
     r: usize,
     vtime: f64,
     ps_bytes: u64,
+    /// Cumulative transport bytes already attributed to past epochs
+    /// (always 0 for the in-memory backend, whose `wire_bytes()` is 0).
+    wire_seen: u64,
     points: Vec<LogPoint>,
     breakdowns: Vec<EpochBreakdown>,
     best_val: f64,
@@ -101,6 +163,7 @@ impl<'a> SyncSession<'a> {
             r: 0,
             vtime: 0.0,
             ps_bytes: 0,
+            wire_seen: 0,
             points: Vec::with_capacity(cfg.epochs),
             breakdowns: Vec::with_capacity(cfg.epochs),
             best_val: 0.0,
@@ -127,6 +190,7 @@ impl<'a> SyncSession<'a> {
         s.r = state.epoch;
         s.vtime = state.vtime;
         s.ps_bytes = state.ps_bytes;
+        s.wire_seen = ctx.kvs.wire_bytes();
         s.best_val = state.best_val_f1;
         s.final_val = state.final_val_f1;
         s.final_test = state.final_test_f1;
@@ -155,18 +219,21 @@ impl TrainSession for SyncSession<'_> {
         let (params, _v) = self.ps.fetch();
         // params are packed ONCE per epoch and shared by all workers
         let param_lits = crate::runtime::pack_params(&ctx.spec, &params)?;
-        let (param_lits, ps_ref) = (&param_lits, &self.ps);
+        // the training path goes through the trait seam the socket
+        // backend implements — concrete-only calls (export_state,
+        // import_state) stay on `self.ps` directly
+        let (param_lits, ps_ref): (_, &dyn ParamService) = (&param_lits, &self.ps);
 
         // ---- phase A: pull + train + slot-submit, concurrently ----
         let steps: Vec<EpochStep> = for_each_mut(self.threads, &mut self.workers, |w| {
             let pull_io = if sync_now {
-                pull_stale(ctx, w, r as u64)
+                pull_stale(ctx, w, r as u64)?
             } else {
                 0.0
             };
             let (out, compute_t) = exec_train(ctx, w, param_lits)?;
             let straggle = ctx.cost.straggler_delay(w.id, &mut w.rng);
-            ps_ref.submit_slot(w.id, &out.grads);
+            ps_ref.submit_slot(w.id, &out.grads)?;
             w.local_epoch += 1;
             Ok(EpochStep {
                 out,
@@ -183,42 +250,31 @@ impl TrainSession for SyncSession<'_> {
         let push_ios: Vec<f64> = if sync_now {
             let steps_ref = &steps;
             for_each_mut(self.threads, &mut self.workers, |w| {
-                Ok(push_reps(ctx, w, &steps_ref[w.id].out.reps, r as u64))
+                push_reps(ctx, w, &steps_ref[w.id].out.reps, r as u64)
             })?
         } else {
             vec![0.0; m_parts]
         };
 
         // ---- deterministic aggregation in worker-id order ----
-        let mut max_worker_t = 0.0f64;
-        let mut bd = EpochBreakdown::default();
-        let mut loss_sum = 0.0f64;
-        for (m, step) in steps.iter().enumerate() {
-            // parameter fetch + gradient submit
-            let ps_io = 2.0 * ctx.cost.param_time(ctx.param_bytes());
-            self.ps_bytes += 2 * ctx.param_bytes();
-            let (comp_l, io_l) =
-                epoch_layer_times(ctx, step.compute_t, step.pull_io, push_ios[m]);
-            let t = ctx
-                .cost
-                .worker_epoch_time(&comp_l, &io_l, cfg.overlap, step.straggle)
-                + ps_io;
-            max_worker_t = max_worker_t.max(t);
-            bd.compute = bd.compute.max(step.compute_t);
-            bd.kvs_io = bd.kvs_io.max(step.pull_io + push_ios[m]);
-            bd.ps_io = bd.ps_io.max(ps_io);
-            bd.straggle = bd.straggle.max(step.straggle);
-            bd.max_stale_age = match (bd.max_stale_age, step.stale_age) {
-                (Some(a), Some(b)) => Some(a.max(b)),
-                (a, b) => a.or(b),
-            };
-            loss_sum += step.out.loss as f64;
-        }
-        // aggregation happens once all submissions land
-        let agg_t = ctx.cost.param_time(ctx.param_bytes());
-        let epoch_t = max_worker_t + agg_t;
-        self.vtime += epoch_t;
-        bd.total = epoch_t;
+        let reports: Vec<StepReport> = steps
+            .iter()
+            .zip(&push_ios)
+            .map(|(s, &push_io)| StepReport {
+                loss: s.out.loss,
+                compute_t: s.compute_t,
+                pull_io: s.pull_io,
+                push_io,
+                straggle: s.straggle,
+                stale_age: s.stale_age,
+            })
+            .collect();
+        let (mut bd, loss_sum) = aggregate_epoch(ctx, &reports);
+        self.ps_bytes += reports.len() as u64 * 2 * ctx.param_bytes();
+        self.vtime += bd.total;
+        let wire_total = ctx.kvs.wire_bytes();
+        bd.wire_bytes = wire_total.saturating_sub(self.wire_seen);
+        self.wire_seen = wire_total;
         self.breakdowns.push(bd);
 
         let evaluate = r % cfg.eval_every == 0 || r + 1 == cfg.epochs;
@@ -239,8 +295,9 @@ impl TrainSession for SyncSession<'_> {
             train_loss: loss_sum / m_parts as f64,
             val_f1: val,
             test_f1: test,
-            kvs_bytes: ctx.kvs.metrics.snapshot().total_bytes(),
+            kvs_bytes: ctx.kvs.metrics().total_bytes(),
             ps_bytes: self.ps_bytes,
+            wire_bytes: wire_total,
         };
         self.points.push(point.clone());
         self.r += 1;
@@ -264,7 +321,7 @@ impl TrainSession for SyncSession<'_> {
     }
 
     fn snapshot(&self) -> Result<Checkpoint> {
-        let mut state = base_state(self.ctx, "digest");
+        let mut state = base_state(self.ctx, "digest")?;
         state.epoch = self.r;
         state.vtime = self.vtime;
         state.ps_bytes = self.ps_bytes;
@@ -294,7 +351,7 @@ impl TrainSession for SyncSession<'_> {
             best_val_f1: self.best_val,
             total_vtime: self.vtime,
             total_wall: self.t0.elapsed().as_secs_f64(),
-            kvs: self.ctx.kvs.metrics.snapshot(),
+            kvs: self.ctx.kvs.metrics(),
             delay: self.ps.delay_stats(),
             final_params: self.ps.fetch().0,
         })

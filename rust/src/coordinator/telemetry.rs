@@ -27,18 +27,24 @@ pub struct LogPoint {
     pub kvs_bytes: u64,
     /// Cumulative PS bytes moved so far.
     pub ps_bytes: u64,
+    /// Cumulative *transport* bytes actually put on the wire so far
+    /// (frames included).  Always 0 for the in-memory backend; under
+    /// the socket backend this is what delta-encoding and f16
+    /// quantization shrink relative to `kvs_bytes` (the cost model's
+    /// logical volume).
+    pub wire_bytes: u64,
 }
 
 impl LogPoint {
     /// CSV header matching [`LogPoint::csv_row`] (used by both the
     /// post-hoc `RunResult::to_csv` and the streaming CSV hook).
     pub const CSV_HEADER: &str =
-        "epoch,vtime,wall,train_loss,val_f1,test_f1,kvs_bytes,ps_bytes\n";
+        "epoch,vtime,wall,train_loss,val_f1,test_f1,kvs_bytes,ps_bytes,wire_bytes\n";
 
     /// One newline-terminated CSV row for this point.
     pub fn csv_row(&self) -> String {
         format!(
-            "{},{:.6},{:.3},{:.6},{:.4},{:.4},{},{}\n",
+            "{},{:.6},{:.3},{:.6},{:.4},{:.4},{},{},{}\n",
             self.epoch,
             self.vtime,
             self.wall,
@@ -46,7 +52,8 @@ impl LogPoint {
             self.val_f1,
             self.test_f1,
             self.kvs_bytes,
-            self.ps_bytes
+            self.ps_bytes,
+            self.wire_bytes
         )
     }
 }
@@ -64,6 +71,8 @@ pub struct EpochBreakdown {
     pub max_stale_age: Option<u64>,
     /// Critical-path epoch time (after overlap).
     pub total: f64,
+    /// Transport bytes this epoch put on the wire (0 in-memory).
+    pub wire_bytes: u64,
 }
 
 /// The full record of one training run.
@@ -178,6 +187,7 @@ mod tests {
             test_f1: f64::NAN,
             kvs_bytes: 0,
             ps_bytes: 0,
+            wire_bytes: 0,
         }
     }
 

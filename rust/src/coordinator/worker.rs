@@ -153,12 +153,16 @@ impl WorkerState {
 /// then the new content is byte-identical to the old, so the existing
 /// literal (and its `Arc`) is reused.  This is what shrinks the
 /// per-sync cost the paper's periodic schedule amortizes.
-pub fn pull_stale(ctx: &TrainContext, w: &mut WorkerState, now: u64) -> f64 {
+///
+/// Fallible since the [`crate::kvs::RepStore`] seam landed: the default
+/// in-memory backend never errors, but a socket-backed store surfaces
+/// transport failures here.
+pub fn pull_stale(ctx: &TrainContext, w: &mut WorkerState, now: u64) -> Result<f64> {
     let plan = &ctx.plans[w.id];
     let mut io = 0.0;
     let mut age: Option<u64> = None;
     for l in 0..ctx.n_hidden() {
-        let info = ctx.kvs.pull_into(l, &plan.halo, &mut w.stale[l]);
+        let info = ctx.kvs.pull_into(l, &plan.halo, &mut w.stale[l])?;
         if let Some(a) = info.staleness_age(now) {
             age = Some(age.map_or(a, |x| x.max(a)));
         }
@@ -174,7 +178,7 @@ pub fn pull_stale(ctx: &TrainContext, w: &mut WorkerState, now: u64) -> f64 {
         w.stale_found[l] = found;
     }
     w.last_pull_age = age;
-    io
+    Ok(io)
 }
 
 /// Push fresh in-subgraph reps to the KVS; returns virtual I/O seconds
@@ -185,13 +189,13 @@ pub fn push_reps(
     w: &WorkerState,
     reps: &[Matrix],
     version: u64,
-) -> f64 {
+) -> Result<f64> {
     let plan = &ctx.plans[w.id];
     debug_assert_eq!(reps.len(), ctx.n_hidden(), "one rep per hidden layer");
     for (l, r) in reps.iter().enumerate() {
-        ctx.kvs.push(l, &plan.own, r, version);
+        ctx.kvs.push(l, &plan.own, r, version)?;
     }
-    push_io_cost(ctx, w.id)
+    Ok(push_io_cost(ctx, w.id))
 }
 
 /// Virtual I/O cost of a worker's full push, without pushing: one
@@ -302,9 +306,9 @@ mod tests {
         let (out, vt) = exec_train(&ctx, &w1, &lits).unwrap();
         assert!(vt > 0.0);
         assert!(out.loss.is_finite());
-        let io_push = push_reps(&ctx, &w1, &out.reps, 1);
+        let io_push = push_reps(&ctx, &w1, &out.reps, 1).unwrap();
         assert!(io_push > 0.0);
-        let io_pull = pull_stale(&ctx, &mut w0, 3);
+        let io_pull = pull_stale(&ctx, &mut w0, 3).unwrap();
         assert!(io_pull > 0.0);
         // the pull recorded the staleness age of the version-1 rows
         assert_eq!(w0.last_pull_age, Some(2));
@@ -370,8 +374,8 @@ mod tests {
         // w1 pushes fresh reps; w0 pulls -> its literals must change the
         // next execution's numbers
         let (out1, _) = exec_train(&ctx, &w1, &lits).unwrap();
-        push_reps(&ctx, &w1, &out1.reps, 1);
-        pull_stale(&ctx, &mut w0, 1);
+        push_reps(&ctx, &w1, &out1.reps, 1).unwrap();
+        pull_stale(&ctx, &mut w0, 1).unwrap();
         let (after, _) = exec_train(&ctx, &w0, &lits).unwrap();
         assert_ne!(before.loss, after.loss);
     }
@@ -384,7 +388,7 @@ mod tests {
         // so NO layer may re-pack its literal (regression: the seed
         // path re-packed everything wholesale on every pull)
         let before = w0.stale_lits.clone();
-        pull_stale(&ctx, &mut w0, 5);
+        pull_stale(&ctx, &mut w0, 5).unwrap();
         for (l, (a, b)) in before.iter().zip(&w0.stale_lits).enumerate() {
             assert!(Arc::ptr_eq(a, b), "layer {l} re-packed on an all-miss pull");
             assert!(!w0.stale_layer_found(l));
@@ -395,9 +399,9 @@ mod tests {
         let params = init_params(&ctx.spec, 0);
         let lits = pack_params(&ctx.spec, &params).unwrap();
         let (out, _) = exec_train(&ctx, &w1, &lits).unwrap();
-        push_reps(&ctx, &w1, &out.reps, 1);
+        push_reps(&ctx, &w1, &out.reps, 1).unwrap();
         let before = w0.stale_lits.clone();
-        pull_stale(&ctx, &mut w0, 2);
+        pull_stale(&ctx, &mut w0, 2).unwrap();
         assert!(
             before.iter().zip(&w0.stale_lits).any(|(a, b)| !Arc::ptr_eq(a, b)),
             "a pull that found rows must refresh some literal"
@@ -405,14 +409,14 @@ mod tests {
         // clearing the store: one more re-pack back to zeros ...
         ctx.kvs.clear();
         let before = w0.stale_lits.clone();
-        pull_stale(&ctx, &mut w0, 3);
+        pull_stale(&ctx, &mut w0, 3).unwrap();
         assert!(
             before.iter().zip(&w0.stale_lits).any(|(a, b)| !Arc::ptr_eq(a, b)),
             "zeroing a previously-found cache must re-pack"
         );
         // ... then steady state: all-miss over an all-zero cache is free
         let before = w0.stale_lits.clone();
-        pull_stale(&ctx, &mut w0, 4);
+        pull_stale(&ctx, &mut w0, 4).unwrap();
         for (a, b) in before.iter().zip(&w0.stale_lits) {
             assert!(Arc::ptr_eq(a, b), "steady-state all-miss pull re-packed");
         }
@@ -449,7 +453,7 @@ mod tests {
         let mut w = WorkerState::new(&ctx, 0);
         // nothing pushed yet: every halo row misses, so there is no age
         // (the old u64::MAX sentinel must not surface here)
-        pull_stale(&ctx, &mut w, 42);
+        pull_stale(&ctx, &mut w, 42).unwrap();
         assert_eq!(w.last_pull_age, None);
     }
 

@@ -22,6 +22,13 @@
 //! semantics of GNNAutoscale-style historical embeddings (first epoch
 //! approximates out-of-subgraph representations by zero until the first
 //! push lands).
+//!
+//! Since the transport refactor the coordinator programs against the
+//! [`RepStore`] *trait*; [`KVStore`] here is the default in-memory
+//! backend, and `coordinator::dist` provides a socket-backed
+//! implementation speaking `digest-wire-v1` rep frames.  The trait
+//! methods are fallible (`Result`) because a remote backend can fail
+//! mid-call; the in-memory impl never errors.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -29,6 +36,7 @@ use std::sync::Mutex;
 
 use crate::tensor::Matrix;
 use crate::util::lock_unpoisoned;
+use crate::Result;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 struct Key {
@@ -111,16 +119,114 @@ impl PullInfo {
     }
 }
 
-/// The sharded stale-representation store.
-pub struct RepStore {
+/// The representation-plane interface every scheduler programs against:
+/// push fresh in-subgraph rows, pull (possibly stale) halo rows, and
+/// dump/restore the store for checkpoints.  [`KVStore`] is the default
+/// in-memory backend; `coordinator::dist::RemoteRepStore` speaks the
+/// same contract over a `digest-wire-v1` socket.  All methods that can
+/// touch a transport return `Result`; the in-memory backend never
+/// errors.
+pub trait RepStore: Send + Sync {
+    /// Push rows of `reps` (one per node id) for `layer` at `version`.
+    fn push(&self, layer: usize, nodes: &[u32], reps: &Matrix, version: u64) -> Result<()>;
+
+    /// Allocation-free pull into the caller's buffer; `out` is fully
+    /// overwritten (missing and padding rows zero).
+    fn pull_into(&self, layer: usize, nodes: &[u32], out: &mut Matrix) -> Result<PullInfo>;
+
+    /// Owned-variant pull: allocate a `(rows_pad, d)` matrix and
+    /// delegate to [`RepStore::pull_into`] — one copy path, not two.
+    fn pull(
+        &self,
+        layer: usize,
+        nodes: &[u32],
+        d: usize,
+        rows_pad: usize,
+    ) -> Result<(Matrix, PullInfo)> {
+        let mut out = Matrix::zeros(rows_pad, d);
+        let info = self.pull_into(layer, nodes, &mut out)?;
+        Ok((out, info))
+    }
+
+    /// Number of stored entries (all layers).
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop everything (between experiment repetitions / on resume).
+    fn clear(&self);
+
+    /// Deterministic `(layer, node, version, row)` dump sorted by
+    /// (layer, node) — the checkpoint serialization of the store.
+    fn export_entries(&self) -> Result<Vec<(u16, u32, u64, Vec<f32>)>>;
+
+    /// Restore dumped entries verbatim (traffic metrics untouched).
+    fn import_entries(&self, entries: &[(u16, u32, u64, Vec<f32>)]) -> Result<()>;
+
+    /// Overwrite the traffic counters (checkpoint restore).
+    fn import_metrics(&self, snap: KvsSnapshot) -> Result<()>;
+
+    /// Current traffic counters.
+    fn metrics(&self) -> KvsSnapshot;
+
+    /// Bytes this store has actually put on a network wire (frames
+    /// included, both directions).  The in-memory backend reports 0 —
+    /// its "traffic" is modeled, not real.
+    fn wire_bytes(&self) -> u64 {
+        0
+    }
+}
+
+impl RepStore for KVStore {
+    fn push(&self, layer: usize, nodes: &[u32], reps: &Matrix, version: u64) -> Result<()> {
+        KVStore::push(self, layer, nodes, reps, version);
+        Ok(())
+    }
+
+    fn pull_into(&self, layer: usize, nodes: &[u32], out: &mut Matrix) -> Result<PullInfo> {
+        Ok(KVStore::pull_into(self, layer, nodes, out))
+    }
+
+    fn len(&self) -> usize {
+        KVStore::len(self)
+    }
+
+    fn clear(&self) {
+        KVStore::clear(self)
+    }
+
+    fn export_entries(&self) -> Result<Vec<(u16, u32, u64, Vec<f32>)>> {
+        Ok(KVStore::export_entries(self))
+    }
+
+    fn import_entries(&self, entries: &[(u16, u32, u64, Vec<f32>)]) -> Result<()> {
+        KVStore::import_entries(self, entries);
+        Ok(())
+    }
+
+    fn import_metrics(&self, snap: KvsSnapshot) -> Result<()> {
+        KVStore::import_metrics(self, snap);
+        Ok(())
+    }
+
+    fn metrics(&self) -> KvsSnapshot {
+        self.metrics.snapshot()
+    }
+}
+
+/// The sharded in-memory stale-representation store (the default
+/// [`RepStore`] backend).
+pub struct KVStore {
     shards: Vec<Mutex<HashMap<Key, Entry>>>,
     pub metrics: KvsMetrics,
 }
 
-impl RepStore {
+impl KVStore {
     pub fn new(n_shards: usize) -> Self {
         assert!(n_shards > 0);
-        RepStore {
+        KVStore {
             shards: (0..n_shards).map(|_| Mutex::new(HashMap::new())).collect(),
             metrics: KvsMetrics::default(),
         }
@@ -184,7 +290,9 @@ impl RepStore {
 
     /// Pull rows for `nodes` at `layer` into a fresh (rows_pad, d) matrix
     /// (rows beyond `nodes.len()` stay zero).  Missing nodes yield zero
-    /// rows (cold start).
+    /// rows (cold start).  The owned variant is pure delegation to
+    /// [`KVStore::pull_into`] — one copy/metric path, byte-identical
+    /// output (guarded by `pull_into_matches_pull_including_padding`).
     pub fn pull(
         &self,
         layer: usize,
@@ -192,9 +300,8 @@ impl RepStore {
         d: usize,
         rows_pad: usize,
     ) -> (Matrix, PullInfo) {
-        assert!(rows_pad >= nodes.len());
         let mut out = Matrix::zeros(rows_pad, d);
-        let info = self.pull_rows(layer, nodes, &mut out);
+        let info = self.pull_into(layer, nodes, &mut out);
         (out, info)
     }
 
@@ -202,7 +309,7 @@ impl RepStore {
     /// caller's existing matrix (the worker's cached stale buffer).
     /// `out` is fully overwritten — found rows get the stored data,
     /// missing and padding rows become zero — so the result is
-    /// byte-identical to what [`RepStore::pull`] would have allocated,
+    /// byte-identical to what [`KVStore::pull`] would have allocated,
     /// whatever `out` held before.  Metrics are charged identically.
     pub fn pull_into(&self, layer: usize, nodes: &[u32], out: &mut Matrix) -> PullInfo {
         assert!(out.rows >= nodes.len(), "pull_into: fewer out rows than nodes");
@@ -210,7 +317,7 @@ impl RepStore {
         self.pull_rows(layer, nodes, out)
     }
 
-    /// Shared body of [`RepStore::pull`] / [`RepStore::pull_into`]:
+    /// Shared body of [`KVStore::pull`] / [`KVStore::pull_into`]:
     /// copy stored rows into `out` (assumed all-zero) and charge the
     /// traffic metrics.
     fn pull_rows(&self, layer: usize, nodes: &[u32], out: &mut Matrix) -> PullInfo {
@@ -288,7 +395,7 @@ impl RepStore {
     }
 
     /// Restore dumped entries verbatim.  Traffic metrics are NOT
-    /// touched: a restore is not I/O — use [`RepStore::import_metrics`]
+    /// touched: a restore is not I/O — use [`KVStore::import_metrics`]
     /// to carry the counters across a checkpoint boundary.
     pub fn import_entries(&self, entries: &[(u16, u32, u64, Vec<f32>)]) {
         for (layer, node, version, data) in entries {
@@ -331,7 +438,7 @@ mod tests {
 
     #[test]
     fn push_then_pull_round_trips() {
-        let kvs = RepStore::new(4);
+        let kvs = KVStore::new(4);
         let nodes = [3u32, 9, 127];
         let reps = mat(3, 5, 10.0);
         kvs.push(1, &nodes, &reps, 7);
@@ -345,7 +452,7 @@ mod tests {
 
     #[test]
     fn missing_nodes_pull_zeros() {
-        let kvs = RepStore::new(2);
+        let kvs = KVStore::new(2);
         kvs.push(0, &[1], &mat(1, 4, 1.0), 1);
         let (out, info) = kvs.pull(0, &[1, 2], 4, 4);
         assert_eq!(out.row(0), &[1.0, 2.0, 3.0, 4.0]);
@@ -357,7 +464,7 @@ mod tests {
 
     #[test]
     fn layers_are_independent_namespaces() {
-        let kvs = RepStore::new(4);
+        let kvs = KVStore::new(4);
         kvs.push(0, &[5], &mat(1, 2, 1.0), 1);
         kvs.push(1, &[5], &mat(1, 2, 100.0), 2);
         let (l0, _) = kvs.pull(0, &[5], 2, 1);
@@ -368,7 +475,7 @@ mod tests {
 
     #[test]
     fn newer_push_overwrites_and_version_advances() {
-        let kvs = RepStore::new(1);
+        let kvs = KVStore::new(1);
         kvs.push(0, &[7], &mat(1, 3, 0.0), 1);
         kvs.push(0, &[7], &mat(1, 3, 50.0), 4);
         let (out, info) = kvs.pull(0, &[7], 3, 1);
@@ -378,7 +485,7 @@ mod tests {
 
     #[test]
     fn push_with_padded_matrix_only_stores_real_rows() {
-        let kvs = RepStore::new(2);
+        let kvs = KVStore::new(2);
         let padded = mat(8, 2, 0.0); // 8 rows, only 2 real
         kvs.push(0, &[10, 11], &padded, 1);
         assert_eq!(kvs.len(), 2);
@@ -386,7 +493,7 @@ mod tests {
 
     #[test]
     fn metrics_account_bytes() {
-        let kvs = RepStore::new(2);
+        let kvs = KVStore::new(2);
         kvs.push(0, &[1, 2], &mat(2, 8, 0.0), 1);
         kvs.pull(0, &[1, 2, 3], 8, 3);
         let m = kvs.metrics.snapshot();
@@ -399,7 +506,7 @@ mod tests {
     #[test]
     fn concurrent_push_pull_is_safe() {
         use std::sync::Arc;
-        let kvs = Arc::new(RepStore::new(8));
+        let kvs = Arc::new(KVStore::new(8));
         let mut handles = Vec::new();
         for t in 0..4u32 {
             let kvs = kvs.clone();
@@ -424,7 +531,7 @@ mod tests {
 
     #[test]
     fn pull_into_matches_pull_including_padding() {
-        let kvs = RepStore::new(4);
+        let kvs = KVStore::new(4);
         let nodes = [3u32, 9, 127, 4];
         kvs.push(1, &nodes[..3], &mat(3, 5, 10.0), 7);
         // fresh pull as the oracle (node 4 misses, 2 padding rows)
@@ -444,7 +551,7 @@ mod tests {
 
     #[test]
     fn pull_into_all_miss_zeroes_previous_content() {
-        let kvs = RepStore::new(2);
+        let kvs = KVStore::new(2);
         let mut out = mat(3, 4, 5.0);
         let info = kvs.pull_into(0, &[1, 2, 3], &mut out);
         assert_eq!(info.found, 0);
@@ -454,7 +561,7 @@ mod tests {
 
     #[test]
     fn pull_into_charges_metrics_like_pull() {
-        let kvs = RepStore::new(2);
+        let kvs = KVStore::new(2);
         kvs.push(0, &[1], &mat(1, 8, 0.0), 1);
         let mut out = Matrix::zeros(3, 8);
         kvs.pull_into(0, &[1, 2, 3], &mut out);
@@ -467,7 +574,7 @@ mod tests {
 
     #[test]
     fn staleness_age_handles_empty_and_found_pulls() {
-        let kvs = RepStore::new(4);
+        let kvs = KVStore::new(4);
         // cold pull: nothing found -> no age, never u64::MAX arithmetic
         let (_, info) = kvs.pull(0, &[1, 2], 3, 2);
         assert_eq!(info.found, 0);
@@ -486,7 +593,7 @@ mod tests {
         use std::sync::Arc;
         // single shard so the panicking pull poisons the one mutex every
         // other access needs
-        let kvs = Arc::new(RepStore::new(1));
+        let kvs = Arc::new(KVStore::new(1));
         kvs.push(0, &[1], &mat(1, 4, 1.0), 1);
         let k2 = kvs.clone();
         let h = std::thread::spawn(move || {
@@ -506,7 +613,7 @@ mod tests {
     fn batched_locking_preserves_per_node_semantics() {
         // many nodes spread across few shards: grouping by shard must not
         // change what any single node reads back
-        let kvs = RepStore::new(3);
+        let kvs = KVStore::new(3);
         let nodes: Vec<u32> = (0..64).collect();
         let reps = mat(64, 6, 0.5);
         kvs.push(2, &nodes, &reps, 9);
@@ -519,7 +626,7 @@ mod tests {
 
     #[test]
     fn export_import_round_trips_without_metric_drift() {
-        let a = RepStore::new(4);
+        let a = KVStore::new(4);
         a.push(0, &[1, 2, 9], &mat(3, 4, 1.0), 3);
         a.push(1, &[2], &mat(1, 4, 50.0), 5);
         a.pull(0, &[1, 2, 9, 17], 4, 4);
@@ -529,7 +636,7 @@ mod tests {
         let keys: Vec<(u16, u32)> = entries.iter().map(|e| (e.0, e.1)).collect();
         assert_eq!(keys, vec![(0, 1), (0, 2), (0, 9), (1, 2)]);
 
-        let b = RepStore::new(7); // different shard count: must not matter
+        let b = KVStore::new(7); // different shard count: must not matter
         b.import_entries(&entries);
         b.import_metrics(a.metrics.snapshot());
         assert_eq!(b.export_entries(), entries);
@@ -547,18 +654,18 @@ mod tests {
         // Build the same state three ways (different push order, push
         // granularity, and shard count) and require byte-identical
         // serializations.
-        let a = RepStore::new(4);
+        let a = KVStore::new(4);
         a.push(0, &[1, 2, 9, 40, 77], &mat(5, 3, 1.0), 3);
         a.push(1, &[2, 8], &mat(2, 3, 30.0), 5);
 
-        let b = RepStore::new(11);
+        let b = KVStore::new(11);
         b.push(1, &[8], &mat(1, 3, 33.0), 5);
         b.push(0, &[77], &mat(1, 3, 13.0), 3);
         b.push(0, &[9, 40], &mat(2, 3, 7.0), 3);
         b.push(1, &[2], &mat(1, 3, 30.0), 5);
         b.push(0, &[1, 2], &mat(2, 3, 1.0), 3);
 
-        let c = RepStore::new(1); // single shard: one big HashMap
+        let c = KVStore::new(1); // single shard: one big HashMap
         c.import_entries(&a.export_entries());
 
         let ser_a = format!("{:?}", a.export_entries());
@@ -569,8 +676,30 @@ mod tests {
     }
 
     #[test]
+    fn trait_object_backend_matches_concrete() {
+        let store: Box<dyn RepStore> = Box::new(KVStore::new(4));
+        store.push(0, &[1, 2], &mat(2, 3, 1.0), 2).unwrap();
+        // trait-default owned pull delegates to pull_into
+        let (out, info) = store.pull(0, &[1, 2, 5], 3, 4).unwrap();
+        assert_eq!(info.found, 2);
+        assert_eq!(info.missing, 1);
+        assert_eq!(out.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(out.row(3), &[0.0; 3]);
+        assert_eq!(store.metrics().pulls, 1);
+        assert_eq!(store.wire_bytes(), 0, "in-memory backend has no wire");
+        assert_eq!(store.len(), 2);
+        assert!(!store.is_empty());
+        let entries = store.export_entries().unwrap();
+        assert_eq!(entries.len(), 2);
+        store.clear();
+        assert!(store.is_empty());
+        store.import_entries(&entries).unwrap();
+        assert_eq!(store.export_entries().unwrap(), entries);
+    }
+
+    #[test]
     fn clear_empties_store() {
-        let kvs = RepStore::new(3);
+        let kvs = KVStore::new(3);
         kvs.push(0, &[1, 2, 3], &mat(3, 2, 0.0), 1);
         assert!(!kvs.is_empty());
         kvs.clear();
@@ -580,7 +709,7 @@ mod tests {
     #[test]
     fn prop_pull_returns_latest_push() {
         crate::util::prop::prop_check(20, |rng| {
-            let kvs = RepStore::new(1 + rng.below(8));
+            let kvs = KVStore::new(1 + rng.below(8));
             let d = 1 + rng.below(16);
             let n_nodes = 1 + rng.below(40);
             let nodes: Vec<u32> = (0..n_nodes as u32).collect();

@@ -5,6 +5,9 @@
 //! digest generate --dataset arxiv-s         # dataset stats
 //! digest partition --dataset arxiv-s --parts 4 --algo metis
 //! digest train [--config run.json] [key=value ...] [--csv out.csv]
+//! digest train --distributed parts=2             # process-per-partition run
+//! digest ps-serve --addr 127.0.0.1:7878 parts=2  # training-plane daemon
+//! digest worker --part 0 --connect 127.0.0.1:7878
 //! digest experiment <id|all> [--out-dir results] [--quick] [--seed N]
 //! digest serve model.json --watch best.json      # TCP inference daemon
 //! digest query --nodes 0,1,2 --topk 3            # remote predict over digest-wire-v1
@@ -51,14 +54,23 @@ fn main() {
 }
 
 fn usage() -> String {
-    "usage: digest <list|generate|partition|train|experiment|export|predict|bench-serve|serve|query> [args]\n\
+    "usage: digest <list|generate|partition|train|ps-serve|worker|experiment|export|predict|bench-serve|serve|query> [args]\n\
      \n\
      digest list\n\
      digest generate --dataset <name> [--seed N]\n\
      digest partition --dataset <name> [--parts K] [--algo metis|bfs|random] [--seed N]\n\
-     digest train [--config file.json] [--csv out.csv] [key=value ...]\n\
+     digest train [--config file.json] [--csv out.csv] [--distributed] [key=value ...]\n\
      \x20             (session knobs: save_to= save_every= load_from=\n\
-     \x20              stream_csv= early_stop= wall_budget= export_best=)\n\
+     \x20              stream_csv= early_stop= wall_budget= export_best=;\n\
+     \x20              --distributed spawns one worker process per partition\n\
+     \x20              against an in-process ps-serve daemon)\n\
+     digest ps-serve [--addr H:P] [--config file.json] [--csv out.csv] [key=value ...]\n\
+     \x20             (training-plane daemon: hosts KVS + param server and\n\
+     \x20              waits for `parts` workers; save_to= writes the final\n\
+     \x20              checkpoint, sync runs only)\n\
+     digest worker --part K --connect H:P [--config file.json] [key=value ...]\n\
+     \x20             (one partition's training process; config must match\n\
+     \x20              the daemon's bit for bit)\n\
      digest experiment <id|all> [--out-dir results] [--quick] [--seed N]\n\
      digest export <checkpoint.json> <model.json> [--seed N] [--name NAME]\n\
      \x20             [--artifact-dir DIR]\n\
@@ -110,6 +122,8 @@ fn run() -> Result<()> {
         "generate" => cmd_generate(args),
         "partition" => cmd_partition(args),
         "train" => cmd_train(args),
+        "ps-serve" => cmd_ps_serve(args),
+        "worker" => cmd_worker(args),
         "experiment" => cmd_experiment(args),
         "export" => cmd_export(args),
         "predict" => cmd_predict(args),
@@ -199,9 +213,11 @@ fn cmd_partition(mut args: Vec<String>) -> Result<()> {
 }
 
 fn cmd_train(mut args: Vec<String>) -> Result<()> {
-    let mut cfg = match take_opt(&mut args, "--config") {
+    let distributed = take_flag(&mut args, "--distributed");
+    let config_path = take_opt(&mut args, "--config");
+    let mut cfg = match &config_path {
         Some(path) => {
-            let text = std::fs::read_to_string(&path)
+            let text = std::fs::read_to_string(path)
                 .map_err(|e| eyre!("reading {path}: {e}"))?;
             RunConfig::from_json(&Json::parse(&text)?)?
         }
@@ -217,6 +233,17 @@ fn cmd_train(mut args: Vec<String>) -> Result<()> {
     }
     for kv in &args {
         cfg.apply_override(kv)?;
+    }
+    if distributed {
+        // forward the same config surface to the worker processes so
+        // every process derives the identical RunConfig
+        let mut forward = Vec::new();
+        if let Some(path) = &config_path {
+            forward.push("--config".to_string());
+            forward.push(path.clone());
+        }
+        forward.extend(args.iter().cloned());
+        return run_distributed(cfg, forward, csv_out);
     }
     println!(
         "training {} / {} with {} on {} workers (N={}, epochs={}, lr={})",
@@ -276,6 +303,160 @@ fn cmd_train(mut args: Vec<String>) -> Result<()> {
         std::fs::write(&path, res.to_csv()).map_err(|e| eyre!("writing {path}: {e}"))?;
         println!("  timeline CSV   {path}");
     }
+    Ok(())
+}
+
+/// `digest train --distributed` — one worker OS process per partition
+/// against an in-process `ps-serve` daemon.  The parent binds an
+/// ephemeral port, re-execs itself `parts` times as `digest worker`,
+/// and serves the run on the main thread.
+fn run_distributed(
+    cfg: RunConfig,
+    forward: Vec<String>,
+    csv_out: Option<String>,
+) -> Result<()> {
+    if cfg.load_from.is_some() {
+        return Err(eyre!("--distributed does not support resume (load_from) yet"));
+    }
+    println!(
+        "distributed training {} / {} with {} across {} processes (N={}, epochs={})",
+        cfg.dataset,
+        cfg.model.as_str(),
+        cfg.method.as_str(),
+        cfg.parts,
+        cfg.sync_interval,
+        cfg.epochs
+    );
+    let save_to = cfg.save_to.clone();
+    let parts = cfg.parts;
+    let server = coordinator::dist::PsServer::bind(cfg, "127.0.0.1:0", save_to.clone())?;
+    let addr = server.local_addr()?.to_string();
+    let exe = std::env::current_exe().map_err(|e| eyre!("current_exe: {e}"))?;
+    let mut children = Vec::new();
+    for part in 0..parts {
+        let child = std::process::Command::new(&exe)
+            .arg("worker")
+            .arg("--part")
+            .arg(part.to_string())
+            .arg("--connect")
+            .arg(&addr)
+            .args(&forward)
+            .spawn()
+            .map_err(|e| eyre!("spawning worker {part}: {e}"))?;
+        children.push(child);
+    }
+    let outcome = server.run();
+    // reap the workers whether the daemon succeeded or not
+    let mut worker_err = None;
+    for (part, mut child) in children.into_iter().enumerate() {
+        if outcome.is_err() {
+            let _ = child.kill();
+        }
+        match child.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => {
+                worker_err.get_or_insert(eyre!("worker {part} exited with {status}"));
+            }
+            Err(e) => {
+                worker_err.get_or_insert(eyre!("waiting for worker {part}: {e}"));
+            }
+        }
+    }
+    let outcome = outcome?;
+    if let Some(e) = worker_err {
+        return Err(e);
+    }
+    if let Some(path) = &save_to {
+        println!("training state saved to {path} (resume with load_from={path})");
+    }
+    print_dist_outcome(&outcome, csv_out)
+}
+
+fn print_dist_outcome(
+    outcome: &coordinator::dist::DistOutcome,
+    csv_out: Option<String>,
+) -> Result<()> {
+    println!("\nresults:");
+    println!("  best val F1    {:.4}", outcome.best_val_f1);
+    println!("  final val F1   {:.4}", outcome.final_val_f1);
+    println!("  final test F1  {:.4}", outcome.final_test_f1);
+    println!("  virtual time   {:.3}s", outcome.total_vtime);
+    println!(
+        "  KVS traffic    {} ({} pulls, {} pushes, {} misses)",
+        human_bytes(outcome.kvs.total_bytes()),
+        outcome.kvs.pulls,
+        outcome.kvs.pushes,
+        outcome.kvs.misses
+    );
+    println!(
+        "  wire traffic   {} over {} updates",
+        human_bytes(outcome.wire_bytes),
+        outcome.updates
+    );
+    if let Some(path) = csv_out {
+        let mut s = String::from(coordinator::LogPoint::CSV_HEADER);
+        for p in &outcome.points {
+            s.push_str(&p.csv_row());
+        }
+        std::fs::write(&path, s).map_err(|e| eyre!("writing {path}: {e}"))?;
+        println!("  timeline CSV   {path}");
+    }
+    Ok(())
+}
+
+/// Shared config parsing for the two distributed-process entry points:
+/// `--config file.json` plus `key=value` overrides, identical to
+/// `digest train` so all processes derive the same `RunConfig`.
+fn dist_config(args: &mut Vec<String>) -> Result<RunConfig> {
+    let mut cfg = match take_opt(args, "--config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| eyre!("reading {path}: {e}"))?;
+            RunConfig::from_json(&Json::parse(&text)?)?
+        }
+        None => RunConfig::default(),
+    };
+    for kv in args.iter() {
+        cfg.apply_override(kv)?;
+    }
+    Ok(cfg)
+}
+
+/// `digest ps-serve` — stand-alone training-plane daemon.  Blocks until
+/// `parts` workers connect and the run completes.
+fn cmd_ps_serve(mut args: Vec<String>) -> Result<()> {
+    let addr = take_opt(&mut args, "--addr").unwrap_or_else(|| "127.0.0.1:7878".into());
+    let csv_out = take_opt(&mut args, "--csv");
+    let cfg = dist_config(&mut args)?;
+    let save_to = cfg.save_to.clone();
+    let server = coordinator::dist::PsServer::bind(cfg, &addr, save_to.clone())?;
+    let local = server.local_addr()?;
+    println!("ps-serve listening on {local}; waiting for workers");
+    let outcome = server.run()?;
+    if let Some(path) = &save_to {
+        println!("training state saved to {path}");
+    }
+    print_dist_outcome(&outcome, csv_out)
+}
+
+/// `digest worker` — one partition's training process.
+fn cmd_worker(mut args: Vec<String>) -> Result<()> {
+    let part: usize = take_opt(&mut args, "--part")
+        .ok_or_else(|| eyre!("--part required"))?
+        .parse()
+        .map_err(|e| eyre!("--part: {e}"))?;
+    let addr = take_opt(&mut args, "--connect")
+        .ok_or_else(|| eyre!("--connect required"))?;
+    let cfg = dist_config(&mut args)?;
+    let run = coordinator::dist::run_worker(&cfg, part, &addr)?;
+    println!(
+        "worker {} done: {} local epochs, {} on the wire, final val F1 {:.4} / test {:.4}",
+        run.part,
+        run.epochs_run,
+        human_bytes(run.wire_bytes),
+        run.final_val_f1,
+        run.final_test_f1
+    );
     Ok(())
 }
 

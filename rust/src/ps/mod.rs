@@ -24,7 +24,58 @@ use std::sync::Mutex;
 
 use crate::tensor::Matrix;
 use crate::util::lock_unpoisoned;
+use crate::Result;
 use optimizer::Optimizer;
+
+/// The parameter-plane interface schedulers program against: fetch the
+/// global weights, submit gradients (slot-indexed sync or immediate
+/// async), and read the delay statistics.  [`ParamServer`] is the
+/// default in-memory backend; `coordinator::dist::RemoteParamService`
+/// speaks the same contract over a `digest-wire-v1` socket.  Methods
+/// return `Result` because a remote backend can fail mid-call; the
+/// in-memory impl never errors.
+pub trait ParamService: Send + Sync {
+    /// Current global parameters and their version.
+    fn fetch(&self) -> Result<(Vec<Matrix>, u64)>;
+
+    /// Current parameter version (number of applied updates).
+    fn version(&self) -> Result<u64>;
+
+    /// Slot-indexed synchronous submit; returns `true` for the caller
+    /// that completed the round (fixed ascending-slot reduction keeps
+    /// any arrival order bit-identical).
+    fn submit_slot(&self, slot: usize, grads: &[Matrix]) -> Result<bool>;
+
+    /// Asynchronous submit: apply immediately, recording the delay
+    /// relative to `fetched_version`.
+    fn submit_async(&self, grads: &[Matrix], fetched_version: u64) -> Result<()>;
+
+    /// Async delay statistics (Thm 3's τ).
+    fn delay_stats(&self) -> Result<DelayStats>;
+}
+
+impl ParamService for ParamServer {
+    fn fetch(&self) -> Result<(Vec<Matrix>, u64)> {
+        Ok(ParamServer::fetch(self))
+    }
+
+    fn version(&self) -> Result<u64> {
+        Ok(ParamServer::version(self))
+    }
+
+    fn submit_slot(&self, slot: usize, grads: &[Matrix]) -> Result<bool> {
+        Ok(ParamServer::submit_slot(self, slot, grads))
+    }
+
+    fn submit_async(&self, grads: &[Matrix], fetched_version: u64) -> Result<()> {
+        ParamServer::submit_async(self, grads, fetched_version);
+        Ok(())
+    }
+
+    fn delay_stats(&self) -> Result<DelayStats> {
+        Ok(ParamServer::delay_stats(self))
+    }
+}
 
 /// Statistics on async update delays (Thm 3's τ).
 #[derive(Debug, Clone, Default)]
@@ -334,6 +385,20 @@ mod tests {
         }
         assert_eq!(cont.fetch().0[0].data, resumed.fetch().0[0].data);
         assert_eq!(cont.version(), resumed.version());
+    }
+
+    #[test]
+    fn trait_object_service_matches_concrete() {
+        let ps = ParamServer::new(params(), Optimizer::new(OptimizerKind::Sgd, 0.1), 2);
+        let svc: &dyn ParamService = &ps;
+        assert_eq!(svc.version().unwrap(), 0);
+        assert!(!svc.submit_slot(0, &grads(1.0)).unwrap());
+        assert!(svc.submit_slot(1, &grads(3.0)).unwrap());
+        let (p, v) = svc.fetch().unwrap();
+        assert_eq!(v, 1);
+        assert_eq!(p[0].data, ParamServer::fetch(&ps).0[0].data);
+        svc.submit_async(&grads(0.5), v).unwrap();
+        assert_eq!(svc.delay_stats().unwrap().updates, 1);
     }
 
     #[test]
