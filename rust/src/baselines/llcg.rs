@@ -278,6 +278,8 @@ impl TrainSession for LlcgSession<'_> {
             kvs_bytes: 0,
             ps_bytes: self.ps_bytes,
             wire_bytes: ctx.kvs.wire_bytes(),
+            wire_retries: 0,
+            leases_lost: 0,
         };
         self.points.push(point.clone());
         self.r += 1;

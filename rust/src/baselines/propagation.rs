@@ -189,6 +189,8 @@ impl TrainSession for PropagationSession<'_> {
             kvs_bytes: ctx.kvs.metrics().total_bytes(),
             ps_bytes: self.ps_bytes,
             wire_bytes: ctx.kvs.wire_bytes(),
+            wire_retries: 0,
+            leases_lost: 0,
         };
         self.points.push(point.clone());
         self.r += 1;

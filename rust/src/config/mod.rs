@@ -71,6 +71,117 @@ impl std::str::FromStr for Method {
     }
 }
 
+/// What the `ps-serve` daemon does when a worker's connection is lost
+/// mid-run (EOF, mid-frame cut, oversize/garbage frame, or read
+/// silence past the lease grace).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LossPolicy {
+    /// First-error-wins: any lost worker aborts the whole run (the
+    /// pre-lease PR 8 behavior).
+    Abort,
+    /// Hold the worker's lease and all run state for `loss_grace`
+    /// seconds; a reconnecting or freshly re-launched worker resumes
+    /// bit-exactly via sequence-numbered reply replay.  The default.
+    Wait,
+    /// Async (`digest-a`) only: the lost worker departs permanently
+    /// and the survivors grind out the remaining update budget.
+    Continue,
+}
+
+impl LossPolicy {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            LossPolicy::Abort => "abort",
+            LossPolicy::Wait => "wait",
+            LossPolicy::Continue => "continue",
+        }
+    }
+
+    /// Stable wire tag (the worker's Hello carries its policy so a
+    /// daemon/worker disagreement is caught at admission).
+    pub fn wire_tag(self) -> u8 {
+        match self {
+            LossPolicy::Abort => 0,
+            LossPolicy::Wait => 1,
+            LossPolicy::Continue => 2,
+        }
+    }
+
+    pub fn from_wire_tag(t: u8) -> Result<Self> {
+        match t {
+            0 => Ok(LossPolicy::Abort),
+            1 => Ok(LossPolicy::Wait),
+            2 => Ok(LossPolicy::Continue),
+            _ => Err(eyre!("unknown loss-policy wire tag {t}")),
+        }
+    }
+}
+
+impl std::str::FromStr for LossPolicy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "abort" => Ok(LossPolicy::Abort),
+            "wait" => Ok(LossPolicy::Wait),
+            "continue" => Ok(LossPolicy::Continue),
+            _ => Err(eyre!("unknown on_worker_loss {s:?} (abort|wait|continue)")),
+        }
+    }
+}
+
+/// Distributed-transport knobs shared by the `ps-serve` daemon and the
+/// socket-backed worker client (`coordinator::dist`).  Flat `key=value`
+/// / JSON fields on [`RunConfig`] like everything else, grouped here so
+/// both ends agree on one source of truth.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DistConfig {
+    /// Max seconds a worker waits for one daemon reply before treating
+    /// the connection as dead and reconnecting (replaces the old
+    /// hardcoded 30 s socket timeout).
+    pub io_timeout: f64,
+    /// Connection / retransmit attempts before a worker gives up on
+    /// the daemon (initial connect and every mid-run reconnect).
+    pub connect_retries: usize,
+    /// Initial backoff between attempts in milliseconds; doubles per
+    /// failure, capped at ~2 s.
+    pub backoff_ms: u64,
+    /// Daemon-side policy for a lost worker connection.
+    pub on_worker_loss: LossPolicy,
+    /// Seconds the daemon holds a lost lease (and parks the barriers)
+    /// waiting for a rejoin before aborting; `Wait` policy only.
+    pub loss_grace: f64,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        DistConfig {
+            io_timeout: 30.0,
+            connect_retries: 100,
+            backoff_ms: 100,
+            on_worker_loss: LossPolicy::Wait,
+            loss_grace: 30.0,
+        }
+    }
+}
+
+impl DistConfig {
+    fn validate(&self) -> Result<()> {
+        if !(self.io_timeout > 0.0 && self.io_timeout.is_finite()) {
+            return Err(eyre!("io_timeout must be a finite positive number"));
+        }
+        if self.connect_retries == 0 {
+            return Err(eyre!("connect_retries must be >= 1"));
+        }
+        if self.backoff_ms == 0 {
+            return Err(eyre!("backoff_ms must be >= 1"));
+        }
+        if self.loss_grace < 0.0 || !self.loss_grace.is_finite() {
+            return Err(eyre!("loss_grace must be a finite non-negative number"));
+        }
+        Ok(())
+    }
+}
+
 /// Full configuration of a training run.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -132,6 +243,9 @@ pub struct RunConfig {
     /// breaks bit-identity with the in-memory run (accuracy stays
     /// within epsilon — asserted in tests); off by default.
     pub wire_f16: bool,
+    /// Distributed-transport fault-tolerance knobs (socket backend
+    /// only; the in-memory backends never look at these).
+    pub dist: DistConfig,
 }
 
 impl Default for RunConfig {
@@ -162,6 +276,7 @@ impl Default for RunConfig {
             export_best: None,
             wire_delta: true,
             wire_f16: false,
+            dist: DistConfig::default(),
         }
     }
 }
@@ -243,6 +358,21 @@ impl RunConfig {
         if let Some(v) = j.opt("wire_f16") {
             c.wire_f16 = v.as_bool()?;
         }
+        if let Some(v) = j.opt("io_timeout") {
+            c.dist.io_timeout = v.as_f64()?;
+        }
+        if let Some(v) = j.opt("connect_retries") {
+            c.dist.connect_retries = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("backoff_ms") {
+            c.dist.backoff_ms = v.as_u64()?;
+        }
+        if let Some(v) = j.opt("on_worker_loss") {
+            c.dist.on_worker_loss = v.as_str()?.parse()?;
+        }
+        if let Some(v) = j.opt("loss_grace") {
+            c.dist.loss_grace = v.as_f64()?;
+        }
         if let Some(v) = j.opt("straggler") {
             let arr = v.as_arr()?;
             if arr.len() != 3 {
@@ -298,6 +428,20 @@ impl RunConfig {
                 self.wire_delta = v.parse().map_err(|e| eyre!("wire_delta: {e}"))?
             }
             "wire_f16" => self.wire_f16 = v.parse().map_err(|e| eyre!("wire_f16: {e}"))?,
+            "io_timeout" => {
+                self.dist.io_timeout = v.parse().map_err(|e| eyre!("io_timeout: {e}"))?
+            }
+            "connect_retries" => {
+                self.dist.connect_retries =
+                    v.parse().map_err(|e| eyre!("connect_retries: {e}"))?
+            }
+            "backoff_ms" => {
+                self.dist.backoff_ms = v.parse().map_err(|e| eyre!("backoff_ms: {e}"))?
+            }
+            "on_worker_loss" => self.dist.on_worker_loss = v.parse()?,
+            "loss_grace" => {
+                self.dist.loss_grace = v.parse().map_err(|e| eyre!("loss_grace: {e}"))?
+            }
             _ => return Err(eyre!("unknown config key {k:?}")),
         }
         // field-local rules only: cross-field constraints (straggler id
@@ -323,6 +467,17 @@ impl RunConfig {
         }
         if self.save_every > 0 && self.save_to.is_none() {
             return Err(eyre!("save_every requires save_to"));
+        }
+        // `continue` shrinks the membership and keeps training, which
+        // is only sound for the barrier-free async scheduler: a sync
+        // round can never fill without every partition's submit
+        if self.dist.on_worker_loss == LossPolicy::Continue
+            && self.method != Method::DigestAsync
+        {
+            return Err(eyre!(
+                "on_worker_loss=continue requires method=digest-a \
+                 (sync barriers cannot shrink; use abort or wait)"
+            ));
         }
         Ok(())
     }
@@ -354,6 +509,7 @@ impl RunConfig {
         if self.wall_budget < 0.0 || !self.wall_budget.is_finite() {
             return Err(eyre!("wall_budget must be a finite non-negative number"));
         }
+        self.dist.validate()?;
         Ok(())
     }
 
@@ -609,6 +765,72 @@ mod tests {
         let mut c = RunConfig::default();
         c.apply_override("threads=2").unwrap();
         assert_eq!(c.threads, 2);
+    }
+
+    #[test]
+    fn dist_knobs_parse_and_default() {
+        let c = RunConfig::default();
+        assert!((c.dist.io_timeout - 30.0).abs() < 1e-12);
+        assert_eq!(c.dist.connect_retries, 100);
+        assert_eq!(c.dist.backoff_ms, 100);
+        assert_eq!(c.dist.on_worker_loss, LossPolicy::Wait);
+        assert!((c.dist.loss_grace - 30.0).abs() < 1e-12);
+        let j = Json::parse(
+            r#"{
+                "method": "digest-a", "io_timeout": 2.5,
+                "connect_retries": 7, "backoff_ms": 10,
+                "on_worker_loss": "continue", "loss_grace": 5.0
+            }"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert!((c.dist.io_timeout - 2.5).abs() < 1e-12);
+        assert_eq!(c.dist.connect_retries, 7);
+        assert_eq!(c.dist.backoff_ms, 10);
+        assert_eq!(c.dist.on_worker_loss, LossPolicy::Continue);
+        assert!((c.dist.loss_grace - 5.0).abs() < 1e-12);
+        // CLI overrides hit the same fields
+        let mut c = RunConfig::default();
+        c.apply_override("io_timeout=1.5").unwrap();
+        c.apply_override("connect_retries=3").unwrap();
+        c.apply_override("backoff_ms=20").unwrap();
+        c.apply_override("on_worker_loss=abort").unwrap();
+        c.apply_override("loss_grace=0").unwrap();
+        assert!((c.dist.io_timeout - 1.5).abs() < 1e-12);
+        assert_eq!(c.dist.connect_retries, 3);
+        assert_eq!(c.dist.on_worker_loss, LossPolicy::Abort);
+        assert!(c.apply_override("on_worker_loss=maybe").is_err());
+        assert!(c.apply_override("io_timeout=0").is_err());
+        assert!(c.apply_override("connect_retries=0").is_err());
+        assert!(c.apply_override("backoff_ms=0").is_err());
+        assert!(c.apply_override("loss_grace=-1").is_err());
+    }
+
+    #[test]
+    fn continue_policy_requires_async_method() {
+        // field-locally fine in either override order; the cross-field
+        // rule fires at full validate
+        let mut c = RunConfig::default();
+        c.apply_override("on_worker_loss=continue").unwrap();
+        let err = c.validate().unwrap_err();
+        assert!(err.to_string().contains("digest-a"), "{err}");
+        c.apply_override("method=digest-a").unwrap();
+        c.validate().unwrap();
+        // and through the JSON path (validate runs at load)
+        let j = Json::parse(r#"{"on_worker_loss": "continue"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        let j =
+            Json::parse(r#"{"method": "digest-a", "on_worker_loss": "continue"}"#).unwrap();
+        RunConfig::from_json(&j).unwrap();
+    }
+
+    #[test]
+    fn loss_policy_wire_tags_round_trip() {
+        for p in [LossPolicy::Abort, LossPolicy::Wait, LossPolicy::Continue] {
+            assert_eq!(LossPolicy::from_wire_tag(p.wire_tag()).unwrap(), p);
+            assert_eq!(p.as_str().parse::<LossPolicy>().unwrap(), p);
+        }
+        assert!(LossPolicy::from_wire_tag(9).is_err());
     }
 
     #[test]

@@ -418,6 +418,8 @@ impl TrainSession for AsyncSession<'_> {
                         kvs_bytes: ctx.kvs.metrics().total_bytes(),
                         ps_bytes: self.ps_bytes,
                         wire_bytes: wire_total,
+                        wire_retries: 0,
+                        leases_lost: 0,
                     };
                     let bd = EpochBreakdown {
                         compute: compute_t,
@@ -427,6 +429,8 @@ impl TrainSession for AsyncSession<'_> {
                         max_stale_age: self.window_age,
                         total: self.vtime - self.last_epoch_t,
                         wire_bytes: wire_total.saturating_sub(self.wire_seen),
+                        wire_retries: 0,
+                        leases_lost: 0,
                     };
                     self.wire_seen = wire_total;
                     self.points.push(point.clone());

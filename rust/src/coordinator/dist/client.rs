@@ -6,16 +6,34 @@
 //! sequential per worker, so one connection is enough), guarded by a
 //! mutex so the `Box<dyn RepStore>` seam — which requires `Sync` — is
 //! satisfied.  All waiting happens **daemon-side** (barriers, versioned
-//! fetches); the client just blocks on the reply frame, looping on
-//! read-timeout polls so a stalled daemon is distinguishable from a
-//! dead one (a dropped connection surfaces as a structured error).
+//! fetches); the client just blocks on the reply frame, polling in
+//! short read-timeout slices so a stalled daemon is distinguishable
+//! from a dead one.
+//!
+//! # Fault tolerance
+//!
+//! Every request travels with a transport-level sequence number (a
+//! u64 LE prefix on the frame payload; hellos use seq 0), and the
+//! daemon keeps a per-lease reply log.  That makes a request
+//! exactly-once under retransmission: when a send or reply is lost,
+//! [`DistClient`] drops the socket, redials with exponential backoff,
+//! re-Hellos with its lease token, and resends the *same* sequence
+//! number — the daemon either executes it (next-in-order) or replays
+//! the logged reply verbatim (already applied), so counters are never
+//! double-charged and replayed fetches return the original bytes.
+//! All retry knobs come from [`DistConfig`]; `io_timeout` must exceed
+//! the longest legitimate daemon-side wait (a full barrier straggle),
+//! since a reply slower than that is treated as a lost connection.
+//! Deterministic fault injection ([`FaultPlan`]) hooks the send path
+//! keyed on the monotonic sent-frame counter.
 
 use std::collections::HashMap;
-use std::net::TcpStream;
+use std::io::Write;
+use std::net::{Shutdown, TcpStream};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use crate::config::RunConfig;
+use crate::config::{DistConfig, RunConfig};
 use crate::kvs::{KvsSnapshot, PullInfo, RepStore};
 use crate::ps::{DelayStats, ParamService};
 use crate::tensor::Matrix;
@@ -24,13 +42,22 @@ use crate::util::lock_unpoisoned;
 use crate::{eyre, Result};
 
 use super::super::sync::StepReport;
+use super::faultpoint::{FaultAction, FaultPlan};
 use super::wire::{
     row_fingerprint, DHello, FinishSnap, ParamSubmit, RepPush, Request, Response,
     ENC_DELTA, ENC_F16, NO_WAIT, TRAIN_WIRE_VERSION,
 };
 
+/// Read-timeout slice for reply polling; total patience is
+/// `DistConfig::io_timeout`, checked between slices.
+const READ_POLL: Duration = Duration::from_millis(200);
+
+/// Reconnect backoff doubles per failed attempt, capped here.
+const BACKOFF_CAP_MS: u64 = 2_000;
+
 /// Map an unexpected reply to a structured error (daemon [`Response::Error`]
-/// frames carry their message through).
+/// frames carry their message through).  Application errors are never
+/// retried — only transport faults are.
 fn unexpected(wanted: &str, got: &Response) -> anyhow::Error {
     match got {
         Response::Error { message } => eyre!("daemon error: {message}"),
@@ -38,86 +65,300 @@ fn unexpected(wanted: &str, got: &Response) -> anyhow::Error {
     }
 }
 
-/// One blocking training-plane connection (handshake done in
-/// [`DistClient::connect`]); tracks its own bytes on the wire, which is
-/// where the `wire_bytes` telemetry column comes from.
+/// Outcome of one on-the-wire attempt: a reply frame, or a transport
+/// fault worth retrying on a fresh connection.
+enum Attempt {
+    Reply(u8, Vec<u8>),
+    Lost(String),
+}
+
+/// One blocking training-plane connection with reconnect/retransmit
+/// built in (handshake done in [`DistClient::connect`]); tracks its own
+/// bytes on the wire, which is where the `wire_bytes` telemetry column
+/// comes from.
 pub struct DistClient {
-    stream: TcpStream,
+    addr: String,
+    stream: Option<TcpStream>,
+    /// Re-sent on every reconnect; `token` holds the daemon-issued
+    /// lease token after each successful hello.
+    hello: DHello,
+    io_timeout: Duration,
+    connect_retries: usize,
+    backoff_ms: u64,
+    /// Last assigned request sequence number (hellos are always seq 0).
+    seq: u64,
+    /// Monotonic count of frames this client tried to send, hellos and
+    /// retransmits included — the clock fault rules are keyed on.
+    frames_sent: u64,
+    /// Successful mid-run rejoins (used to invalidate the delta
+    /// fingerprint cache so the first post-rejoin push is full rows).
+    reconnects: u64,
+    faults: FaultPlan,
+    /// Resume payload from the initial hello, if the daemon held a
+    /// parked snapshot for this partition.  Taken once by the worker.
+    resume: Option<(u64, FinishSnap)>,
     bytes_out: u64,
     bytes_in: u64,
 }
 
 impl DistClient {
-    /// Connect (with a short retry window for the daemon still binding),
-    /// then run the config handshake — the daemon rejects any config
-    /// mismatch, so a successful connect guarantees both processes
-    /// rebuild identical dataset/partition/plan state.
-    pub fn connect(addr: &str, hello: &DHello) -> Result<DistClient> {
-        let mut last_err = None;
-        let mut stream = None;
-        for _attempt in 0..100 {
-            match TcpStream::connect(addr) {
-                Ok(s) => {
-                    stream = Some(s);
-                    break;
-                }
-                Err(e) => {
-                    last_err = Some(e);
-                    std::thread::sleep(Duration::from_millis(100));
-                }
-            }
-        }
-        let stream = match stream {
-            Some(s) => s,
-            None => {
-                return Err(eyre!(
-                    "connecting to ps-serve at {addr}: {}",
-                    last_err.map_or_else(|| "no attempt".to_string(), |e| e.to_string())
-                ))
-            }
-        };
-        let _ = stream.set_nodelay(true);
-        let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
-        let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    /// Dial (retrying while the daemon is still binding), then run the
+    /// config handshake — the daemon rejects any config mismatch, so a
+    /// successful connect guarantees both processes rebuild identical
+    /// dataset/partition/plan state.  If the daemon holds a parked
+    /// lease for this partition, the reply carries the resume snapshot
+    /// and this client starts its sequence numbers at the snapshot
+    /// point so the retransmit window lines up.
+    pub fn connect(
+        addr: &str,
+        hello: &DHello,
+        dist: &DistConfig,
+        faults: FaultPlan,
+    ) -> Result<DistClient> {
         let mut c = DistClient {
-            stream,
+            addr: addr.to_string(),
+            stream: None,
+            hello: hello.clone(),
+            io_timeout: Duration::from_secs_f64(dist.io_timeout),
+            connect_retries: dist.connect_retries,
+            backoff_ms: dist.backoff_ms,
+            seq: 0,
+            frames_sent: 0,
+            reconnects: 0,
+            faults,
+            resume: None,
             bytes_out: 0,
             bytes_in: 0,
         };
-        match c.roundtrip(&Request::Hello(hello.clone()))? {
-            Response::HelloOk { parts, .. } if parts == hello.parts => Ok(c),
-            Response::HelloOk { parts, .. } => Err(eyre!(
-                "daemon runs {parts} parts, this worker was configured for {}",
-                hello.parts
-            )),
+        let (op, payload) = Request::Hello(c.hello.clone()).encode()?;
+        let (rop, rp) = c.exchange(0, op, &payload)?;
+        match Response::decode(rop, &rp)? {
+            Response::HelloOk {
+                parts,
+                token,
+                snap_seq,
+                snap,
+                ..
+            } => {
+                if parts != c.hello.parts {
+                    return Err(eyre!(
+                        "daemon runs {parts} parts, this worker was configured for {}",
+                        c.hello.parts
+                    ));
+                }
+                c.hello.token = token;
+                c.seq = snap_seq;
+                c.resume = snap.map(|s| (snap_seq, s));
+                Ok(c)
+            }
             other => Err(unexpected("HelloOk", &other)),
         }
     }
 
     /// Total bytes this connection has put on the wire (both directions,
-    /// frame overhead included).
+    /// frame overhead included, across reconnects).
     pub fn wire_bytes(&self) -> u64 {
         self.bytes_out + self.bytes_in
     }
 
-    /// One request→response exchange with byte accounting.  Blocking
-    /// daemon calls (barriers, versioned fetches) can out-wait the
-    /// socket read timeout; a timeout at a frame boundary just polls
-    /// again — only a closed connection or a mid-frame cut is fatal.
+    /// Successful mid-run rejoins so far.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects
+    }
+
+    /// The daemon's parked snapshot for this partition, if the initial
+    /// hello resumed a lost lease.  Taking it transfers ownership to
+    /// the worker's restore path.
+    pub fn take_resume(&mut self) -> Option<(u64, FinishSnap)> {
+        self.resume.take()
+    }
+
+    /// One request→response exchange with byte accounting and
+    /// exactly-once retransmission (see module docs).
     fn roundtrip(&mut self, req: &Request) -> Result<Response> {
         let (op, payload) = req.encode()?;
-        self.bytes_out += write_frame(&mut self.stream, op, &payload)?;
-        loop {
-            match read_frame(&mut self.stream, MAX_FRAME)? {
-                FrameRead::Frame(op, payload) => {
-                    self.bytes_in += 5 + payload.len() as u64;
-                    return Response::decode(op, &payload);
-                }
-                FrameRead::Closed => {
-                    return Err(eyre!("ps-serve closed the connection mid-run"))
-                }
-                FrameRead::TimedOut => continue, // daemon-side wait outlasted the poll
+        self.seq += 1;
+        let (rop, rp) = self.exchange(self.seq, op, &payload)?;
+        Response::decode(rop, &rp)
+    }
+
+    /// Drive one sequence number to a reply: up to `connect_retries`
+    /// attempts, each (re)dialing if needed, re-Helloing mid-run, and
+    /// resending the same frame.  Transport faults retry with doubling
+    /// backoff; daemon `Error` replies and fault-plan `down` do not.
+    fn exchange(&mut self, seq: u64, op: u8, payload: &[u8]) -> Result<(u8, Vec<u8>)> {
+        // lint:allow(D006, wall-clock here only times out dead transports and labels the error; it never feeds training math)
+        let start = Instant::now();
+        let mut backoff = self.backoff_ms;
+        let mut last = String::from("no attempt made");
+        for attempt in 1..=self.connect_retries {
+            if attempt > 1 {
+                std::thread::sleep(Duration::from_millis(backoff));
+                backoff = (backoff * 2).min(BACKOFF_CAP_MS);
             }
+            if self.stream.is_none() {
+                if self.faults.is_down() {
+                    return Err(eyre!(
+                        "fault injection: link to {} is permanently down",
+                        self.addr
+                    ));
+                }
+                match TcpStream::connect(&self.addr) {
+                    Ok(s) => {
+                        let _ = s.set_nodelay(true);
+                        let _ = s.set_read_timeout(Some(READ_POLL));
+                        let _ = s.set_write_timeout(Some(self.io_timeout));
+                        self.stream = Some(s);
+                    }
+                    Err(e) => {
+                        last = format!("dial: {e}");
+                        continue;
+                    }
+                }
+                // A fresh socket mid-run needs its own handshake before
+                // the pending request can be retransmitted on it.
+                if seq != 0 {
+                    match self.rehello()? {
+                        None => self.reconnects += 1,
+                        Some(msg) => {
+                            self.drop_stream();
+                            last = msg;
+                            continue;
+                        }
+                    }
+                }
+            }
+            match self.wire_once(seq, op, payload)? {
+                Attempt::Reply(rop, rp) => return Ok((rop, rp)),
+                Attempt::Lost(msg) => {
+                    self.drop_stream();
+                    last = msg;
+                }
+            }
+        }
+        Err(eyre!(
+            "ps-serve at {}: giving up on seq {seq} after {} attempts over {:.1}s (last: {last})",
+            self.addr,
+            self.connect_retries,
+            start.elapsed().as_secs_f64()
+        ))
+    }
+
+    /// Mid-run handshake on a fresh socket, presenting the current
+    /// lease token.  `Ok(None)` = admitted (token refreshed);
+    /// `Ok(Some(msg))` = refused or lost, retry later; `Err` = give up
+    /// (config drift, permanent fault).
+    fn rehello(&mut self) -> Result<Option<String>> {
+        let (op, payload) = Request::Hello(self.hello.clone()).encode()?;
+        match self.wire_once(0, op, &payload)? {
+            Attempt::Lost(msg) => Ok(Some(format!("rejoin hello: {msg}"))),
+            Attempt::Reply(rop, rp) => match Response::decode(rop, &rp)? {
+                Response::HelloOk { parts, token, .. } => {
+                    if parts != self.hello.parts {
+                        return Err(eyre!(
+                            "daemon runs {parts} parts, this worker was configured for {}",
+                            self.hello.parts
+                        ));
+                    }
+                    self.hello.token = token;
+                    Ok(None)
+                }
+                Response::Error { message } => Ok(Some(format!("rejoin refused: {message}"))),
+                other => Err(unexpected("HelloOk", &other)),
+            },
+        }
+    }
+
+    /// Send one seq-prefixed frame on the current socket and await its
+    /// reply, applying any fault rule scheduled for this frame number.
+    fn wire_once(&mut self, seq: u64, op: u8, payload: &[u8]) -> Result<Attempt> {
+        let mut body = Vec::with_capacity(8 + payload.len());
+        body.extend_from_slice(&seq.to_le_bytes());
+        body.extend_from_slice(payload);
+        self.frames_sent += 1;
+        let frame_no = self.frames_sent;
+        let mut cut_after_send = false;
+        match self.faults.trigger(frame_no) {
+            None => {}
+            Some(FaultAction::Delay(ms)) => std::thread::sleep(Duration::from_millis(ms)),
+            Some(FaultAction::KillAfter) => cut_after_send = true,
+            Some(FaultAction::Kill) => {
+                self.drop_stream();
+                return Ok(Attempt::Lost(format!(
+                    "fault injection: connection killed before frame {frame_no}"
+                )));
+            }
+            Some(FaultAction::Truncate) => {
+                self.truncate_frame(op, &body);
+                return Ok(Attempt::Lost(format!(
+                    "fault injection: frame {frame_no} truncated mid-write"
+                )));
+            }
+            Some(FaultAction::Down) => {
+                self.drop_stream();
+                return Err(eyre!(
+                    "fault injection: link to {} went permanently down at frame {frame_no}",
+                    self.addr
+                ));
+            }
+        }
+        let io_timeout = self.io_timeout;
+        let stream = match self.stream.as_mut() {
+            Some(s) => s,
+            None => return Ok(Attempt::Lost("no connection".to_string())),
+        };
+        match write_frame(stream, op, &body) {
+            Ok(n) => self.bytes_out += n,
+            Err(e) => return Ok(Attempt::Lost(format!("send: {e}"))),
+        }
+        if cut_after_send {
+            self.drop_stream();
+            return Ok(Attempt::Lost(format!(
+                "fault injection: connection killed after sending frame {frame_no}"
+            )));
+        }
+        // lint:allow(D006, wall-clock here only bounds how long to await a reply from a possibly-dead daemon; it never feeds training math)
+        let waited = Instant::now();
+        loop {
+            match read_frame(stream, MAX_FRAME) {
+                Ok(FrameRead::Frame(rop, rp)) => {
+                    self.bytes_in += 5 + rp.len() as u64;
+                    return Ok(Attempt::Reply(rop, rp));
+                }
+                Ok(FrameRead::Closed) => {
+                    return Ok(Attempt::Lost("connection closed awaiting reply".to_string()))
+                }
+                Ok(FrameRead::TimedOut) => {
+                    if waited.elapsed() >= io_timeout {
+                        return Ok(Attempt::Lost(format!(
+                            "no reply within {:.1}s",
+                            io_timeout.as_secs_f64()
+                        )));
+                    }
+                }
+                Err(e) => return Ok(Attempt::Lost(format!("recv: {e}"))),
+            }
+        }
+    }
+
+    /// Write a deliberately incomplete frame (declared length longer
+    /// than the bytes sent) then cut — the daemon must treat the
+    /// mid-frame EOF as losing *this* lease only.
+    fn truncate_frame(&mut self, op: u8, body: &[u8]) {
+        if let Some(s) = self.stream.as_mut() {
+            let mut raw = Vec::with_capacity(5 + body.len() / 2);
+            raw.extend_from_slice(&((body.len() as u32) + 1).to_le_bytes());
+            raw.push(op);
+            raw.extend_from_slice(&body[..body.len() / 2]);
+            let _ = s.write_all(&raw);
+            let _ = s.flush();
+        }
+        self.drop_stream();
+    }
+
+    fn drop_stream(&mut self) {
+        if let Some(s) = self.stream.take() {
+            let _ = s.shutdown(Shutdown::Both);
         }
     }
 }
@@ -131,8 +372,17 @@ pub struct SubmitAck {
     pub stop: bool,
 }
 
+/// Delta-push fingerprint cache, generation-stamped by the client's
+/// reconnect count: a rejoin clears it, so the first post-rejoin push
+/// travels full rows (the daemon's reconstruction cache is then
+/// refreshed wholesale rather than trusted across the gap).
+struct FpCache {
+    generation: u64,
+    map: HashMap<(u32, u32), u64>,
+}
+
 /// Socket-backed [`RepStore`]: `push`/`pull_into` become
-/// `digest-wire-v1` rep frames against the daemon's in-memory store.
+/// `digest-wire-v2` rep frames against the daemon's in-memory store.
 ///
 /// Pulls always return full f32 rows, so the worker's stale cache is
 /// byte-identical to the in-memory backend's.  Pushes are
@@ -147,7 +397,7 @@ pub struct RemoteRepStore {
     conn: Arc<Mutex<DistClient>>,
     delta: bool,
     f16: bool,
-    fingerprints: Mutex<HashMap<(u32, u32), u64>>,
+    fingerprints: Mutex<FpCache>,
 }
 
 impl RemoteRepStore {
@@ -156,7 +406,10 @@ impl RemoteRepStore {
             conn,
             delta: cfg.wire_delta,
             f16: cfg.wire_f16,
-            fingerprints: Mutex::new(HashMap::new()),
+            fingerprints: Mutex::new(FpCache {
+                generation: 0,
+                map: HashMap::new(),
+            }),
         }
     }
 }
@@ -167,16 +420,25 @@ impl RepStore for RemoteRepStore {
             return Err(eyre!("push: fewer rep rows than nodes"));
         }
         let d = reps.cols;
+        // Lock order: conn before fingerprints (matches every other
+        // path; the cache generation must be read under the conn lock
+        // so a concurrent reconnect can't slip between read and use).
+        let mut c = lock_unpoisoned(&self.conn);
         let (encoding, changed, rows) = if self.delta {
+            let generation = c.reconnects();
             let mut fps = lock_unpoisoned(&self.fingerprints);
+            if fps.generation != generation {
+                fps.map.clear();
+                fps.generation = generation;
+            }
             let mut changed = Vec::new();
             let mut rows = Vec::new();
             for (i, &node) in nodes.iter().enumerate() {
                 let row = reps.row(i);
                 let fp = row_fingerprint(row);
                 let key = (layer as u32, node);
-                if fps.get(&key) != Some(&fp) {
-                    fps.insert(key, fp);
+                if fps.map.get(&key) != Some(&fp) {
+                    fps.map.insert(key, fp);
                     changed.push(i as u32);
                     rows.extend_from_slice(row);
                 }
@@ -199,7 +461,6 @@ impl RepStore for RemoteRepStore {
             changed,
             rows,
         });
-        let mut c = lock_unpoisoned(&self.conn);
         match c.roundtrip(&req)? {
             Response::RepPushOk => Ok(()),
             other => Err(unexpected("RepPushOk", &other)),
@@ -337,11 +598,14 @@ impl RemoteParamService {
         }
     }
 
-    /// Block until every worker reached this (epoch, phase) barrier —
-    /// the wire form of the sync engine's phase-A/phase-B joins.
-    pub fn barrier(&self, epoch: u64, phase: u8) -> Result<()> {
+    /// Block until every live worker reached this (epoch, phase)
+    /// barrier — the wire form of the sync engine's phase-A/phase-B
+    /// joins.  A pushes-phase barrier may carry the worker's state
+    /// snapshot; the daemon parks it as the resume point should this
+    /// worker's lease be lost later.
+    pub fn barrier(&self, epoch: u64, phase: u8, snap: Option<FinishSnap>) -> Result<()> {
         let mut c = lock_unpoisoned(&self.conn);
-        match c.roundtrip(&Request::Barrier { epoch, phase })? {
+        match c.roundtrip(&Request::Barrier { epoch, phase, snap })? {
             Response::BarrierOk => Ok(()),
             other => Err(unexpected("BarrierOk", &other)),
         }
@@ -363,6 +627,11 @@ impl RemoteParamService {
 
     pub fn wire_bytes(&self) -> u64 {
         lock_unpoisoned(&self.conn).wire_bytes()
+    }
+
+    /// Successful mid-run rejoins the shared connection performed.
+    pub fn reconnects(&self) -> u64 {
+        lock_unpoisoned(&self.conn).reconnects()
     }
 }
 
@@ -411,15 +680,17 @@ impl ParamService for RemoteParamService {
     }
 }
 
-/// Dial `addr`, handshake as `part`, and hand back the shared
-/// connection — the one constructor `run_worker` needs.
+/// Dial `addr`, handshake as `part` (with a fault plan already
+/// filtered to that partition), and hand back the shared connection —
+/// the one constructor `run_worker` needs.
 pub fn connect_worker(
     cfg: &RunConfig,
     part: usize,
     addr: &str,
+    faults: FaultPlan,
 ) -> Result<Arc<Mutex<DistClient>>> {
     let hello = DHello::from_config(cfg, part);
     debug_assert_eq!(hello.version, TRAIN_WIRE_VERSION);
-    let client = DistClient::connect(addr, &hello)?;
+    let client = DistClient::connect(addr, &hello, &cfg.dist, faults)?;
     Ok(Arc::new(Mutex::new(client)))
 }

@@ -1,0 +1,245 @@
+//! Deterministic fault injection for the distributed wire path.
+//!
+//! Chaos tests (and the CI chaos smoke job) must reproduce "worker
+//! dies mid-epoch" byte-for-byte, so faults are keyed to the client's
+//! monotonic **sent-frame counter** — never to wall-clock time.  A
+//! [`FaultPlan`] is a list of one-shot rules, each firing the first
+//! time the counter reaches its frame number:
+//!
+//! ```text
+//!   <part|*>:<action>@<frame> [; more rules]
+//!   actions: kill | kill_after | truncate | down | delay=MS
+//! ```
+//!
+//! * `kill` — cut the connection *before* sending that frame (the
+//!   request is lost; the client reconnects and retransmits).
+//! * `kill_after` — send the frame, then cut before reading the reply
+//!   (the daemon applied the request; the retransmit exercises the
+//!   reply-log replay path).
+//! * `truncate` — write a partial frame then cut (the daemon sees a
+//!   mid-frame cut: its lease-lost, never-global-abort path).
+//! * `down` — permanent failure from that frame on: every subsequent
+//!   send and reconnect fails immediately, simulating process death
+//!   (the process is expected to exit and be re-launched).
+//! * `delay=MS` — sleep before sending (CLI soak runs only; the chaos
+//!   tests never use it, keeping them real-time-free).
+//!
+//! Worker processes pick their plan up from the `DIGEST_FAULT_PLAN`
+//! environment variable (inherited from the `train --distributed`
+//! launcher), filtered to their own partition; tests pass explicit
+//! plans through `run_worker_with_faults` to stay env-race-free.
+
+use crate::{eyre, Result};
+
+/// Environment variable the `digest worker` entry point reads its
+/// fault plan from.
+pub const FAULT_PLAN_ENV: &str = "DIGEST_FAULT_PLAN";
+
+/// What to do to the connection when a rule fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Cut the connection before sending the frame.
+    Kill,
+    /// Send the frame, then cut before the reply arrives.
+    KillAfter,
+    /// Write a partial frame, then cut.
+    Truncate,
+    /// Fail permanently from this frame on (simulated process death).
+    Down,
+    /// Sleep this many milliseconds before sending.
+    Delay(u64),
+}
+
+#[derive(Debug, Clone)]
+struct FaultRule {
+    /// `None` = any partition (`*`).
+    part: Option<u32>,
+    frame: u64,
+    action: FaultAction,
+    fired: bool,
+}
+
+/// A deterministic, frame-indexed fault schedule for one client.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    rules: Vec<FaultRule>,
+    /// Latched once a `down` rule fires: every later send fails too.
+    down: bool,
+}
+
+impl FaultPlan {
+    /// The empty plan: no faults, zero overhead beyond one `is_empty`.
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty() && !self.down
+    }
+
+    /// Parse a full plan string (all partitions' rules).
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut rules = Vec::new();
+        for item in s.split([';', ',']) {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            rules.push(Self::parse_rule(item)?);
+        }
+        Ok(FaultPlan { rules, down: false })
+    }
+
+    fn parse_rule(item: &str) -> Result<FaultRule> {
+        let (part_s, rest) = item
+            .split_once(':')
+            .ok_or_else(|| eyre!("fault rule {item:?}: want <part|*>:<action>@<frame>"))?;
+        let part = if part_s == "*" {
+            None
+        } else {
+            Some(
+                part_s
+                    .parse::<u32>()
+                    .map_err(|e| eyre!("fault rule {item:?}: bad part {part_s:?}: {e}"))?,
+            )
+        };
+        let (action_s, frame_s) = rest
+            .split_once('@')
+            .ok_or_else(|| eyre!("fault rule {item:?}: missing @<frame>"))?;
+        let frame = frame_s
+            .parse::<u64>()
+            .map_err(|e| eyre!("fault rule {item:?}: bad frame {frame_s:?}: {e}"))?;
+        if frame == 0 {
+            return Err(eyre!("fault rule {item:?}: frames are 1-based"));
+        }
+        let action = match action_s {
+            "kill" => FaultAction::Kill,
+            "kill_after" => FaultAction::KillAfter,
+            "truncate" => FaultAction::Truncate,
+            "down" => FaultAction::Down,
+            _ => match action_s.split_once('=') {
+                Some(("delay", ms)) => FaultAction::Delay(
+                    ms.parse::<u64>()
+                        .map_err(|e| eyre!("fault rule {item:?}: bad delay {ms:?}: {e}"))?,
+                ),
+                _ => {
+                    return Err(eyre!(
+                        "fault rule {item:?}: unknown action {action_s:?} \
+                         (kill|kill_after|truncate|down|delay=MS)"
+                    ))
+                }
+            },
+        };
+        Ok(FaultRule {
+            part,
+            frame,
+            action,
+            fired: false,
+        })
+    }
+
+    /// The sub-plan relevant to one partition (wildcard rules kept).
+    pub fn for_part(&self, part: u32) -> FaultPlan {
+        FaultPlan {
+            rules: self
+                .rules
+                .iter()
+                .filter(|r| r.part.is_none() || r.part == Some(part))
+                .cloned()
+                .collect(),
+            down: self.down,
+        }
+    }
+
+    /// Parse `DIGEST_FAULT_PLAN` (empty plan when unset) filtered to
+    /// `part`.  A malformed plan is a startup error, not a skipped
+    /// fault — a chaos run that silently doesn't inject is worse than
+    /// one that refuses to start.
+    pub fn from_env(part: u32) -> Result<FaultPlan> {
+        match std::env::var(FAULT_PLAN_ENV) {
+            Ok(s) => Ok(Self::parse(&s)?.for_part(part)),
+            Err(_) => Ok(FaultPlan::none()),
+        }
+    }
+
+    /// True once a `down` rule has fired: the client must fail every
+    /// subsequent send/reconnect immediately.
+    pub fn is_down(&self) -> bool {
+        self.down
+    }
+
+    /// Called by the client with its (1-based, monotonic, counted
+    /// across reconnects) sent-frame number just before writing the
+    /// frame.  Fires the first not-yet-fired rule whose frame has been
+    /// reached; rules are one-shot, `down` latches.
+    pub fn trigger(&mut self, frame: u64) -> Option<FaultAction> {
+        if self.down {
+            return Some(FaultAction::Down);
+        }
+        for r in &mut self.rules {
+            if !r.fired && frame >= r.frame {
+                r.fired = true;
+                if r.action == FaultAction::Down {
+                    self.down = true;
+                }
+                return Some(r.action);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_actions_and_filters_by_part() {
+        let plan =
+            FaultPlan::parse("1:kill@25; *:delay=5@40, 0:truncate@7;2:down@3;1:kill_after@9")
+                .unwrap();
+        let mut p1 = plan.for_part(1);
+        assert_eq!(p1.trigger(9), Some(FaultAction::KillAfter));
+        assert_eq!(p1.trigger(25), Some(FaultAction::Kill));
+        assert_eq!(p1.trigger(40), Some(FaultAction::Delay(5)));
+        assert_eq!(p1.trigger(41), None, "rules are one-shot");
+        let mut p0 = plan.for_part(0);
+        assert_eq!(p0.trigger(6), None);
+        assert_eq!(p0.trigger(7), Some(FaultAction::Truncate));
+        let mut p3 = plan.for_part(3);
+        assert_eq!(p3.trigger(40), Some(FaultAction::Delay(5)), "wildcard");
+        assert_eq!(p3.trigger(100), None);
+    }
+
+    #[test]
+    fn down_latches_permanently() {
+        let mut p = FaultPlan::parse("0:down@3").unwrap().for_part(0);
+        assert!(!p.is_down());
+        assert_eq!(p.trigger(2), None);
+        assert_eq!(p.trigger(3), Some(FaultAction::Down));
+        assert!(p.is_down());
+        assert_eq!(p.trigger(4), Some(FaultAction::Down));
+        assert_eq!(p.trigger(1000), Some(FaultAction::Down));
+    }
+
+    #[test]
+    fn late_counters_still_fire_skipped_rules() {
+        // frame numbering can shift past a rule (e.g. an extra hello
+        // after an earlier fault) — `>=` still fires it exactly once
+        let mut p = FaultPlan::parse("0:kill@10").unwrap().for_part(0);
+        assert_eq!(p.trigger(12), Some(FaultAction::Kill));
+        assert_eq!(p.trigger(13), None);
+    }
+
+    #[test]
+    fn malformed_plans_are_errors() {
+        assert!(FaultPlan::parse("nonsense").is_err());
+        assert!(FaultPlan::parse("0:kill").is_err(), "missing frame");
+        assert!(FaultPlan::parse("0:explode@5").is_err(), "unknown action");
+        assert!(FaultPlan::parse("x:kill@5").is_err(), "bad part");
+        assert!(FaultPlan::parse("0:kill@0").is_err(), "frames 1-based");
+        assert!(FaultPlan::parse("0:delay=abc@5").is_err(), "bad delay");
+        assert!(FaultPlan::parse("").unwrap().is_empty(), "empty plan ok");
+        assert!(FaultPlan::parse(" ; ").unwrap().is_empty());
+    }
+}

@@ -1,4 +1,4 @@
-//! Process-per-partition training over `digest-wire-v1-train`.
+//! Process-per-partition training over `digest-wire-v2-train`.
 //!
 //! The in-memory coordinator simulates M workers inside one process;
 //! this module makes each partition a real OS process. The pieces:
@@ -11,19 +11,28 @@
 //!   [`crate::ps::ParamService`] over one shared TCP connection, so
 //!   all coordinator code runs unchanged against the socket backend.
 //! * [`server`] — `digest ps-serve`: the daemon hosting the KVS, the
-//!   parameter server, the sync barrier, and the epoch bookkeeping.
-//! * [`worker`] — `digest worker`: the per-partition training loop.
+//!   parameter server, the sync barrier, the epoch bookkeeping, and
+//!   the per-partition worker leases.
+//! * [`worker`] — `digest worker`: the per-partition training loop,
+//!   including crash-resume from a daemon-parked snapshot.
+//! * [`faultpoint`] — deterministic fault injection (frame-counter
+//!   keyed kill / truncate / down / delay plans) for chaos tests and
+//!   the CI chaos smoke job.
 //!
 //! Sync (`digest`) runs are checkpoint-byte-identical to the in-memory
-//! scheduler (with f16 quantization off); async (`digest-a`) runs are
+//! scheduler (with f16 quantization off) — including across a worker
+//! death and rejoin under `on_worker_loss = wait`, thanks to
+//! sequence-numbered exactly-once replay; async (`digest-a`) runs are
 //! real asynchrony and match the in-memory simulator's semantics, not
 //! its virtual clock.
 
 pub mod client;
+pub mod faultpoint;
 pub mod server;
 pub mod wire;
 pub mod worker;
 
 pub use client::{connect_worker, DistClient, RemoteParamService, RemoteRepStore};
+pub use faultpoint::{FaultAction, FaultPlan, FAULT_PLAN_ENV};
 pub use server::{DistOutcome, PsServer};
-pub use worker::{run_worker, WorkerRun};
+pub use worker::{run_worker, run_worker_with_faults, WorkerRun};

@@ -4,7 +4,7 @@
 //! [`KVStore`] (behind the [`RepStore`] trait, exactly as an in-memory
 //! run would use it), the [`ParamServer`], the sync barrier, and the
 //! epoch bookkeeping that `SyncSession` normally does inline.  Workers
-//! connect over TCP speaking `digest-wire-v1-train` (see
+//! connect over TCP speaking `digest-wire-v2-train` (see
 //! [`super::wire`]) and drive the run; the daemon is purely reactive.
 //!
 //! # Bit-identity (sync)
@@ -34,6 +34,35 @@
 //!   [`wire::ParamSubmit`]; [`aggregate_epoch`] then runs on the same
 //!   inputs in the same slot order as in-memory.
 //!
+//! # Fault tolerance
+//!
+//! Each admitted partition holds a **lease** ([`Lease`]): a token, an
+//! incarnation counter, and an exactly-once request log.  A dropped
+//! connection (EOF, mid-frame cut, garbage opcode, oversize frame)
+//! never aborts the run directly — the handler marks the lease *lost*
+//! and the reaction is the configured `on_worker_loss` policy:
+//!
+//! * `abort` — fail the whole run at once (the pre-lease behaviour);
+//! * `wait` — park the lease for `loss_grace` seconds.  Run state
+//!   (KVS rows, PS round state, barrier counts, the reply log and the
+//!   last barrier-point worker snapshot) is held so the worker can
+//!   rejoin — same process (presenting its lease token) or a freshly
+//!   launched one (token 0, restored from the parked snapshot +
+//!   sequence-numbered replay).  Only when the grace window expires
+//!   with no rejoin does the run abort;
+//! * `continue` — digest-a only: mark the partition departed and let
+//!   the survivors drive the run to its full update budget.
+//!
+//! Exactly-once: every request carries a transport-level sequence
+//! number.  The lease's `applied` high-water is bumped when execution
+//! *starts* (so a handler that outlives its connection — a "zombie" —
+//! still owns its number), and the reply is logged when execution
+//! completes.  A retransmitted sequence number is never re-executed:
+//! the new connection waits for the logged reply and serves it
+//! verbatim, so counters don't double-charge and replayed fetches
+//! return the original bytes — which is what keeps a kill-and-rejoin
+//! sync run checkpoint-byte-identical to a failure-free one.
+//!
 //! # Async mode
 //!
 //! `digest-a` over the wire applies gradients **on arrival** — real
@@ -41,7 +70,9 @@
 //! *simulator* (virtual clock, modeled overlap), so a distributed
 //! async run is *not* bit-identical to it and makes no such claim;
 //! `vtime` in its log points is wall-clock.  Checkpointing
-//! (`--save`) is therefore rejected for async daemon runs.
+//! (`--save`) is therefore rejected for async daemon runs, and a
+//! freshly launched process cannot rejoin an async run (there is no
+//! deterministic replay to rebuild its state from).
 
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -49,7 +80,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::config::{Method, RunConfig};
+use crate::config::{LossPolicy, Method, RunConfig};
 use crate::ps::checkpoint::WorkerSnap;
 use crate::ps::{optimizer::Optimizer, ParamServer};
 use crate::tensor::Matrix;
@@ -63,18 +94,26 @@ use super::super::session::{base_state, state_checkpoint};
 use super::super::sync::{aggregate_epoch, StepReport};
 use super::super::telemetry::{EpochBreakdown, LogPoint};
 use super::wire::{
-    ParamSubmit, RepPush, Request, Response, ENC_DELTA, MODE_ASYNC, MODE_SYNC,
-    NO_WAIT, PHASE_PUSHES,
+    FinishSnap, ParamSubmit, RepPush, Request, Response, ENC_DELTA, MODE_ASYNC,
+    MODE_SYNC, NO_WAIT, OP_FINISH, PHASE_PUSHES,
 };
 
 /// Handler read-poll granularity: how often a blocked connection checks
-/// the abort flag.  Purely an error-propagation latency knob.
+/// the abort flag and the lease grace reaper.
 const READ_POLL: Duration = Duration::from_millis(250);
-/// Condvar re-check granularity for barrier / versioned-fetch waits.
+/// Condvar re-check granularity for barrier / versioned-fetch /
+/// reply-log waits.
 const WAIT_POLL: Duration = Duration::from_millis(100);
 /// Handshake read deadline — a connection that does not produce a
 /// `DHello` within this window is dropped.
 const HELLO_TIMEOUT: Duration = Duration::from_secs(10);
+/// Accept-loop poll granularity (the listener is non-blocking so the
+/// loop can double as the idle-time lease reaper).
+const ACCEPT_POLL: Duration = Duration::from_millis(50);
+/// How many [`WAIT_POLL`] rounds an admission waits for a still-`live`
+/// lease to be released by its zombie handler before refusing the
+/// duplicate connection.
+const ADMIT_WAIT_ROUNDS: usize = 50;
 
 /// What a completed daemon run hands back to the CLI: the same summary
 /// numbers the in-memory sessions put in their `RunResult`, plus the
@@ -92,6 +131,10 @@ pub struct DistOutcome {
     pub wire_bytes: u64,
     /// Gradient applications (async: one per submit; sync: parts × epochs).
     pub updates: u64,
+    /// Retransmitted requests served verbatim from a lease's reply log.
+    pub wire_retries: u64,
+    /// Worker connections that dropped mid-run (lease lost events).
+    pub leases_lost: u64,
 }
 
 /// A bound-but-not-yet-running daemon.  [`PsServer::bind`] validates
@@ -120,6 +163,14 @@ impl PsServer {
                  on arrival and is not bit-resumable"
             ));
         }
+        if cfg.dist.on_worker_loss == LossPolicy::Continue
+            && cfg.method != Method::DigestAsync
+        {
+            return Err(eyre!(
+                "on_worker_loss=continue is digest-a only: a sync round cannot \
+                 drop a partition and stay bit-deterministic"
+            ));
+        }
         if cfg.parts == 0 {
             return Err(eyre!("ps-serve needs at least one partition"));
         }
@@ -138,8 +189,9 @@ impl PsServer {
             .map_err(|e| eyre!("local_addr: {e}"))
     }
 
-    /// Accept exactly `parts` workers, serve the run to completion, and
-    /// return the outcome.  Blocks the calling thread; the per-worker
+    /// Serve the run to completion and return the outcome.  The accept
+    /// loop stays open for the whole run (rejoins arrive at any time)
+    /// and doubles as the idle-time lease reaper; per-connection
     /// handlers run on scoped threads.
     pub fn run(self) -> Result<DistOutcome> {
         let cfg = self.cfg.clone();
@@ -151,73 +203,90 @@ impl PsServer {
             m,
         );
         let central = Central::new(&ctx, ps, self.save_to.clone());
-
-        // ---- handshake: collect one connection per partition ----
-        let mut conns: Vec<Option<TcpStream>> = (0..m).map(|_| None).collect();
-        let mut connected = 0usize;
-        while connected < m {
-            let (stream, _peer) = self
-                .listener
-                .accept()
-                .map_err(|e| eyre!("ps-serve accept: {e}"))?;
-            match central.handshake(stream) {
-                Ok((part, stream)) => {
-                    if conns[part].is_some() {
-                        // duplicate partition: refuse, keep the original
-                        central.refuse(stream, &format!("partition {part} already connected"));
-                    } else {
-                        conns[part] = Some(stream);
-                        connected += 1;
-                    }
-                }
-                Err(e) => {
-                    // bad hello: the offender was already sent an Error
-                    // frame and dropped inside handshake(); keep accepting
-                    let _ = e;
-                }
-            }
-        }
-        drop(self.listener);
-
-        // ---- serve: one handler thread per worker connection ----
-        let mut first_err: Option<anyhow::Error> = None;
+        self.listener
+            .set_nonblocking(true)
+            .map_err(|e| eyre!("ps-serve set_nonblocking: {e}"))?;
         std::thread::scope(|s| {
-            let handles: Vec<_> = conns
-                .into_iter()
-                .enumerate()
-                .map(|(part, stream)| {
-                    let central = &central;
-                    // a handshaken slot is always Some; guard anyway
-                    let stream = stream.ok_or_else(|| eyre!("partition {part} never connected"));
-                    s.spawn(move || central.handle_conn(part, stream?))
-                })
-                .collect();
-            for (part, h) in handles.into_iter().enumerate() {
-                match h.join() {
-                    Ok(Ok(())) => {}
-                    Ok(Err(e)) => {
-                        if first_err.is_none() {
-                            first_err = Some(e);
-                        }
+            loop {
+                {
+                    let mut st = lock_unpoisoned(&central.state);
+                    if st.done_serving || st.err.is_some() {
+                        break;
                     }
-                    Err(_) => {
-                        if first_err.is_none() {
-                            first_err = Some(eyre!("handler for worker {part} panicked"));
-                        }
+                    // reaper tick: a lost lease must expire even when
+                    // no handler is blocked anywhere to notice it
+                    let _ = central.ensure_live(&mut st);
+                }
+                match self.listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let central = &central;
+                        s.spawn(move || central.admit_and_serve(stream));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(ACCEPT_POLL);
+                    }
+                    Err(e) => {
+                        central.abort(&format!("ps-serve accept: {e}"));
+                        break;
                     }
                 }
             }
         });
-        if let Some(e) = first_err {
-            return Err(e);
-        }
+        drop(self.listener);
         central.into_outcome()
     }
 }
 
+/// One partition's admission state: who may speak for the partition,
+/// what has been applied, and what to hand a rejoining worker.
+struct Lease {
+    /// Daemon-issued session token (`part << 32 | incarnation`); a
+    /// same-process reconnect must present it.  Never 0 once admitted.
+    token: u64,
+    /// Bumped on every successful admission; handlers from older
+    /// incarnations are superseded (their `lease_lost` is a no-op).
+    incarnation: u64,
+    /// A connection currently speaks for this partition.
+    live: bool,
+    /// `continue` policy: the partition left for good.
+    departed: bool,
+    /// When the lease was lost (grace window anchor); `None` while
+    /// live or never-connected.
+    lost_since: Option<Instant>,
+    lost_reason: String,
+    /// Exactly-once high-water: highest sequence number whose
+    /// execution has *started*.
+    applied: u64,
+    /// Replies to applied requests, `(seq, opcode, payload)`, kept for
+    /// retransmission (wait policy only; pruned at snapshot commits).
+    log: Vec<(u64, u8, Vec<u8>)>,
+    /// The worker's state at its last `PHASE_PUSHES` barrier — the
+    /// resume point a freshly launched replacement starts from.
+    snap: Option<FinishSnap>,
+    /// Sequence number of the barrier request that carried `snap`.
+    snap_seq: u64,
+}
+
+impl Lease {
+    fn new() -> Self {
+        Lease {
+            token: 0,
+            incarnation: 0,
+            live: false,
+            departed: false,
+            lost_since: None,
+            lost_reason: String::new(),
+            applied: 0,
+            log: Vec::new(),
+            snap: None,
+            snap_seq: 0,
+        }
+    }
+}
+
 /// Mutable run state, all under one mutex.  Handlers take it briefly;
-/// long waits (barriers, versioned fetches) release it via
-/// `Condvar::wait_timeout`.
+/// long waits (barriers, versioned fetches, reply-log waits) release
+/// it via `Condvar::wait_timeout`.
 struct CentralState {
     /// One slot per partition, filled by `ParamSubmit`, drained by
     /// `finish_epoch` in slot order.
@@ -228,6 +297,10 @@ struct CentralState {
     ps_bytes: u64,
     /// Wire total at the last `finish_epoch` (per-epoch delta basis).
     wire_seen: u64,
+    /// Retry / lease-loss totals at the last `finish_epoch` (per-epoch
+    /// delta basis for the breakdown columns).
+    retries_seen: u64,
+    lost_seen: u64,
     points: Vec<LogPoint>,
     breakdowns: Vec<EpochBreakdown>,
     best_val: f64,
@@ -236,6 +309,9 @@ struct CentralState {
     /// Barrier arrival counts / generation counters, indexed by phase.
     barrier_count: [usize; 2],
     barrier_gen: [u64; 2],
+    /// One lease per partition (a `Vec`, deliberately not a map: slots
+    /// are dense and iteration order is partition order).
+    leases: Vec<Lease>,
     // -- async bookkeeping --
     updates: u64,
     window_loss: f64,
@@ -245,6 +321,9 @@ struct CentralState {
     // -- shutdown --
     finishes: Vec<Option<WorkerSnap>>,
     finished: usize,
+    /// Every non-departed partition has finished (checkpoint written if
+    /// requested): the accept loop may exit.
+    done_serving: bool,
     err: Option<String>,
 }
 
@@ -260,10 +339,17 @@ struct Central<'a> {
     state: Mutex<CentralState>,
     /// Signalled on every version advance / run completion.
     fetch_cv: Condvar,
-    /// Signalled when a barrier generation opens.
+    /// Signalled when a barrier generation opens (and on lease release,
+    /// which admissions wait on).
     barrier_cv: Condvar,
+    /// Signalled when a reply lands in a lease's log.
+    replay_cv: Condvar,
     wire_in: AtomicU64,
     wire_out: AtomicU64,
+    /// Retransmits served verbatim from a reply log.
+    wire_retries: AtomicU64,
+    /// Connections lost mid-run.
+    leases_lost: AtomicU64,
     /// Per-partition last-pushed rows, keyed `(layer, node)` — the
     /// server side of delta decoding.  One lock per partition; access
     /// is `get`/`insert` only (no iteration → deterministic).
@@ -286,6 +372,8 @@ impl<'a> Central<'a> {
                 vtime: 0.0,
                 ps_bytes: 0,
                 wire_seen: 0,
+                retries_seen: 0,
+                lost_seen: 0,
                 points: Vec::new(),
                 breakdowns: Vec::new(),
                 best_val: 0.0,
@@ -293,6 +381,7 @@ impl<'a> Central<'a> {
                 final_test: f64::NAN,
                 barrier_count: [0, 0],
                 barrier_gen: [0, 0],
+                leases: (0..m).map(|_| Lease::new()).collect(),
                 updates: 0,
                 window_loss: 0.0,
                 window_n: 0,
@@ -300,12 +389,16 @@ impl<'a> Central<'a> {
                 async_done: false,
                 finishes: (0..m).map(|_| None).collect(),
                 finished: 0,
+                done_serving: false,
                 err: None,
             }),
             fetch_cv: Condvar::new(),
             barrier_cv: Condvar::new(),
+            replay_cv: Condvar::new(),
             wire_in: AtomicU64::new(0),
             wire_out: AtomicU64::new(0),
+            wire_retries: AtomicU64::new(0),
+            leases_lost: AtomicU64::new(0),
             row_cache: (0..m).map(|_| Mutex::new(HashMap::new())).collect(),
         }
     }
@@ -323,32 +416,131 @@ impl<'a> Central<'a> {
         }
         self.fetch_cv.notify_all();
         self.barrier_cv.notify_all();
+        self.replay_cv.notify_all();
     }
 
-    fn ensure_live(&self, st: &CentralState) -> Result<()> {
-        match &st.err {
-            Some(e) => Err(eyre!("run aborted: {e}")),
-            None => Ok(()),
+    /// Abort check *and* lease grace reaper: every poll point in the
+    /// daemon funnels through here, so an expired grace window turns
+    /// into a run abort without any dedicated watchdog thread.
+    fn ensure_live(&self, st: &mut CentralState) -> Result<()> {
+        if let Some(e) = &st.err {
+            return Err(eyre!("run aborted: {e}"));
         }
+        if self.ctx.cfg.dist.on_worker_loss != LossPolicy::Wait {
+            return Ok(());
+        }
+        let grace = Duration::from_secs_f64(self.ctx.cfg.dist.loss_grace);
+        let mut expired: Option<(usize, String, f64)> = None;
+        for (part, lease) in st.leases.iter().enumerate() {
+            if lease.live || lease.departed {
+                continue;
+            }
+            if let Some(t) = lease.lost_since {
+                if t.elapsed() > grace {
+                    expired =
+                        Some((part, lease.lost_reason.clone(), t.elapsed().as_secs_f64()));
+                    break;
+                }
+            }
+        }
+        if let Some((part, reason, waited)) = expired {
+            let msg = format!(
+                "worker {part} lease lost ({reason}); no rejoin within the \
+                 {:.1}s grace window (waited {waited:.1}s)",
+                grace.as_secs_f64()
+            );
+            st.err = Some(msg.clone());
+            self.fetch_cv.notify_all();
+            self.barrier_cv.notify_all();
+            self.replay_cv.notify_all();
+            return Err(eyre!("run aborted: {msg}"));
+        }
+        Ok(())
     }
 
-    // ---- handshake ------------------------------------------------------
-
-    /// Read and validate the `DHello` on a fresh connection; reply
-    /// `HelloOk` and return the claimed partition.  On any failure the
-    /// stream gets a best-effort `Error` frame and is dropped.
-    fn handshake(&self, mut stream: TcpStream) -> Result<(usize, TcpStream)> {
-        let res = self.handshake_inner(&mut stream);
-        match res {
-            Ok(part) => Ok((part, stream)),
-            Err(e) => {
-                self.refuse(stream, &format!("{e}"));
-                Err(e)
+    /// React to a dropped connection per the loss policy.  Guarded by
+    /// the incarnation so a superseded handler reporting late cannot
+    /// clobber a lease its replacement already re-claimed.
+    fn lease_lost(&self, part: usize, incarnation: u64, reason: &str) {
+        let policy = self.ctx.cfg.dist.on_worker_loss;
+        let mut st = lock_unpoisoned(&self.state);
+        if st.err.is_some() || st.done_serving {
+            return;
+        }
+        if st.leases[part].incarnation != incarnation || !st.leases[part].live {
+            return;
+        }
+        match policy {
+            LossPolicy::Abort => {
+                drop(st);
+                self.abort(&format!("worker {part}: {reason}"));
+            }
+            LossPolicy::Wait => {
+                let lease = &mut st.leases[part];
+                lease.live = false;
+                // lint:allow(D006, grace-window anchor for the lease reaper; observational only, never feeds training math)
+                lease.lost_since = Some(Instant::now());
+                lease.lost_reason = reason.to_string();
+                self.leases_lost.fetch_add(1, Ordering::Relaxed);
+                self.fetch_cv.notify_all();
+                self.barrier_cv.notify_all();
+                self.replay_cv.notify_all();
+            }
+            LossPolicy::Continue => {
+                let lease = &mut st.leases[part];
+                lease.live = false;
+                lease.departed = true;
+                lease.lost_reason = reason.to_string();
+                self.leases_lost.fetch_add(1, Ordering::Relaxed);
+                // a departed worker will never Finish — if everyone
+                // else already has, the run is over now
+                let departed = st.leases.iter().filter(|l| l.departed).count();
+                if st.finished + departed == self.m {
+                    st.done_serving = true;
+                }
+                self.fetch_cv.notify_all();
+                self.barrier_cv.notify_all();
+                self.replay_cv.notify_all();
             }
         }
     }
 
-    fn handshake_inner(&self, stream: &mut TcpStream) -> Result<usize> {
+    // ---- admission -------------------------------------------------------
+
+    /// Accept-loop entry: admit the connection (hello + lease claim)
+    /// and serve it until it finishes or drops.  All outcomes are
+    /// routed here — admission failures get a best-effort `Error`
+    /// frame; serve failures lose the lease (the policy decides what
+    /// that means).
+    fn admit_and_serve(&self, mut stream: TcpStream) {
+        let (part, incarnation) = match self.admit(&mut stream) {
+            Ok(x) => x,
+            Err(e) => {
+                self.refuse(stream, &format!("{e}"));
+                return;
+            }
+        };
+        if let Err(e) = self.serve_conn(part, incarnation, &mut stream) {
+            // best-effort structured error so a still-live peer learns
+            // why it is being dropped (garbage frame, seq gap, abort)
+            if let Ok((op, payload)) = (Response::Error {
+                message: format!("{e}"),
+            })
+            .encode()
+            {
+                let _ = write_frame(&mut stream, op, &payload);
+            }
+            self.lease_lost(part, incarnation, &format!("{e}"));
+        }
+    }
+
+    /// Read and validate the `DHello`, claim the partition's lease, and
+    /// reply `HelloOk` (with the resume payload if a parked snapshot is
+    /// waiting).  Returns the partition and the admitted incarnation.
+    fn admit(&self, stream: &mut TcpStream) -> Result<(usize, u64)> {
+        stream
+            .set_nonblocking(false)
+            .map_err(|e| eyre!("set_nonblocking: {e}"))?;
         stream
             .set_read_timeout(Some(HELLO_TIMEOUT))
             .map_err(|e| eyre!("set_read_timeout: {e}"))?;
@@ -360,20 +552,92 @@ impl<'a> Central<'a> {
         };
         self.wire_in
             .fetch_add(5 + payload.len() as u64, Ordering::Relaxed);
-        let hello = match Request::decode(op, &payload)? {
+        if payload.len() < 8 || payload[..8] != [0u8; 8] {
+            return Err(eyre!("hello frame must carry sequence number 0"));
+        }
+        let hello = match Request::decode(op, &payload[8..])? {
             Request::Hello(h) => h,
             other => return Err(eyre!("expected hello, got {other:?}")),
         };
         hello.validate(&self.ctx.cfg)?;
         let part = hello.part as usize;
-        let (rop, rpayload) = Response::HelloOk {
+        let policy = self.ctx.cfg.dist.on_worker_loss;
+        let mut st = lock_unpoisoned(&self.state);
+        self.ensure_live(&mut st)?;
+        if st.leases[part].departed {
+            return Err(eyre!(
+                "partition {part} departed permanently (on_worker_loss=continue)"
+            ));
+        }
+        if st.leases[part].live {
+            if policy == LossPolicy::Abort {
+                return Err(eyre!("partition {part} already connected"));
+            }
+            // the previous connection may be a zombie whose handler has
+            // not yet noticed the dead socket — give it a bounded
+            // window to fail its reply write and release the lease
+            let mut rounds = 0usize;
+            while st.leases[part].live && rounds < ADMIT_WAIT_ROUNDS {
+                st = self
+                    .barrier_cv
+                    .wait_timeout(st, WAIT_POLL)
+                    .unwrap_or_else(|p| p.into_inner())
+                    .0;
+                rounds += 1;
+                self.ensure_live(&mut st)?;
+            }
+            if st.leases[part].live {
+                return Err(eyre!("partition {part} already connected"));
+            }
+            if st.leases[part].departed {
+                return Err(eyre!(
+                    "partition {part} departed permanently (on_worker_loss=continue)"
+                ));
+            }
+        }
+        if hello.token != 0 && hello.token != st.leases[part].token {
+            return Err(eyre!(
+                "stale lease token for partition {part}: a newer worker already \
+                 holds this partition"
+            ));
+        }
+        if hello.token == 0
+            && st.leases[part].applied > 0
+            && self.ctx.cfg.method == Method::DigestAsync
+        {
+            return Err(eyre!(
+                "async runs cannot resume a freshly launched worker process: \
+                 apply-on-arrival has no deterministic replay"
+            ));
+        }
+        let lease = &mut st.leases[part];
+        lease.incarnation += 1;
+        lease.token = ((part as u64) << 32) | lease.incarnation;
+        lease.live = true;
+        lease.lost_since = None;
+        lease.lost_reason.clear();
+        let incarnation = lease.incarnation;
+        let reply = Response::HelloOk {
             version: self.ps.version(),
             parts: self.m as u32,
+            token: lease.token,
+            snap_seq: lease.snap_seq,
+            snap: lease.snap.clone(),
+        };
+        drop(st);
+        let (rop, rpayload) = reply.encode()?;
+        match write_frame(stream, rop, &rpayload) {
+            Ok(n) => {
+                self.wire_out.fetch_add(n, Ordering::Relaxed);
+                Ok((part, incarnation))
+            }
+            Err(e) => {
+                // the lease was claimed above — release it or the
+                // partition stays live with nobody serving it
+                self.lease_lost(part, incarnation, &format!("hello reply: {e}"));
+                Err(e)
+            }
         }
-        .encode()?;
-        let n = write_frame(stream, rop, &rpayload)?;
-        self.wire_out.fetch_add(n, Ordering::Relaxed);
-        Ok(part)
     }
 
     /// Best-effort `Error` reply on a stream we are about to drop.
@@ -389,53 +653,148 @@ impl<'a> Central<'a> {
 
     // ---- per-connection serve loop --------------------------------------
 
-    fn handle_conn(&self, part: usize, mut stream: TcpStream) -> Result<()> {
-        let res = self.serve_conn(part, &mut stream);
-        if let Err(e) = &res {
-            self.abort(&format!("worker {part}: {e}"));
-            if let Ok((op, payload)) = (Response::Error {
-                message: format!("{e}"),
-            })
-            .encode()
-            {
-                let _ = write_frame(&mut stream, op, &payload);
-            }
-        }
-        res
-    }
-
-    fn serve_conn(&self, part: usize, stream: &mut TcpStream) -> Result<()> {
+    /// Serve one admitted connection.  Any `Err` return means the
+    /// connection is dropped and the lease handled by `lease_lost`;
+    /// application errors inside [`Central::handle`] additionally abort
+    /// the run (they are state corruption, not transport weather).
+    fn serve_conn(&self, part: usize, incarnation: u64, stream: &mut TcpStream) -> Result<()> {
         stream
             .set_read_timeout(Some(READ_POLL))
             .map_err(|e| eyre!("set_read_timeout: {e}"))?;
+        let wait_policy = self.ctx.cfg.dist.on_worker_loss == LossPolicy::Wait;
         loop {
-            match read_frame(stream, MAX_FRAME)? {
+            let (op, payload) = match read_frame(stream, MAX_FRAME)? {
                 FrameRead::TimedOut => {
-                    let st = lock_unpoisoned(&self.state);
-                    self.ensure_live(&st)?;
+                    let mut st = lock_unpoisoned(&self.state);
+                    self.ensure_live(&mut st)?;
+                    continue;
                 }
-                FrameRead::Closed => {
-                    return Err(eyre!("disconnected mid-run"));
-                }
-                FrameRead::Frame(op, payload) => {
-                    self.wire_in
-                        .fetch_add(5 + payload.len() as u64, Ordering::Relaxed);
-                    let req = Request::decode(op, &payload)?;
-                    let (resp, done) = self.handle(part, req)?;
-                    let (rop, rpayload) = resp.encode()?;
-                    let n = write_frame(stream, rop, &rpayload)?;
-                    self.wire_out.fetch_add(n, Ordering::Relaxed);
-                    if done {
-                        return Ok(());
-                    }
-                }
+                FrameRead::Closed => return Err(eyre!("disconnected mid-run")),
+                FrameRead::Frame(op, payload) => (op, payload),
+            };
+            self.wire_in
+                .fetch_add(5 + payload.len() as u64, Ordering::Relaxed);
+            if payload.len() < 8 {
+                return Err(eyre!("frame missing its sequence prefix"));
             }
+            let mut seq8 = [0u8; 8];
+            seq8.copy_from_slice(&payload[..8]);
+            let seq = u64::from_le_bytes(seq8);
+            if seq == 0 {
+                return Err(eyre!("unexpected mid-run hello (sequence number 0)"));
+            }
+            // exactly-once gate: replay, execute, or protocol error
+            let replay = {
+                let mut st = lock_unpoisoned(&self.state);
+                self.ensure_live(&mut st)?;
+                let lease = &st.leases[part];
+                if lease.incarnation != incarnation {
+                    return Err(eyre!("connection superseded by a newer lease"));
+                }
+                if wait_policy && seq <= lease.applied {
+                    if seq < lease.snap_seq {
+                        return Err(eyre!(
+                            "retransmit of seq {seq} below the pruned snapshot \
+                             horizon {}",
+                            lease.snap_seq
+                        ));
+                    }
+                    true
+                } else if seq == lease.applied + 1 {
+                    false
+                } else {
+                    return Err(eyre!(
+                        "sequence gap on partition {part}: got {seq}, expected {}",
+                        lease.applied + 1
+                    ));
+                }
+            };
+            if replay {
+                let (rop, rpayload) = self.await_logged_reply(part, incarnation, seq)?;
+                self.wire_retries.fetch_add(1, Ordering::Relaxed);
+                let n = write_frame(stream, rop, &rpayload)?;
+                self.wire_out.fetch_add(n, Ordering::Relaxed);
+                if rop == OP_FINISH | 0x80 {
+                    return Ok(());
+                }
+                continue;
+            }
+            let req = Request::decode(op, &payload[8..])?;
+            {
+                // claim the sequence number at execution start: from
+                // here on only this thread may produce the reply for
+                // `seq`, even if the connection dies while the handler
+                // blocks (the zombie still completes and logs)
+                let mut st = lock_unpoisoned(&self.state);
+                st.leases[part].applied = seq;
+            }
+            let (resp, done) = match self.handle(part, seq, req) {
+                Ok(x) => x,
+                Err(e) => {
+                    self.abort(&format!("worker {part}: {e}"));
+                    return Err(e);
+                }
+            };
+            let (rop, rpayload) = match resp.encode() {
+                Ok(x) => x,
+                Err(e) => {
+                    self.abort(&format!("worker {part}: encoding reply: {e}"));
+                    return Err(e);
+                }
+            };
+            if wait_policy {
+                // log before write: if the write fails, the retransmit
+                // must find this reply rather than re-execute
+                let mut st = lock_unpoisoned(&self.state);
+                let lease = &mut st.leases[part];
+                if self.ctx.cfg.method == Method::DigestAsync {
+                    // async has no replay-from-snapshot: only the
+                    // latest reply can ever be retransmitted
+                    lease.log.clear();
+                }
+                lease.log.push((seq, rop, rpayload.clone()));
+                self.replay_cv.notify_all();
+            }
+            let n = write_frame(stream, rop, &rpayload)?;
+            self.wire_out.fetch_add(n, Ordering::Relaxed);
+            if done {
+                return Ok(());
+            }
+        }
+    }
+
+    /// Wait for the reply to an already-applied sequence number to
+    /// appear in the lease's log (its original handler may still be
+    /// executing) and hand it back for verbatim retransmission.
+    fn await_logged_reply(
+        &self,
+        part: usize,
+        incarnation: u64,
+        seq: u64,
+    ) -> Result<(u8, Vec<u8>)> {
+        let mut st = lock_unpoisoned(&self.state);
+        loop {
+            self.ensure_live(&mut st)?;
+            let lease = &st.leases[part];
+            if lease.incarnation != incarnation {
+                return Err(eyre!("connection superseded by a newer lease"));
+            }
+            if let Some((_, op, payload)) =
+                lease.log.iter().find(|(s, _, _)| *s == seq)
+            {
+                return Ok((*op, payload.clone()));
+            }
+            st = self
+                .replay_cv
+                .wait_timeout(st, WAIT_POLL)
+                .unwrap_or_else(|p| p.into_inner())
+                .0;
         }
     }
 
     /// Dispatch one request.  Returns the reply and whether the
     /// connection is done (after `FinishOk`).
-    fn handle(&self, part: usize, req: Request) -> Result<(Response, bool)> {
+    fn handle(&self, part: usize, seq: u64, req: Request) -> Result<(Response, bool)> {
         match req {
             Request::Hello(_) => Err(eyre!("duplicate hello")),
             Request::RepPush(p) => self.rep_push(part, p).map(|r| (r, false)),
@@ -446,8 +805,8 @@ impl<'a> Central<'a> {
                 self.param_fetch(wait_version).map(|r| (r, false))
             }
             Request::ParamSubmit(s) => self.param_submit(part, s).map(|r| (r, false)),
-            Request::Barrier { epoch, phase } => {
-                self.barrier(part, epoch, phase).map(|r| (r, false))
+            Request::Barrier { epoch, phase, snap } => {
+                self.barrier(part, seq, epoch, phase, snap).map(|r| (r, false))
             }
             Request::Finish(snap) => self.finish(part, snap).map(|r| (r, true)),
         }
@@ -527,7 +886,7 @@ impl<'a> Central<'a> {
         if wait_version != NO_WAIT {
             let mut st = lock_unpoisoned(&self.state);
             while self.ps.version() < wait_version {
-                self.ensure_live(&st)?;
+                self.ensure_live(&mut st)?;
                 st = self
                     .fetch_cv
                     .wait_timeout(st, WAIT_POLL)
@@ -573,7 +932,7 @@ impl<'a> Central<'a> {
             return Err(eyre!("worker {part} submitted into slot {slot}"));
         }
         let mut st = lock_unpoisoned(&self.state);
-        self.ensure_live(&st)?;
+        self.ensure_live(&mut st)?;
         if st.reports[slot].is_some() {
             return Err(eyre!("double submit for epoch {} slot {slot}", st.r));
         }
@@ -607,7 +966,7 @@ impl<'a> Central<'a> {
         }
         let target = (cfg.epochs * self.m) as u64;
         let mut st = lock_unpoisoned(&self.state);
-        self.ensure_live(&st)?;
+        self.ensure_live(&mut st)?;
         if st.updates >= target {
             // late straggler after the run completed: drop, tell it to stop
             return Ok(Response::SubmitOk {
@@ -666,11 +1025,17 @@ impl<'a> Central<'a> {
             (f64::NAN, f64::NAN)
         };
         let wire_total = self.wire_total();
+        let retries_total = self.wire_retries.load(Ordering::Relaxed);
+        let lost_total = self.leases_lost.load(Ordering::Relaxed);
         bd.max_stale_age = st.window_age.take();
         // window duration: vtime tracks the previous window's wall mark
         bd.total = (wall - st.vtime).max(0.0);
         bd.wire_bytes = wire_total.saturating_sub(st.wire_seen);
+        bd.wire_retries = retries_total.saturating_sub(st.retries_seen);
+        bd.leases_lost = lost_total.saturating_sub(st.lost_seen);
         st.wire_seen = wire_total;
+        st.retries_seen = retries_total;
+        st.lost_seen = lost_total;
         st.vtime = wall;
         st.points.push(LogPoint {
             epoch,
@@ -686,6 +1051,8 @@ impl<'a> Central<'a> {
             kvs_bytes: self.ctx.kvs.metrics().total_bytes(),
             ps_bytes: st.ps_bytes,
             wire_bytes: wire_total,
+            wire_retries: retries_total,
+            leases_lost: lost_total,
         });
         st.breakdowns.push(bd);
         st.window_loss = 0.0;
@@ -696,13 +1063,40 @@ impl<'a> Central<'a> {
 
     // ---- sync barrier ----------------------------------------------------
 
-    fn barrier(&self, _part: usize, epoch: u64, phase: u8) -> Result<Response> {
+    fn barrier(
+        &self,
+        part: usize,
+        seq: u64,
+        epoch: u64,
+        phase: u8,
+        snap: Option<FinishSnap>,
+    ) -> Result<Response> {
         if phase > PHASE_PUSHES {
             return Err(eyre!("unknown barrier phase {phase}"));
         }
         let idx = phase as usize;
         let mut st = lock_unpoisoned(&self.state);
-        self.ensure_live(&st)?;
+        self.ensure_live(&mut st)?;
+        if phase == PHASE_PUSHES
+            && self.ctx.cfg.dist.on_worker_loss == LossPolicy::Wait
+        {
+            if let Some(sn) = snap {
+                if sn.part as usize != part {
+                    return Err(eyre!(
+                        "barrier snap claims part {}, connection is {part}",
+                        sn.part
+                    ));
+                }
+                // snapshot commit: this barrier becomes the partition's
+                // resume point, and replies from before it can no
+                // longer be retransmitted (a rejoining client replays
+                // forward from here)
+                let lease = &mut st.leases[part];
+                lease.snap = Some(sn);
+                lease.snap_seq = seq;
+                lease.log.retain(|(s, _, _)| *s >= seq);
+            }
+        }
         st.barrier_count[idx] += 1;
         if st.barrier_count[idx] == self.m {
             if phase == PHASE_PUSHES {
@@ -722,7 +1116,7 @@ impl<'a> Central<'a> {
         } else {
             let gen = st.barrier_gen[idx];
             while st.barrier_gen[idx] == gen {
-                self.ensure_live(&st)?;
+                self.ensure_live(&mut st)?;
                 st = self
                     .barrier_cv
                     .wait_timeout(st, WAIT_POLL)
@@ -750,8 +1144,14 @@ impl<'a> Central<'a> {
         st.ps_bytes += self.m as u64 * 2 * ctx.param_bytes();
         st.vtime += bd.total;
         let wire_total = self.wire_total();
+        let retries_total = self.wire_retries.load(Ordering::Relaxed);
+        let lost_total = self.leases_lost.load(Ordering::Relaxed);
         bd.wire_bytes = wire_total.saturating_sub(st.wire_seen);
+        bd.wire_retries = retries_total.saturating_sub(st.retries_seen);
+        bd.leases_lost = lost_total.saturating_sub(st.lost_seen);
         st.wire_seen = wire_total;
+        st.retries_seen = retries_total;
+        st.lost_seen = lost_total;
         st.breakdowns.push(bd);
         let evaluate = r % cfg.eval_every == 0 || r + 1 == cfg.epochs;
         let (val, test) = if evaluate {
@@ -774,6 +1174,8 @@ impl<'a> Central<'a> {
             kvs_bytes: ctx.kvs.metrics().total_bytes(),
             ps_bytes: st.ps_bytes,
             wire_bytes: wire_total,
+            wire_retries: retries_total,
+            leases_lost: lost_total,
         });
         st.r += 1;
         Ok(())
@@ -782,8 +1184,9 @@ impl<'a> Central<'a> {
     // ---- shutdown --------------------------------------------------------
 
     /// A worker finished its loop: wait for the whole run to complete,
-    /// record its final state, and (once all snaps are in, sync only)
-    /// write the checkpoint.  Replies with the final global scores.
+    /// record its final state, and (once all non-departed snaps are in,
+    /// sync only) write the checkpoint.  Replies with the final global
+    /// scores.
     fn finish(&self, part: usize, snap: super::wire::FinishSnap) -> Result<Response> {
         let cfg = &self.ctx.cfg;
         let is_async = cfg.method == Method::DigestAsync;
@@ -797,14 +1200,14 @@ impl<'a> Central<'a> {
             if complete {
                 break;
             }
-            self.ensure_live(&st)?;
+            self.ensure_live(&mut st)?;
             st = self
                 .fetch_cv
                 .wait_timeout(st, WAIT_POLL)
                 .unwrap_or_else(|p| p.into_inner())
                 .0;
         }
-        self.ensure_live(&st)?;
+        self.ensure_live(&mut st)?;
         if snap.part as usize != part {
             return Err(eyre!("finish snap claims part {}, conn is {part}", snap.part));
         }
@@ -819,10 +1222,12 @@ impl<'a> Central<'a> {
             stale: snap.stale.iter().map(|m| m.to_matrix()).collect(),
         });
         st.finished += 1;
-        if st.finished == self.m {
+        let departed = st.leases.iter().filter(|l| l.departed).count();
+        if st.finished + departed == self.m {
             if let Some(path) = &self.save_to {
                 self.save_checkpoint(&mut st, path)?;
             }
+            st.done_serving = true;
             self.fetch_cv.notify_all();
         }
         Ok(Response::FinishOk {
@@ -833,7 +1238,8 @@ impl<'a> Central<'a> {
 
     /// Assemble the same `TrainState` an in-memory `SyncSession`
     /// snapshot would produce and save it — the byte-identity
-    /// deliverable.  Sync only (bind rejects async + save).
+    /// deliverable.  Sync only (bind rejects async + save), so all `m`
+    /// worker snaps are present.
     fn save_checkpoint(&self, st: &mut CentralState, path: &str) -> Result<()> {
         let ctx = self.ctx;
         let mut state = base_state(ctx, "digest")?;
@@ -880,6 +1286,8 @@ impl<'a> Central<'a> {
             kvs: self.ctx.kvs.metrics(),
             wire_bytes,
             updates,
+            wire_retries: self.wire_retries.load(Ordering::Relaxed),
+            leases_lost: self.leases_lost.load(Ordering::Relaxed),
         })
     }
 }
@@ -903,6 +1311,15 @@ mod tests {
         let err =
             PsServer::bind(cfg, "127.0.0.1:0", Some("/tmp/x.json".into())).unwrap_err();
         assert!(format!("{err}").contains("sync-only"), "{err}");
+    }
+
+    #[test]
+    fn bind_rejects_continue_policy_for_sync_runs() {
+        let mut cfg = RunConfig::default();
+        cfg.method = Method::Digest;
+        cfg.dist.on_worker_loss = LossPolicy::Continue;
+        let err = PsServer::bind(cfg, "127.0.0.1:0", None).unwrap_err();
+        assert!(format!("{err}").contains("digest-a"), "{err}");
     }
 
     #[test]

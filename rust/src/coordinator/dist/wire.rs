@@ -30,7 +30,12 @@ use crate::{eyre, Result};
 /// Protocol identity carried in the training-plane hello.  Distinct
 /// from the serving plane's `digest-wire-v1` tag so a version mismatch
 /// (or a worker dialing an inference daemon) fails loudly at handshake.
-pub const TRAIN_WIRE_VERSION: &str = "digest-wire-v1-train";
+/// v2 added fault tolerance: lease tokens + loss policy in the
+/// handshake, resume state in the hello reply, snapshots piggybacked
+/// on PUSHES barriers, and a sequence-number prefix on every request
+/// frame (the prefix is transport-level — see `dist::client` — so this
+/// codec never sees it).
+pub const TRAIN_WIRE_VERSION: &str = "digest-wire-v2-train";
 
 // ---- opcodes (request | 0x80 = its response) ---------------------------
 
@@ -302,6 +307,16 @@ pub struct DHello {
     pub seed: u64,
     pub wire_delta: bool,
     pub wire_f16: bool,
+    /// Loss-policy wire tag ([`crate::config::LossPolicy::wire_tag`]):
+    /// both ends must agree on what a lost connection means, so a
+    /// disagreement is an admission error, not a surprise at failure
+    /// time.
+    pub on_loss: u8,
+    /// Lease token.  0 on a first hello (fresh join, and also a fresh
+    /// re-launched process rejoining a lost lease); a reconnecting
+    /// *same-process* client echoes the token its last HelloOk issued.
+    /// Excluded from the config-equality check.
+    pub token: u64,
 }
 
 impl DHello {
@@ -319,6 +334,8 @@ impl DHello {
             seed: cfg.seed,
             wire_delta: cfg.wire_delta,
             wire_f16: cfg.wire_f16,
+            on_loss: cfg.dist.on_worker_loss.wire_tag(),
+            token: 0,
         }
     }
 
@@ -339,7 +356,11 @@ impl DHello {
                 cfg.parts
             ));
         }
-        if *self != want {
+        // the token is session state, not config — zero it for the
+        // config-equality comparison
+        let mut probe = self.clone();
+        probe.token = 0;
+        if probe != want {
             return Err(eyre!(
                 "run config mismatch: worker {self:?} vs daemon {want:?} — both \
                  processes must be launched with identical training configs"
@@ -498,6 +519,57 @@ pub struct FinishSnap {
     pub stale: Vec<WireMat>,
 }
 
+// The same snapshot rides three frames: Finish (end-of-run state for
+// the checkpoint), PUSHES barriers under the `wait` loss policy (the
+// daemon's lease-held resume point), and the HelloOk resume payload of
+// a rejoining worker — one codec for all three.
+fn put_finish_snap(out: &mut Vec<u8>, f: &FinishSnap) -> Result<()> {
+    put_u32(out, f.part);
+    put_u64(out, f.local_epoch);
+    put_u64(out, f.fetched_version);
+    for &x in &f.rng {
+        put_u64(out, x);
+    }
+    put_opt_u64(out, f.last_pull_age);
+    put_mats(out, &f.stale, "stale layers")
+}
+
+fn read_finish_snap(r: &mut ByteReader) -> Result<FinishSnap> {
+    let part = r.u32()?;
+    let local_epoch = r.u64()?;
+    let fetched_version = r.u64()?;
+    let rng = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+    Ok(FinishSnap {
+        part,
+        local_epoch,
+        fetched_version,
+        rng,
+        last_pull_age: read_opt_u64(r)?,
+        stale: read_mats(r)?,
+    })
+}
+
+fn put_opt_snap(out: &mut Vec<u8>, s: &Option<FinishSnap>) -> Result<()> {
+    match s {
+        Some(f) => {
+            put_u8(out, 1);
+            put_finish_snap(out, f)
+        }
+        None => {
+            put_u8(out, 0);
+            Ok(())
+        }
+    }
+}
+
+fn read_opt_snap(r: &mut ByteReader) -> Result<Option<FinishSnap>> {
+    match r.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(read_finish_snap(r)?)),
+        t => Err(eyre!("invalid snapshot Option tag {t}")),
+    }
+}
+
 // ---- request / response enums ------------------------------------------
 
 /// Worker → daemon messages.
@@ -517,6 +589,11 @@ pub enum Request {
     Barrier {
         epoch: u64,
         phase: u8,
+        /// Under the `wait` loss policy, a sync worker attaches its
+        /// full state snapshot to every PUSHES-barrier arrival: that
+        /// barrier is the quiescent point a re-launched replacement
+        /// resumes from.  `None` otherwise.
+        snap: Option<FinishSnap>,
     },
     Finish(FinishSnap),
 }
@@ -527,6 +604,17 @@ pub enum Response {
     HelloOk {
         version: u64,
         parts: u32,
+        /// Lease token this connection now holds; a same-process
+        /// reconnect echoes it in its next hello.
+        token: u64,
+        /// Sequence number of the request that carried `snap` (the
+        /// rejoining worker's next request is `snap_seq + 1`).  0 when
+        /// `snap` is `None`.
+        snap_seq: u64,
+        /// Present only for a fresh-process rejoin of a lost lease
+        /// that had committed a barrier snapshot: the state to
+        /// `apply_snap` before re-entering the epoch loop.
+        snap: Option<FinishSnap>,
     },
     RepPushOk,
     /// Full f32 rows for the requested nodes (missing rows zero), plus
@@ -575,6 +663,8 @@ impl Request {
                 put_u64(&mut out, h.seed);
                 put_u8(&mut out, h.wire_delta as u8);
                 put_u8(&mut out, h.wire_f16 as u8);
+                put_u8(&mut out, h.on_loss);
+                put_u64(&mut out, h.token);
                 OP_DHELLO
             }
             Request::RepPush(p) => {
@@ -604,20 +694,14 @@ impl Request {
                 put_opt_u64(&mut out, s.stale_age);
                 OP_PARAM_SUBMIT
             }
-            Request::Barrier { epoch, phase } => {
+            Request::Barrier { epoch, phase, snap } => {
                 put_u64(&mut out, *epoch);
                 put_u8(&mut out, *phase);
+                put_opt_snap(&mut out, snap)?;
                 OP_BARRIER
             }
             Request::Finish(f) => {
-                put_u32(&mut out, f.part);
-                put_u64(&mut out, f.local_epoch);
-                put_u64(&mut out, f.fetched_version);
-                for &x in &f.rng {
-                    put_u64(&mut out, x);
-                }
-                put_opt_u64(&mut out, f.last_pull_age);
-                put_mats(&mut out, &f.stale, "stale layers")?;
+                put_finish_snap(&mut out, f)?;
                 OP_FINISH
             }
         };
@@ -641,6 +725,8 @@ impl Request {
                     seed: r.u64()?,
                     wire_delta: r.u8()? != 0,
                     wire_f16: r.u8()? != 0,
+                    on_loss: r.u8()?,
+                    token: r.u64()?,
                 };
                 Request::Hello(h)
             }
@@ -668,21 +754,9 @@ impl Request {
             OP_BARRIER => Request::Barrier {
                 epoch: r.u64()?,
                 phase: r.u8()?,
+                snap: read_opt_snap(&mut r)?,
             },
-            OP_FINISH => {
-                let part = r.u32()?;
-                let local_epoch = r.u64()?;
-                let fetched_version = r.u64()?;
-                let rng = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
-                Request::Finish(FinishSnap {
-                    part,
-                    local_epoch,
-                    fetched_version,
-                    rng,
-                    last_pull_age: read_opt_u64(&mut r)?,
-                    stale: read_mats(&mut r)?,
-                })
-            }
+            OP_FINISH => Request::Finish(read_finish_snap(&mut r)?),
             other => return Err(eyre!("unknown training request opcode {other:#04x}")),
         };
         r.finish()?;
@@ -694,9 +768,18 @@ impl Response {
     pub fn encode(&self) -> Result<(u8, Vec<u8>)> {
         let mut out = Vec::new();
         let op = match self {
-            Response::HelloOk { version, parts } => {
+            Response::HelloOk {
+                version,
+                parts,
+                token,
+                snap_seq,
+                snap,
+            } => {
                 put_u64(&mut out, *version);
                 put_u32(&mut out, *parts);
+                put_u64(&mut out, *token);
+                put_u64(&mut out, *snap_seq);
+                put_opt_snap(&mut out, snap)?;
                 OP_DHELLO | 0x80
             }
             Response::RepPushOk => OP_REP_PUSH | 0x80,
@@ -759,6 +842,9 @@ impl Response {
             x if x == OP_DHELLO | 0x80 => Response::HelloOk {
                 version: r.u64()?,
                 parts: r.u32()?,
+                token: r.u64()?,
+                snap_seq: r.u64()?,
+                snap: read_opt_snap(&mut r)?,
             },
             x if x == OP_REP_PUSH | 0x80 => Response::RepPushOk,
             x if x == OP_REP_PULL | 0x80 => {
@@ -837,6 +923,19 @@ mod tests {
             seed: 42,
             wire_delta: true,
             wire_f16: false,
+            on_loss: 1,
+            token: 0,
+        }
+    }
+
+    fn snap() -> FinishSnap {
+        FinishSnap {
+            part: 1,
+            local_epoch: 3,
+            fetched_version: 0,
+            rng: [9, 8, 7, 6],
+            last_pull_age: None,
+            stale: vec![wm(2, 2, -0.5)],
         }
     }
 
@@ -908,7 +1007,18 @@ mod tests {
             Request::Barrier {
                 epoch: 6,
                 phase: PHASE_PUSHES,
+                snap: None,
             },
+            Request::Barrier {
+                epoch: 2,
+                phase: PHASE_PUSHES,
+                snap: Some(snap()),
+            },
+            Request::Hello(DHello {
+                token: 0x1_0000_0007,
+                on_loss: 2,
+                ..hello()
+            }),
             Request::Finish(FinishSnap {
                 part: 0,
                 local_epoch: 4,
@@ -925,6 +1035,16 @@ mod tests {
             Response::HelloOk {
                 version: 0,
                 parts: 2,
+                token: 0x1_0000_0001,
+                snap_seq: 0,
+                snap: None,
+            },
+            Response::HelloOk {
+                version: 2,
+                parts: 2,
+                token: 0x1_0000_0002,
+                snap_seq: 19,
+                snap: Some(snap()),
             },
             Response::RepPushOk,
             Response::PullReps {
@@ -1247,6 +1367,14 @@ mod tests {
         let mut h = DHello::from_config(&cfg, 0);
         h.epochs += 1;
         assert!(h.validate(&cfg).is_err(), "epoch mismatch accepted");
+        // the lease token is session state, never part of config equality
+        let mut h = DHello::from_config(&cfg, 0);
+        h.token = 0xDEAD_BEEF;
+        h.validate(&cfg).unwrap();
+        // but a loss-policy disagreement is a config mismatch
+        let mut h = DHello::from_config(&cfg, 0);
+        h.on_loss = crate::config::LossPolicy::Abort.wire_tag();
+        assert!(h.validate(&cfg).is_err(), "policy mismatch accepted");
     }
 
     #[test]

@@ -13,9 +13,24 @@
 //! single worker, with the two in-memory barriers replaced by daemon
 //! barriers — see [`super::server`] for why the result is bit-identical
 //! to the in-memory run.
+//!
+//! # Crash recovery
+//!
+//! Under `on_worker_loss = wait` every exchange-epoch push barrier
+//! ships the worker's state snapshot, which the daemon parks as this
+//! partition's resume point.  A freshly launched replacement process
+//! (`digest worker --part K` again, after the original died) receives
+//! that snapshot in its hello reply, restores it via
+//! [`WorkerState::apply_snap`], and re-enters the loop at
+//! `local_epoch` — its sequence numbers line up with the daemon's
+//! reply log, so any requests the dead worker already got applied are
+//! replayed verbatim rather than re-executed, and the final checkpoint
+//! is byte-identical to a failure-free run.
 
-use crate::config::{Method, RunConfig};
+use crate::config::{LossPolicy, Method, RunConfig};
+use crate::ps::checkpoint::WorkerSnap;
 use crate::runtime::pack_params;
+use crate::util::lock_unpoisoned;
 use crate::{eyre, Result};
 
 use super::super::context::TrainContext;
@@ -24,6 +39,7 @@ use super::super::worker::{
     exec_train, pull_stale, push_io_cost, push_reps, WorkerState,
 };
 use super::client::{connect_worker, RemoteParamService, RemoteRepStore};
+use super::faultpoint::FaultPlan;
 use super::wire::{FinishSnap, WireMat, MODE_ASYNC, MODE_SYNC, NO_WAIT, PHASE_PULLS, PHASE_PUSHES};
 
 /// What one worker process reports back to its CLI when its run ends.
@@ -37,10 +53,38 @@ pub struct WorkerRun {
     pub epochs_run: usize,
     /// Frame bytes this worker moved, both directions.
     pub wire_bytes: u64,
+    /// Successful mid-run rejoins (0 on a fault-free run).
+    pub reconnects: u64,
 }
 
-/// Run one partition against a `ps-serve` daemon to completion.
+/// The wire form of a worker's resumable state.
+fn to_finish_snap(part: usize, snap: &WorkerSnap) -> FinishSnap {
+    FinishSnap {
+        part: part as u32,
+        local_epoch: snap.local_epoch as u64,
+        fetched_version: snap.fetched_version,
+        rng: snap.rng,
+        last_pull_age: snap.last_pull_age,
+        stale: snap.stale.iter().map(WireMat::from_matrix).collect(),
+    }
+}
+
+/// Run one partition against a `ps-serve` daemon to completion, with
+/// the fault plan (if any) taken from the `DIGEST_FAULT_PLAN`
+/// environment variable.
 pub fn run_worker(cfg: &RunConfig, part: usize, addr: &str) -> Result<WorkerRun> {
+    let faults = FaultPlan::from_env(part as u32)?;
+    run_worker_with_faults(cfg, part, addr, faults)
+}
+
+/// [`run_worker`] with an explicit fault plan — the entry point chaos
+/// tests use so concurrent tests never race on the environment.
+pub fn run_worker_with_faults(
+    cfg: &RunConfig,
+    part: usize,
+    addr: &str,
+    faults: FaultPlan,
+) -> Result<WorkerRun> {
     if part >= cfg.parts {
         return Err(eyre!(
             "--part {part} out of range for a {}-partition run",
@@ -51,11 +95,30 @@ pub fn run_worker(cfg: &RunConfig, part: usize, addr: &str) -> Result<WorkerRun>
         Method::Digest | Method::DigestAsync => {}
         other => return Err(eyre!("worker runs digest / digest-a only, not {other:?}")),
     }
-    let conn = connect_worker(cfg, part, addr)?;
+    let conn = connect_worker(cfg, part, addr, faults)?;
+    // if the daemon parked a snapshot for this partition (our
+    // predecessor died mid-run), restore it before training
+    let resume = lock_unpoisoned(&conn).take_resume();
     let store = RemoteRepStore::new(conn.clone(), cfg);
     let ctx = TrainContext::with_store(cfg.clone(), Box::new(store))?;
     let svc = RemoteParamService::new(conn);
     let mut w = WorkerState::new(&ctx, part);
+    if let Some((_seq, fin)) = resume {
+        if fin.part as usize != part {
+            return Err(eyre!(
+                "daemon resume snapshot is for partition {}, not {part}",
+                fin.part
+            ));
+        }
+        let wsnap = WorkerSnap {
+            local_epoch: fin.local_epoch as usize,
+            fetched_version: fin.fetched_version,
+            rng: fin.rng,
+            last_pull_age: fin.last_pull_age,
+            stale: fin.stale.iter().map(|m| m.to_matrix()).collect(),
+        };
+        w.apply_snap(&ctx, &wsnap)?;
+    }
 
     if cfg.method == Method::Digest {
         run_sync_loop(&ctx, &svc, &mut w)?;
@@ -66,21 +129,14 @@ pub fn run_worker(cfg: &RunConfig, part: usize, addr: &str) -> Result<WorkerRun>
     // ship the final local state (checkpoint ingredients) and collect
     // the daemon's final global scores
     let snap = w.export_snap();
-    let fin = FinishSnap {
-        part: part as u32,
-        local_epoch: snap.local_epoch as u64,
-        fetched_version: snap.fetched_version,
-        rng: snap.rng,
-        last_pull_age: snap.last_pull_age,
-        stale: snap.stale.iter().map(WireMat::from_matrix).collect(),
-    };
-    let (final_val, final_test) = svc.finish(fin)?;
+    let (final_val, final_test) = svc.finish(to_finish_snap(part, &snap))?;
     Ok(WorkerRun {
         part,
         final_val_f1: final_val,
         final_test_f1: final_test,
         epochs_run: snap.local_epoch,
         wire_bytes: svc.wire_bytes(),
+        reconnects: svc.reconnects(),
     })
 }
 
@@ -95,7 +151,11 @@ fn run_sync_loop(
     w: &mut WorkerState,
 ) -> Result<()> {
     let cfg = &ctx.cfg;
-    for r in 0..cfg.epochs {
+    // attach resume snapshots to push barriers only under the policy
+    // that parks them — abort/continue runs skip the snapshot traffic
+    let park_snaps = cfg.dist.on_worker_loss == LossPolicy::Wait;
+    // starts above 0 only on a restored (crash-resumed) worker
+    for r in w.local_epoch..cfg.epochs {
         // epoch r trains on the epoch-r reduction (version == r)
         let (params, _v) = svc.fetch_when(r as u64)?;
         let param_lits = pack_params(&ctx.spec, &params)?;
@@ -104,7 +164,7 @@ fn run_sync_loop(
         // no worker may push epoch-r rows while another still pulls
         let pull_io = if sync_now {
             let io = pull_stale(ctx, w, r as u64)?;
-            svc.barrier(r as u64, PHASE_PULLS)?;
+            svc.barrier(r as u64, PHASE_PULLS, None)?;
             io
         } else {
             0.0
@@ -128,7 +188,15 @@ fn run_sync_loop(
             // phase B: publish fresh rows, then the push barrier — the
             // daemon closes the epoch's books when the last worker lands
             push_reps(ctx, w, &out.reps, r as u64)?;
-            svc.barrier(r as u64, PHASE_PUSHES)?;
+            // the barrier carries this worker's post-epoch state: the
+            // daemon parks it as the resume point for a replacement
+            // process should this one die before the next barrier
+            let snap = if park_snaps {
+                Some(to_finish_snap(w.id, &w.export_snap()))
+            } else {
+                None
+            };
+            svc.barrier(r as u64, PHASE_PUSHES, snap)?;
         }
     }
     Ok(())

@@ -502,6 +502,8 @@ mod tests {
                 kvs_bytes: 0,
                 ps_bytes: 0,
                 wire_bytes: 0,
+                wire_retries: 0,
+                leases_lost: 0,
             },
             breakdown: Default::default(),
             evaluated: true,
@@ -542,6 +544,8 @@ mod tests {
                 kvs_bytes: 0,
                 ps_bytes: 0,
                 wire_bytes: 0,
+                wire_retries: 0,
+                leases_lost: 0,
             },
             breakdown: Default::default(),
             evaluated: false,

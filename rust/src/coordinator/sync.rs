@@ -298,6 +298,8 @@ impl TrainSession for SyncSession<'_> {
             kvs_bytes: ctx.kvs.metrics().total_bytes(),
             ps_bytes: self.ps_bytes,
             wire_bytes: wire_total,
+            wire_retries: 0,
+            leases_lost: 0,
         };
         self.points.push(point.clone());
         self.r += 1;

@@ -33,18 +33,25 @@ pub struct LogPoint {
     /// quantization shrink relative to `kvs_bytes` (the cost model's
     /// logical volume).
     pub wire_bytes: u64,
+    /// Cumulative requests the daemon answered from its reply log
+    /// (worker retransmits after a reconnect).  Always 0 in-memory and
+    /// on failure-free socket runs.
+    pub wire_retries: u64,
+    /// Cumulative worker leases marked lost so far (connection drops
+    /// the daemon survived).  Always 0 in-memory.
+    pub leases_lost: u64,
 }
 
 impl LogPoint {
     /// CSV header matching [`LogPoint::csv_row`] (used by both the
     /// post-hoc `RunResult::to_csv` and the streaming CSV hook).
-    pub const CSV_HEADER: &str =
-        "epoch,vtime,wall,train_loss,val_f1,test_f1,kvs_bytes,ps_bytes,wire_bytes\n";
+    pub const CSV_HEADER: &str = "epoch,vtime,wall,train_loss,val_f1,test_f1,\
+         kvs_bytes,ps_bytes,wire_bytes,wire_retries,leases_lost\n";
 
     /// One newline-terminated CSV row for this point.
     pub fn csv_row(&self) -> String {
         format!(
-            "{},{:.6},{:.3},{:.6},{:.4},{:.4},{},{},{}\n",
+            "{},{:.6},{:.3},{:.6},{:.4},{:.4},{},{},{},{},{}\n",
             self.epoch,
             self.vtime,
             self.wall,
@@ -53,7 +60,9 @@ impl LogPoint {
             self.test_f1,
             self.kvs_bytes,
             self.ps_bytes,
-            self.wire_bytes
+            self.wire_bytes,
+            self.wire_retries,
+            self.leases_lost
         )
     }
 }
@@ -73,6 +82,12 @@ pub struct EpochBreakdown {
     pub total: f64,
     /// Transport bytes this epoch put on the wire (0 in-memory).
     pub wire_bytes: u64,
+    /// Requests this epoch the daemon answered from its reply log
+    /// instead of re-executing (retransmits after reconnects; 0
+    /// in-memory and on failure-free runs).
+    pub wire_retries: u64,
+    /// Worker leases newly marked lost during this epoch (0 in-memory).
+    pub leases_lost: u64,
 }
 
 /// The full record of one training run.
@@ -188,6 +203,8 @@ mod tests {
             kvs_bytes: 0,
             ps_bytes: 0,
             wire_bytes: 0,
+            wire_retries: 0,
+            leases_lost: 0,
         }
     }
 

@@ -173,7 +173,8 @@
 //! | [`gnn`] | pure-Rust sparse GCN/GAT inference oracle (+ seed reference) + F1 metrics |
 //! | [`costmodel`] | virtual-time device/network model (speedup figures) |
 //! | [`coordinator`] | sessions, hooks/driver, sync/async schedulers, parallel engine, telemetry |
-//! | [`coordinator::dist`] | process-per-partition training: `ps-serve` daemon, socket-backed rep/param backends, delta/f16 wire codec |
+//! | [`coordinator::dist`] | process-per-partition training: `ps-serve` daemon, socket-backed rep/param backends, delta/f16 wire codec, worker leases + reply-log replay |
+//! | [`coordinator::dist::faultpoint`] | deterministic fault injection: frame-counter-keyed kill/truncate/down/delay plans (`DIGEST_FAULT_PLAN`) |
 //! | [`serve`] | sealed model artifacts, pool-aware multi-model inference engine, registry |
 //! | [`serve::net`] | `digest serve` TCP daemon: `digest-wire-v1` codec, bounded handlers, client + load bench |
 //! | [`baselines`] | LLCG-like and DGL-like comparison frameworks (sessions too) |

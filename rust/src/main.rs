@@ -59,11 +59,16 @@ fn usage() -> String {
      digest list\n\
      digest generate --dataset <name> [--seed N]\n\
      digest partition --dataset <name> [--parts K] [--algo metis|bfs|random] [--seed N]\n\
-     digest train [--config file.json] [--csv out.csv] [--distributed] [key=value ...]\n\
+     digest train [--config file.json] [--csv out.csv] [--distributed]\n\
+     \x20             [--max-restarts N] [key=value ...]\n\
      \x20             (session knobs: save_to= save_every= load_from=\n\
      \x20              stream_csv= early_stop= wall_budget= export_best=;\n\
      \x20              --distributed spawns one worker process per partition\n\
-     \x20              against an in-process ps-serve daemon)\n\
+     \x20              against an in-process ps-serve daemon and, with\n\
+     \x20              --max-restarts, relaunches crashed workers; fault\n\
+     \x20              knobs: dist.on_worker_loss=abort|wait|continue\n\
+     \x20              dist.loss_grace= dist.io_timeout= dist.connect_retries=\n\
+     \x20              dist.backoff_ms=, chaos plans via DIGEST_FAULT_PLAN)\n\
      digest ps-serve [--addr H:P] [--config file.json] [--csv out.csv] [key=value ...]\n\
      \x20             (training-plane daemon: hosts KVS + param server and\n\
      \x20              waits for `parts` workers; save_to= writes the final\n\
@@ -231,6 +236,12 @@ fn cmd_train(mut args: Vec<String>) -> Result<()> {
     if let Some(path) = take_opt(&mut args, "--load") {
         cfg.load_from = Some(path);
     }
+    let max_restarts: usize = take_opt(&mut args, "--max-restarts").map_or(Ok(0), |s| {
+        s.parse().map_err(|e| eyre!("--max-restarts: {e}"))
+    })?;
+    if max_restarts > 0 && !distributed {
+        return Err(eyre!("--max-restarts only applies to --distributed runs"));
+    }
     for kv in &args {
         cfg.apply_override(kv)?;
     }
@@ -243,7 +254,7 @@ fn cmd_train(mut args: Vec<String>) -> Result<()> {
             forward.push(path.clone());
         }
         forward.extend(args.iter().cloned());
-        return run_distributed(cfg, forward, csv_out);
+        return run_distributed(cfg, forward, csv_out, max_restarts);
     }
     println!(
         "training {} / {} with {} on {} workers (N={}, epochs={}, lr={})",
@@ -309,11 +320,15 @@ fn cmd_train(mut args: Vec<String>) -> Result<()> {
 /// `digest train --distributed` — one worker OS process per partition
 /// against an in-process `ps-serve` daemon.  The parent binds an
 /// ephemeral port, re-execs itself `parts` times as `digest worker`,
-/// and serves the run on the main thread.
+/// and serves the run on the main thread.  With `--max-restarts N`, a
+/// supervisor relaunches crashed worker processes (up to N total) —
+/// under `dist.on_worker_loss=wait` the replacement resumes from the
+/// daemon-parked snapshot and the run carries on.
 fn run_distributed(
     cfg: RunConfig,
     forward: Vec<String>,
     csv_out: Option<String>,
+    max_restarts: usize,
 ) -> Result<()> {
     if cfg.load_from.is_some() {
         return Err(eyre!("--distributed does not support resume (load_from) yet"));
@@ -329,26 +344,98 @@ fn run_distributed(
     );
     let save_to = cfg.save_to.clone();
     let parts = cfg.parts;
+    let on_loss = cfg.dist.on_worker_loss;
     let server = coordinator::dist::PsServer::bind(cfg, "127.0.0.1:0", save_to.clone())?;
     let addr = server.local_addr()?.to_string();
     let exe = std::env::current_exe().map_err(|e| eyre!("current_exe: {e}"))?;
-    let mut children = Vec::new();
-    for part in 0..parts {
-        let child = std::process::Command::new(&exe)
-            .arg("worker")
+    let spawn_worker = |part: usize, relaunch: bool| -> Result<std::process::Child> {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("worker")
             .arg("--part")
             .arg(part.to_string())
             .arg("--connect")
             .arg(&addr)
-            .args(&forward)
-            .spawn()
-            .map_err(|e| eyre!("spawning worker {part}: {e}"))?;
-        children.push(child);
+            .args(&forward);
+        if relaunch {
+            // the fault plan applies to the first incarnation only: a
+            // replacement restarts its frame counter at 0, so an
+            // inherited `down` rule would just kill it again
+            cmd.env_remove(coordinator::dist::FAULT_PLAN_ENV);
+        }
+        cmd.spawn().map_err(|e| eyre!("spawning worker {part}: {e}"))
+    };
+    let mut spawned: Vec<Option<std::process::Child>> = Vec::new();
+    for part in 0..parts {
+        spawned.push(Some(spawn_worker(part, false)?));
     }
-    let outcome = server.run();
+    let children = std::sync::Mutex::new(spawned);
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    let failures: std::sync::Mutex<Vec<String>> = std::sync::Mutex::new(Vec::new());
+    // lint:allow(D003, worker-process supervisor: restarts crashed children while the daemon serves on the main thread)
+    let outcome = std::thread::scope(|s| {
+        if max_restarts > 0 {
+            s.spawn(|| {
+                let mut budget = max_restarts;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    {
+                        let mut kids = digest::util::lock_unpoisoned(&children);
+                        for (part, slot) in kids.iter_mut().enumerate() {
+                            let child = match slot.as_mut() {
+                                Some(c) => c,
+                                None => continue,
+                            };
+                            match child.try_wait() {
+                                Ok(None) => {}
+                                Ok(Some(status)) if status.success() => *slot = None,
+                                Ok(Some(status)) => {
+                                    if budget > 0 {
+                                        budget -= 1;
+                                        eprintln!(
+                                            "worker {part} exited with {status}; \
+                                             relaunching ({budget} restart(s) left)"
+                                        );
+                                        match spawn_worker(part, true) {
+                                            Ok(c) => *slot = Some(c),
+                                            Err(e) => {
+                                                digest::util::lock_unpoisoned(&failures)
+                                                    .push(format!("{e}"));
+                                                *slot = None;
+                                            }
+                                        }
+                                    } else {
+                                        digest::util::lock_unpoisoned(&failures).push(
+                                            format!(
+                                                "worker {part} exited with {status} \
+                                                 (restart budget spent)"
+                                            ),
+                                        );
+                                        *slot = None;
+                                    }
+                                }
+                                Err(e) => {
+                                    digest::util::lock_unpoisoned(&failures)
+                                        .push(format!("polling worker {part}: {e}"));
+                                    *slot = None;
+                                }
+                            }
+                        }
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(200));
+                }
+            });
+        }
+        let outcome = server.run();
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        outcome
+    });
     // reap the workers whether the daemon succeeded or not
-    let mut worker_err = None;
-    for (part, mut child) in children.into_iter().enumerate() {
+    let mut worker_err: Option<anyhow::Error> = None;
+    let spawned = children.into_inner().unwrap_or_else(|p| p.into_inner());
+    for (part, slot) in spawned.into_iter().enumerate() {
+        let mut child = match slot {
+            Some(c) => c,
+            None => continue,
+        };
         if outcome.is_err() {
             let _ = child.kill();
         }
@@ -362,9 +449,18 @@ fn run_distributed(
             }
         }
     }
+    for f in failures.into_inner().unwrap_or_else(|p| p.into_inner()) {
+        worker_err.get_or_insert(eyre!("{f}"));
+    }
     let outcome = outcome?;
     if let Some(e) = worker_err {
-        return Err(e);
+        // a departed worker is an expected casualty under
+        // on_worker_loss=continue: the daemon completed without it
+        if on_loss == digest::config::LossPolicy::Continue {
+            println!("note: {e} (run continued without it)");
+        } else {
+            return Err(e);
+        }
     }
     if let Some(path) = &save_to {
         println!("training state saved to {path} (resume with load_from={path})");
@@ -393,6 +489,12 @@ fn print_dist_outcome(
         human_bytes(outcome.wire_bytes),
         outcome.updates
     );
+    if outcome.leases_lost > 0 || outcome.wire_retries > 0 {
+        println!(
+            "  fault recovery {} lease(s) lost, {} frame(s) replayed from the reply log",
+            outcome.leases_lost, outcome.wire_retries
+        );
+    }
     if let Some(path) = csv_out {
         let mut s = String::from(coordinator::LogPoint::CSV_HEADER);
         for p in &outcome.points {
@@ -457,6 +559,9 @@ fn cmd_worker(mut args: Vec<String>) -> Result<()> {
         run.final_val_f1,
         run.final_test_f1
     );
+    if run.reconnects > 0 {
+        println!("  ({} mid-run reconnect(s))", run.reconnects);
+    }
     Ok(())
 }
 

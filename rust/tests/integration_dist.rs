@@ -1,22 +1,36 @@
-//! Distributed training integration tests (ISSUE 8 acceptance):
+//! Distributed training integration tests (ISSUE 8 + ISSUE 9
+//! acceptance):
 //!
-//! * a 2-partition **sync** run over the `digest-wire-v1-train` socket
+//! * a 2-partition **sync** run over the `digest-wire-v2-train` socket
 //!   backend writes a checkpoint **byte-identical** to the in-memory
 //!   `SyncSession` (quantization off) — the tentpole invariant;
 //! * delta-encoded rep pushes measurably reduce bytes-on-wire vs full
 //!   pushes on an otherwise identical run;
 //! * f16-quantized rep pushes complete and land near the f32 result;
 //! * a 2-partition **async** run applies exactly `epochs × parts`
-//!   updates and terminates cleanly.
+//!   updates and terminates cleanly;
+//! * **chaos** (ISSUE 9): a sync worker killed mid-epoch and
+//!   relaunched still yields a byte-identical checkpoint; transparent
+//!   reconnects replay applied frames instead of re-executing them;
+//!   `on_worker_loss=continue` lets an async run finish its full
+//!   update budget under permanent worker loss; garbage/oversize
+//!   frames drop one connection, never the run; exhausted retries
+//!   produce a structured error naming the daemon and attempt count.
+//!   All faults are injected deterministically via [`FaultPlan`]
+//!   (frame-counter keyed), never via timing.
 //!
 //! Every daemon binds `127.0.0.1:0`.  Direct `std::thread` use is fine
 //! here: digest-lint scans `src/` only, and these threads stand in for
 //! worker *processes* (same code path as `digest worker`).
 
-use digest::config::{Method, RunConfig};
-use digest::coordinator::dist::{run_worker, DistOutcome, PsServer, WorkerRun};
+use digest::config::{LossPolicy, Method, RunConfig};
+use digest::coordinator::dist::wire::{DHello, Request, Response};
+use digest::coordinator::dist::{
+    run_worker, run_worker_with_faults, DistOutcome, FaultPlan, PsServer, WorkerRun,
+};
 use digest::coordinator::session::new_session;
 use digest::coordinator::TrainContext;
+use digest::util::frame::{read_frame, write_frame, FrameRead, MAX_FRAME};
 
 fn tmppath(tag: &str) -> String {
     std::env::temp_dir()
@@ -188,4 +202,260 @@ fn daemon_rejects_config_mismatch() {
         h.join().unwrap().unwrap();
     }
     daemon.join().unwrap().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// ISSUE 9: fault tolerance
+// ---------------------------------------------------------------------------
+
+/// Step the in-memory scheduler to completion and save its checkpoint —
+/// the byte-identity reference for the chaos runs.
+fn in_memory_checkpoint(cfg: &RunConfig, path: &str) {
+    let ctx = TrainContext::new(cfg.clone()).unwrap();
+    let mut session = new_session(&ctx).unwrap();
+    while !session.is_done() {
+        session.step_epoch().unwrap();
+    }
+    session.snapshot().unwrap().save(path).unwrap();
+}
+
+#[test]
+fn sync_worker_death_and_fresh_relaunch_is_byte_identical() {
+    let mut cfg = base_cfg(Method::Digest);
+    cfg.dist.backoff_ms = 1;
+
+    let mem_path = tmppath("chaos_mem");
+    in_memory_checkpoint(&cfg, &mem_path);
+
+    let dist_path = tmppath("chaos_dist");
+    let server = PsServer::bind(cfg.clone(), "127.0.0.1:0", Some(dist_path.clone())).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let daemon = std::thread::spawn(move || server.run());
+    let w0 = {
+        let cfg = cfg.clone();
+        let addr = addr.clone();
+        std::thread::spawn(move || run_worker(&cfg, 0, &addr))
+    };
+    let w1 = {
+        let cfg = cfg.clone();
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            // the first incarnation dies mid-run at its 13th frame
+            // (mid-epoch: after the first exchange barrier, before the
+            // run's end) — `down` simulates the whole process dying
+            let plan = FaultPlan::parse("1:down@13").unwrap().for_part(1);
+            let err = run_worker_with_faults(&cfg, 1, &addr, plan).unwrap_err();
+            assert!(format!("{err}").contains("down"), "unexpected death: {err}");
+            // the relaunched process rejoins fresh (token 0), restores
+            // the daemon-parked snapshot, and replays forward
+            run_worker(&cfg, 1, &addr)
+        })
+    };
+    let r0 = w0.join().unwrap().unwrap();
+    let r1 = w1.join().unwrap().unwrap();
+    let outcome = daemon.join().unwrap().unwrap();
+
+    assert!(outcome.leases_lost >= 1, "the death was never noticed");
+    assert_eq!(r0.epochs_run, cfg.epochs);
+    assert_eq!(r1.epochs_run, cfg.epochs);
+
+    let mem_bytes = std::fs::read(&mem_path).unwrap();
+    let dist_bytes = std::fs::read(&dist_path).unwrap();
+    assert!(!mem_bytes.is_empty());
+    assert_eq!(
+        mem_bytes, dist_bytes,
+        "kill-and-relaunch checkpoint diverged from the failure-free run"
+    );
+
+    let _ = std::fs::remove_file(&mem_path);
+    let _ = std::fs::remove_file(&dist_path);
+}
+
+#[test]
+fn transparent_reconnect_replays_applied_frames_byte_identically() {
+    let mut cfg = base_cfg(Method::Digest);
+    cfg.dist.backoff_ms = 1;
+
+    let mem_path = tmppath("retry_mem");
+    in_memory_checkpoint(&cfg, &mem_path);
+
+    let dist_path = tmppath("retry_dist");
+    let server = PsServer::bind(cfg.clone(), "127.0.0.1:0", Some(dist_path.clone())).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let daemon = std::thread::spawn(move || server.run());
+    let w0 = {
+        let cfg = cfg.clone();
+        let addr = addr.clone();
+        std::thread::spawn(move || run_worker(&cfg, 0, &addr))
+    };
+    let w1 = {
+        let cfg = cfg.clone();
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            // frame 5 is cut before it is sent (request never applied:
+            // the retransmit executes live); frame 9 is cut after the
+            // send (request applied, reply lost: the retransmit must be
+            // served from the daemon's reply log, not re-executed)
+            let plan = FaultPlan::parse("1:kill@5;1:kill_after@9")
+                .unwrap()
+                .for_part(1);
+            run_worker_with_faults(&cfg, 1, &addr, plan)
+        })
+    };
+    let r0 = w0.join().unwrap().unwrap();
+    let r1 = w1.join().unwrap().unwrap();
+    let outcome = daemon.join().unwrap().unwrap();
+
+    assert!(r1.reconnects >= 2, "expected two mid-run rejoins, got {}", r1.reconnects);
+    assert!(
+        outcome.wire_retries >= 1,
+        "the applied-then-lost frame was not served from the reply log"
+    );
+    assert!(outcome.leases_lost >= 2);
+    assert_eq!(r0.epochs_run, cfg.epochs);
+    assert_eq!(r1.epochs_run, cfg.epochs);
+
+    let mem_bytes = std::fs::read(&mem_path).unwrap();
+    let dist_bytes = std::fs::read(&dist_path).unwrap();
+    assert_eq!(
+        mem_bytes, dist_bytes,
+        "retransmission double-charged state: checkpoint diverged"
+    );
+
+    let _ = std::fs::remove_file(&mem_path);
+    let _ = std::fs::remove_file(&dist_path);
+}
+
+#[test]
+fn async_continue_policy_survives_permanent_worker_loss() {
+    let mut cfg = base_cfg(Method::DigestAsync);
+    cfg.dist.on_worker_loss = LossPolicy::Continue;
+    cfg.dist.backoff_ms = 1;
+
+    // fault-free reference for the quality tolerance
+    let (ok_outcome, _) = run_socket(&cfg, None);
+
+    let server = PsServer::bind(cfg.clone(), "127.0.0.1:0", None).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let daemon = std::thread::spawn(move || server.run());
+    let w0 = {
+        let cfg = cfg.clone();
+        let addr = addr.clone();
+        std::thread::spawn(move || run_worker(&cfg, 0, &addr))
+    };
+    let w1 = {
+        let cfg = cfg.clone();
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let plan = FaultPlan::parse("1:down@9").unwrap().for_part(1);
+            // permanent loss: the worker errors out and never returns
+            run_worker_with_faults(&cfg, 1, &addr, plan).unwrap_err()
+        })
+    };
+    let r0 = w0.join().unwrap().unwrap();
+    let death = w1.join().unwrap();
+    let outcome = daemon.join().unwrap().unwrap();
+
+    assert!(format!("{death}").contains("down"), "unexpected death: {death}");
+    // the survivor drove the run to its FULL update budget
+    assert_eq!(outcome.updates, (cfg.epochs * cfg.parts) as u64);
+    assert_eq!(outcome.leases_lost, 1);
+    assert!(r0.epochs_run >= cfg.epochs, "survivor did not pick up the slack");
+    assert!(outcome.final_val_f1.is_finite());
+    assert!(
+        (outcome.final_val_f1 - ok_outcome.final_val_f1).abs() < 0.5,
+        "losing a worker moved final val F1 too far: {} vs {}",
+        outcome.final_val_f1,
+        ok_outcome.final_val_f1
+    );
+}
+
+/// Send a seq-prefixed frame: the v2 transport carries a u64 LE
+/// sequence number ahead of the codec payload.
+fn send_seq_frame(s: &mut std::net::TcpStream, seq: u64, op: u8, payload: &[u8]) {
+    let mut body = seq.to_le_bytes().to_vec();
+    body.extend_from_slice(payload);
+    write_frame(s, op, &body).unwrap();
+}
+
+fn expect_hello_ok(s: &mut std::net::TcpStream) {
+    match read_frame(s, MAX_FRAME).unwrap() {
+        FrameRead::Frame(rop, rp) => match Response::decode(rop, &rp).unwrap() {
+            Response::HelloOk { .. } => {}
+            other => panic!("expected HelloOk, got {other:?}"),
+        },
+        other => panic!("expected a hello reply frame, got {other:?}"),
+    }
+}
+
+fn expect_error_frame(s: &mut std::net::TcpStream, what: &str) -> String {
+    match read_frame(s, MAX_FRAME).unwrap() {
+        FrameRead::Frame(rop, rp) => match Response::decode(rop, &rp).unwrap() {
+            Response::Error { message } => message,
+            other => panic!("expected an Error frame after {what}, got {other:?}"),
+        },
+        other => panic!("expected an Error frame after {what}, got {other:?}"),
+    }
+}
+
+#[test]
+fn garbage_and_oversize_frames_drop_one_connection_not_the_run() {
+    let mut cfg = base_cfg(Method::Digest);
+    cfg.parts = 1;
+    cfg.dist.backoff_ms = 1;
+    let server = PsServer::bind(cfg.clone(), "127.0.0.1:0", None).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let daemon = std::thread::spawn(move || server.run());
+
+    let (hop, hpayload) = Request::Hello(DHello::from_config(&cfg, 0)).encode().unwrap();
+    let timeout = Some(std::time::Duration::from_secs(20));
+
+    // connection 1: valid hello, then an unknown opcode mid-run
+    let mut s1 = std::net::TcpStream::connect(&addr).unwrap();
+    s1.set_read_timeout(timeout).unwrap();
+    send_seq_frame(&mut s1, 0, hop, &hpayload);
+    expect_hello_ok(&mut s1);
+    send_seq_frame(&mut s1, 1, 0x6E, &[0xAB, 0xCD, 0xEF]);
+    let msg = expect_error_frame(&mut s1, "an unknown opcode");
+    assert!(msg.contains("opcode"), "unhelpful error: {msg}");
+
+    // connection 2: valid hello, then an oversize frame header
+    let mut s2 = std::net::TcpStream::connect(&addr).unwrap();
+    s2.set_read_timeout(timeout).unwrap();
+    send_seq_frame(&mut s2, 0, hop, &hpayload);
+    expect_hello_ok(&mut s2);
+    {
+        use std::io::Write;
+        let mut raw = (MAX_FRAME + 2).to_le_bytes().to_vec();
+        raw.push(0x13);
+        s2.write_all(&raw).unwrap();
+        s2.flush().unwrap();
+    }
+    let msg = expect_error_frame(&mut s2, "an oversize frame");
+    assert!(msg.contains("exceeds"), "unhelpful error: {msg}");
+
+    // neither poisoned the run: a real worker joins and completes it
+    let run = run_worker(&cfg, 0, &addr).unwrap();
+    assert_eq!(run.epochs_run, cfg.epochs);
+    let outcome = daemon.join().unwrap().unwrap();
+    assert!(outcome.leases_lost >= 2);
+    assert!(outcome.final_val_f1.is_finite());
+}
+
+#[test]
+fn exhausted_retries_name_the_daemon_and_attempt_count() {
+    let mut cfg = base_cfg(Method::Digest);
+    cfg.dist.io_timeout = 0.3;
+    cfg.dist.connect_retries = 2;
+    cfg.dist.backoff_ms = 1;
+    // bound but never accepted: the OS backlog swallows the dial and
+    // the hello reply never comes, so every attempt times out
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let err = run_worker(&cfg, 0, &addr).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains(&addr), "error must name the daemon: {msg}");
+    assert!(msg.contains("attempts"), "error must count attempts: {msg}");
+    assert!(msg.contains("no reply"), "error must say what failed: {msg}");
+    drop(listener);
 }
