@@ -1,0 +1,86 @@
+//! Sampling-path benchmarks: block-sampler throughput, one sampled
+//! epoch vs one full-graph epoch (wall-clock), and sampled vs
+//! full-graph serving latency for seed-node queries.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::sync::Arc;
+
+use digest::config::{Method, RunConfig};
+use digest::coordinator::{run_with_context, TrainContext, TrainSession as _};
+use digest::gnn::ModelKind;
+use digest::graph::registry::load;
+use digest::sample::BlockSampler;
+use digest::serve::{InferenceEngine, NodeQuery};
+use digest::util::Rng;
+use harness::{bench, throughput};
+
+fn sampled_cfg(epochs: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.dataset = "arxiv-s".into();
+    cfg.parts = 4;
+    cfg.method = Method::Sampled;
+    cfg.model = ModelKind::Sage;
+    cfg.epochs = epochs;
+    cfg.eval_every = 1000; // exclude evaluation from the epoch cost
+    cfg.fanouts = vec![10, 25];
+    cfg.batch_size = 64;
+    cfg
+}
+
+fn main() {
+    // raw sampler throughput (steady state: warmed buffers)
+    let ds = load("arxiv-s", 0).unwrap();
+    let mut sampler = BlockSampler::new(ds.n());
+    let seeds: Vec<u32> = (0..256u32).collect();
+    let mut rng = Rng::new(1);
+    sampler.sample_batch(&ds.graph, &[10, 25], &seeds, None, &mut rng);
+    let rep = bench("sample arxiv-s batch=256 fanouts=10,25", || {
+        sampler.sample_batch(&ds.graph, &[10, 25], &seeds, None, &mut rng);
+        sampler.blocks[0].n_src()
+    });
+    println!("    -> {:.0} seeds/s", throughput(&rep, 256));
+
+    // one sampled epoch vs one full-graph DIGEST epoch
+    let ctx = TrainContext::new(sampled_cfg(1)).unwrap();
+    run_with_context(&ctx).unwrap(); // warm
+    let mut vtime = 0.0;
+    bench("epoch arxiv-s sampled (sage)", || {
+        let r = run_with_context(&ctx).unwrap();
+        vtime = r.avg_epoch_vtime();
+    });
+    println!("    -> virtual epoch time: {vtime:.6}s");
+
+    let mut full = RunConfig::default();
+    full.dataset = "arxiv-s".into();
+    full.parts = 4;
+    full.method = Method::Digest;
+    full.epochs = 1;
+    full.eval_every = 1000;
+    let ctx_full = TrainContext::new(full).unwrap();
+    run_with_context(&ctx_full).unwrap();
+    bench("epoch arxiv-s digest (gcn, full graph)", || {
+        run_with_context(&ctx_full).unwrap();
+    });
+
+    // serving: seed-node sampled predict vs full-graph predict
+    let train = TrainContext::new(sampled_cfg(3)).unwrap();
+    let mut session = digest::coordinator::new_session(&train).unwrap();
+    while !session.is_done() {
+        session.step_epoch().unwrap();
+    }
+    let model = session.export_model("bench-sage").unwrap();
+    drop(session);
+    let engine = InferenceEngine::new(Arc::clone(&train.ds));
+    let q_full = NodeQuery::nodes(vec![0, 1, 2, 3]);
+    engine.predict(&model, &q_full).unwrap(); // warm workspace
+    bench("predict arxiv-s 4 nodes full-graph", || {
+        engine.predict(&model, &q_full).unwrap().classes.len()
+    });
+    let q_sampled = NodeQuery::nodes(vec![0, 1, 2, 3]).with_fanouts(vec![10, 25]);
+    engine.predict(&model, &q_sampled).unwrap(); // warm scratch
+    bench("predict arxiv-s 4 nodes sampled 10,25", || {
+        engine.predict(&model, &q_sampled).unwrap().classes.len()
+    });
+}

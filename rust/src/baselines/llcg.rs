@@ -40,7 +40,9 @@ pub fn drop_edges(ctx: &TrainContext, plan: &SubgraphPlan) -> SubgraphPlan {
     let mut p = plan.clone();
     p.p_out = CsrMatrix::empty(p.s_pad, p.b_pad);
     let kind = match ctx.cfg.model {
-        crate::gnn::ModelKind::Gcn => PropKind::GcnNormalized,
+        crate::gnn::ModelKind::Gcn | crate::gnn::ModelKind::Sage => {
+            PropKind::GcnNormalized
+        }
         crate::gnn::ModelKind::Gat => PropKind::GatMask,
     };
     if kind == PropKind::GcnNormalized {
@@ -96,7 +98,9 @@ pub fn correction_plan(ctx: &TrainContext, rng: &mut Rng) -> SubgraphPlan {
     }
     let partition = crate::partition::Partition::new(2, parts);
     let kind = match ctx.cfg.model {
-        crate::gnn::ModelKind::Gcn => PropKind::GcnNormalized,
+        crate::gnn::ModelKind::Gcn | crate::gnn::ModelKind::Sage => {
+            PropKind::GcnNormalized
+        }
         crate::gnn::ModelKind::Gat => PropKind::GatMask,
     };
     crate::halo::build_plan(ds, &partition, 0, ctx.spec.s_pad, ctx.spec.b_pad, kind)
@@ -280,6 +284,9 @@ impl TrainSession for LlcgSession<'_> {
             wire_bytes: ctx.kvs.wire_bytes(),
             wire_retries: 0,
             leases_lost: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            cache_bytes: 0,
         };
         self.points.push(point.clone());
         self.r += 1;

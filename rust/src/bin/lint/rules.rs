@@ -49,7 +49,7 @@ pub const RULES: &[RuleInfo] = &[
     RuleInfo {
         id: "D001",
         summary: "HashMap/HashSet iteration in determinism-critical modules \
-                  (kvs, ps, coordinator, serve, runtime)",
+                  (kvs, ps, coordinator, serve, runtime, sample)",
     },
     RuleInfo {
         id: "D002",
@@ -76,7 +76,7 @@ pub const RULES: &[RuleInfo] = &[
 ];
 
 /// Modules whose iteration order reaches checkpoints and telemetry.
-const D001_MODULES: &[&str] = &["kvs", "ps", "coordinator", "serve", "runtime"];
+const D001_MODULES: &[&str] = &["kvs", "ps", "coordinator", "serve", "runtime", "sample"];
 
 const ITER_METHODS: &[&str] = &[
     "iter",
@@ -670,7 +670,8 @@ fn check_d006(rel: &str, lexed: &SourceFile, out: &mut Vec<Finding>) {
     let in_scope = (rel.starts_with("coordinator/")
         && rel != "coordinator/hooks.rs"
         && rel != "coordinator/telemetry.rs")
-        || rel.starts_with("baselines/");
+        || rel.starts_with("baselines/")
+        || rel.starts_with("sample/");
     if !in_scope {
         return;
     }
@@ -744,6 +745,12 @@ mod tests {
         assert_fires(
             "serve/x.rs",
             r#"fn f() { let m = HashMap::new(); m.insert(1, 2); for (k, v) in m { drop(k); } }"#,
+            &["D001"],
+        );
+        // the sampling subsystem's cache tables reach checkpoints too
+        assert_fires(
+            "sample/cache.rs",
+            r#"fn f(m: &HashMap<u32, f32>) -> Vec<u32> { m.keys().copied().collect() }"#,
             &["D001"],
         );
     }
@@ -917,6 +924,8 @@ mod tests {
         );
         assert_fires("coordinator/hooks.rs", r#"fn f() -> Instant { Instant::now() }"#, &[]);
         assert_fires("graph/mod.rs", r#"fn f() -> Instant { Instant::now() }"#, &[]);
+        // the sampled trainer's step path is in scope like the others
+        assert_fires("sample/session.rs", r#"fn f() -> Instant { Instant::now() }"#, &["D006"]);
     }
 
     #[test]

@@ -41,6 +41,9 @@ pub enum Method {
     Llcg,
     /// DGL-like propagation-based baseline (fresh per-epoch exchange).
     Propagation,
+    /// Mini-batch neighbor-sampled GraphSAGE training with a
+    /// partition-aware remote-neighbor cache (`crate::sample`).
+    Sampled,
 }
 
 impl Method {
@@ -50,9 +53,13 @@ impl Method {
             Method::DigestAsync => "digest-a",
             Method::Llcg => "llcg",
             Method::Propagation => "dgl",
+            Method::Sampled => "sampled",
         }
     }
 
+    /// The full-graph method family the comparison experiments sweep.
+    /// `Sampled` is intentionally absent: it requires `model=sage`,
+    /// while these sweeps iterate gcn/gat artifacts.
     pub fn all() -> [Method; 4] {
         [Method::Llcg, Method::Propagation, Method::Digest, Method::DigestAsync]
     }
@@ -66,7 +73,8 @@ impl std::str::FromStr for Method {
             "digest-a" | "digest_async" => Ok(Method::DigestAsync),
             "llcg" => Ok(Method::Llcg),
             "dgl" | "propagation" => Ok(Method::Propagation),
-            _ => Err(eyre!("unknown method {s:?} (digest|digest-a|llcg|dgl)")),
+            "sampled" => Ok(Method::Sampled),
+            _ => Err(eyre!("unknown method {s:?} (digest|digest-a|llcg|dgl|sampled)")),
         }
     }
 }
@@ -246,6 +254,19 @@ pub struct RunConfig {
     /// Distributed-transport fault-tolerance knobs (socket backend
     /// only; the in-memory backends never look at these).
     pub dist: DistConfig,
+    /// Neighbor-sampling fanouts per layer, outermost (layer 0) first —
+    /// `method=sampled` only.  Must have `hidden.len() + 1` entries and
+    /// no zeros.
+    pub fanouts: Vec<usize>,
+    /// Mini-batch size (seed nodes per step) — `method=sampled` only.
+    pub batch_size: usize,
+    /// Per-worker remote-neighbor feature-cache capacity in nodes
+    /// (0 disables the cache) — `method=sampled` only.
+    pub cache_nodes: usize,
+    /// Hidden-layer widths for the sampled SAGE model (the full-graph
+    /// methods take widths from their AOT artifact instead).  All
+    /// entries must be equal (the artifact spec carries a single d_h).
+    pub hidden: Vec<usize>,
 }
 
 impl Default for RunConfig {
@@ -277,8 +298,24 @@ impl Default for RunConfig {
             wire_delta: true,
             wire_f16: false,
             dist: DistConfig::default(),
+            fanouts: vec![10, 25],
+            batch_size: 32,
+            cache_nodes: 1024,
+            hidden: vec![16],
         }
     }
+}
+
+/// Parse a comma-separated usize list (`fanouts=10,25`); empty or
+/// non-numeric entries are structured errors.
+fn parse_usize_list(k: &str, v: &str) -> Result<Vec<usize>> {
+    v.split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<usize>()
+                .map_err(|e| eyre!("{k}: entry {s:?}: {e}"))
+        })
+        .collect()
 }
 
 impl RunConfig {
@@ -380,6 +417,18 @@ impl RunConfig {
             }
             c.straggler = Some((arr[0].as_usize()?, arr[1].as_f64()?, arr[2].as_f64()?));
         }
+        if let Some(v) = j.opt("fanouts") {
+            c.fanouts = v.as_arr()?.iter().map(|x| x.as_usize()).collect::<Result<_>>()?;
+        }
+        if let Some(v) = j.opt("batch_size") {
+            c.batch_size = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("cache_nodes") {
+            c.cache_nodes = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("hidden") {
+            c.hidden = v.as_arr()?.iter().map(|x| x.as_usize()).collect::<Result<_>>()?;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -442,6 +491,14 @@ impl RunConfig {
             "loss_grace" => {
                 self.dist.loss_grace = v.parse().map_err(|e| eyre!("loss_grace: {e}"))?
             }
+            "fanouts" => self.fanouts = parse_usize_list("fanouts", v)?,
+            "batch_size" => {
+                self.batch_size = v.parse().map_err(|e| eyre!("batch_size: {e}"))?
+            }
+            "cache_nodes" => {
+                self.cache_nodes = v.parse().map_err(|e| eyre!("cache_nodes: {e}"))?
+            }
+            "hidden" => self.hidden = parse_usize_list("hidden", v)?,
             _ => return Err(eyre!("unknown config key {k:?}")),
         }
         // field-local rules only: cross-field constraints (straggler id
@@ -479,6 +536,39 @@ impl RunConfig {
                  (sync barriers cannot shrink; use abort or wait)"
             ));
         }
+        // sampled training is the SAGE mini-batch path and nothing else:
+        // the fanout block structure only matches the mean-aggregator
+        // forward, and the full-graph methods have no sampler
+        if self.method == Method::Sampled && self.model != ModelKind::Sage {
+            return Err(eyre!(
+                "method=sampled requires model=sage (got model={})",
+                self.model.as_str()
+            ));
+        }
+        if self.model == ModelKind::Sage && self.method != Method::Sampled {
+            return Err(eyre!(
+                "model=sage requires method=sampled (got method={}); \
+                 no AOT artifacts exist for SAGE",
+                self.method.as_str()
+            ));
+        }
+        if self.method == Method::Sampled {
+            if self.fanouts.len() != self.hidden.len() + 1 {
+                return Err(eyre!(
+                    "fanouts must have one entry per layer: {} fanouts vs {} layers \
+                     (hidden.len() + 1)",
+                    self.fanouts.len(),
+                    self.hidden.len() + 1
+                ));
+            }
+            if self.hidden.windows(2).any(|w| w[0] != w[1]) {
+                return Err(eyre!(
+                    "hidden widths must all be equal (the artifact spec carries a \
+                     single d_h); got {:?}",
+                    self.hidden
+                ));
+            }
+        }
         Ok(())
     }
 
@@ -508,6 +598,25 @@ impl RunConfig {
         }
         if self.wall_budget < 0.0 || !self.wall_budget.is_finite() {
             return Err(eyre!("wall_budget must be a finite non-negative number"));
+        }
+        // sampler knobs: the block builder computes `ceil(n / batch_size)`
+        // and sizes per-layer scratch from fanouts — reject the degenerate
+        // values here with a clear message instead of a panic mid-epoch
+        if self.batch_size == 0 {
+            return Err(eyre!("batch_size must be >= 1"));
+        }
+        if self.fanouts.is_empty() {
+            return Err(eyre!("fanouts must not be empty"));
+        }
+        if self.fanouts.contains(&0) {
+            return Err(eyre!(
+                "fanouts must not contain 0 (got {:?}); a zero fanout samples \
+                 no neighbors and degenerates the layer",
+                self.fanouts
+            ));
+        }
+        if self.hidden.contains(&0) {
+            return Err(eyre!("hidden widths must be >= 1 (got {:?})", self.hidden));
         }
         self.dist.validate()?;
         Ok(())
@@ -822,6 +931,106 @@ mod tests {
         let j =
             Json::parse(r#"{"method": "digest-a", "on_worker_loss": "continue"}"#).unwrap();
         RunConfig::from_json(&j).unwrap();
+    }
+
+    #[test]
+    fn sample_knobs_parse_and_default() {
+        let c = RunConfig::default();
+        assert_eq!(c.fanouts, vec![10, 25]);
+        assert_eq!(c.batch_size, 32);
+        assert_eq!(c.cache_nodes, 1024);
+        assert_eq!(c.hidden, vec![16]);
+        let j = Json::parse(
+            r#"{
+                "method": "sampled", "model": "sage",
+                "fanouts": [5, 5, 10], "batch_size": 8,
+                "cache_nodes": 0, "hidden": [32, 32]
+            }"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.method, Method::Sampled);
+        assert_eq!(c.model, ModelKind::Sage);
+        assert_eq!(c.fanouts, vec![5, 5, 10]);
+        assert_eq!(c.batch_size, 8);
+        assert_eq!(c.cache_nodes, 0);
+        assert_eq!(c.hidden, vec![32, 32]);
+        // CLI overrides hit the same fields; lists are comma-separated
+        let mut c = RunConfig::default();
+        c.apply_override("fanouts=3,7").unwrap();
+        c.apply_override("hidden=8").unwrap();
+        c.apply_override("batch_size=4").unwrap();
+        c.apply_override("cache_nodes=64").unwrap();
+        assert_eq!(c.fanouts, vec![3, 7]);
+        assert_eq!(c.hidden, vec![8]);
+        assert_eq!(c.batch_size, 4);
+        assert_eq!(c.cache_nodes, 64);
+        assert!(c.apply_override("fanouts=3,x").is_err());
+        assert!(c.apply_override("fanouts=").is_err());
+    }
+
+    #[test]
+    fn zero_sample_knobs_are_validation_errors_not_panics() {
+        // same pattern as sync_interval/eval_every: degenerate values
+        // must surface as structured Errs at parse time
+        let mut c = RunConfig::default();
+        c.batch_size = 0;
+        let err = c.validate().unwrap_err();
+        assert!(err.to_string().contains("batch_size"), "{err}");
+        let mut c = RunConfig::default();
+        c.fanouts = vec![10, 0];
+        let err = c.validate().unwrap_err();
+        assert!(err.to_string().contains("fanouts"), "{err}");
+        let mut c = RunConfig::default();
+        c.fanouts = vec![];
+        let err = c.validate().unwrap_err();
+        assert!(err.to_string().contains("fanouts"), "{err}");
+        let mut c = RunConfig::default();
+        c.hidden = vec![0];
+        assert!(c.validate().is_err());
+        // field-local rules fire on override too, and through JSON
+        let mut c = RunConfig::default();
+        assert!(c.apply_override("batch_size=0").is_err());
+        assert!(c.apply_override("fanouts=0,10").is_err());
+        let j = Json::parse(r#"{"batch_size": 0}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"fanouts": [0, 10]}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"fanouts": []}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn sampled_method_and_sage_model_imply_each_other() {
+        // sampled without sage
+        let j = Json::parse(r#"{"method": "sampled"}"#).unwrap();
+        let err = RunConfig::from_json(&j).unwrap_err();
+        assert!(err.to_string().contains("model=sage"), "{err}");
+        // sage without sampled
+        let j = Json::parse(r#"{"model": "sage"}"#).unwrap();
+        let err = RunConfig::from_json(&j).unwrap_err();
+        assert!(err.to_string().contains("method=sampled"), "{err}");
+        // together they validate
+        let j = Json::parse(r#"{"method": "sampled", "model": "sage"}"#).unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.method.as_str(), "sampled");
+        // fanout/layer count mismatch is a cross-field error
+        let mut c = RunConfig::default();
+        c.method = Method::Sampled;
+        c.model = ModelKind::Sage;
+        c.fanouts = vec![10];
+        let err = c.validate().unwrap_err();
+        assert!(err.to_string().contains("one entry per layer"), "{err}");
+        c.fanouts = vec![10, 25];
+        c.validate().unwrap();
+        // non-uniform hidden widths are rejected for sampled runs
+        c.hidden = vec![16, 32];
+        c.fanouts = vec![5, 5, 5];
+        assert!(c.validate().is_err());
+        // Method::all() stays the full-graph family: the comparison
+        // sweeps iterate it with gcn/gat artifacts
+        assert!(!Method::all().contains(&Method::Sampled));
+        assert_eq!("sampled".parse::<Method>().unwrap(), Method::Sampled);
     }
 
     #[test]

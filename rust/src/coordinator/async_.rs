@@ -420,6 +420,9 @@ impl TrainSession for AsyncSession<'_> {
                         wire_bytes: wire_total,
                         wire_retries: 0,
                         leases_lost: 0,
+                        cache_hits: 0,
+                        cache_misses: 0,
+                        cache_bytes: 0,
                     };
                     let bd = EpochBreakdown {
                         compute: compute_t,

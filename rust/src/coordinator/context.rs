@@ -68,13 +68,28 @@ impl TrainContext {
         let mut part = partition(&ds.graph, cfg.parts, cfg.partitioner, cfg.seed);
         let artifact = cfg.artifact_name()?;
         let rt = Runtime::new(&cfg.artifact_dir)?;
-        let spec = rt.manifest.get(&artifact, "train")?.clone();
-        let eval_spec = rt.manifest.get(&artifact, "eval")?.clone();
+        let (spec, eval_spec) = if cfg.model == ModelKind::Sage {
+            // SAGE has no AOT artifacts: the sampled path trains in pure
+            // Rust, so the spec is synthesized from the config + dataset
+            // dims (layer widths, tensor names) instead of the manifest
+            let spec = crate::sample::sage_artifact_spec(&cfg, &ds, &part, "train")?;
+            let eval_spec = crate::sample::sage_artifact_spec(&cfg, &ds, &part, "eval")?;
+            (spec, eval_spec)
+        } else {
+            (
+                rt.manifest.get(&artifact, "train")?.clone(),
+                rt.manifest.get(&artifact, "eval")?.clone(),
+            )
+        };
         // partitions must fit the artifact's padded shape
         crate::partition::enforce_cap(&ds.graph, &mut part, spec.s_pad);
         let kind = match cfg.model {
             ModelKind::Gcn => PropKind::GcnNormalized,
             ModelKind::Gat => PropKind::GatMask,
+            // the sampled SAGE session never multiplies through the halo
+            // plans; normalized-adjacency plans keep the shapes honest
+            // for the cost model without a SAGE-specific plan kind
+            ModelKind::Sage => PropKind::GcnNormalized,
         };
         let plans = build_all_plans(&ds, &part, spec.s_pad, spec.b_pad, kind)?;
         let mut cost = CostModel::default();

@@ -1053,6 +1053,9 @@ impl<'a> Central<'a> {
             wire_bytes: wire_total,
             wire_retries: retries_total,
             leases_lost: lost_total,
+            cache_hits: 0,
+            cache_misses: 0,
+            cache_bytes: 0,
         });
         st.breakdowns.push(bd);
         st.window_loss = 0.0;
@@ -1176,6 +1179,9 @@ impl<'a> Central<'a> {
             wire_bytes: wire_total,
             wire_retries: retries_total,
             leases_lost: lost_total,
+            cache_hits: 0,
+            cache_misses: 0,
+            cache_bytes: 0,
         });
         st.r += 1;
         Ok(())

@@ -504,6 +504,9 @@ mod tests {
                 wire_bytes: 0,
                 wire_retries: 0,
                 leases_lost: 0,
+                cache_hits: 0,
+                cache_misses: 0,
+                cache_bytes: 0,
             },
             breakdown: Default::default(),
             evaluated: true,
@@ -546,6 +549,9 @@ mod tests {
                 wire_bytes: 0,
                 wire_retries: 0,
                 leases_lost: 0,
+                cache_hits: 0,
+                cache_misses: 0,
+                cache_bytes: 0,
             },
             breakdown: Default::default(),
             evaluated: false,

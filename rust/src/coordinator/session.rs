@@ -102,6 +102,7 @@ pub fn new_session(ctx: &TrainContext) -> Result<Box<dyn TrainSession + '_>> {
         Method::Propagation => {
             Box::new(crate::baselines::propagation::PropagationSession::new(ctx)?)
         }
+        Method::Sampled => Box::new(crate::sample::SampledSession::new(ctx)?),
     })
 }
 
@@ -153,6 +154,7 @@ pub fn resume_session<'a>(
         Method::Propagation => Box::new(
             crate::baselines::propagation::PropagationSession::resume(ctx, state)?,
         ),
+        Method::Sampled => Box::new(crate::sample::SampledSession::resume(ctx, state)?),
     })
 }
 

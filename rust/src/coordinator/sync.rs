@@ -300,6 +300,9 @@ impl TrainSession for SyncSession<'_> {
             wire_bytes: wire_total,
             wire_retries: 0,
             leases_lost: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            cache_bytes: 0,
         };
         self.points.push(point.clone());
         self.r += 1;

@@ -40,18 +40,28 @@ pub struct LogPoint {
     /// Cumulative worker leases marked lost so far (connection drops
     /// the daemon survived).  Always 0 in-memory.
     pub leases_lost: u64,
+    /// Cumulative remote-neighbor cache hits (`method=sampled` only;
+    /// always 0 for the full-graph methods).
+    pub cache_hits: u64,
+    /// Cumulative remote-neighbor cache misses — each one is a row
+    /// pulled through `RepStore::pull_into` (`method=sampled` only).
+    pub cache_misses: u64,
+    /// Cumulative bytes of remote feature rows actually pulled on cache
+    /// misses (`method=sampled` only).
+    pub cache_bytes: u64,
 }
 
 impl LogPoint {
     /// CSV header matching [`LogPoint::csv_row`] (used by both the
     /// post-hoc `RunResult::to_csv` and the streaming CSV hook).
     pub const CSV_HEADER: &str = "epoch,vtime,wall,train_loss,val_f1,test_f1,\
-         kvs_bytes,ps_bytes,wire_bytes,wire_retries,leases_lost\n";
+         kvs_bytes,ps_bytes,wire_bytes,wire_retries,leases_lost,\
+         cache_hits,cache_misses,cache_bytes\n";
 
     /// One newline-terminated CSV row for this point.
     pub fn csv_row(&self) -> String {
         format!(
-            "{},{:.6},{:.3},{:.6},{:.4},{:.4},{},{},{},{},{}\n",
+            "{},{:.6},{:.3},{:.6},{:.4},{:.4},{},{},{},{},{},{},{},{}\n",
             self.epoch,
             self.vtime,
             self.wall,
@@ -62,7 +72,10 @@ impl LogPoint {
             self.ps_bytes,
             self.wire_bytes,
             self.wire_retries,
-            self.leases_lost
+            self.leases_lost,
+            self.cache_hits,
+            self.cache_misses,
+            self.cache_bytes
         )
     }
 }
@@ -205,6 +218,9 @@ mod tests {
             wire_bytes: 0,
             wire_retries: 0,
             leases_lost: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            cache_bytes: 0,
         }
     }
 

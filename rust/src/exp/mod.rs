@@ -35,6 +35,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod fig9;
+pub mod sampled;
 pub mod table1;
 pub mod thm1;
 
@@ -200,13 +201,14 @@ pub fn csv_table(headers: &[&str], rows: &[Vec<String>]) -> String {
 }
 
 /// All experiment ids, in the order `all` runs them.
-pub const ALL_EXPERIMENTS: [&str; 12] = [
+pub const ALL_EXPERIMENTS: [&str; 13] = [
     "fig9",
     "fig5",
     "complexity",
     "thm1",
     "ablate-part",
     "ablate-overlap",
+    "sampled",
     "fig6",
     "fig7",
     "table1",
@@ -230,6 +232,7 @@ pub fn run_experiment(id: &str, campaign: &mut Campaign) -> Result<()> {
         "complexity" => complexity::run(campaign),
         "ablate-part" => ablate::run_partitioners(campaign),
         "ablate-overlap" => ablate::run_overlap(campaign),
+        "sampled" => sampled::run(campaign),
         "all" => {
             for id in ALL_EXPERIMENTS {
                 eprintln!("[exp] === {id} ===");

@@ -54,6 +54,11 @@ use crate::{eyre, Result};
 pub enum ModelKind {
     Gcn,
     Gat,
+    /// Mean-aggregator GraphSAGE: z = H_dst W_self + mean(H_nb) W_nb + b.
+    /// The kind behind mini-batch neighbor-sampled training
+    /// ([`crate::sample`]); full-graph forwards (eval/serving) run it
+    /// through the same sparse [`Workspace`] path as GCN/GAT.
+    Sage,
 }
 
 impl ModelKind {
@@ -61,6 +66,7 @@ impl ModelKind {
         match self {
             ModelKind::Gcn => 2,            // w, b
             ModelKind::Gat => 4,            // w, b, a_src, a_dst
+            ModelKind::Sage => 3,           // w (self), b, w_nb
         }
     }
 
@@ -68,6 +74,7 @@ impl ModelKind {
         match self {
             ModelKind::Gcn => "gcn",
             ModelKind::Gat => "gat",
+            ModelKind::Sage => "sage",
         }
     }
 }
@@ -78,19 +85,22 @@ impl std::str::FromStr for ModelKind {
         match s {
             "gcn" => Ok(ModelKind::Gcn),
             "gat" => Ok(ModelKind::Gat),
+            "sage" => Ok(ModelKind::Sage),
             _ => Err(eyre!("unknown model {s:?}")),
         }
     }
 }
 
 /// One layer's parameters, viewed from the flat PS parameter list
-/// (manifest order: w, b[, a_src, a_dst] per layer).
+/// (manifest order: w, b[, a_src, a_dst | w_nb] per layer).
 #[derive(Debug, Clone)]
 pub struct LayerView<'a> {
     pub w: &'a Matrix,
     pub b: &'a Matrix,
     pub a_src: Option<&'a Matrix>,
     pub a_dst: Option<&'a Matrix>,
+    /// SAGE neighbor-aggregate transform (same shape as `w`).
+    pub w_nb: Option<&'a Matrix>,
 }
 
 /// Split the flat parameter list into per-layer views.
@@ -106,6 +116,7 @@ pub fn layer_views<'a>(kind: ModelKind, flat: &'a [Matrix]) -> Result<Vec<LayerV
             b: &c[1],
             a_src: if kind == ModelKind::Gat { Some(&c[2]) } else { None },
             a_dst: if kind == ModelKind::Gat { Some(&c[3]) } else { None },
+            w_nb: if kind == ModelKind::Sage { Some(&c[2]) } else { None },
         })
         .collect())
 }
@@ -145,6 +156,30 @@ pub fn gcn_prop_csr(g: &Graph) -> CsrMatrix {
         b.push(v as u32, 1.0 / (g.degree(v) + 1) as f32);
         for &u in g.neighbors(v) {
             b.push(u, g.norm_weight(v, u as usize));
+        }
+        b.finish_row();
+    }
+    b.finish()
+}
+
+/// Mean-aggregation matrix for GraphSAGE: row v holds v's neighbors in
+/// ascending id order with value 1/deg(v) — **no self-loop** (the self
+/// term goes through `w` separately).  A degree-0 node gets an empty
+/// row, so its neighbor aggregate is exactly zero.  The entry order is
+/// the summation-order contract the sampled block forward
+/// ([`crate::sample`]) reproduces at full fanout, which is what makes
+/// seed-node-only sampled serving agree with the full-graph forward.
+pub fn sage_mean_csr(g: &Graph) -> CsrMatrix {
+    let n = g.n();
+    let mut b = CsrBuilder::new(n, n);
+    b.reserve(g.targets.len());
+    for v in 0..n {
+        let deg = g.degree(v);
+        if deg > 0 {
+            let inv = 1.0 / deg as f32;
+            for &u in g.neighbors(v) {
+                b.push(u, inv);
+            }
         }
         b.finish_row();
     }
@@ -197,6 +232,19 @@ fn check_layer_shapes(l: usize, kind: ModelKind, h: &Matrix, layer: &LayerView) 
                     layer.w.cols
                 ));
             }
+        }
+    }
+    if kind == ModelKind::Sage {
+        // lint:allow(D002, the ModelKind::Sage arm only sees layer views built with a neighbor transform present)
+        let w_nb = layer.w_nb.expect("SAGE layer views carry w_nb");
+        if w_nb.rows != layer.w.rows || w_nb.cols != layer.w.cols {
+            return Err(eyre!(
+                "layer {l}: w_nb {}x{} != w {}x{}",
+                w_nb.rows,
+                w_nb.cols,
+                layer.w.rows,
+                layer.w.cols
+            ));
         }
     }
     Ok(())
@@ -342,6 +390,32 @@ pub fn gat_forward(
     gat_forward_t(g, x, params, normalize, 1)
 }
 
+/// Full-graph mean-aggregator GraphSAGE forward on the sparse path with
+/// `threads` eval threads (0 = auto); returns (logits, hidden reps).
+/// Convenience wrapper over a throwaway [`Workspace`] — see
+/// [`gcn_forward_t`] for when to cache one instead.
+pub fn sage_forward_t(
+    g: &Graph,
+    x: &Matrix,
+    params: &[Matrix],
+    normalize: bool,
+    threads: usize,
+) -> Result<(Matrix, Vec<Matrix>)> {
+    let mut ws = Workspace::new(ModelKind::Sage, g);
+    ws.forward(x, params, normalize, threads)?;
+    Ok(ws.take_outputs())
+}
+
+/// Full-graph GraphSAGE forward (single-threaded convenience wrapper).
+pub fn sage_forward(
+    g: &Graph,
+    x: &Matrix,
+    params: &[Matrix],
+    normalize: bool,
+) -> Result<(Matrix, Vec<Matrix>)> {
+    sage_forward_t(g, x, params, normalize, 1)
+}
+
 /// Dispatch on model kind with an explicit eval thread count (0 = auto).
 pub fn forward_t(
     kind: ModelKind,
@@ -354,6 +428,7 @@ pub fn forward_t(
     match kind {
         ModelKind::Gcn => gcn_forward_t(g, x, params, normalize, threads),
         ModelKind::Gat => gat_forward_t(g, x, params, normalize, threads),
+        ModelKind::Sage => sage_forward_t(g, x, params, normalize, threads),
     }
 }
 
@@ -382,6 +457,9 @@ pub fn init_params_for_dims(kind: ModelKind, dims: &[usize], rng: &mut Rng) -> V
         if kind == ModelKind::Gat {
             out.push(Matrix::from_fn(1, w[1], |_, _| 0.1 * rng.normal()));
             out.push(Matrix::from_fn(1, w[1], |_, _| 0.1 * rng.normal()));
+        }
+        if kind == ModelKind::Sage {
+            out.push(Matrix::glorot(w[0], w[1], rng));
         }
     }
     out
@@ -490,6 +568,44 @@ mod tests {
         let flat = vec![Matrix::zeros(2, 2); 4];
         assert_eq!(layer_views(ModelKind::Gcn, &flat).unwrap().len(), 2);
         assert_eq!(layer_views(ModelKind::Gat, &flat).unwrap().len(), 1);
+        assert!(layer_views(ModelKind::Sage, &flat).is_err());
+        let flat = vec![Matrix::zeros(2, 2); 6];
+        let views = layer_views(ModelKind::Sage, &flat).unwrap();
+        assert_eq!(views.len(), 2);
+        assert!(views[0].w_nb.is_some());
+    }
+
+    #[test]
+    fn sage_isolated_node_sees_only_itself() {
+        // node 2 has no neighbors: its output must be exactly
+        // x W_self + b (zero neighbor aggregate, no self-loop in P).
+        let g = Graph::from_edges(3, &[(0, 1)]);
+        let x = Matrix::from_vec(3, 2, vec![1., 0., 0., 1., 2., 3.]);
+        let mut rng = Rng::new(13);
+        let params = init_params(ModelKind::Sage, &[2, 2], &mut rng);
+        let (logits, _) = sage_forward(&g, &x, &params, false).unwrap();
+        let w = &params[0];
+        let want0 = 2.0 * w.get(0, 0) + 3.0 * w.get(1, 0);
+        let want1 = 2.0 * w.get(0, 1) + 3.0 * w.get(1, 1);
+        assert!((logits.get(2, 0) - want0).abs() < 1e-5);
+        assert!((logits.get(2, 1) - want1).abs() < 1e-5);
+    }
+
+    #[test]
+    fn sage_mean_csr_rows_average_neighbors() {
+        let ds = load("karate", 0).unwrap();
+        let g = &ds.graph;
+        let p = sage_mean_csr(g);
+        assert_eq!(p.nnz(), g.targets.len());
+        for v in 0..g.n() {
+            let deg = g.degree(v);
+            let sum = p.row_sums()[v];
+            if deg == 0 {
+                assert_eq!(sum, 0.0);
+            } else {
+                assert!((sum - 1.0).abs() < 1e-5, "row {v} sums to {sum}");
+            }
+        }
     }
 
     #[test]
@@ -523,7 +639,7 @@ mod tests {
     fn sparse_forward_matches_reference_on_karate() {
         let ds = load("karate", 0).unwrap();
         let mut rng = Rng::new(8);
-        for kind in [ModelKind::Gcn, ModelKind::Gat] {
+        for kind in [ModelKind::Gcn, ModelKind::Gat, ModelKind::Sage] {
             let params = init_params(kind, &[16, 8, 4], &mut rng);
             let (want, want_h) =
                 reference::forward_dense(kind, &ds.graph, &ds.features, &params, true).unwrap();

@@ -148,6 +148,67 @@ pub fn gat_forward_dense(
     Ok((h, hidden))
 }
 
+/// Dense-loop mean-aggregator GraphSAGE forward — the reference oracle
+/// for [`super::sage_forward_t`] and the sampled block forward
+/// ([`crate::sample`]).  Unlike the GCN/GAT oracles this is not seed
+/// code (SAGE arrived with the sampling subsystem), but it follows the
+/// same per-node literal-transcription style: neighbor mean in
+/// ascending id order, then the self transform, then the bias.
+pub fn sage_forward_dense(
+    g: &Graph,
+    x: &Matrix,
+    params: &[Matrix],
+    normalize: bool,
+) -> Result<(Matrix, Vec<Matrix>)> {
+    let layers = layer_views(ModelKind::Sage, params)?;
+    let n = g.n();
+    if x.rows != n {
+        return Err(eyre!("features rows {} != n {n}", x.rows));
+    }
+    let mut h = x.clone();
+    let mut hidden = Vec::new();
+    for (l, layer) in layers.iter().enumerate() {
+        let last = l == layers.len() - 1;
+        let t_self = h.matmul(layer.w); // (n, d')
+        // lint:allow(D002, SAGE reference path is only invoked with layer views built with w_nb present)
+        let t_nb = h.matmul(layer.w_nb.unwrap()); // (n, d')
+        let d_out = t_self.cols;
+        let mut z = Matrix::zeros(n, d_out);
+        for v in 0..n {
+            let deg = g.degree(v);
+            {
+                let zrow = z.row_mut(v);
+                if deg > 0 {
+                    let inv = 1.0 / deg as f32;
+                    for &u in g.neighbors(v) {
+                        for (o, tval) in zrow.iter_mut().zip(t_nb.row(u as usize)) {
+                            *o += inv * tval;
+                        }
+                    }
+                }
+            }
+            let zrow = z.row_mut(v);
+            for (o, tval) in zrow.iter_mut().zip(t_self.row(v)) {
+                *o += tval;
+            }
+            for (o, bv) in zrow.iter_mut().zip(&layer.b.data) {
+                *o += bv;
+            }
+        }
+        if !last {
+            for v in &mut z.data {
+                *v = v.max(0.0); // relu
+            }
+            if normalize {
+                l2_normalize_rows(&mut z);
+            }
+            hidden.push(z.clone());
+        }
+        h = z;
+    }
+    Ok((h, hidden))
+}
+
 /// Dispatch on model kind (reference path).
 pub fn forward_dense(
     kind: ModelKind,
@@ -159,5 +220,6 @@ pub fn forward_dense(
     match kind {
         ModelKind::Gcn => gcn_forward_dense(g, x, params, normalize),
         ModelKind::Gat => gat_forward_dense(g, x, params, normalize),
+        ModelKind::Sage => sage_forward_dense(g, x, params, normalize),
     }
 }

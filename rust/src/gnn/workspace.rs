@@ -32,7 +32,8 @@ use crate::{eyre, Result};
 
 use super::{
     add_bias_rows, check_layer_shapes, dot, elu, gat_attention_values, gat_structure_csr,
-    gcn_prop_csr, l2_normalize_rows, layer_views, resolve_eval_threads, ModelKind,
+    gcn_prop_csr, l2_normalize_rows, layer_views, resolve_eval_threads, sage_mean_csr,
+    ModelKind,
 };
 
 /// Monotonic counters describing how much one-time work a workspace has
@@ -57,10 +58,15 @@ pub struct Workspace {
     n: usize,
     /// GCN: the normalized propagation CSR (values fixed).  GAT: the
     /// A + I structure whose values each layer overwrites with its
-    /// softmax coefficients.
+    /// softmax coefficients.  SAGE: the self-loop-free 1/deg
+    /// neighbor-mean CSR (values fixed).
     structure: CsrMatrix,
-    /// Per-layer transform output `h @ w` (n × d_out).
+    /// Per-layer transform output `h @ w` (n × d_out); for SAGE this
+    /// holds the *neighbor* transform `h @ w_nb` (the spmm input).
     t: Vec<Matrix>,
+    /// SAGE-only per-layer self-transform scratch `h @ w`, accumulated
+    /// into `z[l]` after the neighbor spmm (empty for GCN/GAT).
+    t_self: Vec<Matrix>,
     /// Per-layer aggregate output (n × d_out); `z[l]` after activation
     /// is layer l's hidden representation and layer l+1's input, and
     /// `z[L-1]` is the logits.
@@ -79,12 +85,14 @@ impl Workspace {
         let structure = match kind {
             ModelKind::Gcn => gcn_prop_csr(g),
             ModelKind::Gat => gat_structure_csr(g),
+            ModelKind::Sage => sage_mean_csr(g),
         };
         Workspace {
             kind,
             n: g.n(),
             structure,
             t: Vec::new(),
+            t_self: Vec::new(),
             z: Vec::new(),
             s_src: Vec::new(),
             s_dst: Vec::new(),
@@ -149,6 +157,7 @@ impl Workspace {
     pub fn take_outputs(&mut self) -> (Matrix, Vec<Matrix>) {
         let mut z = std::mem::take(&mut self.z);
         self.t = Vec::new();
+        self.t_self = Vec::new();
         // lint:allow(D002, API misuse guard; taking outputs before any forward is a programmer error worth a loud stop)
         let logits = z.pop().expect("take_outputs before any forward");
         (logits, z)
@@ -157,12 +166,20 @@ impl Workspace {
     /// Make sure `t[l]`/`z[l]` exist with shape (n, cols); count every
     /// real allocation.
     fn ensure_layer_scratch(&mut self, l: usize, cols: usize) {
-        for buf in [&mut self.t, &mut self.z] {
+        let n = self.n;
+        let sage = self.kind == ModelKind::Sage;
+        for (i, buf) in [&mut self.t, &mut self.z, &mut self.t_self]
+            .into_iter()
+            .enumerate()
+        {
+            if i == 2 && !sage {
+                continue;
+            }
             if buf.len() <= l {
-                buf.push(Matrix::zeros(self.n, cols));
+                buf.push(Matrix::zeros(n, cols));
                 self.stats.scratch_allocs += 1;
-            } else if buf[l].rows != self.n || buf[l].cols != cols {
-                buf[l] = Matrix::zeros(self.n, cols);
+            } else if buf[l].rows != n || buf[l].cols != cols {
+                buf[l] = Matrix::zeros(n, cols);
                 self.stats.scratch_allocs += 1;
             }
         }
@@ -189,6 +206,7 @@ impl Workspace {
         let threads = resolve_eval_threads(threads, n);
         // drop stale deeper layers if the model shrank
         self.t.truncate(layers.len());
+        self.t_self.truncate(layers.len());
         self.z.truncate(layers.len());
         for (l, layer) in layers.iter().enumerate() {
             let last = l == layers.len() - 1;
@@ -198,7 +216,16 @@ impl Workspace {
             check_layer_shapes_cols(l, self.kind, in_cols, layer)?;
             self.ensure_layer_scratch(l, layer.w.cols);
             let h: &Matrix = if l == 0 { x } else { &self.z[l - 1] };
-            par_matmul_into(h, layer.w, &mut self.t[l], threads);
+            if self.kind == ModelKind::Sage {
+                // lint:allow(D002, the SAGE branch only sees layer views built with a neighbor transform present)
+                let w_nb = layer.w_nb.expect("SAGE layer views carry w_nb");
+                // t[l] feeds the neighbor-mean spmm; the self transform
+                // lands in t_self[l] and accumulates after the spmm
+                par_matmul_into(h, w_nb, &mut self.t[l], threads);
+                par_matmul_into(h, layer.w, &mut self.t_self[l], threads);
+            } else {
+                par_matmul_into(h, layer.w, &mut self.t[l], threads);
+            }
             if self.kind == ModelKind::Gat {
                 // lint:allow(D002, the GAT branch only sees layer views built with attention vectors present)
                 let a_src = layer.a_src.expect("GAT layer views carry attention vectors");
@@ -218,10 +245,19 @@ impl Workspace {
             self.structure
                 .spmm_into_threaded(&self.t[l], &mut self.z[l], threads)?;
             let z = &mut self.z[l];
+            if self.kind == ModelKind::Sage {
+                // summation-order contract (see `sage_mean_csr`):
+                // neighbor mean first (the spmm), then the self
+                // transform, then the bias — the sampled block forward
+                // reproduces exactly this order
+                for (o, v) in z.data.iter_mut().zip(&self.t_self[l].data) {
+                    *o += *v;
+                }
+            }
             add_bias_rows(z, &layer.b.data);
             if !last {
                 match self.kind {
-                    ModelKind::Gcn => {
+                    ModelKind::Gcn | ModelKind::Sage => {
                         for v in &mut z.data {
                             *v = v.max(0.0); // relu
                         }
@@ -272,7 +308,7 @@ mod tests {
     #[test]
     fn workspace_forward_matches_fresh_forward_bitwise() {
         let ds = load("karate", 0).unwrap();
-        for kind in [ModelKind::Gcn, ModelKind::Gat] {
+        for kind in [ModelKind::Gcn, ModelKind::Gat, ModelKind::Sage] {
             let mut rng = Rng::new(21);
             let params = init_params(kind, &[16, 8, 4], &mut rng);
             let (want, want_h) =
@@ -298,7 +334,7 @@ mod tests {
     #[test]
     fn steady_state_is_zero_rebuild_zero_alloc() {
         let ds = load("karate", 0).unwrap();
-        for kind in [ModelKind::Gcn, ModelKind::Gat] {
+        for kind in [ModelKind::Gcn, ModelKind::Gat, ModelKind::Sage] {
             let mut rng = Rng::new(5);
             let params = init_params(kind, &[16, 8, 4], &mut rng);
             let mut ws = Workspace::new(kind, &ds.graph);

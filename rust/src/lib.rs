@@ -147,6 +147,24 @@
 //! against a daemon), `digest serve <model>... [--watch FILE]`, and
 //! `digest query [--list|--stats|--reload|--shutdown]`.
 //!
+//! ## Sampling-based training (`digest::sample`)
+//!
+//! `method=sampled` trades full-graph epochs for mini-batch
+//! neighbor-sampled GraphSAGE (mean aggregator,
+//! [`gnn::ModelKind::Sage`]): each round every worker draws a seeded,
+//! partition-aware sample ([`sample::BlockSampler`] — local neighbors
+//! preferred under the fanout budget, bit-identical at any thread
+//! count), gathers exact layer-0 features (local rows directly, remote
+//! rows through a per-worker LFU [`sample::FeatureCache`] over
+//! [`kvs::RepStore::pull_into`]), and runs the allocation-free
+//! [`sample::BlockForward`] forward/backward.  The cache changes
+//! *traffic*, never *math* — hits/misses/bytes are first-class
+//! telemetry columns (`cache_*`).  [`sample::SampledSession`] is a full
+//! [`coordinator::session::TrainSession`]: v2-checkpoint bit-exact
+//! resume (worker RNG streams + cache tables ride in `extra`), hooks,
+//! streaming CSV.  Serving-side, [`serve::NodeQuery::fanouts`] turns a
+//! node query into seed-node-only sampled inference on the same engine.
+//!
 //! ## Correctness tooling
 //!
 //! The determinism / panic-freedom / unsafe-hygiene invariants above are
@@ -175,6 +193,7 @@
 //! | [`coordinator`] | sessions, hooks/driver, sync/async schedulers, parallel engine, telemetry |
 //! | [`coordinator::dist`] | process-per-partition training: `ps-serve` daemon, socket-backed rep/param backends, delta/f16 wire codec, worker leases + reply-log replay |
 //! | [`coordinator::dist::faultpoint`] | deterministic fault injection: frame-counter-keyed kill/truncate/down/delay plans (`DIGEST_FAULT_PLAN`) |
+//! | [`sample`] | mini-batch neighbor sampling: seeded block sampler, SAGE block forward/backward, LFU remote-feature cache, `SampledSession` |
 //! | [`serve`] | sealed model artifacts, pool-aware multi-model inference engine, registry |
 //! | [`serve::net`] | `digest serve` TCP daemon: `digest-wire-v1` codec, bounded handlers, client + load bench |
 //! | [`baselines`] | LLCG-like and DGL-like comparison frameworks (sessions too) |
@@ -192,6 +211,7 @@ pub mod kvs;
 pub mod partition;
 pub mod ps;
 pub mod runtime;
+pub mod sample;
 pub mod serve;
 pub mod tensor;
 pub mod util;

@@ -68,7 +68,9 @@ fn usage() -> String {
      \x20              --max-restarts, relaunches crashed workers; fault\n\
      \x20              knobs: dist.on_worker_loss=abort|wait|continue\n\
      \x20              dist.loss_grace= dist.io_timeout= dist.connect_retries=\n\
-     \x20              dist.backoff_ms=, chaos plans via DIGEST_FAULT_PLAN)\n\
+     \x20              dist.backoff_ms=, chaos plans via DIGEST_FAULT_PLAN;\n\
+     \x20              mini-batch sampling: method=sampled model=sage\n\
+     \x20              fanouts=10,25 batch_size=32 cache_nodes=1024 hidden=16)\n\
      digest ps-serve [--addr H:P] [--config file.json] [--csv out.csv] [key=value ...]\n\
      \x20             (training-plane daemon: hosts KVS + param server and\n\
      \x20              waits for `parts` workers; save_to= writes the final\n\
@@ -81,6 +83,8 @@ fn usage() -> String {
      \x20             [--artifact-dir DIR]\n\
      digest predict <model.json> [--nodes 0,1,2 | --split train|val|test|all]\n\
      \x20             [--topk K] [--seed N] [--threads T] [--out report.json]\n\
+     \x20             [--fanouts 10,25]  (SAGE models: neighbor-sampled\n\
+     \x20              seed-node inference instead of the full-graph forward)\n\
      digest bench-serve <model.json> [<model2.json> ...] [--iters N] [--threads T]\n\
      \x20             [--seed N] [--json out.json]\n\
      digest bench-serve --remote [--addr H:P] [--model NAME] [--clients C]\n\
@@ -641,6 +645,14 @@ fn cmd_predict(mut args: Vec<String>) -> Result<()> {
     let nodes_opt = take_opt(&mut args, "--nodes");
     let split_opt = take_opt(&mut args, "--split");
     let out_opt = take_opt(&mut args, "--out");
+    let fanouts_opt: Option<Vec<usize>> = match take_opt(&mut args, "--fanouts") {
+        Some(s) => Some(
+            s.split(',')
+                .map(|t| t.trim().parse().map_err(|e| eyre!("--fanouts {t:?}: {e}")))
+                .collect::<Result<_>>()?,
+        ),
+        None => None,
+    };
     if nodes_opt.is_some() && split_opt.is_some() {
         return Err(eyre!(
             "--nodes and --split are mutually exclusive (pass one node selection)"
@@ -668,6 +680,10 @@ fn cmd_predict(mut args: Vec<String>) -> Result<()> {
         }
     }
     .with_top_k(topk);
+    let query = match fanouts_opt {
+        Some(f) => query.with_fanouts(f),
+        None => query,
+    };
     let pred = engine.predict(&model, &query)?;
     println!(
         "model {:?} ({} {}, exported at epoch {}, val F1 {:.4})",

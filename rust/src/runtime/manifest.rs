@@ -130,7 +130,11 @@ impl ArtifactSpec {
 
     /// Number of parameter tensors.
     pub fn n_params(&self) -> usize {
-        let ppl = if self.model == "gat" { 4 } else { 2 };
+        let ppl = match self.model.as_str() {
+            "gat" => 4,
+            "sage" => 3,
+            _ => 2,
+        };
         self.layers * ppl
     }
 

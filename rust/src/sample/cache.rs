@@ -1,0 +1,258 @@
+//! Frequency-tracked cache of remote layer-0 feature rows.
+//!
+//! During sampled training every worker owns its partition's feature
+//! rows outright (read straight from the dataset) but must fetch rows
+//! for cross-partition neighbors through the representation plane
+//! ([`crate::kvs::RepStore::pull_into`]).  This cache sits in front of
+//! those pulls: hot remote rows are kept locally, and admission is
+//! frequency-gated (LFU with lowest-slot tie-break) so one cold scan
+//! cannot evict the working set.
+//!
+//! Feature rows are **immutable** for the lifetime of a run, so a hit
+//! is always exact — the cache changes *traffic*, never *math*.  The
+//! hit/miss/byte counters feed the `cache_*` telemetry columns, and
+//! the slot table serializes into the checkpoint so a resumed run
+//! replays the same hit sequence an uninterrupted run would have seen.
+
+use crate::tensor::Matrix;
+use crate::util::json::Json;
+use crate::{eyre, Result};
+
+/// Sentinel for "node is not cached" in the slot map.
+const NO_SLOT: u32 = u32::MAX;
+
+/// LFU cache of remote feature rows (one per worker; single-threaded).
+pub struct FeatureCache {
+    /// Max rows cached; 0 disables the cache entirely.
+    cap: usize,
+    /// Row width (d_in).
+    d: usize,
+    /// node id -> occupied slot, or [`NO_SLOT`].
+    slot_of: Vec<u32>,
+    /// slot -> node id, in slot order (`len()` = filled slots).
+    slot_node: Vec<u32>,
+    /// Flat row storage, `cap * d` once the first row lands.
+    rows: Vec<f32>,
+    /// Access frequency per node (hits and misses both count: a miss
+    /// is still evidence the row is wanted).
+    freq: Vec<u32>,
+    pub hits: u64,
+    pub misses: u64,
+    /// Bytes pulled through the representation plane on misses.
+    pub bytes: u64,
+}
+
+impl FeatureCache {
+    pub fn new(n: usize, d: usize, cap: usize) -> Self {
+        FeatureCache {
+            cap,
+            d,
+            slot_of: vec![NO_SLOT; n],
+            slot_node: Vec::new(),
+            rows: Vec::new(),
+            freq: vec![0; n],
+            hits: 0,
+            misses: 0,
+            bytes: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slot_node.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slot_node.is_empty()
+    }
+
+    /// Record an access to node `u` and copy its row into `out` on a
+    /// hit.  Returns `true` on hit; on a miss the caller pulls the row
+    /// remotely and offers it back via [`FeatureCache::admit`].
+    pub fn lookup(&mut self, u: u32, out: &mut [f32]) -> bool {
+        let ui = u as usize;
+        self.freq[ui] = self.freq[ui].saturating_add(1);
+        let slot = self.slot_of[ui];
+        if slot == NO_SLOT {
+            self.misses += 1;
+            return false;
+        }
+        self.hits += 1;
+        let s = slot as usize;
+        out.copy_from_slice(&self.rows[s * self.d..(s + 1) * self.d]);
+        true
+    }
+
+    /// Offer a freshly pulled row for caching.  Admission is
+    /// frequency-gated: a free slot always takes the row; a full cache
+    /// evicts its least-frequent resident (lowest slot on ties) only if
+    /// the newcomer is strictly more frequent.
+    pub fn admit(&mut self, u: u32, row: &[f32]) {
+        if self.cap == 0 || self.slot_of[u as usize] != NO_SLOT {
+            return;
+        }
+        debug_assert_eq!(row.len(), self.d);
+        if self.slot_node.len() < self.cap {
+            let slot = self.slot_node.len();
+            self.slot_node.push(u);
+            self.slot_of[u as usize] = slot as u32;
+            self.rows.extend_from_slice(row);
+            return;
+        }
+        let mut victim = 0usize;
+        for (s, &node) in self.slot_node.iter().enumerate() {
+            if self.freq[node as usize] < self.freq[self.slot_node[victim] as usize] {
+                victim = s;
+            }
+        }
+        let old = self.slot_node[victim];
+        if self.freq[u as usize] <= self.freq[old as usize] {
+            return;
+        }
+        self.slot_of[old as usize] = NO_SLOT;
+        self.slot_of[u as usize] = victim as u32;
+        self.slot_node[victim] = u;
+        self.rows[victim * self.d..(victim + 1) * self.d].copy_from_slice(row);
+    }
+
+    /// Checkpoint form: slot table in slot order plus the sparse
+    /// frequency table and the traffic counters.  Row *contents* are
+    /// deliberately not serialized — features are immutable, so resume
+    /// re-materializes them from the dataset without touching the
+    /// representation plane (and without perturbing its metrics).
+    pub fn export_json(&self) -> Json {
+        let freq: Vec<Json> = self
+            .freq
+            .iter()
+            .enumerate()
+            .filter(|&(_, &f)| f > 0)
+            .map(|(v, &f)| Json::Arr(vec![Json::uint(v as u64), Json::uint(f as u64)]))
+            .collect();
+        Json::obj(vec![
+            (
+                "slots",
+                Json::Arr(self.slot_node.iter().map(|&v| Json::uint(v as u64)).collect()),
+            ),
+            ("freq", Json::Arr(freq)),
+            ("hits", Json::uint(self.hits)),
+            ("misses", Json::uint(self.misses)),
+            ("bytes", Json::uint(self.bytes)),
+        ])
+    }
+
+    /// Restore from [`FeatureCache::export_json`], re-materializing row
+    /// contents from `features` (the immutable source of truth).
+    pub fn import_json(&mut self, j: &Json, features: &Matrix) -> Result<()> {
+        self.slot_node.clear();
+        self.rows.clear();
+        self.slot_of.fill(NO_SLOT);
+        self.freq.fill(0);
+        for e in j.get("freq")?.as_arr()? {
+            let pair = e.as_arr()?;
+            if pair.len() != 2 {
+                return Err(eyre!("cache freq entry is not a [node, count] pair"));
+            }
+            let v = pair[0].as_usize()?;
+            if v >= self.freq.len() {
+                return Err(eyre!("cache freq node {v} out of range"));
+            }
+            self.freq[v] = pair[1].as_u64()? as u32;
+        }
+        for s in j.get("slots")?.as_arr()? {
+            let v = s.as_usize()?;
+            if v >= self.slot_of.len() {
+                return Err(eyre!("cached node {v} out of range"));
+            }
+            if self.slot_node.len() >= self.cap {
+                return Err(eyre!(
+                    "checkpoint caches {} rows but cache_nodes is {}",
+                    self.slot_node.len() + 1,
+                    self.cap
+                ));
+            }
+            self.slot_of[v] = self.slot_node.len() as u32;
+            self.slot_node.push(v as u32);
+            self.rows.extend_from_slice(features.row(v));
+        }
+        self.hits = j.get("hits")?.as_u64()?;
+        self.misses = j.get("misses")?.as_u64()?;
+        self.bytes = j.get("bytes")?.as_u64()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(v: f32, d: usize) -> Vec<f32> {
+        vec![v; d]
+    }
+
+    #[test]
+    fn lfu_admission_and_eviction() {
+        let d = 4;
+        let mut c = FeatureCache::new(10, d, 2);
+        let mut out = vec![0.0; d];
+        // two misses fill the cache
+        assert!(!c.lookup(1, &mut out));
+        c.admit(1, &row(1.0, d));
+        assert!(!c.lookup(2, &mut out));
+        c.admit(2, &row(2.0, d));
+        assert!(c.lookup(1, &mut out));
+        assert_eq!(out, row(1.0, d));
+        // node 3 (freq 1) cannot evict node 2 (freq 1): not strictly hotter
+        assert!(!c.lookup(3, &mut out));
+        c.admit(3, &row(3.0, d));
+        assert!(!c.lookup(3, &mut out));
+        // ...but after enough misses it out-ranks node 2 (freq 1 < 3)
+        assert!(!c.lookup(3, &mut out));
+        c.admit(3, &row(3.0, d));
+        assert!(c.lookup(3, &mut out));
+        assert_eq!(out, row(3.0, d));
+        // node 1 (freq 2 + this lookup) survived; node 2 was the victim
+        assert!(c.lookup(1, &mut out));
+        assert!(!c.lookup(2, &mut out));
+        assert_eq!(c.hits, 3);
+        assert_eq!(c.misses, 6);
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let d = 2;
+        let mut c = FeatureCache::new(4, d, 0);
+        let mut out = vec![0.0; d];
+        for _ in 0..3 {
+            assert!(!c.lookup(0, &mut out));
+            c.admit(0, &row(9.0, d));
+        }
+        assert_eq!(c.hits, 0);
+        assert_eq!(c.misses, 3);
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn json_round_trip_restores_slots_freq_and_counters() {
+        let d = 3;
+        let features = Matrix::from_fn(6, d, |r, c| (r * d + c) as f32);
+        let mut c = FeatureCache::new(6, d, 3);
+        let mut out = vec![0.0; d];
+        for u in [4u32, 2, 4, 5] {
+            if !c.lookup(u, &mut out) {
+                c.admit(u, features.row(u as usize));
+            }
+        }
+        c.bytes = 36;
+        let j = c.export_json();
+        let mut c2 = FeatureCache::new(6, d, 3);
+        c2.import_json(&j, &features).unwrap();
+        assert_eq!(c2.len(), 3);
+        assert_eq!((c2.hits, c2.misses, c2.bytes), (c.hits, c.misses, c.bytes));
+        // restored rows serve hits with the exact feature bits
+        assert!(c2.lookup(4, &mut out));
+        assert_eq!(out, features.row(4));
+        // slot order survived (slot 0 is still node 4)
+        assert_eq!(c2.export_json().get("slots").unwrap().as_arr().unwrap()[0]
+            .as_usize()
+            .unwrap(), 4);
+    }
+}

@@ -36,7 +36,7 @@ use crate::runtime::{
 };
 use crate::tensor::pool::ChunkPool;
 use crate::tensor::Matrix;
-use crate::util::lock_unpoisoned;
+use crate::util::{domain_seed, lock_unpoisoned, Rng};
 use crate::{eyre, Result};
 
 use super::model::InferenceModel;
@@ -50,6 +50,9 @@ pub struct NodeQuery {
     /// 0 = argmax only; k > 0 additionally returns the top-k
     /// (class, logit) list per queried node.
     top_k: usize,
+    /// Some = serve through the neighbor-sampled SAGE path with these
+    /// per-layer fanouts instead of the full-graph forward.
+    fanouts: Option<Vec<usize>>,
 }
 
 impl NodeQuery {
@@ -63,6 +66,7 @@ impl NodeQuery {
         NodeQuery {
             nodes: Some(ids),
             top_k: 0,
+            fanouts: None,
         }
     }
 
@@ -72,12 +76,25 @@ impl NodeQuery {
         self
     }
 
+    /// Serve this query through neighbor-sampled inference (SAGE models
+    /// only): the forward touches just the sampled receptive field of
+    /// the queried seed nodes instead of the whole graph.  `fanouts` is
+    /// per-layer, input side first, and must match the model's depth.
+    pub fn with_fanouts(mut self, fanouts: Vec<usize>) -> Self {
+        self.fanouts = Some(fanouts);
+        self
+    }
+
     pub fn queried(&self) -> Option<&[usize]> {
         self.nodes.as_deref()
     }
 
     pub fn top_k(&self) -> usize {
         self.top_k
+    }
+
+    pub fn fanouts(&self) -> Option<&[usize]> {
+        self.fanouts.as_deref()
     }
 }
 
@@ -121,11 +138,27 @@ pub struct EngineStats {
     pub predictions: u64,
     /// `predict_many` batches served.
     pub batches: u64,
+    /// Predictions that ran through the neighbor-sampled SAGE path
+    /// (subset of `predictions`; these never touch the workspace pool,
+    /// so they can't bump `structure_builds`).
+    pub sampled: u64,
 }
 
 /// Workspaces kept pooled per model kind; extras built under concurrent
 /// load are dropped on return rather than hoarded.
 const MAX_POOLED_PER_KIND: usize = 4;
+
+/// Long-lived scratch for the neighbor-sampled serving path: the block
+/// sampler, the SAGE block forward, and a node→row map that resets in
+/// O(batch).  Built lazily on the first sampled query and reused after,
+/// so warm sampled predicts rebuild no structure and (for stable batch
+/// shapes) allocate nothing.
+struct SampleScratch {
+    sampler: crate::sample::BlockSampler,
+    fw: crate::sample::BlockForward,
+    seeds: Vec<u32>,
+    row_of: Vec<u32>,
+}
 
 /// Pool-aware inference engine over one graph.  See the module docs.
 pub struct InferenceEngine {
@@ -139,6 +172,7 @@ pub struct InferenceEngine {
     /// callers (training eval) pass their own to [`Self::forward_raw`].
     threads: usize,
     pool: Mutex<Vec<Workspace>>,
+    sample: Mutex<Option<SampleScratch>>,
     counters: Mutex<EngineStats>,
 }
 
@@ -152,6 +186,7 @@ impl InferenceEngine {
             fingerprint: OnceLock::new(),
             threads: 0,
             pool: Mutex::new(Vec::new()),
+            sample: Mutex::new(None),
             counters: Mutex::new(EngineStats::default()),
         }
     }
@@ -350,11 +385,24 @@ impl InferenceEngine {
         nodes: Vec<usize>,
         logits: &Matrix,
     ) -> Prediction {
-        let n_class = logits.cols;
-        let mut sub = Matrix::zeros(nodes.len(), n_class);
+        let mut sub = Matrix::zeros(nodes.len(), logits.cols);
         for (i, &v) in nodes.iter().enumerate() {
             sub.copy_row_from(i, logits.row(v));
         }
+        self.prediction_from_sub(model, q, nodes, sub)
+    }
+
+    /// Derive argmax / top-k from already-gathered per-query-row logits
+    /// (shared by the full-graph and the sampled paths, so the two can
+    /// never disagree on ranking rules).
+    fn prediction_from_sub(
+        &self,
+        model: &InferenceModel,
+        q: &NodeQuery,
+        nodes: Vec<usize>,
+        sub: Matrix,
+    ) -> Prediction {
+        let n_class = sub.cols;
         let mut classes = sub.argmax_rows();
         let top_k: Vec<Vec<(usize, f32)>> = if q.top_k() == 0 {
             Vec::new()
@@ -399,16 +447,91 @@ impl InferenceEngine {
     /// thread/pool size (same forward entry point).
     pub fn predict(&self, model: &InferenceModel, q: &NodeQuery) -> Result<Prediction> {
         self.validate_model(model)?;
-        let nodes = self.resolve_nodes(q)?;
-        let pred = self.forward_raw(
-            model.kind(),
-            model.params(),
-            model.normalize(),
-            self.threads,
-            |logits, _| self.prediction_from_logits(model, q, nodes, logits),
-        )?;
+        let pred = if q.fanouts().is_some() {
+            self.sampled_prediction(model, q)?
+        } else {
+            let nodes = self.resolve_nodes(q)?;
+            self.forward_raw(
+                model.kind(),
+                model.params(),
+                model.normalize(),
+                self.threads,
+                |logits, _| self.prediction_from_logits(model, q, nodes, logits),
+            )?
+        };
         lock_unpoisoned(&self.counters).predictions += 1;
         Ok(pred)
+    }
+
+    /// Neighbor-sampled SAGE inference: sample the queried seeds'
+    /// receptive field under the query's fanouts, gather exact feature
+    /// rows, and run the block forward — compute scales with the sample,
+    /// not the graph.  The path never touches the workspace pool (zero
+    /// structure rebuilds by construction) and reuses one long-lived
+    /// scratch across calls.  Fanouts covering every node's degree make
+    /// the result bit-identical to the full-graph forward; the sampling
+    /// stream is a fixed function of the model seed, so equal queries
+    /// return equal predictions.
+    fn sampled_prediction(&self, model: &InferenceModel, q: &NodeQuery) -> Result<Prediction> {
+        let fanouts = q.fanouts().unwrap_or_default();
+        if model.kind() != ModelKind::Sage {
+            return Err(eyre!(
+                "sampled inference needs a SAGE model; {:?} is {}",
+                model.name(),
+                model.kind().as_str()
+            ));
+        }
+        let layers = model.dims().len() - 1;
+        if fanouts.len() != layers {
+            return Err(eyre!(
+                "query has {} fanouts but model {:?} has {} layers",
+                fanouts.len(),
+                model.name(),
+                layers
+            ));
+        }
+        if fanouts.iter().any(|&f| f == 0) {
+            return Err(eyre!("fanouts must be positive, got {fanouts:?}"));
+        }
+        let nodes = self.resolve_nodes(q)?;
+        let d_in = self.ds.features.cols;
+        let mut guard = lock_unpoisoned(&self.sample);
+        let sc = guard.get_or_insert_with(|| SampleScratch {
+            sampler: crate::sample::BlockSampler::new(self.ds.n()),
+            fw: crate::sample::BlockForward::new(),
+            seeds: Vec::new(),
+            row_of: vec![u32::MAX; self.ds.n()],
+        });
+        sc.seeds.clear();
+        sc.seeds.extend(nodes.iter().map(|&v| v as u32));
+        let mut rng = Rng::new(domain_seed(model.seed(), "serve-sample"));
+        sc.sampler
+            .sample_batch(&self.ds.graph, fanouts, &sc.seeds, None, &mut rng);
+        {
+            let src = &sc.sampler.blocks[0].src;
+            let x = sc.fw.input_mut(src.len(), d_in);
+            for (i, &u) in src.iter().enumerate() {
+                x.copy_row_from(i, self.ds.features.row(u as usize));
+            }
+        }
+        sc.fw.forward(&sc.sampler.blocks, model.params())?;
+        let top = &sc.sampler.blocks[sc.sampler.blocks.len() - 1];
+        // seeds dedup into the top block's dst prefix in first-visit
+        // order; map each queried node (duplicates allowed) to its row
+        for (r, &v) in top.src[..top.n_dst].iter().enumerate() {
+            sc.row_of[v as usize] = r as u32;
+        }
+        let logits = sc.fw.logits();
+        let mut sub = Matrix::zeros(nodes.len(), logits.cols);
+        for (i, &v) in nodes.iter().enumerate() {
+            sub.copy_row_from(i, logits.row(sc.row_of[v] as usize));
+        }
+        for &v in &top.src[..top.n_dst] {
+            sc.row_of[v as usize] = u32::MAX;
+        }
+        drop(guard);
+        lock_unpoisoned(&self.counters).sampled += 1;
+        Ok(self.prediction_from_sub(model, q, nodes, sub))
     }
 
     /// Serve a batch of requests — typically *different models over the
@@ -427,6 +550,13 @@ impl InferenceEngine {
         }
         let mut out: Vec<Option<Prediction>> = requests.iter().map(|_| None).collect();
         let mut done = vec![false; requests.len()];
+        // sampled requests never share a workspace; serve them up front
+        for (j, (model, q)) in requests.iter().enumerate() {
+            if q.fanouts().is_some() {
+                out[j] = Some(self.sampled_prediction(model, q)?);
+                done[j] = true;
+            }
+        }
         for i in 0..requests.len() {
             if done[i] {
                 continue;
@@ -642,6 +772,66 @@ mod tests {
         let q = NodeQuery::full();
         assert!(e.predict_many(&[(&ok, &q), (&foreign, &q)]).is_err());
         assert_eq!(e.stats().batches, 0);
+    }
+
+    fn sage_model(e: &InferenceEngine, seed: u64) -> InferenceModel {
+        let mut rng = Rng::new(seed);
+        let params = init_params_for_dims(ModelKind::Sage, &[16, 8, 4], &mut rng);
+        InferenceModel::new(
+            "sage",
+            "karate_sage",
+            ModelKind::Sage,
+            "karate",
+            0,
+            vec![16, 8, 4],
+            false,
+            e.fingerprint(),
+            0,
+            0.5,
+            params,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn sampled_predict_with_covering_fanouts_matches_full() {
+        let e = engine();
+        let m = sage_model(&e, 13);
+        let full = e.predict(&m, &NodeQuery::full()).unwrap();
+        let before = e.stats().structure_builds;
+        // karate's max degree is 17, so fanout 64 keeps every neighbor —
+        // the sampled forward must then be bitwise the full-graph one
+        // (duplicate seed 0 exercises the node→row mapping)
+        let q = NodeQuery::nodes(vec![5, 0, 33, 0]).with_fanouts(vec![64, 64]);
+        let s = e.predict(&m, &q).unwrap();
+        assert_eq!(s.nodes, vec![5, 0, 33, 0]);
+        for (i, &v) in s.nodes.iter().enumerate() {
+            assert_eq!(s.logits.row(i), full.logits.row(v));
+            assert_eq!(s.classes[i], full.classes[v]);
+        }
+        // warm sampled predicts reuse the scratch: no structure builds
+        let s2 = e.predict(&m, &q).unwrap();
+        assert_eq!(s2.classes, s.classes);
+        assert_eq!(e.stats().structure_builds, before);
+        assert_eq!(e.stats().sampled, 2);
+    }
+
+    #[test]
+    fn sampled_predict_validates_model_kind_and_fanout_depth() {
+        let e = engine();
+        let sage = sage_model(&e, 14);
+        let err = e
+            .predict(&sage, &NodeQuery::nodes(vec![0]).with_fanouts(vec![5]))
+            .unwrap_err();
+        assert!(err.to_string().contains("fanouts"), "{err}");
+        let gcn = model_for(&e, ModelKind::Gcn, &[16, 8, 4], 15);
+        let err = e
+            .predict(&gcn, &NodeQuery::nodes(vec![0]).with_fanouts(vec![5, 5]))
+            .unwrap_err();
+        assert!(err.to_string().contains("SAGE"), "{err}");
+        assert!(e
+            .predict(&sage, &NodeQuery::nodes(vec![0]).with_fanouts(vec![5, 0]))
+            .is_err());
     }
 
     #[test]

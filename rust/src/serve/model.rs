@@ -55,7 +55,7 @@ pub struct InferenceModel {
 
 /// Parameter-tensor shapes implied by (kind, dims), in flat manifest
 /// order: per layer w (d_l, d_{l+1}), b (1, d_{l+1}) [, a_src, a_dst
-/// (1, d_{l+1})].
+/// (1, d_{l+1}) | w_nb (d_l, d_{l+1})].
 fn expected_shapes(kind: ModelKind, dims: &[usize]) -> Result<Vec<(usize, usize)>> {
     if dims.len() < 2 {
         return Err(eyre!("model needs >= 2 layer dims, got {dims:?}"));
@@ -67,6 +67,9 @@ fn expected_shapes(kind: ModelKind, dims: &[usize]) -> Result<Vec<(usize, usize)
         if kind == ModelKind::Gat {
             out.push((1, w[1]));
             out.push((1, w[1]));
+        }
+        if kind == ModelKind::Sage {
+            out.push((w[0], w[1]));
         }
     }
     Ok(out)
@@ -449,7 +452,7 @@ pub fn dataset_for_artifact(artifact: &str) -> Result<(&'static DatasetSpec, Mod
         .ok_or_else(|| eyre!("artifact name {artifact:?} has no _<model> suffix"))?;
     let kind: ModelKind = kind_str
         .parse()
-        .map_err(|_| eyre!("artifact {artifact:?} does not end in _gcn or _gat"))?;
+        .map_err(|_| eyre!("artifact {artifact:?} does not end in _gcn, _gat, or _sage"))?;
     let spec = SPECS
         .iter()
         .find(|s| s.artifact == prefix)

@@ -203,7 +203,7 @@ const MM_BLOCK: usize = 16;
 /// across the entire k loop; `b`'s rows stream from cache.  Accumulation
 /// over k is in ascending order for every output element regardless of
 /// blocking, which is what keeps the threaded matmul bit-deterministic.
-fn matmul_row(a_row: &[f32], b: &[f32], b_cols: usize, out_row: &mut [f32]) {
+pub(crate) fn matmul_row(a_row: &[f32], b: &[f32], b_cols: usize, out_row: &mut [f32]) {
     let mut j = 0;
     while j < b_cols {
         let blk = MM_BLOCK.min(b_cols - j);

@@ -1,0 +1,193 @@
+//! Integration: mini-batch neighbor-sampled GraphSAGE training
+//! (`method=sampled`) and sampled serving.
+//!
+//! * Thread-count determinism: training at 1/2/4 worker threads yields
+//!   **byte-identical** v2 checkpoints and bit-identical telemetry.
+//! * Checkpoint/resume: train 4 → save → resume 4 reproduces the
+//!   uninterrupted 8-epoch run exactly (losses, F1, vtime, counters).
+//! * The remote-feature cache serves hits and strictly reduces
+//!   cross-partition pull volume — without changing a single bit of the
+//!   numerics (same losses, same final parameters).
+//! * Sampled serving: covering fanouts match the full-graph predict
+//!   bitwise, and warm sampled queries rebuild no structure.
+
+use digest::config::{Method, RunConfig};
+use digest::coordinator::{self, new_session, resume_session, TrainContext, TrainSession as _};
+use digest::ps::checkpoint::Checkpoint;
+use digest::serve::{InferenceEngine, NodeQuery};
+
+fn sampled_cfg(dataset: &str, parts: usize, epochs: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.dataset = dataset.into();
+    cfg.parts = parts;
+    cfg.method = Method::Sampled;
+    cfg.model = digest::gnn::ModelKind::Sage;
+    cfg.epochs = epochs;
+    cfg.eval_every = 2;
+    cfg.fanouts = vec![5, 10];
+    cfg.batch_size = 16;
+    cfg.hidden = vec![16];
+    cfg.seed = 11;
+    cfg
+}
+
+#[test]
+fn sampled_training_is_thread_count_invariant() {
+    let mut reference: Option<(Vec<u8>, coordinator::RunResult)> = None;
+    for threads in [1usize, 2, 4] {
+        let mut cfg = sampled_cfg("arxiv-s", 4, 3);
+        cfg.threads = threads;
+        let ctx = TrainContext::new(cfg).unwrap();
+        let mut s = new_session(&ctx).unwrap();
+        while !s.is_done() {
+            s.step_epoch().unwrap();
+        }
+        let path = std::env::temp_dir().join(format!("digest_sample_threads_{threads}.json"));
+        s.snapshot().unwrap().save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let res = s.finish().unwrap();
+        match &reference {
+            None => reference = Some((bytes, res)),
+            Some((ref_bytes, ref_res)) => {
+                assert_eq!(
+                    &bytes, ref_bytes,
+                    "threads={threads}: checkpoint differs from the 1-thread run"
+                );
+                for (p, q) in ref_res.points.iter().zip(&res.points) {
+                    assert_eq!(p.train_loss.to_bits(), q.train_loss.to_bits());
+                    assert_eq!(p.vtime.to_bits(), q.vtime.to_bits());
+                    assert_eq!(p.cache_hits, q.cache_hits, "threads={threads}");
+                    assert_eq!(p.cache_bytes, q.cache_bytes, "threads={threads}");
+                }
+                for (x, y) in ref_res.final_params.iter().zip(&res.final_params) {
+                    assert_eq!(x.data, y.data, "threads={threads}: final params");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sampled_checkpoint_resume_equals_continuous() {
+    let cfg = sampled_cfg("arxiv-s", 4, 8);
+
+    let ctx_c = TrainContext::new(cfg.clone()).unwrap();
+    let continuous = coordinator::run_with_context(&ctx_c).unwrap();
+    assert_eq!(continuous.method, "sampled");
+
+    let ctx_a = TrainContext::new(cfg.clone()).unwrap();
+    let mut first = new_session(&ctx_a).unwrap();
+    for _ in 0..4 {
+        first.step_epoch().unwrap();
+    }
+    let path = std::env::temp_dir().join("digest_sample_resume.json");
+    first.snapshot().unwrap().save(&path).unwrap();
+
+    let back = Checkpoint::load(&path).unwrap();
+    assert_eq!(back.epoch, 4);
+    let ctx_b = TrainContext::new(cfg).unwrap();
+    let mut second = resume_session(&ctx_b, &back).unwrap();
+    assert_eq!(second.epochs_done(), 4);
+    while !second.is_done() {
+        second.step_epoch().unwrap();
+    }
+    let resumed = second.finish().unwrap();
+
+    assert_eq!(resumed.points.len(), 4);
+    for (p, q) in continuous.points[4..].iter().zip(&resumed.points) {
+        assert_eq!(p.epoch, q.epoch);
+        assert_eq!(p.train_loss.to_bits(), q.train_loss.to_bits(), "epoch {}", p.epoch);
+        assert_eq!(p.val_f1.to_bits(), q.val_f1.to_bits());
+        assert_eq!(p.vtime.to_bits(), q.vtime.to_bits());
+        assert_eq!(p.kvs_bytes, q.kvs_bytes);
+        assert_eq!(p.ps_bytes, q.ps_bytes);
+        // the resumed caches replay the same hit/miss stream
+        assert_eq!(p.cache_hits, q.cache_hits, "epoch {}", p.epoch);
+        assert_eq!(p.cache_misses, q.cache_misses);
+        assert_eq!(p.cache_bytes, q.cache_bytes);
+    }
+    for (x, y) in continuous.final_params.iter().zip(&resumed.final_params) {
+        assert_eq!(x.data, y.data, "final params");
+    }
+    assert_eq!(continuous.final_val_f1.to_bits(), resumed.final_val_f1.to_bits());
+    assert_eq!(continuous.best_val_f1.to_bits(), resumed.best_val_f1.to_bits());
+    assert_eq!(continuous.total_vtime.to_bits(), resumed.total_vtime.to_bits());
+    assert_eq!(continuous.kvs, resumed.kvs, "KVS counters");
+}
+
+#[test]
+fn cache_reduces_remote_pulls_without_touching_math() {
+    let run = |cache_nodes: usize| {
+        let mut cfg = sampled_cfg("arxiv-s", 4, 4);
+        cfg.cache_nodes = cache_nodes;
+        let ctx = TrainContext::new(cfg).unwrap();
+        coordinator::run_with_context(&ctx).unwrap()
+    };
+    let cold = run(0);
+    let warm = run(4096);
+
+    let last = warm.points.last().unwrap();
+    assert!(last.cache_hits > 0, "cache never hit: {last:?}");
+    assert_eq!(cold.points.last().unwrap().cache_hits, 0, "cache_nodes=0 must disable");
+
+    // fewer remote feature rows actually crossed the rep plane
+    assert!(
+        warm.kvs.pulled_bytes < cold.kvs.pulled_bytes,
+        "cache did not reduce pull volume: {} vs {}",
+        warm.kvs.pulled_bytes,
+        cold.kvs.pulled_bytes
+    );
+    assert!(last.cache_bytes < cold.points.last().unwrap().cache_bytes);
+
+    // ...and not one bit of the training math moved
+    for (p, q) in cold.points.iter().zip(&warm.points) {
+        assert_eq!(p.train_loss.to_bits(), q.train_loss.to_bits(), "epoch {}", p.epoch);
+        assert_eq!(p.val_f1.to_bits(), q.val_f1.to_bits());
+    }
+    for (x, y) in cold.final_params.iter().zip(&warm.final_params) {
+        assert_eq!(x.data, y.data, "cache changed the final parameters");
+    }
+}
+
+#[test]
+fn sampled_serving_matches_full_graph_predict() {
+    // train a small SAGE model, export it through the standard hand-off
+    let cfg = sampled_cfg("karate", 2, 10);
+    let ctx = TrainContext::new(cfg).unwrap();
+    let mut s = new_session(&ctx).unwrap();
+    while !s.is_done() {
+        s.step_epoch().unwrap();
+    }
+    let model = s.export_model("sage-served").unwrap();
+    drop(s);
+
+    let engine = InferenceEngine::new(ctx.ds.clone());
+    let full = engine.predict(&model, &NodeQuery::full()).unwrap();
+    let builds_after_full = engine.stats().structure_builds;
+
+    // karate's max degree is 17: fanout 64 keeps every neighbor, so the
+    // sampled forward must agree with the full-graph one bit for bit
+    let seeds = vec![0usize, 33, 5, 19];
+    let q = NodeQuery::nodes(seeds.clone()).with_fanouts(vec![64, 64]);
+    let sampled = engine.predict(&model, &q).unwrap();
+    for (i, &v) in sampled.nodes.iter().enumerate() {
+        assert_eq!(sampled.classes[i], full.classes[v], "node {v} class");
+        assert_eq!(sampled.logits.row(i), full.logits.row(v), "node {v} logits");
+    }
+
+    // budgeted fanouts: deterministic (equal queries → equal answers)
+    // and still zero structure rebuilds across repeated warm queries
+    let small = NodeQuery::nodes(seeds).with_fanouts(vec![3, 3]);
+    let a = engine.predict(&model, &small).unwrap();
+    for _ in 0..5 {
+        let b = engine.predict(&model, &small).unwrap();
+        assert_eq!(a.classes, b.classes);
+        assert_eq!(a.logits.data, b.logits.data);
+    }
+    assert_eq!(
+        engine.stats().structure_builds,
+        builds_after_full,
+        "sampled predicts must never rebuild full-graph structure"
+    );
+    assert_eq!(engine.stats().sampled, 7);
+}
